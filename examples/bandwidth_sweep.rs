@@ -1,0 +1,76 @@
+//! Fig. 4 / 13 scenario as a runnable example: throughput of the
+//! compressed vs uncompressed pipeline as the inter-stage bandwidth
+//! shrinks from datacenter (100 Gbps) to consumer internet (10 Mbps),
+//! for both training and (forward-only) inference serving.
+//!
+//!     cargo run --release --example bandwidth_sweep
+
+use protomodels::compress::Mode;
+use protomodels::coordinator::{Pipeline, PipelineConfig};
+use protomodels::data::{Corpus, CorpusKind};
+use protomodels::manifest::Manifest;
+use protomodels::netsim::{LinkSpec, Topology, GBPS, MBPS};
+use protomodels::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let config = "small";
+    let h = manifest.config(config)?.hyper.clone();
+    let corpus = Corpus::synthetic(CorpusKind::C4, h.vocab, 200_000, 7);
+
+    let bws: &[(&str, f64)] = &[
+        ("10mbps", 10.0 * MBPS),
+        ("80mbps", 80.0 * MBPS),
+        ("500mbps", 500.0 * MBPS),
+        ("1gbps", 1.0 * GBPS),
+        ("16gbps", 16.0 * GBPS),
+        ("100gbps", 100.0 * GBPS),
+    ];
+    println!(
+        "{:<10} {:>14} {:>14} {:>8} | {:>14} {:>14} {:>8}",
+        "bandwidth", "train raw", "train ours", "gain",
+        "infer raw", "infer ours", "gain"
+    );
+    for (name, bps) in bws {
+        let mut tps = std::collections::BTreeMap::new();
+        for mode in [Mode::Raw, Mode::Subspace] {
+            let mut rng = Rng::new(9);
+            let spec = if *bps >= GBPS {
+                LinkSpec::new(*bps, 100e-6)
+            } else {
+                LinkSpec::internet(*bps)
+            };
+            let topo = Topology::uniform(h.stages, spec, &mut rng);
+            let pcfg = PipelineConfig {
+                mode,
+                microbatches: 8,
+                grassmann_interval: 0,
+                total_steps: 100,
+                ..Default::default()
+            };
+            let mut pipe = Pipeline::new(&manifest, config, topo, pcfg)?;
+            let mut t = 0.0;
+            let mut toks = 0usize;
+            for _ in 0..3 {
+                let s = pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
+                t += s.sim_seconds;
+                toks += s.tokens;
+            }
+            tps.insert((mode.as_str(), "train"), toks as f64 / t);
+            let (ti, tki) =
+                pipe.forward_throughput(24, |r| corpus.val_batch(h.b, h.n, r))?;
+            tps.insert((mode.as_str(), "infer"), tki as f64 / ti);
+        }
+        println!(
+            "{:<10} {:>12.0}/s {:>12.0}/s {:>7.1}x | {:>12.0}/s {:>12.0}/s {:>7.1}x",
+            name,
+            tps[&("raw", "train")],
+            tps[&("subspace", "train")],
+            tps[&("subspace", "train")] / tps[&("raw", "train")],
+            tps[&("raw", "infer")],
+            tps[&("subspace", "infer")],
+            tps[&("subspace", "infer")] / tps[&("raw", "infer")],
+        );
+    }
+    Ok(())
+}

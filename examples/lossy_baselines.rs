@@ -1,0 +1,67 @@
+//! Fig. 6 scenario as a runnable example: at a matched compression ratio,
+//! the DDP-style lossy schemes (top-k, int8 quantization, power-iteration
+//! low-rank) injure convergence — error accumulates across pipeline
+//! stages (Statement 7.1 / Theorem B.1) — while the subspace scheme
+//! matches the uncompressed baseline.
+//!
+//!     cargo run --release --example lossy_baselines [steps]
+
+use protomodels::compress::Mode;
+use protomodels::coordinator::{Pipeline, PipelineConfig};
+use protomodels::data::{Corpus, CorpusKind};
+use protomodels::manifest::Manifest;
+use protomodels::netsim::{LinkSpec, Topology};
+use protomodels::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120);
+    let manifest = Manifest::load("artifacts")?;
+    let config = "small";
+    let h = manifest.config(config)?.hyper.clone();
+    println!(
+        "== lossy baselines on {config}: ratio {}x, {steps} steps ==",
+        h.ratio
+    );
+
+    println!("{:<22} {:>10} {:>10} {:>12}", "scheme", "loss@25%", "loss@end", "wire B/step");
+    for (label, mode) in [
+        ("uncompressed", Mode::Raw),
+        ("ours (subspace)", Mode::Subspace),
+        ("top-k", Mode::TopK),
+        ("quant int8", Mode::Quant),
+        ("low-rank (power)", Mode::PowerLR),
+    ] {
+        let mut rng = Rng::new(21);
+        let topo =
+            Topology::uniform(h.stages, LinkSpec::centralized_100g(), &mut rng);
+        let pcfg = PipelineConfig {
+            mode,
+            microbatches: 8,
+            grassmann_interval: 0,
+            lr: 6e-3,
+            warmup_steps: 10,
+            total_steps: steps,
+            seed: 21,
+            ..Default::default()
+        };
+        let mut pipe = Pipeline::new(&manifest, config, topo, pcfg)?;
+        let corpus =
+            Corpus::synthetic(CorpusKind::Wiki, h.vocab, 400_000, 21);
+        let mut quarter = f64::NAN;
+        let mut last = f64::NAN;
+        let mut wire = 0u64;
+        for step in 0..steps {
+            let s = pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
+            if step == steps / 4 {
+                quarter = s.loss;
+            }
+            last = s.loss;
+            wire = s.wire_bytes;
+        }
+        println!("{label:<22} {quarter:>10.4} {last:>10.4} {wire:>12}");
+    }
+    Ok(())
+}

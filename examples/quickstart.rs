@@ -1,0 +1,68 @@
+//! Quickstart: build a compressed pipeline on the `tiny` config, train a
+//! few steps over simulated 80 Mbps links, and inspect what the system
+//! gives you: loss, simulated wall-clock, bytes on the wire, and the
+//! subspace-closure diagnostic.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use protomodels::compress::Mode;
+use protomodels::coordinator::{Pipeline, PipelineConfig};
+use protomodels::data::{Corpus, CorpusKind};
+use protomodels::manifest::Manifest;
+use protomodels::netsim::{LinkSpec, Topology};
+use protomodels::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. load the AOT artifact manifest (python ran once, at build time)
+    let manifest = Manifest::load("artifacts")?;
+    let h = manifest.config("tiny")?.hyper.clone();
+    println!(
+        "model: {} params, {} layers on {} stages, d={}, k={} ({}x wire compression)",
+        h.param_count, h.layers, h.stages, h.d, h.k, h.ratio
+    );
+
+    // 2. a decentralized topology: consumer links between stages
+    let mut rng = Rng::new(42);
+    let topo = Topology::uniform(h.stages, LinkSpec::internet_80m(), &mut rng);
+
+    // 3. the coordinator: GPipe microbatching + subspace compression
+    let pcfg = PipelineConfig {
+        mode: Mode::Subspace,
+        microbatches: 8,
+        grassmann_interval: 20, // paper uses 500; shortened for the demo
+        lr: 1e-2,
+        warmup_steps: 5,
+        total_steps: 60,
+        seed: 42,
+        ..Default::default()
+    };
+    let mut pipe = Pipeline::new(&manifest, "tiny", topo, pcfg)?;
+
+    // 4. synthetic corpus (offline stand-in for WikiText)
+    let corpus = Corpus::synthetic(CorpusKind::Wiki, h.vocab, 200_000, 42);
+
+    // 5. train
+    for step in 0..60 {
+        let s = pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
+        if step % 10 == 0 || step == 59 {
+            println!(
+                "step {:>3}  loss {:.4}  sim {:>7.4}s  wire {:>8} B  leak {:.1e}",
+                s.step,
+                s.loss,
+                s.sim_seconds,
+                s.wire_bytes,
+                pipe.subspace_leak()
+            );
+        }
+    }
+
+    // 6. validation
+    let val = pipe.eval(4, |r| corpus.val_batch(h.b, h.n, r))?;
+    println!(
+        "val loss {:.4} (ppl {:.1}) after {:.2} simulated seconds",
+        val,
+        val.exp(),
+        pipe.clock
+    );
+    Ok(())
+}

@@ -1,0 +1,300 @@
+"""AOT compiler: lower every (config × mode × entrypoint) to HLO text.
+
+HLO *text* (never ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs:
+    artifacts/<config>/<mode>/<entry>.hlo.txt
+    artifacts/manifest.json   — shapes / arg order / hyperparams for rust
+
+Usage:
+    python -m compile.aot [--configs tiny,small | all] [--out-dir DIR]
+                          [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, optim
+from .configs import (CONFIGS, DEFAULT_BUILD, MANIFEST_VERSION, ModelConfig,
+                      constrained_names, stage_param_schema)
+from .kernels import subspace as K
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _param_specs(cfg: ModelConfig, stage: int, prefix: str):
+    return [
+        (f"{prefix}.{name}", _f32(*shape))
+        for name, shape in stage_param_schema(cfg, stage)
+    ]
+
+
+Entry = Tuple[object, List[Tuple[str, object]]]  # (fn, [(argname, spec-or-list)])
+
+
+def build_entries(cfg: ModelConfig) -> Dict[str, Entry]:
+    """All entrypoints for one config, keyed "<mode>/<entry>".
+
+    An arg whose spec is a *list* is a whole parameter bundle; its manifest
+    names come from the stage schema.
+    """
+    d, k, n, v, b = cfg.d, cfg.k, cfg.n, cfg.vocab, cfg.b
+    last = cfg.stages - 1
+    u = ("u", _f32(d, k))
+    tf = ("t_fixed", _f32(v, d))
+    tok = ("tok", _i32(b, n))
+    tgt = ("targets", _i32(b, n))
+    xc_ = ("xc_in", _f32(b, n, k))
+    gc_ = ("gc_out", _f32(b, n, k))
+    xf_ = ("x_in", _f32(b, n, d))
+    gf_ = ("g_out", _f32(b, n, d))
+    lr = ("lr", _f32())
+    t = ("t", _f32())
+
+    def P(stage, prefix="p"):
+        return (prefix, [s for _, s in _param_specs(cfg, stage, prefix)],
+                [nm for nm, _ in _param_specs(cfg, stage, prefix)])
+
+    # an arg triple (name, spec, flat_names) for bundles; pairs for leaves
+    entries: Dict[str, Entry] = {}
+
+    def add(mode, name, fn, args):
+        entries[f"{mode}/{name}"] = (fn, args)
+
+    for mode in cfg.modes:
+        if mode == "subspace":
+            add(mode, "first_fwd",
+                lambda p, uu, tff, tk: model.first_fwd(cfg, p, uu, tff, tk),
+                [P(0), u, tf, tok])
+            add(mode, "first_bwd",
+                lambda p, uu, tff, tk, g: model.first_bwd(cfg, p, uu, tff, tk, g),
+                [P(0), u, tf, tok, ("gc_in", _f32(b, n, k))])
+            if cfg.stages >= 3:
+                add(mode, "mid_fwd",
+                    lambda p, uu, tff, tk, x: model.mid_fwd(cfg, p, uu, tff, tk, x),
+                    [P(1), u, tf, tok, xc_])
+                add(mode, "mid_bwd",
+                    lambda p, uu, tff, tk, x, g: model.mid_bwd(cfg, p, uu, tff, tk, x, g),
+                    [P(1), u, tf, tok, xc_, gc_])
+            add(mode, "last_loss",
+                lambda p, uu, tff, tk, x, tg: model.last_loss(cfg, p, uu, tff, tk, x, tg),
+                [P(last), u, tf, tok, xc_, tgt])
+            add(mode, "last_eval",
+                lambda p, uu, tff, tk, x, tg: model.last_eval(cfg, p, uu, tff, tk, x, tg),
+                [P(last), u, tf, tok, xc_, tgt])
+            for kind, stage in (("first", 0), ("mid", min(1, cfg.stages - 1)),
+                                ("last", last)):
+                add(mode, f"adamw_{kind}",
+                    (lambda st: lambda w, g, m, vv, uu, l, tt:
+                        optim.adamw_subspace(cfg, st, w, g, m, vv, uu, l, tt))(stage),
+                    [P(stage, "w"), P(stage, "g"), P(stage, "m"),
+                     P(stage, "v"), u, lr, t])
+                add(mode, f"reproject_{kind}",
+                    (lambda st: lambda w, m, uu:
+                        model.reproject(cfg, st, w, m, uu))(stage),
+                    [P(stage, "w"), P(stage, "m"), u])
+            add(mode, "grassmann_step",
+                lambda uu, s, e: model.grassmann_step(uu, s, e),
+                [u, ("s_acc", _f32(d, d)), ("eta", _f32())])
+        elif mode == "nofixed":
+            add(mode, "first_fwd",
+                lambda p, uu, tk: model.first_fwd_nofixed(cfg, p, uu, tk),
+                [P(0), u, tok])
+            add(mode, "first_bwd",
+                lambda p, uu, tk, g: model.first_bwd_nofixed(cfg, p, uu, tk, g),
+                [P(0), u, tok, ("gc_in", _f32(b, n, k))])
+            if cfg.stages >= 3:
+                add(mode, "mid_fwd",
+                    lambda p, uu, tk, x: model.mid_fwd_nofixed(cfg, p, uu, tk, x),
+                    [P(1), u, tok, xc_])
+                add(mode, "mid_bwd",
+                    lambda p, uu, tk, x, g: model.mid_bwd_nofixed(cfg, p, uu, tk, x, g),
+                    [P(1), u, tok, xc_, gc_])
+            add(mode, "last_loss",
+                lambda p, uu, tk, x, tg: model.last_loss_nofixed(cfg, p, uu, tk, x, tg),
+                [P(last), u, tok, xc_, tgt])
+            add(mode, "last_eval",
+                lambda p, uu, tk, x, tg: model.last_eval_nofixed(cfg, p, uu, tk, x, tg),
+                [P(last), u, tok, xc_, tgt])
+            # optimizer / reproject / grassmann entries are shared with
+            # "subspace" (identical schemas and constraint rules)
+        else:
+            add(mode, "first_fwd",
+                (lambda md: lambda p, tk: model.first_fwd_lossy(cfg, md, p, tk))(mode),
+                [P(0), tok])
+            add(mode, "first_bwd",
+                (lambda md: lambda p, tk, g: model.first_bwd_lossy(cfg, md, p, tk, g))(mode),
+                [P(0), tok, ("g_in", _f32(b, n, d))])
+            if cfg.stages >= 3:
+                add(mode, "mid_fwd",
+                    (lambda md: lambda p, x: model.mid_fwd_lossy(cfg, md, p, x))(mode),
+                    [P(1), xf_])
+                add(mode, "mid_bwd",
+                    (lambda md: lambda p, x, g: model.mid_bwd_lossy(cfg, md, p, x, g))(mode),
+                    [P(1), xf_, gf_])
+            add(mode, "last_loss",
+                (lambda md: lambda p, x, tg: model.last_loss_lossy(cfg, md, p, x, tg))(mode),
+                [P(last), xf_, tgt])
+            add(mode, "last_eval",
+                lambda p, x, tg: model.last_eval_lossy(cfg, p, x, tg),
+                [P(last), xf_, tgt])
+            if mode == "raw":
+                for kind, stage in (("first", 0), ("mid", min(1, cfg.stages - 1)),
+                                    ("last", last)):
+                    add(mode, f"adamw_{kind}",
+                        (lambda st: lambda w, g, m, vv, l, tt:
+                            optim.adamw_standard(cfg, st, w, g, m, vv, l, tt))(stage),
+                        [P(stage, "w"), P(stage, "g"), P(stage, "m"),
+                         P(stage, "v"), lr, t])
+    return entries
+
+
+def _flatten_args(args):
+    """→ (lowering specs in call order, manifest flat-arg descriptors)."""
+    specs, flat = [], []
+    for a in args:
+        if len(a) == 3:  # parameter bundle
+            _, spec_list, names = a
+            specs.append(list(spec_list))
+            for nm, sp in zip(names, spec_list):
+                flat.append({"name": nm, "shape": list(sp.shape),
+                             "dtype": _dt(sp.dtype)})
+        else:
+            nm, sp = a
+            specs.append(sp)
+            flat.append({"name": nm, "shape": list(sp.shape),
+                         "dtype": _dt(sp.dtype)})
+    return specs, flat
+
+
+def _dt(dtype) -> str:
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(dtype).name]
+
+
+def lower_entry(fn, specs) -> Tuple[str, list]:
+    lowered = jax.jit(fn).lower(*specs)
+    out_shapes = jax.tree_util.tree_leaves(jax.eval_shape(fn, *specs))
+    outs = [{"shape": list(o.shape), "dtype": _dt(o.dtype)} for o in out_shapes]
+    return to_hlo_text(lowered), outs
+
+
+def config_manifest(cfg: ModelConfig) -> dict:
+    rowwise0, reproj0 = constrained_names(cfg, 0)
+    return {
+        "hyper": {
+            "d": cfg.d, "d_ff": cfg.d_ff, "heads": cfg.heads,
+            "layers": cfg.layers, "stages": cfg.stages, "n": cfg.n,
+            "vocab": cfg.vocab, "k": cfg.k, "b": cfg.b,
+            "blocks_per_stage": cfg.blocks_per_stage,
+            "ratio": cfg.compression_ratio,
+            "param_count": cfg.param_count,
+        },
+        "modes": list(cfg.modes),
+        "schemas": {
+            kind: [[nm, list(sh)] for nm, sh in
+                   stage_param_schema(cfg, stage)]
+            for kind, stage in (
+                ("first", 0), ("mid", min(1, cfg.stages - 1)),
+                ("last", cfg.stages - 1))
+        },
+        "constrained": {"rowwise": rowwise0, "reproject": reproj0},
+        "optimizer": {
+            "beta1": optim.BETA1, "beta2": optim.BETA2, "eps": optim.EPS,
+            "weight_decay": optim.WEIGHT_DECAY,
+        },
+        "entries": {},
+    }
+
+
+def build(config_names, out_dir: str, force: bool) -> None:
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    # merge into an existing manifest so partial rebuilds don't clobber
+    # other configs' entries
+    manifest = {"version": MANIFEST_VERSION, "configs": {}}
+    if os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            if old.get("version") == MANIFEST_VERSION:
+                manifest["configs"].update(old.get("configs", {}))
+        except (json.JSONDecodeError, OSError):
+            pass
+    for cname in config_names:
+        cfg = CONFIGS[cname]
+        cm = config_manifest(cfg)
+        entries = build_entries(cfg)
+        for key, (fn, args) in sorted(entries.items()):
+            mode, ename = key.split("/")
+            rel = os.path.join(cname, mode, f"{ename}.hlo.txt")
+            path = os.path.join(out_dir, rel)
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            specs, flat_args = _flatten_args(args)
+            if force or not os.path.exists(path):
+                text, outs = lower_entry(fn, specs)
+                with open(path, "w") as f:
+                    f.write(text)
+                print(f"  lowered {cname}/{key}  "
+                      f"({len(text)//1024} KiB, {len(outs)} outs)")
+            else:
+                # shapes must still go into the manifest
+                outs = [
+                    {"shape": list(o.shape), "dtype": _dt(o.dtype)}
+                    for o in jax.tree_util.tree_leaves(
+                        jax.eval_shape(fn, *specs))
+                ]
+                print(f"  cached  {cname}/{key}")
+            cm["entries"][key] = {"file": rel, "args": flat_args, "outs": outs}
+        manifest["configs"][cname] = cm
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {manifest_path} ({len(manifest['configs'])} configs)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--configs", default=",".join(DEFAULT_BUILD),
+                    help="comma list of config names, or 'all'")
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the .hlo.txt exists")
+    args = ap.parse_args()
+    names = (list(CONFIGS) if args.configs == "all"
+             else [c for c in args.configs.split(",") if c])
+    for nm in names:
+        if nm not in CONFIGS:
+            sys.exit(f"unknown config {nm!r}; have {list(CONFIGS)}")
+    out = os.path.abspath(args.out_dir)
+    os.makedirs(out, exist_ok=True)
+    build(names, out, args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Lossy boundary compressors — the DDP-style baselines of Fig. 6 / Thm B.1.
+
+Each `*_cd` function is a fused compress→decompress round trip applied at a
+pipeline boundary: the tensor that the downstream stage *sees* is the lossy
+reconstruction, so approximation error propagates through layers exactly as
+in a real deployment (Statement 7.1). Wire byte counts are analytic
+(`wire_bytes`) and consumed by the rust netsim, mirrored by
+rust/src/compress.
+
+"SVD low-rank" substitution: exact SVD lowers to LAPACK custom-calls the
+portable HLO runtime cannot execute, so we use single-shot subspace
+iteration with a fixed Gaussian sketch (PowerSGD-style), the standard
+practical stand-in — if anything *more* favourable to the baseline
+(DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def topk_keep(numel: int, ratio: float) -> int:
+    """Elements kept so that (value,index) pairs hit the byte ratio:
+    kept·8B ≤ numel·4B / ratio."""
+    return max(1, int(numel * 4.0 / (8.0 * ratio)))
+
+
+def topk_cd(x, ratio: float):
+    """Magnitude top-k sparsification over the whole tensor.
+
+    Implemented via argsort rather than jax.lax.top_k: the latter lowers
+    to a `topk(..., largest=true)` HLO instruction that xla_extension
+    0.5.1's text parser rejects; `sort` is classic HLO and round-trips.
+    """
+    flat = x.reshape(-1)
+    kk = topk_keep(flat.shape[0], ratio)
+    order = jnp.argsort(-jnp.abs(flat))
+    idx = order[:kk]
+    out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    return out.reshape(x.shape)
+
+
+def quant_cd(x, bits: int = 8):
+    """Per-tensor symmetric uniform quantization (int8 by default — 4×
+    over f32; the paper notes quantization cannot reach 100×)."""
+    qmax = float(2 ** (bits - 1) - 1)
+    scale = jnp.max(jnp.abs(x)) / qmax + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    return q * scale
+
+
+def powerlr_rank(n: int, d: int, ratio: float) -> int:
+    """Rank giving wire bytes (n+d)·r·4 ≈ n·d·4 / ratio."""
+    return max(1, int(n * d / (ratio * (n + d))))
+
+
+def _orthonormalize(p):
+    """Modified Gram–Schmidt over the (few) columns of p — QR-free."""
+    r = p.shape[1]
+    q = jnp.zeros_like(p)
+
+    def body(i, q):
+        v = p[:, i] - q @ (q.T @ p[:, i])
+        v = v / (jnp.linalg.norm(v) + 1e-8)
+        return q.at[:, i].set(v)
+
+    return jax.lax.fori_loop(0, r, body, q)
+
+
+def powerlr_cd(x, ratio: float, seed: int = 17):
+    """Rank-r approximation of each (n, d) slice via one subspace
+    iteration with a fixed sketch (deterministic; baked as a constant)."""
+    b, n, d = x.shape
+    r = powerlr_rank(n, d, ratio)
+    sketch = jnp.asarray(
+        np.random.default_rng(seed).standard_normal((d, r)), dtype=x.dtype
+    )
+
+    def one(xm):
+        p = _orthonormalize(xm @ sketch)          # (n, r)
+        return p @ (p.T @ xm)                      # (n, r) @ (r, d)
+
+    return jax.vmap(one)(x)
+
+
+def boundary_cd(mode: str, ratio: float):
+    """The compress→decompress closure for a lossy mode (or identity)."""
+    if mode == "topk":
+        return lambda x: topk_cd(x, ratio)
+    if mode == "quant":
+        return lambda x: quant_cd(x, 8)
+    if mode == "powerlr":
+        return lambda x: powerlr_cd(x, ratio)
+    if mode == "raw":
+        return lambda x: x
+    raise ValueError(f"not a lossy mode: {mode}")
+
+
+def wire_bytes(mode: str, b: int, n: int, d: int, k: int, ratio: float) -> int:
+    """Bytes on the wire for one boundary tensor under each scheme
+    (f32 payloads; mirrored in rust/src/compress/mod.rs)."""
+    dense = b * n * d * 4
+    if mode == "subspace":
+        return b * n * k * 4
+    if mode == "raw":
+        return dense
+    if mode == "topk":
+        return topk_keep(b * n * d, ratio) * 8
+    if mode == "quant":
+        return b * n * d * 1 + 4  # int8 + scale
+    if mode == "powerlr":
+        r = powerlr_rank(n, d, ratio)
+        return b * (n + d) * r * 4
+    raise ValueError(mode)

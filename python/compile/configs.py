@@ -1,0 +1,179 @@
+"""Model / AOT configuration suite for protomodels.
+
+Every config is shape-specialized at AOT time (HLO has static shapes), so
+the rust coordinator selects a config by name from artifacts/manifest.json.
+
+The parameter *schema* (ordered flat list of (name, shape)) defined here is
+the single source of truth shared by model.py (pytree packing), aot.py
+(manifest emission) and — via the manifest — the rust runtime (literal
+packing order). Do not reorder fields without bumping MANIFEST_VERSION.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+MANIFEST_VERSION = 3
+
+# Boundary modes. "subspace" is the paper's method; "raw" is the
+# uncompressed baseline; "nofixed" is the Fig.-15 ablation (token
+# embedding entirely restricted to S, no high-rank decomposition); the
+# rest are the lossy baselines of Fig. 6.
+MODES = ("subspace", "raw", "topk", "quant", "powerlr", "nofixed")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """A shape-specialized model + pipeline configuration."""
+
+    name: str
+    d: int            # embedding dim
+    d_ff: int         # MLP hidden dim
+    heads: int        # attention heads
+    layers: int       # total transformer blocks
+    stages: int       # pipeline stages (blocks split evenly)
+    n: int            # context length
+    vocab: int        # vocabulary size
+    k: int            # subspace rank (compression ratio ~= d / k)
+    b: int            # microbatch size baked into the HLO
+    modes: Tuple[str, ...] = ("subspace", "raw")
+
+    def __post_init__(self):
+        assert self.d % self.heads == 0, "d must divide heads"
+        assert self.layers % self.stages == 0, "layers must divide stages"
+        assert self.k < self.d
+        assert all(m in MODES for m in self.modes), self.modes
+
+    @property
+    def blocks_per_stage(self) -> int:
+        return self.layers // self.stages
+
+    @property
+    def d_head(self) -> int:
+        return self.d // self.heads
+
+    @property
+    def compression_ratio(self) -> float:
+        return self.d / self.k
+
+    @property
+    def param_count(self) -> int:
+        return sum(
+            int_prod(shape)
+            for s in range(self.stages)
+            for _, shape in stage_param_schema(self, s)
+        )
+
+    # ---- parameter schema -------------------------------------------------
+
+    def block_schema(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        d, dff = self.d, self.d_ff
+        return [
+            ("ln1_g", (d,)),
+            ("ln1_b", (d,)),
+            ("wq", (d, d)),
+            ("wk", (d, d)),
+            ("wv", (d, d)),
+            ("wp1", (d, d)),   # attention output projection — constrained to S
+            ("ln2_g", (d,)),
+            ("ln2_b", (d,)),
+            ("w1", (d, dff)),
+            ("wp2", (dff, d)),  # MLP down projection — constrained to S
+        ]
+
+
+def int_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def stage_param_schema(cfg: ModelConfig, stage: int) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list for one pipeline stage.
+
+    stage 0 additionally owns the trainable low-rank embedding table T_S;
+    the last stage owns the final layer-norm and LM head.
+    """
+    schema: List[Tuple[str, Tuple[int, ...]]] = []
+    if stage == 0:
+        schema.append(("t_s", (cfg.vocab, cfg.d)))
+    for blk in range(cfg.blocks_per_stage):
+        for name, shape in cfg.block_schema():
+            schema.append((f"b{blk}_{name}", shape))
+    if stage == cfg.stages - 1:
+        schema.append(("lnf_g", (cfg.d,)))
+        schema.append(("lnf_b", (cfg.d,)))
+        schema.append(("w_head", (cfg.d, cfg.vocab)))
+    return schema
+
+
+def constrained_names(cfg: ModelConfig, stage: int):
+    """Names whose rows must live in S.
+
+    - "*_wp2" and "t_s": preserved by the row-wise AdamW variant (Sec. 5),
+      never re-projected during normal steps.
+    - "*_wp1": re-projected onto S after every optimizer step (Appendix A).
+    Both sets are re-projected after a Grassmann subspace update.
+    """
+    rowwise, reproject = [], []
+    for name, _ in stage_param_schema(cfg, stage):
+        if name.endswith("wp2") or name == "t_s":
+            rowwise.append(name)
+        elif name.endswith("wp1"):
+            reproject.append(name)
+    return rowwise, reproject
+
+
+# --------------------------------------------------------------------------
+# The AOT suite. `tiny` exists for tests; `small` powers the fast presets of
+# every experiment harness; `base` is the e2e pretrain config (~13M params);
+# `deep16` is the depth-ablation config; `wide` is the optional large run.
+# --------------------------------------------------------------------------
+
+CONFIGS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        ModelConfig(
+            name="tiny", d=64, d_ff=256, heads=4, layers=3, stages=3,
+            n=32, vocab=256, k=16, b=2,
+            modes=("subspace", "raw", "topk", "quant", "powerlr"),
+        ),
+        ModelConfig(
+            name="small", d=128, d_ff=512, heads=4, layers=4, stages=4,
+            n=64, vocab=512, k=8, b=4,
+            modes=("subspace", "raw", "topk", "quant", "powerlr", "nofixed"),
+        ),
+        # context-length ablation family (Figs. 10/11): same model, n sweep
+        ModelConfig(
+            name="ctx128", d=128, d_ff=512, heads=4, layers=4, stages=4,
+            n=128, vocab=512, k=8, b=2,
+            modes=("subspace", "raw"),
+        ),
+        ModelConfig(
+            name="ctx256", d=128, d_ff=512, heads=4, layers=4, stages=4,
+            n=256, vocab=512, k=8, b=1,
+            modes=("subspace", "raw"),
+        ),
+        ModelConfig(
+            name="base", d=256, d_ff=1024, heads=8, layers=8, stages=4,
+            n=128, vocab=1024, k=8, b=4,
+            modes=("subspace", "raw"),
+        ),
+        ModelConfig(
+            name="deep16", d=192, d_ff=768, heads=6, layers=16, stages=8,
+            n=64, vocab=512, k=8, b=2,
+            modes=("subspace", "raw"),
+        ),
+        ModelConfig(
+            name="wide", d=512, d_ff=2048, heads=8, layers=16, stages=8,
+            n=128, vocab=2048, k=8, b=2,
+            modes=("subspace", "raw"),
+        ),
+    ]
+}
+
+# Configs built by default (`make artifacts`). "wide" is opt-in via
+# `python -m compile.aot --configs all`.
+DEFAULT_BUILD = ("tiny", "small", "base", "deep16", "ctx128", "ctx256")

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel in subspace.py.
+
+These are the CORE correctness signal: pytest (python/tests/test_kernels.py)
+sweeps shapes/dtypes with hypothesis and asserts allclose between the
+Pallas kernels and these references. They are intentionally written as the
+most direct transcription of the paper's equations.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+
+
+def subspace_project(x, e, u):
+    """Eq. 8: Xc = (X − E) U_k."""
+    return (x - e) @ u
+
+
+def subspace_reconstruct(xc, e, u):
+    """Reconstruction: X = Xc U_kᵀ + E."""
+    return xc @ u.T + e
+
+
+def grad_project(g, u):
+    """Eq. 9: Gc = ∇X · U_k."""
+    return g @ u
+
+
+def grad_expand(gc, u):
+    """Eq. 10: ∇X = Gc · U_kᵀ."""
+    return gc @ u.T
+
+
+def rowwise_adamw(w, g, m, v, u, h):
+    """Sec. 5: project g onto S = Col(u), then AdamW with row-constant
+    second-moment scaling.
+
+    h = [lr, 1−β1ᵗ, 1−β2ᵗ, weight_decay].
+    """
+    lr, bc1, bc2, wd = h[0], h[1], h[2], h[3]
+    g = (g @ u) @ u.T
+    m_new = BETA1 * m + (1.0 - BETA1) * g
+    v_new = BETA2 * v + (1.0 - BETA2) * g * g
+    mhat = m_new / bc1
+    vhat = v_new / bc2
+    vrow = jnp.mean(vhat, axis=1, keepdims=True)
+    w_new = w - lr * mhat / (jnp.sqrt(vrow) + EPS) - lr * wd * w
+    return w_new, m_new, v_new
+
+
+def standard_adamw(w, g, m, v, h):
+    """Unmodified AdamW (Eq. 12) — used for all unconstrained weights."""
+    lr, bc1, bc2, wd = h[0], h[1], h[2], h[3]
+    m_new = BETA1 * m + (1.0 - BETA1) * g
+    v_new = BETA2 * v + (1.0 - BETA2) * g * g
+    mhat = m_new / bc1
+    vhat = v_new / bc2
+    w_new = w - lr * mhat / (jnp.sqrt(vhat) + EPS) - lr * wd * w
+    return w_new, m_new, v_new

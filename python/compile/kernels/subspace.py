@@ -1,0 +1,272 @@
+"""L1 — Pallas kernels for the subspace boundary compression hot path.
+
+The paper's wire compression is, computationally, a fused
+``subtract-high-rank-embeddings + project-onto-U_k`` at the sending stage
+and ``expand-from-U_k + add-high-rank-embeddings`` at the receiving stage
+(Sec. 4.3/4.3.1), plus the row-wise-constant AdamW second-moment update
+(Sec. 5). These are the per-token O(d·k) operations executed at every
+pipeline boundary for every microbatch, so they are implemented as Pallas
+kernels.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): rows of the flattened
+(b·n, d) activation tensor are tiled into BM-row panels streamed
+HBM→VMEM by the BlockSpec index maps, while the (d, k) U_k panel stays
+resident in VMEM across the whole grid (d·k·4B ≤ 1 MiB at paper scale).
+The subtraction is fused into the same pass as the matmul so the d-wide
+activation read is amortized over both operations.
+
+All kernels run with ``interpret=True``: the CPU PJRT runtime cannot
+execute Mosaic custom-calls, and the interpret path lowers to plain HLO
+that the rust runtime loads (see /opt/xla-example/README.md).
+
+Autodiff: ``pallas_call`` is not differentiable, so the public entry
+points carry ``jax.custom_vjp`` with closed-form backward rules
+(Appendix A): d/dX[(X−E)U] = ct·Uᵀ and d/dXc[Xc·Uᵀ+E] = ct·U — themselves
+implemented with the same kernels. Cotangents w.r.t. U are *not*
+propagated (U is a frozen constant between Grassmann updates); cotangents
+w.r.t. E are exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile height. All shipped configs keep b·n a multiple of BM; other
+# shapes transparently fall back to the pure-jnp path (same math).
+BM = 64
+
+# AdamW constants (baked; the schedule-dependent scalars arrive as args).
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+
+_INTERPRET = True
+
+
+def _rows_ok(rows: int) -> bool:
+    return rows % BM == 0 and rows >= BM
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+
+def _project_kernel(x_ref, e_ref, u_ref, o_ref):
+    """o = (x − e) @ u for one (BM, d) row panel; u resident (d, k)."""
+    o_ref[...] = (x_ref[...] - e_ref[...]) @ u_ref[...]
+
+
+def _reconstruct_kernel(xc_ref, e_ref, u_ref, o_ref):
+    """o = xc @ uᵀ + e for one (BM, k) row panel."""
+    o_ref[...] = xc_ref[...] @ u_ref[...].T + e_ref[...]
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    """o = a @ b (gradient projection: G·U)."""
+    o_ref[...] = a_ref[...] @ b_ref[...]
+
+
+def _mm_t_kernel(a_ref, b_ref, o_ref):
+    """o = a @ bᵀ (gradient expansion: Gc·Uᵀ)."""
+    o_ref[...] = a_ref[...] @ b_ref[...].T
+
+
+def _rowwise_adamw_kernel(w_ref, g_ref, m_ref, v_ref, u_ref, h_ref,
+                          w_o, m_o, v_o):
+    """Sec. 5 modified AdamW: the incoming gradient is first projected onto
+    S (the proximal/constrained-optimization step — required because the
+    stream gradient picks up out-of-S components from branch backprop
+    within a stage), then the 1/√V̂ scaling is made constant per row
+    (V̂ → row-mean) so the update direction stays inside Row(W) ⊆ S and W
+    itself never needs re-projection.
+
+    h = [lr, 1−β1ᵗ, 1−β2ᵗ, weight_decay]."""
+    lr, bc1, bc2, wd = h_ref[0], h_ref[1], h_ref[2], h_ref[3]
+    u = u_ref[...]
+    g = (g_ref[...] @ u) @ u.T  # fused projection onto S
+    m = BETA1 * m_ref[...] + (1.0 - BETA1) * g
+    v = BETA2 * v_ref[...] + (1.0 - BETA2) * g * g
+    mhat = m / bc1
+    vhat = v / bc2
+    vrow = jnp.mean(vhat, axis=1, keepdims=True)
+    upd = mhat / (jnp.sqrt(vrow) + EPS)
+    w = w_ref[...]
+    w_o[...] = w - lr * upd - lr * wd * w
+    m_o[...] = m
+    v_o[...] = v
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers (2-D, rows already flattened)
+# ---------------------------------------------------------------------------
+
+
+def _panel_call(kernel, a, b2, u, out_cols):
+    """Grid over row panels of `a` (and optional second row-tensor `b2`),
+    with `u` resident across the grid."""
+    rows = a.shape[0]
+    grid = (rows // BM,)
+    in_specs = [pl.BlockSpec((BM, a.shape[1]), lambda i: (i, 0))]
+    args = [a]
+    if b2 is not None:
+        in_specs.append(pl.BlockSpec((BM, b2.shape[1]), lambda i: (i, 0)))
+        args.append(b2)
+    in_specs.append(pl.BlockSpec(u.shape, lambda i: (0, 0)))
+    args.append(u)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((BM, out_cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, out_cols), a.dtype),
+        interpret=_INTERPRET,
+    )(*args)
+
+
+def _project2d(x, e, u):
+    if not _rows_ok(x.shape[0]):
+        return (x - e) @ u
+    return _panel_call(_project_kernel, x, e, u, u.shape[1])
+
+
+def _reconstruct2d(xc, e, u):
+    if not _rows_ok(xc.shape[0]):
+        return xc @ u.T + e
+    return _panel_call(_reconstruct_kernel, xc, e, u, u.shape[0])
+
+
+def _grad_project2d(g, u):
+    """G·U — backward of reconstruction."""
+    if not _rows_ok(g.shape[0]):
+        return g @ u
+    return _panel_call(_mm_kernel, g, None, u, u.shape[1])
+
+
+def _grad_expand2d(gc, u):
+    """Gc·Uᵀ — backward of projection."""
+    if not _rows_ok(gc.shape[0]):
+        return gc @ u.T
+    return _panel_call(_mm_t_kernel, gc, None, u, u.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# public, differentiable, (b, n, ·)-shaped entry points
+# ---------------------------------------------------------------------------
+
+
+def _flat(x):
+    return x.reshape(-1, x.shape[-1])
+
+
+@jax.custom_vjp
+def subspace_project(x, e, u):
+    """Xc = (X − E) @ U_k.  x, e: (b, n, d);  u: (d, k)  →  (b, n, k).
+
+    E is the high-rank additive component PE + T_fixed[tok] (Eq. 8); the
+    residual X − E lies in S = Col(U_k) by construction, so the projection
+    is lossless (Eq. 7)."""
+    b, n, _ = x.shape
+    return _project2d(_flat(x), _flat(e), u).reshape(b, n, u.shape[1])
+
+
+def _project_fwd(x, e, u):
+    return subspace_project(x, e, u), (u,)
+
+
+def _project_bwd(res, ct):
+    (u,) = res
+    b, n, _ = ct.shape
+    gx = _grad_expand2d(_flat(ct), u).reshape(b, n, u.shape[0])
+    return gx, -gx, jnp.zeros_like(u)
+
+
+subspace_project.defvjp(_project_fwd, _project_bwd)
+
+
+@jax.custom_vjp
+def subspace_reconstruct(xc, e, u):
+    """X = Xc @ U_kᵀ + E — exact inverse of `subspace_project` whenever
+    Row(X − E) ⊆ S.  xc: (b, n, k); e: (b, n, d); u: (d, k) → (b, n, d)."""
+    b, n, _ = xc.shape
+    return _reconstruct2d(_flat(xc), _flat(e), u).reshape(b, n, u.shape[0])
+
+
+def _reconstruct_fwd(xc, e, u):
+    return subspace_reconstruct(xc, e, u), (u,)
+
+
+def _reconstruct_bwd(res, ct):
+    (u,) = res
+    b, n, _ = ct.shape
+    gxc = _grad_project2d(_flat(ct), u).reshape(b, n, u.shape[1])
+    return gxc, ct, jnp.zeros_like(u)
+
+
+subspace_reconstruct.defvjp(_reconstruct_fwd, _reconstruct_bwd)
+
+
+def grad_project(g, u):
+    """Gc = ∇X · U_k — the lossless backward-pass wire compression (Eq. 9)."""
+    b, n, _ = g.shape
+    return _grad_project2d(_flat(g), u).reshape(b, n, u.shape[1])
+
+
+def grad_expand(gc, u):
+    """∇X = Gc · U_kᵀ — recovery at the upstream stage (Eq. 10)."""
+    b, n, _ = gc.shape
+    return _grad_expand2d(_flat(gc), u).reshape(b, n, u.shape[0])
+
+
+def rowwise_adamw(w, g, m, v, u, h):
+    """Sec. 5 AdamW variant for W_p2 / T_S: project g onto S, then apply a
+    row-constant second-moment scaling — keeps Row(W) ⊆ S without ever
+    re-projecting W.
+
+    w, g, m, v: (R, C);  u: (C, k);  h: (4,) = [lr, 1−β1ᵗ, 1−β2ᵗ, wd]
+    → (w', m', v')."""
+    rows, cols = w.shape
+    if not _rows_ok(rows):
+        return _rowwise_adamw_ref(w, g, m, v, u, h)
+    grid = (rows // BM,)
+    row_spec = pl.BlockSpec((BM, cols), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _rowwise_adamw_kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec, row_spec, row_spec,
+                  pl.BlockSpec(u.shape, lambda i: (0, 0)),
+                  pl.BlockSpec((4,), lambda i: (0,))],
+        out_specs=[row_spec, row_spec, row_spec],
+        out_shape=[jax.ShapeDtypeStruct((rows, cols), w.dtype)] * 3,
+        interpret=_INTERPRET,
+    )(w, g, m, v, u, h)
+    return tuple(out)
+
+
+def _rowwise_adamw_ref(w, g, m, v, u, h):
+    lr, bc1, bc2, wd = h[0], h[1], h[2], h[3]
+    g = (g @ u) @ u.T
+    m = BETA1 * m + (1.0 - BETA1) * g
+    v = BETA2 * v + (1.0 - BETA2) * g * g
+    vrow = jnp.mean(v / bc2, axis=1, keepdims=True)
+    w = w - lr * (m / bc1) / (jnp.sqrt(vrow) + EPS) - lr * wd * w
+    return w, m, v
+
+
+# VMEM / MXU estimate helpers (used by EXPERIMENTS.md §Perf tables) -------
+
+
+def vmem_bytes(d: int, k: int, bm: int = BM, dtype_bytes: int = 4) -> int:
+    """Resident VMEM per grid step of the fused project kernel:
+    X panel + E panel + U panel + out panel."""
+    return dtype_bytes * (bm * d + bm * d + d * k + bm * k)
+
+
+def mxu_utilization(d: int, k: int, lane: int = 128) -> float:
+    """Fraction of MXU lanes doing useful work when k < the 128-lane width
+    (output tile is (BM, k) against a (BM, 128) systolic pass)."""
+    return min(1.0, k / lane)

@@ -1,0 +1,89 @@
+"""Optimizer entrypoints — AdamW and the Sec. 5 subspace-preserving variant.
+
+Per-parameter rules (subspace mode):
+  * ``*_wp2`` and ``t_s``  — row-wise-constant second moment (Pallas
+    kernel), which keeps Row(W) ⊆ S exactly, so these are NEVER
+    re-projected during normal steps (Appendix A).
+  * ``*_wp1``             — standard AdamW followed by an explicit row
+    projection onto S (required because of the attention nonlinearity
+    upstream; Sec. 5 / Appendix A).
+  * everything else       — standard AdamW.
+
+Raw/lossy modes use standard AdamW for all parameters.
+
+Learning-rate schedule scalars (lr, bias corrections from the step count)
+are computed by the rust coordinator and passed in, so warmup/decay live
+in L3 where the step counter lives.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .configs import ModelConfig, stage_param_schema
+from .kernels import subspace as K
+
+BETA1 = K.BETA1
+BETA2 = K.BETA2
+EPS = K.EPS
+WEIGHT_DECAY = 0.01
+# LayerNorm gains/biases are excluded from weight decay (standard practice).
+NO_DECAY_SUFFIXES = ("_g", "_b")
+
+
+def _h(lr, t, wd):
+    """[lr, 1−β1ᵗ, 1−β2ᵗ, wd] — the schedule-dependent scalars."""
+    bc1 = 1.0 - jnp.power(jnp.float32(BETA1), t)
+    bc2 = 1.0 - jnp.power(jnp.float32(BETA2), t)
+    return jnp.stack([lr, bc1, bc2, jnp.float32(wd)])
+
+
+def _standard(w, g, m, v, lr, bc1, bc2, wd):
+    m_new = BETA1 * m + (1.0 - BETA1) * g
+    v_new = BETA2 * v + (1.0 - BETA2) * g * g
+    mhat = m_new / bc1
+    vhat = v_new / bc2
+    w_new = w - lr * mhat / (jnp.sqrt(vhat) + EPS) - lr * wd * w
+    return w_new, m_new, v_new
+
+
+def _decay_for(name: str) -> float:
+    return 0.0 if name.endswith(NO_DECAY_SUFFIXES) else WEIGHT_DECAY
+
+
+def adamw_subspace(cfg: ModelConfig, stage: int, flat_w, flat_g, flat_m,
+                   flat_v, u, lr, t):
+    """One optimizer step for a whole stage (subspace mode)."""
+    bc1 = 1.0 - jnp.power(jnp.float32(BETA1), t)
+    bc2 = 1.0 - jnp.power(jnp.float32(BETA2), t)
+    proj = u @ u.T
+    schema = stage_param_schema(cfg, stage)
+    w_out, m_out, v_out = [], [], []
+    for (name, _), w, g, m, v in zip(schema, flat_w, flat_g, flat_m, flat_v):
+        wd = _decay_for(name)
+        if name.endswith("wp2") or name == "t_s":
+            w2, m2, v2 = K.rowwise_adamw(w, g, m, v, u, _h(lr, t, wd))
+        elif name.endswith("wp1"):
+            w2, m2, v2 = _standard(w, g, m, v, lr, bc1, bc2, wd)
+            w2 = w2 @ proj  # iterative projection back onto S
+        else:
+            w2, m2, v2 = _standard(w, g, m, v, lr, bc1, bc2, wd)
+        w_out.append(w2)
+        m_out.append(m2)
+        v_out.append(v2)
+    return tuple(w_out), tuple(m_out), tuple(v_out)
+
+
+def adamw_standard(cfg: ModelConfig, stage: int, flat_w, flat_g, flat_m,
+                   flat_v, lr, t):
+    """One optimizer step for a whole stage (raw / lossy baselines)."""
+    bc1 = 1.0 - jnp.power(jnp.float32(BETA1), t)
+    bc2 = 1.0 - jnp.power(jnp.float32(BETA2), t)
+    schema = stage_param_schema(cfg, stage)
+    w_out, m_out, v_out = [], [], []
+    for (name, _), w, g, m, v in zip(schema, flat_w, flat_g, flat_m, flat_v):
+        w2, m2, v2 = _standard(w, g, m, v, lr, bc1, bc2, _decay_for(name))
+        w_out.append(w2)
+        m_out.append(m2)
+        v_out.append(v2)
+    return tuple(w_out), tuple(m_out), tuple(v_out)

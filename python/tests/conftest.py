@@ -1,0 +1,51 @@
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile.configs import CONFIGS, stage_param_schema  # noqa: E402
+
+
+def orthonormal(d: int, k: int, seed: int = 0) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.standard_normal((d, k)))
+    return jnp.asarray(q, jnp.float32)
+
+
+def init_stage(cfg, stage, u, t_fixed, rng, in_subspace=True):
+    """Initialize one stage's flat parameter list; constrained matrices
+    start with rows in S = Col(u), T_S = T_fixed U Uᵀ (Sec. 4.3.1)."""
+    proj = u @ u.T
+    flat = []
+    for name, shape in stage_param_schema(cfg, stage):
+        if name.endswith("_g"):
+            a = jnp.ones(shape, jnp.float32)
+        elif name.endswith("_b"):
+            a = jnp.zeros(shape, jnp.float32)
+        else:
+            a = jnp.asarray(rng.standard_normal(shape) * 0.02, jnp.float32)
+        if in_subspace:
+            if name.endswith("wp1") or name.endswith("wp2"):
+                a = a @ proj
+            if name == "t_s":
+                a = t_fixed @ proj
+        flat.append(a)
+    return flat
+
+
+@pytest.fixture(scope="session")
+def tiny_setup():
+    cfg = CONFIGS["tiny"]
+    rng = np.random.default_rng(7)
+    u = orthonormal(cfg.d, cfg.k, seed=7)
+    t_fixed = jnp.asarray(
+        rng.standard_normal((cfg.vocab, cfg.d)) * 0.02, jnp.float32)
+    params = [init_stage(cfg, s, u, t_fixed, rng) for s in range(cfg.stages)]
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, (cfg.b, cfg.n)), jnp.int32)
+    tgt = jnp.asarray(rng.integers(0, cfg.vocab, (cfg.b, cfg.n)), jnp.int32)
+    return cfg, params, u, t_fixed, tok, tgt

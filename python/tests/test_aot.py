@@ -1,0 +1,93 @@
+"""AOT pipeline: manifest consistency and HLO-text portability.
+
+The artifacts/ directory is the rust runtime's entire world; these tests
+pin the contract (arg order = schema order, shapes, mode coverage) and
+ensure the emitted HLO stays parseable by the *old* XLA text parser (no
+`topk`/custom-call instructions).
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile.configs import CONFIGS, stage_param_schema
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_default_configs(manifest):
+    for name in ("tiny", "small", "base"):
+        assert name in manifest["configs"], name
+
+
+def test_entry_args_follow_schema_order(manifest):
+    cfgm = manifest["configs"]["tiny"]
+    cfg = CONFIGS["tiny"]
+    e = cfgm["entries"]["subspace/mid_bwd"]
+    names = [a["name"] for a in e["args"]]
+    schema = [f"p.{n}" for n, _ in stage_param_schema(cfg, 1)]
+    assert names[: len(schema)] == schema
+    assert names[len(schema):] == ["u", "t_fixed", "tok", "xc_in", "gc_out"]
+
+
+def test_boundary_shapes_are_compressed(manifest):
+    for cname, cm in manifest["configs"].items():
+        h = cm["hyper"]
+        for key, e in cm["entries"].items():
+            mode = key.split("/")[0]
+            if mode not in ("subspace", "nofixed"):
+                continue
+            for a in e["args"]:
+                if a["name"] in ("xc_in", "gc_out", "gc_in"):
+                    assert a["shape"] == [h["b"], h["n"], h["k"]], (cname, key)
+
+
+def test_adamw_outputs_triple_schema(manifest):
+    cm = manifest["configs"]["tiny"]
+    cfg = CONFIGS["tiny"]
+    for kind, stage in (("first", 0), ("mid", 1), ("last", 2)):
+        e = cm["entries"][f"subspace/adamw_{kind}"]
+        n = len(stage_param_schema(cfg, stage))
+        assert len(e["outs"]) == 3 * n, kind
+
+
+def test_hlo_files_exist_and_are_text(manifest):
+    for cname, cm in manifest["configs"].items():
+        for key, e in cm["entries"].items():
+            path = os.path.join(ART, e["file"])
+            assert os.path.exists(path), (cname, key)
+            head = open(path).read(200)
+            assert head.startswith("HloModule"), (cname, key, head[:40])
+
+
+def test_no_unparseable_instructions(manifest):
+    """xla_extension 0.5.1's text parser rejects `topk(...)` and any
+    custom-call — ensure no artifact contains them."""
+    for cname, cm in manifest["configs"].items():
+        for key, e in cm["entries"].items():
+            text = open(os.path.join(ART, e["file"])).read()
+            assert " topk(" not in text, (cname, key)
+            assert "custom-call" not in text, (cname, key)
+
+
+def test_grassmann_entry_present_for_subspace_configs(manifest):
+    for cname, cm in manifest["configs"].items():
+        if "subspace" in cm["modes"]:
+            assert "subspace/grassmann_step" in cm["entries"], cname
+
+
+def test_param_counts_match(manifest):
+    for cname, cm in manifest["configs"].items():
+        cfg = CONFIGS[cname]
+        assert cm["hyper"]["param_count"] == cfg.param_count

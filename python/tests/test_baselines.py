@@ -1,0 +1,80 @@
+"""Lossy baseline compressors (Fig. 6 / Thm B.1 substrate)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import baselines
+
+
+@settings(max_examples=25, deadline=None)
+@given(numel=st.integers(16, 2048), ratio=st.floats(2.0, 64.0),
+       seed=st.integers(0, 2**16))
+def test_topk_keeps_largest_by_magnitude(numel, ratio, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(numel), jnp.float32)
+    y = baselines.topk_cd(x, ratio)
+    kk = baselines.topk_keep(numel, ratio)
+    nz = np.flatnonzero(np.asarray(y))
+    assert len(nz) <= kk
+    if len(nz) and len(nz) < numel:
+        kept_min = np.abs(np.asarray(x))[nz].min()
+        dropped = np.delete(np.abs(np.asarray(x)), nz)
+        assert kept_min >= dropped.max() - 1e-6
+    # surviving entries are bit-exact
+    np.testing.assert_array_equal(np.asarray(y)[nz], np.asarray(x)[nz])
+
+
+@settings(max_examples=25, deadline=None)
+@given(numel=st.integers(1, 1024), seed=st.integers(0, 2**16))
+def test_quant_error_bounded_by_half_step(numel, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(numel) * 3.0, jnp.float32)
+    y = baselines.quant_cd(x)
+    step = float(jnp.max(jnp.abs(x))) / 127.0
+    assert float(jnp.max(jnp.abs(x - y))) <= step * 0.501 + 1e-6
+
+
+def test_powerlr_rank_budget_and_error():
+    rng = np.random.default_rng(3)
+    b, n, d = 2, 64, 32
+    x = jnp.asarray(rng.standard_normal((b, n, d)), jnp.float32)
+    ratio = 8.0
+    y = baselines.powerlr_cd(x, ratio)
+    assert y.shape == x.shape
+    r = baselines.powerlr_rank(n, d, ratio)
+    # each slice of the reconstruction has rank ≤ r
+    for i in range(b):
+        sv = np.linalg.svd(np.asarray(y[i]), compute_uv=False)
+        assert (sv > 1e-4 * sv[0]).sum() <= r + 1
+    # and it is lossy but not degenerate
+    rel = float(jnp.linalg.norm(x - y) / jnp.linalg.norm(x))
+    assert 0.01 < rel < 1.0
+
+
+def test_powerlr_deterministic():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((1, 32, 16)), jnp.float32)
+    a = baselines.powerlr_cd(x, 4.0)
+    b = baselines.powerlr_cd(x, 4.0)
+    np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 4), n=st.sampled_from([32, 64, 128]),
+       d=st.sampled_from([64, 128, 256]), k=st.sampled_from([4, 8, 16]))
+def test_wire_bytes_ordering(b, n, d, k):
+    ratio = d / k
+    raw = baselines.wire_bytes("raw", b, n, d, k, ratio)
+    sub = baselines.wire_bytes("subspace", b, n, d, k, ratio)
+    assert raw // sub == d // k
+    for mode in ("topk", "quant", "powerlr"):
+        assert baselines.wire_bytes(mode, b, n, d, k, ratio) <= raw + 8
+
+
+def test_orthonormalize_columns():
+    rng = np.random.default_rng(5)
+    p = jnp.asarray(rng.standard_normal((32, 5)), jnp.float32)
+    q = baselines._orthonormalize(p)
+    gram = np.asarray(q.T @ q)
+    np.testing.assert_allclose(gram, np.eye(5), atol=1e-4)

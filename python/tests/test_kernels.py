@@ -1,0 +1,189 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (both the Pallas fast path, rows % 64 == 0, and
+the jnp fallback) and asserts allclose. This is the CORE correctness
+signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import subspace as K
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+def ortho(rng, d, k):
+    q, _ = np.linalg.qr(rng.standard_normal((d, k)))
+    return jnp.asarray(q, jnp.float32)
+
+
+# rows = b*n; include multiples of BM (pallas path) and odd sizes (fallback)
+ROWS = st.sampled_from([64, 128, 192, 1, 7, 63, 65, 100])
+DIMS = st.sampled_from([8, 16, 64, 96])
+RANKS = st.sampled_from([1, 2, 4, 8])
+
+
+@settings(max_examples=40, deadline=None)
+@given(rows=ROWS, d=DIMS, k=RANKS, seed=st.integers(0, 2**16))
+def test_project_matches_ref(rows, d, k, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, 1, rows, d)
+    e = rand(rng, 1, rows, d)
+    u = ortho(rng, d, min(k, d))
+    got = K.subspace_project(x, e, u)
+    want = ref.subspace_project(x, e, u)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(rows=ROWS, d=DIMS, k=RANKS, seed=st.integers(0, 2**16))
+def test_reconstruct_matches_ref(rows, d, k, seed):
+    rng = np.random.default_rng(seed)
+    k = min(k, d)
+    xc = rand(rng, 1, rows, k)
+    e = rand(rng, 1, rows, d)
+    u = ortho(rng, d, k)
+    got = K.subspace_reconstruct(xc, e, u)
+    want = ref.subspace_reconstruct(xc, e, u)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(rows=ROWS, d=DIMS, k=RANKS, seed=st.integers(0, 2**16))
+def test_grad_kernels_match_ref(rows, d, k, seed):
+    rng = np.random.default_rng(seed)
+    k = min(k, d)
+    g = rand(rng, 1, rows, d)
+    gc = rand(rng, 1, rows, k)
+    u = ortho(rng, d, k)
+    np.testing.assert_allclose(
+        K.grad_project(g, u), ref.grad_project(g, u), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        K.grad_expand(gc, u), ref.grad_expand(gc, u), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.sampled_from([64, 128, 37]), cols=DIMS, k=RANKS,
+       t=st.integers(1, 5000), seed=st.integers(0, 2**16))
+def test_rowwise_adamw_matches_ref(rows, cols, k, t, seed):
+    rng = np.random.default_rng(seed)
+    k = min(k, cols)
+    w, g = rand(rng, rows, cols), rand(rng, rows, cols)
+    m, v = rand(rng, rows, cols), jnp.abs(rand(rng, rows, cols))
+    u = ortho(rng, cols, k)
+    h = jnp.asarray(
+        [3e-4, 1 - 0.9**t, 1 - 0.999**t, 0.01], jnp.float32)
+    got = K.rowwise_adamw(w, g, m, v, u, h)
+    want = ref.rowwise_adamw(w, g, m, v, u, h)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_project_is_exact_inverse_on_subspace():
+    """Eq. 7: X̂ U Uᵀ = X̂ when Row(X̂) ⊆ S — the lossless-wire property."""
+    rng = np.random.default_rng(3)
+    d, k, rows = 64, 8, 128
+    u = ortho(rng, d, k)
+    # activation whose residual lies exactly in S
+    resid = rand(rng, 1, rows, k) @ u.T
+    e = rand(rng, 1, rows, d)
+    x = resid + e
+    xc = K.subspace_project(x, e, u)
+    back = K.subspace_reconstruct(xc, e, u)
+    np.testing.assert_allclose(back, x, rtol=1e-5, atol=1e-6)
+
+
+def test_grad_roundtrip_exact_on_subspace():
+    """Eq. 9–10: gradient wire compression is lossless for in-S grads."""
+    rng = np.random.default_rng(4)
+    d, k, rows = 64, 8, 128
+    u = ortho(rng, d, k)
+    g = rand(rng, 1, rows, k) @ u.T
+    back = K.grad_expand(K.grad_project(g, u), u)
+    np.testing.assert_allclose(back, g, rtol=1e-5, atol=1e-6)
+
+
+def test_custom_vjp_project():
+    """d/dX[(X−E)U]ᵀ·ct = ct Uᵀ; d/dE = −ct Uᵀ (closed form vs autodiff
+    of the reference)."""
+    rng = np.random.default_rng(5)
+    d, k, rows = 16, 4, 64
+    u = ortho(rng, d, k)
+    x, e = rand(rng, 1, rows, d), rand(rng, 1, rows, d)
+    ct = rand(rng, 1, rows, k)
+
+    gx_k = jax.vjp(lambda xx: K.subspace_project(xx, e, u), x)[1](ct)[0]
+    gx_r = jax.vjp(lambda xx: ref.subspace_project(xx, e, u), x)[1](ct)[0]
+    np.testing.assert_allclose(gx_k, gx_r, rtol=1e-5, atol=1e-6)
+
+    ge_k = jax.vjp(lambda ee: K.subspace_project(x, ee, u), e)[1](ct)[0]
+    ge_r = jax.vjp(lambda ee: ref.subspace_project(x, ee, u), e)[1](ct)[0]
+    np.testing.assert_allclose(ge_k, ge_r, rtol=1e-5, atol=1e-6)
+
+
+def test_custom_vjp_reconstruct():
+    rng = np.random.default_rng(6)
+    d, k, rows = 16, 4, 64
+    u = ortho(rng, d, k)
+    xc, e = rand(rng, 1, rows, k), rand(rng, 1, rows, d)
+    ct = rand(rng, 1, rows, d)
+
+    g_k = jax.vjp(lambda xx: K.subspace_reconstruct(xx, e, u), xc)[1](ct)[0]
+    g_r = jax.vjp(lambda xx: ref.subspace_reconstruct(xx, e, u), xc)[1](ct)[0]
+    np.testing.assert_allclose(g_k, g_r, rtol=1e-5, atol=1e-6)
+
+    ge_k = jax.vjp(lambda ee: K.subspace_reconstruct(xc, ee, u), e)[1](ct)[0]
+    ge_r = jax.vjp(lambda ee: ref.subspace_reconstruct(xc, ee, u), e)[1](ct)[0]
+    np.testing.assert_allclose(ge_k, ge_r, rtol=1e-5, atol=1e-6)
+
+
+def test_rowwise_adamw_preserves_subspace():
+    """Sec. 5 invariant: rows of W stay in S under the modified update,
+    for arbitrary (out-of-S) incoming gradients."""
+    rng = np.random.default_rng(8)
+    rows, cols, k = 128, 32, 4
+    u = ortho(rng, cols, k)
+    proj = u @ u.T
+    w = rand(rng, rows, cols) @ proj
+    m = jnp.zeros((rows, cols))
+    v = jnp.zeros((rows, cols))
+    for t in range(1, 6):
+        g = rand(rng, rows, cols)  # arbitrary direction
+        h = jnp.asarray([1e-2, 1 - 0.9**t, 1 - 0.999**t, 0.01], jnp.float32)
+        w, m, v = K.rowwise_adamw(w, g, m, v, u, h)
+    leak = jnp.max(jnp.abs(w - w @ proj))
+    assert float(leak) < 1e-5, f"rows left S: {leak}"
+
+
+def test_standard_adamw_breaks_subspace():
+    """Negative control: the *unmodified* AdamW drifts W out of S — the
+    very failure Sec. 5 exists to fix."""
+    rng = np.random.default_rng(9)
+    rows, cols, k = 64, 32, 4
+    u = ortho(rng, cols, k)
+    proj = u @ u.T
+    w = rand(rng, rows, cols) @ proj
+    m = jnp.zeros((rows, cols))
+    v = jnp.zeros((rows, cols))
+    for t in range(1, 6):
+        g = rand(rng, rows, cols) @ proj  # even with in-S gradients
+        h = jnp.asarray([1e-2, 1 - 0.9**t, 1 - 0.999**t, 0.0], jnp.float32)
+        w, m, v = ref.standard_adamw(w, g, m, v, h)
+    leak = jnp.max(jnp.abs(w - w @ proj))
+    assert float(leak) > 1e-6, "expected elementwise V̂ to distort rows"
+
+
+def test_vmem_and_mxu_estimates():
+    # paper-scale reference shapes: d=4096, k=40 (100x), BM=64
+    vb = K.vmem_bytes(4096, 40)
+    assert vb < 4 * 2**20, f"VMEM/grid-step {vb} exceeds budget"
+    assert 0.0 < K.mxu_utilization(4096, 40) <= 1.0

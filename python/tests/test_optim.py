@@ -1,0 +1,100 @@
+"""Optimizer entrypoints: subspace closure, equivalence to standard AdamW
+where no constraint applies, and schedule-scalar handling."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import optim
+from compile.configs import CONFIGS, stage_param_schema
+from compile.kernels import ref
+from tests.conftest import init_stage, orthonormal
+
+
+CFG = CONFIGS["tiny"]
+
+
+def rand_flat(rng, stage, scale=1.0):
+    return [
+        jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+        for _, shape in stage_param_schema(CFG, stage)
+    ]
+
+
+def zeros_like(flat):
+    return [jnp.zeros_like(x) for x in flat]
+
+
+def test_subspace_step_keeps_constrained_rows_in_s():
+    rng = np.random.default_rng(0)
+    u = orthonormal(CFG.d, CFG.k, 1)
+    proj = u @ u.T
+    t_fixed = jnp.asarray(rng.standard_normal((CFG.vocab, CFG.d)) * 0.02,
+                          jnp.float32)
+    w = init_stage(CFG, 0, u, t_fixed, rng)
+    m, v = zeros_like(w), zeros_like(w)
+    for t in range(1, 8):
+        g = rand_flat(rng, 0)  # arbitrary out-of-S gradients
+        w, m, v = optim.adamw_subspace(
+            CFG, 0, w, g, m, v, u, jnp.float32(1e-3), jnp.float32(t))
+    for (name, _), x in zip(stage_param_schema(CFG, 0), w):
+        if name.endswith(("wp1", "wp2")) or name == "t_s":
+            leak = float(jnp.max(jnp.abs(x - x @ proj)))
+            assert leak < 1e-5, (name, leak)
+
+
+def test_unconstrained_params_match_standard_adamw():
+    """For wq/wk/wv/w1/ln/head, adamw_subspace must reduce to the
+    unmodified update."""
+    rng = np.random.default_rng(1)
+    u = orthonormal(CFG.d, CFG.k, 2)
+    w = rand_flat(rng, 2, 0.02)
+    g = rand_flat(rng, 2)
+    m, v = zeros_like(w), zeros_like(w)
+    lr, t = jnp.float32(3e-4), jnp.float32(5.0)
+    w2, m2, v2 = optim.adamw_subspace(CFG, 2, w, g, m, v, u, lr, t)
+    w2r, m2r, v2r = optim.adamw_standard(CFG, 2, w, g, m, v, lr, t)
+    for (name, _), a, b in zip(stage_param_schema(CFG, 2), w2, w2r):
+        if name.endswith(("wp1", "wp2")) or name == "t_s":
+            continue
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7,
+                                   err_msg=name)
+
+
+def test_layernorm_params_not_decayed():
+    """Weight decay must not shrink LN gains toward zero."""
+    rng = np.random.default_rng(2)
+    w = [jnp.ones(s) if n.endswith("_g") else
+         jnp.asarray(rng.standard_normal(s) * 0.02, jnp.float32)
+         for n, s in stage_param_schema(CFG, 2)]
+    g = zeros_like(w)  # zero gradients: only decay acts
+    m, v = zeros_like(w), zeros_like(w)
+    w2, _, _ = optim.adamw_standard(
+        CFG, 2, w, g, m, v, jnp.float32(1e-2), jnp.float32(1.0))
+    for (name, _), before, after in zip(stage_param_schema(CFG, 2), w, w2):
+        if name.endswith(("_g", "_b")):
+            np.testing.assert_allclose(after, before, atol=1e-7,
+                                       err_msg=name)
+        elif name == "w_head":
+            # decayed parameters must actually shrink
+            assert float(jnp.sum(jnp.abs(after))) < \
+                float(jnp.sum(jnp.abs(before)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.integers(1, 10_000), lr=st.floats(1e-5, 1e-2))
+def test_bias_correction_matches_reference(t, lr):
+    rng = np.random.default_rng(t)
+    w = jnp.asarray(rng.standard_normal((8, 16)) * 0.1, jnp.float32)
+    g = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    m = jnp.zeros_like(w)
+    v = jnp.zeros_like(w)
+    h = jnp.asarray(
+        [lr, 1 - optim.BETA1 ** t, 1 - optim.BETA2 ** t, 0.01], jnp.float32)
+    w1, _, _ = ref.standard_adamw(w, g, m, v, h)
+    # manual expected first step: mhat = g, vhat = g², update = sign-ish
+    mhat = (1 - optim.BETA1) * g / (1 - optim.BETA1 ** t)
+    vhat = (1 - optim.BETA2) * g * g / (1 - optim.BETA2 ** t)
+    want = w - lr * mhat / (jnp.sqrt(vhat) + optim.EPS) - lr * 0.01 * w
+    np.testing.assert_allclose(w1, want, rtol=1e-4, atol=1e-5)

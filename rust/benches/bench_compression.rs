@@ -1,0 +1,45 @@
+//! Wire-codec micro-benchmarks (Fig. 4/13 micro layer): bytes-on-wire and
+//! encode/decode throughput for every boundary compression scheme at the
+//! base config's boundary shape (4, 128, 256).
+
+use protomodels::bench::{black_box, Bencher};
+use protomodels::compress::{decode, encode, wire_bytes, Mode};
+use protomodels::rng::Rng;
+use protomodels::tensor::Tensor;
+
+fn main() {
+    let (b, n, d, k) = (4usize, 128usize, 256usize, 8usize);
+    let ratio = d as f64 / k as f64;
+    let mut rng = Rng::new(7);
+    let full = Tensor::new(vec![b, n, d], rng.normal_f32_vec(b * n * d, 1.0));
+    let comp = Tensor::new(vec![b, n, k], rng.normal_f32_vec(b * n * k, 1.0));
+    let bench = Bencher::default();
+
+    println!("== wire bytes per boundary tensor (b={b}, n={n}, d={d}, k={k}) ==");
+    for mode in
+        [Mode::Subspace, Mode::Raw, Mode::TopK, Mode::Quant, Mode::PowerLR]
+    {
+        let bytes = wire_bytes(mode, b, n, d, k, ratio);
+        println!(
+            "{:<10} {:>10} B   ({:>6.1}x vs raw)",
+            mode.as_str(),
+            bytes,
+            wire_bytes(Mode::Raw, b, n, d, k, ratio) as f64 / bytes as f64
+        );
+    }
+
+    println!("\n== encode+decode throughput ==");
+    for (name, mode, t) in [
+        ("subspace (dense k)", Mode::Subspace, &comp),
+        ("raw (dense d)", Mode::Raw, &full),
+        ("topk", Mode::TopK, &full),
+        ("quant int8", Mode::Quant, &full),
+    ] {
+        let r = bench.run(&format!("encode+decode/{name}"), || {
+            let f = encode(black_box(t), mode, ratio);
+            black_box(decode(&f));
+        });
+        let mbps = t.wire_bytes() as f64 / (r.mean_ns * 1e-9) / 1e6;
+        println!("    → {mbps:.0} MB/s of activations");
+    }
+}

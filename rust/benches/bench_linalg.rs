@@ -1,0 +1,54 @@
+//! Host linalg micro-benchmarks: the off-hot-path substrate used by
+//! metrics (stable rank), init (orthonormal U, row projection) and the
+//! Grassmann diagnostics.
+
+use protomodels::bench::{black_box, Bencher};
+use protomodels::linalg::{
+    matmul, orthonormalize_columns, project_rows, singular_values,
+    stable_rank, transpose,
+};
+use protomodels::rng::Rng;
+use protomodels::tensor::Tensor;
+
+fn randt(rng: &mut Rng, m: usize, n: usize) -> Tensor {
+    Tensor::new(vec![m, n], rng.normal_f32_vec(m * n, 1.0))
+}
+
+fn main() {
+    let mut rng = Rng::new(3);
+    let a256 = randt(&mut rng, 256, 256);
+    let b256 = randt(&mut rng, 256, 256);
+    let w = randt(&mut rng, 1024, 256);
+    let u = {
+        let mut u = randt(&mut rng, 256, 8);
+        orthonormalize_columns(&mut u);
+        u
+    };
+    let bench = Bencher::default();
+
+    let r = bench.run("matmul 256x256x256", || {
+        black_box(matmul(black_box(&a256), black_box(&b256)));
+    });
+    println!(
+        "    → {:.2} GFLOP/s",
+        2.0 * 256f64.powi(3) / (r.mean_ns * 1e-9) / 1e9
+    );
+    bench.run("transpose 256x256", || {
+        black_box(transpose(black_box(&a256)));
+    });
+    bench.run("project_rows (1024x256)·(256x8)", || {
+        black_box(project_rows(black_box(&w), black_box(&u)));
+    });
+    let quick = Bencher::quick();
+    quick.run("singular_values 128x128 (jacobi)", || {
+        let m = randt(&mut Rng::new(9), 128, 128);
+        black_box(singular_values(&m));
+    });
+    quick.run("stable_rank 256x256", || {
+        black_box(stable_rank(black_box(&a256)));
+    });
+    quick.run("orthonormalize 256x8", || {
+        let mut m = randt(&mut Rng::new(11), 256, 8);
+        black_box(orthonormalize_columns(&mut m));
+    });
+}

@@ -1,0 +1,42 @@
+//! netsim + schedule micro-benchmarks: per-transfer sampling cost and the
+//! GPipe makespan recurrence at large (stage × microbatch) grids — the
+//! L3 bookkeeping that must never rival stage compute.
+
+use protomodels::bench::{black_box, Bencher};
+use protomodels::coordinator::schedule::{gpipe_makespan, StepCosts, Tx};
+use protomodels::netsim::{Link, LinkSpec, Topology};
+use protomodels::rng::Rng;
+
+fn costs(p: usize, m: usize) -> StepCosts {
+    StepCosts {
+        stages: p,
+        microbatches: m,
+        fwd: vec![vec![1e-3; m]; p],
+        bwd: vec![vec![3e-3; m]; p],
+        tx_fwd: vec![vec![Tx { ser: 1e-4, lat: 2e-3 }; m]; p - 1],
+        tx_bwd: vec![vec![Tx { ser: 1e-4, lat: 2e-3 }; m]; p - 1],
+        opt: vec![1e-4; p],
+        tail: 0.0,
+    }
+}
+
+fn main() {
+    let bench = Bencher::default();
+    let mut rng = Rng::new(5);
+    let mut link = Link::new(LinkSpec::internet_80m(), rng.fork(0));
+    bench.run("link.sample (N(B,0.2B) draw)", || {
+        black_box(link.sample(black_box(65536)));
+    });
+
+    let mut topo = Topology::global_regions(8, &mut rng);
+    bench.run("topology.broadcast 8 stages", || {
+        black_box(topo.broadcast(black_box(8192)));
+    });
+
+    for (p, m) in [(4usize, 8usize), (8, 32), (32, 64)] {
+        let c = costs(p, m);
+        bench.run(&format!("gpipe_makespan P={p} M={m}"), || {
+            black_box(gpipe_makespan(black_box(&c)));
+        });
+    }
+}

@@ -1,0 +1,54 @@
+//! End-to-end pipeline benchmarks (Figs. 2/5 micro layer): real wall time
+//! of one optimizer step (all PJRT executions + coordination) per config
+//! and microbatch count, plus the simulated-vs-host time split.
+
+use protomodels::bench::Bencher;
+use protomodels::compress::Mode;
+use protomodels::coordinator::{Pipeline, PipelineConfig};
+use protomodels::data::{Corpus, CorpusKind};
+use protomodels::manifest::Manifest;
+use protomodels::netsim::{LinkSpec, Topology};
+use protomodels::rng::Rng;
+
+fn main() {
+    let m = Manifest::load(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    )
+    .expect("run `make artifacts`");
+    let bench = Bencher::quick();
+
+    for (config, mbs) in [("tiny", 2usize), ("tiny", 8), ("small", 4)] {
+        for mode in [Mode::Subspace, Mode::Raw] {
+            let h = m.config(config).unwrap().hyper.clone();
+            let mut rng = Rng::new(2);
+            let topo =
+                Topology::uniform(h.stages, LinkSpec::internet_80m(), &mut rng);
+            let pcfg = PipelineConfig {
+                mode,
+                microbatches: mbs,
+                grassmann_interval: 0,
+                total_steps: 10_000,
+                ..Default::default()
+            };
+            let mut pipe = Pipeline::new(&m, config, topo, pcfg).unwrap();
+            let corpus =
+                Corpus::synthetic(CorpusKind::Wiki, h.vocab, 100_000, 3);
+            // compile + warm
+            pipe.train_step(|r| corpus.train_batch(h.b, h.n, r)).unwrap();
+            let r = bench.run(
+                &format!("train_step {config} M={mbs} {}", mode.as_str()),
+                || {
+                    pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))
+                        .unwrap();
+                },
+            );
+            let toks = (mbs * h.b * h.n) as f64;
+            println!(
+                "    → host {:.0} tok/s (real CPU) | PJRT share {:.0}%",
+                toks / (r.mean_ns * 1e-9),
+                100.0 * pipe.rt.total_compute_seconds()
+                    / pipe.host_seconds.max(1e-9)
+            );
+        }
+    }
+}

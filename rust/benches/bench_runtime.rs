@@ -1,0 +1,48 @@
+//! PJRT dispatch benchmarks: per-execution overhead of the runtime layer
+//! (literal conversion + execute + fetch) for the smallest and a mid-size
+//! stage program. The L3 target: dispatch overhead ≪ stage compute.
+
+use protomodels::bench::{black_box, Bencher};
+use protomodels::compress::Mode;
+use protomodels::manifest::Manifest;
+use protomodels::rng::Rng;
+use protomodels::runtime::Runtime;
+use protomodels::stage::{GlobalState, StageState};
+use protomodels::tensor::{IntTensor, Value};
+
+fn main() {
+    let m = Manifest::load(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    )
+    .expect("run `make artifacts`");
+    let bench = Bencher::quick();
+
+    for config in ["tiny", "base"] {
+        let cm = m.config(config).unwrap().clone();
+        let h = cm.hyper.clone();
+        let mut rt = Runtime::new(&m, config).unwrap();
+        let mut rng = Rng::new(1);
+        let global = GlobalState::init(&cm, &mut rng);
+        let st0 =
+            StageState::init(&cm, 0, Mode::Subspace, &global, &mut rng)
+                .unwrap();
+        let tok = IntTensor::new(
+            vec![h.b, h.n],
+            (0..h.b * h.n).map(|i| (i % h.vocab) as i32).collect(),
+        );
+        let mut args: Vec<Value> =
+            st0.params.iter().cloned().map(Value::F32).collect();
+        args.push(Value::F32(global.u.clone()));
+        args.push(Value::F32(global.t_fixed.clone()));
+        args.push(Value::I32(tok));
+        rt.execute("subspace/first_fwd", &args).unwrap(); // compile outside
+        let r = bench.run(&format!("execute subspace/first_fwd [{config}]"), || {
+            black_box(rt.execute("subspace/first_fwd", black_box(&args)).unwrap());
+        });
+        println!(
+            "    → {:.1} µs/exec; host args: {} tensors",
+            r.mean_ns / 1e3,
+            args.len()
+        );
+    }
+}

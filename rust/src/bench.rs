@@ -1,0 +1,137 @@
+//! Micro-benchmark harness (the offline vendor set has no criterion).
+//!
+//! Criterion-style protocol: warmup, then timed iterations until both a
+//! minimum iteration count and a minimum measuring window are reached;
+//! reports mean / median / p95 and throughput. Benches link this via the
+//! library crate and run with `harness = false`.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<48} {:>12} {:>12} {:>12}   ({} iters, σ {})",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+            self.iters,
+            fmt_ns(self.stddev_ns),
+        );
+    }
+
+    /// items/second at the measured mean.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bencher {
+    /// minimum wall-clock seconds of measurement per bench
+    pub min_time: f64,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { min_time: 1.0, min_iters: 10, max_iters: 100_000 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { min_time: 0.3, min_iters: 5, max_iters: 10_000 }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // warmup
+        let warm_until = Instant::now();
+        let mut warm = 0;
+        while warm < 3 || warm_until.elapsed().as_secs_f64() < self.min_time * 0.2
+        {
+            f();
+            warm += 1;
+            if warm >= self.max_iters {
+                break;
+            }
+        }
+        // measure
+        let mut samples: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        while (samples.len() < self.min_iters
+            || t0.elapsed().as_secs_f64() < self.min_time)
+            && samples.len() < self.max_iters
+        {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>()
+            / n as f64;
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: mean,
+            median_ns: samples[n / 2],
+            p95_ns: samples[(n * 95 / 100).min(n - 1)],
+            stddev_ns: var.sqrt(),
+        };
+        r.report();
+        r
+    }
+}
+
+/// Prevent the optimizer from eliding a value (std::hint::black_box shim).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher { min_time: 0.01, min_iters: 3, max_iters: 100 };
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.median_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,102 @@
+//! Minimal CLI argument parser (the offline vendor set has no clap).
+//!
+//! Grammar: `protomodels <subcommand> [--flag value | --switch] …`
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Flags {
+    vals: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Flags {
+    pub fn parse(args: &[String]) -> Result<Flags> {
+        let mut f = Flags::default();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // `--key value` unless next token is another flag / absent
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    f.vals.insert(name.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    f.switches.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                f.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(f)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.vals.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.vals.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.vals.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} wants an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.vals.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} wants a number, got {v:?}")),
+        }
+    }
+
+    pub fn switch(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        match self.vals.get(key) {
+            Some(v) => Ok(v),
+            None => bail!("missing required flag --{key}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &[&str]) -> Flags {
+        Flags::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>())
+            .unwrap()
+    }
+
+    #[test]
+    fn parses_values_switches_positionals() {
+        let f = p(&["train", "--config", "base", "--fast", "--steps", "10"]);
+        assert_eq!(f.positional, vec!["train"]);
+        assert_eq!(f.str("config", "x"), "base");
+        assert!(f.switch("fast"));
+        assert_eq!(f.usize("steps", 0).unwrap(), 10);
+        assert_eq!(f.usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let f = p(&["--steps", "abc"]);
+        assert!(f.usize("steps", 0).is_err());
+        assert!(f.require("nope").is_err());
+    }
+}

@@ -1,0 +1,602 @@
+//! The pipeline coordinator — the L3 system contribution.
+//!
+//! Owns: stage workers (parameters + optimizer state), the GPipe
+//! microbatch schedule, boundary compression bookkeeping, the Grassmann
+//! subspace-maintenance protocol (accumulate GᵀG at the last stage,
+//! periodically step U on the manifold, re-project constrained weights,
+//! broadcast the new basis), the netsim topology, and the virtual clock.
+//!
+//! All numerics execute via AOT HLO programs through the PJRT runtime;
+//! the coordinator moves tensors between programs, accumulates gradients
+//! across microbatches, and accounts every byte that would cross a link
+//! in the decentralized deployment.
+
+pub mod schedule;
+
+use anyhow::{bail, Result};
+
+use crate::compress::{wire_bytes, Mode};
+use crate::manifest::Manifest;
+use crate::netsim::Topology;
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::stage::{GlobalState, StageState};
+use crate::tensor::{IntTensor, Tensor, Value};
+use crate::timemodel::{stage_seconds, Phase, TimeModel};
+use schedule::{gpipe_makespan, Makespan, StepCosts, Tx};
+
+/// Run-level configuration of the coordinator.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub mode: Mode,
+    /// microbatches per optimizer step (global batch = M · b)
+    pub microbatches: usize,
+    /// steps between Grassmann subspace updates (0 = off; paper: 500)
+    pub grassmann_interval: usize,
+    /// base Grassmann step scale (adapted by trace(S) at update time)
+    pub grassmann_eta: f64,
+    pub lr: f32,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub time_model: TimeModel,
+    pub seed: u64,
+    /// keep the last step's averaged per-stage gradients on the Pipeline
+    /// (rank-collapse experiments, Figs. 1/7)
+    pub record_grads: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            mode: Mode::Subspace,
+            microbatches: 4,
+            grassmann_interval: 500,
+            grassmann_eta: 0.5,
+            lr: 3e-4,
+            warmup_steps: 20,
+            total_steps: 1000,
+            time_model: TimeModel::default_analytic(),
+            seed: 0,
+            record_grads: false,
+        }
+    }
+}
+
+/// Statistics of one optimizer step.
+#[derive(Clone, Debug)]
+pub struct StepStats {
+    pub step: u64,
+    pub loss: f64,
+    /// simulated wall-clock seconds of this step (netsim + time model)
+    pub sim_seconds: f64,
+    /// bytes that crossed pipeline links this step
+    pub wire_bytes: u64,
+    /// tokens consumed this step
+    pub tokens: usize,
+    pub makespan: Makespan,
+}
+
+pub struct Pipeline {
+    pub rt: Runtime,
+    pub topo: Topology,
+    pub cfg: PipelineConfig,
+    pub stages: Vec<StageState>,
+    pub global: GlobalState,
+    pub step: u64,
+    /// simulated seconds since construction (includes startup broadcast)
+    pub clock: f64,
+    /// Grassmann accumulator S = Σ GᵀG and its sample count
+    s_acc: Tensor,
+    s_count: u64,
+    rng: Rng,
+    /// host-side coordination seconds actually spent (L3 overhead profile)
+    pub host_seconds: f64,
+    /// last step's averaged per-stage gradients (when cfg.record_grads)
+    pub last_grads: Option<Vec<Vec<Tensor>>>,
+}
+
+impl Pipeline {
+    pub fn new(
+        manifest: &Manifest,
+        config_name: &str,
+        topo: Topology,
+        cfg: PipelineConfig,
+    ) -> Result<Pipeline> {
+        let rt = Runtime::new(manifest, config_name)?;
+        let h = rt.config().hyper.clone();
+        if topo.stages() != h.stages {
+            bail!(
+                "topology has {} stages, config {} needs {}",
+                topo.stages(),
+                config_name,
+                h.stages
+            );
+        }
+        if !rt.config().modes.iter().any(|m| m == cfg.mode.as_str()) {
+            bail!(
+                "config {config_name} was not AOT-compiled for mode {:?} \
+                 (have {:?})",
+                cfg.mode.as_str(),
+                rt.config().modes
+            );
+        }
+        let mut rng = Rng::new(cfg.seed ^ 0x9137);
+        let cm = rt.config().clone();
+        let global = GlobalState::init(&cm, &mut rng);
+        let stages = (0..h.stages)
+            .map(|s| StageState::init(&cm, s, cfg.mode, &global, &mut rng))
+            .collect::<Result<Vec<_>>>()?;
+        let mut pipe = Pipeline {
+            rt,
+            topo,
+            cfg,
+            stages,
+            global,
+            step: 0,
+            clock: 0.0,
+            s_acc: Tensor::zeros(&[h.d, h.d]),
+            s_count: 0,
+            rng,
+            host_seconds: 0.0,
+            last_grads: None,
+        };
+        // startup: broadcast T_fixed (compressed modes) + U_k once
+        if matches!(pipe.cfg.mode, Mode::Subspace | Mode::NoFixed) {
+            let bytes = (h.vocab * h.d + h.d * h.k) * 4;
+            pipe.clock += pipe.topo.broadcast(bytes);
+        }
+        Ok(pipe)
+    }
+
+    pub fn hyper(&self) -> crate::manifest::Hyper {
+        self.rt.config().hyper.clone()
+    }
+
+    fn key(&self, name: &str) -> String {
+        format!("{}/{}", self.cfg.mode.as_str(), name)
+    }
+
+    /// adamw entries only exist for subspace/raw: nofixed shares
+    /// subspace's (same schema + constraint rules), lossy modes share raw's.
+    fn opt_key(&self, kind: &str) -> String {
+        let mode = if self.compressed() { "subspace" } else { "raw" };
+        format!("{mode}/adamw_{kind}")
+    }
+
+    fn lr_now(&self) -> f32 {
+        let t = (self.step + 1) as f32;
+        let w = self.cfg.warmup_steps.max(1) as f32;
+        let total = self.cfg.total_steps.max(1) as f32;
+        let warm = (t / w).min(1.0);
+        let decay = (1.0 - (t - w).max(0.0) / (total - w).max(1.0))
+            .clamp(0.1, 1.0);
+        self.cfg.lr * warm * decay
+    }
+
+    fn boundary_bytes(&self) -> usize {
+        let h = &self.rt.config().hyper;
+        wire_bytes(self.cfg.mode, h.b, h.n, h.d, h.k, h.ratio)
+    }
+
+    fn compressed(&self) -> bool {
+        matches!(self.cfg.mode, Mode::Subspace | Mode::NoFixed)
+    }
+
+    /// Args shared by compressed-mode stage programs. The nofixed
+    /// ablation drops T_fixed (its entire embedding lives in S).
+    fn ctx_args(&self, tok: &IntTensor) -> Vec<Value> {
+        if self.cfg.mode == Mode::NoFixed {
+            vec![
+                Value::F32(self.global.u.clone()),
+                Value::I32(tok.clone()),
+            ]
+        } else {
+            vec![
+                Value::F32(self.global.u.clone()),
+                Value::F32(self.global.t_fixed.clone()),
+                Value::I32(tok.clone()),
+            ]
+        }
+    }
+
+    fn params_of(&self, s: usize) -> Vec<Value> {
+        self.stages[s]
+            .params
+            .iter()
+            .cloned()
+            .map(Value::F32)
+            .collect()
+    }
+
+    /// Forward through stage s for one microbatch; returns (output, secs).
+    fn stage_fwd(
+        &mut self,
+        s: usize,
+        tok: &IntTensor,
+        input: Option<&Tensor>,
+    ) -> Result<(Tensor, f64)> {
+        let h = self.rt.config().hyper.clone();
+        let last = h.stages - 1;
+        assert!(s < last, "last stage uses last_loss/last_eval");
+        let mut args = self.params_of(s);
+        if self.compressed() {
+            args.extend(self.ctx_args(tok));
+        } else if s == 0 {
+            args.push(Value::I32(tok.clone()));
+        }
+        if s > 0 {
+            args.push(Value::F32(input.expect("mid stage needs input").clone()));
+        }
+        let name = if s == 0 { "first_fwd" } else { "mid_fwd" };
+        let (outs, dt) = self.rt.execute_timed(&self.key(name), &args)?;
+        let out = outs.into_iter().next().unwrap().into_f32();
+        let secs = stage_seconds(
+            self.cfg.time_model,
+            &h,
+            s,
+            Phase::Fwd,
+            self.compressed(),
+            Some(dt),
+        );
+        Ok((out, secs))
+    }
+
+    /// One full training step over `microbatches` sampled by `sampler`.
+    pub fn train_step<F>(&mut self, mut sampler: F) -> Result<StepStats>
+    where
+        F: FnMut(&mut Rng) -> (IntTensor, IntTensor),
+    {
+        let t_host = std::time::Instant::now();
+        let h = self.rt.config().hyper.clone();
+        let (p, m_count) = (h.stages, self.cfg.microbatches);
+        let last = p - 1;
+        let bbytes = self.boundary_bytes();
+
+        let mut grad_acc: Vec<Vec<Tensor>> =
+            self.stages.iter().map(|st| st.zero_grads()).collect();
+        let mut costs = StepCosts {
+            stages: p,
+            microbatches: m_count,
+            fwd: vec![vec![0.0; m_count]; p],
+            bwd: vec![vec![0.0; m_count]; p],
+            tx_fwd: vec![vec![Tx::default(); m_count]; p - 1],
+            tx_bwd: vec![vec![Tx::default(); m_count]; p - 1],
+            opt: vec![0.0; p],
+            tail: 0.0,
+        };
+        let mut loss_sum = 0.0f64;
+        let mut wire = 0u64;
+
+        let mut data_rng = self.rng.fork(0xDA7A ^ self.step);
+        for mb in 0..m_count {
+            let (tok, tgt) = sampler(&mut data_rng);
+            // ---- forward wave, saving each stage's input for remat bwd
+            let mut saved_inputs: Vec<Option<Tensor>> = vec![None; p];
+            let mut cur: Option<Tensor> = None;
+            for s in 0..last {
+                let (out, secs) = self.stage_fwd(s, &tok, cur.as_ref())?;
+                costs.fwd[s][mb] = secs;
+                let (ser, lat) = self.topo.links[s].sample(bbytes);
+                costs.tx_fwd[s][mb] = Tx { ser, lat };
+                wire += bbytes as u64;
+                saved_inputs[s + 1] = Some(out.clone());
+                cur = Some(out);
+            }
+            // ---- last stage: fused fwd + loss + bwd
+            let mut args = self.params_of(last);
+            if self.compressed() {
+                args.extend(self.ctx_args(&tok));
+            }
+            args.push(Value::F32(cur.take().unwrap()));
+            args.push(Value::I32(tgt.clone()));
+            let (outs, dt) =
+                self.rt.execute_timed(&self.key("last_loss"), &args)?;
+            costs.fwd[last][mb] = stage_seconds(
+                self.cfg.time_model,
+                &h,
+                last,
+                Phase::LastLoss,
+                self.compressed(),
+                Some(dt),
+            );
+            let n_params = self.stages[last].params.len();
+            let mut it = outs.into_iter();
+            loss_sum += it.next().unwrap().into_f32().item() as f64;
+            let mut gc = it.next().unwrap().into_f32();
+            for g in grad_acc[last].iter_mut() {
+                g.add_assign(&it.next().unwrap().into_f32());
+            }
+            if self.compressed() {
+                let gtg = it.next().unwrap().into_f32();
+                self.s_acc.add_assign(&gtg);
+                self.s_count += 1;
+            } else {
+                debug_assert!(it.next().is_none());
+            }
+            debug_assert_eq!(n_params, grad_acc[last].len());
+
+            // ---- backward wave
+            for s in (0..last).rev() {
+                let (ser, lat) = self.topo.links[s].sample(bbytes);
+                costs.tx_bwd[s][mb] = Tx { ser, lat };
+                wire += bbytes as u64;
+
+                let mut args = self.params_of(s);
+                if self.compressed() {
+                    args.extend(self.ctx_args(&tok));
+                } else if s == 0 {
+                    args.push(Value::I32(tok.clone()));
+                }
+                if s > 0 {
+                    args.push(Value::F32(
+                        saved_inputs[s].as_ref().unwrap().clone(),
+                    ));
+                }
+                args.push(Value::F32(gc.clone()));
+                let name = if s == 0 { "first_bwd" } else { "mid_bwd" };
+                let (outs, dt) =
+                    self.rt.execute_timed(&self.key(name), &args)?;
+                costs.bwd[s][mb] = stage_seconds(
+                    self.cfg.time_model,
+                    &h,
+                    s,
+                    Phase::Bwd,
+                    self.compressed(),
+                    Some(dt),
+                );
+                let mut it = outs.into_iter();
+                if s > 0 {
+                    gc = it.next().unwrap().into_f32();
+                }
+                for g in grad_acc[s].iter_mut() {
+                    g.add_assign(&it.next().unwrap().into_f32());
+                }
+            }
+        }
+
+        // ---- average grads over microbatches, apply optimizer per stage
+        let scale = 1.0 / m_count as f32;
+        if self.cfg.record_grads {
+            let mut snap = grad_acc.clone();
+            for st in snap.iter_mut() {
+                for g in st.iter_mut() {
+                    g.scale(scale);
+                }
+            }
+            self.last_grads = Some(snap);
+        }
+        let lr = self.lr_now();
+        let t_opt = (self.step + 1) as f32;
+        for s in 0..p {
+            for g in grad_acc[s].iter_mut() {
+                g.scale(scale);
+            }
+            let secs = self.optimizer_step(s, &grad_acc[s], lr, t_opt)?;
+            costs.opt[s] = secs;
+        }
+
+        // ---- Grassmann subspace maintenance (Sec. 4.5)
+        if self.compressed()
+            && self.cfg.grassmann_interval > 0
+            && (self.step + 1) % self.cfg.grassmann_interval as u64 == 0
+            && self.s_count > 0
+        {
+            costs.tail += self.grassmann_update()?;
+        }
+
+        let makespan = gpipe_makespan(&costs);
+        self.clock += makespan.total;
+        self.step += 1;
+        self.host_seconds += t_host.elapsed().as_secs_f64();
+        Ok(StepStats {
+            step: self.step,
+            loss: loss_sum / m_count as f64,
+            sim_seconds: makespan.total,
+            wire_bytes: wire,
+            tokens: m_count * h.b * h.n,
+            makespan,
+        })
+    }
+
+    /// AdamW step for one stage; returns simulated seconds.
+    fn optimizer_step(
+        &mut self,
+        s: usize,
+        grads: &[Tensor],
+        lr: f32,
+        t: f32,
+    ) -> Result<f64> {
+        let h = self.rt.config().hyper.clone();
+        let kind = self.rt.config().stage_kind(s);
+        let mut args: Vec<Value> = self.params_of(s);
+        args.extend(grads.iter().cloned().map(Value::F32));
+        args.extend(self.stages[s].m.iter().cloned().map(Value::F32));
+        args.extend(self.stages[s].v.iter().cloned().map(Value::F32));
+        if self.compressed() {
+            args.push(Value::F32(self.global.u.clone()));
+        }
+        args.push(Value::F32(Tensor::scalar(lr)));
+        args.push(Value::F32(Tensor::scalar(t)));
+        let (outs, dt) = self.rt.execute_timed(&self.opt_key(kind), &args)?;
+        let n = self.stages[s].params.len();
+        debug_assert_eq!(outs.len(), 3 * n);
+        let mut it = outs.into_iter();
+        for i in 0..n {
+            self.stages[s].params[i] = it.next().unwrap().into_f32();
+        }
+        for i in 0..n {
+            self.stages[s].m[i] = it.next().unwrap().into_f32();
+        }
+        for i in 0..n {
+            self.stages[s].v[i] = it.next().unwrap().into_f32();
+        }
+        Ok(stage_seconds(
+            self.cfg.time_model,
+            &h,
+            s,
+            Phase::Opt,
+            self.compressed(),
+            Some(dt),
+        ))
+    }
+
+    /// Riemannian subspace update + re-projection + basis broadcast.
+    /// Returns simulated tail seconds added to the step.
+    fn grassmann_update(&mut self) -> Result<f64> {
+        let h = self.rt.config().hyper.clone();
+        let mut s_avg = self.s_acc.clone();
+        s_avg.scale(1.0 / self.s_count as f32);
+        // adaptive step: eta ∝ d / tr(S) keeps the step well-scaled as
+        // gradient magnitudes decay over training
+        let trace: f64 = (0..h.d).map(|i| s_avg.at2(i, i) as f64).sum();
+        let eta = if trace > 1e-12 {
+            (self.cfg.grassmann_eta * h.d as f64 / trace) as f32
+        } else {
+            0.0
+        };
+        let (outs, dt) = self.rt.execute_timed(
+            "subspace/grassmann_step",
+            &[
+                Value::F32(self.global.u.clone()),
+                Value::F32(s_avg),
+                Value::F32(Tensor::scalar(eta)),
+            ],
+        )?;
+        self.global.u = outs.into_iter().next().unwrap().into_f32();
+        // re-project constrained weights + momenta onto the new S
+        let mut secs = stage_seconds(
+            self.cfg.time_model,
+            &h,
+            h.stages - 1,
+            Phase::Grassmann,
+            true,
+            Some(dt),
+        );
+        for s in 0..h.stages {
+            let kind = self.rt.config().stage_kind(s);
+            let mut args: Vec<Value> = self.params_of(s);
+            args.extend(self.stages[s].m.iter().cloned().map(Value::F32));
+            args.push(Value::F32(self.global.u.clone()));
+            let (outs, dt2) = self
+                .rt
+                .execute_timed(&format!("subspace/reproject_{kind}"), &args)?;
+            let n = self.stages[s].params.len();
+            let mut it = outs.into_iter();
+            for i in 0..n {
+                self.stages[s].params[i] = it.next().unwrap().into_f32();
+            }
+            for i in 0..n {
+                self.stages[s].m[i] = it.next().unwrap().into_f32();
+            }
+            secs += stage_seconds(
+                self.cfg.time_model,
+                &h,
+                s,
+                Phase::Grassmann,
+                true,
+                Some(dt2),
+            );
+        }
+        // broadcast the new U_k to every stage
+        secs += self.topo.broadcast(h.d * h.k * 4);
+        self.s_acc = Tensor::zeros(&[h.d, h.d]);
+        self.s_count = 0;
+        Ok(secs)
+    }
+
+    /// Mean validation loss over `batches` forward passes.
+    pub fn eval<F>(&mut self, batches: usize, mut sampler: F) -> Result<f64>
+    where
+        F: FnMut(&mut Rng) -> (IntTensor, IntTensor),
+    {
+        let h = self.rt.config().hyper.clone();
+        let last = h.stages - 1;
+        let mut rng = self.rng.fork(0xE7A1);
+        let mut sum = 0.0;
+        for _ in 0..batches {
+            let (tok, tgt) = sampler(&mut rng);
+            let mut cur: Option<Tensor> = None;
+            for s in 0..last {
+                let (out, _) = self.stage_fwd(s, &tok, cur.as_ref())?;
+                cur = Some(out);
+            }
+            let mut args = self.params_of(last);
+            if self.compressed() {
+                args.extend(self.ctx_args(&tok));
+            }
+            args.push(Value::F32(cur.take().unwrap()));
+            args.push(Value::I32(tgt));
+            let outs = self.rt.execute(&self.key("last_eval"), &args)?;
+            sum += outs[0].as_f32().item() as f64;
+        }
+        Ok(sum / batches.max(1) as f64)
+    }
+
+    /// Forward-only pipeline (inference serving path). Returns
+    /// (simulated seconds, tokens processed) for `m_count` microbatches.
+    pub fn forward_throughput<F>(
+        &mut self,
+        m_count: usize,
+        mut sampler: F,
+    ) -> Result<(f64, usize)>
+    where
+        F: FnMut(&mut Rng) -> (IntTensor, IntTensor),
+    {
+        let h = self.rt.config().hyper.clone();
+        let p = h.stages;
+        let last = p - 1;
+        let bbytes = self.boundary_bytes();
+        let mut costs = StepCosts {
+            stages: p,
+            microbatches: m_count,
+            fwd: vec![vec![0.0; m_count]; p],
+            bwd: vec![vec![0.0; m_count]; p],
+            tx_fwd: vec![vec![Tx::default(); m_count]; p - 1],
+            tx_bwd: vec![vec![Tx::default(); m_count]; p - 1],
+            opt: vec![0.0; p],
+            tail: 0.0,
+        };
+        let mut rng = self.rng.fork(0x1F);
+        for mb in 0..m_count {
+            let (tok, tgt) = sampler(&mut rng);
+            let mut cur: Option<Tensor> = None;
+            for s in 0..last {
+                let (out, secs) = self.stage_fwd(s, &tok, cur.as_ref())?;
+                costs.fwd[s][mb] = secs;
+                let (ser, lat) = self.topo.links[s].sample(bbytes);
+                costs.tx_fwd[s][mb] = Tx { ser, lat };
+                cur = Some(out);
+            }
+            let mut args = self.params_of(last);
+            if self.compressed() {
+                args.extend(self.ctx_args(&tok));
+            }
+            args.push(Value::F32(cur.take().unwrap()));
+            args.push(Value::I32(tgt));
+            let (_, dt) =
+                self.rt.execute_timed(&self.key("last_eval"), &args)?;
+            costs.fwd[last][mb] = stage_seconds(
+                self.cfg.time_model,
+                &h,
+                last,
+                Phase::Fwd,
+                self.compressed(),
+                Some(dt),
+            );
+        }
+        let ms = gpipe_makespan(&costs);
+        Ok((ms.total, m_count * h.b * h.n))
+    }
+
+    /// Max relative out-of-subspace leak across all constrained weights.
+    pub fn subspace_leak(&self) -> f64 {
+        self.stages
+            .iter()
+            .map(|s| s.subspace_leak(&self.global.u))
+            .fold(0.0, f64::max)
+    }
+}
+
+// small helper: 0xE7A1 is not valid rust hex — keep a named const
+#[allow(non_upper_case_globals)]
+const _: () = ();

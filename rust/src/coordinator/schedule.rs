@@ -1,0 +1,230 @@
+//! GPipe pipeline schedule: simulated-makespan recurrence.
+//!
+//! The coordinator executes the real PJRT programs sequentially in this
+//! process; *timing* of the distributed deployment is computed with an
+//! event recurrence over (stage, microbatch) using per-event compute
+//! costs (measured or analytic) and per-transfer netsim samples.
+//!
+//! Model: each stage is a serially-busy worker; each directed link
+//! serializes its payload (bytes/bw) but propagation latency pipelines
+//! (does not occupy the link). Backward of microbatch m at stage s starts
+//! as soon as its gradient arrives and the stage is free — the 1F1B-style
+//! refinement of GPipe that torch pipelining also applies. The last stage
+//! fuses fwd+loss+bwd in one program (last_loss), as in the artifacts.
+
+/// Per-transfer sample: (serialization seconds, propagation latency).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Tx {
+    pub ser: f64,
+    pub lat: f64,
+}
+
+/// All simulated costs of one optimizer step.
+#[derive(Clone, Debug)]
+pub struct StepCosts {
+    pub stages: usize,
+    pub microbatches: usize,
+    /// fwd compute seconds; last stage entries hold the fused last_loss cost
+    pub fwd: Vec<Vec<f64>>, // [stage][mb]
+    /// bwd compute seconds for stages 0..P-1 (last stage unused)
+    pub bwd: Vec<Vec<f64>>, // [stage][mb]
+    /// activation transfer samples, link s (stage s → s+1)
+    pub tx_fwd: Vec<Vec<Tx>>, // [link][mb]
+    /// gradient transfer samples, link s (stage s+1 → s)
+    pub tx_bwd: Vec<Vec<Tx>>, // [link][mb]
+    /// per-stage optimizer seconds (after the last bwd on that stage)
+    pub opt: Vec<f64>,
+    /// extra serial seconds at the end (Grassmann step + U broadcast)
+    pub tail: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Makespan {
+    pub total: f64,
+    /// sum over links of serialization time (comm pressure diagnostic)
+    pub comm_ser: f64,
+    /// sum over all compute events
+    pub compute: f64,
+    /// time the critical path spent beyond pure compute (≈ stall + comm)
+    pub overhead: f64,
+}
+
+/// Compute the simulated wall-clock of one step.
+pub fn gpipe_makespan(c: &StepCosts) -> Makespan {
+    let p = c.stages;
+    let m = c.microbatches;
+    assert!(p >= 2, "pipeline needs ≥ 2 stages");
+
+    let mut stage_free = vec![0.0f64; p];
+    let mut link_free_f = vec![0.0f64; p - 1];
+    let mut link_free_b = vec![0.0f64; p - 1];
+    // forward completion (last stage: fused fwd+bwd completion)
+    let mut arrive_f = vec![vec![0.0f64; m]; p];
+    let mut done_f = vec![vec![0.0f64; m]; p];
+
+    // ---- forward wave (stage-major order matches GPipe fill) ----
+    for mb in 0..m {
+        for s in 0..p {
+            let ready = if s == 0 { 0.0 } else { arrive_f[s][mb] };
+            let start = ready.max(stage_free[s]);
+            let done = start + c.fwd[s][mb];
+            stage_free[s] = done;
+            done_f[s][mb] = done;
+            if s + 1 < p {
+                let tx = c.tx_fwd[s][mb];
+                let link_start = done.max(link_free_f[s]);
+                link_free_f[s] = link_start + tx.ser;
+                arrive_f[s + 1][mb] = link_start + tx.ser + tx.lat;
+            }
+        }
+    }
+
+    // ---- backward wave ----
+    // gradient for mb leaves the last stage when its fused program ends
+    let mut done_b = vec![vec![0.0f64; m]; p];
+    let mut arrive_b = vec![vec![0.0f64; m]; p];
+    for mb in 0..m {
+        // transfer from last stage to p-2
+        let tx = c.tx_bwd[p - 2][mb];
+        let link_start = done_f[p - 1][mb].max(link_free_b[p - 2]);
+        link_free_b[p - 2] = link_start + tx.ser;
+        arrive_b[p - 2][mb] = link_start + tx.ser + tx.lat;
+        for s in (0..p - 1).rev() {
+            let start = arrive_b[s][mb].max(stage_free[s]);
+            let done = start + c.bwd[s][mb];
+            stage_free[s] = done;
+            done_b[s][mb] = done;
+            if s > 0 {
+                let tx = c.tx_bwd[s - 1][mb];
+                let link_start = done.max(link_free_b[s - 1]);
+                link_free_b[s - 1] = link_start + tx.ser;
+                arrive_b[s - 1][mb] = link_start + tx.ser + tx.lat;
+            }
+        }
+    }
+
+    // ---- optimizer flush ----
+    let mut end = 0.0f64;
+    for s in 0..p {
+        let last_done = if s == p - 1 {
+            done_f[s][m - 1]
+        } else {
+            done_b[s][m - 1]
+        };
+        end = end.max(last_done + c.opt[s]);
+    }
+    end += c.tail;
+
+    // bwd[p-1] is never executed (the last stage fuses fwd+bwd into
+    // last_loss, priced in fwd[p-1]) — exclude it from the accounting
+    let compute: f64 = c
+        .fwd
+        .iter()
+        .chain(c.bwd.iter().take(p - 1))
+        .map(|v| v.iter().sum::<f64>())
+        .sum::<f64>()
+        + c.opt.iter().sum::<f64>();
+    let comm_ser: f64 = c
+        .tx_fwd
+        .iter()
+        .chain(c.tx_bwd.iter())
+        .map(|v| v.iter().map(|t| t.ser).sum::<f64>())
+        .sum();
+    // per-stage serial compute lower bound
+    let per_stage_max: f64 = (0..p)
+        .map(|s| {
+            let bwd = if s + 1 == p {
+                0.0
+            } else {
+                c.bwd[s].iter().sum::<f64>()
+            };
+            c.fwd[s].iter().sum::<f64>() + bwd + c.opt[s]
+        })
+        .fold(0.0, f64::max);
+
+    Makespan {
+        total: end,
+        comm_ser,
+        compute,
+        overhead: end - per_stage_max,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs(p: usize, m: usize, f: f64, b: f64, ser: f64, lat: f64) -> StepCosts {
+        StepCosts {
+            stages: p,
+            microbatches: m,
+            fwd: vec![vec![f; m]; p],
+            bwd: vec![vec![b; m]; p],
+            tx_fwd: vec![vec![Tx { ser, lat }; m]; p - 1],
+            tx_bwd: vec![vec![Tx { ser, lat }; m]; p - 1],
+            opt: vec![0.0; p],
+            tail: 0.0,
+        }
+    }
+
+    #[test]
+    fn zero_comm_matches_gpipe_fill_drain() {
+        // classic GPipe bound with negligible comm:
+        // fwd fill = (P-1+M)·f on last stage, plus bwd drain
+        let (p, m, f, b) = (4, 8, 1.0, 3.0);
+        let ms = gpipe_makespan(&costs(p, m, f, b, 0.0, 0.0));
+        // lower bound: last stage busy M·f after fill (P-1)·f,
+        // then bwd wave (P-1 stages × b) + (M-1)·b on stage 0
+        let lower = (p - 1) as f64 * f + m as f64 * f + (p - 1) as f64 * b;
+        assert!(ms.total >= lower - 1e-9, "{} < {}", ms.total, lower);
+        assert!(ms.total <= lower + m as f64 * b + 1e-9);
+    }
+
+    #[test]
+    fn comm_bound_pipeline_dominated_by_link() {
+        // serialization ≫ compute: steady state = M · ser on a link
+        let (p, m) = (3, 16);
+        let ms = gpipe_makespan(&costs(p, m, 0.001, 0.003, 1.0, 0.0));
+        assert!(ms.total > m as f64 * 1.0, "{}", ms.total);
+        // both directions serialize on (p-1) links, overlapped across links
+        assert!(ms.total < 2.2 * m as f64 * 1.0 + 3.0, "{}", ms.total);
+    }
+
+    #[test]
+    fn latency_pipelines_away() {
+        // pure latency (no serialization) should add ≈ 2·(P−1)·lat once,
+        // not per microbatch
+        let (p, m, f, b) = (4, 32, 0.1, 0.3, );
+        let no_lat = gpipe_makespan(&costs(p, m, f, b, 0.0, 0.0)).total;
+        let with_lat = gpipe_makespan(&costs(p, m, f, b, 0.0, 0.5)).total;
+        let added = with_lat - no_lat;
+        assert!(added <= 2.0 * (p - 1) as f64 * 0.5 + 1e-6, "added {added}");
+        assert!(added > 0.0);
+    }
+
+    #[test]
+    fn more_microbatches_amortize_fill() {
+        let (p, f, b) = (4, 1.0, 3.0);
+        let t8 = gpipe_makespan(&costs(p, 8, f, b, 0.0, 0.0)).total / 8.0;
+        let t32 = gpipe_makespan(&costs(p, 32, f, b, 0.0, 0.0)).total / 32.0;
+        assert!(t32 < t8, "per-mb cost should shrink: {t32} vs {t8}");
+    }
+
+    #[test]
+    fn overhead_metric_nonnegative() {
+        let ms = gpipe_makespan(&costs(4, 8, 1.0, 3.0, 0.2, 0.01));
+        assert!(ms.overhead >= -1e-9);
+        assert!(ms.compute > 0.0);
+        assert!(ms.comm_ser > 0.0);
+    }
+
+    #[test]
+    fn optimizer_and_tail_extend_makespan() {
+        let mut c = costs(3, 4, 1.0, 3.0, 0.0, 0.0);
+        let base = gpipe_makespan(&c).total;
+        c.opt = vec![5.0; 3];
+        c.tail = 2.0;
+        let with = gpipe_makespan(&c).total;
+        assert!(with >= base + 5.0 + 2.0 - 1e-9);
+    }
+}

@@ -1,0 +1,244 @@
+//! Synthetic corpora standing in for WikiText / BookCorpus / OpenWebText /
+//! C4 (offline environment — see DESIGN.md §4 Substitutions).
+//!
+//! Each corpus is a deterministic mixture of an order-1 structured channel
+//! (an affine next-token map, the learnable signal) and Zipfian unigram
+//! noise. The mixture weight and Zipf exponent differ per corpus so the
+//! four "datasets" have genuinely different difficulty, like the paper's.
+//! Convergence-curve *shape* comparisons (compressed vs centralized vs
+//! uncompressed-decentralized) are corpus-independent, which is what the
+//! paper's figures assert.
+
+use crate::rng::{Rng, Zipf};
+use crate::tensor::IntTensor;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorpusKind {
+    /// WikiText stand-in: moderately structured
+    Wiki,
+    /// BookCorpus stand-in: highly structured (long-range repetition)
+    Books,
+    /// OpenWebText stand-in: noisier
+    Web,
+    /// C4 stand-in: noisiest / most diverse
+    C4,
+}
+
+impl CorpusKind {
+    pub fn parse(s: &str) -> Option<CorpusKind> {
+        Some(match s {
+            "wiki" | "wikitext" | "wt" => CorpusKind::Wiki,
+            "books" | "bookcorpus" | "bc" => CorpusKind::Books,
+            "web" | "openwebtext" | "owt" => CorpusKind::Web,
+            "c4" => CorpusKind::C4,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CorpusKind::Wiki => "wikitext",
+            CorpusKind::Books => "bookcorpus",
+            CorpusKind::Web => "openwebtext",
+            CorpusKind::C4 => "c4",
+        }
+    }
+
+    /// (structured-channel probability, zipf exponent)
+    fn params(&self) -> (f64, f64) {
+        match self {
+            CorpusKind::Books => (0.75, 1.2),
+            CorpusKind::Wiki => (0.65, 1.1),
+            CorpusKind::Web => (0.55, 1.05),
+            CorpusKind::C4 => (0.45, 1.0),
+        }
+    }
+}
+
+#[derive(Clone)]
+pub struct Corpus {
+    pub kind: CorpusKind,
+    pub vocab: usize,
+    tokens: Vec<i32>,
+    /// [0, split) = train, [split, len) = val
+    split: usize,
+}
+
+impl Corpus {
+    /// Deterministic synthetic corpus of `len` tokens.
+    pub fn synthetic(kind: CorpusKind, vocab: usize, len: usize, seed: u64) -> Corpus {
+        let (p_struct, zipf_s) = kind.params();
+        let mut rng = Rng::new(seed ^ 0xC0DE);
+        let zipf = Zipf::new(vocab, zipf_s);
+        // affine next-token maps, one per "phase", switching occasionally —
+        // gives the model mid-range structure to learn
+        let phases: Vec<(usize, usize)> = (0..8)
+            .map(|_| {
+                // multiplier coprime-ish with vocab
+                let a = 2 * rng.below(vocab / 2) + 1;
+                let c = rng.below(vocab);
+                (a, c)
+            })
+            .collect();
+        let mut tokens = Vec::with_capacity(len);
+        let mut prev = zipf.sample(&mut rng);
+        let mut phase = 0usize;
+        for i in 0..len {
+            if i % 256 == 0 {
+                phase = rng.below(phases.len());
+            }
+            let t = if rng.uniform() < p_struct {
+                let (a, c) = phases[phase];
+                (a * prev + c) % vocab
+            } else {
+                zipf.sample(&mut rng)
+            };
+            tokens.push(t as i32);
+            prev = t;
+        }
+        let split = len * 9 / 10; // 10% validation (paper Sec. 8.1)
+        Corpus { kind, vocab, tokens, split }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    fn window(&self, lo: usize, hi: usize, n: usize, rng: &mut Rng) -> usize {
+        debug_assert!(hi - lo > n + 1);
+        lo + rng.below(hi - lo - n - 1)
+    }
+
+    /// Sample a (tokens, next-token targets) microbatch of shape (b, n)
+    /// from the training split.
+    pub fn train_batch(&self, b: usize, n: usize, rng: &mut Rng) -> (IntTensor, IntTensor) {
+        self.batch_from(0, self.split, b, n, rng)
+    }
+
+    /// Sample from the validation split.
+    pub fn val_batch(&self, b: usize, n: usize, rng: &mut Rng) -> (IntTensor, IntTensor) {
+        self.batch_from(self.split, self.len(), b, n, rng)
+    }
+
+    fn batch_from(
+        &self,
+        lo: usize,
+        hi: usize,
+        b: usize,
+        n: usize,
+        rng: &mut Rng,
+    ) -> (IntTensor, IntTensor) {
+        let mut tok = Vec::with_capacity(b * n);
+        let mut tgt = Vec::with_capacity(b * n);
+        for _ in 0..b {
+            let start = self.window(lo, hi, n, rng);
+            tok.extend_from_slice(&self.tokens[start..start + n]);
+            tgt.extend_from_slice(&self.tokens[start + 1..start + n + 1]);
+        }
+        (
+            IntTensor::new(vec![b, n], tok),
+            IntTensor::new(vec![b, n], tgt),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a = Corpus::synthetic(CorpusKind::Wiki, 256, 10_000, 1);
+        let b = Corpus::synthetic(CorpusKind::Wiki, 256, 10_000, 1);
+        assert_eq!(a.tokens, b.tokens);
+        let c = Corpus::synthetic(CorpusKind::Wiki, 256, 10_000, 2);
+        assert_ne!(a.tokens, c.tokens);
+    }
+
+    #[test]
+    fn tokens_in_vocab_range() {
+        let c = Corpus::synthetic(CorpusKind::C4, 512, 50_000, 3);
+        assert!(c.tokens.iter().all(|&t| (0..512).contains(&t)));
+    }
+
+    #[test]
+    fn corpus_has_learnable_structure() {
+        // bigram conditional entropy must be far below unigram entropy
+        let c = Corpus::synthetic(CorpusKind::Books, 64, 200_000, 4);
+        let v = c.vocab;
+        let mut uni = vec![0f64; v];
+        let mut bi = vec![0f64; v * v];
+        for w in c.tokens.windows(2) {
+            uni[w[0] as usize] += 1.0;
+            bi[w[0] as usize * v + w[1] as usize] += 1.0;
+        }
+        let n = (c.tokens.len() - 1) as f64;
+        let h_uni: f64 = uni
+            .iter()
+            .filter(|&&x| x > 0.0)
+            .map(|&x| -(x / n) * (x / n).ln())
+            .sum();
+        let mut h_bi = 0.0;
+        for p in 0..v {
+            if uni[p] == 0.0 {
+                continue;
+            }
+            for t in 0..v {
+                let c2 = bi[p * v + t];
+                if c2 > 0.0 {
+                    h_bi += -(c2 / n) * (c2 / uni[p]).ln();
+                }
+            }
+        }
+        assert!(
+            h_bi < 0.75 * h_uni,
+            "bigram H {h_bi:.3} not ≪ unigram H {h_uni:.3}"
+        );
+    }
+
+    #[test]
+    fn batches_shapes_and_shift() {
+        let c = Corpus::synthetic(CorpusKind::Web, 128, 20_000, 5);
+        let mut rng = Rng::new(0);
+        let (tok, tgt) = c.train_batch(4, 32, &mut rng);
+        assert_eq!(tok.shape, vec![4, 32]);
+        assert_eq!(tgt.shape, vec![4, 32]);
+        // targets are inputs shifted by one
+        for row in 0..4 {
+            for i in 0..31 {
+                assert_eq!(tok.data[row * 32 + i + 1], tgt.data[row * 32 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn corpora_difficulty_ordering() {
+        // books (most structured) should have lower bigram entropy than c4
+        fn bigram_h(kind: CorpusKind) -> f64 {
+            let c = Corpus::synthetic(kind, 64, 100_000, 6);
+            let v = c.vocab;
+            let mut uni = vec![0f64; v];
+            let mut bi = vec![0f64; v * v];
+            for w in c.tokens.windows(2) {
+                uni[w[0] as usize] += 1.0;
+                bi[w[0] as usize * v + w[1] as usize] += 1.0;
+            }
+            let n = (c.tokens.len() - 1) as f64;
+            let mut h = 0.0;
+            for p in 0..v {
+                for t in 0..v {
+                    let c2 = bi[p * v + t];
+                    if c2 > 0.0 {
+                        h += -(c2 / n) * (c2 / uni[p]).ln();
+                    }
+                }
+            }
+            h
+        }
+        assert!(bigram_h(CorpusKind::Books) < bigram_h(CorpusKind::C4));
+    }
+}

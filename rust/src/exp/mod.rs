@@ -1,0 +1,917 @@
+//! Experiment drivers: one per paper figure/table (DESIGN.md §5).
+//!
+//! Each driver trains real models through the coordinator and emits CSV
+//! series under `results/` with the same rows/curves the paper reports.
+//! `--fast` presets shrink step counts so the full suite runs on CPU in
+//! minutes; absolute numbers differ from the paper (simulated substrate),
+//! the *shape* — who wins, by what factor, where crossovers fall — is the
+//! reproduction target.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::compress::Mode;
+use crate::coordinator::{Pipeline, PipelineConfig};
+use crate::data::{Corpus, CorpusKind};
+use crate::linalg;
+use crate::manifest::Manifest;
+use crate::memory;
+use crate::metrics::{perplexity, CsvWriter, RunLog};
+use crate::netsim::{LinkSpec, Topology, MBPS};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use crate::timemodel::TimeModel;
+
+/// Shared experiment options.
+#[derive(Clone, Debug)]
+pub struct ExpOpts {
+    pub artifacts: PathBuf,
+    pub out_dir: PathBuf,
+    pub fast: bool,
+    pub steps: Option<usize>,
+    pub seed: u64,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts {
+            artifacts: PathBuf::from("artifacts"),
+            out_dir: PathBuf::from("results"),
+            fast: false,
+            steps: None,
+            seed: 17,
+        }
+    }
+}
+
+impl ExpOpts {
+    fn steps_or(&self, full: usize, fast: usize) -> usize {
+        self.steps.unwrap_or(if self.fast { fast } else { full })
+    }
+
+    fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(&self.artifacts)
+    }
+}
+
+fn topo_for(bw: &str, stages: usize, rng: &mut Rng) -> Result<Topology> {
+    let spec = match bw {
+        "100gbps" => LinkSpec::centralized_100g(),
+        "16gbps" => LinkSpec::centralized_16g(),
+        "80mbps" => LinkSpec::internet_80m(),
+        other => {
+            let mbps: f64 = other
+                .trim_end_matches("mbps")
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad bandwidth {other:?}"))?;
+            LinkSpec::internet(mbps * MBPS)
+        }
+    };
+    Ok(Topology::uniform(stages, spec, rng))
+}
+
+struct RunSpec<'a> {
+    label: String,
+    config: &'a str,
+    mode: Mode,
+    bandwidth: String,
+    microbatches: usize,
+    grassmann: usize,
+    lr: f32,
+    corpus: CorpusKind,
+}
+
+/// Train one system for `steps`, logging a full curve; returns
+/// (final val ppl, tokens/sim-second, cumulative sim seconds).
+fn run_one(
+    opts: &ExpOpts,
+    m: &Manifest,
+    spec: &RunSpec,
+    steps: usize,
+    sub_dir: &str,
+) -> Result<(f64, f64, f64)> {
+    let cm = m.config(spec.config)?;
+    let h = cm.hyper.clone();
+    let mut rng = Rng::new(opts.seed);
+    let topo = topo_for(&spec.bandwidth, h.stages, &mut rng)?;
+    let pcfg = PipelineConfig {
+        mode: spec.mode,
+        microbatches: spec.microbatches,
+        grassmann_interval: spec.grassmann,
+        lr: spec.lr,
+        warmup_steps: (steps / 20).max(5),
+        total_steps: steps,
+        time_model: TimeModel::default_analytic(),
+        seed: opts.seed,
+        ..Default::default()
+    };
+    let mut pipe = Pipeline::new(m, spec.config, topo, pcfg)?;
+    let corpus =
+        Corpus::synthetic(spec.corpus, h.vocab, 400_000, opts.seed ^ 0xDD);
+    let mut log = RunLog::create(opts.out_dir.join(sub_dir), &spec.label)?;
+    for step in 0..steps {
+        let stats = pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
+        log.log(&stats)?;
+        if step % 20 == 0 {
+            eprintln!(
+                "[{}] step {step}/{steps} loss {:.4} sim_t {:.3}s",
+                spec.label, stats.loss, log.sim_time
+            );
+        }
+    }
+    let val = pipe.eval(4, |r| corpus.val_batch(h.b, h.n, r))?;
+    let tps = log.tps();
+    let sim = log.sim_time;
+    log.finish()?;
+    Ok((perplexity(val), tps, sim))
+}
+
+/// Train until the simulated clock passes `budget_s` (Table 1's
+/// fixed-wall-clock protocol). Returns (val ppl, tps, steps done).
+fn run_budget(
+    opts: &ExpOpts,
+    m: &Manifest,
+    spec: &RunSpec,
+    budget_s: f64,
+    max_steps: usize,
+    sub_dir: &str,
+) -> Result<(f64, f64, usize)> {
+    let cm = m.config(spec.config)?;
+    let h = cm.hyper.clone();
+    let mut rng = Rng::new(opts.seed);
+    let topo = topo_for(&spec.bandwidth, h.stages, &mut rng)?;
+    let pcfg = PipelineConfig {
+        mode: spec.mode,
+        microbatches: spec.microbatches,
+        grassmann_interval: spec.grassmann,
+        lr: spec.lr,
+        warmup_steps: 10,
+        total_steps: max_steps,
+        time_model: TimeModel::default_analytic(),
+        seed: opts.seed,
+        ..Default::default()
+    };
+    let mut pipe = Pipeline::new(m, spec.config, topo, pcfg)?;
+    let corpus =
+        Corpus::synthetic(spec.corpus, h.vocab, 400_000, opts.seed ^ 0xDD);
+    let mut log = RunLog::create(opts.out_dir.join(sub_dir), &spec.label)?;
+    let mut steps = 0;
+    while log.sim_time < budget_s && steps < max_steps {
+        let stats = pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
+        log.log(&stats)?;
+        steps += 1;
+    }
+    let val = pipe.eval(4, |r| corpus.val_batch(h.b, h.n, r))?;
+    let tps = log.tps();
+    log.finish()?;
+    Ok((perplexity(val), tps, steps))
+}
+
+// ---------------------------------------------------------------------------
+// Figs. 1, 7, 16 — rank collapse
+// ---------------------------------------------------------------------------
+
+pub fn rank_collapse(opts: &ExpOpts, grads: bool) -> Result<()> {
+    let m = opts.manifest()?;
+    let config = if opts.fast { "tiny" } else { "small" };
+    let cm = m.config(config)?;
+    let h = cm.hyper.clone();
+    let steps = opts.steps_or(400, 80);
+    let mut rng = Rng::new(opts.seed);
+    let topo = topo_for("100gbps", h.stages, &mut rng)?;
+    let pcfg = PipelineConfig {
+        mode: Mode::Raw, // the paper's Fig. 1 tracks a NON-compressed model
+        microbatches: 4,
+        grassmann_interval: 0,
+        lr: 1e-2,
+        warmup_steps: 10,
+        total_steps: steps,
+        record_grads: grads,
+        ..Default::default()
+    };
+    let mut pipe = Pipeline::new(&m, config, topo, pcfg)?;
+    let corpus = Corpus::synthetic(CorpusKind::Wiki, h.vocab, 400_000, 3);
+    let what = if grads { "grads" } else { "weights" };
+    let mut csv = CsvWriter::create(
+        opts.out_dir.join(format!("fig1_rank_collapse_{what}.csv")),
+        &["step", "stage", "param", "stable_rank", "max_rank"],
+    )?;
+    let every = (steps / 20).max(1);
+    for step in 0..steps {
+        pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
+        if step % every != 0 && step + 1 != steps {
+            continue;
+        }
+        for (si, st) in pipe.stages.iter().enumerate() {
+            for ((name, shape), idx) in
+                st.schema.iter().zip(0..st.params.len())
+            {
+                if !(name.ends_with("wp1") || name.ends_with("wp2")) {
+                    continue;
+                }
+                let t: &Tensor = if grads {
+                    match &pipe.last_grads {
+                        Some(g) => &g[si][idx],
+                        None => continue,
+                    }
+                } else {
+                    &st.params[idx]
+                };
+                let sr = linalg::stable_rank(t);
+                let max_rank = shape.iter().copied().min().unwrap_or(0);
+                csv.row(&[
+                    step.to_string(),
+                    si.to_string(),
+                    name.clone(),
+                    format!("{sr:.4}"),
+                    max_rank.to_string(),
+                ])?;
+            }
+        }
+    }
+    csv.finish()?;
+    Ok(())
+}
+
+/// Fig. 16 stand-in: stable ranks of *trained* checkpoints across scales
+/// (official frontier checkpoints are unavailable offline — DESIGN.md §4).
+pub fn checkpoint_ranks(opts: &ExpOpts) -> Result<()> {
+    let m = opts.manifest()?;
+    let steps = opts.steps_or(200, 40);
+    let mut csv = CsvWriter::create(
+        opts.out_dir.join("fig16_checkpoint_ranks.csv"),
+        &["config", "stage", "param", "stable_rank", "normalized"],
+    )?;
+    for config in ["tiny", "small"] {
+        let cm = m.config(config)?;
+        let h = cm.hyper.clone();
+        let mut rng = Rng::new(opts.seed);
+        let topo = topo_for("100gbps", h.stages, &mut rng)?;
+        let pcfg = PipelineConfig {
+            mode: Mode::Raw,
+            microbatches: 4,
+            grassmann_interval: 0,
+            lr: 1e-2,
+            warmup_steps: 10,
+            total_steps: steps,
+            ..Default::default()
+        };
+        let mut pipe = Pipeline::new(&m, config, topo, pcfg)?;
+        let corpus = Corpus::synthetic(CorpusKind::Wiki, h.vocab, 400_000, 5);
+        for _ in 0..steps {
+            pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
+        }
+        for (si, st) in pipe.stages.iter().enumerate() {
+            for ((name, shape), p) in st.schema.iter().zip(&st.params) {
+                if !name.ends_with("wp2") {
+                    continue;
+                }
+                let sr = linalg::stable_rank(p);
+                let maxr = shape.iter().copied().min().unwrap() as f64;
+                csv.row(&[
+                    config.to_string(),
+                    si.to_string(),
+                    name.clone(),
+                    format!("{sr:.4}"),
+                    format!("{:.4}", sr / maxr),
+                ])?;
+            }
+        }
+    }
+    csv.finish()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2 — convergence in low-bandwidth settings (3 corpora × 3 systems)
+// ---------------------------------------------------------------------------
+
+pub fn convergence_bandwidth(opts: &ExpOpts) -> Result<()> {
+    let m = opts.manifest()?;
+    let config = if opts.fast { "small" } else { "base" };
+    let steps = opts.steps_or(300, 60);
+    let corpora = if opts.fast {
+        vec![CorpusKind::Wiki]
+    } else {
+        vec![CorpusKind::Web, CorpusKind::Wiki, CorpusKind::Books]
+    };
+    for corpus in corpora {
+        for (label, mode, bw) in [
+            ("decentralized_compressed_80mbps", Mode::Subspace, "80mbps"),
+            ("decentralized_raw_80mbps", Mode::Raw, "80mbps"),
+            ("centralized_raw_100gbps", Mode::Raw, "100gbps"),
+        ] {
+            let spec = RunSpec {
+                label: format!("{}_{}", corpus.name(), label),
+                config,
+                mode,
+                bandwidth: bw.into(),
+                microbatches: 8,
+                grassmann: 0,
+                lr: 6e-3,
+                corpus,
+            };
+            run_one(opts, &m, &spec, steps, "fig2_convergence")?;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Figs. 3 / 12 — performance against depth
+// ---------------------------------------------------------------------------
+
+pub fn depth_sweep(opts: &ExpOpts) -> Result<()> {
+    let m = opts.manifest()?;
+    let steps = opts.steps_or(200, 50);
+    let configs: &[&str] =
+        if opts.fast { &["small"] } else { &["small", "base", "deep16"] };
+    for config in configs {
+        let layers = m.config(config)?.hyper.layers;
+        for (label, mode, bw) in [
+            ("compressed_80mbps", Mode::Subspace, "80mbps"),
+            ("centralized_100gbps", Mode::Raw, "100gbps"),
+        ] {
+            let spec = RunSpec {
+                label: format!("layers{layers}_{label}"),
+                config,
+                mode,
+                bandwidth: bw.into(),
+                microbatches: 4,
+                grassmann: 0,
+                lr: 6e-3,
+                corpus: CorpusKind::C4,
+            };
+            run_one(opts, &m, &spec, steps, "fig3_depth")?;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Figs. 4 / 13 — throughput gain vs bandwidth (training + inference)
+// ---------------------------------------------------------------------------
+
+pub fn throughput_sweep(opts: &ExpOpts) -> Result<()> {
+    let m = opts.manifest()?;
+    let config = if opts.fast { "small" } else { "base" };
+    let cm = m.config(config)?;
+    let h = cm.hyper.clone();
+    let bws = ["10mbps", "80mbps", "500mbps", "1000mbps", "16gbps", "100gbps"];
+    let mut csv = CsvWriter::create(
+        opts.out_dir.join("fig4_throughput.csv"),
+        &["bandwidth", "mode", "phase", "tokens_per_second", "gain_vs_raw"],
+    )?;
+    let mbs = if opts.fast { 4 } else { 8 };
+    for bw in bws {
+        let mut tps: std::collections::BTreeMap<(&str, &str), f64> =
+            Default::default();
+        for mode in [Mode::Subspace, Mode::Raw] {
+            let mut rng = Rng::new(opts.seed);
+            let topo = topo_for(bw, h.stages, &mut rng)?;
+            let pcfg = PipelineConfig {
+                mode,
+                microbatches: mbs,
+                grassmann_interval: 0,
+                total_steps: 10,
+                ..Default::default()
+            };
+            let mut pipe = Pipeline::new(&m, config, topo, pcfg)?;
+            let corpus =
+                Corpus::synthetic(CorpusKind::C4, h.vocab, 200_000, 7);
+            // training throughput: a few steps
+            let mut t_train = 0.0;
+            let mut toks = 0usize;
+            for _ in 0..3 {
+                let s =
+                    pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
+                t_train += s.sim_seconds;
+                toks += s.tokens;
+            }
+            tps.insert((mode.as_str(), "train"), toks as f64 / t_train);
+            // inference throughput
+            let (t_inf, toks_inf) = pipe
+                .forward_throughput(mbs * 3, |r| corpus.val_batch(h.b, h.n, r))?;
+            tps.insert((mode.as_str(), "inference"), toks_inf as f64 / t_inf);
+        }
+        for phase in ["train", "inference"] {
+            let raw = tps[&("raw", phase)];
+            for mode in ["subspace", "raw"] {
+                let v = tps[&(mode, phase)];
+                csv.row(&[
+                    bw.to_string(),
+                    mode.to_string(),
+                    phase.to_string(),
+                    format!("{v:.2}"),
+                    format!("{:.3}", v / raw),
+                ])?;
+            }
+        }
+    }
+    csv.finish()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 5 — globally distributed regions vs same-region centralized
+// ---------------------------------------------------------------------------
+
+pub fn global_regions(opts: &ExpOpts) -> Result<()> {
+    let m = opts.manifest()?;
+    let config = if opts.fast { "small" } else { "deep16" };
+    let cm = m.config(config)?;
+    let h = cm.hyper.clone();
+    let steps = opts.steps_or(200, 50);
+    let runs: Vec<(String, Mode, Topology)> = {
+        let mut rng = Rng::new(opts.seed);
+        vec![
+            (
+                "decentralized_4regions_compressed".into(),
+                Mode::Subspace,
+                Topology::global_regions(h.stages, &mut rng),
+            ),
+            (
+                "decentralized_4regions_raw".into(),
+                Mode::Raw,
+                Topology::global_regions(h.stages, &mut rng),
+            ),
+            (
+                "centralized_16gbps_raw".into(),
+                Mode::Raw,
+                Topology::uniform(
+                    h.stages,
+                    LinkSpec::centralized_16g(),
+                    &mut rng,
+                ),
+            ),
+        ]
+    };
+    let mut summary = CsvWriter::create(
+        opts.out_dir.join("fig5_global_regions_summary.csv"),
+        &["system", "final_loss", "tokens_per_second", "sim_seconds"],
+    )?;
+    for (label, mode, topo) in runs {
+        let pcfg = PipelineConfig {
+            mode,
+            microbatches: 16, // deep pipeline: amortize the fill
+            grassmann_interval: 0,
+            lr: 6e-3,
+            warmup_steps: 10,
+            total_steps: steps,
+            seed: opts.seed,
+            ..Default::default()
+        };
+        let mut pipe = Pipeline::new(&m, config, topo, pcfg)?;
+        let corpus =
+            Corpus::synthetic(CorpusKind::C4, h.vocab, 400_000, opts.seed);
+        let mut log =
+            RunLog::create(opts.out_dir.join("fig5_global_regions"), &label)?;
+        for _ in 0..steps {
+            let s = pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
+            log.log(&s)?;
+        }
+        summary.row(&[
+            label.clone(),
+            format!("{:.4}", log.last_loss),
+            format!("{:.1}", log.tps()),
+            format!("{:.2}", log.sim_time),
+        ])?;
+        log.finish()?;
+    }
+    summary.finish()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 6 — lossy compression baselines at matched ratio
+// ---------------------------------------------------------------------------
+
+pub fn lossy_comparison(opts: &ExpOpts) -> Result<()> {
+    let m = opts.manifest()?;
+    let config = if opts.fast { "tiny" } else { "small" };
+    let steps = opts.steps_or(250, 60);
+    for (label, mode) in [
+        ("ours_subspace", Mode::Subspace),
+        ("uncompressed", Mode::Raw),
+        ("topk", Mode::TopK),
+        ("quant_int8", Mode::Quant),
+        ("lowrank_power", Mode::PowerLR),
+    ] {
+        let spec = RunSpec {
+            label: label.into(),
+            config,
+            mode,
+            bandwidth: "100gbps".into(), // isolate compression error
+            microbatches: 8,
+            grassmann: 0,
+            lr: if config == "tiny" { 1e-2 } else { 6e-3 },
+            corpus: CorpusKind::Wiki,
+        };
+        run_one(opts, &m, &spec, steps, "fig6_lossy")?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Figs. 8/9 — batch-size ablation; Figs. 10/11 — context-length ablation
+// ---------------------------------------------------------------------------
+
+pub fn batch_sweep(opts: &ExpOpts) -> Result<()> {
+    let m = opts.manifest()?;
+    let config = "small";
+    let steps = opts.steps_or(200, 50);
+    for mbs in [2usize, 4, 8] {
+        for (label, mode, bw) in [
+            ("compressed_80mbps", Mode::Subspace, "80mbps"),
+            ("centralized_100gbps", Mode::Raw, "100gbps"),
+        ] {
+            let spec = RunSpec {
+                label: format!("batch{}_{label}", mbs * m.config(config)?.hyper.b),
+                config,
+                mode,
+                bandwidth: bw.into(),
+                microbatches: mbs,
+                grassmann: 0,
+                lr: 6e-3,
+                corpus: CorpusKind::C4,
+            };
+            run_one(opts, &m, &spec, steps, "fig8_batch")?;
+        }
+    }
+    Ok(())
+}
+
+pub fn context_sweep(opts: &ExpOpts) -> Result<()> {
+    let m = opts.manifest()?;
+    let steps = opts.steps_or(200, 50);
+    for config in ["small", "ctx128", "ctx256"] {
+        let n = m.config(config)?.hyper.n;
+        for (label, mode, bw) in [
+            ("compressed_80mbps", Mode::Subspace, "80mbps"),
+            ("centralized_100gbps", Mode::Raw, "100gbps"),
+        ] {
+            let spec = RunSpec {
+                label: format!("ctx{n}_{label}"),
+                config,
+                mode,
+                bandwidth: bw.into(),
+                microbatches: 4,
+                grassmann: 0,
+                lr: 6e-3,
+                corpus: CorpusKind::C4,
+            };
+            run_one(opts, &m, &spec, steps, "fig10_context")?;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 14 — Grassmann subspace updates; Fig. 15 — embedding decomposition
+// ---------------------------------------------------------------------------
+
+pub fn grassmann_ablation(opts: &ExpOpts) -> Result<()> {
+    let m = opts.manifest()?;
+    let config = if opts.fast { "tiny" } else { "small" };
+    let steps = opts.steps_or(300, 80);
+    for (label, interval) in
+        [("no_subspace_updates", 0usize), ("with_subspace_updates", 25)]
+    {
+        let spec = RunSpec {
+            label: label.into(),
+            config,
+            mode: Mode::Subspace,
+            bandwidth: "80mbps".into(),
+            microbatches: 8,
+            grassmann: interval,
+            lr: if config == "tiny" { 1e-2 } else { 6e-3 },
+            corpus: CorpusKind::C4,
+        };
+        run_one(opts, &m, &spec, steps, "fig14_grassmann")?;
+    }
+    Ok(())
+}
+
+pub fn embedding_ablation(opts: &ExpOpts) -> Result<()> {
+    let m = opts.manifest()?;
+    let config = "small"; // nofixed entries are compiled for small
+    let steps = opts.steps_or(250, 60);
+    for (label, mode) in [
+        ("with_fixed_high_rank_embedding", Mode::Subspace),
+        ("embedding_fully_in_subspace", Mode::NoFixed),
+    ] {
+        let spec = RunSpec {
+            label: label.into(),
+            config,
+            mode,
+            bandwidth: "80mbps".into(),
+            microbatches: 8,
+            grassmann: 0,
+            lr: 6e-3,
+            corpus: CorpusKind::C4,
+        };
+        run_one(opts, &m, &spec, steps, "fig15_embedding")?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — perplexity after a fixed wall-clock budget; Table 2 — compute-
+// optimal training
+// ---------------------------------------------------------------------------
+
+pub fn table1(opts: &ExpOpts) -> Result<()> {
+    let m = opts.manifest()?;
+    let config = if opts.fast { "tiny" } else { "small" };
+    // simulated seconds standing in for the paper's 12 h
+    let budget = if opts.fast { 0.6 } else { 3.0 };
+    let max_steps = opts.steps_or(600, 150);
+    let mut csv = CsvWriter::create(
+        opts.out_dir.join("table1_perplexity.csv"),
+        &["system", "bandwidth", "corpus", "val_ppl", "tps", "steps"],
+    )?;
+    let corpora = if opts.fast {
+        vec![CorpusKind::Wiki]
+    } else {
+        vec![CorpusKind::Web, CorpusKind::Books, CorpusKind::Wiki]
+    };
+    for corpus in corpora {
+        for (system, mode, bw) in [
+            ("decentralized_compressed", Mode::Subspace, "80mbps"),
+            ("decentralized_raw", Mode::Raw, "80mbps"),
+            ("centralized", Mode::Raw, "100gbps"),
+        ] {
+            let spec = RunSpec {
+                label: format!("{}_{system}", corpus.name()),
+                config,
+                mode,
+                bandwidth: bw.into(),
+                microbatches: 8,
+                grassmann: 0,
+                lr: if config == "tiny" { 1e-2 } else { 6e-3 },
+                corpus,
+            };
+            let (ppl, tps, steps) =
+                run_budget(opts, &m, &spec, budget, max_steps, "table1_runs")?;
+            csv.row(&[
+                system.to_string(),
+                bw.to_string(),
+                corpus.name().to_string(),
+                format!("{ppl:.2}"),
+                format!("{tps:.1}"),
+                steps.to_string(),
+            ])?;
+        }
+    }
+    csv.finish()?;
+    Ok(())
+}
+
+pub fn table2(opts: &ExpOpts) -> Result<()> {
+    let m = opts.manifest()?;
+    let config = if opts.fast { "tiny" } else { "small" };
+    let cm = m.config(config)?;
+    let h = cm.hyper.clone();
+    // Chinchilla 1:20 params:tokens (scaled by --fast)
+    let token_target = cm.hyper.param_count * if opts.fast { 2 } else { 20 };
+    let mbs = 8usize;
+    let steps = (token_target / (mbs * h.b * h.n)).max(20);
+    let mut csv = CsvWriter::create(
+        opts.out_dir.join("table2_compute_optimal.csv"),
+        &["system", "corpus", "val_ppl", "tps", "tokens"],
+    )?;
+    for (system, mode, bw) in [
+        ("decentralized_compressed", Mode::Subspace, "80mbps"),
+        ("centralized", Mode::Raw, "100gbps"),
+    ] {
+        for corpus in [CorpusKind::C4, CorpusKind::Books] {
+            let spec = RunSpec {
+                label: format!("t2_{}_{system}", corpus.name()),
+                config,
+                mode,
+                bandwidth: bw.into(),
+                microbatches: mbs,
+                grassmann: 0,
+                lr: if config == "tiny" { 1e-2 } else { 6e-3 },
+                corpus,
+            };
+            let (ppl, tps, _) =
+                run_one(opts, &m, &spec, steps, "table2_runs")?;
+            csv.row(&[
+                system.to_string(),
+                corpus.name().to_string(),
+                format!("{ppl:.2}"),
+                format!("{tps:.1}"),
+                (steps * mbs * h.b * h.n).to_string(),
+            ])?;
+        }
+    }
+    // the raw decentralized system is infeasible to train to compute-
+    // optimal (paper: est. 200 days) — report TPS only, like the paper
+    let mut rng = Rng::new(opts.seed);
+    let topo = topo_for("80mbps", h.stages, &mut rng)?;
+    let pcfg = PipelineConfig {
+        mode: Mode::Raw,
+        microbatches: mbs,
+        total_steps: 3,
+        ..Default::default()
+    };
+    let mut pipe = Pipeline::new(&m, config, topo, pcfg)?;
+    let corpus = Corpus::synthetic(CorpusKind::C4, h.vocab, 200_000, 9);
+    let mut t = 0.0;
+    let mut toks = 0;
+    for _ in 0..3 {
+        let s = pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
+        t += s.sim_seconds;
+        toks += s.tokens;
+    }
+    csv.row(&[
+        "decentralized_raw".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:.1}", toks as f64 / t),
+        "-".into(),
+    ])?;
+    csv.finish()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Tables 3 / 4 — memory overhead (analytic model at paper dims)
+// ---------------------------------------------------------------------------
+
+pub fn memory_seqlen(opts: &ExpOpts) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        opts.out_dir.join("table3_memory_seqlen.csv"),
+        &["L", "baseline_gb", "ours_gb", "overhead_mb", "relative_pct"],
+    )?;
+    for l in [8192usize, 16384, 24576] {
+        let r = memory::table_row(l, 1);
+        csv.row(&[
+            l.to_string(),
+            format!("{:.2}", r.baseline_gb),
+            format!("{:.2}", r.ours_gb),
+            format!("{:.0}", r.overhead_mb),
+            format!("{:.2}", r.relative * 100.0),
+        ])?;
+    }
+    csv.finish()?;
+    Ok(())
+}
+
+pub fn memory_workers(opts: &ExpOpts) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        opts.out_dir.join("table4_memory_workers.csv"),
+        &["L", "workers", "baseline_gb", "ours_gb", "overhead_per_worker_mb",
+          "relative_pct"],
+    )?;
+    for (l, w) in [(8192usize, 1usize), (16384, 1), (24576, 1), (49152, 2),
+                   (65536, 3)] {
+        let r = memory::table_row(l, w);
+        csv.row(&[
+            l.to_string(),
+            w.to_string(),
+            format!("{:.2}", r.baseline_gb),
+            format!("{:.2}", r.ours_gb),
+            format!("{:.0}", r.overhead_mb),
+            format!("{:.2}", r.relative * 100.0),
+        ])?;
+    }
+    csv.finish()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Theorem B.1 — error accumulation of lossy compression with depth
+// ---------------------------------------------------------------------------
+
+pub fn error_accumulation(opts: &ExpOpts) -> Result<()> {
+    let m = opts.manifest()?;
+    let config = "tiny";
+    let cm = m.config(config)?;
+    let h = cm.hyper.clone();
+    let mut rt = crate::runtime::Runtime::new(&m, config)?;
+    let mut rng = Rng::new(opts.seed);
+    let global = crate::stage::GlobalState::init(cm, &mut rng);
+    let st = crate::stage::StageState::init(
+        cm, 1, Mode::Raw, &global, &mut rng)?;
+    let corpus = Corpus::synthetic(CorpusKind::Wiki, h.vocab, 50_000, 11);
+    let (tok, _) = corpus.train_batch(h.b, h.n, &mut rng);
+
+    // embed once through the raw first stage to get a realistic activation
+    let mut args: Vec<crate::tensor::Value> = crate::stage::StageState::init(
+        cm, 0, Mode::Raw, &global, &mut rng)?
+        .params
+        .into_iter()
+        .map(crate::tensor::Value::F32)
+        .collect();
+    args.push(crate::tensor::Value::I32(tok));
+    let x0 = rt.execute("raw/first_fwd", &args)?[0].as_f32().clone();
+
+    let depths = 12usize;
+    let mut csv = CsvWriter::create(
+        opts.out_dir.join("thmB1_error_accumulation.csv"),
+        &["depth", "mode", "relative_error"],
+    )?;
+    for mode in [Mode::TopK, Mode::Quant, Mode::PowerLR] {
+        let mut x_clean = x0.clone();
+        let mut x_lossy = x0.clone();
+        for depth in 1..=depths {
+            let stage_params: Vec<crate::tensor::Value> =
+                st.params.iter().cloned().map(crate::tensor::Value::F32).collect();
+            let mut a = stage_params.clone();
+            a.push(crate::tensor::Value::F32(x_clean.clone()));
+            x_clean = rt.execute("raw/mid_fwd", &a)?[0].as_f32().clone();
+            let mut b = stage_params;
+            b.push(crate::tensor::Value::F32(x_lossy.clone()));
+            x_lossy = rt
+                .execute(&format!("{}/mid_fwd", mode.as_str()), &b)?[0]
+                .as_f32()
+                .clone();
+            let num: f64 = x_clean
+                .data
+                .iter()
+                .zip(&x_lossy.data)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            let den = x_clean
+                .data
+                .iter()
+                .map(|a| (*a as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            csv.row(&[
+                depth.to_string(),
+                mode.as_str().to_string(),
+                format!("{:.6}", num / den),
+            ])?;
+        }
+    }
+    // the subspace scheme: zero boundary error at any depth by Eq. 7 —
+    // emit explicitly for the figure
+    for depth in 1..=depths {
+        csv.row(&[depth.to_string(), "subspace".into(), "0.0".into()])?;
+    }
+    csv.finish()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// dispatcher
+// ---------------------------------------------------------------------------
+
+pub const ALL: &[&str] = &[
+    "rank-collapse",
+    "checkpoint-ranks",
+    "convergence-bandwidth",
+    "depth-sweep",
+    "throughput-sweep",
+    "global-regions",
+    "lossy-comparison",
+    "batch-sweep",
+    "context-sweep",
+    "grassmann-ablation",
+    "embedding-ablation",
+    "table1",
+    "table2",
+    "memory-seqlen",
+    "memory-workers",
+    "error-accumulation",
+];
+
+pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    match name {
+        "rank-collapse" => rank_collapse(opts, false),
+        "rank-collapse-grads" => rank_collapse(opts, true),
+        "checkpoint-ranks" => checkpoint_ranks(opts),
+        "convergence-bandwidth" => convergence_bandwidth(opts),
+        "depth-sweep" => depth_sweep(opts),
+        "throughput-sweep" => throughput_sweep(opts),
+        "global-regions" => global_regions(opts),
+        "lossy-comparison" => lossy_comparison(opts),
+        "batch-sweep" => batch_sweep(opts),
+        "context-sweep" => context_sweep(opts),
+        "grassmann-ablation" => grassmann_ablation(opts),
+        "embedding-ablation" => embedding_ablation(opts),
+        "table1" => table1(opts),
+        "table2" => table2(opts),
+        "memory-seqlen" => memory_seqlen(opts),
+        "memory-workers" => memory_workers(opts),
+        "error-accumulation" => error_accumulation(opts),
+        "all" => {
+            for e in ALL {
+                eprintln!("=== exp {e} ===");
+                run(e, opts)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?}; have {ALL:?}"),
+    }
+}
+
+pub fn out_dir_for(base: &Path) -> PathBuf {
+    base.to_path_buf()
+}

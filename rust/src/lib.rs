@@ -1,0 +1,19 @@
+//! protomodels — Protocol Models reproduction (see DESIGN.md).
+
+pub mod compress;
+pub mod json;
+pub mod linalg;
+pub mod manifest;
+pub mod netsim;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod coordinator;
+pub mod data;
+pub mod stage;
+pub mod timemodel;
+pub mod cli;
+pub mod exp;
+pub mod memory;
+pub mod metrics;
+pub mod bench;

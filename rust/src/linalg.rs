@@ -1,0 +1,314 @@
+//! Host-side dense linear algebra (no external crates).
+//!
+//! Used by: parameter initialization (orthonormal U, in-S projection of
+//! constrained weights), stable-rank tracking (Figs. 1/7/16), Grassmann
+//! sanity checks, and the analytic compression baselines in tests.
+//!
+//! The SVD is one-sided Jacobi — O(d³) but robust, and our matrices are
+//! ≤ 2048 wide; it runs off the training hot path (metrics cadence only).
+
+use crate::tensor::Tensor;
+
+/// C = A(m×k) · B(k×n), row-major.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, ka) = a.dims2();
+    let (kb, n) = b.dims2();
+    assert_eq!(ka, kb, "matmul {:?} x {:?}", a.shape, b.shape);
+    let mut c = vec![0.0f32; m * n];
+    // ikj loop order: streams B rows, vectorizes the inner j loop
+    for i in 0..m {
+        let arow = &a.data[i * ka..(i + 1) * ka];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    Tensor::new(vec![m, n], c)
+}
+
+pub fn transpose(a: &Tensor) -> Tensor {
+    let (m, n) = a.dims2();
+    let mut t = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            t[j * m + i] = a.data[i * n + j];
+        }
+    }
+    Tensor::new(vec![n, m], t)
+}
+
+/// Project the rows of W onto S = Col(U):  W ← W · U · Uᵀ.
+pub fn project_rows(w: &Tensor, u: &Tensor) -> Tensor {
+    let wu = matmul(w, u);
+    matmul(&wu, &transpose(u))
+}
+
+/// Orthonormalize the columns of A in place via modified Gram–Schmidt.
+/// Returns false if a column was (numerically) dependent.
+pub fn orthonormalize_columns(a: &mut Tensor) -> bool {
+    let (m, n) = a.dims2();
+    let mut ok = true;
+    for j in 0..n {
+        // subtract projections on previous columns
+        for p in 0..j {
+            let mut dot = 0.0f64;
+            for i in 0..m {
+                dot += a.data[i * n + p] as f64 * a.data[i * n + j] as f64;
+            }
+            for i in 0..m {
+                a.data[i * n + j] -= (dot as f32) * a.data[i * n + p];
+            }
+        }
+        let mut norm = 0.0f64;
+        for i in 0..m {
+            norm += (a.data[i * n + j] as f64).powi(2);
+        }
+        let norm = norm.sqrt();
+        if norm < 1e-10 {
+            ok = false;
+            continue;
+        }
+        for i in 0..m {
+            a.data[i * n + j] /= norm as f32;
+        }
+    }
+    ok
+}
+
+/// Random matrix with orthonormal columns — the initial U_k (Sec. 8.1:
+/// "We initialize U_k with isotropic Gaussian noise" + retraction).
+pub fn random_orthonormal(rows: usize, cols: usize, rng: &mut crate::rng::Rng) -> Tensor {
+    loop {
+        let mut a = Tensor::new(
+            vec![rows, cols],
+            rng.normal_f32_vec(rows * cols, 1.0),
+        );
+        if orthonormalize_columns(&mut a) {
+            return a;
+        }
+    }
+}
+
+/// Singular values via one-sided Jacobi on AᵀA column pairs.
+pub fn singular_values(a: &Tensor) -> Vec<f32> {
+    let (m, n) = a.dims2();
+    // work on the thinner side
+    let work = if m < n { transpose(a) } else { a.clone() };
+    let (rows, cols) = work.dims2();
+    let mut v = work.data.clone(); // columns rotated in place
+    let idx = |i: usize, j: usize| i * cols + j;
+
+    let max_sweeps = 30;
+    let eps = 1e-10f64;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..cols {
+            for q in (p + 1)..cols {
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..rows {
+                    let vp = v[idx(i, p)] as f64;
+                    let vq = v[idx(i, q)] as f64;
+                    app += vp * vp;
+                    aqq += vq * vq;
+                    apq += vp * vq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt().max(1e-300) {
+                    continue;
+                }
+                off += apq.abs();
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..rows {
+                    let vp = v[idx(i, p)] as f64;
+                    let vq = v[idx(i, q)] as f64;
+                    v[idx(i, p)] = (c * vp - s * vq) as f32;
+                    v[idx(i, q)] = (s * vp + c * vq) as f32;
+                }
+            }
+        }
+        if off < 1e-12 {
+            break;
+        }
+    }
+    let mut sv: Vec<f32> = (0..cols)
+        .map(|j| {
+            (0..rows)
+                .map(|i| (v[idx(i, j)] as f64).powi(2))
+                .sum::<f64>()
+                .sqrt() as f32
+        })
+        .collect();
+    sv.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sv
+}
+
+/// Stable (effective) rank  Σσᵢ² / max σᵢ²  — the paper's rank metric
+/// (Sec. 4.1, Figs. 1/7/16).
+pub fn stable_rank(a: &Tensor) -> f64 {
+    let sv = singular_values(a);
+    let max_sq = sv.first().map(|s| (*s as f64).powi(2)).unwrap_or(0.0);
+    if max_sq <= 0.0 {
+        return 0.0;
+    }
+    sv.iter().map(|s| (*s as f64).powi(2)).sum::<f64>() / max_sq
+}
+
+/// ‖A − A·U·Uᵀ‖_F — how far A's rows are from S (the "leak" metric used
+/// by closure tests and the Grassmann accumulator diagnostics).
+pub fn out_of_subspace_norm(a: &Tensor, u: &Tensor) -> f64 {
+    let proj = project_rows(a, u);
+    a.data
+        .iter()
+        .zip(&proj.data)
+        .map(|(x, p)| ((x - p) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Best rank-r approximation error (for the error-accumulation experiment):
+/// returns A projected onto its top-r singular subspace via orthogonal
+/// iteration (deterministic start).
+pub fn low_rank_approx(a: &Tensor, r: usize, rng: &mut crate::rng::Rng) -> Tensor {
+    let (_, n) = a.dims2();
+    let r = r.min(n);
+    // Q ← orth(Aᵀ·A·sketch) — one subspace iteration is enough for tests
+    let sketch = Tensor::new(vec![n, r], rng.normal_f32_vec(n * r, 1.0));
+    let at = transpose(a);
+    let mut q = matmul(&at, &matmul(a, &sketch));
+    if !orthonormalize_columns(&mut q) {
+        orthonormalize_columns(&mut q);
+    }
+    // A ≈ (A·Q)·Qᵀ
+    matmul(&matmul(a, &q), &transpose(&q))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randt(rng: &mut Rng, m: usize, n: usize) -> Tensor {
+        Tensor::new(vec![m, n], rng.normal_f32_vec(m * n, 1.0))
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = randt(&mut rng, 5, 7);
+        let mut eye = Tensor::zeros(&[7, 7]);
+        for i in 0..7 {
+            eye.data[i * 7 + i] = 1.0;
+        }
+        let c = matmul(&a, &eye);
+        assert_eq!(c.data, a.data);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(vec![2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(matmul(&a, &b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involutive() {
+        let mut rng = Rng::new(2);
+        let a = randt(&mut rng, 3, 8);
+        assert_eq!(transpose(&transpose(&a)).data, a.data);
+    }
+
+    #[test]
+    fn orthonormalize_gives_orthonormal_columns() {
+        let mut rng = Rng::new(3);
+        let mut a = randt(&mut rng, 32, 6);
+        assert!(orthonormalize_columns(&mut a));
+        let g = matmul(&transpose(&a), &a);
+        for i in 0..6 {
+            for j in 0..6 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (g.at2(i, j) - want).abs() < 1e-4,
+                    "gram[{i},{j}]={}",
+                    g.at2(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn svd_matches_known_diagonal() {
+        // diag(3, 2, 1) embedded in a 4x3
+        let mut a = Tensor::zeros(&[4, 3]);
+        a.data[0] = 3.0;
+        a.data[4] = 2.0;
+        a.data[8] = 1.0;
+        let sv = singular_values(&a);
+        assert!((sv[0] - 3.0).abs() < 1e-4);
+        assert!((sv[1] - 2.0).abs() < 1e-4);
+        assert!((sv[2] - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn svd_frobenius_identity() {
+        let mut rng = Rng::new(4);
+        let a = randt(&mut rng, 20, 12);
+        let sv = singular_values(&a);
+        let fro2: f64 = a.data.iter().map(|x| (*x as f64).powi(2)).sum();
+        let sv2: f64 = sv.iter().map(|s| (*s as f64).powi(2)).sum();
+        assert!(
+            (fro2 - sv2).abs() / fro2 < 1e-4,
+            "fro²={fro2} Σσ²={sv2}"
+        );
+    }
+
+    #[test]
+    fn stable_rank_of_low_rank_matrix() {
+        let mut rng = Rng::new(5);
+        // rank-2 matrix: outer products
+        let u = randt(&mut rng, 40, 2);
+        let v = randt(&mut rng, 2, 30);
+        let a = matmul(&u, &v);
+        let sr = stable_rank(&a);
+        assert!(sr < 2.5, "stable rank {sr} of a rank-2 matrix");
+        // full-rank gaussian should have much higher stable rank
+        // 40x30 gaussian: ‖A‖_F² ≈ 1200, σ_max ≈ √40+√30 → stable rank ≈ 8.6
+        let g = randt(&mut rng, 40, 30);
+        assert!(stable_rank(&g) > 6.0);
+    }
+
+    #[test]
+    fn project_rows_idempotent() {
+        let mut rng = Rng::new(6);
+        let u = random_orthonormal(16, 4, &mut rng);
+        let w = randt(&mut rng, 10, 16);
+        let p1 = project_rows(&w, &u);
+        let p2 = project_rows(&p1, &u);
+        for (a, b) in p1.data.iter().zip(&p2.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        assert!(out_of_subspace_norm(&p1, &u) < 1e-3);
+    }
+
+    #[test]
+    fn low_rank_approx_reduces_error_with_rank() {
+        let mut rng = Rng::new(7);
+        let a = randt(&mut rng, 24, 24);
+        let e2 = {
+            let ap = low_rank_approx(&a, 2, &mut rng);
+            a.data.iter().zip(&ap.data).map(|(x, y)| (x - y).powi(2)).sum::<f32>()
+        };
+        let e16 = {
+            let ap = low_rank_approx(&a, 16, &mut rng);
+            a.data.iter().zip(&ap.data).map(|(x, y)| (x - y).powi(2)).sum::<f32>()
+        };
+        assert!(e16 < e2, "rank-16 err {e16} !< rank-2 err {e2}");
+    }
+}

@@ -1,0 +1,199 @@
+//! protomodels — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   train     train one system (config × mode × bandwidth) and log a curve
+//!   exp       regenerate a paper figure/table (see DESIGN.md §5)
+//!   inspect   dump the artifact manifest summary
+//!   timing    short run + per-entry PJRT timing report (profiling)
+
+use anyhow::{bail, Result};
+
+use protomodels::cli::Flags;
+use protomodels::compress::Mode;
+use protomodels::coordinator::{Pipeline, PipelineConfig};
+use protomodels::data::{Corpus, CorpusKind};
+use protomodels::exp::{self, ExpOpts};
+use protomodels::manifest::Manifest;
+use protomodels::metrics::{perplexity, RunLog};
+use protomodels::netsim::{LinkSpec, Topology, MBPS};
+use protomodels::rng::Rng;
+use protomodels::timemodel::TimeModel;
+
+fn usage() -> ! {
+    eprintln!(
+        "protomodels — Protocol Models reproduction
+
+USAGE:
+  protomodels train   [--config base] [--mode subspace|raw|topk|quant|powerlr|nofixed]
+                      [--bandwidth 80mbps|16gbps|100gbps|<N>mbps] [--regions]
+                      [--steps 200] [--microbatches 8] [--corpus wiki|books|web|c4]
+                      [--lr 6e-3] [--grassmann 0] [--seed 17]
+                      [--time-model analytic|analytic:<TFLOPs>|measured]
+                      [--artifacts artifacts] [--out results] [--label NAME]
+  protomodels exp     <name|all> [--fast] [--steps N] [--seed N]
+                      [--artifacts artifacts] [--out results]
+      names: {}
+  protomodels inspect [--artifacts artifacts]
+  protomodels timing  [--config tiny] [--steps 3]
+",
+        exp::ALL.join(", ")
+    );
+    std::process::exit(2)
+}
+
+fn make_topo(flags: &Flags, stages: usize, rng: &mut Rng) -> Result<Topology> {
+    if flags.switch("regions") {
+        return Ok(Topology::global_regions(stages, rng));
+    }
+    let bw = flags.str("bandwidth", "80mbps");
+    let spec = match bw.as_str() {
+        "100gbps" => LinkSpec::centralized_100g(),
+        "16gbps" => LinkSpec::centralized_16g(),
+        "80mbps" => LinkSpec::internet_80m(),
+        other => LinkSpec::internet(
+            other
+                .trim_end_matches("mbps")
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("bad --bandwidth {other:?}"))?
+                * MBPS,
+        ),
+    };
+    Ok(Topology::uniform(stages, spec, rng))
+}
+
+fn cmd_train(flags: &Flags) -> Result<()> {
+    let manifest = Manifest::load(flags.str("artifacts", "artifacts"))?;
+    let config = flags.str("config", "base");
+    let mode = Mode::parse(&flags.str("mode", "subspace"))?;
+    let steps = flags.usize("steps", 200)?;
+    let seed = flags.usize("seed", 17)? as u64;
+    let h = manifest.config(&config)?.hyper.clone();
+    let mut rng = Rng::new(seed);
+    let topo = make_topo(flags, h.stages, &mut rng)?;
+    let tm = TimeModel::parse(&flags.str("time-model", "analytic"))
+        .ok_or_else(|| anyhow::anyhow!("bad --time-model"))?;
+    let pcfg = PipelineConfig {
+        mode,
+        microbatches: flags.usize("microbatches", 8)?,
+        grassmann_interval: flags.usize("grassmann", 0)?,
+        lr: flags.f64("lr", 6e-3)? as f32,
+        warmup_steps: (steps / 20).max(5),
+        total_steps: steps,
+        time_model: tm,
+        seed,
+        ..Default::default()
+    };
+    let corpus_kind = CorpusKind::parse(&flags.str("corpus", "wiki"))
+        .ok_or_else(|| anyhow::anyhow!("bad --corpus"))?;
+    let mut pipe = Pipeline::new(&manifest, &config, topo, pcfg)?;
+    let corpus = Corpus::synthetic(corpus_kind, h.vocab, 400_000, seed ^ 0xDD);
+    let label = flags.str(
+        "label",
+        &format!(
+            "{config}_{}_{}",
+            mode.as_str(),
+            flags.str("bandwidth", "80mbps")
+        ),
+    );
+    let mut log = RunLog::create(flags.str("out", "results"), &label)?;
+    for step in 0..steps {
+        let stats = pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
+        log.log(&stats)?;
+        if step % 10 == 0 || step + 1 == steps {
+            println!(
+                "step {:>5}  loss {:.4}  sim_t {:>9.3}s  wire {:>10}B  tps {:>9.1}",
+                stats.step,
+                stats.loss,
+                log.sim_time,
+                stats.wire_bytes,
+                stats.tokens as f64 / stats.sim_seconds
+            );
+        }
+    }
+    let val = pipe.eval(8, |r| corpus.val_batch(h.b, h.n, r))?;
+    println!(
+        "final: val_loss {:.4}  val_ppl {:.2}  mean_tps {:.1}  subspace_leak {:.2e}",
+        val,
+        perplexity(val),
+        log.tps(),
+        pipe.subspace_leak()
+    );
+    log.finish()?;
+    Ok(())
+}
+
+fn cmd_inspect(flags: &Flags) -> Result<()> {
+    let manifest = Manifest::load(flags.str("artifacts", "artifacts"))?;
+    println!("artifacts root: {}", manifest.root.display());
+    for (name, cm) in &manifest.configs {
+        let h = &cm.hyper;
+        println!(
+            "config {name}: d={} d_ff={} heads={} layers={} stages={} n={} \
+             vocab={} k={} b={} ratio={:.0}x params={}",
+            h.d, h.d_ff, h.heads, h.layers, h.stages, h.n, h.vocab, h.k, h.b,
+            h.ratio, h.param_count
+        );
+        println!("  modes: {:?}  entries: {}", cm.modes, cm.entries.len());
+    }
+    Ok(())
+}
+
+fn cmd_timing(flags: &Flags) -> Result<()> {
+    let manifest = Manifest::load(flags.str("artifacts", "artifacts"))?;
+    let config = flags.str("config", "tiny");
+    let steps = flags.usize("steps", 3)?;
+    let h = manifest.config(&config)?.hyper.clone();
+    let mut rng = Rng::new(1);
+    let topo =
+        Topology::uniform(h.stages, LinkSpec::internet_80m(), &mut rng);
+    let pcfg = PipelineConfig {
+        microbatches: 4,
+        total_steps: steps,
+        grassmann_interval: steps.max(1),
+        ..Default::default()
+    };
+    let mut pipe = Pipeline::new(&manifest, &config, topo, pcfg)?;
+    let corpus = Corpus::synthetic(CorpusKind::Wiki, h.vocab, 100_000, 2);
+    for _ in 0..steps {
+        pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
+    }
+    print!("{}", pipe.rt.timing_report());
+    let compute = pipe.rt.total_compute_seconds();
+    println!(
+        "total PJRT compute: {compute:.3}s | host coordination: {:.3}s \
+         ({:.1}% overhead)",
+        pipe.host_seconds - compute,
+        (pipe.host_seconds / compute.max(1e-9) - 1.0) * 100.0
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+    }
+    let flags = Flags::parse(&args[1..])?;
+    match args[0].as_str() {
+        "train" => cmd_train(&flags),
+        "inspect" => cmd_inspect(&flags),
+        "timing" => cmd_timing(&flags),
+        "exp" => {
+            let name = flags
+                .positional
+                .first()
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| usage());
+            let opts = ExpOpts {
+                artifacts: flags.str("artifacts", "artifacts").into(),
+                out_dir: flags.str("out", "results").into(),
+                fast: flags.switch("fast"),
+                steps: flags.opt("steps").map(|s| s.parse()).transpose()?,
+                seed: flags.usize("seed", 17)? as u64,
+            };
+            exp::run(&name, &opts)
+        }
+        "help" | "--help" | "-h" => usage(),
+        other => bail!("unknown subcommand {other:?} (try --help)"),
+    }
+}

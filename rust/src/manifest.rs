@@ -1,0 +1,275 @@
+//! Artifact manifest — the contract between the python compile path and
+//! the rust runtime (artifacts/manifest.json, written by compile/aot.py).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Json;
+
+pub const SUPPORTED_VERSION: usize = 3;
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub configs: BTreeMap<String, ConfigManifest>,
+}
+
+/// Static hyperparameters of one shape-specialized config.
+#[derive(Clone, Debug)]
+pub struct Hyper {
+    pub d: usize,
+    pub d_ff: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub stages: usize,
+    pub n: usize,
+    pub vocab: usize,
+    pub k: usize,
+    pub b: usize,
+    pub blocks_per_stage: usize,
+    pub ratio: f64,
+    pub param_count: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ConfigManifest {
+    pub name: String,
+    pub hyper: Hyper,
+    pub modes: Vec<String>,
+    /// stage-kind ("first"/"mid"/"last") → ordered (name, shape)
+    pub schemas: BTreeMap<String, Vec<(String, Vec<usize>)>>,
+    /// parameter names updated with the row-wise AdamW variant
+    pub rowwise: Vec<String>,
+    /// parameter names re-projected onto S each step
+    pub reproject: Vec<String>,
+    pub entries: BTreeMap<String, Entry>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Clone, Debug)]
+pub struct OutSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Clone, Debug)]
+pub struct Entry {
+    /// path relative to the artifacts root
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub outs: Vec<OutSpec>,
+}
+
+fn dtype(s: &str) -> Result<Dtype> {
+    match s {
+        "f32" => Ok(Dtype::F32),
+        "i32" => Ok(Dtype::I32),
+        other => bail!("unknown dtype {other:?}"),
+    }
+}
+
+fn shape(j: &Json) -> Result<Vec<usize>> {
+    j.arr()?.iter().map(|x| x.usize()).collect()
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Manifest> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text)?;
+        let version = j.get("version")?.usize()?;
+        if version != SUPPORTED_VERSION {
+            bail!("manifest version {version} != supported {SUPPORTED_VERSION}");
+        }
+        let mut configs = BTreeMap::new();
+        for (name, cj) in j.get("configs")?.obj()? {
+            configs.insert(name.clone(), ConfigManifest::parse(name, cj)?);
+        }
+        Ok(Manifest { root, configs })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigManifest> {
+        self.configs.get(name).with_context(|| {
+            format!(
+                "config {name:?} not in manifest; have {:?}",
+                self.configs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+impl ConfigManifest {
+    fn parse(name: &str, j: &Json) -> Result<ConfigManifest> {
+        let h = j.get("hyper")?;
+        let hyper = Hyper {
+            d: h.get("d")?.usize()?,
+            d_ff: h.get("d_ff")?.usize()?,
+            heads: h.get("heads")?.usize()?,
+            layers: h.get("layers")?.usize()?,
+            stages: h.get("stages")?.usize()?,
+            n: h.get("n")?.usize()?,
+            vocab: h.get("vocab")?.usize()?,
+            k: h.get("k")?.usize()?,
+            b: h.get("b")?.usize()?,
+            blocks_per_stage: h.get("blocks_per_stage")?.usize()?,
+            ratio: h.get("ratio")?.num()?,
+            param_count: h.get("param_count")?.usize()?,
+        };
+        let modes = j
+            .get("modes")?
+            .arr()?
+            .iter()
+            .map(|m| Ok(m.str()?.to_string()))
+            .collect::<Result<_>>()?;
+        let mut schemas = BTreeMap::new();
+        for (kind, sj) in j.get("schemas")?.obj()? {
+            let fields = sj
+                .arr()?
+                .iter()
+                .map(|f| {
+                    let pair = f.arr()?;
+                    Ok((pair[0].str()?.to_string(), shape(&pair[1])?))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            schemas.insert(kind.clone(), fields);
+        }
+        let cons = j.get("constrained")?;
+        let names = |key: &str| -> Result<Vec<String>> {
+            cons.get(key)?
+                .arr()?
+                .iter()
+                .map(|x| Ok(x.str()?.to_string()))
+                .collect()
+        };
+        let mut entries = BTreeMap::new();
+        for (ename, ej) in j.get("entries")?.obj()? {
+            let args = ej
+                .get("args")?
+                .arr()?
+                .iter()
+                .map(|a| {
+                    Ok(ArgSpec {
+                        name: a.get("name")?.str()?.to_string(),
+                        shape: shape(a.get("shape")?)?,
+                        dtype: dtype(a.get("dtype")?.str()?)?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let outs = ej
+                .get("outs")?
+                .arr()?
+                .iter()
+                .map(|o| {
+                    Ok(OutSpec {
+                        shape: shape(o.get("shape")?)?,
+                        dtype: dtype(o.get("dtype")?.str()?)?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                ename.clone(),
+                Entry { file: ej.get("file")?.str()?.to_string(), args, outs },
+            );
+        }
+        Ok(ConfigManifest {
+            name: name.to_string(),
+            hyper,
+            modes,
+            schemas,
+            rowwise: names("rowwise")?,
+            reproject: names("reproject")?,
+            entries,
+        })
+    }
+
+    pub fn entry(&self, key: &str) -> Result<&Entry> {
+        self.entries
+            .get(key)
+            .with_context(|| format!("entry {key:?} missing for config {}", self.name))
+    }
+
+    /// Schema kind for a pipeline stage index.
+    pub fn stage_kind(&self, stage: usize) -> &'static str {
+        if stage == 0 {
+            "first"
+        } else if stage == self.hyper.stages - 1 {
+            "last"
+        } else {
+            "mid"
+        }
+    }
+
+    pub fn schema(&self, stage: usize) -> &[(String, Vec<usize>)] {
+        &self.schemas[self.stage_kind(stage)]
+    }
+
+    /// Total parameter element count of one stage.
+    pub fn stage_param_count(&self, stage: usize) -> usize {
+        self.schema(stage)
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_manifest_and_schemas() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        let c = m.config("tiny").unwrap();
+        assert_eq!(c.hyper.d, 64);
+        assert_eq!(c.hyper.stages, 3);
+        assert_eq!(c.stage_kind(0), "first");
+        assert_eq!(c.stage_kind(1), "mid");
+        assert_eq!(c.stage_kind(2), "last");
+        // first stage owns t_s; last owns the head
+        assert_eq!(c.schema(0)[0].0, "t_s");
+        assert!(c.schema(2).iter().any(|(n, _)| n == "w_head"));
+        assert!(!c.rowwise.is_empty());
+    }
+
+    #[test]
+    fn entry_args_end_with_boundary_tensors() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        let c = m.config("tiny").unwrap();
+        let e = c.entry("subspace/mid_bwd").unwrap();
+        let names: Vec<_> = e.args.iter().map(|a| a.name.as_str()).collect();
+        assert_eq!(names[names.len() - 2], "xc_in");
+        assert_eq!(names[names.len() - 1], "gc_out");
+        let h = &c.hyper;
+        assert_eq!(
+            e.args.last().unwrap().shape,
+            vec![h.b, h.n, h.k],
+            "boundary payload must be compressed"
+        );
+    }
+
+    #[test]
+    fn unknown_config_errors() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert!(m.config("nope").is_err());
+    }
+}

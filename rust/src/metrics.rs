@@ -1,0 +1,139 @@
+//! Run metrics: loss/throughput/wire curves → CSV files under results/.
+//!
+//! Every experiment harness (`protomodels exp …`) emits its figure/table
+//! data through this module so the output format is uniform:
+//! one CSV per curve family, `step` or `x` as the first column.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub struct CsvWriter {
+    path: PathBuf,
+    out: BufWriter<File>,
+    cols: usize,
+    rows: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<CsvWriter> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = BufWriter::new(
+            File::create(&path).with_context(|| format!("create {path:?}"))?,
+        );
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { path, out, cols: header.len(), rows: 0 })
+    }
+
+    pub fn row(&mut self, vals: &[String]) -> Result<()> {
+        debug_assert_eq!(vals.len(), self.cols, "{:?}", self.path);
+        writeln!(self.out, "{}", vals.join(","))?;
+        self.rows += 1;
+        Ok(())
+    }
+
+    pub fn rowf(&mut self, vals: &[f64]) -> Result<()> {
+        self.row(&vals.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
+    }
+
+    pub fn finish(mut self) -> Result<PathBuf> {
+        self.out.flush()?;
+        eprintln!("[metrics] wrote {} rows → {}", self.rows, self.path.display());
+        Ok(self.path)
+    }
+}
+
+/// A training-run log: one row per step.
+pub struct RunLog {
+    csv: CsvWriter,
+    pub label: String,
+    /// cumulative simulated seconds
+    pub sim_time: f64,
+    pub tokens: u64,
+    pub bytes: u64,
+    pub last_loss: f64,
+}
+
+impl RunLog {
+    pub fn create(dir: impl AsRef<Path>, label: &str) -> Result<RunLog> {
+        let csv = CsvWriter::create(
+            dir.as_ref().join(format!("{label}.csv")),
+            &[
+                "step",
+                "loss",
+                "sim_seconds",
+                "cum_sim_seconds",
+                "wire_bytes",
+                "cum_wire_bytes",
+                "tokens_per_sim_second",
+            ],
+        )?;
+        Ok(RunLog {
+            csv,
+            label: label.to_string(),
+            sim_time: 0.0,
+            tokens: 0,
+            bytes: 0,
+            last_loss: f64::NAN,
+        })
+    }
+
+    pub fn log(&mut self, s: &crate::coordinator::StepStats) -> Result<()> {
+        self.sim_time += s.sim_seconds;
+        self.tokens += s.tokens as u64;
+        self.bytes += s.wire_bytes;
+        self.last_loss = s.loss;
+        let tps = s.tokens as f64 / s.sim_seconds.max(1e-12);
+        self.csv.row(&[
+            s.step.to_string(),
+            format!("{:.6}", s.loss),
+            format!("{:.6}", s.sim_seconds),
+            format!("{:.6}", self.sim_time),
+            s.wire_bytes.to_string(),
+            self.bytes.to_string(),
+            format!("{tps:.2}"),
+        ])
+    }
+
+    pub fn tps(&self) -> f64 {
+        self.tokens as f64 / self.sim_time.max(1e-12)
+    }
+
+    pub fn finish(self) -> Result<PathBuf> {
+        self.csv.finish()
+    }
+}
+
+/// Perplexity from a mean cross-entropy loss.
+pub fn perplexity(mean_ce: f64) -> f64 {
+    mean_ce.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("protomodels_test_metrics");
+        let mut w =
+            CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        w.rowf(&[1.0, 2.5]).unwrap();
+        w.rowf(&[3.0, -4.0]).unwrap();
+        let p = w.finish().unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("a,b\n1,2.5\n"));
+    }
+
+    #[test]
+    fn perplexity_of_zero_loss_is_one() {
+        assert!((perplexity(0.0) - 1.0).abs() < 1e-12);
+        assert!(perplexity(2.0) > 7.0);
+    }
+}

@@ -1,0 +1,263 @@
+//! Decentralized network substrate: per-link bandwidth/latency simulation.
+//!
+//! The paper itself simulates bandwidth (Sec. 8.1: "Bandwidth simulations
+//! sample from N(B, 0.2B) per pass"); we do exactly that. Every boundary
+//! transfer samples an instantaneous bandwidth from N(B, 0.2·B) (clamped
+//! at 5% of nominal), so transfer time = latency + bytes·8 / sampled_bps.
+//!
+//! `Topology` models the pipeline's stage-to-stage links, including the
+//! multi-region layout of Fig. 5 (no two consecutive stages in the same
+//! region → every pipeline link crosses a slow inter-region path, while
+//! the centralized baseline keeps everything intra-region).
+
+use crate::rng::Rng;
+
+/// Bits per second helpers.
+pub const MBPS: f64 = 1e6;
+pub const GBPS: f64 = 1e9;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkSpec {
+    /// nominal bandwidth, bits/s
+    pub bandwidth_bps: f64,
+    /// one-way latency, seconds
+    pub latency_s: f64,
+    /// σ/μ of the per-transfer bandwidth sample (paper: 0.2)
+    pub jitter_frac: f64,
+}
+
+impl LinkSpec {
+    pub fn new(bandwidth_bps: f64, latency_s: f64) -> Self {
+        LinkSpec { bandwidth_bps, latency_s, jitter_frac: 0.2 }
+    }
+
+    /// Datacenter-grade 100 Gbps (the paper's "centralized" reference).
+    pub fn centralized_100g() -> Self {
+        LinkSpec::new(100.0 * GBPS, 10e-6)
+    }
+
+    /// Same-region cloud instances, 16 Gbps (Fig. 5 centralized).
+    pub fn centralized_16g() -> Self {
+        LinkSpec::new(16.0 * GBPS, 100e-6)
+    }
+
+    /// Consumer internet, 80 Mbps (the paper's headline decentralized
+    /// link). Latency is scaled to 2 ms — our models are ~100× smaller
+    /// than the paper's 2B reference, so real 30 ms internet RTTs would
+    /// artificially dominate compute at this scale; 2 ms preserves the
+    /// paper's latency:compute ratio (DESIGN.md §4 Substitutions).
+    pub fn internet_80m() -> Self {
+        LinkSpec::new(80.0 * MBPS, 2e-3)
+    }
+
+    /// Consumer internet at an arbitrary bandwidth, scaled latency.
+    pub fn internet(bandwidth_bps: f64) -> Self {
+        LinkSpec::new(bandwidth_bps, 2e-3)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub spec: LinkSpec,
+    rng: Rng,
+    /// cumulative accounting
+    pub bytes_sent: u64,
+    pub transfers: u64,
+    pub busy_s: f64,
+}
+
+impl Link {
+    pub fn new(spec: LinkSpec, rng: Rng) -> Self {
+        Link { spec, rng, bytes_sent: 0, transfers: 0, busy_s: 0.0 }
+    }
+
+    /// Sample one transfer: (serialization seconds, propagation latency).
+    /// Serialization occupies the link; latency pipelines away. Bandwidth
+    /// is drawn from the paper's N(B, 0.2B) per transfer.
+    pub fn sample(&mut self, bytes: usize) -> (f64, f64) {
+        let bw = self.rng.normal_clamped(
+            self.spec.bandwidth_bps,
+            self.spec.jitter_frac * self.spec.bandwidth_bps,
+            0.05 * self.spec.bandwidth_bps,
+        );
+        let ser = (bytes as f64 * 8.0) / bw;
+        self.bytes_sent += bytes as u64;
+        self.transfers += 1;
+        self.busy_s += ser;
+        (ser, self.spec.latency_s)
+    }
+
+    /// Simulated wall-clock seconds to push `bytes` through this link.
+    pub fn transfer_time(&mut self, bytes: usize) -> f64 {
+        let (ser, lat) = self.sample(bytes);
+        ser + lat
+    }
+
+    /// Expected (jitter-free) transfer time — used by analytic sweeps.
+    pub fn expected_time(&self, bytes: usize) -> f64 {
+        self.spec.latency_s + (bytes as f64 * 8.0) / self.spec.bandwidth_bps
+    }
+}
+
+/// Geographic region of a stage host (Fig. 5 layout).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Region {
+    NorthAmerica,
+    Europe,
+    Asia,
+    SouthAmerica,
+}
+
+pub const ALL_REGIONS: [Region; 4] = [
+    Region::NorthAmerica,
+    Region::Europe,
+    Region::Asia,
+    Region::SouthAmerica,
+];
+
+impl Region {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Region::NorthAmerica => "na",
+            Region::Europe => "eu",
+            Region::Asia => "as",
+            Region::SouthAmerica => "sa",
+        }
+    }
+}
+
+/// The pipeline's P−1 stage-to-stage links (plus broadcast accounting for
+/// U_k / T_fixed distribution, which reuses the slowest link).
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub links: Vec<Link>,
+    pub regions: Option<Vec<Region>>,
+}
+
+impl Topology {
+    /// Uniform links between consecutive stages.
+    pub fn uniform(stages: usize, spec: LinkSpec, rng: &mut Rng) -> Self {
+        let links = (0..stages.saturating_sub(1))
+            .map(|i| Link::new(spec, rng.fork(0x11C + i as u64)))
+            .collect();
+        Topology { links, regions: None }
+    }
+
+    /// Fig. 5: stages round-robined across 4 regions so that no two
+    /// consecutive stages share a region; inter-region links sample a
+    /// nominal bandwidth uniformly in [60, 350] Mbps (paper's measured
+    /// span), intra-region 16 Gbps.
+    pub fn global_regions(stages: usize, rng: &mut Rng) -> Self {
+        let regions: Vec<Region> =
+            (0..stages).map(|s| ALL_REGIONS[s % 4]).collect();
+        let links = (0..stages.saturating_sub(1))
+            .map(|i| {
+                let cross = regions[i] != regions[i + 1];
+                let bw = if cross {
+                    (60.0 + rng.uniform() * 290.0) * MBPS
+                } else {
+                    16.0 * GBPS
+                };
+                // inter-region RTTs (~80 ms real) are scaled by the same
+                // ~1/100 model-scale factor as LinkSpec::internet_80m so
+                // the latency:compute ratio matches the paper's 8B run
+                // (DESIGN.md §4)
+                let lat = if cross { 1e-3 } else { 100e-6 };
+                Link::new(LinkSpec::new(bw, lat), rng.fork(0x5EC + i as u64))
+            })
+            .collect();
+        Topology { links, regions: Some(regions) }
+    }
+
+    pub fn stages(&self) -> usize {
+        self.links.len() + 1
+    }
+
+    /// Transfer across the link between stage s and s+1.
+    pub fn send(&mut self, from_stage: usize, bytes: usize) -> f64 {
+        self.links[from_stage].transfer_time(bytes)
+    }
+
+    /// One-shot broadcast (U_k update, T_fixed at startup) to all stages:
+    /// modeled as sequential sends down the pipeline (conservative).
+    pub fn broadcast(&mut self, bytes: usize) -> f64 {
+        let mut t = 0.0;
+        for l in &mut self.links {
+            t += l.transfer_time(bytes);
+        }
+        t
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.links.iter().map(|l| l.bytes_sent).sum()
+    }
+
+    pub fn min_bandwidth(&self) -> f64 {
+        self.links
+            .iter()
+            .map(|l| l.spec.bandwidth_bps)
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_scales_with_bytes() {
+        let mut rng = Rng::new(1);
+        let mut link = Link::new(LinkSpec::new(80.0 * MBPS, 0.0), rng.fork(0));
+        let n = 200;
+        let t_small: f64 = (0..n).map(|_| link.transfer_time(10_000)).sum();
+        let t_big: f64 = (0..n).map(|_| link.transfer_time(1_000_000)).sum();
+        assert!(t_big > 50.0 * t_small, "{t_big} vs {t_small}");
+    }
+
+    #[test]
+    fn bandwidth_samples_cluster_around_nominal() {
+        let mut rng = Rng::new(2);
+        let mut link = Link::new(LinkSpec::new(100.0 * MBPS, 0.0), rng.fork(0));
+        let bytes = 1_250_000; // 10 Mbit → nominal 0.1 s
+        let n = 2000;
+        let mean: f64 =
+            (0..n).map(|_| link.transfer_time(bytes)).sum::<f64>() / n as f64;
+        assert!((mean - 0.1).abs() < 0.01, "mean transfer {mean}");
+    }
+
+    #[test]
+    fn centralized_much_faster_than_internet() {
+        let mut rng = Rng::new(3);
+        let mut fast = Link::new(LinkSpec::centralized_100g(), rng.fork(0));
+        let mut slow = Link::new(LinkSpec::internet_80m(), rng.fork(1));
+        let bytes = 4 * 1024 * 1024;
+        assert!(slow.transfer_time(bytes) > 100.0 * fast.transfer_time(bytes));
+    }
+
+    #[test]
+    fn global_regions_no_consecutive_same_region() {
+        let mut rng = Rng::new(4);
+        let topo = Topology::global_regions(8, &mut rng);
+        let regions = topo.regions.as_ref().unwrap();
+        for w in regions.windows(2) {
+            assert_ne!(w[0], w[1]);
+        }
+        // every pipeline link is inter-region, hence slow
+        for l in &topo.links {
+            assert!(l.spec.bandwidth_bps <= 350.0 * MBPS);
+            assert!(l.spec.bandwidth_bps >= 60.0 * MBPS);
+        }
+    }
+
+    #[test]
+    fn accounting_accumulates() {
+        let mut rng = Rng::new(5);
+        let mut topo =
+            Topology::uniform(4, LinkSpec::internet_80m(), &mut rng);
+        topo.send(0, 1000);
+        topo.send(1, 2000);
+        topo.broadcast(500);
+        assert_eq!(topo.total_bytes(), 1000 + 2000 + 3 * 500);
+        assert_eq!(topo.stages(), 4);
+    }
+}

@@ -1,0 +1,209 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the coordinator hot path. Python never runs here.
+//!
+//! Artifacts are HLO *text* (see compile/aot.py): `HloModuleProto::
+//! from_text_file` → `XlaComputation::from_proto` → `client.compile`.
+//! Executables are cached per entry key ("mode/entry"); every execution
+//! is timed so the coordinator's measured time-model can feed netsim.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::manifest::{ConfigManifest, Dtype, Entry, Manifest};
+use crate::tensor::{IntTensor, Tensor, Value};
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cfg: ConfigManifest,
+    root: std::path::PathBuf,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// per-entry (executions, cumulative seconds) — feeds the measured
+    /// time model and the §Perf profile
+    pub timings: HashMap<String, (u64, f64)>,
+}
+
+impl Runtime {
+    /// Create a runtime for one config; entries compile lazily on first use.
+    pub fn new(manifest: &Manifest, config: &str) -> Result<Runtime> {
+        let cfg = manifest.config(config)?.clone();
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            cfg,
+            root: manifest.root.clone(),
+            exes: HashMap::new(),
+            timings: HashMap::new(),
+        })
+    }
+
+    pub fn config(&self) -> &ConfigManifest {
+        &self.cfg
+    }
+
+    /// Compile (and cache) the executable for an entry key.
+    pub fn ensure(&mut self, key: &str) -> Result<()> {
+        if self.exes.contains_key(key) {
+            return Ok(());
+        }
+        let entry = self.cfg.entry(key)?;
+        let path = self.root.join(&entry.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {key}: {e:?}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        if std::env::var_os("PROTOMODELS_VERBOSE").is_some() {
+            eprintln!("[runtime] compiled {key} in {dt:.2}s");
+        }
+        self.exes.insert(key.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile a set of entries (pipeline warmup).
+    pub fn warmup(&mut self, keys: &[&str]) -> Result<()> {
+        for k in keys {
+            self.ensure(k)?;
+        }
+        Ok(())
+    }
+
+    fn to_literal(v: &Value) -> Result<xla::Literal> {
+        let dims: Vec<i64> = v.shape().iter().map(|&d| d as i64).collect();
+        let lit = match v {
+            Value::F32(t) => {
+                if t.is_scalar() {
+                    xla::Literal::scalar(t.data[0])
+                } else {
+                    xla::Literal::vec1(&t.data)
+                        .reshape(&dims)
+                        .map_err(|e| anyhow::anyhow!("reshape f32: {e:?}"))?
+                }
+            }
+            Value::I32(t) => xla::Literal::vec1(&t.data)
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("reshape i32: {e:?}"))?,
+        };
+        Ok(lit)
+    }
+
+    fn check_args(entry: &Entry, key: &str, args: &[Value]) -> Result<()> {
+        if entry.args.len() != args.len() {
+            bail!(
+                "{key}: expected {} args, got {}",
+                entry.args.len(),
+                args.len()
+            );
+        }
+        for (spec, v) in entry.args.iter().zip(args) {
+            if spec.shape != v.shape() {
+                bail!(
+                    "{key}: arg {:?} shape {:?} != provided {:?}",
+                    spec.name,
+                    spec.shape,
+                    v.shape()
+                );
+            }
+            let ok = matches!(
+                (spec.dtype, v),
+                (Dtype::F32, Value::F32(_)) | (Dtype::I32, Value::I32(_))
+            );
+            if !ok {
+                bail!("{key}: arg {:?} dtype mismatch", spec.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an entry. Returns the flattened outputs (manifest order).
+    pub fn execute(&mut self, key: &str, args: &[Value]) -> Result<Vec<Value>> {
+        Ok(self.execute_timed(key, args)?.0)
+    }
+
+    /// Execute an entry, returning outputs + this call's wall seconds
+    /// (feeds the measured time model).
+    pub fn execute_timed(
+        &mut self,
+        key: &str,
+        args: &[Value],
+    ) -> Result<(Vec<Value>, f64)> {
+        self.ensure(key)?;
+        let entry = self.cfg.entry(key)?.clone();
+        Self::check_args(&entry, key, args)?;
+        let lits: Vec<xla::Literal> = args
+            .iter()
+            .map(Self::to_literal)
+            .collect::<Result<_>>()?;
+
+        let t0 = Instant::now();
+        let exe = self.exes.get(key).unwrap();
+        let out_bufs = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("execute {key}: {e:?}"))?;
+        let result = out_bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {key}: {e:?}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        let t = self.timings.entry(key.to_string()).or_insert((0, 0.0));
+        t.0 += 1;
+        t.1 += dt;
+
+        // AOT lowers with return_tuple=True → single tuple literal
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {key}: {e:?}"))?;
+        if parts.len() != entry.outs.len() {
+            bail!(
+                "{key}: {} outputs, manifest says {}",
+                parts.len(),
+                entry.outs.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&entry.outs) {
+            let v = match spec.dtype {
+                Dtype::F32 => Value::F32(Tensor::new(
+                    spec.shape.clone(),
+                    lit.to_vec::<f32>()
+                        .map_err(|e| anyhow::anyhow!("read f32: {e:?}"))?,
+                )),
+                Dtype::I32 => Value::I32(IntTensor::new(
+                    spec.shape.clone(),
+                    lit.to_vec::<i32>()
+                        .map_err(|e| anyhow::anyhow!("read i32: {e:?}"))?,
+                )),
+            };
+            outs.push(v);
+        }
+        Ok((outs, dt))
+    }
+
+    /// Mean measured execution seconds for an entry (None if never run).
+    pub fn mean_time(&self, key: &str) -> Option<f64> {
+        self.timings.get(key).map(|(n, t)| t / (*n).max(1) as f64)
+    }
+
+    /// Total runtime seconds across all entries (profiling).
+    pub fn total_compute_seconds(&self) -> f64 {
+        self.timings.values().map(|(_, t)| t).sum()
+    }
+
+    pub fn timing_report(&self) -> String {
+        let mut rows: Vec<_> = self.timings.iter().collect();
+        rows.sort_by(|a, b| b.1 .1.partial_cmp(&a.1 .1).unwrap());
+        let mut s = String::from("entry,calls,total_s,mean_ms\n");
+        for (k, (n, t)) in rows {
+            s.push_str(&format!(
+                "{k},{n},{t:.4},{:.3}\n",
+                t / (*n).max(1) as f64 * 1e3
+            ));
+        }
+        s
+    }
+}

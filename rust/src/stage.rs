@@ -1,0 +1,186 @@
+//! Per-stage model state: parameters + optimizer moments, initialized
+//! according to the paper's subspace constraints.
+//!
+//! In subspace mode, the constrained matrices start with rows in
+//! S = Col(U_k):  W_p1, W_p2 ← W·U·Uᵀ and T_S = T_fixed·U·Uᵀ
+//! (Sec. 4.3/4.3.1). The closure property of the modified optimizer then
+//! keeps them there for the rest of training without re-projection.
+
+use anyhow::Result;
+
+use crate::compress::Mode;
+use crate::linalg;
+use crate::manifest::ConfigManifest;
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Weight init std (GPT-2 style).
+pub const INIT_STD: f32 = 0.02;
+
+#[derive(Clone)]
+pub struct StageState {
+    pub stage: usize,
+    pub kind: &'static str,
+    pub schema: Vec<(String, Vec<usize>)>,
+    pub params: Vec<Tensor>,
+    /// AdamW first/second moments
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+}
+
+/// Global (leader-owned) state shared by all stages.
+#[derive(Clone)]
+pub struct GlobalState {
+    /// orthonormal subspace basis U_k ∈ R^{d×k}
+    pub u: Tensor,
+    /// fixed high-rank token embedding table T_fixed ∈ R^{v×d}
+    pub t_fixed: Tensor,
+}
+
+impl GlobalState {
+    pub fn init(cfg: &ConfigManifest, rng: &mut Rng) -> GlobalState {
+        let h = &cfg.hyper;
+        let u = linalg::random_orthonormal(h.d, h.k, rng);
+        let t_fixed = Tensor::new(
+            vec![h.vocab, h.d],
+            rng.normal_f32_vec(h.vocab * h.d, INIT_STD),
+        );
+        GlobalState { u, t_fixed }
+    }
+}
+
+fn constrained(name: &str) -> bool {
+    name.ends_with("wp1") || name.ends_with("wp2") || name == "t_s"
+}
+
+impl StageState {
+    /// Initialize a stage. In `Mode::Subspace`, constrained matrices are
+    /// projected into S and T_S = T_fixed·U·Uᵀ; in raw/lossy modes the
+    /// t_s slot holds the full (unconstrained) embedding table.
+    pub fn init(
+        cfg: &ConfigManifest,
+        stage: usize,
+        mode: Mode,
+        global: &GlobalState,
+        rng: &mut Rng,
+    ) -> Result<StageState> {
+        let kind = cfg.stage_kind(stage);
+        let schema = cfg.schema(stage).to_vec();
+        let mut params = Vec::with_capacity(schema.len());
+        for (name, shape) in &schema {
+            let numel: usize = shape.iter().product();
+            let t = if name.ends_with("_g") {
+                Tensor::new(shape.clone(), vec![1.0; numel])
+            } else if name.ends_with("_b") {
+                Tensor::zeros(shape)
+            } else if name == "t_s" && mode == Mode::Subspace {
+                linalg::project_rows(&global.t_fixed, &global.u)
+            } else {
+                let mut t = Tensor::new(
+                    shape.clone(),
+                    rng.normal_f32_vec(numel, INIT_STD),
+                );
+                let compressed =
+                    matches!(mode, Mode::Subspace | Mode::NoFixed);
+                if compressed && (constrained(name) || name == "t_s") {
+                    t = linalg::project_rows(&t, &global.u);
+                }
+                t
+            };
+            params.push(t);
+        }
+        let m = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        let v = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        Ok(StageState { stage, kind, schema, params, m, v })
+    }
+
+    pub fn param(&self, name: &str) -> Option<&Tensor> {
+        self.schema
+            .iter()
+            .position(|(n, _)| n == name)
+            .map(|i| &self.params[i])
+    }
+
+    pub fn zero_grads(&self) -> Vec<Tensor> {
+        self.params.iter().map(|p| Tensor::zeros(&p.shape)).collect()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Max out-of-subspace leak across constrained matrices — the closure
+    /// diagnostic asserted by integration tests.
+    pub fn subspace_leak(&self, u: &Tensor) -> f64 {
+        let mut worst = 0.0f64;
+        for ((name, _), p) in self.schema.iter().zip(&self.params) {
+            if constrained(name) {
+                let norm = p.frobenius_norm() as f64 + 1e-12;
+                worst = worst.max(linalg::out_of_subspace_norm(p, u) / norm);
+            }
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Manifest;
+
+    fn tiny() -> (ConfigManifest, GlobalState, Rng) {
+        let m = Manifest::load(
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        )
+        .unwrap();
+        let cfg = m.config("tiny").unwrap().clone();
+        let mut rng = Rng::new(11);
+        let g = GlobalState::init(&cfg, &mut rng);
+        (cfg, g, rng)
+    }
+
+    #[test]
+    fn subspace_init_has_rows_in_s() {
+        let (cfg, g, mut rng) = tiny();
+        for s in 0..cfg.hyper.stages {
+            let st =
+                StageState::init(&cfg, s, Mode::Subspace, &g, &mut rng).unwrap();
+            assert!(
+                st.subspace_leak(&g.u) < 1e-5,
+                "stage {s} leak {}",
+                st.subspace_leak(&g.u)
+            );
+        }
+    }
+
+    #[test]
+    fn raw_init_is_unconstrained() {
+        let (cfg, g, mut rng) = tiny();
+        let st = StageState::init(&cfg, 0, Mode::Raw, &g, &mut rng).unwrap();
+        assert!(st.subspace_leak(&g.u) > 0.1);
+    }
+
+    #[test]
+    fn layernorm_init_is_identity() {
+        let (cfg, g, mut rng) = tiny();
+        let st =
+            StageState::init(&cfg, 0, Mode::Subspace, &g, &mut rng).unwrap();
+        let ln_g = st.param("b0_ln1_g").unwrap();
+        assert!(ln_g.data.iter().all(|&x| x == 1.0));
+        let ln_b = st.param("b0_ln1_b").unwrap();
+        assert!(ln_b.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn param_counts_match_manifest() {
+        let (cfg, g, mut rng) = tiny();
+        let total: usize = (0..cfg.hyper.stages)
+            .map(|s| {
+                StageState::init(&cfg, s, Mode::Subspace, &g, &mut rng)
+                    .unwrap()
+                    .param_count()
+            })
+            .sum();
+        assert_eq!(total, cfg.hyper.param_count);
+    }
+}

@@ -1,0 +1,175 @@
+//! Host-side tensors exchanged with the PJRT runtime.
+//!
+//! The coordinator works in plain `Vec`-backed tensors; conversion to/from
+//! `xla::Literal` happens only at the runtime boundary (runtime/mod.rs).
+
+use std::fmt;
+
+/// Dense f32 tensor (row-major).
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Dense i32 tensor (row-major) — token ids / targets.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+/// A value crossing the runtime boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor),
+    I32(IntTensor),
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Bytes when shipped as f32 over the wire.
+    pub fn wire_bytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    pub fn is_scalar(&self) -> bool {
+        self.shape.is_empty()
+    }
+
+    pub fn item(&self) -> f32 {
+        debug_assert_eq!(self.numel(), 1);
+        self.data[0]
+    }
+
+    /// In-place elementwise add (gradient accumulation across microbatches).
+    pub fn add_assign(&mut self, other: &Tensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// In-place scale (averaging accumulated gradients).
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Matrix rows/cols for 2-D tensors.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.shape.len(), 2, "dims2 on shape {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        let (_, cols) = self.dims2();
+        self.data[r * cols + c]
+    }
+}
+
+impl IntTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        IntTensor { shape, data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+impl Value {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        Value::F32(Tensor::new(shape, data))
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> &Tensor {
+        match self {
+            Value::F32(t) => t,
+            Value::I32(_) => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn into_f32(self) -> Tensor {
+        match self {
+            Value::F32(t) => t,
+            Value::I32(_) => panic!("expected f32 tensor"),
+        }
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}(", self.shape)?;
+        for (i, v) in self.data.iter().take(6).enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{v:.4}")?;
+        }
+        if self.numel() > 6 {
+            write!(f, ", …")?;
+        }
+        write!(f, ")")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_assign_and_scale() {
+        let mut a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(vec![2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        a.add_assign(&b);
+        a.scale(0.5);
+        assert_eq!(a.data, vec![1.0, 1.5, 2.0, 2.5]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let s = Tensor::scalar(3.5);
+        assert!(s.is_scalar());
+        assert_eq!(s.item(), 3.5);
+    }
+
+    #[test]
+    fn wire_bytes_is_4x_numel() {
+        let t = Tensor::zeros(&[3, 5]);
+        assert_eq!(t.wire_bytes(), 60);
+    }
+}
