@@ -1,0 +1,21 @@
+.PHONY: artifacts build test bench clean
+
+# AOT-lower the JAX numerics to HLO text + manifest (needs python/jax).
+# The rust tests look for artifacts under rust/artifacts; the CLI default
+# is ./artifacts, so emit once and symlink.
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../rust/artifacts
+	ln -sfn rust/artifacts artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+clean:
+	cargo clean
+	rm -rf rust/artifacts artifacts results

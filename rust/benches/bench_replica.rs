@@ -1,0 +1,41 @@
+//! Replicated-pipeline benchmarks: cost of the ring all-reduce
+//! simulation and the hybrid makespan bookkeeping at growing replica
+//! counts — L3 overhead that must stay far below stage compute.
+
+use protomodels::bench::{black_box, Bencher};
+use protomodels::compress::Mode;
+use protomodels::coordinator::replica::{simulate_hybrid_step, HybridSimSpec};
+use protomodels::manifest::Hyper;
+use protomodels::netsim::{LinkSpec, ReplicaRing, MBPS};
+use protomodels::rng::Rng;
+
+fn hyper() -> Hyper {
+    Hyper::base_sim()
+}
+
+fn main() {
+    let bench = Bencher::default();
+    let mut rng = Rng::new(11);
+
+    for r in [2usize, 8, 32] {
+        let mut ring = ReplicaRing::new(r, LinkSpec::internet_80m(), &mut rng);
+        bench.run(&format!("ring.all_reduce R={r} 1 MB"), || {
+            black_box(ring.all_reduce(black_box(1_000_000)));
+        });
+    }
+
+    for r in [1usize, 4, 16] {
+        let spec = HybridSimSpec::uniform(hyper(), r, 80.0 * MBPS);
+        bench.run(&format!("simulate_hybrid_step R={r}"), || {
+            black_box(simulate_hybrid_step(black_box(&spec)));
+        });
+    }
+
+    for dp in [Mode::Subspace, Mode::Raw] {
+        let mut spec = HybridSimSpec::uniform(hyper(), 8, 80.0 * MBPS);
+        spec.dp_mode = dp;
+        bench.run(&format!("simulate_hybrid_step R=8 dp={}", dp.as_str()), || {
+            black_box(simulate_hybrid_step(black_box(&spec)));
+        });
+    }
+}

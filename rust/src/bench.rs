@@ -7,16 +7,24 @@
 
 use std::time::Instant;
 
+/// Timing summary of one benchmark.
 pub struct BenchResult {
+    /// benchmark label
     pub name: String,
+    /// measured iterations
     pub iters: usize,
+    /// mean nanoseconds per iteration
     pub mean_ns: f64,
+    /// median nanoseconds per iteration
     pub median_ns: f64,
+    /// 95th-percentile nanoseconds per iteration
     pub p95_ns: f64,
+    /// sample standard deviation, nanoseconds
     pub stddev_ns: f64,
 }
 
 impl BenchResult {
+    /// Print the standard one-line report.
     pub fn report(&self) {
         println!(
             "{:<48} {:>12} {:>12} {:>12}   ({} iters, σ {})",
@@ -35,6 +43,7 @@ impl BenchResult {
     }
 }
 
+/// Human-readable duration from nanoseconds.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.1} ns")
@@ -47,10 +56,13 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// Criterion-style measurement protocol: warmup, then timed iterations.
 pub struct Bencher {
     /// minimum wall-clock seconds of measurement per bench
     pub min_time: f64,
+    /// minimum timed iterations
     pub min_iters: usize,
+    /// hard iteration cap
     pub max_iters: usize,
 }
 
@@ -61,10 +73,12 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Short-window protocol for expensive benchmarks.
     pub fn quick() -> Self {
         Bencher { min_time: 0.3, min_iters: 5, max_iters: 10_000 }
     }
 
+    /// Measure `f`, print the report, and return the summary.
     pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
         // warmup
         let warm_until = Instant::now();

@@ -6,14 +6,18 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
+/// Parsed command-line flags: `--key value` pairs, bare `--switch`es, and
+/// positional arguments.
 #[derive(Debug, Default)]
 pub struct Flags {
     vals: BTreeMap<String, String>,
     switches: Vec<String>,
+    /// non-flag arguments, in order
     pub positional: Vec<String>,
 }
 
 impl Flags {
+    /// Parse raw arguments (excluding the program/subcommand name).
     pub fn parse(args: &[String]) -> Result<Flags> {
         let mut f = Flags::default();
         let mut i = 0;
@@ -36,14 +40,17 @@ impl Flags {
         Ok(f)
     }
 
+    /// String value of `--key`, or `default` when absent.
     pub fn str(&self, key: &str, default: &str) -> String {
         self.vals.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
+    /// String value of `--key`, if present.
     pub fn opt(&self, key: &str) -> Option<&str> {
         self.vals.get(key).map(|s| s.as_str())
     }
 
+    /// Integer value of `--key`, or `default` when absent.
     pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.vals.get(key) {
             None => Ok(default),
@@ -53,6 +60,7 @@ impl Flags {
         }
     }
 
+    /// Float value of `--key`, or `default` when absent.
     pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.vals.get(key) {
             None => Ok(default),
@@ -62,10 +70,30 @@ impl Flags {
         }
     }
 
+    /// Comma-separated float list value of `--key` (e.g.
+    /// `--hetero 1,1,2`), or `None` when absent.
+    pub fn f64_list(&self, key: &str) -> Result<Option<Vec<f64>>> {
+        let Some(v) = self.vals.get(key) else {
+            return Ok(None);
+        };
+        let mut out = Vec::new();
+        for part in v.split(',') {
+            let x: f64 = part.trim().parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "--{key} wants comma-separated numbers, got {v:?}"
+                )
+            })?;
+            out.push(x);
+        }
+        Ok(Some(out))
+    }
+
+    /// Whether the bare switch `--key` was passed.
     pub fn switch(&self, key: &str) -> bool {
         self.switches.iter().any(|s| s == key)
     }
 
+    /// String value of `--key`, erroring when absent.
     pub fn require(&self, key: &str) -> Result<&str> {
         match self.vals.get(key) {
             Some(v) => Ok(v),
@@ -98,5 +126,14 @@ mod tests {
         let f = p(&["--steps", "abc"]);
         assert!(f.usize("steps", 0).is_err());
         assert!(f.require("nope").is_err());
+    }
+
+    #[test]
+    fn float_lists() {
+        let f = p(&["--hetero", "1,1.5, 2"]);
+        assert_eq!(f.f64_list("hetero").unwrap(), Some(vec![1.0, 1.5, 2.0]));
+        assert_eq!(f.f64_list("absent").unwrap(), None);
+        let bad = p(&["--hetero", "1,x"]);
+        assert!(bad.f64_list("hetero").is_err());
     }
 }

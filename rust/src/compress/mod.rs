@@ -15,6 +15,8 @@ use anyhow::{bail, Result};
 
 use crate::tensor::Tensor;
 
+/// Boundary compression scheme (shared vocabulary for activation
+/// payloads and, via [`dp_wire_bytes`], weight-gradient all-reduces).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Mode {
     /// The paper's subspace scheme — (b, n, k) f32 payload, lossless.
@@ -33,6 +35,7 @@ pub enum Mode {
 }
 
 impl Mode {
+    /// Parse a CLI mode label (`"subspace"`, `"raw"`, …).
     pub fn parse(s: &str) -> Result<Mode> {
         Ok(match s {
             "subspace" => Mode::Subspace,
@@ -45,6 +48,7 @@ impl Mode {
         })
     }
 
+    /// Canonical label, matching AOT artifact entry-key prefixes.
     pub fn as_str(&self) -> &'static str {
         match self {
             Mode::Subspace => "subspace",
@@ -56,6 +60,7 @@ impl Mode {
         }
     }
 
+    /// True for schemes that do not reconstruct the payload exactly.
     pub fn is_lossy(&self) -> bool {
         matches!(self, Mode::TopK | Mode::Quant | Mode::PowerLR)
     }
@@ -86,6 +91,31 @@ pub fn wire_bytes(mode: Mode, b: usize, n: usize, d: usize, k: usize, ratio: f64
     }
 }
 
+/// Bytes on the wire for one *weight-gradient* payload of `elems`
+/// parameter elements in the cross-replica all-reduce (data-parallel
+/// axis), priced under the same `Mode` vocabulary as activations:
+///
+/// - `Raw` — dense f32 gradients,
+/// - `Quant` — int8 symmetric quantization + f32 scale,
+/// - `TopK` — (u32 index, f32 value) pairs at the target `ratio`,
+/// - `Subspace`/`NoFixed` — "U-only" gradients: each d-dim row reduced
+///   to its k subspace coefficients (k/d of the elements, the DP analogue
+///   of the boundary scheme; never exceeds `Raw` since k ≤ d),
+/// - `PowerLR` — low-rank factors sized to the target `ratio`.
+pub fn dp_wire_bytes(mode: Mode, elems: usize, d: usize, k: usize, ratio: f64) -> usize {
+    match mode {
+        Mode::Raw => elems * 4,
+        Mode::Quant => elems + 4,
+        Mode::TopK => topk_keep(elems, ratio) * 8,
+        Mode::Subspace | Mode::NoFixed => {
+            ((elems * k + d.max(1) - 1) / d.max(1)) * 4
+        }
+        Mode::PowerLR => {
+            (((elems * 4) as f64 / ratio.max(1.0)).ceil() as usize).max(4) + 8
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // codecs
 // ---------------------------------------------------------------------------
@@ -93,12 +123,16 @@ pub fn wire_bytes(mode: Mode, b: usize, n: usize, d: usize, k: usize, ratio: f64
 /// Encoded wire frame.
 #[derive(Clone, Debug)]
 pub struct Frame {
+    /// scheme this frame was encoded under
     pub mode: Mode,
+    /// logical tensor shape (not serialized; carried out-of-band)
     pub shape: Vec<usize>,
+    /// serialized payload bytes
     pub payload: Vec<u8>,
 }
 
 impl Frame {
+    /// Bytes this frame occupies on the wire.
     pub fn wire_len(&self) -> usize {
         self.payload.len()
     }
@@ -125,6 +159,7 @@ pub fn encode_dense(t: &Tensor, mode: Mode) -> Frame {
     Frame { mode, shape: t.shape.clone(), payload }
 }
 
+/// Decode a dense f32 frame.
 pub fn decode_dense(f: &Frame) -> Tensor {
     Tensor::new(f.shape.clone(), get_f32s(&f.payload))
 }
@@ -149,6 +184,7 @@ pub fn encode_topk(t: &Tensor, ratio: f64) -> Frame {
     Frame { mode: Mode::TopK, shape: t.shape.clone(), payload }
 }
 
+/// Decode a top-k frame back to a (sparse) dense tensor.
 pub fn decode_topk(f: &Frame) -> Tensor {
     let numel = f.shape.iter().product();
     let mut data = vec![0.0f32; numel];
@@ -173,6 +209,7 @@ pub fn encode_quant(t: &Tensor) -> Frame {
     Frame { mode: Mode::Quant, shape: t.shape.clone(), payload }
 }
 
+/// Decode an int8 frame back to f32.
 pub fn decode_quant(f: &Frame) -> Tensor {
     let scale = f32::from_le_bytes([
         f.payload[0],
@@ -200,6 +237,7 @@ pub fn encode(t: &Tensor, mode: Mode, ratio: f64) -> Frame {
     }
 }
 
+/// Decode a frame under its recorded mode.
 pub fn decode(f: &Frame) -> Tensor {
     match f.mode {
         Mode::Subspace | Mode::NoFixed | Mode::Raw | Mode::PowerLR => {
@@ -273,6 +311,20 @@ mod tests {
         // topk / powerlr tuned to match the subspace ratio
         let topk = wire_bytes(Mode::TopK, b, n, d, k, ratio);
         assert!((topk as f64) <= raw as f64 / ratio * 1.1);
+    }
+
+    #[test]
+    fn dp_wire_bytes_table() {
+        let (elems, d, k) = (1_837_056usize, 256usize, 8usize);
+        let ratio = d as f64 / k as f64;
+        let raw = dp_wire_bytes(Mode::Raw, elems, d, k, ratio);
+        assert_eq!(raw, elems * 4);
+        let sub = dp_wire_bytes(Mode::Subspace, elems, d, k, ratio);
+        // k/d of the elements, 4 B each (± rounding)
+        assert!((sub as f64 / raw as f64 - k as f64 / d as f64).abs() < 1e-3);
+        assert!(dp_wire_bytes(Mode::Quant, elems, d, k, ratio) < raw);
+        assert!(dp_wire_bytes(Mode::TopK, elems, d, k, ratio) < raw);
+        assert!(dp_wire_bytes(Mode::PowerLR, elems, d, k, ratio) < raw);
     }
 
     #[test]

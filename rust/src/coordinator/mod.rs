@@ -10,16 +10,22 @@
 //! the coordinator moves tensors between programs, accumulates gradients
 //! across microbatches, and accounts every byte that would cross a link
 //! in the decentralized deployment.
+//!
+//! The [`replica`] module layers synchronous data parallelism on top:
+//! R replicated pipelines sharing one runtime, joined by a ring
+//! all-reduce of per-stage weight gradients over a cross-replica
+//! [`crate::netsim::ReplicaRing`].
 
+pub mod replica;
 pub mod schedule;
 
 use anyhow::{bail, Result};
 
 use crate::compress::{wire_bytes, Mode};
-use crate::manifest::Manifest;
+use crate::manifest::ConfigManifest;
 use crate::netsim::Topology;
 use crate::rng::Rng;
-use crate::runtime::Runtime;
+use crate::runtime::{Runtime, SharedRuntime};
 use crate::stage::{GlobalState, StageState};
 use crate::tensor::{IntTensor, Tensor, Value};
 use crate::timemodel::{stage_seconds, Phase, TimeModel};
@@ -28,6 +34,7 @@ use schedule::{gpipe_makespan, Makespan, StepCosts, Tx};
 /// Run-level configuration of the coordinator.
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
+    /// boundary (activation) compression scheme
     pub mode: Mode,
     /// microbatches per optimizer step (global batch = M · b)
     pub microbatches: usize,
@@ -35,10 +42,15 @@ pub struct PipelineConfig {
     pub grassmann_interval: usize,
     /// base Grassmann step scale (adapted by trace(S) at update time)
     pub grassmann_eta: f64,
+    /// peak AdamW learning rate
     pub lr: f32,
+    /// linear-warmup steps
     pub warmup_steps: usize,
+    /// total steps (drives the linear decay schedule)
     pub total_steps: usize,
+    /// virtual-clock model pricing stage compute
     pub time_model: TimeModel,
+    /// master seed for init / data / netsim streams
     pub seed: u64,
     /// keep the last step's averaged per-stage gradients on the Pipeline
     /// (rank-collapse experiments, Figs. 1/7)
@@ -65,7 +77,9 @@ impl Default for PipelineConfig {
 /// Statistics of one optimizer step.
 #[derive(Clone, Debug)]
 pub struct StepStats {
+    /// 1-based step index after this step
     pub step: u64,
+    /// mean training loss over the step's microbatches
     pub loss: f64,
     /// simulated wall-clock seconds of this step (netsim + time model)
     pub sim_seconds: f64,
@@ -73,15 +87,26 @@ pub struct StepStats {
     pub wire_bytes: u64,
     /// tokens consumed this step
     pub tokens: usize,
+    /// full timing breakdown of the step
     pub makespan: Makespan,
 }
 
+/// One pipeline-parallel training system: P stage workers over a netsim
+/// [`Topology`], driven step-by-step through the shared PJRT runtime.
 pub struct Pipeline {
-    pub rt: Runtime,
+    /// PJRT runtime (shared across replicas in data-parallel runs)
+    pub rt: SharedRuntime,
+    /// config manifest this pipeline was built for (cached off `rt`)
+    pub cm: ConfigManifest,
+    /// stage-to-stage network links
     pub topo: Topology,
+    /// run-level configuration
     pub cfg: PipelineConfig,
+    /// per-stage parameters + optimizer state
     pub stages: Vec<StageState>,
+    /// leader-owned global state (U_k basis, fixed embedding)
     pub global: GlobalState,
+    /// optimizer steps completed
     pub step: u64,
     /// simulated seconds since construction (includes startup broadcast)
     pub clock: f64,
@@ -96,38 +121,51 @@ pub struct Pipeline {
 }
 
 impl Pipeline {
+    /// Build a pipeline with its own private runtime for `config_name`.
     pub fn new(
-        manifest: &Manifest,
+        manifest: &crate::manifest::Manifest,
         config_name: &str,
         topo: Topology,
         cfg: PipelineConfig,
     ) -> Result<Pipeline> {
-        let rt = Runtime::new(manifest, config_name)?;
-        let h = rt.config().hyper.clone();
+        let rt = Runtime::shared(manifest, config_name)?;
+        Pipeline::with_runtime(rt, topo, cfg)
+    }
+
+    /// Build a pipeline on an existing (possibly shared) runtime — the
+    /// replicated-pipeline path, where R replicas share one compiled
+    /// executable cache.
+    pub fn with_runtime(
+        rt: SharedRuntime,
+        topo: Topology,
+        cfg: PipelineConfig,
+    ) -> Result<Pipeline> {
+        let cm = rt.borrow().config().clone();
+        let h = cm.hyper.clone();
         if topo.stages() != h.stages {
             bail!(
                 "topology has {} stages, config {} needs {}",
                 topo.stages(),
-                config_name,
+                cm.name,
                 h.stages
             );
         }
-        if !rt.config().modes.iter().any(|m| m == cfg.mode.as_str()) {
+        if !cm.modes.iter().any(|m| m == cfg.mode.as_str()) {
             bail!(
-                "config {config_name} was not AOT-compiled for mode {:?} \
-                 (have {:?})",
+                "config {} was not AOT-compiled for mode {:?} (have {:?})",
+                cm.name,
                 cfg.mode.as_str(),
-                rt.config().modes
+                cm.modes
             );
         }
         let mut rng = Rng::new(cfg.seed ^ 0x9137);
-        let cm = rt.config().clone();
         let global = GlobalState::init(&cm, &mut rng);
         let stages = (0..h.stages)
             .map(|s| StageState::init(&cm, s, cfg.mode, &global, &mut rng))
             .collect::<Result<Vec<_>>>()?;
         let mut pipe = Pipeline {
             rt,
+            cm,
             topo,
             cfg,
             stages,
@@ -148,8 +186,17 @@ impl Pipeline {
         Ok(pipe)
     }
 
+    /// Re-seed the data/eval RNG stream without touching parameters.
+    /// Replicated data-parallel runs construct every replica from the
+    /// same `cfg.seed` (identical initialization) and then diverge the
+    /// data streams with this — one shard per replica.
+    pub fn reseed_data(&mut self, seed: u64) {
+        self.rng = Rng::new(seed ^ 0xDA7A_5EED);
+    }
+
+    /// Hyperparameters of this pipeline's config.
     pub fn hyper(&self) -> crate::manifest::Hyper {
-        self.rt.config().hyper.clone()
+        self.cm.hyper.clone()
     }
 
     fn key(&self, name: &str) -> String {
@@ -174,7 +221,7 @@ impl Pipeline {
     }
 
     fn boundary_bytes(&self) -> usize {
-        let h = &self.rt.config().hyper;
+        let h = &self.cm.hyper;
         wire_bytes(self.cfg.mode, h.b, h.n, h.d, h.k, h.ratio)
     }
 
@@ -208,6 +255,10 @@ impl Pipeline {
             .collect()
     }
 
+    fn exec_timed(&self, key: &str, args: &[Value]) -> Result<(Vec<Value>, f64)> {
+        self.rt.borrow_mut().execute_timed(key, args)
+    }
+
     /// Forward through stage s for one microbatch; returns (output, secs).
     fn stage_fwd(
         &mut self,
@@ -215,7 +266,7 @@ impl Pipeline {
         tok: &IntTensor,
         input: Option<&Tensor>,
     ) -> Result<(Tensor, f64)> {
-        let h = self.rt.config().hyper.clone();
+        let h = self.cm.hyper.clone();
         let last = h.stages - 1;
         assert!(s < last, "last stage uses last_loss/last_eval");
         let mut args = self.params_of(s);
@@ -228,7 +279,7 @@ impl Pipeline {
             args.push(Value::F32(input.expect("mid stage needs input").clone()));
         }
         let name = if s == 0 { "first_fwd" } else { "mid_fwd" };
-        let (outs, dt) = self.rt.execute_timed(&self.key(name), &args)?;
+        let (outs, dt) = self.exec_timed(&self.key(name), &args)?;
         let out = outs.into_iter().next().unwrap().into_f32();
         let secs = stage_seconds(
             self.cfg.time_model,
@@ -247,7 +298,7 @@ impl Pipeline {
         F: FnMut(&mut Rng) -> (IntTensor, IntTensor),
     {
         let t_host = std::time::Instant::now();
-        let h = self.rt.config().hyper.clone();
+        let h = self.cm.hyper.clone();
         let (p, m_count) = (h.stages, self.cfg.microbatches);
         let last = p - 1;
         let bbytes = self.boundary_bytes();
@@ -289,8 +340,7 @@ impl Pipeline {
             }
             args.push(Value::F32(cur.take().unwrap()));
             args.push(Value::I32(tgt.clone()));
-            let (outs, dt) =
-                self.rt.execute_timed(&self.key("last_loss"), &args)?;
+            let (outs, dt) = self.exec_timed(&self.key("last_loss"), &args)?;
             costs.fwd[last][mb] = stage_seconds(
                 self.cfg.time_model,
                 &h,
@@ -334,8 +384,7 @@ impl Pipeline {
                 }
                 args.push(Value::F32(gc.clone()));
                 let name = if s == 0 { "first_bwd" } else { "mid_bwd" };
-                let (outs, dt) =
-                    self.rt.execute_timed(&self.key(name), &args)?;
+                let (outs, dt) = self.exec_timed(&self.key(name), &args)?;
                 costs.bwd[s][mb] = stage_seconds(
                     self.cfg.time_model,
                     &h,
@@ -406,8 +455,8 @@ impl Pipeline {
         lr: f32,
         t: f32,
     ) -> Result<f64> {
-        let h = self.rt.config().hyper.clone();
-        let kind = self.rt.config().stage_kind(s);
+        let h = self.cm.hyper.clone();
+        let kind = self.cm.stage_kind(s);
         let mut args: Vec<Value> = self.params_of(s);
         args.extend(grads.iter().cloned().map(Value::F32));
         args.extend(self.stages[s].m.iter().cloned().map(Value::F32));
@@ -417,7 +466,7 @@ impl Pipeline {
         }
         args.push(Value::F32(Tensor::scalar(lr)));
         args.push(Value::F32(Tensor::scalar(t)));
-        let (outs, dt) = self.rt.execute_timed(&self.opt_key(kind), &args)?;
+        let (outs, dt) = self.exec_timed(&self.opt_key(kind), &args)?;
         let n = self.stages[s].params.len();
         debug_assert_eq!(outs.len(), 3 * n);
         let mut it = outs.into_iter();
@@ -443,7 +492,7 @@ impl Pipeline {
     /// Riemannian subspace update + re-projection + basis broadcast.
     /// Returns simulated tail seconds added to the step.
     fn grassmann_update(&mut self) -> Result<f64> {
-        let h = self.rt.config().hyper.clone();
+        let h = self.cm.hyper.clone();
         let mut s_avg = self.s_acc.clone();
         s_avg.scale(1.0 / self.s_count as f32);
         // adaptive step: eta ∝ d / tr(S) keeps the step well-scaled as
@@ -454,7 +503,7 @@ impl Pipeline {
         } else {
             0.0
         };
-        let (outs, dt) = self.rt.execute_timed(
+        let (outs, dt) = self.exec_timed(
             "subspace/grassmann_step",
             &[
                 Value::F32(self.global.u.clone()),
@@ -473,13 +522,12 @@ impl Pipeline {
             Some(dt),
         );
         for s in 0..h.stages {
-            let kind = self.rt.config().stage_kind(s);
+            let kind = self.cm.stage_kind(s);
             let mut args: Vec<Value> = self.params_of(s);
             args.extend(self.stages[s].m.iter().cloned().map(Value::F32));
             args.push(Value::F32(self.global.u.clone()));
-            let (outs, dt2) = self
-                .rt
-                .execute_timed(&format!("subspace/reproject_{kind}"), &args)?;
+            let (outs, dt2) =
+                self.exec_timed(&format!("subspace/reproject_{kind}"), &args)?;
             let n = self.stages[s].params.len();
             let mut it = outs.into_iter();
             for i in 0..n {
@@ -509,7 +557,7 @@ impl Pipeline {
     where
         F: FnMut(&mut Rng) -> (IntTensor, IntTensor),
     {
-        let h = self.rt.config().hyper.clone();
+        let h = self.cm.hyper.clone();
         let last = h.stages - 1;
         let mut rng = self.rng.fork(0xE7A1);
         let mut sum = 0.0;
@@ -526,7 +574,7 @@ impl Pipeline {
             }
             args.push(Value::F32(cur.take().unwrap()));
             args.push(Value::I32(tgt));
-            let outs = self.rt.execute(&self.key("last_eval"), &args)?;
+            let (outs, _) = self.exec_timed(&self.key("last_eval"), &args)?;
             sum += outs[0].as_f32().item() as f64;
         }
         Ok(sum / batches.max(1) as f64)
@@ -542,7 +590,7 @@ impl Pipeline {
     where
         F: FnMut(&mut Rng) -> (IntTensor, IntTensor),
     {
-        let h = self.rt.config().hyper.clone();
+        let h = self.cm.hyper.clone();
         let p = h.stages;
         let last = p - 1;
         let bbytes = self.boundary_bytes();
@@ -573,8 +621,7 @@ impl Pipeline {
             }
             args.push(Value::F32(cur.take().unwrap()));
             args.push(Value::I32(tgt));
-            let (_, dt) =
-                self.rt.execute_timed(&self.key("last_eval"), &args)?;
+            let (_, dt) = self.exec_timed(&self.key("last_eval"), &args)?;
             costs.fwd[last][mb] = stage_seconds(
                 self.cfg.time_model,
                 &h,
@@ -596,7 +643,3 @@ impl Pipeline {
             .fold(0.0, f64::max)
     }
 }
-
-// small helper: 0xE7A1 is not valid rust hex — keep a named const
-#[allow(non_upper_case_globals)]
-const _: () = ();

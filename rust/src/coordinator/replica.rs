@@ -1,0 +1,566 @@
+//! Replicated pipelines: data-parallel × model-parallel hybrid.
+//!
+//! Real decentralized deployments (SWARM-style) never run a *single*
+//! pipeline — they replicate it R times and all-reduce weight gradients
+//! across replicas every step. This module adds that axis on top of the
+//! coordinator:
+//!
+//! - [`ReplicaSet`] runs R [`Pipeline`] instances sharing one PJRT
+//!   runtime (compiled executables are cached once, not R times), each
+//!   with its own netsim link samples and data-RNG shard, and joins them
+//!   with a simulated ring all-reduce of per-stage weight gradients over
+//!   a cross-replica [`ReplicaRing`].
+//! - The all-reduce payload is priced under the same [`Mode`] wire
+//!   vocabulary as activations via [`crate::compress::dp_wire_bytes`]
+//!   (raw / quant / topk / subspace-U-only).
+//! - Heterogeneous replicas are modeled by per-replica
+//!   [`TimeModel::scaled`] throughput factors (stragglers).
+//! - The step makespan is `max` over replicas of the pipeline makespan
+//!   plus the *overlapped* all-reduce tail ([`hybrid_makespan`]).
+//!
+//! The analytic half ([`simulate_hybrid_step`]) prices a hybrid step
+//! from the config dimensions alone — no AOT artifacts or PJRT backend
+//! needed — and powers `examples/swarm_replicas.rs`, the `dp-grid`
+//! experiment driver, and the property tests. DESIGN.md §6 documents the
+//! cost model; DESIGN.md §4 lists the simulation substitutions.
+
+use anyhow::{bail, Result};
+
+use crate::compress::{dp_wire_bytes, wire_bytes, Mode};
+use crate::coordinator::schedule::{
+    gpipe_makespan, hybrid_makespan, HybridMakespan, Makespan, StepCosts, Tx,
+};
+use crate::coordinator::{Pipeline, PipelineConfig, StepStats};
+use crate::manifest::{Hyper, Manifest};
+use crate::netsim::{LinkSpec, ReplicaRing, Topology};
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::tensor::{IntTensor, Tensor};
+use crate::timemodel::{stage_param_count, stage_seconds, Phase, TimeModel};
+
+/// Configuration of the data-parallel axis.
+#[derive(Clone, Debug)]
+pub struct ReplicaConfig {
+    /// wire pricing of the weight-gradient all-reduce payload
+    pub dp_mode: Mode,
+    /// per-replica compute slowdown factors (1.0 = nominal; 2.0 = a
+    /// straggler at half throughput). Empty = all nominal.
+    pub slowdown: Vec<f64>,
+}
+
+impl Default for ReplicaConfig {
+    fn default() -> Self {
+        ReplicaConfig { dp_mode: Mode::Subspace, slowdown: Vec::new() }
+    }
+}
+
+impl ReplicaConfig {
+    /// Slowdown factor for replica `r` (1.0 when unspecified).
+    pub fn slowdown_of(&self, r: usize) -> f64 {
+        self.slowdown.get(r).copied().unwrap_or(1.0)
+    }
+}
+
+/// Statistics of one hybrid (replicated) optimizer step.
+#[derive(Clone, Debug)]
+pub struct ReplicaStepStats {
+    /// 1-based step index after this step
+    pub step: u64,
+    /// mean training loss across replicas
+    pub loss: f64,
+    /// simulated wall-clock seconds of the hybrid step
+    pub sim_seconds: f64,
+    /// bytes that crossed pipeline (activation) links, summed over replicas
+    pub wire_bytes: u64,
+    /// bytes that crossed cross-replica (gradient) links this step
+    pub dp_bytes: u64,
+    /// tokens consumed across all replicas (global batch)
+    pub tokens: usize,
+    /// timing breakdown: compute end, comm end, overlapped tail
+    pub makespan: HybridMakespan,
+}
+
+/// R replicated pipelines + the cross-replica gradient ring.
+pub struct ReplicaSet {
+    /// the replicas; identical initial parameters, independent data shards
+    pub pipelines: Vec<Pipeline>,
+    /// cross-replica all-reduce topology
+    pub ring: ReplicaRing,
+    /// data-parallel configuration
+    pub cfg: ReplicaConfig,
+    /// hybrid steps completed
+    pub step: u64,
+    /// simulated seconds since construction
+    pub clock: f64,
+    /// per-stage all-reduce payload bytes under `cfg.dp_mode`
+    stage_payloads: Vec<usize>,
+}
+
+impl ReplicaSet {
+    /// Build R replicas of `config_name` sharing one runtime. `topos`
+    /// supplies each replica's pipeline topology (its length sets R);
+    /// every replica starts from identical parameters (same `pcfg.seed`)
+    /// and then gets its own data shard and straggler factor.
+    pub fn new(
+        manifest: &Manifest,
+        config_name: &str,
+        topos: Vec<Topology>,
+        ring: ReplicaRing,
+        pcfg: PipelineConfig,
+        cfg: ReplicaConfig,
+    ) -> Result<ReplicaSet> {
+        if topos.is_empty() {
+            bail!("replica set needs at least one topology");
+        }
+        if ring.replicas() != topos.len() {
+            bail!(
+                "ring has {} replicas, got {} topologies",
+                ring.replicas(),
+                topos.len()
+            );
+        }
+        if cfg.slowdown.iter().any(|s| !s.is_finite() || *s <= 0.0) {
+            bail!("slowdown factors must be positive, got {:?}", cfg.slowdown);
+        }
+        if cfg.slowdown.iter().any(|s| (*s - 1.0).abs() > 1e-9)
+            && matches!(pcfg.time_model, TimeModel::Measured)
+        {
+            bail!(
+                "heterogeneous replicas need an analytic time model: \
+                 measured wall times are real CPU seconds of this process \
+                 and cannot be scaled per replica"
+            );
+        }
+        let rt = Runtime::shared(manifest, config_name)?;
+        let mut pipelines = Vec::with_capacity(topos.len());
+        for (r, topo) in topos.into_iter().enumerate() {
+            let mut p_cfg = pcfg.clone();
+            p_cfg.time_model = pcfg.time_model.scaled(cfg.slowdown_of(r));
+            let mut pipe = Pipeline::with_runtime(rt.clone(), topo, p_cfg)?;
+            // identical init (same seed), divergent data shards
+            pipe.reseed_data(pcfg.seed ^ ((r as u64 + 1) * 0x9E37_79B9));
+            pipelines.push(pipe);
+        }
+        // exact per-stage parameter counts from the AOT schema (the
+        // analytic stage_param_count approximation is only for the
+        // manifest-free simulate_hybrid_step path)
+        let h = pipelines[0].hyper();
+        let stage_payloads = (0..h.stages)
+            .map(|s| {
+                dp_wire_bytes(
+                    cfg.dp_mode,
+                    pipelines[0].stages[s].param_count(),
+                    h.d,
+                    h.k,
+                    h.ratio,
+                )
+            })
+            .collect();
+        Ok(ReplicaSet {
+            pipelines,
+            ring,
+            cfg,
+            step: 0,
+            clock: 0.0,
+            stage_payloads,
+        })
+    }
+
+    /// Number of replicas.
+    pub fn replicas(&self) -> usize {
+        self.pipelines.len()
+    }
+
+    /// One synchronous hybrid step: every replica runs its pipeline step
+    /// on its own data shard, per-stage weight gradients are all-reduced
+    /// over the ring (simulated; parameters are averaged as the
+    /// numerical equivalent — DESIGN.md §4), and the virtual clock
+    /// advances by the hybrid makespan.
+    pub fn train_step<F>(&mut self, mut sampler: F) -> Result<ReplicaStepStats>
+    where
+        F: FnMut(&mut Rng) -> (IntTensor, IntTensor),
+    {
+        let mut per_replica: Vec<StepStats> =
+            Vec::with_capacity(self.pipelines.len());
+        for pipe in self.pipelines.iter_mut() {
+            per_replica.push(pipe.train_step(&mut sampler)?);
+        }
+        self.average_replicas();
+
+        let makespans: Vec<Makespan> =
+            per_replica.iter().map(|s| s.makespan.clone()).collect();
+        let dp_before = self.ring.total_bytes();
+        let hybrid =
+            hybrid_makespan(&makespans, &self.stage_payloads, &mut self.ring);
+        let dp_bytes = self.ring.total_bytes() - dp_before;
+
+        self.step += 1;
+        self.clock += hybrid.total;
+        Ok(ReplicaStepStats {
+            step: self.step,
+            loss: per_replica.iter().map(|s| s.loss).sum::<f64>()
+                / per_replica.len() as f64,
+            sim_seconds: hybrid.total,
+            wire_bytes: per_replica.iter().map(|s| s.wire_bytes).sum(),
+            dp_bytes,
+            tokens: per_replica.iter().map(|s| s.tokens).sum(),
+            makespan: hybrid,
+        })
+    }
+
+    /// Synchronize replicas after local optimizer steps: average
+    /// parameters and optimizer moments elementwise (the simulation's
+    /// stand-in for gradient all-reduce before the optimizer), and adopt
+    /// replica 0's subspace basis so compressed modes stay consistent
+    /// after Grassmann updates (the basis owner in the paper's protocol).
+    ///
+    /// When Grassmann updates are active, replica bases may have diverged
+    /// this step (each replica accumulates its own GᵀG); averaging
+    /// parameters re-projected onto different bases leaves the mean
+    /// outside the adopted S, so the constrained matrices (and first
+    /// moments) are re-projected onto the leader's basis before the
+    /// broadcast — restoring the closure invariant (DESIGN.md §4).
+    fn average_replicas(&mut self) {
+        let r = self.pipelines.len();
+        if r <= 1 {
+            return;
+        }
+        let scale = 1.0 / r as f32;
+        let (first, rest) = self.pipelines.split_at_mut(1);
+        let leader = &mut first[0];
+        for s in 0..leader.stages.len() {
+            for i in 0..leader.stages[s].params.len() {
+                accumulate_mean(
+                    &mut leader.stages[s].params[i],
+                    rest.iter().map(|p| &p.stages[s].params[i]),
+                    scale,
+                );
+                accumulate_mean(
+                    &mut leader.stages[s].m[i],
+                    rest.iter().map(|p| &p.stages[s].m[i]),
+                    scale,
+                );
+                accumulate_mean(
+                    &mut leader.stages[s].v[i],
+                    rest.iter().map(|p| &p.stages[s].v[i]),
+                    scale,
+                );
+            }
+        }
+        // re-project onto the adopted basis when bases may have diverged
+        // (a no-op when they haven't: S is closed under averaging, so
+        // this only runs when Grassmann maintenance is active)
+        let compressed =
+            matches!(leader.cfg.mode, Mode::Subspace | Mode::NoFixed);
+        if compressed && leader.cfg.grassmann_interval > 0 {
+            for s in 0..leader.stages.len() {
+                for i in 0..leader.stages[s].params.len() {
+                    if !crate::stage::constrained(&leader.stages[s].schema[i].0)
+                    {
+                        continue;
+                    }
+                    leader.stages[s].params[i] = crate::linalg::project_rows(
+                        &leader.stages[s].params[i],
+                        &leader.global.u,
+                    );
+                    leader.stages[s].m[i] = crate::linalg::project_rows(
+                        &leader.stages[s].m[i],
+                        &leader.global.u,
+                    );
+                }
+            }
+        }
+        // broadcast the averaged state (and the leader's basis) back out
+        for p in rest.iter_mut() {
+            for s in 0..p.stages.len() {
+                p.stages[s].params = leader.stages[s].params.clone();
+                p.stages[s].m = leader.stages[s].m.clone();
+                p.stages[s].v = leader.stages[s].v.clone();
+            }
+            p.global = leader.global.clone();
+        }
+    }
+
+    /// Mean validation loss of the (synchronized) model — evaluated on
+    /// replica 0, which holds the averaged parameters.
+    pub fn eval<F>(&mut self, batches: usize, sampler: F) -> Result<f64>
+    where
+        F: FnMut(&mut Rng) -> (IntTensor, IntTensor),
+    {
+        self.pipelines[0].eval(batches, sampler)
+    }
+
+    /// Max subspace leak across replicas (closure diagnostic).
+    pub fn subspace_leak(&self) -> f64 {
+        self.pipelines
+            .iter()
+            .map(|p| p.subspace_leak())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// `dst = dst*scale + Σ others*scale` — elementwise mean across replicas.
+fn accumulate_mean<'a>(
+    dst: &mut Tensor,
+    others: impl Iterator<Item = &'a Tensor>,
+    scale: f32,
+) {
+    dst.scale(scale);
+    for t in others {
+        for (a, b) in dst.data.iter_mut().zip(&t.data) {
+            *a += b * scale;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// analytic hybrid cost model (no artifacts / PJRT needed)
+// ---------------------------------------------------------------------------
+
+/// Inputs to the analytic hybrid-step simulator.
+#[derive(Clone, Debug)]
+pub struct HybridSimSpec {
+    /// model/pipeline dimensions (no manifest required)
+    pub hyper: Hyper,
+    /// microbatches per step
+    pub microbatches: usize,
+    /// activation (boundary) compression mode
+    pub mode: Mode,
+    /// weight-gradient all-reduce pricing mode
+    pub dp_mode: Mode,
+    /// number of pipeline replicas R
+    pub replicas: usize,
+    /// per-replica slowdown factors (empty = all nominal)
+    pub slowdown: Vec<f64>,
+    /// stage-to-stage (pipeline) link spec
+    pub link: LinkSpec,
+    /// cross-replica (ring) link spec
+    pub ring_link: LinkSpec,
+    /// compute-time model (scaled per replica by `slowdown`)
+    pub time_model: TimeModel,
+    /// seed for the netsim sample streams
+    pub seed: u64,
+}
+
+impl HybridSimSpec {
+    /// A ready-to-run spec over uniform consumer links at `bw_bps` for
+    /// both axes, nominal replicas, analytic clock.
+    pub fn uniform(hyper: Hyper, replicas: usize, bw_bps: f64) -> HybridSimSpec {
+        HybridSimSpec {
+            hyper,
+            microbatches: 8,
+            mode: Mode::Subspace,
+            dp_mode: Mode::Subspace,
+            replicas,
+            slowdown: Vec::new(),
+            link: LinkSpec::internet(bw_bps),
+            ring_link: LinkSpec::internet(bw_bps),
+            time_model: TimeModel::default_analytic(),
+            seed: 17,
+        }
+    }
+}
+
+/// Result of one analytic hybrid step.
+#[derive(Clone, Debug)]
+pub struct HybridSimResult {
+    /// timing breakdown (total / compute end / comm end / tail)
+    pub makespan: HybridMakespan,
+    /// gradient bytes each ring link carried
+    pub dp_bytes_per_link: u64,
+    /// activation bytes per pipeline boundary transfer
+    pub boundary_bytes: usize,
+}
+
+/// Price one hybrid step purely from the cost model: per-replica GPipe
+/// makespans (analytic compute + sampled pipeline links) joined by the
+/// overlapped ring all-reduce of per-stage weight gradients. Replica r's
+/// netsim streams depend only on (`seed`, r), so growing R keeps the
+/// existing replicas' samples fixed — makespans are monotone in R by
+/// construction, which the property tests assert.
+pub fn simulate_hybrid_step(spec: &HybridSimSpec) -> HybridSimResult {
+    let h = &spec.hyper;
+    assert!(h.stages >= 2, "pipeline needs >= 2 stages");
+    assert!(spec.replicas >= 1, "need >= 1 replica");
+    assert!(
+        spec.slowdown.iter().all(|s| s.is_finite() && *s > 0.0),
+        "slowdown factors must be positive, got {:?}",
+        spec.slowdown
+    );
+    let compressed = matches!(spec.mode, Mode::Subspace | Mode::NoFixed);
+    let bbytes = wire_bytes(spec.mode, h.b, h.n, h.d, h.k, h.ratio);
+    let (p, m) = (h.stages, spec.microbatches.max(1));
+
+    let mut makespans = Vec::with_capacity(spec.replicas);
+    for r in 0..spec.replicas {
+        let slowdown = spec.slowdown.get(r).copied().unwrap_or(1.0);
+        let tm = spec.time_model.scaled(slowdown);
+        // per-replica stream derived from (seed, r) only — see doc above
+        let mut rng = Rng::new(spec.seed ^ ((r as u64 + 1) * 0x9E37_79B9));
+        let mut topo = Topology::uniform(p, spec.link, &mut rng);
+        let mut costs = StepCosts {
+            stages: p,
+            microbatches: m,
+            fwd: vec![vec![0.0; m]; p],
+            bwd: vec![vec![0.0; m]; p],
+            tx_fwd: vec![vec![Tx::default(); m]; p - 1],
+            tx_bwd: vec![vec![Tx::default(); m]; p - 1],
+            opt: vec![0.0; p],
+            tail: 0.0,
+        };
+        for s in 0..p {
+            let fwd_phase = if s == p - 1 { Phase::LastLoss } else { Phase::Fwd };
+            let fwd = stage_seconds(tm, h, s, fwd_phase, compressed, None);
+            let bwd = if s == p - 1 {
+                0.0 // fused into last_loss
+            } else {
+                stage_seconds(tm, h, s, Phase::Bwd, compressed, None)
+            };
+            for mb in 0..m {
+                costs.fwd[s][mb] = fwd;
+                costs.bwd[s][mb] = bwd;
+                if s + 1 < p {
+                    let (ser, lat) = topo.links[s].sample(bbytes);
+                    costs.tx_fwd[s][mb] = Tx { ser, lat };
+                    let (ser, lat) = topo.links[s].sample(bbytes);
+                    costs.tx_bwd[s][mb] = Tx { ser, lat };
+                }
+            }
+            costs.opt[s] = stage_seconds(tm, h, s, Phase::Opt, compressed, None);
+        }
+        makespans.push(gpipe_makespan(&costs));
+    }
+
+    let stage_payloads: Vec<usize> = (0..p)
+        .map(|s| {
+            dp_wire_bytes(
+                spec.dp_mode,
+                stage_param_count(h, s),
+                h.d,
+                h.k,
+                h.ratio,
+            )
+        })
+        .collect();
+    let mut ring_rng = Rng::new(spec.seed ^ 0x51C6);
+    let mut ring = ReplicaRing::new(spec.replicas, spec.ring_link, &mut ring_rng);
+    let makespan = hybrid_makespan(&makespans, &stage_payloads, &mut ring);
+    let dp_bytes_per_link = ring
+        .links
+        .first()
+        .map(|l| l.bytes_sent)
+        .unwrap_or(0);
+    HybridSimResult { makespan, dp_bytes_per_link, boundary_bytes: bbytes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::MBPS;
+
+    fn hyper() -> Hyper {
+        Hyper::base_sim()
+    }
+
+    /// Deterministic link: no jitter, no latency (tests isolate the
+    /// bandwidth/compute terms; latency is exercised by netsim tests).
+    fn quiet(bw_mbps: f64) -> LinkSpec {
+        LinkSpec {
+            bandwidth_bps: bw_mbps * MBPS,
+            latency_s: 0.0,
+            jitter_frac: 0.0,
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = HybridSimSpec::uniform(hyper(), 4, 80.0 * MBPS);
+        let a = simulate_hybrid_step(&spec).makespan.total;
+        let b = simulate_hybrid_step(&spec).makespan.total;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn makespan_monotone_in_replicas() {
+        let mut prev = 0.0;
+        for r in [1usize, 2, 4, 8] {
+            let mut spec = HybridSimSpec::uniform(hyper(), r, 80.0 * MBPS);
+            spec.link = quiet(80.0);
+            spec.ring_link = quiet(80.0);
+            let t = simulate_hybrid_step(&spec).makespan.total;
+            assert!(
+                t >= prev - 1e-12,
+                "R={r}: makespan {t} < previous {prev}"
+            );
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn subspace_dp_mode_beats_raw_at_low_bandwidth() {
+        let mut spec = HybridSimSpec::uniform(hyper(), 4, 80.0 * MBPS);
+        spec.link = quiet(80.0);
+        spec.ring_link = quiet(80.0);
+        let sub = simulate_hybrid_step(&spec).makespan.total;
+        spec.dp_mode = Mode::Raw;
+        let raw = simulate_hybrid_step(&spec).makespan.total;
+        assert!(
+            sub < raw,
+            "subspace dp {sub} should beat raw dp {raw} at 80 Mbps"
+        );
+    }
+
+    #[test]
+    fn straggler_replica_dominates_makespan() {
+        // compute-bound setting: fat links, so makespan ≈ compute_end
+        let mut spec = HybridSimSpec::uniform(hyper(), 4, 80.0 * MBPS);
+        spec.link = quiet(16_000.0);
+        spec.ring_link = quiet(16_000.0);
+        let nominal = simulate_hybrid_step(&spec).makespan;
+        spec.slowdown = vec![1.0, 1.0, 1.0, 2.0];
+        let straggled = simulate_hybrid_step(&spec).makespan;
+        let factor = straggled.compute_end / nominal.compute_end;
+        assert!(
+            (factor - 2.0).abs() < 0.05,
+            "2x straggler should ~double compute_end, got {factor}"
+        );
+        assert!(straggled.total >= nominal.total);
+    }
+
+    #[test]
+    fn dp_bytes_match_closed_form() {
+        use crate::netsim::ring_allreduce_bytes_per_link;
+        let spec = HybridSimSpec::uniform(hyper(), 4, 80.0 * MBPS);
+        let res = simulate_hybrid_step(&spec);
+        let h = hyper();
+        let expect: u64 = (0..h.stages)
+            .map(|s| {
+                ring_allreduce_bytes_per_link(
+                    4,
+                    dp_wire_bytes(
+                        Mode::Subspace,
+                        stage_param_count(&h, s),
+                        h.d,
+                        h.k,
+                        h.ratio,
+                    ),
+                )
+            })
+            .sum();
+        assert_eq!(res.dp_bytes_per_link, expect);
+    }
+
+    #[test]
+    fn tail_vanishes_on_fast_ring() {
+        let mut spec = HybridSimSpec::uniform(hyper(), 4, 80.0 * MBPS);
+        spec.link = quiet(80.0);
+        spec.ring_link = quiet(1e6); // ~1 Tbps ring
+        let res = simulate_hybrid_step(&spec);
+        assert!(
+            res.makespan.tail < 1e-3 * res.makespan.total,
+            "tail {} vs total {}",
+            res.makespan.tail,
+            res.makespan.total
+        );
+    }
+}

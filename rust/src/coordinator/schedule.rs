@@ -15,14 +15,18 @@
 /// Per-transfer sample: (serialization seconds, propagation latency).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Tx {
+    /// link-occupying serialization seconds (bytes / sampled bandwidth)
     pub ser: f64,
+    /// propagation latency seconds (pipelines away, does not occupy link)
     pub lat: f64,
 }
 
 /// All simulated costs of one optimizer step.
 #[derive(Clone, Debug)]
 pub struct StepCosts {
+    /// pipeline stage count P
     pub stages: usize,
+    /// microbatches per optimizer step M
     pub microbatches: usize,
     /// fwd compute seconds; last stage entries hold the fused last_loss cost
     pub fwd: Vec<Vec<f64>>, // [stage][mb]
@@ -38,8 +42,10 @@ pub struct StepCosts {
     pub tail: f64,
 }
 
+/// Timing summary of one simulated pipeline step.
 #[derive(Clone, Debug, Default)]
 pub struct Makespan {
+    /// simulated wall-clock seconds of the whole step
     pub total: f64,
     /// sum over links of serialization time (comm pressure diagnostic)
     pub comm_ser: f64,
@@ -47,6 +53,10 @@ pub struct Makespan {
     pub compute: f64,
     /// time the critical path spent beyond pure compute (≈ stall + comm)
     pub overhead: f64,
+    /// per-stage instant at which the stage's *last* microbatch gradient
+    /// is complete — the earliest point a cross-replica all-reduce of that
+    /// stage's weight gradients could begin (data-parallel overlap model)
+    pub grad_ready: Vec<f64>,
 }
 
 /// Compute the simulated wall-clock of one step.
@@ -142,11 +152,107 @@ pub fn gpipe_makespan(c: &StepCosts) -> Makespan {
         })
         .fold(0.0, f64::max);
 
+    // stage s's weight gradients are complete when its last microbatch's
+    // backward (fused last_loss for the final stage) finishes
+    let grad_ready: Vec<f64> = (0..p)
+        .map(|s| {
+            if s == p - 1 {
+                done_f[s][m - 1]
+            } else {
+                done_b[s][m - 1]
+            }
+        })
+        .collect();
+
     Makespan {
         total: end,
         comm_ser,
         compute,
         overhead: end - per_stage_max,
+        grad_ready,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// hybrid data-parallel × model-parallel step (replicated pipelines)
+// ---------------------------------------------------------------------------
+
+/// Timing summary of one hybrid step: R replicated pipelines plus the
+/// cross-replica ring all-reduce of per-stage weight gradients.
+#[derive(Clone, Debug, Default)]
+pub struct HybridMakespan {
+    /// simulated wall-clock seconds of the whole hybrid step
+    pub total: f64,
+    /// max over replicas of the pipeline makespan (compute + activation comm)
+    pub compute_end: f64,
+    /// instant the last per-stage gradient all-reduce completes
+    pub comm_end: f64,
+    /// non-overlapped all-reduce seconds appended after `compute_end`
+    pub tail: f64,
+    /// seconds the ring spent on gradient all-reduces: chunk
+    /// serialization plus per-round propagation latency (unlike
+    /// `Link::busy_s`, which counts serialization only)
+    pub allreduce_busy: f64,
+}
+
+/// Combine R per-replica pipeline makespans with a ring all-reduce of the
+/// per-stage weight-gradient payloads (`stage_bytes[s]`), overlapping the
+/// all-reduce with the pipeline drain.
+///
+/// Model: the all-reduce of stage s can start once *every* replica has
+/// finished stage s's last backward (`grad_ready[s]`, synchronous data
+/// parallelism); stages share one ring, so their all-reduces serialize on
+/// it in gradient-ready order. The step ends when both the slowest
+/// pipeline and the last all-reduce are done:
+/// `total = max(max_r total_r, comm_end)` — i.e. the ISSUE's
+/// "max over replicas plus the overlapped all-reduce tail".
+pub fn hybrid_makespan(
+    replicas: &[Makespan],
+    stage_bytes: &[usize],
+    ring: &mut crate::netsim::ReplicaRing,
+) -> HybridMakespan {
+    assert!(!replicas.is_empty(), "hybrid step needs >= 1 replica");
+    let compute_end = replicas.iter().map(|m| m.total).fold(0.0, f64::max);
+    if ring.replicas() <= 1 || stage_bytes.is_empty() {
+        return HybridMakespan {
+            total: compute_end,
+            compute_end,
+            comm_end: 0.0,
+            tail: 0.0,
+            allreduce_busy: 0.0,
+        };
+    }
+    // per-stage start = max over replicas of that stage's gradient-ready
+    // instant (missing entries — e.g. hand-built Makespans — fall back to
+    // 0.0, i.e. "ready immediately": optimistic, can only shorten the
+    // modeled step)
+    let stages = stage_bytes.len();
+    let mut ready: Vec<(f64, usize)> = (0..stages)
+        .map(|s| {
+            let r = replicas
+                .iter()
+                .map(|m| m.grad_ready.get(s).copied().unwrap_or(0.0))
+                .fold(0.0, f64::max);
+            (r, s)
+        })
+        .collect();
+    ready.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut ring_free = 0.0f64;
+    let mut busy = 0.0f64;
+    for (t_ready, s) in ready {
+        let start = t_ready.max(ring_free);
+        let dur = ring.all_reduce(stage_bytes[s]);
+        busy += dur;
+        ring_free = start + dur;
+    }
+    let comm_end = ring_free;
+    let total = compute_end.max(comm_end);
+    HybridMakespan {
+        total,
+        compute_end,
+        comm_end,
+        tail: total - compute_end,
+        allreduce_busy: busy,
     }
 }
 
@@ -226,5 +332,83 @@ mod tests {
         c.tail = 2.0;
         let with = gpipe_makespan(&c).total;
         assert!(with >= base + 5.0 + 2.0 - 1e-9);
+    }
+
+    #[test]
+    fn grad_ready_within_step_and_ordered_sanely() {
+        let ms = gpipe_makespan(&costs(4, 8, 1.0, 3.0, 0.1, 0.01));
+        assert_eq!(ms.grad_ready.len(), 4);
+        for &t in &ms.grad_ready {
+            assert!(t > 0.0 && t <= ms.total);
+        }
+        // stage 0 drains last in GPipe: its gradients are the final ones
+        let max = ms.grad_ready.iter().cloned().fold(0.0, f64::max);
+        assert!((ms.grad_ready[0] - max).abs() < 1e-9);
+    }
+
+    fn quiet_ring(replicas: usize, mbps: f64) -> crate::netsim::ReplicaRing {
+        use crate::netsim::{LinkSpec, ReplicaRing, MBPS};
+        let mut rng = crate::rng::Rng::new(9);
+        let spec = LinkSpec {
+            bandwidth_bps: mbps * MBPS,
+            latency_s: 0.0,
+            jitter_frac: 0.0,
+        };
+        ReplicaRing::new(replicas, spec, &mut rng)
+    }
+
+    #[test]
+    fn hybrid_single_replica_is_pipeline_makespan() {
+        let ms = gpipe_makespan(&costs(3, 4, 1.0, 3.0, 0.0, 0.0));
+        let total = ms.total;
+        let mut ring = quiet_ring(1, 80.0);
+        let h = hybrid_makespan(&[ms], &[1_000_000, 1_000_000, 1_000_000], &mut ring);
+        assert_eq!(h.total, total);
+        assert_eq!(h.tail, 0.0);
+    }
+
+    #[test]
+    fn hybrid_tiny_payload_fully_overlaps() {
+        let ms = gpipe_makespan(&costs(3, 8, 1.0, 3.0, 0.0, 0.0));
+        let mut ring = quiet_ring(4, 1e6); // 1 Tbps: negligible comm
+        let h = hybrid_makespan(&[ms.clone(), ms], &[100, 100, 100], &mut ring);
+        assert!(h.tail < 1e-6, "tail {}", h.tail);
+        assert!((h.total - h.compute_end).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hybrid_huge_payload_dominates() {
+        let ms = gpipe_makespan(&costs(3, 4, 1e-3, 3e-3, 0.0, 0.0));
+        let payload = 100_000_000usize; // 100 MB/stage over 80 Mbps
+        let mut ring = quiet_ring(2, 80.0);
+        let h = hybrid_makespan(
+            &[ms.clone(), ms],
+            &[payload, payload, payload],
+            &mut ring,
+        );
+        // ring all-reduce moves 2·(R−1)/R · B per link; R=2 → B per link,
+        // 3 stages × 100 MB × 8 bits / 80 Mbps = 30 s of serialization
+        assert!(h.comm_end > 29.0, "comm_end {}", h.comm_end);
+        assert!(h.tail > 28.0, "tail {}", h.tail);
+        assert!((h.total - h.comm_end).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hybrid_monotone_in_payload() {
+        let ms = gpipe_makespan(&costs(4, 8, 1.0, 3.0, 0.05, 0.01));
+        let reps = vec![ms.clone(), ms.clone(), ms];
+        let t_small = hybrid_makespan(
+            &reps.clone(),
+            &[10_000; 4],
+            &mut quiet_ring(3, 80.0),
+        )
+        .total;
+        let t_big = hybrid_makespan(
+            &reps,
+            &[10_000_000; 4],
+            &mut quiet_ring(3, 80.0),
+        )
+        .total;
+        assert!(t_big >= t_small, "{t_big} < {t_small}");
     }
 }

@@ -12,6 +12,7 @@
 use crate::rng::{Rng, Zipf};
 use crate::tensor::IntTensor;
 
+/// Which real dataset a synthetic corpus stands in for.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CorpusKind {
     /// WikiText stand-in: moderately structured
@@ -25,6 +26,7 @@ pub enum CorpusKind {
 }
 
 impl CorpusKind {
+    /// Parse a CLI corpus label (several aliases per corpus).
     pub fn parse(s: &str) -> Option<CorpusKind> {
         Some(match s {
             "wiki" | "wikitext" | "wt" => CorpusKind::Wiki,
@@ -35,6 +37,7 @@ impl CorpusKind {
         })
     }
 
+    /// Canonical dataset name (CSV labels).
     pub fn name(&self) -> &'static str {
         match self {
             CorpusKind::Wiki => "wikitext",
@@ -55,9 +58,12 @@ impl CorpusKind {
     }
 }
 
+/// A tokenized corpus with a train/validation split.
 #[derive(Clone)]
 pub struct Corpus {
+    /// which dataset this stands in for
     pub kind: CorpusKind,
+    /// vocabulary size
     pub vocab: usize,
     tokens: Vec<i32>,
     /// [0, split) = train, [split, len) = val
@@ -100,10 +106,12 @@ impl Corpus {
         Corpus { kind, vocab, tokens, split }
     }
 
+    /// Total token count.
     pub fn len(&self) -> usize {
         self.tokens.len()
     }
 
+    /// Whether the corpus has no tokens.
     pub fn is_empty(&self) -> bool {
         self.tokens.is_empty()
     }

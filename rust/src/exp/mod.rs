@@ -12,10 +12,11 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Result};
 
 use crate::compress::Mode;
+use crate::coordinator::replica::{simulate_hybrid_step, HybridSimSpec};
 use crate::coordinator::{Pipeline, PipelineConfig};
 use crate::data::{Corpus, CorpusKind};
 use crate::linalg;
-use crate::manifest::Manifest;
+use crate::manifest::{Hyper, Manifest};
 use crate::memory;
 use crate::metrics::{perplexity, CsvWriter, RunLog};
 use crate::netsim::{LinkSpec, Topology, MBPS};
@@ -26,10 +27,15 @@ use crate::timemodel::TimeModel;
 /// Shared experiment options.
 #[derive(Clone, Debug)]
 pub struct ExpOpts {
+    /// AOT artifact directory (manifest.json + HLO text)
     pub artifacts: PathBuf,
+    /// output directory for CSV series
     pub out_dir: PathBuf,
+    /// shrink presets so the suite runs in minutes on CPU
     pub fast: bool,
+    /// explicit step-count override
     pub steps: Option<usize>,
+    /// master seed
     pub seed: u64,
 }
 
@@ -56,18 +62,8 @@ impl ExpOpts {
 }
 
 fn topo_for(bw: &str, stages: usize, rng: &mut Rng) -> Result<Topology> {
-    let spec = match bw {
-        "100gbps" => LinkSpec::centralized_100g(),
-        "16gbps" => LinkSpec::centralized_16g(),
-        "80mbps" => LinkSpec::internet_80m(),
-        other => {
-            let mbps: f64 = other
-                .trim_end_matches("mbps")
-                .parse()
-                .map_err(|_| anyhow::anyhow!("bad bandwidth {other:?}"))?;
-            LinkSpec::internet(mbps * MBPS)
-        }
-    };
+    let spec = LinkSpec::parse(bw)
+        .ok_or_else(|| anyhow::anyhow!("bad bandwidth {bw:?}"))?;
     Ok(Topology::uniform(stages, spec, rng))
 }
 
@@ -172,6 +168,8 @@ fn run_budget(
 // Figs. 1, 7, 16 — rank collapse
 // ---------------------------------------------------------------------------
 
+/// Figs. 1/7: stable-rank trajectories of constrained weights (or
+/// gradients with `grads`) during non-compressed training.
 pub fn rank_collapse(opts: &ExpOpts, grads: bool) -> Result<()> {
     let m = opts.manifest()?;
     let config = if opts.fast { "tiny" } else { "small" };
@@ -287,6 +285,8 @@ pub fn checkpoint_ranks(opts: &ExpOpts) -> Result<()> {
 // Fig. 2 — convergence in low-bandwidth settings (3 corpora × 3 systems)
 // ---------------------------------------------------------------------------
 
+/// Fig. 2: convergence curves in low-bandwidth settings, three systems
+/// per corpus.
 pub fn convergence_bandwidth(opts: &ExpOpts) -> Result<()> {
     let m = opts.manifest()?;
     let config = if opts.fast { "small" } else { "base" };
@@ -322,6 +322,8 @@ pub fn convergence_bandwidth(opts: &ExpOpts) -> Result<()> {
 // Figs. 3 / 12 — performance against depth
 // ---------------------------------------------------------------------------
 
+/// Figs. 3/12: compressed-vs-centralized performance against pipeline
+/// depth.
 pub fn depth_sweep(opts: &ExpOpts) -> Result<()> {
     let m = opts.manifest()?;
     let steps = opts.steps_or(200, 50);
@@ -353,6 +355,7 @@ pub fn depth_sweep(opts: &ExpOpts) -> Result<()> {
 // Figs. 4 / 13 — throughput gain vs bandwidth (training + inference)
 // ---------------------------------------------------------------------------
 
+/// Figs. 4/13: training + inference throughput gain vs link bandwidth.
 pub fn throughput_sweep(opts: &ExpOpts) -> Result<()> {
     let m = opts.manifest()?;
     let config = if opts.fast { "small" } else { "base" };
@@ -417,6 +420,7 @@ pub fn throughput_sweep(opts: &ExpOpts) -> Result<()> {
 // Fig. 5 — globally distributed regions vs same-region centralized
 // ---------------------------------------------------------------------------
 
+/// Fig. 5: four-region global deployment vs same-region centralized.
 pub fn global_regions(opts: &ExpOpts) -> Result<()> {
     let m = opts.manifest()?;
     let config = if opts.fast { "small" } else { "deep16" };
@@ -487,6 +491,7 @@ pub fn global_regions(opts: &ExpOpts) -> Result<()> {
 // Fig. 6 — lossy compression baselines at matched ratio
 // ---------------------------------------------------------------------------
 
+/// Fig. 6: lossy compression baselines at matched wire ratio.
 pub fn lossy_comparison(opts: &ExpOpts) -> Result<()> {
     let m = opts.manifest()?;
     let config = if opts.fast { "tiny" } else { "small" };
@@ -517,6 +522,7 @@ pub fn lossy_comparison(opts: &ExpOpts) -> Result<()> {
 // Figs. 8/9 — batch-size ablation; Figs. 10/11 — context-length ablation
 // ---------------------------------------------------------------------------
 
+/// Figs. 8/9: batch-size ablation.
 pub fn batch_sweep(opts: &ExpOpts) -> Result<()> {
     let m = opts.manifest()?;
     let config = "small";
@@ -542,6 +548,7 @@ pub fn batch_sweep(opts: &ExpOpts) -> Result<()> {
     Ok(())
 }
 
+/// Figs. 10/11: context-length ablation.
 pub fn context_sweep(opts: &ExpOpts) -> Result<()> {
     let m = opts.manifest()?;
     let steps = opts.steps_or(200, 50);
@@ -571,6 +578,7 @@ pub fn context_sweep(opts: &ExpOpts) -> Result<()> {
 // Fig. 14 — Grassmann subspace updates; Fig. 15 — embedding decomposition
 // ---------------------------------------------------------------------------
 
+/// Fig. 14: Grassmann subspace-update ablation.
 pub fn grassmann_ablation(opts: &ExpOpts) -> Result<()> {
     let m = opts.manifest()?;
     let config = if opts.fast { "tiny" } else { "small" };
@@ -593,6 +601,7 @@ pub fn grassmann_ablation(opts: &ExpOpts) -> Result<()> {
     Ok(())
 }
 
+/// Fig. 15: embedding-decomposition (nofixed) ablation.
 pub fn embedding_ablation(opts: &ExpOpts) -> Result<()> {
     let m = opts.manifest()?;
     let config = "small"; // nofixed entries are compiled for small
@@ -621,6 +630,7 @@ pub fn embedding_ablation(opts: &ExpOpts) -> Result<()> {
 // optimal training
 // ---------------------------------------------------------------------------
 
+/// Table 1: perplexity after a fixed simulated wall-clock budget.
 pub fn table1(opts: &ExpOpts) -> Result<()> {
     let m = opts.manifest()?;
     let config = if opts.fast { "tiny" } else { "small" };
@@ -668,6 +678,7 @@ pub fn table1(opts: &ExpOpts) -> Result<()> {
     Ok(())
 }
 
+/// Table 2: compute-optimal (Chinchilla-ratio) training comparison.
 pub fn table2(opts: &ExpOpts) -> Result<()> {
     let m = opts.manifest()?;
     let config = if opts.fast { "tiny" } else { "small" };
@@ -741,6 +752,7 @@ pub fn table2(opts: &ExpOpts) -> Result<()> {
 // Tables 3 / 4 — memory overhead (analytic model at paper dims)
 // ---------------------------------------------------------------------------
 
+/// Table 3: peak-memory model against sequence length.
 pub fn memory_seqlen(opts: &ExpOpts) -> Result<()> {
     let mut csv = CsvWriter::create(
         opts.out_dir.join("table3_memory_seqlen.csv"),
@@ -760,6 +772,7 @@ pub fn memory_seqlen(opts: &ExpOpts) -> Result<()> {
     Ok(())
 }
 
+/// Table 4: peak-memory model against context-parallel worker count.
 pub fn memory_workers(opts: &ExpOpts) -> Result<()> {
     let mut csv = CsvWriter::create(
         opts.out_dir.join("table4_memory_workers.csv"),
@@ -783,9 +796,65 @@ pub fn memory_workers(opts: &ExpOpts) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// replicated pipelines — bandwidth × replicas hybrid-parallelism grid
+// ---------------------------------------------------------------------------
+
+/// Hybrid data-parallel × model-parallel grid (DESIGN.md §6): for each
+/// (replicas, bandwidth) cell, price one step of R replicated pipelines
+/// with the cross-replica weight-gradient all-reduce under every dp-mode,
+/// using the analytic cost model — no AOT artifacts required. Emits
+/// `fig_dp_grid.csv` with the step makespan, the non-overlapped
+/// all-reduce tail, and the per-link gradient bytes.
+pub fn dp_grid(opts: &ExpOpts) -> Result<()> {
+    let hyper = if opts.fast { Hyper::small_sim() } else { Hyper::base_sim() };
+    let mut csv = CsvWriter::create(
+        opts.out_dir.join("fig_dp_grid.csv"),
+        &[
+            "replicas",
+            "bandwidth_mbps",
+            "dp_mode",
+            "step_seconds",
+            "pipeline_seconds",
+            "allreduce_tail_seconds",
+            "dp_bytes_per_link",
+            "tokens_per_sim_second",
+        ],
+    )?;
+    let replicas: &[usize] = if opts.fast { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    let bws_mbps: &[f64] =
+        if opts.fast { &[80.0, 1000.0] } else { &[10.0, 80.0, 300.0, 1000.0, 16000.0] };
+    for &r in replicas {
+        for &bw in bws_mbps {
+            for dp_mode in [Mode::Subspace, Mode::Quant, Mode::TopK, Mode::Raw] {
+                let mut spec =
+                    HybridSimSpec::uniform(hyper.clone(), r, bw * MBPS);
+                spec.dp_mode = dp_mode;
+                spec.seed = opts.seed;
+                let res = simulate_hybrid_step(&spec);
+                let tokens =
+                    (r * spec.microbatches * hyper.b * hyper.n) as f64;
+                csv.row(&[
+                    r.to_string(),
+                    format!("{bw}"),
+                    dp_mode.as_str().to_string(),
+                    format!("{:.6}", res.makespan.total),
+                    format!("{:.6}", res.makespan.compute_end),
+                    format!("{:.6}", res.makespan.tail),
+                    res.dp_bytes_per_link.to_string(),
+                    format!("{:.1}", tokens / res.makespan.total.max(1e-12)),
+                ])?;
+            }
+        }
+    }
+    csv.finish()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // Theorem B.1 — error accumulation of lossy compression with depth
 // ---------------------------------------------------------------------------
 
+/// Theorem B.1: boundary-error accumulation of lossy schemes with depth.
 pub fn error_accumulation(opts: &ExpOpts) -> Result<()> {
     let m = opts.manifest()?;
     let config = "tiny";
@@ -862,7 +931,9 @@ pub fn error_accumulation(opts: &ExpOpts) -> Result<()> {
 // dispatcher
 // ---------------------------------------------------------------------------
 
+/// Every experiment name `run` accepts (besides the `all` meta-driver).
 pub const ALL: &[&str] = &[
+    "dp-grid",
     "rank-collapse",
     "checkpoint-ranks",
     "convergence-bandwidth",
@@ -881,9 +952,11 @@ pub const ALL: &[&str] = &[
     "error-accumulation",
 ];
 
+/// Run one experiment driver by name (`"all"` runs the full suite).
 pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
     std::fs::create_dir_all(&opts.out_dir)?;
     match name {
+        "dp-grid" => dp_grid(opts),
         "rank-collapse" => rank_collapse(opts, false),
         "rank-collapse-grads" => rank_collapse(opts, true),
         "checkpoint-ranks" => checkpoint_ranks(opts),
@@ -912,6 +985,7 @@ pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
     }
 }
 
+/// Resolve the results directory for a given base path.
 pub fn out_dir_for(base: &Path) -> PathBuf {
     base.to_path_buf()
 }

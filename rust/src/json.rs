@@ -9,7 +9,9 @@ use std::fmt::Write as _;
 
 use anyhow::{anyhow, bail, Result};
 
+/// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
+#[allow(missing_docs)] // variants mirror the JSON grammar
 pub enum Json {
     Null,
     Bool(bool),
@@ -20,6 +22,7 @@ pub enum Json {
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing bytes are an error).
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.ws();
@@ -31,6 +34,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object member by key, erroring when absent.
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
             Json::Obj(m) => m
@@ -40,6 +44,7 @@ impl Json {
         }
     }
 
+    /// Object member by key, if present.
     pub fn opt(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -47,6 +52,7 @@ impl Json {
         }
     }
 
+    /// The string payload, erroring on other kinds.
     pub fn str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -54,6 +60,7 @@ impl Json {
         }
     }
 
+    /// The numeric payload, erroring on other kinds.
     pub fn num(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -61,10 +68,12 @@ impl Json {
         }
     }
 
+    /// The numeric payload truncated to usize.
     pub fn usize(&self) -> Result<usize> {
         Ok(self.num()? as usize)
     }
 
+    /// The array payload, erroring on other kinds.
     pub fn arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -72,6 +81,7 @@ impl Json {
         }
     }
 
+    /// The object payload, erroring on other kinds.
     pub fn obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -79,6 +89,7 @@ impl Json {
         }
     }
 
+    /// Serialize into `out` (compact form, sorted object keys).
     pub fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -132,6 +143,8 @@ impl Json {
         }
     }
 
+    /// Serialize to a compact string.
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

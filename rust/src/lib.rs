@@ -1,19 +1,31 @@
 //! protomodels — Protocol Models reproduction (see DESIGN.md).
+//!
+//! Layer map (README.md has the full module table):
+//! - L1 numerics are AOT-compiled HLO artifacts (python/compile) executed
+//!   through [`runtime`];
+//! - L2 model state lives in [`stage`] / [`manifest`];
+//! - L3 systems — the [`coordinator`] pipeline, its replicated
+//!   data-parallel layer ([`coordinator::replica`]), the [`netsim`]
+//!   substrate, the [`timemodel`] virtual clock and the [`compress`]
+//!   wire accounting — drive everything and are what the experiments in
+//!   [`exp`] measure.
 
+#![warn(missing_docs)]
+
+pub mod bench;
+pub mod cli;
 pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
 pub mod json;
 pub mod linalg;
 pub mod manifest;
+pub mod memory;
+pub mod metrics;
 pub mod netsim;
 pub mod rng;
 pub mod runtime;
-pub mod tensor;
-pub mod coordinator;
-pub mod data;
 pub mod stage;
+pub mod tensor;
 pub mod timemodel;
-pub mod cli;
-pub mod exp;
-pub mod memory;
-pub mod metrics;
-pub mod bench;

@@ -32,6 +32,7 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     Tensor::new(vec![m, n], c)
 }
 
+/// Aᵀ for a 2-D tensor.
 pub fn transpose(a: &Tensor) -> Tensor {
     let (m, n) = a.dims2();
     let mut t = vec![0.0f32; m * n];

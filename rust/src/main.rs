@@ -10,12 +10,13 @@ use anyhow::{bail, Result};
 
 use protomodels::cli::Flags;
 use protomodels::compress::Mode;
+use protomodels::coordinator::replica::{ReplicaConfig, ReplicaSet};
 use protomodels::coordinator::{Pipeline, PipelineConfig};
 use protomodels::data::{Corpus, CorpusKind};
 use protomodels::exp::{self, ExpOpts};
 use protomodels::manifest::Manifest;
 use protomodels::metrics::{perplexity, RunLog};
-use protomodels::netsim::{LinkSpec, Topology, MBPS};
+use protomodels::netsim::{LinkSpec, ReplicaRing, Topology};
 use protomodels::rng::Rng;
 use protomodels::timemodel::TimeModel;
 
@@ -29,36 +30,36 @@ USAGE:
                       [--steps 200] [--microbatches 8] [--corpus wiki|books|web|c4]
                       [--lr 6e-3] [--grassmann 0] [--seed 17]
                       [--time-model analytic|analytic:<TFLOPs>|measured]
+                      [--replicas R] [--dp-mode subspace|raw|topk|quant]
+                      [--dp-bandwidth 80mbps] [--hetero 1,1,2]
                       [--artifacts artifacts] [--out results] [--label NAME]
   protomodels exp     <name|all> [--fast] [--steps N] [--seed N]
                       [--artifacts artifacts] [--out results]
       names: {}
   protomodels inspect [--artifacts artifacts]
   protomodels timing  [--config tiny] [--steps 3]
+
+Replicated runs (--replicas > 1) train R data-parallel pipeline replicas
+and all-reduce weight gradients over a simulated cross-replica ring; the
+payload is priced under --dp-mode and --hetero assigns per-replica
+compute slowdowns (stragglers). See DESIGN.md §6.
 ",
         exp::ALL.join(", ")
     );
     std::process::exit(2)
 }
 
+fn bandwidth_spec(flags: &Flags, key: &str, default: &str) -> Result<LinkSpec> {
+    let bw = flags.str(key, default);
+    LinkSpec::parse(&bw)
+        .ok_or_else(|| anyhow::anyhow!("bad --{key} {bw:?}"))
+}
+
 fn make_topo(flags: &Flags, stages: usize, rng: &mut Rng) -> Result<Topology> {
     if flags.switch("regions") {
         return Ok(Topology::global_regions(stages, rng));
     }
-    let bw = flags.str("bandwidth", "80mbps");
-    let spec = match bw.as_str() {
-        "100gbps" => LinkSpec::centralized_100g(),
-        "16gbps" => LinkSpec::centralized_16g(),
-        "80mbps" => LinkSpec::internet_80m(),
-        other => LinkSpec::internet(
-            other
-                .trim_end_matches("mbps")
-                .parse::<f64>()
-                .map_err(|_| anyhow::anyhow!("bad --bandwidth {other:?}"))?
-                * MBPS,
-        ),
-    };
-    Ok(Topology::uniform(stages, spec, rng))
+    Ok(Topology::uniform(stages, bandwidth_spec(flags, "bandwidth", "80mbps")?, rng))
 }
 
 fn cmd_train(flags: &Flags) -> Result<()> {
@@ -68,8 +69,6 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     let steps = flags.usize("steps", 200)?;
     let seed = flags.usize("seed", 17)? as u64;
     let h = manifest.config(&config)?.hyper.clone();
-    let mut rng = Rng::new(seed);
-    let topo = make_topo(flags, h.stages, &mut rng)?;
     let tm = TimeModel::parse(&flags.str("time-model", "analytic"))
         .ok_or_else(|| anyhow::anyhow!("bad --time-model"))?;
     let pcfg = PipelineConfig {
@@ -85,7 +84,6 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     };
     let corpus_kind = CorpusKind::parse(&flags.str("corpus", "wiki"))
         .ok_or_else(|| anyhow::anyhow!("bad --corpus"))?;
-    let mut pipe = Pipeline::new(&manifest, &config, topo, pcfg)?;
     let corpus = Corpus::synthetic(corpus_kind, h.vocab, 400_000, seed ^ 0xDD);
     let label = flags.str(
         "label",
@@ -95,6 +93,15 @@ fn cmd_train(flags: &Flags) -> Result<()> {
             flags.str("bandwidth", "80mbps")
         ),
     );
+    let replicas = flags.usize("replicas", 1)?;
+    if replicas > 1 {
+        return train_replicated(
+            flags, &manifest, &config, replicas, pcfg, &corpus, &label,
+        );
+    }
+    let mut rng = Rng::new(seed);
+    let topo = make_topo(flags, h.stages, &mut rng)?;
+    let mut pipe = Pipeline::new(&manifest, &config, topo, pcfg)?;
     let mut log = RunLog::create(flags.str("out", "results"), &label)?;
     for step in 0..steps {
         let stats = pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
@@ -117,6 +124,75 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         perplexity(val),
         log.tps(),
         pipe.subspace_leak()
+    );
+    log.finish()?;
+    Ok(())
+}
+
+/// Replicated training: R data-parallel pipeline replicas joined by a
+/// ring all-reduce of weight gradients (--replicas / --dp-mode /
+/// --dp-bandwidth / --hetero).
+fn train_replicated(
+    flags: &Flags,
+    manifest: &Manifest,
+    config: &str,
+    replicas: usize,
+    pcfg: PipelineConfig,
+    corpus: &Corpus,
+    label: &str,
+) -> Result<()> {
+    let h = manifest.config(config)?.hyper.clone();
+    let steps = pcfg.total_steps;
+    let seed = pcfg.seed;
+    let dp_mode = Mode::parse(&flags.str("dp-mode", "subspace"))?;
+    let slowdown = flags.f64_list("hetero")?.unwrap_or_default();
+    if !slowdown.is_empty() && slowdown.len() != replicas {
+        bail!(
+            "--hetero lists {} factors for {replicas} replicas",
+            slowdown.len()
+        );
+    }
+    // positivity and time-model compatibility of the slowdown factors
+    // are validated by ReplicaSet::new
+    let mut rng = Rng::new(seed ^ 0xD9);
+    let topos = (0..replicas)
+        .map(|_| make_topo(flags, h.stages, &mut rng))
+        .collect::<Result<Vec<_>>>()?;
+    let ring_spec = bandwidth_spec(
+        flags,
+        "dp-bandwidth",
+        &flags.str("bandwidth", "80mbps"),
+    )?;
+    let ring = ReplicaRing::new(replicas, ring_spec, &mut rng);
+    let mut set = ReplicaSet::new(
+        manifest,
+        config,
+        topos,
+        ring,
+        pcfg,
+        ReplicaConfig { dp_mode, slowdown },
+    )?;
+    let label = format!("{label}_r{replicas}_{}", dp_mode.as_str());
+    let mut log = RunLog::create(flags.str("out", "results"), &label)?;
+    for step in 0..steps {
+        let s = set.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
+        log.log_parts(s.step, s.loss, s.sim_seconds, s.wire_bytes + s.dp_bytes, s.tokens)?;
+        if step % 10 == 0 || step + 1 == steps {
+            println!(
+                "step {:>5}  loss {:.4}  sim_t {:>9.3}s  act {:>10}B  dp {:>10}B  tail {:>7.4}s",
+                s.step, s.loss, log.sim_time, s.wire_bytes, s.dp_bytes,
+                s.makespan.tail
+            );
+        }
+    }
+    let val = set.eval(8, |r| corpus.val_batch(h.b, h.n, r))?;
+    println!(
+        "final ({} replicas, dp-mode {}): val_loss {:.4}  val_ppl {:.2}  mean_tps {:.1}",
+        set.replicas(),
+        dp_mode.as_str(),
+        val,
+        perplexity(val),
+        log.tps()
     );
     log.finish()?;
     Ok(())
@@ -157,8 +233,8 @@ fn cmd_timing(flags: &Flags) -> Result<()> {
     for _ in 0..steps {
         pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
     }
-    print!("{}", pipe.rt.timing_report());
-    let compute = pipe.rt.total_compute_seconds();
+    print!("{}", pipe.rt.borrow().timing_report());
+    let compute = pipe.rt.borrow().total_compute_seconds();
     println!(
         "total PJRT compute: {compute:.3}s | host coordination: {:.3}s \
          ({:.1}% overhead)",

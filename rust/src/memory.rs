@@ -15,15 +15,23 @@
 /// Model/deployment dimensions for the memory model.
 #[derive(Clone, Copy, Debug)]
 pub struct MemDims {
+    /// transformer blocks hosted per worker
     pub layers_per_worker: usize,
+    /// embedding dim
     pub d: usize,
+    /// MLP hidden dim
     pub d_ff: usize,
+    /// attention heads
     pub heads: usize,
+    /// vocabulary size
     pub vocab: usize,
+    /// subspace rank
     pub k: usize,
     /// per-worker sequence length (context parallel splits L)
     pub seq: usize,
+    /// batch size
     pub batch: usize,
+    /// bytes per activation element (2 = f16, 4 = f32)
     pub dtype_bytes: usize,
 }
 
@@ -91,14 +99,21 @@ pub fn subspace_peak_bytes(m: &MemDims) -> usize {
 /// One Table-3/4 row.
 #[derive(Clone, Debug)]
 pub struct MemRow {
+    /// total sequence length L
     pub seq: usize,
+    /// context-parallel worker count
     pub workers: usize,
+    /// baseline peak memory, GB
     pub baseline_gb: f64,
+    /// subspace-method peak memory, GB
     pub ours_gb: f64,
+    /// absolute overhead, MB
     pub overhead_mb: f64,
+    /// overhead as a fraction of the baseline peak
     pub relative: f64,
 }
 
+/// Compute one Table-3/4 row at the paper's 2B dimensions.
 pub fn table_row(seq_total: usize, workers: usize) -> MemRow {
     // context parallel: each worker holds seq_total / workers tokens
     let m = MemDims::paper_2b(seq_total / workers);

@@ -10,6 +10,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+/// Buffered CSV emitter with a fixed header (one per curve family).
 pub struct CsvWriter {
     path: PathBuf,
     out: BufWriter<File>,
@@ -18,6 +19,7 @@ pub struct CsvWriter {
 }
 
 impl CsvWriter {
+    /// Create the file (and parent dirs) and write the header row.
     pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<CsvWriter> {
         let path = path.as_ref().to_path_buf();
         if let Some(dir) = path.parent() {
@@ -30,6 +32,7 @@ impl CsvWriter {
         Ok(CsvWriter { path, out, cols: header.len(), rows: 0 })
     }
 
+    /// Append one row (must match the header's column count).
     pub fn row(&mut self, vals: &[String]) -> Result<()> {
         debug_assert_eq!(vals.len(), self.cols, "{:?}", self.path);
         writeln!(self.out, "{}", vals.join(","))?;
@@ -37,10 +40,12 @@ impl CsvWriter {
         Ok(())
     }
 
+    /// Append one row of floats.
     pub fn rowf(&mut self, vals: &[f64]) -> Result<()> {
         self.row(&vals.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
     }
 
+    /// Flush and report the written path.
     pub fn finish(mut self) -> Result<PathBuf> {
         self.out.flush()?;
         eprintln!("[metrics] wrote {} rows → {}", self.rows, self.path.display());
@@ -51,15 +56,20 @@ impl CsvWriter {
 /// A training-run log: one row per step.
 pub struct RunLog {
     csv: CsvWriter,
+    /// run label (also the CSV file stem)
     pub label: String,
     /// cumulative simulated seconds
     pub sim_time: f64,
+    /// cumulative tokens consumed
     pub tokens: u64,
+    /// cumulative wire bytes
     pub bytes: u64,
+    /// most recent step's training loss
     pub last_loss: f64,
 }
 
 impl RunLog {
+    /// Create `dir/<label>.csv` with the standard curve columns.
     pub fn create(dir: impl AsRef<Path>, label: &str) -> Result<RunLog> {
         let csv = CsvWriter::create(
             dir.as_ref().join(format!("{label}.csv")),
@@ -83,27 +93,43 @@ impl RunLog {
         })
     }
 
+    /// Log one pipeline step.
     pub fn log(&mut self, s: &crate::coordinator::StepStats) -> Result<()> {
-        self.sim_time += s.sim_seconds;
-        self.tokens += s.tokens as u64;
-        self.bytes += s.wire_bytes;
-        self.last_loss = s.loss;
-        let tps = s.tokens as f64 / s.sim_seconds.max(1e-12);
+        self.log_parts(s.step, s.loss, s.sim_seconds, s.wire_bytes, s.tokens)
+    }
+
+    /// Log one step from raw parts — the shared path for pipeline and
+    /// replicated (data-parallel) step statistics.
+    pub fn log_parts(
+        &mut self,
+        step: u64,
+        loss: f64,
+        sim_seconds: f64,
+        wire_bytes: u64,
+        tokens: usize,
+    ) -> Result<()> {
+        self.sim_time += sim_seconds;
+        self.tokens += tokens as u64;
+        self.bytes += wire_bytes;
+        self.last_loss = loss;
+        let tps = tokens as f64 / sim_seconds.max(1e-12);
         self.csv.row(&[
-            s.step.to_string(),
-            format!("{:.6}", s.loss),
-            format!("{:.6}", s.sim_seconds),
+            step.to_string(),
+            format!("{loss:.6}"),
+            format!("{sim_seconds:.6}"),
             format!("{:.6}", self.sim_time),
-            s.wire_bytes.to_string(),
+            wire_bytes.to_string(),
             self.bytes.to_string(),
             format!("{tps:.2}"),
         ])
     }
 
+    /// Mean tokens per simulated second over the whole run.
     pub fn tps(&self) -> f64 {
         self.tokens as f64 / self.sim_time.max(1e-12)
     }
 
+    /// Flush and close the CSV.
     pub fn finish(self) -> Result<PathBuf> {
         self.csv.finish()
     }
@@ -129,6 +155,20 @@ mod tests {
         let text = std::fs::read_to_string(p).unwrap();
         assert_eq!(text.lines().count(), 3);
         assert!(text.starts_with("a,b\n1,2.5\n"));
+    }
+
+    #[test]
+    fn runlog_accumulates_parts() {
+        let dir = std::env::temp_dir().join("protomodels_test_runlog");
+        let mut log = RunLog::create(&dir, "t").unwrap();
+        log.log_parts(1, 2.0, 0.5, 100, 64).unwrap();
+        log.log_parts(2, 1.5, 0.5, 100, 64).unwrap();
+        assert_eq!(log.tokens, 128);
+        assert_eq!(log.bytes, 200);
+        assert!((log.sim_time - 1.0).abs() < 1e-12);
+        assert!((log.tps() - 128.0).abs() < 1e-9);
+        assert_eq!(log.last_loss, 1.5);
+        log.finish().unwrap();
     }
 
     #[test]

@@ -12,10 +12,12 @@
 
 use crate::rng::Rng;
 
-/// Bits per second helpers.
+/// One megabit per second, in bits/s.
 pub const MBPS: f64 = 1e6;
+/// One gigabit per second, in bits/s.
 pub const GBPS: f64 = 1e9;
 
+/// Nominal characteristics of one network link.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LinkSpec {
     /// nominal bandwidth, bits/s
@@ -27,8 +29,25 @@ pub struct LinkSpec {
 }
 
 impl LinkSpec {
+    /// Link with the paper's default 0.2 jitter fraction.
     pub fn new(bandwidth_bps: f64, latency_s: f64) -> Self {
         LinkSpec { bandwidth_bps, latency_s, jitter_frac: 0.2 }
+    }
+
+    /// Parse a CLI bandwidth label: `"100gbps"` / `"16gbps"` / `"80mbps"`
+    /// map to the named presets, any other `"<N>mbps"` (or bare number,
+    /// in Mbps) to a consumer-internet link at that bandwidth.
+    pub fn parse(s: &str) -> Option<LinkSpec> {
+        Some(match s {
+            "100gbps" => LinkSpec::centralized_100g(),
+            "16gbps" => LinkSpec::centralized_16g(),
+            "80mbps" => LinkSpec::internet_80m(),
+            other => {
+                let mbps: f64 =
+                    other.trim_end_matches("mbps").parse().ok()?;
+                LinkSpec::internet(mbps * MBPS)
+            }
+        })
     }
 
     /// Datacenter-grade 100 Gbps (the paper's "centralized" reference).
@@ -56,17 +75,22 @@ impl LinkSpec {
     }
 }
 
+/// One directed link with jittered bandwidth and cumulative accounting.
 #[derive(Clone, Debug)]
 pub struct Link {
+    /// nominal bandwidth / latency / jitter of this link
     pub spec: LinkSpec,
     rng: Rng,
-    /// cumulative accounting
+    /// cumulative bytes pushed through the link
     pub bytes_sent: u64,
+    /// cumulative transfer count
     pub transfers: u64,
+    /// cumulative serialization (link-busy) seconds
     pub busy_s: f64,
 }
 
 impl Link {
+    /// Link with its own deterministic bandwidth-sample stream.
     pub fn new(spec: LinkSpec, rng: Rng) -> Self {
         Link { spec, rng, bytes_sent: 0, transfers: 0, busy_s: 0.0 }
     }
@@ -101,6 +125,7 @@ impl Link {
 
 /// Geographic region of a stage host (Fig. 5 layout).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[allow(missing_docs)] // variant names are self-describing
 pub enum Region {
     NorthAmerica,
     Europe,
@@ -108,6 +133,7 @@ pub enum Region {
     SouthAmerica,
 }
 
+/// The four regions of the Fig. 5 deployment, in round-robin order.
 pub const ALL_REGIONS: [Region; 4] = [
     Region::NorthAmerica,
     Region::Europe,
@@ -116,6 +142,7 @@ pub const ALL_REGIONS: [Region; 4] = [
 ];
 
 impl Region {
+    /// Short label used in CSV output.
     pub fn name(&self) -> &'static str {
         match self {
             Region::NorthAmerica => "na",
@@ -130,7 +157,9 @@ impl Region {
 /// U_k / T_fixed distribution, which reuses the slowest link).
 #[derive(Clone, Debug)]
 pub struct Topology {
+    /// link i connects stage i to stage i+1
     pub links: Vec<Link>,
+    /// per-stage region assignment (global-regions layouts only)
     pub regions: Option<Vec<Region>>,
 }
 
@@ -169,6 +198,7 @@ impl Topology {
         Topology { links, regions: Some(regions) }
     }
 
+    /// Number of pipeline stages this topology connects.
     pub fn stages(&self) -> usize {
         self.links.len() + 1
     }
@@ -188,15 +218,101 @@ impl Topology {
         t
     }
 
+    /// Cumulative bytes that crossed any pipeline link.
     pub fn total_bytes(&self) -> u64 {
         self.links.iter().map(|l| l.bytes_sent).sum()
     }
 
+    /// Slowest nominal link bandwidth in the topology.
     pub fn min_bandwidth(&self) -> f64 {
         self.links
             .iter()
             .map(|l| l.spec.bandwidth_bps)
             .fold(f64::INFINITY, f64::min)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// cross-replica topology (data-parallel ring)
+// ---------------------------------------------------------------------------
+
+/// Cross-replica topology for replicated pipelines: R peers in a ring
+/// (replica i → (i+1) mod R), the classic bandwidth-optimal layout for a
+/// ring all-reduce of weight gradients. Each directed ring link gets its
+/// own jittered bandwidth stream, like pipeline links.
+#[derive(Clone, Debug)]
+pub struct ReplicaRing {
+    /// the R directed links; empty when R == 1 (no peers, no comm)
+    pub links: Vec<Link>,
+}
+
+/// Closed-form bytes each ring link carries for one all-reduce of a
+/// `bytes`-sized payload: 2·(R−1) rounds of ⌈bytes/R⌉-sized chunks
+/// (reduce-scatter + all-gather).
+pub fn ring_allreduce_bytes_per_link(replicas: usize, bytes: usize) -> u64 {
+    if replicas <= 1 || bytes == 0 {
+        return 0;
+    }
+    let chunk = (bytes + replicas - 1) / replicas;
+    2 * (replicas as u64 - 1) * chunk as u64
+}
+
+impl ReplicaRing {
+    /// Build a ring of `replicas` peers with identical link specs.
+    pub fn new(replicas: usize, spec: LinkSpec, rng: &mut Rng) -> Self {
+        let n = if replicas <= 1 { 0 } else { replicas };
+        let links = (0..n)
+            .map(|i| Link::new(spec, rng.fork(0xD9 + i as u64)))
+            .collect();
+        ReplicaRing { links }
+    }
+
+    /// Number of replicas in the ring (1 when there are no links).
+    pub fn replicas(&self) -> usize {
+        self.links.len().max(1)
+    }
+
+    /// Simulate one ring all-reduce of a `bytes` payload. Every round
+    /// moves one ⌈bytes/R⌉ chunk per link concurrently; the round
+    /// completes when the slowest sampled link finishes, and 2·(R−1)
+    /// rounds complete the reduce-scatter + all-gather. Returns simulated
+    /// seconds (0 for a single replica).
+    pub fn all_reduce(&mut self, bytes: usize) -> f64 {
+        let r = self.replicas();
+        if r <= 1 || bytes == 0 {
+            return 0.0;
+        }
+        let chunk = (bytes + r - 1) / r;
+        let mut total = 0.0;
+        for _round in 0..2 * (r - 1) {
+            let mut slowest = 0.0f64;
+            for l in &mut self.links {
+                let (ser, lat) = l.sample(chunk);
+                slowest = slowest.max(ser + lat);
+            }
+            total += slowest;
+        }
+        total
+    }
+
+    /// Jitter-free expected seconds for one all-reduce of `bytes`.
+    pub fn expected_all_reduce(&self, bytes: usize) -> f64 {
+        let r = self.replicas();
+        if r <= 1 || bytes == 0 {
+            return 0.0;
+        }
+        let chunk = (bytes + r - 1) / r;
+        let per_round = self
+            .links
+            .iter()
+            .map(|l| l.expected_time(chunk))
+            .fold(0.0, f64::max);
+        2.0 * (r - 1) as f64 * per_round
+    }
+
+    /// Cumulative bytes that crossed any ring link.
+    pub fn total_bytes(&self) -> u64 {
+        self.links.iter().map(|l| l.bytes_sent).sum()
     }
 }
 
@@ -259,5 +375,62 @@ mod tests {
         topo.broadcast(500);
         assert_eq!(topo.total_bytes(), 1000 + 2000 + 3 * 500);
         assert_eq!(topo.stages(), 4);
+    }
+
+    #[test]
+    fn parse_bandwidth_labels() {
+        assert_eq!(
+            LinkSpec::parse("100gbps").unwrap(),
+            LinkSpec::centralized_100g()
+        );
+        assert_eq!(
+            LinkSpec::parse("80mbps").unwrap(),
+            LinkSpec::internet_80m()
+        );
+        let l = LinkSpec::parse("250mbps").unwrap();
+        assert!((l.bandwidth_bps - 250.0 * MBPS).abs() < 1.0);
+        assert!(LinkSpec::parse("fastish").is_none());
+    }
+
+    #[test]
+    fn ring_bytes_match_closed_form() {
+        for (r, bytes) in [(2usize, 1_000_000usize), (4, 999_999), (8, 12_345)] {
+            let mut rng = Rng::new(6);
+            let mut ring =
+                ReplicaRing::new(r, LinkSpec::internet_80m(), &mut rng);
+            let t = ring.all_reduce(bytes);
+            assert!(t > 0.0);
+            let per_link = ring_allreduce_bytes_per_link(r, bytes);
+            for l in &ring.links {
+                assert_eq!(l.bytes_sent, per_link, "R={r}");
+            }
+            assert_eq!(ring.total_bytes(), per_link * r as u64);
+        }
+    }
+
+    #[test]
+    fn single_replica_ring_is_free() {
+        let mut rng = Rng::new(7);
+        let mut ring = ReplicaRing::new(1, LinkSpec::internet_80m(), &mut rng);
+        assert_eq!(ring.replicas(), 1);
+        assert_eq!(ring.all_reduce(1_000_000), 0.0);
+        assert_eq!(ring_allreduce_bytes_per_link(1, 1_000_000), 0);
+        assert_eq!(ring.total_bytes(), 0);
+    }
+
+    #[test]
+    fn expected_allreduce_grows_with_replicas() {
+        // per-link traffic 2(R−1)/R · B grows in R → so does the expected
+        // all-reduce time at fixed per-link bandwidth
+        let mut rng = Rng::new(8);
+        let spec = LinkSpec { bandwidth_bps: 80.0 * MBPS, latency_s: 0.0, jitter_frac: 0.0 };
+        let b = 10_000_000;
+        let mut prev = 0.0;
+        for r in [1usize, 2, 4, 8] {
+            let ring = ReplicaRing::new(r, spec, &mut rng);
+            let t = ring.expected_all_reduce(b);
+            assert!(t >= prev, "R={r}: {t} < {prev}");
+            prev = t;
+        }
     }
 }

@@ -4,6 +4,7 @@
 //! a Zipf sampler powers the synthetic corpus. Every run is reproducible
 //! from a single u64 seed.
 
+/// Deterministic xoshiro256++ generator with normal/uniform helpers.
 #[derive(Clone, Debug)]
 pub struct Rng {
     s: [u64; 4],
@@ -20,6 +21,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Generator seeded via SplitMix64 expansion of `seed`.
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         Rng {
@@ -38,6 +40,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[0]
@@ -85,6 +88,7 @@ impl Rng {
         (mu + sigma * self.normal()).max(floor)
     }
 
+    /// `n` independent N(0, std²) samples as f32.
     pub fn normal_f32_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
         (0..n).map(|_| self.normal() as f32 * std).collect()
     }
@@ -98,6 +102,7 @@ pub struct Zipf {
 }
 
 impl Zipf {
+    /// Zipf(s) distribution over `[0, n)` with precomputed CDF.
     pub fn new(n: usize, s: f64) -> Self {
         let mut cdf = Vec::with_capacity(n);
         let mut acc = 0.0;
@@ -112,6 +117,7 @@ impl Zipf {
         Zipf { cdf }
     }
 
+    /// Draw one index.
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let u = rng.uniform();
         match self

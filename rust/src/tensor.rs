@@ -8,38 +8,48 @@ use std::fmt;
 /// Dense f32 tensor (row-major).
 #[derive(Clone, PartialEq)]
 pub struct Tensor {
+    /// logical dimensions (empty = scalar)
     pub shape: Vec<usize>,
+    /// row-major elements
     pub data: Vec<f32>,
 }
 
 /// Dense i32 tensor (row-major) — token ids / targets.
 #[derive(Clone, Debug, PartialEq)]
 pub struct IntTensor {
+    /// logical dimensions
     pub shape: Vec<usize>,
+    /// row-major elements
     pub data: Vec<i32>,
 }
 
 /// A value crossing the runtime boundary.
 #[derive(Clone, Debug)]
 pub enum Value {
+    /// float tensor
     F32(Tensor),
+    /// integer tensor
     I32(IntTensor),
 }
 
 impl Tensor {
+    /// Tensor from shape + row-major data (lengths must agree).
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
         debug_assert_eq!(shape.iter().product::<usize>(), data.len());
         Tensor { shape, data }
     }
 
+    /// All-zeros tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
     }
 
+    /// Rank-0 (scalar) tensor.
     pub fn scalar(v: f32) -> Self {
         Tensor { shape: vec![], data: vec![v] }
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.data.len()
     }
@@ -49,10 +59,12 @@ impl Tensor {
         self.numel() * 4
     }
 
+    /// Whether this is a rank-0 tensor.
     pub fn is_scalar(&self) -> bool {
         self.shape.is_empty()
     }
 
+    /// The single element of a scalar tensor.
     pub fn item(&self) -> f32 {
         debug_assert_eq!(self.numel(), 1);
         self.data[0]
@@ -73,10 +85,12 @@ impl Tensor {
         }
     }
 
+    /// Frobenius norm (flat L2).
     pub fn frobenius_norm(&self) -> f32 {
         self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
     }
 
+    /// Largest absolute element (0 for empty tensors).
     pub fn max_abs(&self) -> f32 {
         self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
     }
@@ -87,6 +101,7 @@ impl Tensor {
         (self.shape[0], self.shape[1])
     }
 
+    /// Element (r, c) of a 2-D tensor.
     pub fn at2(&self, r: usize, c: usize) -> f32 {
         let (_, cols) = self.dims2();
         self.data[r * cols + c]
@@ -94,21 +109,25 @@ impl Tensor {
 }
 
 impl IntTensor {
+    /// Tensor from shape + row-major data (lengths must agree).
     pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
         debug_assert_eq!(shape.iter().product::<usize>(), data.len());
         IntTensor { shape, data }
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.data.len()
     }
 }
 
 impl Value {
+    /// Convenience constructor for a float value.
     pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
         Value::F32(Tensor::new(shape, data))
     }
 
+    /// Shape of the wrapped tensor.
     pub fn shape(&self) -> &[usize] {
         match self {
             Value::F32(t) => &t.shape,
@@ -116,6 +135,7 @@ impl Value {
         }
     }
 
+    /// Borrow as a float tensor (panics on i32 values).
     pub fn as_f32(&self) -> &Tensor {
         match self {
             Value::F32(t) => t,
@@ -123,6 +143,7 @@ impl Value {
         }
     }
 
+    /// Unwrap into a float tensor (panics on i32 values).
     pub fn into_f32(self) -> Tensor {
         match self {
             Value::F32(t) => t,

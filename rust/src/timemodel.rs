@@ -11,6 +11,7 @@
 
 use crate::manifest::Hyper;
 
+/// How stage compute time is priced on the virtual clock.
 #[derive(Clone, Copy, Debug)]
 pub enum TimeModel {
     /// real PJRT execution seconds measured in this process
@@ -20,6 +21,7 @@ pub enum TimeModel {
 }
 
 impl TimeModel {
+    /// Parse a CLI label: `"measured"`, `"analytic"`, `"analytic:<TFLOPs>"`.
     pub fn parse(s: &str) -> Option<TimeModel> {
         if s == "measured" {
             return Some(TimeModel::Measured);
@@ -41,6 +43,20 @@ impl TimeModel {
     /// config reproduces that at ≈ 2 TFLOP/s). See DESIGN.md §4.
     pub fn default_analytic() -> TimeModel {
         TimeModel::Analytic { device_flops: 2e12 }
+    }
+
+    /// Scale this model for a heterogeneous replica: a `slowdown` of 2.0
+    /// models a straggler with half the effective throughput. Only the
+    /// analytic model scales; `Measured` times are real wall-clock of
+    /// *this* process and cannot be re-attributed, so they pass through
+    /// (replicated straggler experiments should use analytic models).
+    pub fn scaled(self, slowdown: f64) -> TimeModel {
+        match self {
+            TimeModel::Measured => TimeModel::Measured,
+            TimeModel::Analytic { device_flops } => TimeModel::Analytic {
+                device_flops: device_flops / slowdown.max(1e-9),
+            },
+        }
     }
 }
 
@@ -96,29 +112,30 @@ pub fn stage_flops(h: &Hyper, stage: usize, phase: Phase, compressed: bool) -> f
         Phase::LastLoss => 3.0 * fwd,
         Phase::Opt => {
             // elementwise AdamW ≈ 12 flops/param + W_p1 projection 2·d·d·k
-            let params: f64 = (0..1)
-                .map(|_| 0.0)
-                .sum::<f64>()
-                + 12.0 * stage_param_flops_proxy(h, stage)
+            12.0 * stage_param_count(h, stage) as f64
                 + if compressed {
                     2.0 * (h.d * h.d * h.k) as f64
                 } else {
                     0.0
-                };
-            params
+                }
         }
         Phase::Grassmann => 4.0 * (h.d * h.d * h.k) as f64,
     }
 }
 
-fn stage_param_flops_proxy(h: &Hyper, stage: usize) -> f64 {
-    let block = (4 * h.d * h.d + 2 * h.d * h.d_ff + 4 * h.d) as f64;
-    let mut p = h.blocks_per_stage as f64 * block;
+/// Analytic per-stage parameter element count, derived from the config
+/// dimensions alone (no manifest needed): blocks (4 d² attention + 2 d·d_ff
+/// MLP + 4 d norms), plus the embedding table on stage 0 and the final
+/// norm + LM head on the last stage. Sizes the data-parallel gradient
+/// all-reduce payloads in `coordinator::replica`.
+pub fn stage_param_count(h: &Hyper, stage: usize) -> usize {
+    let block = 4 * h.d * h.d + 2 * h.d * h.d_ff + 4 * h.d;
+    let mut p = h.blocks_per_stage * block;
     if stage == 0 {
-        p += (h.vocab * h.d) as f64;
+        p += h.vocab * h.d;
     }
     if stage == h.stages - 1 {
-        p += (h.vocab * h.d + 2 * h.d) as f64;
+        p += h.vocab * h.d + 2 * h.d;
     }
     p
 }
@@ -219,6 +236,34 @@ mod tests {
             None,
         );
         assert!((slow / fast - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scaled_slowdown_scales_seconds() {
+        let h = hyper();
+        let base = stage_seconds(
+            TimeModel::default_analytic(), &h, 1, Phase::Fwd, true, None,
+        );
+        let slow = stage_seconds(
+            TimeModel::default_analytic().scaled(2.0),
+            &h, 1, Phase::Fwd, true, None,
+        );
+        assert!((slow / base - 2.0).abs() < 1e-9);
+        // Measured passes through unscaled
+        assert!(matches!(
+            TimeModel::Measured.scaled(3.0),
+            TimeModel::Measured
+        ));
+    }
+
+    #[test]
+    fn stage_param_counts_cover_embedding_and_head() {
+        let h = hyper();
+        let mid = stage_param_count(&h, 1);
+        assert!(stage_param_count(&h, 0) > mid, "stage 0 owns t_s");
+        assert!(stage_param_count(&h, h.stages - 1) > mid, "last owns head");
+        let block = 4 * h.d * h.d + 2 * h.d * h.d_ff + 4 * h.d;
+        assert_eq!(mid, h.blocks_per_stage * block);
     }
 
     #[test]

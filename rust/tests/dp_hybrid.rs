@@ -1,0 +1,173 @@
+//! End-to-end tests of the replicated-pipeline (data-parallel ×
+//! model-parallel) cost model — the analytic path, which needs neither
+//! AOT artifacts nor a PJRT backend.
+
+use protomodels::compress::{dp_wire_bytes, Mode};
+use protomodels::coordinator::replica::{simulate_hybrid_step, HybridSimSpec};
+use protomodels::manifest::Hyper;
+use protomodels::netsim::{
+    ring_allreduce_bytes_per_link, LinkSpec, ReplicaRing, MBPS,
+};
+use protomodels::rng::Rng;
+use protomodels::timemodel::stage_param_count;
+
+fn hyper() -> Hyper {
+    Hyper::base_sim()
+}
+
+/// Deterministic link (no jitter) so the assertions are exact.
+fn quiet(bw_mbps: f64, latency_s: f64) -> LinkSpec {
+    LinkSpec { bandwidth_bps: bw_mbps * MBPS, latency_s, jitter_frac: 0.0 }
+}
+
+fn spec(replicas: usize, bw_mbps: f64, dp_mode: Mode) -> HybridSimSpec {
+    let mut s = HybridSimSpec::uniform(hyper(), replicas, bw_mbps * MBPS);
+    s.link = quiet(bw_mbps, 2e-3);
+    s.ring_link = quiet(bw_mbps, 2e-3);
+    s.dp_mode = dp_mode;
+    s
+}
+
+#[test]
+fn makespan_monotone_in_replica_count() {
+    for dp_mode in [Mode::Subspace, Mode::Raw] {
+        let mut prev = 0.0;
+        for r in [1usize, 2, 3, 4, 6, 8] {
+            let t = simulate_hybrid_step(&spec(r, 80.0, dp_mode))
+                .makespan
+                .total;
+            assert!(
+                t >= prev - 1e-12,
+                "{dp_mode:?} R={r}: {t} < {prev} (makespan must be \
+                 non-decreasing in R)"
+            );
+            prev = t;
+        }
+    }
+}
+
+#[test]
+fn subspace_dp_beats_raw_at_consumer_bandwidth() {
+    // acceptance: at 80 Mbps the dp=subspace hybrid must finish the step
+    // strictly faster than dp=raw (the gradient payload is d/k smaller)
+    for r in [2usize, 4, 8] {
+        let sub = simulate_hybrid_step(&spec(r, 80.0, Mode::Subspace))
+            .makespan
+            .total;
+        let raw = simulate_hybrid_step(&spec(r, 80.0, Mode::Raw))
+            .makespan
+            .total;
+        assert!(sub < raw, "R={r}: subspace {sub} !< raw {raw}");
+    }
+}
+
+#[test]
+fn dp_modes_converge_at_datacenter_bandwidth() {
+    // at 16 Gbps the all-reduce mostly overlaps with the pipeline drain:
+    // the dp-mode gap shrinks dramatically vs consumer bandwidth
+    let sub_dc = simulate_hybrid_step(&spec(4, 16_000.0, Mode::Subspace)).makespan;
+    let raw_dc = simulate_hybrid_step(&spec(4, 16_000.0, Mode::Raw)).makespan;
+    let raw_slow = simulate_hybrid_step(&spec(4, 80.0, Mode::Raw)).makespan;
+    assert!(
+        (raw_dc.total - sub_dc.total) / sub_dc.total < 0.5,
+        "16 Gbps: raw {} should be close to subspace {}",
+        raw_dc.total,
+        sub_dc.total
+    );
+    assert!(
+        raw_dc.tail < raw_slow.tail / 10.0,
+        "raw dp tail must collapse at datacenter bandwidth: {} vs {}",
+        raw_dc.tail,
+        raw_slow.tail
+    );
+}
+
+#[test]
+fn straggler_degrades_by_predicted_factor() {
+    // compute-bound, zero-latency setting: a 2x-slower replica must
+    // degrade the hybrid step by ~2x (the max over replicas)
+    let mut nominal = spec(4, 16_000.0, Mode::Subspace);
+    nominal.link = quiet(16_000.0, 0.0);
+    nominal.ring_link = quiet(16_000.0, 0.0);
+    let t0 = simulate_hybrid_step(&nominal).makespan.total;
+    for slow in [1.5f64, 2.0, 4.0] {
+        let mut s = nominal.clone();
+        s.slowdown = vec![1.0, 1.0, 1.0, slow];
+        let t = simulate_hybrid_step(&s).makespan.total;
+        let factor = t / t0;
+        assert!(
+            (factor - slow).abs() < 0.1 * slow,
+            "slowdown {slow}: observed {factor}"
+        );
+    }
+}
+
+#[test]
+fn straggler_position_is_irrelevant() {
+    let mut a = spec(4, 300.0, Mode::Subspace);
+    a.slowdown = vec![2.0, 1.0, 1.0, 1.0];
+    let mut b = spec(4, 300.0, Mode::Subspace);
+    b.slowdown = vec![1.0, 1.0, 1.0, 2.0];
+    // jitter-free links: both placements see identical per-replica costs,
+    // so the max over replicas is the same
+    let ta = simulate_hybrid_step(&a).makespan.total;
+    let tb = simulate_hybrid_step(&b).makespan.total;
+    assert!((ta - tb).abs() < 1e-9, "{ta} vs {tb}");
+}
+
+#[test]
+fn dp_byte_accounting_matches_closed_form() {
+    let h = hyper();
+    for (r, dp_mode) in [(2usize, Mode::Raw), (4, Mode::Subspace), (8, Mode::Quant)] {
+        let res = simulate_hybrid_step(&spec(r, 80.0, dp_mode));
+        let expect: u64 = (0..h.stages)
+            .map(|s| {
+                ring_allreduce_bytes_per_link(
+                    r,
+                    dp_wire_bytes(
+                        dp_mode,
+                        stage_param_count(&h, s),
+                        h.d,
+                        h.k,
+                        h.ratio,
+                    ),
+                )
+            })
+            .sum();
+        assert_eq!(res.dp_bytes_per_link, expect, "R={r} {dp_mode:?}");
+    }
+}
+
+#[test]
+fn ring_allreduce_time_matches_expectation_without_jitter() {
+    let mut rng = Rng::new(3);
+    let spec_l = quiet(80.0, 0.0);
+    for r in [2usize, 4, 8] {
+        let mut ring = ReplicaRing::new(r, spec_l, &mut rng);
+        let bytes = 8_000_000usize;
+        let expected = ring.expected_all_reduce(bytes);
+        let simulated = ring.all_reduce(bytes);
+        assert!(
+            (simulated - expected).abs() < 1e-9,
+            "R={r}: {simulated} vs {expected}"
+        );
+        // closed form: 2(R−1) rounds of ceil(B/R) over 10 MB/s
+        let chunk = (bytes + r - 1) / r;
+        let manual = 2.0 * (r - 1) as f64 * (chunk as f64 * 8.0) / (80.0 * MBPS);
+        assert!((simulated - manual).abs() < 1e-9, "R={r}");
+    }
+}
+
+#[test]
+fn hetero_tail_interplay_is_consistent() {
+    // a straggler delays gradient readiness, so the absolute comm_end
+    // grows, but the *tail* (non-overlapped part) cannot grow relative to
+    // a zero-compute baseline: tail <= full serial all-reduce time
+    let mut s = spec(4, 80.0, Mode::Raw);
+    s.slowdown = vec![1.0, 1.0, 1.0, 2.0];
+    let res = simulate_hybrid_step(&s);
+    assert!(res.makespan.tail >= 0.0);
+    assert!(res.makespan.total >= res.makespan.compute_end);
+    assert!(res.makespan.comm_end <= res.makespan.total + 1e-12);
+    assert!(res.makespan.tail <= res.makespan.allreduce_busy + 1e-9);
+}

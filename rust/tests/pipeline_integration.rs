@@ -1,5 +1,9 @@
 //! End-to-end integration: the rust coordinator driving real PJRT
 //! executions of the AOT artifacts (tiny config).
+//!
+//! These tests need both the AOT artifacts (`make artifacts`) and a real
+//! PJRT backend (not the offline `xla` stub); they self-skip otherwise
+//! via the `gate!` macro so `cargo test` stays green everywhere.
 
 use protomodels::compress::Mode;
 use protomodels::coordinator::{Pipeline, PipelineConfig};
@@ -7,7 +11,31 @@ use protomodels::data::{Corpus, CorpusKind};
 use protomodels::manifest::Manifest;
 use protomodels::netsim::{LinkSpec, Topology};
 use protomodels::rng::Rng;
+use protomodels::runtime::Runtime;
 use protomodels::timemodel::TimeModel;
+
+fn can_execute() -> bool {
+    let have_artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists();
+    if !have_artifacts {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return false;
+    }
+    if !Runtime::backend_available() {
+        eprintln!("skipping: offline xla stub linked (no PJRT backend)");
+        return false;
+    }
+    true
+}
+
+macro_rules! gate {
+    () => {
+        if !can_execute() {
+            return;
+        }
+    };
+}
 
 fn manifest() -> Manifest {
     Manifest::load(
@@ -39,6 +67,7 @@ fn mk_pipeline(mode: Mode, grassmann: usize, seed: u64) -> (Pipeline, Corpus) {
 
 #[test]
 fn subspace_training_reduces_loss() {
+    gate!();
     let (mut pipe, corpus) = mk_pipeline(Mode::Subspace, 0, 1);
     let h = pipe.hyper();
     let mut first = None;
@@ -62,6 +91,7 @@ fn subspace_training_reduces_loss() {
 
 #[test]
 fn subspace_closure_maintained_through_training() {
+    gate!();
     let (mut pipe, corpus) = mk_pipeline(Mode::Subspace, 0, 2);
     let h = pipe.hyper();
     for _ in 0..10 {
@@ -73,6 +103,7 @@ fn subspace_closure_maintained_through_training() {
 
 #[test]
 fn raw_training_reduces_loss_and_costs_more_wire() {
+    gate!();
     let (mut pipe_raw, corpus) = mk_pipeline(Mode::Raw, 0, 3);
     let (mut pipe_sub, _) = mk_pipeline(Mode::Subspace, 0, 3);
     let h = pipe_raw.hyper();
@@ -102,6 +133,7 @@ fn raw_training_reduces_loss_and_costs_more_wire() {
 
 #[test]
 fn grassmann_update_executes_and_preserves_closure() {
+    gate!();
     let (mut pipe, corpus) = mk_pipeline(Mode::Subspace, 3, 4);
     let h = pipe.hyper();
     let u_before = pipe.global.u.clone();
@@ -135,6 +167,7 @@ fn grassmann_update_executes_and_preserves_closure() {
 
 #[test]
 fn eval_and_inference_paths_work() {
+    gate!();
     let (mut pipe, corpus) = mk_pipeline(Mode::Subspace, 0, 5);
     let h = pipe.hyper();
     let loss = pipe.eval(3, |r| corpus.val_batch(h.b, h.n, r)).unwrap();
@@ -148,6 +181,7 @@ fn eval_and_inference_paths_work() {
 
 #[test]
 fn lossy_modes_run_end_to_end() {
+    gate!();
     for mode in [Mode::TopK, Mode::Quant, Mode::PowerLR] {
         let (mut pipe, corpus) = mk_pipeline(mode, 0, 6);
         let h = pipe.hyper();
@@ -162,7 +196,57 @@ fn lossy_modes_run_end_to_end() {
 }
 
 #[test]
+fn replicated_pipelines_train_and_account_dp_bytes() {
+    gate!();
+    use protomodels::coordinator::replica::{ReplicaConfig, ReplicaSet};
+    use protomodels::netsim::ReplicaRing;
+    let m = manifest();
+    let h = m.config("tiny").unwrap().hyper.clone();
+    let mut rng = Rng::new(21);
+    let replicas = 2usize;
+    let topos: Vec<Topology> = (0..replicas)
+        .map(|_| {
+            Topology::uniform(h.stages, LinkSpec::internet_80m(), &mut rng)
+        })
+        .collect();
+    let ring = ReplicaRing::new(replicas, LinkSpec::internet_80m(), &mut rng);
+    let cfg = PipelineConfig {
+        mode: Mode::Subspace,
+        microbatches: 2,
+        grassmann_interval: 0,
+        lr: 3e-3,
+        warmup_steps: 5,
+        total_steps: 20,
+        time_model: TimeModel::default_analytic(),
+        seed: 21,
+        ..Default::default()
+    };
+    let mut set = ReplicaSet::new(
+        &m,
+        "tiny",
+        topos,
+        ring,
+        cfg,
+        ReplicaConfig { dp_mode: Mode::Subspace, slowdown: vec![1.0, 2.0] },
+    )
+    .unwrap();
+    let corpus = Corpus::synthetic(CorpusKind::Wiki, h.vocab, 100_000, 21);
+    let s = set
+        .train_step(|r| corpus.train_batch(h.b, h.n, r))
+        .unwrap();
+    assert!(s.loss.is_finite());
+    assert!(s.dp_bytes > 0, "gradient all-reduce must move bytes");
+    assert!(s.sim_seconds >= s.makespan.compute_end);
+    assert_eq!(s.tokens, replicas * 2 * h.b * h.n);
+    // replicas hold identical (averaged) parameters afterwards
+    let p0 = &set.pipelines[0].stages[0].params[0];
+    let p1 = &set.pipelines[1].stages[0].params[0];
+    assert_eq!(p0.data, p1.data);
+}
+
+#[test]
 fn deterministic_given_seed() {
+    gate!();
     let run = |seed| {
         let (mut pipe, corpus) = mk_pipeline(Mode::Subspace, 0, seed);
         let h = pipe.hyper();

@@ -4,13 +4,19 @@
 //! property is checked over a few hundred random instances with the
 //! failing seed printed on panic.
 
-use protomodels::compress::{decode, encode, topk_keep, wire_bytes, Mode};
-use protomodels::coordinator::schedule::{gpipe_makespan, StepCosts, Tx};
+use protomodels::compress::{
+    decode, dp_wire_bytes, encode, topk_keep, wire_bytes, Mode,
+};
+use protomodels::coordinator::schedule::{
+    gpipe_makespan, hybrid_makespan, StepCosts, Tx,
+};
 use protomodels::linalg::{
     matmul, orthonormalize_columns, project_rows, singular_values,
     stable_rank, transpose,
 };
-use protomodels::netsim::{Link, LinkSpec, Topology};
+use protomodels::netsim::{
+    ring_allreduce_bytes_per_link, Link, LinkSpec, ReplicaRing, Topology,
+};
 use protomodels::rng::Rng;
 use protomodels::tensor::Tensor;
 
@@ -275,6 +281,88 @@ fn prop_link_transfer_positive_and_monotone_mean() {
         let big: f64 =
             (0..reps).map(|_| link.transfer_time(1_000_000)).sum();
         assert!(small > 0.0 && big > small, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_dp_subspace_never_exceeds_raw() {
+    // the ISSUE's dp-mode property: subspace (U-only) gradient payloads
+    // never exceed raw, for any parameter count / dims / ratio
+    for seed in 0..300u64 {
+        let mut rng = Rng::new(seed ^ 0x78);
+        let d = 8 * (1 + rng.below(128));
+        let k = 1 + rng.below(d);
+        let elems = 1 + rng.below(4_000_000);
+        let ratio = 1.0 + rng.uniform() * 63.0;
+        let sub = dp_wire_bytes(Mode::Subspace, elems, d, k, ratio);
+        let raw = dp_wire_bytes(Mode::Raw, elems, d, k, ratio);
+        assert!(
+            sub <= raw,
+            "seed {seed}: dp subspace {sub} > raw {raw} (d={d} k={k})"
+        );
+        // and the nofixed ablation prices identically
+        assert_eq!(sub, dp_wire_bytes(Mode::NoFixed, elems, d, k, ratio));
+    }
+}
+
+#[test]
+fn prop_ring_allreduce_accounting_and_monotonicity() {
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(seed ^ 0x79);
+        let r = 2 + rng.below(15);
+        let bytes = 1 + rng.below(10_000_000);
+        let mut ring =
+            ReplicaRing::new(r, LinkSpec::internet_80m(), &mut rng.fork(1));
+        let t = ring.all_reduce(bytes);
+        assert!(t > 0.0, "seed {seed}");
+        let per_link = ring_allreduce_bytes_per_link(r, bytes);
+        for l in &ring.links {
+            assert_eq!(l.bytes_sent, per_link, "seed {seed}");
+        }
+        // per-link traffic approaches 2B as R grows and never exceeds it
+        assert!(per_link <= 2 * bytes as u64 + 2 * r as u64, "seed {seed}");
+        assert!(per_link >= bytes as u64, "seed {seed}: R>=2 moves >= B");
+    }
+}
+
+#[test]
+fn prop_hybrid_makespan_invariants() {
+    // total >= compute_end; tail >= 0; total <= compute_end + serial comm
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(seed ^ 0x7A);
+        let replicas = 1 + rng.below(6);
+        let mut makespans = Vec::new();
+        for _ in 0..replicas {
+            let c = rand_costs(&mut rng);
+            makespans.push(gpipe_makespan(&c));
+        }
+        let stages = makespans[0].grad_ready.len();
+        let payloads: Vec<usize> =
+            (0..stages).map(|_| 1 + rng.below(1_000_000)).collect();
+        let mut ring = ReplicaRing::new(
+            replicas,
+            LinkSpec::internet_80m(),
+            &mut rng.fork(2),
+        );
+        let h = hybrid_makespan(&makespans, &payloads, &mut ring);
+        let compute_end =
+            makespans.iter().map(|m| m.total).fold(0.0, f64::max);
+        assert!(
+            (h.compute_end - compute_end).abs() < 1e-12,
+            "seed {seed}"
+        );
+        assert!(h.total >= compute_end - 1e-12, "seed {seed}");
+        assert!(h.tail >= -1e-12, "seed {seed}");
+        assert!(
+            h.total <= compute_end + h.allreduce_busy + 1e-9,
+            "seed {seed}: total {} > compute {} + busy {}",
+            h.total,
+            compute_end,
+            h.allreduce_busy
+        );
+        if replicas == 1 {
+            assert_eq!(h.tail, 0.0, "seed {seed}: R=1 must be comm-free");
+        }
     }
 }
 

@@ -1,0 +1,129 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so the subset of the
+//! anyhow API this workspace uses is implemented here: the type-erased
+//! [`Error`], the [`Result`] alias, the `anyhow!` / `bail!` macros, and
+//! the [`Context`] extension trait for `Result` and `Option`. Error
+//! messages are flattened to strings (context prefixes joined with `: `),
+//! which is all the callers ever render.
+
+use std::fmt;
+
+/// A type-erased error: a display message plus an optional source chain
+/// (flattened into the message at construction time).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prefix this error with additional context, anyhow-style.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Mirrors anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion legal.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context()` / `.with_context()` to `Result`
+/// and `Option`, as in anyhow.
+pub trait Context<T> {
+    /// Attach a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Attach a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{ctx}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error { msg: ctx.to_string() })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error { msg: f().to_string() })
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        Ok(std::fs::read_to_string("/nonexistent/definitely/missing")?)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert!(e.to_string().starts_with("outer: "));
+        let o: Option<u8> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        fn f() -> Result<()> {
+            bail!("boom {}", 1)
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom 1");
+    }
+}

@@ -1,0 +1,206 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The real crate links libxla / PJRT, which cannot be built in this
+//! offline environment. This stub exposes the exact API subset the
+//! `protomodels` runtime consumes so the workspace always compiles and
+//! unit tests run; any attempt to *compile or execute* an HLO program
+//! returns a descriptive error. `backend_available()` lets callers (and
+//! tests) detect the stub and skip execution paths gracefully.
+//!
+//! Literal construction/reshaping/reading is fully functional — only the
+//! compiler/executor is absent.
+
+use std::borrow::Borrow;
+use std::path::Path;
+
+/// Error type mirroring xla-rs's (callers only format it with `{:?}`).
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+/// Result alias used throughout the stub.
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+const NO_BACKEND: &str = "PJRT backend unavailable: this build uses the \
+     offline `xla` stub (rust/vendor/xla). Link the real xla-rs bindings \
+     to execute AOT artifacts (DESIGN.md §4)";
+
+/// True when a real PJRT backend is linked. Always false in the stub.
+pub fn backend_available() -> bool {
+    false
+}
+
+/// Handle to a PJRT client (CPU only in this codebase).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create the CPU client. Succeeds in the stub; only compilation fails.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    /// Compile a computation. Always fails in the stub.
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError(NO_BACKEND.to_string()))
+    }
+}
+
+/// Parsed HLO module (the stub only retains the raw text).
+pub struct HloModuleProto {
+    /// Raw HLO text as read from disk.
+    pub text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO text artifact. Functional in the stub (I/O only).
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| XlaError(format!("{}: {e}", path.as_ref().display())))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Element storage for a [`Literal`] (public only because the
+/// [`NativeType`] trait mentions it; not part of the real xla-rs API).
+#[doc(hidden)]
+#[derive(Clone, Debug)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Host-side typed array exchanged with the runtime.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+/// Sealed-ish helper trait for the element types `Literal` supports.
+pub trait NativeType: Copy {
+    /// Wrap a slice of this type into a payload.
+    fn wrap(data: &[Self]) -> Payload;
+    /// Extract a vector of this type, if the payload matches.
+    fn unwrap(p: &Payload) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: &[Self]) -> Payload {
+        Payload::F32(data.to_vec())
+    }
+    fn unwrap(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: &[Self]) -> Payload {
+        Payload::I32(data.to_vec())
+    }
+    fn unwrap(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Scalar f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { payload: Payload::F32(vec![v]), dims: vec![] }
+    }
+
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            payload: T::wrap(data),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    /// Reshape to the given dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = dims.iter().product();
+        let have = match &self.payload {
+            Payload::F32(v) => v.len() as i64,
+            Payload::I32(v) => v.len() as i64,
+        };
+        if numel != have {
+            return Err(XlaError(format!(
+                "reshape: {have} elements into shape {dims:?}"
+            )));
+        }
+        Ok(Literal { payload: self.payload.clone(), dims: dims.to_vec() })
+    }
+
+    /// Split a tuple literal into its parts. The stub never produces
+    /// tuples (nothing executes), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(XlaError(NO_BACKEND.to_string()))
+    }
+
+    /// Read the elements out as a `Vec<T>`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.payload)
+            .ok_or_else(|| XlaError("literal dtype mismatch".to_string()))
+    }
+}
+
+/// Device buffer handle returned by an execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal. Unreachable in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError(NO_BACKEND.to_string()))
+    }
+}
+
+/// A compiled executable. Never constructed by the stub.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals. Unreachable in the stub.
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError(NO_BACKEND.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+        let i = Literal::vec1(&[7i32]);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn backend_is_reported_unavailable() {
+        assert!(!backend_available());
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.compile(&XlaComputation).is_err());
+    }
+}
