@@ -1,4 +1,4 @@
-.PHONY: artifacts build test bench clean
+.PHONY: artifacts build test bench bench-full bench-micro clean
 
 # AOT-lower the JAX numerics to HLO text + manifest (needs python/jax).
 # The rust tests look for artifacts under rust/artifacts; the CLI default
@@ -13,9 +13,19 @@ build:
 test:
 	cargo test -q
 
-bench:
+# Perf-trajectory suite: writes BENCH_linalg.json + BENCH_pipeline.json
+# at the repo root (artifact-free — linalg kernels + analytic cost model).
+bench: build
+	./target/release/protomodels bench --json --fast
+
+# Same suite at full measurement windows (slower, tighter numbers).
+bench-full: build
+	./target/release/protomodels bench --json
+
+# The cargo micro-bench binaries (some need `make artifacts` first).
+bench-micro:
 	cargo bench
 
 clean:
 	cargo clean
-	rm -rf rust/artifacts artifacts results
+	rm -rf rust/artifacts artifacts results BENCH_linalg.json BENCH_pipeline.json

@@ -1,11 +1,13 @@
 //! Host linalg micro-benchmarks: the off-hot-path substrate used by
 //! metrics (stable rank), init (orthonormal U, row projection) and the
-//! Grassmann diagnostics.
+//! Grassmann diagnostics. `protomodels bench --json` runs the tracked
+//! subset of these and writes BENCH_linalg.json (DESIGN.md §8).
 
 use protomodels::bench::{black_box, Bencher};
 use protomodels::linalg::{
-    matmul, orthonormalize_columns, project_rows, singular_values,
-    stable_rank, transpose,
+    matmul, matmul_reference, orthonormalize_columns, project_rows,
+    singular_values, stable_rank, stable_rank_approx, transpose,
+    STABLE_RANK_SKETCH,
 };
 use protomodels::rng::Rng;
 use protomodels::tensor::Tensor;
@@ -26,17 +28,25 @@ fn main() {
     };
     let bench = Bencher::default();
 
-    let r = bench.run("matmul 256x256x256", || {
-        black_box(matmul(black_box(&a256), black_box(&b256)));
-    });
-    println!(
-        "    → {:.2} GFLOP/s",
-        2.0 * 256f64.powi(3) / (r.mean_ns * 1e-9) / 1e9
-    );
+    for (name, f) in [
+        (
+            "matmul tiled 256x256x256",
+            matmul as fn(&Tensor, &Tensor) -> Tensor,
+        ),
+        ("matmul reference 256x256x256", matmul_reference),
+    ] {
+        let r = bench.run(name, || {
+            black_box(f(black_box(&a256), black_box(&b256)));
+        });
+        println!(
+            "    -> {:.2} GFLOP/s",
+            2.0 * 256f64.powi(3) / (r.mean_ns * 1e-9) / 1e9
+        );
+    }
     bench.run("transpose 256x256", || {
         black_box(transpose(black_box(&a256)));
     });
-    bench.run("project_rows (1024x256)·(256x8)", || {
+    bench.run("project_rows fused (1024x256)x(256x8)", || {
         black_box(project_rows(black_box(&w), black_box(&u)));
     });
     let quick = Bencher::quick();
@@ -44,9 +54,26 @@ fn main() {
         let m = randt(&mut Rng::new(9), 128, 128);
         black_box(singular_values(&m));
     });
-    quick.run("stable_rank 256x256", || {
+    quick.run("stable_rank exact 256x256 (jacobi)", || {
         black_box(stable_rank(black_box(&a256)));
     });
+    quick.run("stable_rank_approx 256x256 (range-finder)", || {
+        black_box(stable_rank_approx(black_box(&a256), STABLE_RANK_SKETCH));
+    });
+    {
+        let a1k = randt(&mut Rng::new(12), 1024, 1024);
+        let r = quick.run("stable_rank_approx 1024x1024", || {
+            black_box(stable_rank_approx(
+                black_box(&a1k),
+                STABLE_RANK_SKETCH,
+            ));
+        });
+        println!(
+            "    -> O(d^2 r) path: {:.1} ms at d=1024 \
+             (exact jacobi is O(d^3) per sweep)",
+            r.mean_ns / 1e6
+        );
+    }
     quick.run("orthonormalize 256x8", || {
         let mut m = randt(&mut Rng::new(11), 256, 8);
         black_box(orthonormalize_columns(&mut m));

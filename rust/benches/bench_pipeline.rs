@@ -46,7 +46,7 @@ fn main() {
             println!(
                 "    → host {:.0} tok/s (real CPU) | PJRT share {:.0}%",
                 toks / (r.mean_ns * 1e-9),
-                100.0 * pipe.rt.borrow().total_compute_seconds()
+                100.0 * pipe.total_compute_seconds()
                     / pipe.host_seconds.max(1e-9)
             );
         }

@@ -5,7 +5,13 @@
 //! reports mean / median / p95 and throughput. Benches link this via the
 //! library crate and run with `harness = false`.
 
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::json::Json;
 
 /// Timing summary of one benchmark.
 pub struct BenchResult {
@@ -41,6 +47,67 @@ impl BenchResult {
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / (self.mean_ns * 1e-9)
     }
+
+    /// JSON object of this result: name, iteration count, mean / median /
+    /// p95 / stddev in ns, plus `throughput_per_s` when `items_per_iter`
+    /// is given. Consumed by `bench --json` (BENCH_*.json trajectory
+    /// files at the repo root).
+    pub fn to_json(&self, items_per_iter: Option<f64>) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("iters".to_string(), Json::Num(self.iters as f64));
+        m.insert("mean_ns".to_string(), Json::Num(self.mean_ns));
+        m.insert("median_ns".to_string(), Json::Num(self.median_ns));
+        m.insert("p95_ns".to_string(), Json::Num(self.p95_ns));
+        m.insert("stddev_ns".to_string(), Json::Num(self.stddev_ns));
+        if let Some(items) = items_per_iter {
+            m.insert(
+                "throughput_per_s".to_string(),
+                Json::Num(self.throughput(items)),
+            );
+        }
+        Json::Obj(m)
+    }
+}
+
+/// One entry of a JSON bench suite: the measurement plus an optional
+/// items-per-iteration figure for throughput reporting.
+pub struct BenchEntry {
+    /// the measured result
+    pub result: BenchResult,
+    /// items processed per iteration (tokens, FLOPs, cells, …)
+    pub items_per_iter: Option<f64>,
+}
+
+/// Write a bench suite as `{"suite": name, "results": [...]}` to `path`
+/// (pretty enough for diffing: one compact JSON document). Returns the
+/// written path.
+pub fn write_json(
+    path: impl AsRef<Path>,
+    suite: &str,
+    entries: &[BenchEntry],
+) -> Result<PathBuf> {
+    let mut m = BTreeMap::new();
+    m.insert("suite".to_string(), Json::Str(suite.to_string()));
+    m.insert(
+        "results".to_string(),
+        Json::Arr(
+            entries
+                .iter()
+                .map(|e| e.result.to_json(e.items_per_iter))
+                .collect(),
+        ),
+    );
+    let path = path.as_ref().to_path_buf();
+    let mut text = Json::Obj(m).to_string();
+    text.push('\n');
+    std::fs::write(&path, text)?;
+    eprintln!(
+        "[bench] wrote {} results -> {}",
+        entries.len(),
+        path.display()
+    );
+    Ok(path)
 }
 
 /// Human-readable duration from nanoseconds.
@@ -139,6 +206,37 @@ mod tests {
         assert!(r.iters >= 3);
         assert!(r.mean_ns > 0.0);
         assert!(r.median_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn json_roundtrip_of_results() {
+        let r = BenchResult {
+            name: "m".into(),
+            iters: 4,
+            mean_ns: 1000.0,
+            median_ns: 900.0,
+            p95_ns: 1500.0,
+            stddev_ns: 50.0,
+        };
+        let j = r.to_json(Some(2000.0));
+        assert_eq!(j.get("name").unwrap().str().unwrap(), "m");
+        assert_eq!(j.get("iters").unwrap().usize().unwrap(), 4);
+        // 2000 items / 1µs mean = 2e12 items/s
+        let tput = j.get("throughput_per_s").unwrap().num().unwrap();
+        assert!((tput - 2e12).abs() / 2e12 < 1e-9);
+        let dir = std::env::temp_dir().join("protomodels_test_bench_json");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = write_json(
+            dir.join("BENCH_test.json"),
+            "test",
+            &[BenchEntry { result: r, items_per_iter: None }],
+        )
+        .unwrap();
+        let parsed =
+            crate::json::Json::parse(&std::fs::read_to_string(p).unwrap())
+                .unwrap();
+        assert_eq!(parsed.get("suite").unwrap().str().unwrap(), "test");
+        assert_eq!(parsed.get("results").unwrap().arr().unwrap().len(), 1);
     }
 
     #[test]

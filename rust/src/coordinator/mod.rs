@@ -31,6 +31,43 @@ use crate::tensor::{IntTensor, Tensor, Value};
 use crate::timemodel::{stage_seconds, Phase, TimeModel};
 use schedule::{gpipe_makespan, Makespan, StepCosts, Tx};
 
+/// Handle to the PJRT runtime backing a pipeline.
+///
+/// Two ownership regimes (DESIGN.md §8): parallel experiment grids give
+/// every cell its **own** runtime, constructed and dropped entirely
+/// inside one pool worker (`Runtime` is not `Send`, so per-thread
+/// ownership is the only sound option); replica sets **share** one
+/// runtime across R pipelines within a single thread so the compiled
+/// executable cache is paid once, not R times.
+pub enum RtHandle {
+    /// exclusively owned — single-pipeline runs and per-thread grid jobs
+    Owned(Box<Runtime>),
+    /// shared across replicas within one thread (`Rc<RefCell<…>>`)
+    Shared(SharedRuntime),
+}
+
+impl RtHandle {
+    fn execute_timed(
+        &mut self,
+        key: &str,
+        args: &[Value],
+    ) -> Result<(Vec<Value>, f64)> {
+        match self {
+            RtHandle::Owned(rt) => rt.execute_timed(key, args),
+            RtHandle::Shared(rt) => rt.borrow_mut().execute_timed(key, args),
+        }
+    }
+
+    /// Run `f` with read access to the underlying runtime (timings,
+    /// config introspection) regardless of the ownership regime.
+    pub fn with<R>(&self, f: impl FnOnce(&Runtime) -> R) -> R {
+        match self {
+            RtHandle::Owned(rt) => f(rt),
+            RtHandle::Shared(rt) => f(&rt.borrow()),
+        }
+    }
+}
+
 /// Run-level configuration of the coordinator.
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
@@ -94,8 +131,9 @@ pub struct StepStats {
 /// One pipeline-parallel training system: P stage workers over a netsim
 /// [`Topology`], driven step-by-step through the shared PJRT runtime.
 pub struct Pipeline {
-    /// PJRT runtime (shared across replicas in data-parallel runs)
-    pub rt: SharedRuntime,
+    /// PJRT runtime handle: owned by this pipeline, or shared across
+    /// replicas in data-parallel runs
+    pub rt: RtHandle,
     /// config manifest this pipeline was built for (cached off `rt`)
     pub cm: ConfigManifest,
     /// stage-to-stage network links
@@ -121,26 +159,37 @@ pub struct Pipeline {
 }
 
 impl Pipeline {
-    /// Build a pipeline with its own private runtime for `config_name`.
+    /// Build a pipeline owning its own private runtime for
+    /// `config_name` — the grid-job path: the whole pipeline (runtime
+    /// included) lives and dies inside one pool worker.
     pub fn new(
         manifest: &crate::manifest::Manifest,
         config_name: &str,
         topo: Topology,
         cfg: PipelineConfig,
     ) -> Result<Pipeline> {
-        let rt = Runtime::shared(manifest, config_name)?;
-        Pipeline::with_runtime(rt, topo, cfg)
+        let rt = RtHandle::Owned(Box::new(Runtime::new(manifest, config_name)?));
+        Pipeline::with_handle(rt, topo, cfg)
     }
 
-    /// Build a pipeline on an existing (possibly shared) runtime — the
+    /// Build a pipeline on an existing shared runtime — the
     /// replicated-pipeline path, where R replicas share one compiled
-    /// executable cache.
+    /// executable cache (single-threaded by construction).
     pub fn with_runtime(
         rt: SharedRuntime,
         topo: Topology,
         cfg: PipelineConfig,
     ) -> Result<Pipeline> {
-        let cm = rt.borrow().config().clone();
+        Pipeline::with_handle(RtHandle::Shared(rt), topo, cfg)
+    }
+
+    /// Build a pipeline on any runtime handle.
+    pub fn with_handle(
+        rt: RtHandle,
+        topo: Topology,
+        cfg: PipelineConfig,
+    ) -> Result<Pipeline> {
+        let cm = rt.with(|r| r.config().clone());
         let h = cm.hyper.clone();
         if topo.stages() != h.stages {
             bail!(
@@ -255,8 +304,22 @@ impl Pipeline {
             .collect()
     }
 
-    fn exec_timed(&self, key: &str, args: &[Value]) -> Result<(Vec<Value>, f64)> {
-        self.rt.borrow_mut().execute_timed(key, args)
+    fn exec_timed(
+        &mut self,
+        key: &str,
+        args: &[Value],
+    ) -> Result<(Vec<Value>, f64)> {
+        self.rt.execute_timed(key, args)
+    }
+
+    /// Total runtime seconds across all entries (profiling).
+    pub fn total_compute_seconds(&self) -> f64 {
+        self.rt.with(|r| r.total_compute_seconds())
+    }
+
+    /// CSV-formatted per-entry timing table (profiling).
+    pub fn timing_report(&self) -> String {
+        self.rt.with(|r| r.timing_report())
     }
 
     /// Forward through stage s for one microbatch; returns (output, secs).
@@ -279,7 +342,8 @@ impl Pipeline {
             args.push(Value::F32(input.expect("mid stage needs input").clone()));
         }
         let name = if s == 0 { "first_fwd" } else { "mid_fwd" };
-        let (outs, dt) = self.exec_timed(&self.key(name), &args)?;
+        let key = self.key(name);
+        let (outs, dt) = self.exec_timed(&key, &args)?;
         let out = outs.into_iter().next().unwrap().into_f32();
         let secs = stage_seconds(
             self.cfg.time_model,
@@ -340,7 +404,8 @@ impl Pipeline {
             }
             args.push(Value::F32(cur.take().unwrap()));
             args.push(Value::I32(tgt.clone()));
-            let (outs, dt) = self.exec_timed(&self.key("last_loss"), &args)?;
+            let key = self.key("last_loss");
+            let (outs, dt) = self.exec_timed(&key, &args)?;
             costs.fwd[last][mb] = stage_seconds(
                 self.cfg.time_model,
                 &h,
@@ -384,7 +449,8 @@ impl Pipeline {
                 }
                 args.push(Value::F32(gc.clone()));
                 let name = if s == 0 { "first_bwd" } else { "mid_bwd" };
-                let (outs, dt) = self.exec_timed(&self.key(name), &args)?;
+                let key = self.key(name);
+                let (outs, dt) = self.exec_timed(&key, &args)?;
                 costs.bwd[s][mb] = stage_seconds(
                     self.cfg.time_model,
                     &h,
@@ -466,7 +532,8 @@ impl Pipeline {
         }
         args.push(Value::F32(Tensor::scalar(lr)));
         args.push(Value::F32(Tensor::scalar(t)));
-        let (outs, dt) = self.exec_timed(&self.opt_key(kind), &args)?;
+        let key = self.opt_key(kind);
+        let (outs, dt) = self.exec_timed(&key, &args)?;
         let n = self.stages[s].params.len();
         debug_assert_eq!(outs.len(), 3 * n);
         let mut it = outs.into_iter();
@@ -503,14 +570,12 @@ impl Pipeline {
         } else {
             0.0
         };
-        let (outs, dt) = self.exec_timed(
-            "subspace/grassmann_step",
-            &[
-                Value::F32(self.global.u.clone()),
-                Value::F32(s_avg),
-                Value::F32(Tensor::scalar(eta)),
-            ],
-        )?;
+        let gargs = [
+            Value::F32(self.global.u.clone()),
+            Value::F32(s_avg),
+            Value::F32(Tensor::scalar(eta)),
+        ];
+        let (outs, dt) = self.exec_timed("subspace/grassmann_step", &gargs)?;
         self.global.u = outs.into_iter().next().unwrap().into_f32();
         // re-project constrained weights + momenta onto the new S
         let mut secs = stage_seconds(
@@ -526,8 +591,8 @@ impl Pipeline {
             let mut args: Vec<Value> = self.params_of(s);
             args.extend(self.stages[s].m.iter().cloned().map(Value::F32));
             args.push(Value::F32(self.global.u.clone()));
-            let (outs, dt2) =
-                self.exec_timed(&format!("subspace/reproject_{kind}"), &args)?;
+            let key = format!("subspace/reproject_{kind}");
+            let (outs, dt2) = self.exec_timed(&key, &args)?;
             let n = self.stages[s].params.len();
             let mut it = outs.into_iter();
             for i in 0..n {
@@ -574,7 +639,8 @@ impl Pipeline {
             }
             args.push(Value::F32(cur.take().unwrap()));
             args.push(Value::I32(tgt));
-            let (outs, _) = self.exec_timed(&self.key("last_eval"), &args)?;
+            let key = self.key("last_eval");
+            let (outs, _) = self.exec_timed(&key, &args)?;
             sum += outs[0].as_f32().item() as f64;
         }
         Ok(sum / batches.max(1) as f64)
@@ -621,7 +687,8 @@ impl Pipeline {
             }
             args.push(Value::F32(cur.take().unwrap()));
             args.push(Value::I32(tgt));
-            let (_, dt) = self.exec_timed(&self.key("last_eval"), &args)?;
+            let key = self.key("last_eval");
+            let (_, dt) = self.exec_timed(&key, &args)?;
             costs.fwd[last][mb] = stage_seconds(
                 self.cfg.time_model,
                 &h,

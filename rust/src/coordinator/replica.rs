@@ -131,6 +131,10 @@ impl ReplicaSet {
                  and cannot be scaled per replica"
             );
         }
+        // one shared runtime for all R replicas (RtHandle::Shared):
+        // replica sets are single-threaded by construction — parallel
+        // grid drivers parallelize across *cells*, each of which owns
+        // its whole ReplicaSet (and runtime) inside one pool worker
         let rt = Runtime::shared(manifest, config_name)?;
         let mut pipelines = Vec::with_capacity(topos.len());
         for (r, topo) in topos.into_iter().enumerate() {

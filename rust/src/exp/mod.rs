@@ -6,6 +6,17 @@
 //! minutes; absolute numbers differ from the paper (simulated substrate),
 //! the *shape* — who wins, by what factor, where crossovers fall — is the
 //! reproduction target.
+//!
+//! Execution model (DESIGN.md §8): every grid/sweep driver expresses its
+//! cells as pure `RunSpec → Row` jobs executed on the [`crate::par`]
+//! worker pool. Each job owns its whole world — pipeline, PJRT runtime,
+//! corpus, per-run CSV log — inside one pool worker, and derives any
+//! randomness independently of pool scheduling: from `opts.seed` (plus
+//! fixed per-driver constants), or from
+//! [`crate::par::cell_seed`]`(opts.seed, index)` where a driver wants
+//! per-cell independent streams. Summary rows are written serially in
+//! submission order after the pool drains, so the emitted CSVs are
+//! **byte-identical** at `--threads 1` and `--threads N`.
 
 use std::path::{Path, PathBuf};
 
@@ -20,6 +31,7 @@ use crate::manifest::{Hyper, Manifest};
 use crate::memory;
 use crate::metrics::{perplexity, CsvWriter, RunLog};
 use crate::netsim::{LinkSpec, Topology, MBPS};
+use crate::par;
 use crate::rng::Rng;
 use crate::tensor::Tensor;
 use crate::timemodel::TimeModel;
@@ -37,6 +49,11 @@ pub struct ExpOpts {
     pub steps: Option<usize>,
     /// master seed
     pub seed: u64,
+    /// worker-pool width for grid cells (0 = all available cores)
+    pub threads: usize,
+    /// use the exact O(d³) Jacobi stable rank on the metrics cadence
+    /// instead of the randomized O(d²r) estimator (`--exact-rank`)
+    pub exact_rank: bool,
 }
 
 impl Default for ExpOpts {
@@ -47,6 +64,8 @@ impl Default for ExpOpts {
             fast: false,
             steps: None,
             seed: 17,
+            threads: 0,
+            exact_rank: false,
         }
     }
 }
@@ -59,6 +78,25 @@ impl ExpOpts {
     fn manifest(&self) -> Result<Manifest> {
         Manifest::load(&self.artifacts)
     }
+
+    /// Pool width for this run's grid cells.
+    fn pool_threads(&self) -> usize {
+        if self.threads == 0 {
+            par::max_threads()
+        } else {
+            self.threads
+        }
+    }
+
+    /// Stable rank on the metrics cadence: randomized range-finder by
+    /// default, exact Jacobi behind `--exact-rank`.
+    fn stable_rank(&self, t: &Tensor) -> f64 {
+        if self.exact_rank {
+            linalg::stable_rank(t)
+        } else {
+            linalg::stable_rank_approx(t, linalg::STABLE_RANK_SKETCH)
+        }
+    }
 }
 
 fn topo_for(bw: &str, stages: usize, rng: &mut Rng) -> Result<Topology> {
@@ -67,9 +105,12 @@ fn topo_for(bw: &str, stages: usize, rng: &mut Rng) -> Result<Topology> {
     Ok(Topology::uniform(stages, spec, rng))
 }
 
-struct RunSpec<'a> {
+/// One grid cell: everything a pool worker needs to train one system
+/// end-to-end, independent of every other cell.
+#[derive(Clone, Debug)]
+struct RunSpec {
     label: String,
-    config: &'a str,
+    config: String,
     mode: Mode,
     bandwidth: String,
     microbatches: usize,
@@ -80,6 +121,9 @@ struct RunSpec<'a> {
 
 /// Train one system for `steps`, logging a full curve; returns
 /// (final val ppl, tokens/sim-second, cumulative sim seconds).
+/// Runs self-contained inside one pool worker: the pipeline owns its
+/// runtime, and all randomness derives from `opts.seed` (identical for
+/// any pool width).
 fn run_one(
     opts: &ExpOpts,
     m: &Manifest,
@@ -87,7 +131,7 @@ fn run_one(
     steps: usize,
     sub_dir: &str,
 ) -> Result<(f64, f64, f64)> {
-    let cm = m.config(spec.config)?;
+    let cm = m.config(&spec.config)?;
     let h = cm.hyper.clone();
     let mut rng = Rng::new(opts.seed);
     let topo = topo_for(&spec.bandwidth, h.stages, &mut rng)?;
@@ -102,7 +146,7 @@ fn run_one(
         seed: opts.seed,
         ..Default::default()
     };
-    let mut pipe = Pipeline::new(m, spec.config, topo, pcfg)?;
+    let mut pipe = Pipeline::new(m, &spec.config, topo, pcfg)?;
     let corpus =
         Corpus::synthetic(spec.corpus, h.vocab, 400_000, opts.seed ^ 0xDD);
     let mut log = RunLog::create(opts.out_dir.join(sub_dir), &spec.label)?;
@@ -133,7 +177,7 @@ fn run_budget(
     max_steps: usize,
     sub_dir: &str,
 ) -> Result<(f64, f64, usize)> {
-    let cm = m.config(spec.config)?;
+    let cm = m.config(&spec.config)?;
     let h = cm.hyper.clone();
     let mut rng = Rng::new(opts.seed);
     let topo = topo_for(&spec.bandwidth, h.stages, &mut rng)?;
@@ -148,7 +192,7 @@ fn run_budget(
         seed: opts.seed,
         ..Default::default()
     };
-    let mut pipe = Pipeline::new(m, spec.config, topo, pcfg)?;
+    let mut pipe = Pipeline::new(m, &spec.config, topo, pcfg)?;
     let corpus =
         Corpus::synthetic(spec.corpus, h.vocab, 400_000, opts.seed ^ 0xDD);
     let mut log = RunLog::create(opts.out_dir.join(sub_dir), &spec.label)?;
@@ -162,6 +206,20 @@ fn run_budget(
     let tps = log.tps();
     log.finish()?;
     Ok((perplexity(val), tps, steps))
+}
+
+/// Run every spec as a pool job (`run_one` per cell); results come back
+/// in submission order.
+fn run_specs(
+    opts: &ExpOpts,
+    m: &Manifest,
+    specs: &[RunSpec],
+    steps: usize,
+    sub_dir: &str,
+) -> Result<Vec<(f64, f64, f64)>> {
+    par::try_map(opts.pool_threads(), specs, |_, spec| {
+        run_one(opts, m, spec, steps, sub_dir)
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -216,7 +274,7 @@ pub fn rank_collapse(opts: &ExpOpts, grads: bool) -> Result<()> {
                 } else {
                     &st.params[idx]
                 };
-                let sr = linalg::stable_rank(t);
+                let sr = opts.stable_rank(t);
                 let max_rank = shape.iter().copied().min().unwrap_or(0);
                 csv.row(&[
                     step.to_string(),
@@ -241,7 +299,10 @@ pub fn checkpoint_ranks(opts: &ExpOpts) -> Result<()> {
         opts.out_dir.join("fig16_checkpoint_ranks.csv"),
         &["config", "stage", "param", "stable_rank", "normalized"],
     )?;
-    for config in ["tiny", "small"] {
+    let configs = ["tiny", "small"];
+    // one trained pipeline per config, in parallel; rank rows extracted
+    // serially afterwards so the CSV order is fixed
+    let pipes = par::try_map(opts.pool_threads(), &configs, |_, config| {
         let cm = m.config(config)?;
         let h = cm.hyper.clone();
         let mut rng = Rng::new(opts.seed);
@@ -260,21 +321,28 @@ pub fn checkpoint_ranks(opts: &ExpOpts) -> Result<()> {
         for _ in 0..steps {
             pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
         }
+        let mut rows: Vec<[String; 5]> = Vec::new();
         for (si, st) in pipe.stages.iter().enumerate() {
             for ((name, shape), p) in st.schema.iter().zip(&st.params) {
                 if !name.ends_with("wp2") {
                     continue;
                 }
-                let sr = linalg::stable_rank(p);
+                let sr = opts.stable_rank(p);
                 let maxr = shape.iter().copied().min().unwrap() as f64;
-                csv.row(&[
+                rows.push([
                     config.to_string(),
                     si.to_string(),
                     name.clone(),
                     format!("{sr:.4}"),
                     format!("{:.4}", sr / maxr),
-                ])?;
+                ]);
             }
+        }
+        Ok(rows)
+    })?;
+    for rows in pipes {
+        for r in rows {
+            csv.row(&r)?;
         }
     }
     csv.finish()?;
@@ -296,25 +364,26 @@ pub fn convergence_bandwidth(opts: &ExpOpts) -> Result<()> {
     } else {
         vec![CorpusKind::Web, CorpusKind::Wiki, CorpusKind::Books]
     };
+    let mut specs = Vec::new();
     for corpus in corpora {
         for (label, mode, bw) in [
             ("decentralized_compressed_80mbps", Mode::Subspace, "80mbps"),
             ("decentralized_raw_80mbps", Mode::Raw, "80mbps"),
             ("centralized_raw_100gbps", Mode::Raw, "100gbps"),
         ] {
-            let spec = RunSpec {
+            specs.push(RunSpec {
                 label: format!("{}_{}", corpus.name(), label),
-                config,
+                config: config.to_string(),
                 mode,
                 bandwidth: bw.into(),
                 microbatches: 8,
                 grassmann: 0,
                 lr: 6e-3,
                 corpus,
-            };
-            run_one(opts, &m, &spec, steps, "fig2_convergence")?;
+            });
         }
     }
+    run_specs(opts, &m, &specs, steps, "fig2_convergence")?;
     Ok(())
 }
 
@@ -329,25 +398,26 @@ pub fn depth_sweep(opts: &ExpOpts) -> Result<()> {
     let steps = opts.steps_or(200, 50);
     let configs: &[&str] =
         if opts.fast { &["small"] } else { &["small", "base", "deep16"] };
+    let mut specs = Vec::new();
     for config in configs {
         let layers = m.config(config)?.hyper.layers;
         for (label, mode, bw) in [
             ("compressed_80mbps", Mode::Subspace, "80mbps"),
             ("centralized_100gbps", Mode::Raw, "100gbps"),
         ] {
-            let spec = RunSpec {
+            specs.push(RunSpec {
                 label: format!("layers{layers}_{label}"),
-                config,
+                config: config.to_string(),
                 mode,
                 bandwidth: bw.into(),
                 microbatches: 4,
                 grassmann: 0,
                 lr: 6e-3,
                 corpus: CorpusKind::C4,
-            };
-            run_one(opts, &m, &spec, steps, "fig3_depth")?;
+            });
         }
     }
+    run_specs(opts, &m, &specs, steps, "fig3_depth")?;
     Ok(())
 }
 
@@ -362,19 +432,20 @@ pub fn throughput_sweep(opts: &ExpOpts) -> Result<()> {
     let cm = m.config(config)?;
     let h = cm.hyper.clone();
     let bws = ["10mbps", "80mbps", "500mbps", "1000mbps", "16gbps", "100gbps"];
-    let mut csv = CsvWriter::create(
-        opts.out_dir.join("fig4_throughput.csv"),
-        &["bandwidth", "mode", "phase", "tokens_per_second", "gain_vs_raw"],
-    )?;
     let mbs = if opts.fast { 4 } else { 8 };
+    // one cell per (bandwidth × mode): returns (train tps, inference tps)
+    let mut cells: Vec<(&str, Mode)> = Vec::new();
     for bw in bws {
-        let mut tps: std::collections::BTreeMap<(&str, &str), f64> =
-            Default::default();
         for mode in [Mode::Subspace, Mode::Raw] {
+            cells.push((bw, mode));
+        }
+    }
+    let measured =
+        par::try_map(opts.pool_threads(), &cells, |_, (bw, mode)| {
             let mut rng = Rng::new(opts.seed);
             let topo = topo_for(bw, h.stages, &mut rng)?;
             let pcfg = PipelineConfig {
-                mode,
+                mode: *mode,
                 microbatches: mbs,
                 grassmann_interval: 0,
                 total_steps: 10,
@@ -392,16 +463,28 @@ pub fn throughput_sweep(opts: &ExpOpts) -> Result<()> {
                 t_train += s.sim_seconds;
                 toks += s.tokens;
             }
-            tps.insert((mode.as_str(), "train"), toks as f64 / t_train);
             // inference throughput
             let (t_inf, toks_inf) = pipe
                 .forward_throughput(mbs * 3, |r| corpus.val_batch(h.b, h.n, r))?;
-            tps.insert((mode.as_str(), "inference"), toks_inf as f64 / t_inf);
-        }
+            Ok((toks as f64 / t_train, toks_inf as f64 / t_inf))
+        })?;
+    // key results by (bandwidth, mode, phase) — robust against any
+    // reordering or extension of the cell construction above
+    let mut tps: std::collections::BTreeMap<(&str, &str, &str), f64> =
+        Default::default();
+    for ((bw, mode), (train, inference)) in cells.iter().zip(&measured) {
+        tps.insert((*bw, mode.as_str(), "train"), *train);
+        tps.insert((*bw, mode.as_str(), "inference"), *inference);
+    }
+    let mut csv = CsvWriter::create(
+        opts.out_dir.join("fig4_throughput.csv"),
+        &["bandwidth", "mode", "phase", "tokens_per_second", "gain_vs_raw"],
+    )?;
+    for bw in bws {
         for phase in ["train", "inference"] {
-            let raw = tps[&("raw", phase)];
+            let raw = tps[&(bw, "raw", phase)];
             for mode in ["subspace", "raw"] {
-                let v = tps[&(mode, phase)];
+                let v = tps[&(bw, mode, phase)];
                 csv.row(&[
                     bw.to_string(),
                     mode.to_string(),
@@ -420,6 +503,13 @@ pub fn throughput_sweep(opts: &ExpOpts) -> Result<()> {
 // Fig. 5 — globally distributed regions vs same-region centralized
 // ---------------------------------------------------------------------------
 
+/// Which topology a `global_regions` cell builds (from its own seed).
+#[derive(Clone, Copy, Debug)]
+enum RegionTopo {
+    Global,
+    Centralized16g,
+}
+
 /// Fig. 5: four-region global deployment vs same-region centralized.
 pub fn global_regions(opts: &ExpOpts) -> Result<()> {
     let m = opts.manifest()?;
@@ -427,61 +517,74 @@ pub fn global_regions(opts: &ExpOpts) -> Result<()> {
     let cm = m.config(config)?;
     let h = cm.hyper.clone();
     let steps = opts.steps_or(200, 50);
-    let runs: Vec<(String, Mode, Topology)> = {
-        let mut rng = Rng::new(opts.seed);
-        vec![
-            (
-                "decentralized_4regions_compressed".into(),
-                Mode::Subspace,
-                Topology::global_regions(h.stages, &mut rng),
-            ),
-            (
-                "decentralized_4regions_raw".into(),
-                Mode::Raw,
-                Topology::global_regions(h.stages, &mut rng),
-            ),
-            (
-                "centralized_16gbps_raw".into(),
-                Mode::Raw,
-                Topology::uniform(
+    let cells: Vec<(&str, Mode, RegionTopo)> = vec![
+        (
+            "decentralized_4regions_compressed",
+            Mode::Subspace,
+            RegionTopo::Global,
+        ),
+        ("decentralized_4regions_raw", Mode::Raw, RegionTopo::Global),
+        (
+            "centralized_16gbps_raw",
+            Mode::Raw,
+            RegionTopo::Centralized16g,
+        ),
+    ];
+    let rows = par::try_map(
+        opts.pool_threads(),
+        &cells,
+        |i, (label, mode, which)| {
+            // per-cell topology stream: (seed, cell) only — stable under
+            // any pool width
+            let mut rng = Rng::new(par::cell_seed(opts.seed, i));
+            let topo = match which {
+                RegionTopo::Global => {
+                    Topology::global_regions(h.stages, &mut rng)
+                }
+                RegionTopo::Centralized16g => Topology::uniform(
                     h.stages,
                     LinkSpec::centralized_16g(),
                     &mut rng,
                 ),
-            ),
-        ]
-    };
+            };
+            let pcfg = PipelineConfig {
+                mode: *mode,
+                microbatches: 16, // deep pipeline: amortize the fill
+                grassmann_interval: 0,
+                lr: 6e-3,
+                warmup_steps: 10,
+                total_steps: steps,
+                seed: opts.seed,
+                ..Default::default()
+            };
+            let mut pipe = Pipeline::new(&m, config, topo, pcfg)?;
+            let corpus =
+                Corpus::synthetic(CorpusKind::C4, h.vocab, 400_000, opts.seed);
+            let mut log = RunLog::create(
+                opts.out_dir.join("fig5_global_regions"),
+                label,
+            )?;
+            for _ in 0..steps {
+                let s =
+                    pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
+                log.log(&s)?;
+            }
+            let row = [
+                label.to_string(),
+                format!("{:.4}", log.last_loss),
+                format!("{:.1}", log.tps()),
+                format!("{:.2}", log.sim_time),
+            ];
+            log.finish()?;
+            Ok(row)
+        },
+    )?;
     let mut summary = CsvWriter::create(
         opts.out_dir.join("fig5_global_regions_summary.csv"),
         &["system", "final_loss", "tokens_per_second", "sim_seconds"],
     )?;
-    for (label, mode, topo) in runs {
-        let pcfg = PipelineConfig {
-            mode,
-            microbatches: 16, // deep pipeline: amortize the fill
-            grassmann_interval: 0,
-            lr: 6e-3,
-            warmup_steps: 10,
-            total_steps: steps,
-            seed: opts.seed,
-            ..Default::default()
-        };
-        let mut pipe = Pipeline::new(&m, config, topo, pcfg)?;
-        let corpus =
-            Corpus::synthetic(CorpusKind::C4, h.vocab, 400_000, opts.seed);
-        let mut log =
-            RunLog::create(opts.out_dir.join("fig5_global_regions"), &label)?;
-        for _ in 0..steps {
-            let s = pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
-            log.log(&s)?;
-        }
-        summary.row(&[
-            label.clone(),
-            format!("{:.4}", log.last_loss),
-            format!("{:.1}", log.tps()),
-            format!("{:.2}", log.sim_time),
-        ])?;
-        log.finish()?;
+    for row in &rows {
+        summary.row(row)?;
     }
     summary.finish()?;
     Ok(())
@@ -496,25 +599,26 @@ pub fn lossy_comparison(opts: &ExpOpts) -> Result<()> {
     let m = opts.manifest()?;
     let config = if opts.fast { "tiny" } else { "small" };
     let steps = opts.steps_or(250, 60);
-    for (label, mode) in [
+    let specs: Vec<RunSpec> = [
         ("ours_subspace", Mode::Subspace),
         ("uncompressed", Mode::Raw),
         ("topk", Mode::TopK),
         ("quant_int8", Mode::Quant),
         ("lowrank_power", Mode::PowerLR),
-    ] {
-        let spec = RunSpec {
-            label: label.into(),
-            config,
-            mode,
-            bandwidth: "100gbps".into(), // isolate compression error
-            microbatches: 8,
-            grassmann: 0,
-            lr: if config == "tiny" { 1e-2 } else { 6e-3 },
-            corpus: CorpusKind::Wiki,
-        };
-        run_one(opts, &m, &spec, steps, "fig6_lossy")?;
-    }
+    ]
+    .iter()
+    .map(|(label, mode)| RunSpec {
+        label: (*label).into(),
+        config: config.to_string(),
+        mode: *mode,
+        bandwidth: "100gbps".into(), // isolate compression error
+        microbatches: 8,
+        grassmann: 0,
+        lr: if config == "tiny" { 1e-2 } else { 6e-3 },
+        corpus: CorpusKind::Wiki,
+    })
+    .collect();
+    run_specs(opts, &m, &specs, steps, "fig6_lossy")?;
     Ok(())
 }
 
@@ -527,24 +631,26 @@ pub fn batch_sweep(opts: &ExpOpts) -> Result<()> {
     let m = opts.manifest()?;
     let config = "small";
     let steps = opts.steps_or(200, 50);
+    let b = m.config(config)?.hyper.b;
+    let mut specs = Vec::new();
     for mbs in [2usize, 4, 8] {
         for (label, mode, bw) in [
             ("compressed_80mbps", Mode::Subspace, "80mbps"),
             ("centralized_100gbps", Mode::Raw, "100gbps"),
         ] {
-            let spec = RunSpec {
-                label: format!("batch{}_{label}", mbs * m.config(config)?.hyper.b),
-                config,
+            specs.push(RunSpec {
+                label: format!("batch{}_{label}", mbs * b),
+                config: config.to_string(),
                 mode,
                 bandwidth: bw.into(),
                 microbatches: mbs,
                 grassmann: 0,
                 lr: 6e-3,
                 corpus: CorpusKind::C4,
-            };
-            run_one(opts, &m, &spec, steps, "fig8_batch")?;
+            });
         }
     }
+    run_specs(opts, &m, &specs, steps, "fig8_batch")?;
     Ok(())
 }
 
@@ -552,25 +658,26 @@ pub fn batch_sweep(opts: &ExpOpts) -> Result<()> {
 pub fn context_sweep(opts: &ExpOpts) -> Result<()> {
     let m = opts.manifest()?;
     let steps = opts.steps_or(200, 50);
+    let mut specs = Vec::new();
     for config in ["small", "ctx128", "ctx256"] {
         let n = m.config(config)?.hyper.n;
         for (label, mode, bw) in [
             ("compressed_80mbps", Mode::Subspace, "80mbps"),
             ("centralized_100gbps", Mode::Raw, "100gbps"),
         ] {
-            let spec = RunSpec {
+            specs.push(RunSpec {
                 label: format!("ctx{n}_{label}"),
-                config,
+                config: config.to_string(),
                 mode,
                 bandwidth: bw.into(),
                 microbatches: 4,
                 grassmann: 0,
                 lr: 6e-3,
                 corpus: CorpusKind::C4,
-            };
-            run_one(opts, &m, &spec, steps, "fig10_context")?;
+            });
         }
     }
+    run_specs(opts, &m, &specs, steps, "fig10_context")?;
     Ok(())
 }
 
@@ -583,21 +690,21 @@ pub fn grassmann_ablation(opts: &ExpOpts) -> Result<()> {
     let m = opts.manifest()?;
     let config = if opts.fast { "tiny" } else { "small" };
     let steps = opts.steps_or(300, 80);
-    for (label, interval) in
+    let specs: Vec<RunSpec> =
         [("no_subspace_updates", 0usize), ("with_subspace_updates", 25)]
-    {
-        let spec = RunSpec {
-            label: label.into(),
-            config,
-            mode: Mode::Subspace,
-            bandwidth: "80mbps".into(),
-            microbatches: 8,
-            grassmann: interval,
-            lr: if config == "tiny" { 1e-2 } else { 6e-3 },
-            corpus: CorpusKind::C4,
-        };
-        run_one(opts, &m, &spec, steps, "fig14_grassmann")?;
-    }
+            .iter()
+            .map(|(label, interval)| RunSpec {
+                label: (*label).into(),
+                config: config.to_string(),
+                mode: Mode::Subspace,
+                bandwidth: "80mbps".into(),
+                microbatches: 8,
+                grassmann: *interval,
+                lr: if config == "tiny" { 1e-2 } else { 6e-3 },
+                corpus: CorpusKind::C4,
+            })
+            .collect();
+    run_specs(opts, &m, &specs, steps, "fig14_grassmann")?;
     Ok(())
 }
 
@@ -606,22 +713,23 @@ pub fn embedding_ablation(opts: &ExpOpts) -> Result<()> {
     let m = opts.manifest()?;
     let config = "small"; // nofixed entries are compiled for small
     let steps = opts.steps_or(250, 60);
-    for (label, mode) in [
+    let specs: Vec<RunSpec> = [
         ("with_fixed_high_rank_embedding", Mode::Subspace),
         ("embedding_fully_in_subspace", Mode::NoFixed),
-    ] {
-        let spec = RunSpec {
-            label: label.into(),
-            config,
-            mode,
-            bandwidth: "80mbps".into(),
-            microbatches: 8,
-            grassmann: 0,
-            lr: 6e-3,
-            corpus: CorpusKind::C4,
-        };
-        run_one(opts, &m, &spec, steps, "fig15_embedding")?;
-    }
+    ]
+    .iter()
+    .map(|(label, mode)| RunSpec {
+        label: (*label).into(),
+        config: config.to_string(),
+        mode: *mode,
+        bandwidth: "80mbps".into(),
+        microbatches: 8,
+        grassmann: 0,
+        lr: 6e-3,
+        corpus: CorpusKind::C4,
+    })
+    .collect();
+    run_specs(opts, &m, &specs, steps, "fig15_embedding")?;
     Ok(())
 }
 
@@ -637,42 +745,53 @@ pub fn table1(opts: &ExpOpts) -> Result<()> {
     // simulated seconds standing in for the paper's 12 h
     let budget = if opts.fast { 0.6 } else { 3.0 };
     let max_steps = opts.steps_or(600, 150);
-    let mut csv = CsvWriter::create(
-        opts.out_dir.join("table1_perplexity.csv"),
-        &["system", "bandwidth", "corpus", "val_ppl", "tps", "steps"],
-    )?;
     let corpora = if opts.fast {
         vec![CorpusKind::Wiki]
     } else {
         vec![CorpusKind::Web, CorpusKind::Books, CorpusKind::Wiki]
     };
+    let mut cells: Vec<(CorpusKind, &str, Mode, &str)> = Vec::new();
     for corpus in corpora {
         for (system, mode, bw) in [
             ("decentralized_compressed", Mode::Subspace, "80mbps"),
             ("decentralized_raw", Mode::Raw, "80mbps"),
             ("centralized", Mode::Raw, "100gbps"),
         ] {
+            cells.push((corpus, system, mode, bw));
+        }
+    }
+    let rows = par::try_map(
+        opts.pool_threads(),
+        &cells,
+        |_, (corpus, system, mode, bw)| {
             let spec = RunSpec {
                 label: format!("{}_{system}", corpus.name()),
-                config,
-                mode,
-                bandwidth: bw.into(),
+                config: config.to_string(),
+                mode: *mode,
+                bandwidth: (*bw).into(),
                 microbatches: 8,
                 grassmann: 0,
                 lr: if config == "tiny" { 1e-2 } else { 6e-3 },
-                corpus,
+                corpus: *corpus,
             };
             let (ppl, tps, steps) =
                 run_budget(opts, &m, &spec, budget, max_steps, "table1_runs")?;
-            csv.row(&[
+            Ok([
                 system.to_string(),
                 bw.to_string(),
                 corpus.name().to_string(),
                 format!("{ppl:.2}"),
                 format!("{tps:.1}"),
                 steps.to_string(),
-            ])?;
-        }
+            ])
+        },
+    )?;
+    let mut csv = CsvWriter::create(
+        opts.out_dir.join("table1_perplexity.csv"),
+        &["system", "bandwidth", "corpus", "val_ppl", "tps", "steps"],
+    )?;
+    for row in &rows {
+        csv.row(row)?;
     }
     csv.finish()?;
     Ok(())
@@ -688,35 +807,43 @@ pub fn table2(opts: &ExpOpts) -> Result<()> {
     let token_target = cm.hyper.param_count * if opts.fast { 2 } else { 20 };
     let mbs = 8usize;
     let steps = (token_target / (mbs * h.b * h.n)).max(20);
-    let mut csv = CsvWriter::create(
-        opts.out_dir.join("table2_compute_optimal.csv"),
-        &["system", "corpus", "val_ppl", "tps", "tokens"],
-    )?;
+    let mut cells: Vec<(&str, Mode, &str, CorpusKind)> = Vec::new();
     for (system, mode, bw) in [
         ("decentralized_compressed", Mode::Subspace, "80mbps"),
         ("centralized", Mode::Raw, "100gbps"),
     ] {
         for corpus in [CorpusKind::C4, CorpusKind::Books] {
-            let spec = RunSpec {
-                label: format!("t2_{}_{system}", corpus.name()),
-                config,
-                mode,
-                bandwidth: bw.into(),
-                microbatches: mbs,
-                grassmann: 0,
-                lr: if config == "tiny" { 1e-2 } else { 6e-3 },
-                corpus,
-            };
-            let (ppl, tps, _) =
-                run_one(opts, &m, &spec, steps, "table2_runs")?;
-            csv.row(&[
-                system.to_string(),
-                corpus.name().to_string(),
-                format!("{ppl:.2}"),
-                format!("{tps:.1}"),
-                (steps * mbs * h.b * h.n).to_string(),
-            ])?;
+            cells.push((system, mode, bw, corpus));
         }
+    }
+    let specs: Vec<RunSpec> = cells
+        .iter()
+        .map(|(system, mode, bw, corpus)| RunSpec {
+            label: format!("t2_{}_{system}", corpus.name()),
+            config: config.to_string(),
+            mode: *mode,
+            bandwidth: (*bw).into(),
+            microbatches: mbs,
+            grassmann: 0,
+            lr: if config == "tiny" { 1e-2 } else { 6e-3 },
+            corpus: *corpus,
+        })
+        .collect();
+    let results = run_specs(opts, &m, &specs, steps, "table2_runs")?;
+    let mut csv = CsvWriter::create(
+        opts.out_dir.join("table2_compute_optimal.csv"),
+        &["system", "corpus", "val_ppl", "tps", "tokens"],
+    )?;
+    for ((system, _, _, corpus), (ppl, tps, _)) in
+        cells.iter().zip(&results)
+    {
+        csv.row(&[
+            system.to_string(),
+            corpus.name().to_string(),
+            format!("{ppl:.2}"),
+            format!("{tps:.1}"),
+            (steps * mbs * h.b * h.n).to_string(),
+        ])?;
     }
     // the raw decentralized system is infeasible to train to compute-
     // optimal (paper: est. 200 days) — report TPS only, like the paper
@@ -802,11 +929,42 @@ pub fn memory_workers(opts: &ExpOpts) -> Result<()> {
 /// Hybrid data-parallel × model-parallel grid (DESIGN.md §6): for each
 /// (replicas, bandwidth) cell, price one step of R replicated pipelines
 /// with the cross-replica weight-gradient all-reduce under every dp-mode,
-/// using the analytic cost model — no AOT artifacts required. Emits
+/// using the analytic cost model — no AOT artifacts required. Cells run
+/// on the worker pool; rows land in submission order. Emits
 /// `fig_dp_grid.csv` with the step makespan, the non-overlapped
 /// all-reduce tail, and the per-link gradient bytes.
 pub fn dp_grid(opts: &ExpOpts) -> Result<()> {
     let hyper = if opts.fast { Hyper::small_sim() } else { Hyper::base_sim() };
+    let replicas: &[usize] = if opts.fast { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    let bws_mbps: &[f64] =
+        if opts.fast { &[80.0, 1000.0] } else { &[10.0, 80.0, 300.0, 1000.0, 16000.0] };
+    let mut cells: Vec<(usize, f64, Mode)> = Vec::new();
+    for &r in replicas {
+        for &bw in bws_mbps {
+            for dp_mode in [Mode::Subspace, Mode::Quant, Mode::TopK, Mode::Raw] {
+                cells.push((r, bw, dp_mode));
+            }
+        }
+    }
+    let rows =
+        par::try_map(opts.pool_threads(), &cells, |_, (r, bw, dp_mode)| {
+            let mut spec =
+                HybridSimSpec::uniform(hyper.clone(), *r, bw * MBPS);
+            spec.dp_mode = *dp_mode;
+            spec.seed = opts.seed;
+            let res = simulate_hybrid_step(&spec);
+            let tokens = (r * spec.microbatches * hyper.b * hyper.n) as f64;
+            Ok([
+                r.to_string(),
+                format!("{bw}"),
+                dp_mode.as_str().to_string(),
+                format!("{:.6}", res.makespan.total),
+                format!("{:.6}", res.makespan.compute_end),
+                format!("{:.6}", res.makespan.tail),
+                res.dp_bytes_per_link.to_string(),
+                format!("{:.1}", tokens / res.makespan.total.max(1e-12)),
+            ])
+        })?;
     let mut csv = CsvWriter::create(
         opts.out_dir.join("fig_dp_grid.csv"),
         &[
@@ -820,31 +978,8 @@ pub fn dp_grid(opts: &ExpOpts) -> Result<()> {
             "tokens_per_sim_second",
         ],
     )?;
-    let replicas: &[usize] = if opts.fast { &[1, 2, 4] } else { &[1, 2, 4, 8] };
-    let bws_mbps: &[f64] =
-        if opts.fast { &[80.0, 1000.0] } else { &[10.0, 80.0, 300.0, 1000.0, 16000.0] };
-    for &r in replicas {
-        for &bw in bws_mbps {
-            for dp_mode in [Mode::Subspace, Mode::Quant, Mode::TopK, Mode::Raw] {
-                let mut spec =
-                    HybridSimSpec::uniform(hyper.clone(), r, bw * MBPS);
-                spec.dp_mode = dp_mode;
-                spec.seed = opts.seed;
-                let res = simulate_hybrid_step(&spec);
-                let tokens =
-                    (r * spec.microbatches * hyper.b * hyper.n) as f64;
-                csv.row(&[
-                    r.to_string(),
-                    format!("{bw}"),
-                    dp_mode.as_str().to_string(),
-                    format!("{:.6}", res.makespan.total),
-                    format!("{:.6}", res.makespan.compute_end),
-                    format!("{:.6}", res.makespan.tail),
-                    res.dp_bytes_per_link.to_string(),
-                    format!("{:.1}", tokens / res.makespan.total.max(1e-12)),
-                ])?;
-            }
-        }
+    for row in &rows {
+        csv.row(row)?;
     }
     csv.finish()?;
     Ok(())

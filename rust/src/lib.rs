@@ -24,6 +24,7 @@ pub mod manifest;
 pub mod memory;
 pub mod metrics;
 pub mod netsim;
+pub mod par;
 pub mod rng;
 pub mod runtime;
 pub mod stage;

@@ -4,25 +4,126 @@
 //! constrained weights), stable-rank tracking (Figs. 1/7/16), Grassmann
 //! sanity checks, and the analytic compression baselines in tests.
 //!
-//! The SVD is one-sided Jacobi — O(d³) but robust, and our matrices are
-//! ≤ 2048 wide; it runs off the training hot path (metrics cadence only).
+//! Kernel engineering (DESIGN.md §8): `matmul` is cache-tiled and
+//! row-parallel over scoped threads, `transpose` is blocked, and
+//! `project_rows` fuses the `·Uᵀ` half through [`matmul_nt`] so Uᵀ is
+//! never materialized. All kernels keep the per-element accumulation
+//! order of the naive reference, so results are **identical for any
+//! thread count** — the determinism contract the parallel experiment
+//! grids rely on.
+//!
+//! Rank metrics: the exact path is one-sided Jacobi ([`singular_values`],
+//! O(d³) but robust); the metrics cadence uses the randomized
+//! range-finder [`stable_rank_approx`] (O(d²r) block subspace iteration
+//! with a tolerance-checked fallback to the exact path).
 
 use crate::tensor::Tensor;
 
-/// C = A(m×k) · B(k×n), row-major.
+/// k-strip length of the matmul micro-kernel (elements of one A row
+/// kept hot per pass).
+const MM_TILE_K: usize = 64;
+/// j-strip length of the matmul micro-kernel (one C-row segment — 1 KiB
+/// of f32, resident in L1 across the k strip).
+const MM_TILE_J: usize = 256;
+/// Multiply-add count below which threading is not worth the spawns.
+const MM_PAR_MIN_WORK: usize = 1 << 21;
+/// Edge length of the blocked-transpose tile (32² f32 = 4 KiB).
+const TR_TILE: usize = 32;
+
+/// C = A(m×k) · B(k×n), row-major. Cache-tiled; rows of C are
+/// partitioned across scoped threads when the FLOP count warrants it
+/// (each output row is produced by exactly one thread with a fixed
+/// k-ascending accumulation order, so the result is bitwise independent
+/// of the thread count).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, ka) = a.dims2();
     let (kb, n) = b.dims2();
     assert_eq!(ka, kb, "matmul {:?} x {:?}", a.shape, b.shape);
     let mut c = vec![0.0f32; m * n];
-    // ikj loop order: streams B rows, vectorizes the inner j loop
+    par_rows(m, ka, n, &a.data, &b.data, &mut c, matmul_rows);
+    Tensor::new(vec![m, n], c)
+}
+
+/// Shared row-parallel dispatch of the matmul-family kernels: partition
+/// C's rows across scoped threads (when the multiply-add count warrants
+/// it) and run `kernel` on each disjoint block. Each output row is
+/// produced by exactly one thread running the same serial kernel, so
+/// results are bitwise independent of the thread count.
+fn par_rows(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    kernel: fn(&[f32], usize, &[f32], usize, &mut [f32]),
+) {
+    let work = m.saturating_mul(k).saturating_mul(n);
+    let threads = if work >= MM_PAR_MIN_WORK {
+        crate::par::kernel_threads().min(m.max(1))
+    } else {
+        1
+    };
+    if threads <= 1 {
+        kernel(a, k, b, n, c);
+        return;
+    }
+    let rows_per = (m + threads - 1) / threads;
+    let c_chunk = rows_per * n;
+    let a_chunk = rows_per * k;
+    std::thread::scope(|scope| {
+        for (ci, c_rows) in c.chunks_mut(c_chunk).enumerate() {
+            let rows = c_rows.len() / n;
+            let a_rows = &a[ci * a_chunk..ci * a_chunk + rows * k];
+            scope.spawn(move || kernel(a_rows, k, b, n, c_rows));
+        }
+    });
+}
+
+/// Row-block micro-kernel: `c (rows×n) += a (rows×k) · b (k×n)` with
+/// k/j tiling. For each output element the k index ascends exactly as in
+/// the naive ikj loop, so tiling changes nothing but locality.
+fn matmul_rows(a: &[f32], k: usize, b: &[f32], n: usize, c: &mut [f32]) {
+    if n == 0 || k == 0 {
+        return;
+    }
+    let rows = c.len() / n;
+    for i in 0..rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + MM_TILE_K).min(k);
+            let mut j0 = 0;
+            while j0 < n {
+                let j1 = (j0 + MM_TILE_J).min(n);
+                for kk in k0..k1 {
+                    let aik = arow[kk];
+                    let brow = &b[kk * n + j0..kk * n + j1];
+                    let cseg = &mut crow[j0..j1];
+                    for (cv, bv) in cseg.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+                j0 = j1;
+            }
+            k0 = k1;
+        }
+    }
+}
+
+/// Naive ikj reference matmul — the accumulation-order ground truth the
+/// tiled kernel is tested against (and the baseline `bench --json`
+/// reports speedups over).
+pub fn matmul_reference(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, ka) = a.dims2();
+    let (kb, n) = b.dims2();
+    assert_eq!(ka, kb, "matmul {:?} x {:?}", a.shape, b.shape);
+    let mut c = vec![0.0f32; m * n];
     for i in 0..m {
         let arow = &a.data[i * ka..(i + 1) * ka];
         let crow = &mut c[i * n..(i + 1) * n];
         for (kk, &aik) in arow.iter().enumerate() {
-            if aik == 0.0 {
-                continue;
-            }
             let brow = &b.data[kk * n..(kk + 1) * n];
             for j in 0..n {
                 crow[j] += aik * brow[j];
@@ -32,30 +133,88 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     Tensor::new(vec![m, n], c)
 }
 
-/// Aᵀ for a 2-D tensor.
+/// C = A(m×k) · B(n×k)ᵀ without materializing Bᵀ: each output element is
+/// a row-dot of two contiguous rows. Same per-element accumulation order
+/// as `matmul(a, &transpose(b))`; row-parallel like [`matmul`].
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, ka) = a.dims2();
+    let (n, kb) = b.dims2();
+    assert_eq!(ka, kb, "matmul_nt {:?} x {:?}T", a.shape, b.shape);
+    let mut c = vec![0.0f32; m * n];
+    par_rows(m, ka, n, &a.data, &b.data, &mut c, matmul_nt_rows);
+    Tensor::new(vec![m, n], c)
+}
+
+/// Row-block kernel of [`matmul_nt`]: `c[i][j] = a_row_i · b_row_j`.
+fn matmul_nt_rows(a: &[f32], k: usize, b: &[f32], n: usize, c: &mut [f32]) {
+    if n == 0 {
+        return;
+    }
+    let rows = c.len() / n;
+    for i in 0..rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (av, bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            crow[j] = acc;
+        }
+    }
+}
+
+/// Aᵀ for a 2-D tensor, via cache-blocked tiles (both the read and the
+/// write stream stay within a TLB-friendly window).
 pub fn transpose(a: &Tensor) -> Tensor {
     let (m, n) = a.dims2();
     let mut t = vec![0.0f32; m * n];
-    for i in 0..m {
-        for j in 0..n {
-            t[j * m + i] = a.data[i * n + j];
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + TR_TILE).min(m);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + TR_TILE).min(n);
+            for i in i0..i1 {
+                for j in j0..j1 {
+                    t[j * m + i] = a.data[i * n + j];
+                }
+            }
+            j0 = j1;
         }
+        i0 = i1;
     }
     Tensor::new(vec![n, m], t)
 }
 
-/// Project the rows of W onto S = Col(U):  W ← W · U · Uᵀ.
+/// Project the rows of W onto S = Col(U):  W ← (W·U)·Uᵀ. Fused: the
+/// second product reads U's rows directly ([`matmul_nt`]) — neither
+/// U·Uᵀ (d×d) nor Uᵀ is ever materialized.
 pub fn project_rows(w: &Tensor, u: &Tensor) -> Tensor {
     let wu = matmul(w, u);
-    matmul(&wu, &transpose(u))
+    matmul_nt(&wu, u)
 }
 
 /// Orthonormalize the columns of A in place via modified Gram–Schmidt.
 /// Returns false if a column was (numerically) dependent.
+///
+/// Dependency is judged *relative* to the column's pre-projection norm
+/// and dependent columns are **zeroed**, not normalized: an f32 MGS
+/// residual of a dependent column is pure rounding noise (~1e-7
+/// relative), and normalizing it manufactures a unit vector with O(0.1)
+/// overlap against the earlier columns — which silently breaks every
+/// downstream Q·Qᵀ projection and Gram bound (the pre-fix behavior, and
+/// the root cause of the `low_rank_approx` rank-deficient bug).
 pub fn orthonormalize_columns(a: &mut Tensor) -> bool {
     let (m, n) = a.dims2();
     let mut ok = true;
     for j in 0..n {
+        let mut norm0 = 0.0f64;
+        for i in 0..m {
+            norm0 += (a.data[i * n + j] as f64).powi(2);
+        }
+        let norm0 = norm0.sqrt();
         // subtract projections on previous columns
         for p in 0..j {
             let mut dot = 0.0f64;
@@ -71,7 +230,10 @@ pub fn orthonormalize_columns(a: &mut Tensor) -> bool {
             norm += (a.data[i * n + j] as f64).powi(2);
         }
         let norm = norm.sqrt();
-        if norm < 1e-10 {
+        if norm < (1e-6 * norm0).max(1e-10) {
+            for i in 0..m {
+                a.data[i * n + j] = 0.0;
+            }
             ok = false;
             continue;
         }
@@ -152,7 +314,7 @@ pub fn singular_values(a: &Tensor) -> Vec<f32> {
 }
 
 /// Stable (effective) rank  Σσᵢ² / max σᵢ²  — the paper's rank metric
-/// (Sec. 4.1, Figs. 1/7/16).
+/// (Sec. 4.1, Figs. 1/7/16). Exact: full one-sided Jacobi, O(d³).
 pub fn stable_rank(a: &Tensor) -> f64 {
     let sv = singular_values(a);
     let max_sq = sv.first().map(|s| (*s as f64).powi(2)).unwrap_or(0.0);
@@ -160,6 +322,77 @@ pub fn stable_rank(a: &Tensor) -> f64 {
         return 0.0;
     }
     sv.iter().map(|s| (*s as f64).powi(2)).sum::<f64>() / max_sq
+}
+
+/// Default sketch width of [`stable_rank_approx`] (block size of the
+/// subspace iteration — wide enough to capture near-degenerate top
+/// singular values of soft-edge spectra).
+pub const STABLE_RANK_SKETCH: usize = 8;
+/// Power-iteration cap of [`stable_rank_approx`]; exceeded → exact
+/// fallback.
+const STABLE_RANK_MAX_ITERS: usize = 40;
+/// Relative σ²_max convergence tolerance of [`stable_rank_approx`].
+const STABLE_RANK_REL_TOL: f64 = 1e-5;
+
+/// Randomized stable rank:  ‖A‖_F² / σ̂²_max  with σ̂_max from an
+/// `r`-dimensional block subspace iteration (randomized range finder +
+/// power refinement), O(d²·r·iters) instead of Jacobi's O(d³·sweeps).
+///
+/// ‖A‖_F² is computed exactly; only σ_max is estimated, from below, so
+/// the approximation can only *overestimate* the stable rank — and the
+/// iteration runs until the σ̂² estimate moves by < 1e-5 relative per
+/// step. A per-step stall test is sound here because error and
+/// convergence rate are coupled: modes that contract slowly (σᵢ ≈ σ₁)
+/// contribute almost no error, while modes that contribute error
+/// (σᵢ ≤ (1−δ)σ₁) contract by (1−δ)² per step — splitting at the worst
+/// δ bounds the accepted relative σ̂² error by ≈ 2√tol ≈ 0.6%, within
+/// the 2% contract the tests enforce. If the tolerance is not reached
+/// within the iteration cap the function falls back to the exact Jacobi
+/// path. The sketch stream is a fixed function of the matrix shape:
+/// results are reproducible and thread-count independent.
+pub fn stable_rank_approx(a: &Tensor, r: usize) -> f64 {
+    let (m, n) = a.dims2();
+    let fro2: f64 = a.data.iter().map(|x| (*x as f64).powi(2)).sum();
+    if fro2 <= 0.0 || m == 0 || n == 0 {
+        return 0.0;
+    }
+    let r = r.max(1).min(n).min(m);
+    let mut rng = crate::rng::Rng::new(
+        0x5AB1_E57Au64 ^ ((m as u64) << 32) ^ n as u64,
+    );
+    let at = transpose(a);
+    // range sketch Q ∈ R^{n×r}; a degenerate gaussian draw is
+    // probability ~0 but cheap to resample (fresh draws, not a retry of
+    // the same sketch)
+    let mut q = Tensor::new(vec![n, r], rng.normal_f32_vec(n * r, 1.0));
+    if !orthonormalize_columns(&mut q) {
+        q = Tensor::new(vec![n, r], rng.normal_f32_vec(n * r, 1.0));
+        orthonormalize_columns(&mut q);
+    }
+    let mut sigma2_prev = 0.0f64;
+    for _ in 0..STABLE_RANK_MAX_ITERS {
+        let b = matmul(a, &q); // m×r
+        let bt = transpose(&b);
+        let g = matmul(&bt, &b); // r×r Gram of A·Q
+        let sigma2 = singular_values(&g)
+            .first()
+            .map(|s| *s as f64)
+            .unwrap_or(0.0);
+        if sigma2 > 0.0
+            && (sigma2 - sigma2_prev).abs() <= STABLE_RANK_REL_TOL * sigma2
+        {
+            return (fro2 / sigma2).max(1.0);
+        }
+        sigma2_prev = sigma2;
+        // power refinement: Q ← orth(Aᵀ·(A·Q)). Rank-deficient A leaves
+        // dependent columns near zero — harmless, they contribute
+        // nothing to the Rayleigh block.
+        let mut z = matmul(&at, &b);
+        orthonormalize_columns(&mut z);
+        q = z;
+    }
+    // tolerance not reached (pathological spectrum): exact fallback
+    stable_rank(a)
 }
 
 /// ‖A − A·U·Uᵀ‖_F — how far A's rows are from S (the "leak" metric used
@@ -176,19 +409,27 @@ pub fn out_of_subspace_norm(a: &Tensor, u: &Tensor) -> f64 {
 
 /// Best rank-r approximation error (for the error-accumulation experiment):
 /// returns A projected onto its top-r singular subspace via orthogonal
-/// iteration (deterministic start).
+/// iteration. A degenerate sketch is resampled once with fresh RNG
+/// draws — enough to rule out an unlucky gaussian draw (probability
+/// ~0); a second failure means A itself is rank-deficient, which no
+/// sketch can fix, and the dependent columns are zeroed by
+/// Gram–Schmidt and drop out of the projection harmlessly.
 pub fn low_rank_approx(a: &Tensor, r: usize, rng: &mut crate::rng::Rng) -> Tensor {
     let (_, n) = a.dims2();
     let r = r.min(n);
-    // Q ← orth(Aᵀ·A·sketch) — one subspace iteration is enough for tests
-    let sketch = Tensor::new(vec![n, r], rng.normal_f32_vec(n * r, 1.0));
     let at = transpose(a);
-    let mut q = matmul(&at, &matmul(a, &sketch));
+    // Q ← orth(Aᵀ·A·sketch) — one subspace iteration is enough for tests
+    let mut q = {
+        let sketch = Tensor::new(vec![n, r], rng.normal_f32_vec(n * r, 1.0));
+        matmul(&at, &matmul(a, &sketch))
+    };
     if !orthonormalize_columns(&mut q) {
+        let sketch = Tensor::new(vec![n, r], rng.normal_f32_vec(n * r, 1.0));
+        q = matmul(&at, &matmul(a, &sketch));
         orthonormalize_columns(&mut q);
     }
     // A ≈ (A·Q)·Qᵀ
-    matmul(&matmul(a, &q), &transpose(&q))
+    matmul_nt(&matmul(a, &q), &q)
 }
 
 #[cfg(test)]
@@ -198,6 +439,33 @@ mod tests {
 
     fn randt(rng: &mut Rng, m: usize, n: usize) -> Tensor {
         Tensor::new(vec![m, n], rng.normal_f32_vec(m * n, 1.0))
+    }
+
+    /// A (m×n) with prescribed singular values: U diag(s) Vᵀ from
+    /// orthonormalized gaussian U, V. Gives analytically-known stable
+    /// rank without running O(d³) Jacobi at large widths.
+    fn known_spectrum(
+        rng: &mut Rng,
+        m: usize,
+        n: usize,
+        svals: &[f32],
+    ) -> (Tensor, f64) {
+        let r = svals.len();
+        let u = random_orthonormal(m, r, rng);
+        let v = random_orthonormal(n, r, rng);
+        let mut us = u.clone();
+        for (j, s) in svals.iter().enumerate() {
+            for i in 0..m {
+                us.data[i * r + j] *= s;
+            }
+        }
+        let a = matmul_nt(&us, &v); // U·diag(s)·Vᵀ
+        let sum2: f64 = svals.iter().map(|s| (*s as f64).powi(2)).sum();
+        let max2 = svals
+            .iter()
+            .map(|s| (*s as f64).powi(2))
+            .fold(0.0f64, f64::max);
+        (a, sum2 / max2)
     }
 
     #[test]
@@ -220,10 +488,66 @@ mod tests {
     }
 
     #[test]
+    fn tiled_matmul_matches_reference_on_odd_shapes() {
+        // shapes deliberately not multiples of the 64/256 tiles
+        let mut rng = Rng::new(21);
+        for (m, k, n) in [(65usize, 130usize, 47usize), (100, 33, 277),
+                          (1, 100, 1), (7, 256, 300)] {
+            let a = randt(&mut rng, m, k);
+            let b = randt(&mut rng, k, n);
+            let tiled = matmul(&a, &b);
+            let naive = matmul_reference(&a, &b);
+            for (x, y) in tiled.data.iter().zip(&naive.data) {
+                assert!(
+                    (x - y).abs() <= 1e-5 * (1.0 + y.abs()),
+                    "({m}x{k}x{n}) tiled {x} vs naive {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_threading_is_bit_stable() {
+        // the determinism contract: identical bits for any thread count
+        let mut rng = Rng::new(22);
+        let a = randt(&mut rng, 128, 128);
+        let b = randt(&mut rng, 128, 128);
+        let _guard = crate::par::TEST_THREADS_LOCK.lock().unwrap();
+        let before = crate::par::max_threads_setting();
+        crate::par::set_max_threads(1);
+        let c1 = matmul(&a, &b);
+        crate::par::set_max_threads(4);
+        let c4 = matmul(&a, &b);
+        crate::par::set_max_threads(before);
+        assert_eq!(c1.data, c4.data);
+    }
+
+    #[test]
+    fn matmul_nt_matches_transpose_composition() {
+        let mut rng = Rng::new(23);
+        let a = randt(&mut rng, 19, 37);
+        let b = randt(&mut rng, 29, 37);
+        let fused = matmul_nt(&a, &b);
+        let composed = matmul(&a, &transpose(&b));
+        assert_eq!(fused.shape, vec![19, 29]);
+        for (x, y) in fused.data.iter().zip(&composed.data) {
+            assert!((x - y).abs() <= 1e-5 * (1.0 + y.abs()));
+        }
+    }
+
+    #[test]
     fn transpose_involutive() {
         let mut rng = Rng::new(2);
         let a = randt(&mut rng, 3, 8);
         assert_eq!(transpose(&transpose(&a)).data, a.data);
+        // exercise the blocked path on tile-straddling shapes
+        let b = randt(&mut rng, 45, 70);
+        let bt = transpose(&b);
+        for i in 0..45 {
+            for j in 0..70 {
+                assert_eq!(bt.at2(j, i), b.at2(i, j));
+            }
+        }
     }
 
     #[test]
@@ -242,6 +566,28 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn orthonormalize_zeroes_dependent_columns() {
+        // second column is a multiple of the first: it must come back
+        // exactly zero, not a normalized rounding-noise vector with
+        // O(0.1) overlap against column 0 (the pre-fix failure mode)
+        let mut rng = Rng::new(9);
+        let c = rng.normal_f32_vec(32, 1.0);
+        let mut data = Vec::with_capacity(64);
+        for x in &c {
+            data.push(*x);
+            data.push(2.0 * x);
+        }
+        let mut a = Tensor::new(vec![32, 2], data);
+        assert!(!orthonormalize_columns(&mut a));
+        for i in 0..32 {
+            assert_eq!(a.data[i * 2 + 1], 0.0, "row {i} not zeroed");
+        }
+        let n0: f64 =
+            (0..32).map(|i| (a.data[i * 2] as f64).powi(2)).sum();
+        assert!((n0.sqrt() - 1.0).abs() < 1e-5);
     }
 
     #[test]
@@ -286,6 +632,62 @@ mod tests {
     }
 
     #[test]
+    fn stable_rank_approx_matches_exact_on_random() {
+        let mut rng = Rng::new(31);
+        for (m, n) in [(96usize, 128usize), (128, 96), (120, 120)] {
+            let a = randt(&mut rng, m, n);
+            let exact = stable_rank(&a);
+            let approx = stable_rank_approx(&a, STABLE_RANK_SKETCH);
+            assert!(
+                (approx - exact).abs() <= 0.02 * exact,
+                "({m}x{n}) approx {approx} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn stable_rank_approx_low_rank_wide() {
+        // rank-3 with known spectrum at width 512: exact value analytic
+        let mut rng = Rng::new(32);
+        let (a, want) =
+            known_spectrum(&mut rng, 512, 256, &[5.0, 3.0, 1.0]);
+        let approx = stable_rank_approx(&a, STABLE_RANK_SKETCH);
+        assert!(
+            (approx - want).abs() <= 0.02 * want,
+            "approx {approx} vs analytic {want}"
+        );
+    }
+
+    #[test]
+    fn stable_rank_approx_ill_conditioned() {
+        // geometric spectrum over 6 decades, 512 wide (analytic truth)
+        let mut rng = Rng::new(33);
+        let svals: Vec<f32> = (0..12)
+            .map(|i| 1e3 * (10f32).powf(-0.5 * i as f32))
+            .collect();
+        let (a, want) = known_spectrum(&mut rng, 512, 512, &svals);
+        let approx = stable_rank_approx(&a, STABLE_RANK_SKETCH);
+        assert!(
+            (approx - want).abs() <= 0.02 * want,
+            "approx {approx} vs analytic {want}"
+        );
+        // near-degenerate top pair: the block must capture both
+        let (b, want2) =
+            known_spectrum(&mut rng, 256, 256, &[4.0, 3.999, 2.0, 0.5]);
+        let approx2 = stable_rank_approx(&b, STABLE_RANK_SKETCH);
+        assert!(
+            (approx2 - want2).abs() <= 0.02 * want2,
+            "approx {approx2} vs analytic {want2}"
+        );
+    }
+
+    #[test]
+    fn stable_rank_approx_zero_matrix() {
+        let z = Tensor::zeros(&[17, 9]);
+        assert_eq!(stable_rank_approx(&z, 4), 0.0);
+    }
+
+    #[test]
     fn project_rows_idempotent() {
         let mut rng = Rng::new(6);
         let u = random_orthonormal(16, 4, &mut rng);
@@ -311,5 +713,39 @@ mod tests {
             a.data.iter().zip(&ap.data).map(|(x, y)| (x - y).powi(2)).sum::<f32>()
         };
         assert!(e16 < e2, "rank-16 err {e16} !< rank-2 err {e2}");
+    }
+
+    #[test]
+    fn low_rank_approx_rank_deficient_regression() {
+        // rank-2 input, rank-8 request: the sketch is necessarily
+        // degenerate — the old code retried orthonormalization on the
+        // same sketch (a no-op); the fix resamples, and residual
+        // dependent columns drop out. The approximation must still
+        // reconstruct A (it has rank ≤ requested) with no NaNs.
+        let mut rng = Rng::new(8);
+        let u = randt(&mut rng, 64, 2);
+        let v = randt(&mut rng, 2, 48);
+        let a = matmul(&u, &v);
+        let ap = low_rank_approx(&a, 8, &mut rng);
+        assert!(ap.data.iter().all(|x| x.is_finite()));
+        let num: f64 = a
+            .data
+            .iter()
+            .zip(&ap.data)
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let den: f64 = a
+            .data
+            .iter()
+            .map(|x| (*x as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!(num / den < 1e-2, "relative error {}", num / den);
+        // the fully-degenerate extreme: a zero matrix (every sketch
+        // fails) must come back as zeros, not NaNs
+        let z = Tensor::zeros(&[12, 10]);
+        let zp = low_rank_approx(&z, 4, &mut rng);
+        assert!(zp.data.iter().all(|x| x.is_finite() && x.abs() < 1e-6));
     }
 }

@@ -17,6 +17,7 @@ use protomodels::exp::{self, ExpOpts};
 use protomodels::manifest::Manifest;
 use protomodels::metrics::{perplexity, RunLog};
 use protomodels::netsim::{LinkSpec, ReplicaRing, Topology};
+use protomodels::par;
 use protomodels::rng::Rng;
 use protomodels::timemodel::TimeModel;
 
@@ -34,15 +35,22 @@ USAGE:
                       [--dp-bandwidth 80mbps] [--hetero 1,1,2]
                       [--artifacts artifacts] [--out results] [--label NAME]
   protomodels exp     <name|all> [--fast] [--steps N] [--seed N]
+                      [--threads N] [--exact-rank]
                       [--artifacts artifacts] [--out results]
       names: {}
   protomodels inspect [--artifacts artifacts]
   protomodels timing  [--config tiny] [--steps 3]
+  protomodels bench   [--json] [--fast] [--out .] [--threads N]
 
 Replicated runs (--replicas > 1) train R data-parallel pipeline replicas
 and all-reduce weight gradients over a simulated cross-replica ring; the
 payload is priced under --dp-mode and --hetero assigns per-replica
 compute slowdowns (stragglers). See DESIGN.md §6.
+
+--threads N runs experiment grid cells on an N-worker pool (default:
+all cores; emitted CSVs are byte-identical for any N). `bench --json`
+writes BENCH_linalg.json / BENCH_pipeline.json perf-trajectory files
+to --out (DESIGN.md §8).
 ",
         exp::ALL.join(", ")
     );
@@ -233,8 +241,8 @@ fn cmd_timing(flags: &Flags) -> Result<()> {
     for _ in 0..steps {
         pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
     }
-    print!("{}", pipe.rt.borrow().timing_report());
-    let compute = pipe.rt.borrow().total_compute_seconds();
+    print!("{}", pipe.timing_report());
+    let compute = pipe.total_compute_seconds();
     println!(
         "total PJRT compute: {compute:.3}s | host coordination: {:.3}s \
          ({:.1}% overhead)",
@@ -244,12 +252,178 @@ fn cmd_timing(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+/// `bench` subcommand: the in-tree perf suite. Artifact-free — it
+/// exercises the linalg kernels and the analytic pipeline cost model
+/// only, so CI can track the perf trajectory without JAX/PJRT. With
+/// `--json` the results land in `BENCH_linalg.json` and
+/// `BENCH_pipeline.json` under `--out` (default: the current directory,
+/// i.e. the repo root under `make bench`).
+fn cmd_bench(flags: &Flags) -> Result<()> {
+    use protomodels::bench::{black_box, write_json, BenchEntry, Bencher};
+    use protomodels::coordinator::replica::{
+        simulate_hybrid_step, HybridSimSpec,
+    };
+    use protomodels::linalg;
+    use protomodels::manifest::Hyper;
+    use protomodels::netsim::MBPS;
+    use protomodels::tensor::Tensor;
+
+    let json = flags.switch("json");
+    let fast = flags.switch("fast");
+    let out = std::path::PathBuf::from(flags.str("out", "."));
+    let bench = if fast { Bencher::quick() } else { Bencher::default() };
+    let randt = |seed: u64, m: usize, n: usize| -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::new(vec![m, n], rng.normal_f32_vec(m * n, 1.0))
+    };
+
+    // ---- linalg kernels ----
+    let mut linalg_entries: Vec<BenchEntry> = Vec::new();
+    let mm_sizes: &[usize] = if fast { &[128, 256] } else { &[256, 512] };
+    for &d in mm_sizes {
+        let a = randt(1, d, d);
+        let b = randt(2, d, d);
+        let flops = 2.0 * (d as f64).powi(3);
+        let r = bench.run(&format!("matmul_tiled_{d}"), || {
+            black_box(linalg::matmul(black_box(&a), black_box(&b)));
+        });
+        println!("    -> {:.2} GFLOP/s", r.throughput(flops) / 1e9);
+        linalg_entries
+            .push(BenchEntry { result: r, items_per_iter: Some(flops) });
+        let r = bench.run(&format!("matmul_reference_{d}"), || {
+            black_box(linalg::matmul_reference(black_box(&a), black_box(&b)));
+        });
+        linalg_entries
+            .push(BenchEntry { result: r, items_per_iter: Some(flops) });
+        let r = bench.run(&format!("transpose_{d}"), || {
+            black_box(linalg::transpose(black_box(&a)));
+        });
+        linalg_entries.push(BenchEntry {
+            result: r,
+            items_per_iter: Some((d * d) as f64),
+        });
+    }
+    {
+        // fused row projection (W·U)·Uᵀ at the init/reproject shape
+        let w = randt(3, 1024, 256);
+        let mut u = randt(4, 256, 8);
+        linalg::orthonormalize_columns(&mut u);
+        let r = bench.run("project_rows_1024x256_k8", || {
+            black_box(linalg::project_rows(black_box(&w), black_box(&u)));
+        });
+        linalg_entries.push(BenchEntry { result: r, items_per_iter: None });
+    }
+    // stable rank: exact Jacobi vs the randomized range-finder
+    let exact_sizes: &[usize] = if fast { &[128] } else { &[128, 256] };
+    for &d in exact_sizes {
+        let a = randt(5, d, d);
+        let r = bench.run(&format!("stable_rank_exact_{d}"), || {
+            black_box(linalg::stable_rank(black_box(&a)));
+        });
+        linalg_entries.push(BenchEntry { result: r, items_per_iter: None });
+    }
+    let approx_sizes: &[usize] =
+        if fast { &[128, 256] } else { &[256, 512, 1024] };
+    for &d in approx_sizes {
+        let a = randt(5, d, d);
+        let r = bench.run(&format!("stable_rank_approx_{d}"), || {
+            black_box(linalg::stable_rank_approx(
+                black_box(&a),
+                linalg::STABLE_RANK_SKETCH,
+            ));
+        });
+        linalg_entries.push(BenchEntry { result: r, items_per_iter: None });
+    }
+
+    // ---- pipeline cost model + worker pool ----
+    let mut pipe_entries: Vec<BenchEntry> = Vec::new();
+    for (name, h) in
+        [("small_sim", Hyper::small_sim()), ("base_sim", Hyper::base_sim())]
+    {
+        let spec = HybridSimSpec::uniform(h, 4, 80.0 * MBPS);
+        let r = bench.run(&format!("simulate_hybrid_step_{name}_r4"), || {
+            black_box(simulate_hybrid_step(black_box(&spec)));
+        });
+        pipe_entries.push(BenchEntry { result: r, items_per_iter: None });
+    }
+    {
+        // pool scaling on a synthetic grid of single-threaded cells
+        // (96³ stays under the matmul threading threshold, so the
+        // serial baseline really is serial)
+        let cells: Vec<u64> = (0..32).collect();
+        let cell = |seed: u64| {
+            for rep in 0..4u64 {
+                let a = randt(seed ^ (rep << 8), 96, 96);
+                let b = randt(seed ^ (rep << 8) ^ 1, 96, 96);
+                black_box(linalg::matmul(&a, &b));
+            }
+        };
+        let r1 = bench.run("par_grid_32cells_threads1", || {
+            par::map(1, &cells, |_, s| cell(*s));
+        });
+        let avail = par::max_threads();
+        // only meaningful (and uniquely named) when a pool exists
+        let rn = if avail > 1 {
+            let rn =
+                bench.run(&format!("par_grid_32cells_threads{avail}"), || {
+                    par::map(avail, &cells, |_, s| cell(*s));
+                });
+            println!(
+                "    -> pool speedup at {avail} threads: {:.2}x",
+                r1.mean_ns / rn.mean_ns
+            );
+            Some(rn)
+        } else {
+            None
+        };
+        pipe_entries.push(BenchEntry { result: r1, items_per_iter: None });
+        if let Some(rn) = rn {
+            pipe_entries.push(BenchEntry { result: rn, items_per_iter: None });
+        }
+    }
+    {
+        // end-to-end grid driver (artifact-free): dp-grid fast preset
+        let tmp = std::env::temp_dir().join("protomodels_bench_dp_grid");
+        let widths: Vec<usize> = if par::max_threads() > 1 {
+            vec![1, par::max_threads()]
+        } else {
+            vec![1]
+        };
+        for threads in widths {
+            let opts = ExpOpts {
+                out_dir: tmp.join(format!("t{threads}")),
+                fast: true,
+                threads,
+                ..Default::default()
+            };
+            let r = bench
+                .run(&format!("exp_dp_grid_fast_threads{threads}"), || {
+                    exp::run("dp-grid", &opts).expect("dp-grid bench run");
+                });
+            pipe_entries.push(BenchEntry { result: r, items_per_iter: None });
+        }
+    }
+
+    if json {
+        write_json(out.join("BENCH_linalg.json"), "linalg", &linalg_entries)?;
+        write_json(
+            out.join("BENCH_pipeline.json"),
+            "pipeline",
+            &pipe_entries,
+        )?;
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() {
         usage();
     }
     let flags = Flags::parse(&args[1..])?;
+    // global thread budget: experiment pools and the threaded linalg
+    // kernels both key off this (0 = all available cores)
+    par::set_max_threads(flags.usize("threads", 0)?);
     match args[0].as_str() {
         "train" => cmd_train(&flags),
         "inspect" => cmd_inspect(&flags),
@@ -266,9 +440,12 @@ fn main() -> Result<()> {
                 fast: flags.switch("fast"),
                 steps: flags.opt("steps").map(|s| s.parse()).transpose()?,
                 seed: flags.usize("seed", 17)? as u64,
+                threads: flags.usize("threads", 0)?,
+                exact_rank: flags.switch("exact-rank"),
             };
             exp::run(&name, &opts)
         }
+        "bench" => cmd_bench(&flags),
         "help" | "--help" | "-h" => usage(),
         other => bail!("unknown subcommand {other:?} (try --help)"),
     }

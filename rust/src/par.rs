@@ -1,0 +1,243 @@
+//! Scoped thread pool for experiment grids and linalg kernels (no
+//! external crates).
+//!
+//! Design contract (DESIGN.md §8):
+//!
+//! - **Deterministic work assignment.** Job *results* are collected in
+//!   submission order ([`map`] / [`try_map`]), and per-cell randomness is
+//!   derived from `(master_seed, cell_index)` only ([`cell_seed`]), never
+//!   from pool size or execution interleaving. A grid driver built on
+//!   this module therefore emits byte-identical CSVs at `--threads 1`
+//!   and `--threads N`.
+//! - **No nested oversubscription.** Pool workers carry a thread-local
+//!   kernel budget — their fair share `max_threads() / workers` of the
+//!   global budget; the threaded linalg kernels consult
+//!   [`kernel_threads`], so a grid of jobs never multiplies by the
+//!   kernels' own parallelism, yet a grid with fewer cells than cores
+//!   still uses the whole machine.
+//! - **Scoped threads only.** Workers are `std::thread::scope` children
+//!   of the submitting call: no detached state, panics propagate to the
+//!   caller, and non-`Send` values (e.g. a PJRT `Runtime`) can be
+//!   constructed and dropped entirely inside one worker.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+/// Global thread budget set from the CLI (`--threads N`); 0 = auto
+/// (use [`available`]).
+static MAX_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Serializes unit tests that temporarily mutate [`MAX_THREADS`] —
+/// cargo's harness runs tests of one binary concurrently.
+#[cfg(test)]
+pub(crate) static TEST_THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+thread_local! {
+    /// Kernel-thread budget granted to the current pool worker
+    /// (0 = this thread is not a pool worker).
+    static WORKER_KERNEL_BUDGET: Cell<usize> = Cell::new(0);
+}
+
+/// Hardware parallelism of this host (≥ 1).
+pub fn available() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Set the global thread budget (0 = auto). Wired to `--threads`.
+pub fn set_max_threads(n: usize) {
+    MAX_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// The effective global thread budget (≥ 1).
+pub fn max_threads() -> usize {
+    let n = MAX_THREADS.load(Ordering::Relaxed);
+    if n == 0 {
+        available()
+    } else {
+        n.max(1)
+    }
+}
+
+/// The raw configured budget (0 = auto). Lets callers save and restore
+/// the setting without resolving the auto default to a pinned count.
+pub fn max_threads_setting() -> usize {
+    MAX_THREADS.load(Ordering::Relaxed)
+}
+
+/// Whether the calling thread is a pool worker.
+pub fn in_worker() -> bool {
+    WORKER_KERNEL_BUDGET.with(|b| b.get()) != 0
+}
+
+/// Thread budget for *kernel-internal* parallelism. Inside a pool
+/// worker this is the worker's granted share of the global budget
+/// (`max_threads() / workers`, ≥ 1) — a 3-cell grid on a 16-core host
+/// still drives 15 cores instead of pinning each cell to one — and the
+/// full global budget otherwise. Kernels must produce identical
+/// results for every budget, so this only shifts wall-clock.
+pub fn kernel_threads() -> usize {
+    let granted = WORKER_KERNEL_BUDGET.with(|b| b.get());
+    if granted != 0 {
+        granted
+    } else {
+        max_threads()
+    }
+}
+
+/// Deterministic per-cell seed: a SplitMix64-style finalizer over
+/// `(master, index)`. Depends only on the pair — stable under pool-size
+/// changes, execution order, and driver refactors that keep cell order.
+pub fn cell_seed(master: u64, index: usize) -> u64 {
+    let mut z = master
+        ^ (index as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Run `f(index, &items[index])` for every item on up to `threads`
+/// scoped workers and return the results **in input order**, regardless
+/// of which worker finished first. Work is pulled from a shared atomic
+/// counter (dynamic load balancing — cells of a grid can differ in cost
+/// by orders of magnitude). Worker panics propagate to the caller.
+pub fn map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    // each worker's fair share of the global budget, for nested kernels
+    let kernel_budget = (max_threads() / threads).max(1);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                WORKER_KERNEL_BUDGET.with(|b| b.set(kernel_budget));
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(i, &items[i]);
+                    *slots[i].lock().unwrap() = Some(r);
+                }
+                WORKER_KERNEL_BUDGET.with(|b| b.set(0));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("pool worker left a result slot empty")
+        })
+        .collect()
+}
+
+/// [`map`] over fallible jobs. Every cell runs (no early cancellation —
+/// jobs may hold partially-written per-cell outputs); the *first error
+/// in input order* is returned, so the reported failure is deterministic
+/// under any interleaving.
+pub fn try_map<T, R, F>(threads: usize, items: &[T], f: F) -> Result<Vec<R>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> Result<R> + Sync,
+{
+    let results = map(threads, items, f);
+    let mut out = Vec::with_capacity(results.len());
+    for r in results {
+        out.push(r?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order_across_pool_sizes() {
+        let items: Vec<usize> = (0..57).collect();
+        let serial: Vec<usize> =
+            items.iter().map(|x| x * x + 1).collect();
+        for threads in [1usize, 2, 3, 4, 8, 16] {
+            let got = map(threads, &items, |i, x| {
+                assert_eq!(i, *x);
+                x * x + 1
+            });
+            assert_eq!(got, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_handles_empty_and_single() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(map(4, &empty, |_, x| *x).is_empty());
+        assert_eq!(map(4, &[7u32], |_, x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn try_map_returns_first_error_by_index() {
+        let items: Vec<usize> = (0..40).collect();
+        for threads in [1usize, 4] {
+            let err = try_map(threads, &items, |_, x| {
+                if *x == 13 || *x == 31 {
+                    anyhow::bail!("cell {x} failed")
+                }
+                Ok(*x)
+            })
+            .unwrap_err();
+            assert_eq!(err.to_string(), "cell 13 failed");
+        }
+        let ok = try_map(3, &items[..5], |_, x| Ok(*x)).unwrap();
+        assert_eq!(ok, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn cell_seed_stable_and_spread() {
+        // depends only on (master, index): recomputing under any "pool
+        // size" is the identity — the API has no pool input at all
+        assert_eq!(cell_seed(17, 3), cell_seed(17, 3));
+        // distinct across indices and masters
+        let seeds: Vec<u64> = (0..64).map(|i| cell_seed(17, i)).collect();
+        let mut uniq = seeds.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len());
+        assert_ne!(cell_seed(17, 0), cell_seed(18, 0));
+    }
+
+    #[test]
+    fn workers_are_flagged_and_main_is_not() {
+        assert!(!in_worker());
+        let flags = map(4, &[0u8; 16], |_, _| in_worker());
+        assert!(flags.iter().all(|f| *f));
+        assert!(!in_worker());
+    }
+
+    #[test]
+    fn worker_kernel_budget_is_fair_share() {
+        // a 2-cell grid must not pin each worker's kernels to 1 thread
+        // when the budget allows more
+        let _guard = TEST_THREADS_LOCK.lock().unwrap();
+        let before = max_threads_setting();
+        set_max_threads(8);
+        let budgets = map(2, &[0u8; 2], |_, _| kernel_threads());
+        set_max_threads(before);
+        assert!(budgets.iter().all(|b| *b == 4), "budgets {budgets:?}");
+    }
+}

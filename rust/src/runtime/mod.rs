@@ -19,7 +19,11 @@ use crate::tensor::{IntTensor, Tensor, Value};
 /// A runtime shared by several pipelines (replicated data-parallel runs):
 /// one PJRT client and one compiled-executable cache serve every replica,
 /// so R replicas pay the compile cost once instead of R times. All
-/// coordination is single-threaded, hence `Rc<RefCell<…>>`.
+/// replica coordination is single-threaded, hence `Rc<RefCell<…>>` —
+/// this type is **not** `Send`. Parallel experiment grids therefore
+/// never share a runtime: each grid cell constructs an *owned* `Runtime`
+/// inside its pool worker (`coordinator::RtHandle::Owned`) and drops it
+/// there, which also keeps PJRT clients strictly thread-local.
 pub type SharedRuntime = Rc<RefCell<Runtime>>;
 
 /// PJRT execution engine for one config: compiles AOT HLO-text artifacts

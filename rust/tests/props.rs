@@ -11,8 +11,9 @@ use protomodels::coordinator::schedule::{
     gpipe_makespan, hybrid_makespan, StepCosts, Tx,
 };
 use protomodels::linalg::{
-    matmul, orthonormalize_columns, project_rows, singular_values,
-    stable_rank, transpose,
+    matmul, matmul_nt, matmul_reference, orthonormalize_columns,
+    project_rows, singular_values, stable_rank, stable_rank_approx,
+    transpose, STABLE_RANK_SKETCH,
 };
 use protomodels::netsim::{
     ring_allreduce_bytes_per_link, Link, LinkSpec, ReplicaRing, Topology,
@@ -363,6 +364,50 @@ fn prop_hybrid_makespan_invariants() {
         if replicas == 1 {
             assert_eq!(h.tail, 0.0, "seed {seed}: R=1 must be comm-free");
         }
+    }
+}
+
+#[test]
+fn prop_tiled_matmul_bitwise_equals_reference() {
+    // the tiled/threaded kernel keeps the naive per-element accumulation
+    // order, so it must agree *bitwise* on arbitrary (tile-straddling)
+    // shapes — the foundation of the grid determinism contract
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed ^ 0x7B);
+        let m = 1 + rng.below(90);
+        let k = 1 + rng.below(300);
+        let n = 1 + rng.below(300);
+        let a = randt(&mut rng, &[m, k]);
+        let b = randt(&mut rng, &[k, n]);
+        let tiled = matmul(&a, &b);
+        let naive = matmul_reference(&a, &b);
+        assert_eq!(
+            tiled.data, naive.data,
+            "seed {seed}: ({m}x{k}x{n}) tiled != reference"
+        );
+        // fused A·Bᵀ agrees with the transpose composition the same way
+        let bt = randt(&mut rng, &[n, k]);
+        let fused = matmul_nt(&a, &bt);
+        let composed = matmul(&a, &transpose(&bt));
+        assert_eq!(fused.data, composed.data, "seed {seed}: nt mismatch");
+    }
+}
+
+#[test]
+fn prop_stable_rank_approx_within_tolerance() {
+    // randomized estimator vs exact Jacobi, over random shapes/spectra:
+    // the ISSUE's 2% contract, with fallback-to-exact as the safety net
+    for seed in 0..15u64 {
+        let mut rng = Rng::new(seed ^ 0x7C);
+        let m = 16 + rng.below(48);
+        let n = 16 + rng.below(48);
+        let a = randt(&mut rng, &[m, n]);
+        let exact = stable_rank(&a);
+        let approx = stable_rank_approx(&a, STABLE_RANK_SKETCH);
+        assert!(
+            (approx - exact).abs() <= 0.02 * exact.max(1e-12),
+            "seed {seed}: ({m}x{n}) approx {approx} vs exact {exact}"
+        );
     }
 }
 
