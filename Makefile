@@ -1,4 +1,5 @@
-.PHONY: artifacts build test bench bench-full bench-micro clean
+.PHONY: artifacts build test bench bench-full bench-micro bench-check \
+        bench-baseline sim-grid churn-sweep clean
 
 # AOT-lower the JAX numerics to HLO text + manifest (needs python/jax).
 # The rust tests look for artifacts under rust/artifacts; the CLI default
@@ -25,6 +26,42 @@ bench-full: build
 # The cargo micro-bench binaries (some need `make artifacts` first).
 bench-micro:
 	cargo bench
+
+# Regression gate: compare the BENCH_*.json written by `make bench`
+# against the committed BENCH_baseline/ ceilings (fails on >25%).
+bench-check: bench
+	./target/release/protomodels bench --check BENCH_baseline
+
+# Re-anchor the committed ceilings from a fresh --fast run on this
+# machine: ceiling = 3x the measured mean, machine-dependent
+# (…_threadsN) entries dropped. Review the diff before committing —
+# the gate inherits it.
+define BASELINE_PY
+import json, re
+for suite in ("linalg", "pipeline"):
+    cur = json.load(open("BENCH_%s.json" % suite))
+    # drop machine-dependent ..._threadsN entries, but keep ..._threads1
+    # (produced on every machine and gated by the committed baseline)
+    keep = [r for r in cur["results"]
+            if not re.search(r"threads(?!1$)\d+$", r["name"])]
+    out = {"suite": suite,
+           "note": "wall-time ceilings for bench --check; regenerated "
+                   "by `make bench-baseline`",
+           "results": [{"name": r["name"],
+                        "mean_ns": round(r["mean_ns"] * 3)} for r in keep]}
+    json.dump(out, open("BENCH_baseline/%s.json" % suite, "w"))
+endef
+export BASELINE_PY
+
+bench-baseline: bench
+	python3 -c "$$BASELINE_PY"
+
+# Discrete-event swarm simulator grids (artifact-free; DESIGN.md §9).
+sim-grid: build
+	./target/release/protomodels exp sim-grid --out results
+
+churn-sweep: build
+	./target/release/protomodels exp churn-sweep --out results
 
 clean:
 	cargo clean

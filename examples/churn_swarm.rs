@@ -1,0 +1,120 @@
+//! Node churn over consumer internet: the discrete-event swarm
+//! simulator (DESIGN.md §9).
+//!
+//! A fixed wall-clock churn timeline — a member leaves every ~1.1
+//! simulated seconds and returns 0.45 s later — hits two protocols at
+//! 80 Mbps: subspace-compressed (activations, gradients, *and* the
+//! rejoin state sync all priced at k/d of raw) versus raw. Because the
+//! timeline is anchored to wall clock, a protocol whose steps are slow
+//! absorbs proportionally more churn per step: raw's ~4.7 s steps eat
+//! dozens of leave/rejoin cycles (each rejoin stalling a barrier for
+//! an ~82 MB state sync), while subspace's ~0.2 s steps dodge almost
+//! all of them and pay ~2.6 MB when they don't.
+//!
+//! Acceptance (ISSUE 3): under this churn at 80 Mbps, subspace keeps
+//! the mean step within 1.5x of its no-churn baseline; raw degrades by
+//! more than 3x. Runs entirely on the analytic cost model — no AOT
+//! artifacts or PJRT backend needed.
+//!
+//!     cargo run --release --example churn_swarm
+
+use protomodels::compress::Mode;
+use protomodels::manifest::Hyper;
+use protomodels::netsim::{LinkSpec, MBPS};
+use protomodels::sim::{
+    simulate_swarm, ChurnEvent, ChurnKind, ChurnSpec, SimReport, SwarmSpec,
+};
+
+/// Deterministic links: all timing differences below come from the
+/// protocol, not from sampled jitter.
+fn quiet(bw_mbps: f64) -> LinkSpec {
+    LinkSpec { bandwidth_bps: bw_mbps * MBPS, latency_s: 2e-3, jitter_frac: 0.0 }
+}
+
+/// One leave/rejoin cycle every `period` seconds out to `horizon`,
+/// round-robining over replicas 1..=3 (replica 0 stays). The same
+/// absolute timeline hits every protocol — the honest comparison.
+fn churn_timeline(period: f64, downtime: f64, horizon: f64) -> ChurnSpec {
+    let mut events = Vec::new();
+    let mut t = 0.7;
+    let mut k = 0usize;
+    while t < horizon {
+        let replica = 1 + (k % 3);
+        events.push(ChurnEvent { time: t, replica, kind: ChurnKind::Leave });
+        events.push(ChurnEvent {
+            time: t + downtime,
+            replica,
+            kind: ChurnKind::Rejoin,
+        });
+        k += 1;
+        t += period;
+    }
+    ChurnSpec::Scripted(events)
+}
+
+fn run(mode: Mode, churn: Option<ChurnSpec>) -> SimReport {
+    let mut spec = SwarmSpec::uniform(Hyper::base_sim(), 4, 80.0 * MBPS);
+    spec.link = quiet(80.0);
+    spec.ring_link = quiet(80.0);
+    spec.mode = mode;
+    spec.dp_mode = mode;
+    spec.steps = 6;
+    if let Some(c) = churn {
+        spec.churn = c;
+    }
+    simulate_swarm(&spec).expect("swarm simulation")
+}
+
+fn main() {
+    let churn = || Some(churn_timeline(1.1, 0.45, 400.0));
+
+    println!("6 hybrid steps at 80 Mbps, 4 replicas, leave/rejoin every 1.1s\n");
+    println!(
+        "{:>10} {:>14} {:>14} {:>9} {:>8} {:>9} {:>9}",
+        "mode", "no-churn s/step", "churn s/step", "degrade",
+        "leaves", "rejoins", "restarts"
+    );
+    let mut ratios = Vec::new();
+    for mode in [Mode::Subspace, Mode::Raw] {
+        let base = run(mode, None);
+        let churned = run(mode, churn());
+        let ratio = churned.mean_step() / base.mean_step();
+        ratios.push((mode, ratio, churned.allreduce_restarts));
+        println!(
+            "{:>10} {:>14.4} {:>14.4} {:>8.2}x {:>8} {:>9} {:>9}",
+            mode.as_str(),
+            base.mean_step(),
+            churned.mean_step(),
+            ratio,
+            churned.leaves,
+            churned.rejoins,
+            churned.allreduce_restarts,
+        );
+    }
+
+    let (_, sub_ratio, sub_restarts) = ratios[0];
+    let (_, raw_ratio, raw_restarts) = ratios[1];
+
+    // acceptance (a): subspace stays within 1.5x of its no-churn pace
+    assert!(
+        sub_ratio <= 1.5,
+        "subspace degraded {sub_ratio:.2}x under churn (must stay <= 1.5x)"
+    );
+    // acceptance (b): raw degrades past 3x — its long steps absorb far
+    // more of the wall-clock churn timeline, and every rejoin stalls a
+    // barrier for a raw-priced state sync
+    assert!(
+        raw_ratio > 3.0,
+        "raw degraded only {raw_ratio:.2}x under churn (expected > 3x)"
+    );
+    // sanity: the mid-all-reduce abort path actually fired
+    assert!(
+        sub_restarts + raw_restarts >= 1,
+        "no all-reduce was ever interrupted by churn"
+    );
+
+    println!(
+        "\nok: subspace stays within {sub_ratio:.2}x of its no-churn step \
+         time; raw degrades {raw_ratio:.1}x at the same 80 Mbps churn"
+    );
+}

@@ -110,6 +110,102 @@ pub fn write_json(
     Ok(path)
 }
 
+// ---------------------------------------------------------------------------
+// regression gate (`protomodels bench --check <dir>`)
+// ---------------------------------------------------------------------------
+
+/// Outcome of one baseline comparison.
+pub struct RegressionCheck {
+    /// entries compared against a baseline value
+    pub checked: usize,
+    /// current entries with no baseline (new or machine-dependent names)
+    pub skipped: usize,
+    /// human-readable description of every entry that regressed
+    pub failures: Vec<String>,
+}
+
+/// `name → mean_ns` of one `{"suite": .., "results": [..]}` file.
+pub fn load_suite_means(path: &Path) -> Result<BTreeMap<String, f64>> {
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        anyhow::anyhow!("cannot read bench suite {}: {e}", path.display())
+    })?;
+    let json = Json::parse(&text)?;
+    let mut means = BTreeMap::new();
+    for entry in json.get("results")?.arr()? {
+        means.insert(
+            entry.get("name")?.str()?.to_string(),
+            entry.get("mean_ns")?.num()?,
+        );
+    }
+    Ok(means)
+}
+
+/// Compare the `BENCH_{linalg,pipeline}.json` under `current_dir`
+/// (written by `bench --json`) against `{linalg,pipeline}.json` under
+/// `baseline_dir` (the committed `BENCH_baseline/`). An entry fails
+/// when its mean wall time grew beyond `max_regress` (0.25 = +25%)
+/// over the baseline; entries without a baseline (new benches,
+/// machine-dependent names like `..._threadsN`) are skipped with a
+/// note. The committed baselines are deliberately generous ceilings —
+/// CI runners vary — so the gate catches order-of-magnitude
+/// regressions, not noise (DESIGN.md §8).
+pub fn check_regressions(
+    current_dir: &Path,
+    baseline_dir: &Path,
+    max_regress: f64,
+) -> Result<RegressionCheck> {
+    let pairs = [
+        ("BENCH_linalg.json", "linalg.json"),
+        ("BENCH_pipeline.json", "pipeline.json"),
+    ];
+    let mut report =
+        RegressionCheck { checked: 0, skipped: 0, failures: Vec::new() };
+    for (current_name, baseline_name) in pairs {
+        let current = load_suite_means(&current_dir.join(current_name))?;
+        let baseline = load_suite_means(&baseline_dir.join(baseline_name))?;
+        // a baseline entry with no current measurement means the gate
+        // lost coverage (renamed/deleted bench) — fail loudly so the
+        // baseline gets updated deliberately, not silently ignored
+        for name in baseline.keys() {
+            if !current.contains_key(name) {
+                report.failures.push(format!(
+                    "{name}: baseline entry missing from the current \
+                     {current_name} run (renamed bench? update \
+                     BENCH_baseline deliberately)"
+                ));
+            }
+        }
+        for (name, mean_ns) in &current {
+            let base_ns = match baseline.get(name) {
+                Some(b) => *b,
+                None => {
+                    eprintln!("[bench check] no baseline for {name}, skipping");
+                    report.skipped += 1;
+                    continue;
+                }
+            };
+            let ratio = mean_ns / base_ns.max(1e-9);
+            let verdict = if ratio > 1.0 + max_regress { "FAIL" } else { "ok" };
+            println!(
+                "[bench check] {name:<44} {:>12} vs baseline {:>12}  \
+                 ({ratio:>5.2}x) {verdict}",
+                fmt_ns(*mean_ns),
+                fmt_ns(base_ns),
+            );
+            report.checked += 1;
+            if ratio > 1.0 + max_regress {
+                report.failures.push(format!(
+                    "{name}: {} vs baseline {} ({ratio:.2}x > {:.2}x)",
+                    fmt_ns(*mean_ns),
+                    fmt_ns(base_ns),
+                    1.0 + max_regress
+                ));
+            }
+        }
+    }
+    Ok(report)
+}
+
 /// Human-readable duration from nanoseconds.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -237,6 +333,59 @@ mod tests {
                 .unwrap();
         assert_eq!(parsed.get("suite").unwrap().str().unwrap(), "test");
         assert_eq!(parsed.get("results").unwrap().arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn regression_gate_flags_slow_entries() {
+        let root = std::env::temp_dir().join("protomodels_test_bench_check");
+        let cur = root.join("cur");
+        let base = root.join("base");
+        std::fs::create_dir_all(&cur).unwrap();
+        std::fs::create_dir_all(&base).unwrap();
+        let suite = |entries: &[(&str, f64)]| {
+            let rows: Vec<String> = entries
+                .iter()
+                .map(|(n, m)| format!(r#"{{"name":"{n}","mean_ns":{m}}}"#))
+                .collect();
+            format!(r#"{{"suite":"x","results":[{}]}}"#, rows.join(","))
+        };
+        std::fs::write(
+            cur.join("BENCH_linalg.json"),
+            suite(&[("a", 1000.0), ("b", 2000.0), ("new", 500.0)]),
+        )
+        .unwrap();
+        std::fs::write(
+            base.join("linalg.json"),
+            suite(&[("a", 900.0), ("b", 1000.0)]),
+        )
+        .unwrap();
+        std::fs::write(cur.join("BENCH_pipeline.json"), suite(&[])).unwrap();
+        std::fs::write(base.join("pipeline.json"), suite(&[])).unwrap();
+
+        let rep = check_regressions(&cur, &base, 0.25).unwrap();
+        assert_eq!(rep.checked, 2, "a and b compared");
+        assert_eq!(rep.skipped, 1, "'new' has no baseline");
+        assert_eq!(rep.failures.len(), 1, "{:?}", rep.failures);
+        assert!(rep.failures[0].contains('b'), "{:?}", rep.failures);
+        // a 1.11x growth stays under the 25% gate
+        assert!(!rep.failures.iter().any(|f| f.starts_with("a:")));
+        // a baseline entry the current run no longer produces is lost
+        // gate coverage — flagged as a failure, not silently dropped
+        std::fs::write(
+            base.join("pipeline.json"),
+            suite(&[("gone", 100.0)]),
+        )
+        .unwrap();
+        let rep = check_regressions(&cur, &base, 0.25).unwrap();
+        assert!(
+            rep.failures.iter().any(|f| f.contains("gone")),
+            "{:?}",
+            rep.failures
+        );
+        // missing baseline directory is an error, not a silent pass
+        assert!(
+            check_regressions(&cur, &root.join("nope"), 0.25).is_err()
+        );
     }
 
     #[test]

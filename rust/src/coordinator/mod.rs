@@ -92,6 +92,15 @@ pub struct PipelineConfig {
     /// keep the last step's averaged per-stage gradients on the Pipeline
     /// (rank-collapse experiments, Figs. 1/7)
     pub record_grads: bool,
+    /// pipeline schedule priced by the virtual clock: GPipe uses the
+    /// closed-form recurrence, 1F1B runs on the discrete-event engine
+    /// (`--schedule`); interleaved is only available through the
+    /// artifact-free swarm simulator (`protomodels sim`)
+    pub schedule: crate::sim::Schedule,
+    /// route even GPipe timing through the event engine (`--sim`) —
+    /// identical totals by the sim parity contract, exercising the
+    /// event path in production runs
+    pub event_sim: bool,
 }
 
 impl Default for PipelineConfig {
@@ -107,6 +116,8 @@ impl Default for PipelineConfig {
             time_model: TimeModel::default_analytic(),
             seed: 0,
             record_grads: false,
+            schedule: crate::sim::Schedule::Gpipe,
+            event_sim: false,
         }
     }
 }
@@ -205,6 +216,13 @@ impl Pipeline {
                 cm.name,
                 cfg.mode.as_str(),
                 cm.modes
+            );
+        }
+        if matches!(cfg.schedule, crate::sim::Schedule::Interleaved { .. }) {
+            bail!(
+                "interleaved schedules need wrap-link samples the \
+                 coordinator does not carry; use the swarm simulator \
+                 (`protomodels sim --schedule interleaved`)"
             );
         }
         let mut rng = Rng::new(cfg.seed ^ 0x9137);
@@ -499,7 +517,7 @@ impl Pipeline {
             costs.tail += self.grassmann_update()?;
         }
 
-        let makespan = gpipe_makespan(&costs);
+        let makespan = self.step_makespan(&costs)?;
         self.clock += makespan.total;
         self.step += 1;
         self.host_seconds += t_host.elapsed().as_secs_f64();
@@ -511,6 +529,20 @@ impl Pipeline {
             tokens: m_count * h.b * h.n,
             makespan,
         })
+    }
+
+    /// Price one step's costs under the configured schedule: the
+    /// analytic recurrence for plain GPipe, the discrete-event engine
+    /// for 1F1B or when `--sim` forces the event path (identical for
+    /// GPipe by the parity contract in `tests/sim_swarm.rs`).
+    fn step_makespan(&self, costs: &StepCosts) -> Result<Makespan> {
+        if matches!(self.cfg.schedule, crate::sim::Schedule::Gpipe)
+            && !self.cfg.event_sim
+        {
+            Ok(gpipe_makespan(costs))
+        } else {
+            crate::sim::step_makespan(costs, self.cfg.schedule)
+        }
     }
 
     /// AdamW step for one stage; returns simulated seconds.

@@ -33,6 +33,7 @@ use crate::metrics::{perplexity, CsvWriter, RunLog};
 use crate::netsim::{LinkSpec, Topology, MBPS};
 use crate::par;
 use crate::rng::Rng;
+use crate::sim::{simulate_swarm, ChurnSpec, Schedule, SwarmSpec};
 use crate::tensor::Tensor;
 use crate::timemodel::TimeModel;
 
@@ -986,6 +987,190 @@ pub fn dp_grid(opts: &ExpOpts) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// discrete-event swarm simulator — schedule × jitter grid, churn sweep
+// ---------------------------------------------------------------------------
+
+/// Event-simulator grid (DESIGN.md §9): for each (schedule, replicas,
+/// bandwidth, jitter) cell, run the discrete-event swarm for a couple
+/// of steps and report step timing; zero-jitter GPipe cells also emit
+/// their relative deviation from the analytic `hybrid_makespan`
+/// (the parity contract — expected ~0, gated at 1e-6 by the tests).
+/// Artifact-free; cells are `RunSpec → Row` pool jobs, so the CSV is
+/// byte-identical for any `--threads`.
+pub fn sim_grid(opts: &ExpOpts) -> Result<()> {
+    let hyper = if opts.fast { Hyper::small_sim() } else { Hyper::base_sim() };
+    let schedules = [
+        Schedule::Gpipe,
+        Schedule::OneFOneB,
+        Schedule::Interleaved { chunks: 2 },
+    ];
+    let bws_mbps: &[f64] =
+        if opts.fast { &[80.0, 1000.0] } else { &[80.0, 300.0, 1000.0] };
+    let jitters: &[f64] = if opts.fast { &[0.0, 0.2] } else { &[0.0, 0.1, 0.2] };
+    let replicas: &[usize] = if opts.fast { &[1, 4] } else { &[1, 2, 4] };
+    let mut cells: Vec<(Schedule, usize, f64, f64)> = Vec::new();
+    for sched in schedules {
+        for &r in replicas {
+            for &bw in bws_mbps {
+                for &jit in jitters {
+                    cells.push((sched, r, bw, jit));
+                }
+            }
+        }
+    }
+    let rows = par::try_map(
+        opts.pool_threads(),
+        &cells,
+        |i, (sched, r, bw, jit)| {
+            let mut spec = SwarmSpec::uniform(hyper.clone(), *r, bw * MBPS);
+            spec.schedule = *sched;
+            spec.link.jitter_frac = *jit;
+            spec.ring_link.jitter_frac = *jit;
+            spec.lat_jitter_frac = *jit;
+            spec.steps = 2;
+            spec.seed = par::cell_seed(opts.seed, i);
+            let rep = simulate_swarm(&spec)?;
+            // parity column: event engine vs closed-form on the cells
+            // where the contract applies. Zero-jitter undisturbed steps
+            // are identical, so the 2-step run's first step *is* the
+            // single-step total — no extra simulation needed.
+            let parity = if *sched == Schedule::Gpipe && *jit == 0.0 {
+                let mut hs = HybridSimSpec::uniform(hyper.clone(), *r, bw * MBPS);
+                hs.link.jitter_frac = 0.0;
+                hs.ring_link.jitter_frac = 0.0;
+                hs.seed = spec.seed;
+                let hyb = simulate_hybrid_step(&hs);
+                let rel = (rep.step_seconds[0] - hyb.makespan.total).abs()
+                    / hyb.makespan.total.max(1e-12);
+                format!("{rel:.3e}")
+            } else {
+                String::new()
+            };
+            Ok([
+                sched.as_str().to_string(),
+                r.to_string(),
+                format!("{bw}"),
+                format!("{jit}"),
+                format!("{:.6}", rep.mean_step()),
+                format!("{:.6}", rep.compute_end),
+                format!("{:.6}", rep.comm_end),
+                format!("{:.6}", rep.tail),
+                format!("{:.6}", rep.comm_ser),
+                format!("{:.6}", rep.allreduce_busy),
+                parity,
+            ])
+        },
+    )?;
+    let mut csv = CsvWriter::create(
+        opts.out_dir.join("fig_sim_grid.csv"),
+        &[
+            "schedule",
+            "replicas",
+            "bandwidth_mbps",
+            "jitter",
+            "mean_step_seconds",
+            "compute_end_seconds",
+            "comm_end_seconds",
+            "tail_seconds",
+            "pipeline_comm_ser_seconds",
+            "allreduce_busy_seconds",
+            "parity_rel_vs_analytic",
+        ],
+    )?;
+    for row in &rows {
+        csv.row(row)?;
+    }
+    csv.finish()?;
+    Ok(())
+}
+
+/// Churn sweep (DESIGN.md §9): mean step time of the swarm under
+/// increasing Poisson churn rates, subspace vs raw wire pricing, at
+/// 80 Mbps. Because churn is a rate per simulated *second*, protocols
+/// with slower steps absorb more churn per step — the degradation gap
+/// `examples/churn_swarm.rs` asserts. Artifact-free pool jobs;
+/// byte-identical CSVs at any `--threads`.
+pub fn churn_sweep(opts: &ExpOpts) -> Result<()> {
+    let hyper = if opts.fast { Hyper::small_sim() } else { Hyper::base_sim() };
+    let steps = if opts.fast { 4 } else { 8 };
+    let rates: &[f64] =
+        if opts.fast { &[0.0, 0.3] } else { &[0.0, 0.1, 0.3, 1.0] };
+    let modes = [Mode::Subspace, Mode::Raw];
+    let mut cells: Vec<(Mode, f64)> = Vec::new();
+    for mode in modes {
+        for &rate in rates {
+            cells.push((mode, rate));
+        }
+    }
+    let rows =
+        par::try_map(opts.pool_threads(), &cells, |i, (mode, rate)| {
+            let mut spec = SwarmSpec::uniform(hyper.clone(), 4, 80.0 * MBPS);
+            spec.mode = *mode;
+            spec.dp_mode = *mode;
+            spec.lat_jitter_frac = 0.1;
+            spec.steps = steps;
+            spec.seed = par::cell_seed(opts.seed, i);
+            if *rate > 0.0 {
+                spec.churn = ChurnSpec::Poisson {
+                    rate_per_s: *rate,
+                    downtime_s: 0.5,
+                };
+            }
+            let rep = simulate_swarm(&spec)?;
+            Ok((
+                mode.as_str().to_string(),
+                *rate,
+                rep.mean_step(),
+                rep.total,
+                rep.leaves,
+                rep.rejoins,
+                rep.allreduce_restarts,
+                rep.sync_seconds,
+                rep.min_active,
+            ))
+        })?;
+    let mut csv = CsvWriter::create(
+        opts.out_dir.join("fig_churn_sweep.csv"),
+        &[
+            "mode",
+            "churn_rate_per_s",
+            "mean_step_seconds",
+            "total_seconds",
+            "leaves",
+            "rejoins",
+            "allreduce_restarts",
+            "sync_seconds",
+            "min_active",
+            "degrade_vs_no_churn",
+        ],
+    )?;
+    for (mode, rate, mean_step, total, leaves, rejoins, restarts, sync, min_active) in
+        &rows
+    {
+        // the rate-0 row of the same mode is the degradation baseline
+        let base = rows
+            .iter()
+            .find(|r| r.0 == *mode && r.1 == 0.0)
+            .map(|r| r.2)
+            .unwrap_or(*mean_step);
+        csv.row(&[
+            mode.clone(),
+            format!("{rate}"),
+            format!("{mean_step:.6}"),
+            format!("{total:.6}"),
+            leaves.to_string(),
+            rejoins.to_string(),
+            restarts.to_string(),
+            format!("{sync:.6}"),
+            min_active.to_string(),
+            format!("{:.3}", mean_step / base.max(1e-12)),
+        ])?;
+    }
+    csv.finish()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // Theorem B.1 — error accumulation of lossy compression with depth
 // ---------------------------------------------------------------------------
 
@@ -1069,6 +1254,8 @@ pub fn error_accumulation(opts: &ExpOpts) -> Result<()> {
 /// Every experiment name `run` accepts (besides the `all` meta-driver).
 pub const ALL: &[&str] = &[
     "dp-grid",
+    "sim-grid",
+    "churn-sweep",
     "rank-collapse",
     "checkpoint-ranks",
     "convergence-bandwidth",
@@ -1092,6 +1279,8 @@ pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
     std::fs::create_dir_all(&opts.out_dir)?;
     match name {
         "dp-grid" => dp_grid(opts),
+        "sim-grid" => sim_grid(opts),
+        "churn-sweep" => churn_sweep(opts),
         "rank-collapse" => rank_collapse(opts, false),
         "rank-collapse-grads" => rank_collapse(opts, true),
         "checkpoint-ranks" => checkpoint_ranks(opts),

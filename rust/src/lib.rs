@@ -6,9 +6,10 @@
 //! - L2 model state lives in [`stage`] / [`manifest`];
 //! - L3 systems — the [`coordinator`] pipeline, its replicated
 //!   data-parallel layer ([`coordinator::replica`]), the [`netsim`]
-//!   substrate, the [`timemodel`] virtual clock and the [`compress`]
-//!   wire accounting — drive everything and are what the experiments in
-//!   [`exp`] measure.
+//!   substrate, the [`timemodel`] virtual clock, the [`compress`]
+//!   wire accounting, and the discrete-event swarm simulator ([`sim`]:
+//!   jitter, churn, async schedules) — drive everything and are what
+//!   the experiments in [`exp`] measure.
 
 #![warn(missing_docs)]
 
@@ -27,6 +28,7 @@ pub mod netsim;
 pub mod par;
 pub mod rng;
 pub mod runtime;
+pub mod sim;
 pub mod stage;
 pub mod tensor;
 pub mod timemodel;

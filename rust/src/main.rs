@@ -19,7 +19,8 @@ use protomodels::metrics::{perplexity, RunLog};
 use protomodels::netsim::{LinkSpec, ReplicaRing, Topology};
 use protomodels::par;
 use protomodels::rng::Rng;
-use protomodels::timemodel::TimeModel;
+use protomodels::sim::{simulate_swarm, ChurnSpec, Schedule, SwarmSpec};
+use protomodels::timemodel::{SlowdownProfile, TimeModel};
 
 fn usage() -> ! {
     eprintln!(
@@ -31,9 +32,16 @@ USAGE:
                       [--steps 200] [--microbatches 8] [--corpus wiki|books|web|c4]
                       [--lr 6e-3] [--grassmann 0] [--seed 17]
                       [--time-model analytic|analytic:<TFLOPs>|measured]
+                      [--schedule gpipe|1f1b] [--sim]
                       [--replicas R] [--dp-mode subspace|raw|topk|quant]
                       [--dp-bandwidth 80mbps] [--hetero 1,1,2]
                       [--artifacts artifacts] [--out results] [--label NAME]
+  protomodels sim     [--preset base|small] [--replicas 4] [--steps 5]
+                      [--bandwidth 80mbps] [--dp-bandwidth 80mbps]
+                      [--mode subspace] [--dp-mode subspace]
+                      [--schedule gpipe|1f1b|interleaved[:chunks]]
+                      [--microbatches 8] [--jitter 0.2] [--churn-rate 0.0]
+                      [--downtime 0.5] [--hetero 1,1,2] [--seed 17]
   protomodels exp     <name|all> [--fast] [--steps N] [--seed N]
                       [--threads N] [--exact-rank]
                       [--artifacts artifacts] [--out results]
@@ -41,16 +49,26 @@ USAGE:
   protomodels inspect [--artifacts artifacts]
   protomodels timing  [--config tiny] [--steps 3]
   protomodels bench   [--json] [--fast] [--out .] [--threads N]
+                      [--check BENCH_baseline] [--max-regress 0.25]
 
 Replicated runs (--replicas > 1) train R data-parallel pipeline replicas
 and all-reduce weight gradients over a simulated cross-replica ring; the
 payload is priced under --dp-mode and --hetero assigns per-replica
 compute slowdowns (stragglers). See DESIGN.md §6.
 
+`sim` runs the artifact-free discrete-event swarm simulator (DESIGN.md
+§9): --jitter sets bandwidth *and* latency jitter fractions,
+--churn-rate is Poisson leaves per simulated second (each leaver
+rejoins after --downtime and pays a dp-mode-priced state sync), and
+--schedule picks the pipeline schedule the event engine executes.
+`train --schedule 1f1b` / `train --sim` route the coordinator's step
+timing through the same engine.
+
 --threads N runs experiment grid cells on an N-worker pool (default:
 all cores; emitted CSVs are byte-identical for any N). `bench --json`
 writes BENCH_linalg.json / BENCH_pipeline.json perf-trajectory files
-to --out (DESIGN.md §8).
+to --out (DESIGN.md §8); `bench --check <dir>` compares them against
+the committed baseline and fails on >25% wall-time regression.
 ",
         exp::ALL.join(", ")
     );
@@ -79,6 +97,8 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     let h = manifest.config(&config)?.hyper.clone();
     let tm = TimeModel::parse(&flags.str("time-model", "analytic"))
         .ok_or_else(|| anyhow::anyhow!("bad --time-model"))?;
+    let schedule = Schedule::parse(&flags.str("schedule", "gpipe"))
+        .ok_or_else(|| anyhow::anyhow!("bad --schedule"))?;
     let pcfg = PipelineConfig {
         mode,
         microbatches: flags.usize("microbatches", 8)?,
@@ -88,6 +108,8 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         total_steps: steps,
         time_model: tm,
         seed,
+        schedule,
+        event_sim: flags.switch("sim"),
         ..Default::default()
     };
     let corpus_kind = CorpusKind::parse(&flags.str("corpus", "wiki"))
@@ -206,6 +228,90 @@ fn train_replicated(
     Ok(())
 }
 
+/// `sim` subcommand: the artifact-free discrete-event swarm simulator
+/// (DESIGN.md §9) — jitter, time-varying stragglers, churn, and async
+/// pipeline schedules, priced from the analytic cost model alone.
+fn cmd_sim(flags: &Flags) -> Result<()> {
+    use protomodels::manifest::Hyper;
+    use protomodels::netsim::MBPS;
+
+    let preset = flags.str("preset", "base");
+    let hyper = match preset.as_str() {
+        "base" => Hyper::base_sim(),
+        "small" => Hyper::small_sim(),
+        other => bail!("bad --preset {other:?} (have base, small)"),
+    };
+    let replicas = flags.usize("replicas", 4)?;
+    let mut spec = SwarmSpec::uniform(hyper, replicas, 80.0 * MBPS);
+    spec.link = bandwidth_spec(flags, "bandwidth", "80mbps")?;
+    spec.ring_link = bandwidth_spec(
+        flags,
+        "dp-bandwidth",
+        &flags.str("bandwidth", "80mbps"),
+    )?;
+    spec.mode = Mode::parse(&flags.str("mode", "subspace"))?;
+    spec.dp_mode = Mode::parse(&flags.str("dp-mode", "subspace"))?;
+    spec.schedule = Schedule::parse(&flags.str("schedule", "gpipe"))
+        .ok_or_else(|| anyhow::anyhow!("bad --schedule"))?;
+    spec.microbatches = flags.usize("microbatches", 8)?;
+    spec.steps = flags.usize("steps", 5)?;
+    spec.seed = flags.usize("seed", 17)? as u64;
+    // one knob drives both jitter axes: bandwidth sigma/mu on each link
+    // plus the per-transfer latency factor
+    let jitter = flags.f64("jitter", 0.2)?;
+    spec.link.jitter_frac = jitter;
+    spec.ring_link.jitter_frac = jitter;
+    spec.lat_jitter_frac = jitter;
+    if let Some(hetero) = flags.f64_list("hetero")? {
+        if hetero.len() != replicas {
+            bail!("--hetero lists {} factors for {replicas} replicas", hetero.len());
+        }
+        spec.straggler =
+            hetero.into_iter().map(SlowdownProfile::Constant).collect();
+    }
+    let rate = flags.f64("churn-rate", 0.0)?;
+    if rate > 0.0 {
+        spec.churn = ChurnSpec::Poisson {
+            rate_per_s: rate,
+            downtime_s: flags.f64("downtime", 0.5)?,
+        };
+    }
+
+    let rep = simulate_swarm(&spec)?;
+    println!(
+        "swarm: {preset} x{replicas} replicas, {} schedule, {} steps, \
+         jitter {jitter}, churn {rate}/s",
+        spec.schedule.as_str(),
+        spec.steps,
+    );
+    for (i, s) in rep.step_seconds.iter().enumerate() {
+        println!("  step {:>3}  {:>9.4}s", i + 1, s);
+    }
+    println!(
+        "total {:.4}s  mean step {:.4}s  compute_end {:.4}s  comm_end {:.4}s  \
+         tail {:.4}s",
+        rep.total,
+        rep.mean_step(),
+        rep.compute_end,
+        rep.comm_end,
+        rep.tail
+    );
+    println!(
+        "churn: {} leaves, {} rejoins ({:.3}s sync), {} all-reduce restarts, \
+         min membership {}",
+        rep.leaves,
+        rep.rejoins,
+        rep.sync_seconds,
+        rep.allreduce_restarts,
+        rep.min_active
+    );
+    println!(
+        "bytes: {} activation, {} gradient | ring busy {:.4}s",
+        rep.wire_bytes, rep.dp_bytes, rep.allreduce_busy
+    );
+    Ok(())
+}
+
 fn cmd_inspect(flags: &Flags) -> Result<()> {
     let manifest = Manifest::load(flags.str("artifacts", "artifacts"))?;
     println!("artifacts root: {}", manifest.root.display());
@@ -271,6 +377,36 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
     let json = flags.switch("json");
     let fast = flags.switch("fast");
     let out = std::path::PathBuf::from(flags.str("out", "."));
+    // regression-gate mode: compare the BENCH_*.json in --out against a
+    // committed baseline directory and fail on >--max-regress wall-time
+    // growth for any entry present in both
+    if let Some(baseline) = flags.opt("check") {
+        let max_regress = flags.f64("max-regress", 0.25)?;
+        let report = protomodels::bench::check_regressions(
+            &out,
+            std::path::Path::new(baseline),
+            max_regress,
+        )?;
+        println!(
+            "bench check: {} entries compared, {} without baseline, \
+             {} regressed",
+            report.checked,
+            report.skipped,
+            report.failures.len()
+        );
+        if !report.failures.is_empty() {
+            for f in &report.failures {
+                eprintln!("REGRESSION: {f}");
+            }
+            bail!(
+                "{} bench entr{} regressed beyond {:.0}%",
+                report.failures.len(),
+                if report.failures.len() == 1 { "y" } else { "ies" },
+                max_regress * 100.0
+            );
+        }
+        return Ok(());
+    }
     let bench = if fast { Bencher::quick() } else { Bencher::default() };
     let randt = |seed: u64, m: usize, n: usize| -> Tensor {
         let mut rng = Rng::new(seed);
@@ -382,6 +518,39 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
         }
     }
     {
+        // the discrete-event engine: one swarm step per schedule, plus
+        // a churn-heavy multi-step run (per-step cost of the simulator
+        // itself, not of the simulated system)
+        for (name, sched) in [
+            ("gpipe", Schedule::Gpipe),
+            ("1f1b", Schedule::OneFOneB),
+            ("interleaved", Schedule::Interleaved { chunks: 2 }),
+        ] {
+            let mut spec = SwarmSpec::uniform(
+                protomodels::manifest::Hyper::base_sim(),
+                4,
+                80.0 * MBPS,
+            );
+            spec.schedule = sched;
+            let r = bench.run(&format!("sim_step_{name}_base_r4"), || {
+                black_box(simulate_swarm(black_box(&spec)).expect("sim step"));
+            });
+            pipe_entries.push(BenchEntry { result: r, items_per_iter: None });
+        }
+        let mut spec = SwarmSpec::uniform(
+            protomodels::manifest::Hyper::base_sim(),
+            4,
+            80.0 * MBPS,
+        );
+        spec.steps = 6;
+        spec.lat_jitter_frac = 0.2;
+        spec.churn = ChurnSpec::Poisson { rate_per_s: 0.5, downtime_s: 0.3 };
+        let r = bench.run("sim_churn_swarm_6steps_r4", || {
+            black_box(simulate_swarm(black_box(&spec)).expect("churn swarm"));
+        });
+        pipe_entries.push(BenchEntry { result: r, items_per_iter: None });
+    }
+    {
         // end-to-end grid driver (artifact-free): dp-grid fast preset
         let tmp = std::env::temp_dir().join("protomodels_bench_dp_grid");
         let widths: Vec<usize> = if par::max_threads() > 1 {
@@ -426,6 +595,7 @@ fn main() -> Result<()> {
     par::set_max_threads(flags.usize("threads", 0)?);
     match args[0].as_str() {
         "train" => cmd_train(&flags),
+        "sim" => cmd_sim(&flags),
         "inspect" => cmd_inspect(&flags),
         "timing" => cmd_timing(&flags),
         "exp" => {

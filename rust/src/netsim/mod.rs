@@ -111,6 +111,26 @@ impl Link {
         (ser, self.spec.latency_s)
     }
 
+    /// [`Link::sample`] with *latency* jitter layered on top: the
+    /// propagation latency is scaled by a clamped N(1, `lat_jitter_frac`)
+    /// factor (floor 0.05 — latency never goes negative or vanishes).
+    /// With `lat_jitter_frac == 0` this is exactly `sample` (no extra
+    /// draw is consumed, keeping zero-jitter streams bit-identical).
+    /// Used by the discrete-event swarm simulator, where WAN latency
+    /// variation — not just bandwidth variation — drives tail behavior.
+    pub fn sample_jittered(
+        &mut self,
+        bytes: usize,
+        lat_jitter_frac: f64,
+    ) -> (f64, f64) {
+        let (ser, lat) = self.sample(bytes);
+        if lat_jitter_frac <= 0.0 {
+            return (ser, lat);
+        }
+        let factor = self.rng.normal_clamped(1.0, lat_jitter_frac, 0.05);
+        (ser, lat * factor)
+    }
+
     /// Simulated wall-clock seconds to push `bytes` through this link.
     pub fn transfer_time(&mut self, bytes: usize) -> f64 {
         let (ser, lat) = self.sample(bytes);
@@ -276,9 +296,30 @@ impl ReplicaRing {
     /// moves one ⌈bytes/R⌉ chunk per link concurrently; the round
     /// completes when the slowest sampled link finishes, and 2·(R−1)
     /// rounds complete the reduce-scatter + all-gather. Returns simulated
-    /// seconds (0 for a single replica).
+    /// seconds (0 for a single replica). Delegates to
+    /// [`ReplicaRing::all_reduce_among`] over the full membership, so
+    /// the two paths are structurally identical.
     pub fn all_reduce(&mut self, bytes: usize) -> f64 {
-        let r = self.replicas();
+        let members: Vec<usize> = (0..self.links.len()).collect();
+        self.all_reduce_among(&members, bytes, 0.0)
+    }
+
+    /// One all-reduce over a *subset* of the ring — the churn-re-routed
+    /// ring the swarm simulator uses after members leave: `members`
+    /// (indices into `links`, each with its own persistent sample
+    /// stream) form a smaller ring of R′ = `members.len()` peers, so
+    /// 2·(R′−1) rounds of ⌈bytes/R′⌉ chunks, each round as slow as its
+    /// slowest member link. `lat_jitter_frac` adds latency jitter per
+    /// sample (see [`Link::sample_jittered`]). With all members and
+    /// zero latency jitter this reproduces [`ReplicaRing::all_reduce`]
+    /// exactly. Returns simulated seconds (0 for < 2 members).
+    pub fn all_reduce_among(
+        &mut self,
+        members: &[usize],
+        bytes: usize,
+        lat_jitter_frac: f64,
+    ) -> f64 {
+        let r = members.len();
         if r <= 1 || bytes == 0 {
             return 0.0;
         }
@@ -286,8 +327,9 @@ impl ReplicaRing {
         let mut total = 0.0;
         for _round in 0..2 * (r - 1) {
             let mut slowest = 0.0f64;
-            for l in &mut self.links {
-                let (ser, lat) = l.sample(chunk);
+            for &m in members {
+                let (ser, lat) =
+                    self.links[m].sample_jittered(chunk, lat_jitter_frac);
                 slowest = slowest.max(ser + lat);
             }
             total += slowest;
@@ -416,6 +458,57 @@ mod tests {
         assert_eq!(ring.all_reduce(1_000_000), 0.0);
         assert_eq!(ring_allreduce_bytes_per_link(1, 1_000_000), 0);
         assert_eq!(ring.total_bytes(), 0);
+    }
+
+    #[test]
+    fn all_reduce_among_full_ring_matches_all_reduce() {
+        let spec = LinkSpec {
+            bandwidth_bps: 80.0 * MBPS,
+            latency_s: 1e-3,
+            jitter_frac: 0.0,
+        };
+        let mut rng_a = Rng::new(11);
+        let mut rng_b = Rng::new(11);
+        let mut a = ReplicaRing::new(4, spec, &mut rng_a);
+        let mut b = ReplicaRing::new(4, spec, &mut rng_b);
+        let t_full = a.all_reduce(1_000_000);
+        let t_among = b.all_reduce_among(&[0, 1, 2, 3], 1_000_000, 0.0);
+        assert_eq!(t_full, t_among);
+        // a re-routed 3-member ring does fewer (4 vs 6) rounds of
+        // bigger chunks: 2·2·⌈B/3⌉ < 2·3·⌈B/4⌉ per link at fixed bw
+        let t_sub = b.all_reduce_among(&[0, 1, 3], 1_000_000, 0.0);
+        assert!(t_sub < t_among, "{t_sub} vs {t_among}");
+        assert_eq!(b.all_reduce_among(&[2], 1_000_000, 0.0), 0.0);
+    }
+
+    #[test]
+    fn latency_jitter_layering() {
+        let spec = LinkSpec {
+            bandwidth_bps: 80.0 * MBPS,
+            latency_s: 10e-3,
+            jitter_frac: 0.0,
+        };
+        let mut rng = Rng::new(12);
+        let mut quiet = Link::new(spec, rng.fork(0));
+        let mut noisy = Link::new(spec, rng.fork(1));
+        // zero jitter: exactly the nominal latency, no extra draw
+        let (_, lat) = quiet.sample_jittered(1000, 0.0);
+        assert_eq!(lat, 10e-3);
+        // jittered latencies vary but stay positive and near-nominal
+        let n = 500;
+        let mut sum = 0.0;
+        let mut varied = false;
+        for _ in 0..n {
+            let (_, l) = noisy.sample_jittered(1000, 0.3);
+            assert!(l > 0.0);
+            if (l - 10e-3).abs() > 1e-6 {
+                varied = true;
+            }
+            sum += l;
+        }
+        assert!(varied, "jittered latency never moved");
+        let mean = sum / n as f64;
+        assert!((mean - 10e-3).abs() < 1.5e-3, "mean latency {mean}");
     }
 
     #[test]

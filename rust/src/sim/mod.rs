@@ -1,0 +1,27 @@
+//! Discrete-event swarm simulator (DESIGN.md §9).
+//!
+//! Three layers, each usable on its own:
+//!
+//! - [`queue`] — the deterministic `(time, seq)` event queue;
+//! - [`step`] — event-driven execution of one pipeline step under
+//!   GPipe / 1F1B / interleaved schedules, exactly reproducing the
+//!   analytic `gpipe_makespan` under GPipe (the parity contract);
+//! - [`swarm`] — multi-step, multi-replica simulation with latency
+//!   jitter, time-varying stragglers, and node churn (leave / rejoin
+//!   with re-routed ring all-reduces and dp-mode-priced state syncs).
+//!
+//! The coordinator routes per-step timing through [`step_makespan`]
+//! when a non-GPipe schedule (or `--sim`) is configured; the
+//! artifact-free swarm engine powers `protomodels sim`, the
+//! `sim-grid` / `churn-sweep` experiment drivers, and
+//! `examples/churn_swarm.rs`.
+
+pub mod queue;
+pub mod step;
+pub mod swarm;
+
+pub use queue::EventQueue;
+pub use step::{simulate_step_spec, step_makespan, Schedule, StepSpec};
+pub use swarm::{
+    simulate_swarm, ChurnEvent, ChurnKind, ChurnSpec, SimReport, SwarmSpec,
+};

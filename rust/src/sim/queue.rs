@@ -1,0 +1,146 @@
+//! Deterministic discrete-event queue.
+//!
+//! A binary heap keyed by `(time, seq)`: events fire in simulated-time
+//! order, and events scheduled for the *same* instant fire in the order
+//! they were pushed (`seq` is a monotonically increasing push counter).
+//! That tie-break is what makes every simulation replayable — two runs
+//! of the same spec produce the same event trace, byte for byte, no
+//! matter how many ties the schedule generates.
+
+use std::collections::BinaryHeap;
+
+/// One scheduled event: fire time, push sequence number, payload.
+struct Entry<E> {
+    time: f64,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed: BinaryHeap is a max-heap, we want the earliest
+        // (time, seq) on top. Times are asserted finite on push, so
+        // partial_cmp never sees NaN.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .expect("event times are finite by construction")
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap of `(time, seq, payload)` with deterministic tie-breaking.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    /// Empty queue; sequence numbers start at 0.
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    /// Schedule `payload` at `time`. Panics on non-finite times — an
+    /// infinite event time always means an upstream modeling error
+    /// (e.g. a zero-bandwidth link), which specs validate before
+    /// simulating.
+    pub fn push(&mut self, time: f64, payload: E) {
+        assert!(
+            time.is_finite(),
+            "event time must be finite, got {time} (zero-bandwidth link?)"
+        );
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { time, seq, payload });
+    }
+
+    /// Pop the earliest event (ties in push order); `None` when empty.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        self.heap.pop().map(|e| (e.time, e.payload))
+    }
+
+    /// Fire time of the next event, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Whether no events are pending.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_queue_pops_none() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+        assert!(q.pop().is_none());
+        assert!(q.peek_time().is_none());
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        assert_eq!(q.peek_time(), Some(1.0));
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((3.0, "c")));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn simultaneous_events_fire_in_push_order() {
+        let mut q = EventQueue::new();
+        for i in 0..64u32 {
+            q.push(1.5, i);
+        }
+        // interleave an earlier and a later event among the ties
+        q.push(0.5, 1000);
+        q.push(2.5, 2000);
+        assert_eq!(q.pop(), Some((0.5, 1000)));
+        for i in 0..64u32 {
+            assert_eq!(q.pop(), Some((1.5, i)), "tie {i} out of order");
+        }
+        assert_eq!(q.pop(), Some((2.5, 2000)));
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn non_finite_time_is_rejected() {
+        let mut q = EventQueue::new();
+        q.push(f64::INFINITY, ());
+    }
+}

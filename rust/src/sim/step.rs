@@ -1,0 +1,592 @@
+//! Event-driven execution of one pipeline step.
+//!
+//! Where `schedule::gpipe_makespan` *solves* the GPipe timing with a
+//! closed-form recurrence, this engine *executes* it: every compute and
+//! every transfer is an event on a [`EventQueue`], workers dispatch the
+//! next ready task when they free up, and links serialize transfers in
+//! the order their producers complete. The payoff is generality — the
+//! same machine runs 1F1B and interleaved schedules (which have no
+//! closed form here) and, via [`crate::sim::swarm`], multi-replica
+//! steps with jitter and churn.
+//!
+//! **Parity contract** (enforced by `tests/sim_swarm.rs`): under
+//! [`Schedule::Gpipe`] this engine reproduces `gpipe_makespan` exactly
+//! (same floating-point operations on the same values) for *any*
+//! `StepCosts`, jittered or not. The analytic recurrence resolves the
+//! identical precedence DAG — stages serially busy, per-direction links
+//! serializing in microbatch order, backwards gated behind the stage's
+//! full forward wave — so the two paths must agree to the last bit.
+//!
+//! Schedule semantics:
+//! - `Gpipe` — a stage starts backwards only after all M of its
+//!   forwards completed (fill then drain; the analytic model).
+//! - `OneFOneB` — backwards are eligible as soon as their gradient
+//!   arrives, and each (virtual) stage caps in-flight forwards at its
+//!   pipeline-depth remainder `min(V − v, M)`; backwards take priority,
+//!   which yields the classic warmup / steady-1F1B / drain pattern.
+//! - `Interleaved { chunks }` — each worker hosts `chunks` model chunks
+//!   (virtual stages `c·P + w`), halving the per-chunk bubble at the
+//!   price of `chunks`× as many boundary crossings, including the
+//!   wrap-around link from worker P−1 back to worker 0. Virtual-chunk
+//!   compute is an even split of the physical stage cost.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::schedule::{Makespan, StepCosts, Tx};
+use crate::sim::queue::EventQueue;
+
+/// Pipeline schedule executed by the event engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// fill-then-drain GPipe (the analytic-parity schedule)
+    Gpipe,
+    /// one-forward-one-backward with depth-capped in-flight forwards
+    OneFOneB,
+    /// interleaved virtual pipeline with `chunks` model chunks per worker
+    Interleaved {
+        /// model chunks per worker (≥ 2)
+        chunks: usize,
+    },
+}
+
+impl Schedule {
+    /// Parse a CLI label: `"gpipe"`, `"1f1b"`, `"interleaved"` (2
+    /// chunks) or `"interleaved:<chunks>"`.
+    pub fn parse(s: &str) -> Option<Schedule> {
+        match s {
+            "gpipe" => Some(Schedule::Gpipe),
+            "1f1b" => Some(Schedule::OneFOneB),
+            "interleaved" => Some(Schedule::Interleaved { chunks: 2 }),
+            other => {
+                let rest = other.strip_prefix("interleaved:")?;
+                let chunks: usize = rest.parse().ok()?;
+                if chunks < 2 {
+                    return None;
+                }
+                Some(Schedule::Interleaved { chunks })
+            }
+        }
+    }
+
+    /// Canonical CSV/CLI label.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Schedule::Gpipe => "gpipe",
+            Schedule::OneFOneB => "1f1b",
+            Schedule::Interleaved { .. } => "interleaved",
+        }
+    }
+}
+
+/// Fully-resolved inputs of one event-simulated step: per-virtual-stage
+/// compute seconds and per-transfer link samples. Virtual stage `v`
+/// runs on worker `worker_of[v]`; virtual link `v` (vstage v → v+1)
+/// serializes on duplex physical link `phys_link_of[v]`.
+#[derive(Clone, Debug)]
+pub struct StepSpec {
+    /// physical compute hosts P
+    pub workers: usize,
+    /// virtual stages V (== P except for interleaved schedules)
+    pub vstages: usize,
+    /// microbatches per step M
+    pub microbatches: usize,
+    /// vstage → worker
+    pub worker_of: Vec<usize>,
+    /// vlink → physical duplex link (serialization resource)
+    pub phys_link_of: Vec<usize>,
+    /// number of physical duplex links
+    pub n_phys_links: usize,
+    /// fwd compute seconds; the *last* vstage holds the fused
+    /// fwd+loss+bwd cost (as in `StepCosts`)
+    pub fwd: Vec<Vec<f64>>, // [vstage][mb]
+    /// bwd compute seconds (last vstage unused — fused)
+    pub bwd: Vec<Vec<f64>>, // [vstage][mb]
+    /// activation transfer samples per vlink
+    pub tx_fwd: Vec<Vec<Tx>>, // [vlink][mb]
+    /// gradient transfer samples per vlink
+    pub tx_bwd: Vec<Vec<Tx>>, // [vlink][mb]
+    /// per-worker optimizer seconds (after the worker's last task)
+    pub opt: Vec<f64>,
+    /// serial seconds appended at the very end (Grassmann + broadcast)
+    pub tail: f64,
+    /// dispatch policy
+    pub schedule: Schedule,
+}
+
+impl StepSpec {
+    /// Identity mapping from the coordinator's `StepCosts`: V == P,
+    /// vlink v is physical link v. `Interleaved` cannot be built from
+    /// `StepCosts` (its wrap link has no sample source there) — use the
+    /// swarm engine, which samples links itself.
+    pub fn from_costs(c: &StepCosts, schedule: Schedule) -> Result<StepSpec> {
+        if let Schedule::Interleaved { .. } = schedule {
+            bail!(
+                "interleaved schedules need wrap-link samples the \
+                 coordinator's StepCosts does not carry; use the swarm \
+                 simulator (`protomodels sim` / `exp sim-grid`)"
+            );
+        }
+        let p = c.stages;
+        if p < 2 {
+            bail!("pipeline needs >= 2 stages, got {p}");
+        }
+        if c.microbatches == 0 {
+            bail!("step needs >= 1 microbatch");
+        }
+        Ok(StepSpec {
+            workers: p,
+            vstages: p,
+            microbatches: c.microbatches,
+            worker_of: (0..p).collect(),
+            phys_link_of: (0..p - 1).collect(),
+            n_phys_links: p - 1,
+            fwd: c.fwd.clone(),
+            bwd: c.bwd.clone(),
+            tx_fwd: c.tx_fwd.clone(),
+            tx_bwd: c.tx_bwd.clone(),
+            opt: c.opt.clone(),
+            tail: c.tail,
+            schedule,
+        })
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum Class {
+    Fwd,
+    Bwd,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Event {
+    /// worker finished a task
+    TaskDone { v: usize, mb: usize, class: Class },
+    /// a payload arrived at vstage v, making its task ready
+    Arrive { v: usize, mb: usize, class: Class },
+}
+
+/// Per-worker ready key. Ordering encodes dispatch priority within a
+/// class set; class priority itself is schedule-dependent and applied
+/// at selection time.
+type Key = (Class, usize, usize); // (class, mb, vstage)
+
+struct Engine<'a> {
+    spec: &'a StepSpec,
+    q: EventQueue<Event>,
+    worker_busy: Vec<bool>,
+    ready: Vec<std::collections::BTreeSet<Key>>,
+    fwd_started: Vec<usize>,
+    fwd_done: Vec<usize>,
+    bwd_started: Vec<usize>,
+    bwd_done: Vec<usize>,
+    link_free_f: Vec<f64>,
+    link_free_b: Vec<f64>,
+    /// per-worker completion time of its most recent task
+    last_done: Vec<f64>,
+    /// per-vstage completion time of its latest gradient (bwd / fused)
+    grad_done_v: Vec<f64>,
+    tasks_done: usize,
+}
+
+impl<'a> Engine<'a> {
+    fn new(spec: &'a StepSpec) -> Engine<'a> {
+        Engine {
+            spec,
+            q: EventQueue::new(),
+            worker_busy: vec![false; spec.workers],
+            ready: vec![Default::default(); spec.workers],
+            fwd_started: vec![0; spec.vstages],
+            fwd_done: vec![0; spec.vstages],
+            bwd_started: vec![0; spec.vstages],
+            bwd_done: vec![0; spec.vstages],
+            link_free_f: vec![0.0; spec.n_phys_links],
+            link_free_b: vec![0.0; spec.n_phys_links],
+            last_done: vec![0.0; spec.workers],
+            grad_done_v: vec![0.0; spec.vstages],
+            tasks_done: 0,
+        }
+    }
+
+    /// In-flight forward cap for vstage v under 1F1B-family schedules.
+    fn fwd_cap(&self, v: usize) -> usize {
+        let s = self.spec;
+        (s.vstages - v).min(s.microbatches).max(1)
+    }
+
+    fn eligible(&self, key: &Key) -> bool {
+        let (class, mb, v) = *key;
+        // microbatches are processed in order per (vstage, class): even
+        // if mb+1's payload arrives first (jittered latency can reorder
+        // arrivals), the stage waits for mb — the semantics the analytic
+        // recurrence encodes, and what a real in-order pipeline does
+        match class {
+            Class::Fwd if self.fwd_started[v] != mb => return false,
+            Class::Bwd if self.bwd_started[v] != mb => return false,
+            _ => {}
+        }
+        match (self.spec.schedule, class) {
+            // GPipe: backwards gated behind the stage's full fwd wave
+            (Schedule::Gpipe, Class::Bwd) => {
+                self.fwd_done[v] == self.spec.microbatches
+            }
+            (Schedule::Gpipe, Class::Fwd) => true,
+            // 1F1B / interleaved: forwards capped by remaining depth
+            (_, Class::Fwd) => {
+                self.fwd_started[v] - self.bwd_done[v] < self.fwd_cap(v)
+            }
+            (_, Class::Bwd) => true,
+        }
+    }
+
+    /// Pick the next task for an idle worker. Class priority: GPipe
+    /// prefers forwards (backwards are gated anyway until the wave
+    /// ends); 1F1B-family prefers backwards. Within a class: lowest
+    /// (mb, vstage) — the `Key` ordering, so both policies walk the
+    /// ready set's own order (no allocation in the dispatch hot path:
+    /// the Fwd prefix and Bwd suffix are contiguous `range`s).
+    fn select(&self, w: usize) -> Option<Key> {
+        let set = &self.ready[w];
+        if self.spec.schedule == Schedule::Gpipe {
+            return set.iter().copied().find(|k| self.eligible(k));
+        }
+        set.range((Class::Bwd, 0, 0)..)
+            .copied()
+            .find(|k| self.eligible(k))
+            .or_else(|| {
+                set.range(..(Class::Bwd, 0, 0))
+                    .copied()
+                    .find(|k| self.eligible(k))
+            })
+    }
+
+    fn dispatch(&mut self, w: usize, t: f64) {
+        if self.worker_busy[w] {
+            return;
+        }
+        let key = match self.select(w) {
+            Some(k) => k,
+            None => return,
+        };
+        self.ready[w].remove(&key);
+        let (class, mb, v) = key;
+        let dur = match class {
+            Class::Fwd => {
+                self.fwd_started[v] += 1;
+                self.spec.fwd[v][mb]
+            }
+            Class::Bwd => {
+                self.bwd_started[v] += 1;
+                self.spec.bwd[v][mb]
+            }
+        };
+        self.worker_busy[w] = true;
+        self.q.push(t + dur, Event::TaskDone { v, mb, class });
+    }
+
+    /// Serialize a transfer on a physical link direction and schedule
+    /// its arrival.
+    fn send(&mut self, v_from: usize, mb: usize, class: Class, t: f64) {
+        let (vlink, v_to) = match class {
+            Class::Fwd => (v_from, v_from + 1),
+            Class::Bwd => (v_from - 1, v_from - 1),
+        };
+        let link = self.spec.phys_link_of[vlink];
+        let (tx, free) = match class {
+            Class::Fwd => {
+                (self.spec.tx_fwd[vlink][mb], &mut self.link_free_f[link])
+            }
+            Class::Bwd => {
+                (self.spec.tx_bwd[vlink][mb], &mut self.link_free_b[link])
+            }
+        };
+        let start = if t > *free { t } else { *free };
+        *free = start + tx.ser;
+        self.q
+            .push(start + tx.ser + tx.lat, Event::Arrive { v: v_to, mb, class });
+    }
+
+    fn on_task_done(&mut self, v: usize, mb: usize, class: Class, t: f64) {
+        let s = self.spec;
+        let w = s.worker_of[v];
+        self.worker_busy[w] = false;
+        self.last_done[w] = t;
+        self.tasks_done += 1;
+        match class {
+            Class::Fwd => {
+                self.fwd_done[v] += 1;
+                if v + 1 < s.vstages {
+                    self.send(v, mb, Class::Fwd, t);
+                } else {
+                    // fused fwd+loss+bwd at the last vstage: this
+                    // completion *is* the microbatch's gradient
+                    self.bwd_done[v] += 1;
+                    self.grad_done_v[v] = t;
+                    if v > 0 {
+                        self.send(v, mb, Class::Bwd, t);
+                    }
+                }
+            }
+            Class::Bwd => {
+                self.bwd_done[v] += 1;
+                self.grad_done_v[v] = t;
+                if v > 0 {
+                    self.send(v, mb, Class::Bwd, t);
+                }
+            }
+        }
+        self.dispatch(w, t);
+    }
+
+    fn run(mut self) -> Result<Makespan> {
+        let s = self.spec;
+        // all first-vstage forwards are ready at t = 0
+        for mb in 0..s.microbatches {
+            self.ready[s.worker_of[0]].insert((Class::Fwd, mb, 0));
+        }
+        self.dispatch(s.worker_of[0], 0.0);
+        while let Some((t, ev)) = self.q.pop() {
+            match ev {
+                Event::TaskDone { v, mb, class } => {
+                    self.on_task_done(v, mb, class, t)
+                }
+                Event::Arrive { v, mb, class } => {
+                    let w = s.worker_of[v];
+                    self.ready[w].insert((class, mb, v));
+                    self.dispatch(w, t);
+                }
+            }
+        }
+        // every vstage must have completed M forwards and M gradients
+        let total_tasks = s.vstages * s.microbatches // forwards
+            + (s.vstages - 1) * s.microbatches; // explicit backwards
+        if self.tasks_done != total_tasks
+            || self.fwd_done.iter().any(|&n| n != s.microbatches)
+            || self.bwd_done.iter().any(|&n| n != s.microbatches)
+        {
+            bail!(
+                "pipeline schedule deadlocked: {} of {} tasks completed \
+                 (schedule {:?})",
+                self.tasks_done,
+                total_tasks,
+                s.schedule
+            );
+        }
+
+        let mut end = 0.0f64;
+        for w in 0..s.workers {
+            end = end.max(self.last_done[w] + s.opt[w]);
+        }
+        end += s.tail;
+
+        // compute the diagnostics from the spec arrays in the same
+        // order as the analytic path, so GPipe parity is exact rather
+        // than merely close (event-order accumulation would differ in
+        // the last ulp)
+        let compute: f64 = s
+            .fwd
+            .iter()
+            .chain(s.bwd.iter().take(s.vstages - 1))
+            .map(|v| v.iter().sum::<f64>())
+            .sum::<f64>()
+            + s.opt.iter().sum::<f64>();
+        let comm_ser: f64 = s
+            .tx_fwd
+            .iter()
+            .chain(s.tx_bwd.iter())
+            .map(|v| v.iter().map(|t| t.ser).sum::<f64>())
+            .sum();
+        // per-worker serial compute lower bound (mirrors the analytic
+        // accounting: fused last vstage priced in fwd, its bwd excluded)
+        let per_worker_max: f64 = (0..s.workers)
+            .map(|w| {
+                let mut acc = 0.0;
+                for v in 0..s.vstages {
+                    if s.worker_of[v] != w {
+                        continue;
+                    }
+                    acc += s.fwd[v].iter().sum::<f64>();
+                    if v + 1 != s.vstages {
+                        acc += s.bwd[v].iter().sum::<f64>();
+                    }
+                }
+                acc + s.opt[w]
+            })
+            .fold(0.0, f64::max);
+
+        // per-worker gradient-complete instant: latest gradient of any
+        // vstage hosted on the worker (for V == P this is the stage's
+        // last backward / fused forward, matching the analytic field)
+        let grad_ready: Vec<f64> = (0..s.workers)
+            .map(|w| {
+                (0..s.vstages)
+                    .filter(|v| s.worker_of[*v] == w)
+                    .map(|v| self.grad_done_v[v])
+                    .fold(0.0, f64::max)
+            })
+            .collect();
+
+        Ok(Makespan {
+            total: end,
+            comm_ser,
+            compute,
+            overhead: end - per_worker_max,
+            grad_ready,
+        })
+    }
+}
+
+/// Execute one step's `StepSpec` on the event engine.
+pub fn simulate_step_spec(spec: &StepSpec) -> Result<Makespan> {
+    if spec.vstages < 2 {
+        bail!("pipeline needs >= 2 virtual stages, got {}", spec.vstages);
+    }
+    if spec.microbatches == 0 {
+        bail!("step needs >= 1 microbatch");
+    }
+    Engine::new(spec).run()
+}
+
+/// Event-simulate one coordinator step under `schedule` — the drop-in
+/// replacement for `gpipe_makespan` used by the pipeline when a
+/// non-GPipe schedule (or `--sim`) is requested.
+pub fn step_makespan(costs: &StepCosts, schedule: Schedule) -> Result<Makespan> {
+    simulate_step_spec(&StepSpec::from_costs(costs, schedule)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::schedule::gpipe_makespan;
+    use crate::rng::Rng;
+
+    fn uniform_costs(
+        p: usize,
+        m: usize,
+        f: f64,
+        b: f64,
+        ser: f64,
+        lat: f64,
+    ) -> StepCosts {
+        StepCosts {
+            stages: p,
+            microbatches: m,
+            fwd: vec![vec![f; m]; p],
+            bwd: vec![vec![b; m]; p],
+            tx_fwd: vec![vec![Tx { ser, lat }; m]; p - 1],
+            tx_bwd: vec![vec![Tx { ser, lat }; m]; p - 1],
+            opt: vec![0.0; p],
+            tail: 0.0,
+        }
+    }
+
+    fn random_costs(rng: &mut Rng, p: usize, m: usize) -> StepCosts {
+        let mut c = uniform_costs(p, m, 0.0, 0.0, 0.0, 0.0);
+        for s in 0..p {
+            for mb in 0..m {
+                c.fwd[s][mb] = 0.01 + rng.uniform();
+                c.bwd[s][mb] = 0.01 + 2.0 * rng.uniform();
+            }
+            c.opt[s] = rng.uniform() * 0.3;
+        }
+        for l in 0..p - 1 {
+            for mb in 0..m {
+                c.tx_fwd[l][mb] =
+                    Tx { ser: rng.uniform() * 0.5, lat: rng.uniform() * 0.05 };
+                c.tx_bwd[l][mb] =
+                    Tx { ser: rng.uniform() * 0.5, lat: rng.uniform() * 0.05 };
+            }
+        }
+        c.tail = rng.uniform();
+        c
+    }
+
+    #[test]
+    fn gpipe_event_engine_matches_analytic_exactly() {
+        // the parity contract on arbitrary (jittered) costs: identical
+        // fp operations → identical results, not just 1e-6-close
+        let mut rng = Rng::new(0x51A);
+        for (p, m) in [(2usize, 1usize), (2, 8), (3, 4), (4, 8), (6, 16)] {
+            for _ in 0..3 {
+                let c = random_costs(&mut rng, p, m);
+                let analytic = gpipe_makespan(&c);
+                let event = step_makespan(&c, Schedule::Gpipe).unwrap();
+                assert_eq!(event.total, analytic.total, "p={p} m={m}");
+                assert_eq!(event.comm_ser, analytic.comm_ser);
+                assert_eq!(event.compute, analytic.compute);
+                assert_eq!(event.overhead, analytic.overhead);
+                assert_eq!(event.grad_ready, analytic.grad_ready);
+            }
+        }
+    }
+
+    #[test]
+    fn all_zero_costs_terminate_with_mass_ties() {
+        // every event fires at t = 0: the (time, seq) tie-break must
+        // still drive the schedule to completion, deterministically
+        let c = uniform_costs(4, 8, 0.0, 0.0, 0.0, 0.0);
+        for sched in [Schedule::Gpipe, Schedule::OneFOneB] {
+            let a = step_makespan(&c, sched).unwrap();
+            let b = step_makespan(&c, sched).unwrap();
+            assert_eq!(a.total, 0.0, "{sched:?}");
+            assert_eq!(a.total, b.total);
+            assert_eq!(a.grad_ready, b.grad_ready);
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_reference_values() {
+        // values cross-checked against the python line-port of this
+        // engine. With bwd = 3×fwd, 1F1B's depth cap delays forwards
+        // and slightly *exceeds* this GPipe variant (which already
+        // drains backwards per-arrival); with fwd == bwd they tie.
+        let c = uniform_costs(4, 8, 1.0, 3.0, 0.0, 0.0);
+        let g = step_makespan(&c, Schedule::Gpipe).unwrap();
+        let o = step_makespan(&c, Schedule::OneFOneB).unwrap();
+        assert!((g.total - 40.0).abs() < 1e-9, "gpipe {}", g.total);
+        assert!((o.total - 42.0).abs() < 1e-9, "1f1b {}", o.total);
+        assert_eq!(o.compute, g.compute);
+
+        let c_sym = uniform_costs(4, 8, 1.0, 1.0, 0.0, 0.0);
+        let g_sym = step_makespan(&c_sym, Schedule::Gpipe).unwrap();
+        let o_sym = step_makespan(&c_sym, Schedule::OneFOneB).unwrap();
+        assert!((g_sym.total - 20.0).abs() < 1e-9, "{}", g_sym.total);
+        assert!((o_sym.total - 20.0).abs() < 1e-9, "{}", o_sym.total);
+    }
+
+    #[test]
+    fn interleaved_needs_swarm_path() {
+        let c = uniform_costs(4, 8, 1.0, 3.0, 0.0, 0.0);
+        let err =
+            step_makespan(&c, Schedule::Interleaved { chunks: 2 }).unwrap_err();
+        assert!(err.to_string().contains("wrap-link"), "{err}");
+    }
+
+    #[test]
+    fn schedule_parse_roundtrip() {
+        assert_eq!(Schedule::parse("gpipe"), Some(Schedule::Gpipe));
+        assert_eq!(Schedule::parse("1f1b"), Some(Schedule::OneFOneB));
+        assert_eq!(
+            Schedule::parse("interleaved"),
+            Some(Schedule::Interleaved { chunks: 2 })
+        );
+        assert_eq!(
+            Schedule::parse("interleaved:3"),
+            Some(Schedule::Interleaved { chunks: 3 })
+        );
+        assert_eq!(Schedule::parse("interleaved:1"), None);
+        assert_eq!(Schedule::parse("bogus"), None);
+    }
+
+    #[test]
+    fn degenerate_specs_error() {
+        let c = uniform_costs(2, 1, 1.0, 1.0, 0.0, 0.0);
+        let mut bad = c.clone();
+        bad.microbatches = 0;
+        bad.fwd = vec![vec![]; 2];
+        bad.bwd = vec![vec![]; 2];
+        bad.tx_fwd = vec![vec![]; 1];
+        bad.tx_bwd = vec![vec![]; 1];
+        assert!(step_makespan(&bad, Schedule::Gpipe).is_err());
+        assert!(step_makespan(&c, Schedule::Gpipe).is_ok());
+    }
+}

@@ -1,0 +1,997 @@
+//! Multi-step, multi-replica discrete-event swarm simulation: latency
+//! jitter, time-varying stragglers, and node churn over the hybrid
+//! data-parallel × model-parallel step.
+//!
+//! The closed-form `hybrid_makespan` prices one *undisturbed* step.
+//! Real decentralized swarms are never undisturbed: WAN latency
+//! jitters, hosts throttle and recover, members leave mid-all-reduce
+//! and rejoin minutes later needing a state sync. This engine executes
+//! `steps` consecutive hybrid steps on a global simulated clock where
+//! all of those are first-class events:
+//!
+//! - **Per-entity RNG streams.** Every pipeline link, ring link, and
+//!   the churn process draws from its own stream derived via
+//!   [`crate::par::cell_seed`]`(seed, entity)` — simulation results
+//!   are a pure function of the spec, independent of anything else.
+//! - **Jitter.** Bandwidth jitter comes from the `LinkSpec` (the
+//!   paper's N(B, 0.2B)); latency jitter is layered per transfer via
+//!   [`crate::netsim::Link::sample_jittered`].
+//! - **Stragglers.** Per-replica [`SlowdownProfile`]s evaluated at
+//!   each step's start extend the static `TimeModel::scaled` factors
+//!   to trajectories (degrade-then-recover).
+//! - **Churn.** Leaves (Poisson in *simulated time*, or scripted)
+//!   remove a replica: an all-reduce in flight when the leave lands is
+//!   aborted and restarted on the re-routed smaller ring
+//!   ([`crate::netsim::ReplicaRing::all_reduce_among`]); a leave before
+//!   a replica's pipeline drained discards that replica's step
+//!   contribution. Rejoins integrate at the next step barrier after a
+//!   state sync priced under the same `dp_mode` wire vocabulary as
+//!   gradients (params + both Adam moments).
+//!
+//! Because churn is a rate per simulated *second*, protocols with slow
+//! steps (raw activations at 80 Mbps) absorb proportionally more churn
+//! per step than compressed ones — the effect
+//! `examples/churn_swarm.rs` quantifies.
+//!
+//! **Parity contract** (`tests/sim_swarm.rs`): with zero jitter, no
+//! churn, constant nominal profiles, one step and the GPipe schedule,
+//! [`simulate_swarm`] reproduces `simulate_hybrid_step`'s
+//! `HybridMakespan` within 1e-6 relative across a grid of (stages,
+//! replicas, compression modes).
+
+use anyhow::{bail, Result};
+
+use crate::compress::{dp_wire_bytes, wire_bytes, Mode};
+use crate::coordinator::schedule::{Makespan, Tx};
+use crate::manifest::Hyper;
+use crate::netsim::{Link, LinkSpec, ReplicaRing};
+use crate::par::cell_seed;
+use crate::rng::Rng;
+use crate::sim::step::{simulate_step_spec, Schedule, StepSpec};
+use crate::timemodel::{
+    stage_param_count, stage_seconds, Phase, SlowdownProfile, TimeModel,
+};
+
+/// What kind of membership change a scripted churn event applies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnKind {
+    /// the replica crashes / disconnects at `time`
+    Leave,
+    /// the replica comes back at `time` (sync starts then; it
+    /// re-enters the swarm at the next step barrier after sync)
+    Rejoin,
+}
+
+/// One scripted membership change.
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnEvent {
+    /// simulated instant the change happens
+    pub time: f64,
+    /// which replica
+    pub replica: usize,
+    /// leave or rejoin
+    pub kind: ChurnKind,
+}
+
+/// Churn process driving membership changes.
+#[derive(Clone, Debug)]
+pub enum ChurnSpec {
+    /// stable membership
+    None,
+    /// leaves arrive as a Poisson process in simulated time; each
+    /// leaver rejoins `downtime_s` later (sync at the next barrier)
+    Poisson {
+        /// expected leaves per simulated second (over the whole swarm)
+        rate_per_s: f64,
+        /// seconds a leaver stays away before rejoining
+        downtime_s: f64,
+    },
+    /// explicit (time, replica, kind) list — deterministic scenarios
+    /// and the mid-all-reduce edge-case tests
+    Scripted(Vec<ChurnEvent>),
+}
+
+/// Full specification of one swarm simulation.
+#[derive(Clone, Debug)]
+pub struct SwarmSpec {
+    /// model/pipeline dimensions (no manifest required)
+    pub hyper: Hyper,
+    /// microbatches per step
+    pub microbatches: usize,
+    /// activation (boundary) compression mode
+    pub mode: Mode,
+    /// weight-gradient all-reduce + rejoin-sync pricing mode
+    pub dp_mode: Mode,
+    /// number of pipeline replicas R
+    pub replicas: usize,
+    /// pipeline schedule executed by the event engine
+    pub schedule: Schedule,
+    /// stage-to-stage (pipeline) link spec; its `jitter_frac` is the
+    /// bandwidth jitter
+    pub link: LinkSpec,
+    /// cross-replica (ring) link spec
+    pub ring_link: LinkSpec,
+    /// σ/μ of the per-transfer latency factor (0 = deterministic)
+    pub lat_jitter_frac: f64,
+    /// compute-time model (scaled per replica by `straggler`)
+    pub time_model: TimeModel,
+    /// per-replica slowdown trajectories (empty = all nominal)
+    pub straggler: Vec<SlowdownProfile>,
+    /// membership-change process
+    pub churn: ChurnSpec,
+    /// optimizer steps to simulate
+    pub steps: usize,
+    /// master seed for every per-entity stream
+    pub seed: u64,
+}
+
+impl SwarmSpec {
+    /// Ready-to-run spec over uniform consumer links at `bw_bps`:
+    /// mirrors `HybridSimSpec::uniform` (8 microbatches, subspace both
+    /// axes, analytic clock, seed 17) plus GPipe schedule, no jitter
+    /// beyond the links' own, no churn, one step.
+    pub fn uniform(hyper: Hyper, replicas: usize, bw_bps: f64) -> SwarmSpec {
+        SwarmSpec {
+            hyper,
+            microbatches: 8,
+            mode: Mode::Subspace,
+            dp_mode: Mode::Subspace,
+            replicas,
+            schedule: Schedule::Gpipe,
+            link: LinkSpec::internet(bw_bps),
+            ring_link: LinkSpec::internet(bw_bps),
+            lat_jitter_frac: 0.0,
+            time_model: TimeModel::default_analytic(),
+            straggler: Vec::new(),
+            churn: ChurnSpec::None,
+            steps: 1,
+            seed: 17,
+        }
+    }
+
+    /// Straggler profile of replica `r` (nominal when unspecified).
+    pub fn profile_of(&self, r: usize) -> SlowdownProfile {
+        self.straggler
+            .get(r)
+            .cloned()
+            .unwrap_or_else(SlowdownProfile::nominal)
+    }
+
+    fn validate_link(spec: &LinkSpec, what: &str) -> Result<()> {
+        if !spec.bandwidth_bps.is_finite() || spec.bandwidth_bps <= 0.0 {
+            bail!(
+                "{what} bandwidth must be finite and positive, got {} bps \
+                 (a zero-bandwidth link would produce infinite event times)",
+                spec.bandwidth_bps
+            );
+        }
+        if !spec.latency_s.is_finite() || spec.latency_s < 0.0 {
+            bail!("{what} latency must be finite and >= 0");
+        }
+        if !spec.jitter_frac.is_finite() || spec.jitter_frac < 0.0 {
+            bail!("{what} jitter_frac must be finite and >= 0");
+        }
+        Ok(())
+    }
+
+    /// Check every modeling precondition; every error names the field.
+    pub fn validate(&self) -> Result<()> {
+        let h = &self.hyper;
+        if h.stages < 2 || h.stages > 128 {
+            bail!("pipeline needs 2..=128 stages, got {}", h.stages);
+        }
+        if self.microbatches == 0 {
+            bail!("need >= 1 microbatch");
+        }
+        if self.replicas == 0 || self.replicas > 512 {
+            bail!("need 1..=512 replicas, got {}", self.replicas);
+        }
+        if self.steps == 0 {
+            bail!("need >= 1 step");
+        }
+        SwarmSpec::validate_link(&self.link, "pipeline link")?;
+        SwarmSpec::validate_link(&self.ring_link, "ring link")?;
+        if !self.lat_jitter_frac.is_finite() || self.lat_jitter_frac < 0.0 {
+            bail!("lat_jitter_frac must be finite and >= 0");
+        }
+        if let Schedule::Interleaved { chunks } = self.schedule {
+            if chunks < 2 {
+                bail!("interleaved schedule needs >= 2 chunks");
+            }
+        }
+        for (r, p) in self.straggler.iter().enumerate() {
+            if !p.is_valid() {
+                bail!("straggler profile of replica {r} is invalid: {p:?}");
+            }
+        }
+        let heterogeneous = self.straggler.iter().any(|p| match p {
+            SlowdownProfile::Constant(f) => (*f - 1.0).abs() > 1e-9,
+            SlowdownProfile::Phases(v) => !v.is_empty(),
+        });
+        if heterogeneous && matches!(self.time_model, TimeModel::Measured) {
+            bail!(
+                "straggler profiles need an analytic time model: measured \
+                 wall times cannot be re-attributed per replica"
+            );
+        }
+        match &self.churn {
+            ChurnSpec::None => {}
+            ChurnSpec::Poisson { rate_per_s, downtime_s } => {
+                if !rate_per_s.is_finite() || *rate_per_s < 0.0 {
+                    bail!("churn rate must be finite and >= 0");
+                }
+                if !downtime_s.is_finite() || *downtime_s <= 0.0 {
+                    bail!("churn downtime must be finite and positive");
+                }
+            }
+            ChurnSpec::Scripted(events) => {
+                for e in events {
+                    if !e.time.is_finite() || e.time < 0.0 {
+                        bail!("scripted churn times must be finite and >= 0");
+                    }
+                    if e.replica >= self.replicas {
+                        bail!(
+                            "scripted churn names replica {} of {}",
+                            e.replica,
+                            self.replicas
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// What one swarm simulation measured. The first five fields mirror
+/// [`Makespan`] (aggregated over the run); the next four mirror
+/// `HybridMakespan` for the *last* step (offsets from its barrier);
+/// the rest are swarm-only.
+#[derive(Clone, Debug, Default)]
+pub struct SimReport {
+    /// simulated seconds for the whole run (== step time for 1 step)
+    pub total: f64,
+    /// pipeline-link serialization seconds, summed over steps/replicas
+    pub comm_ser: f64,
+    /// compute seconds, summed over steps and replicas
+    pub compute: f64,
+    /// seconds beyond the best per-step serial compute bound
+    pub overhead: f64,
+    /// last step's per-stage gradient-ready offsets (max over members)
+    pub grad_ready: Vec<f64>,
+    /// last step: instant (offset) the slowest surviving pipeline ended
+    pub compute_end: f64,
+    /// last step: instant (offset) the last all-reduce completed (0
+    /// when a single member made comm free)
+    pub comm_end: f64,
+    /// last step: non-overlapped all-reduce tail
+    pub tail: f64,
+    /// ring-busy seconds across the run (incl. work lost to restarts)
+    pub allreduce_busy: f64,
+    /// steps simulated
+    pub steps: usize,
+    /// wall seconds of each step (barrier stalls included)
+    pub step_seconds: Vec<f64>,
+    /// members that left / rejoined across the run
+    pub leaves: usize,
+    /// rejoins integrated at barriers
+    pub rejoins: usize,
+    /// all-reduces aborted by a leave landing mid-flight
+    pub allreduce_restarts: usize,
+    /// seconds spent on rejoin state syncs
+    pub sync_seconds: f64,
+    /// smallest membership any step started with
+    pub min_active: usize,
+    /// bytes that crossed pipeline links
+    pub wire_bytes: u64,
+    /// bytes that crossed ring links
+    pub dp_bytes: u64,
+}
+
+impl SimReport {
+    /// Mean seconds per step.
+    pub fn mean_step(&self) -> f64 {
+        if self.step_seconds.is_empty() {
+            0.0
+        } else {
+            self.step_seconds.iter().sum::<f64>()
+                / self.step_seconds.len() as f64
+        }
+    }
+}
+
+// per-entity stream tags (see cell_seed): pipeline link l of replica r,
+// ring link of replica r, the churn process
+fn ent_pipe(r: usize, l: usize) -> usize {
+    1_000 + r * 1_000 + l
+}
+fn ent_ring(r: usize) -> usize {
+    2_000_000 + r
+}
+const ENT_CHURN: usize = 3_000_000;
+
+struct Swarm<'a> {
+    spec: &'a SwarmSpec,
+    /// [replica][phys link] — p-1 pipeline links plus one wrap link
+    pipe_links: Vec<Vec<Link>>,
+    ring: ReplicaRing,
+    churn_rng: Rng,
+    active: Vec<bool>,
+    /// (rejoin time, replica), unordered; scanned for the minimum
+    pending_rejoin: Vec<(f64, usize)>,
+    /// scripted leaves sorted by time, next at `script_idx`
+    scripted_leaves: Vec<(f64, usize)>,
+    script_idx: usize,
+    /// absolute time of the next Poisson leave, if that process runs
+    next_poisson: Option<f64>,
+    clock: f64,
+    report: SimReport,
+}
+
+impl<'a> Swarm<'a> {
+    fn new(spec: &'a SwarmSpec) -> Swarm<'a> {
+        let p = spec.hyper.stages;
+        let pipe_links = (0..spec.replicas)
+            .map(|r| {
+                (0..p)
+                    .map(|l| {
+                        Link::new(
+                            spec.link,
+                            Rng::new(cell_seed(spec.seed, ent_pipe(r, l))),
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        let ring = ReplicaRing {
+            links: (0..spec.replicas)
+                .map(|r| {
+                    Link::new(
+                        spec.ring_link,
+                        Rng::new(cell_seed(spec.seed, ent_ring(r))),
+                    )
+                })
+                .collect(),
+        };
+        let mut churn_rng = Rng::new(cell_seed(spec.seed, ENT_CHURN));
+        let mut scripted_leaves = Vec::new();
+        let mut pending_rejoin = Vec::new();
+        let mut next_poisson = None;
+        match &spec.churn {
+            ChurnSpec::None => {}
+            ChurnSpec::Poisson { rate_per_s, .. } => {
+                if *rate_per_s > 0.0 {
+                    next_poisson =
+                        Some(exp_sample(&mut churn_rng, *rate_per_s));
+                }
+            }
+            ChurnSpec::Scripted(events) => {
+                for e in events {
+                    match e.kind {
+                        ChurnKind::Leave => {
+                            scripted_leaves.push((e.time, e.replica))
+                        }
+                        // rejoins integrate at barriers; queue them now
+                        ChurnKind::Rejoin => {
+                            pending_rejoin.push((e.time, e.replica))
+                        }
+                    }
+                }
+                scripted_leaves
+                    .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            }
+        }
+        Swarm {
+            spec,
+            pipe_links,
+            ring,
+            churn_rng,
+            active: vec![true; spec.replicas],
+            pending_rejoin,
+            scripted_leaves,
+            script_idx: 0,
+            next_poisson,
+            clock: 0.0,
+            report: SimReport::default(),
+        }
+    }
+
+    fn active_count(&self) -> usize {
+        self.active.iter().filter(|a| **a).count()
+    }
+
+    /// Time of the next undecided leave, if any.
+    fn peek_leave(&self) -> Option<f64> {
+        match &self.spec.churn {
+            ChurnSpec::Poisson { .. } => self.next_poisson,
+            ChurnSpec::Scripted(_) => self
+                .scripted_leaves
+                .get(self.script_idx)
+                .map(|(t, _)| *t),
+            ChurnSpec::None => None,
+        }
+    }
+
+    /// Fire the next leave event (caller checked its time). Returns the
+    /// replica that left, if the event found a victim.
+    fn fire_leave(&mut self, t: f64) -> Option<usize> {
+        match &self.spec.churn {
+            ChurnSpec::Poisson { rate_per_s, downtime_s } => {
+                self.next_poisson =
+                    Some(t + exp_sample(&mut self.churn_rng, *rate_per_s));
+                // never drop the last member (the inter-arrival draw
+                // above already happened, keeping the stream aligned)
+                let count = self.active_count();
+                if count <= 1 {
+                    return None;
+                }
+                let k = self.churn_rng.below(count);
+                let victim = (0..self.active.len())
+                    .filter(|r| self.active[*r])
+                    .nth(k)
+                    .expect("k < active count");
+                self.active[victim] = false;
+                self.report.leaves += 1;
+                self.pending_rejoin.push((t + downtime_s, victim));
+                Some(victim)
+            }
+            ChurnSpec::Scripted(_) => {
+                let (_, replica) = self.scripted_leaves[self.script_idx];
+                self.script_idx += 1;
+                // same invariant as the Poisson path: a leave never
+                // drops the last member — the scripted event is skipped
+                if self.active[replica] && self.active_count() <= 1 {
+                    return None;
+                }
+                if !self.active[replica] {
+                    // the node went away again before its pending rejoin
+                    // was integrated at a barrier: cancel that rejoin
+                    // (it never made it back into the swarm)
+                    self.pending_rejoin
+                        .retain(|(rt, rr)| *rr != replica || *rt > t);
+                    return None;
+                }
+                self.active[replica] = false;
+                self.report.leaves += 1;
+                Some(replica)
+            }
+            ChurnSpec::None => None,
+        }
+    }
+
+    /// Step barrier: apply due leaves, integrate due rejoins (paying
+    /// their state sync), and never start a step with zero members.
+    fn barrier(&mut self) -> Result<f64> {
+        let mut barrier = self.clock;
+        loop {
+            if let Some(tl) = self.peek_leave() {
+                if tl <= barrier {
+                    self.fire_leave(tl);
+                    continue;
+                }
+            }
+            // earliest due rejoin
+            let mut due: Option<usize> = None;
+            for (i, (t, _)) in self.pending_rejoin.iter().enumerate() {
+                if *t <= barrier {
+                    let better = match due {
+                        None => true,
+                        Some(j) => *t < self.pending_rejoin[j].0,
+                    };
+                    if better {
+                        due = Some(i);
+                    }
+                }
+            }
+            if let Some(i) = due {
+                let (rt, r) = self.pending_rejoin.swap_remove(i);
+                if self.active[r] {
+                    continue; // scripted rejoin of a present member
+                }
+                let dur = self.sync_duration(r);
+                self.report.sync_seconds += dur;
+                self.report.rejoins += 1;
+                self.active[r] = true;
+                if rt + dur > barrier {
+                    barrier = rt + dur;
+                }
+                continue;
+            }
+            if self.active_count() == 0 {
+                // idle until somebody comes back
+                let next = self
+                    .pending_rejoin
+                    .iter()
+                    .map(|(t, _)| *t)
+                    .fold(f64::INFINITY, f64::min);
+                if !next.is_finite() {
+                    bail!("every replica left and none is scheduled back");
+                }
+                if next > barrier {
+                    barrier = next;
+                }
+                continue;
+            }
+            break;
+        }
+        Ok(barrier)
+    }
+
+    /// State-sync transfer for a rejoining replica: parameters plus
+    /// both Adam moments, priced under `dp_mode`, over the replica's
+    /// ring link.
+    fn sync_duration(&mut self, r: usize) -> f64 {
+        let h = &self.spec.hyper;
+        let total_params: usize =
+            (0..h.stages).map(|s| stage_param_count(h, s)).sum();
+        let bytes = dp_wire_bytes(
+            self.spec.dp_mode,
+            3 * total_params,
+            h.d,
+            h.k,
+            h.ratio,
+        );
+        let (ser, lat) = self.ring.links[r]
+            .sample_jittered(bytes, self.spec.lat_jitter_frac);
+        ser + lat
+    }
+
+    /// Per-replica step costs at this barrier instant.
+    fn build_spec(&mut self, r: usize, barrier: f64) -> StepSpec {
+        let spec = self.spec;
+        let h = &spec.hyper;
+        let p = h.stages;
+        let m = spec.microbatches;
+        let chunks = match spec.schedule {
+            Schedule::Interleaved { chunks } => chunks,
+            _ => 1,
+        };
+        let vstages = p * chunks;
+        let tm = spec.time_model.scaled_at(&spec.profile_of(r), barrier);
+        let compressed = matches!(spec.mode, Mode::Subspace | Mode::NoFixed);
+        let bbytes = wire_bytes(spec.mode, h.b, h.n, h.d, h.k, h.ratio);
+        let cf = chunks as f64;
+
+        let mut fwd = vec![vec![0.0; m]; vstages];
+        let mut bwd = vec![vec![0.0; m]; vstages];
+        for v in 0..vstages {
+            let s = v % p;
+            let (f, b) = if v == vstages - 1 {
+                // the final chunk carries the fused fwd+loss+bwd
+                let fused =
+                    stage_seconds(tm, h, s, Phase::LastLoss, compressed, None);
+                (fused / cf, 0.0)
+            } else {
+                (
+                    stage_seconds(tm, h, s, Phase::Fwd, compressed, None) / cf,
+                    stage_seconds(tm, h, s, Phase::Bwd, compressed, None) / cf,
+                )
+            };
+            for mb in 0..m {
+                fwd[v][mb] = f;
+                bwd[v][mb] = b;
+            }
+        }
+        let opt: Vec<f64> = (0..p)
+            .map(|s| stage_seconds(tm, h, s, Phase::Opt, compressed, None))
+            .collect();
+
+        // sample every transfer from the replica's persistent per-link
+        // streams; interleaved vlinks share physical links (chunk c's
+        // boundary c·P+P−1 → next chunk crosses the wrap link P−1)
+        let mut tx_fwd = vec![vec![Tx::default(); m]; vstages - 1];
+        let mut tx_bwd = vec![vec![Tx::default(); m]; vstages - 1];
+        let mut wire = 0u64;
+        for vl in 0..vstages - 1 {
+            let link = vl % p;
+            for mb in 0..m {
+                let (ser, lat) = self.pipe_links[r][link]
+                    .sample_jittered(bbytes, spec.lat_jitter_frac);
+                tx_fwd[vl][mb] = Tx { ser, lat };
+                let (ser, lat) = self.pipe_links[r][link]
+                    .sample_jittered(bbytes, spec.lat_jitter_frac);
+                tx_bwd[vl][mb] = Tx { ser, lat };
+                wire += 2 * bbytes as u64;
+            }
+        }
+        self.report.wire_bytes += wire;
+
+        StepSpec {
+            workers: p,
+            vstages,
+            microbatches: m,
+            worker_of: (0..vstages).map(|v| v % p).collect(),
+            phys_link_of: (0..vstages - 1).map(|v| v % p).collect(),
+            n_phys_links: if chunks == 1 { p - 1 } else { p },
+            fwd,
+            bwd,
+            tx_fwd,
+            tx_bwd,
+            opt,
+            tail: 0.0,
+            schedule: spec.schedule,
+        }
+    }
+
+    /// One hybrid step; returns its wall seconds.
+    fn step(&mut self, is_last: bool) -> Result<f64> {
+        let spec = self.spec;
+        let h = &spec.hyper;
+        let p = h.stages;
+        let t_sched = self.clock;
+        // captured before the barrier so rejoin state-sync bytes (which
+        // cross ring links inside barrier()) land in this step's delta
+        let dp_before = self.ring.total_bytes();
+        let barrier = self.barrier()?;
+
+        let members: Vec<usize> =
+            (0..spec.replicas).filter(|r| self.active[*r]).collect();
+        if members.len() < self.report.min_active
+            || self.report.step_seconds.is_empty()
+        {
+            self.report.min_active = members.len();
+        }
+
+        // --- pipelines (event-driven) ---
+        let mut makespans: Vec<(usize, Makespan)> =
+            Vec::with_capacity(members.len());
+        for &r in &members {
+            let sspec = self.build_spec(r, barrier);
+            let ms = simulate_step_spec(&sspec)?;
+            self.report.compute += ms.compute;
+            self.report.comm_ser += ms.comm_ser;
+            makespans.push((r, ms));
+        }
+        let serial_bound = makespans
+            .iter()
+            .map(|(_, ms)| ms.total - ms.overhead)
+            .fold(0.0, f64::max);
+
+        // --- overlapped ring all-reduce with churn ---
+        let payloads: Vec<usize> = (0..p)
+            .map(|s| {
+                dp_wire_bytes(
+                    spec.dp_mode,
+                    stage_param_count(h, s),
+                    h.d,
+                    h.k,
+                    h.ratio,
+                )
+            })
+            .collect();
+        let mut live: Vec<usize> = members.clone();
+        let mut left_at: Vec<(usize, f64)> = Vec::new();
+        let mut done = vec![false; p];
+        let mut ring_free = barrier;
+        let mut reduced_any = false;
+        let ready_of = |live: &[usize], ms: &[(usize, Makespan)], s: usize| {
+            barrier
+                + ms.iter()
+                    .filter(|(r, _)| live.contains(r))
+                    .map(|(_, m)| m.grad_ready.get(s).copied().unwrap_or(0.0))
+                    .fold(0.0, f64::max)
+        };
+        loop {
+            // next pending stage by (ready, stage)
+            let mut next: Option<(f64, usize)> = None;
+            for s in 0..p {
+                if done[s] {
+                    continue;
+                }
+                let rdy = ready_of(&live, &makespans, s);
+                if next.is_none() || rdy < next.unwrap().0 {
+                    next = Some((rdy, s));
+                }
+            }
+            let (rdy, s) = match next {
+                Some(n) => n,
+                None => break,
+            };
+            if live.len() <= 1 {
+                // nobody to reduce with: remaining stages are free
+                done.fill(true);
+                break;
+            }
+            let start = if rdy > ring_free { rdy } else { ring_free };
+            // leaves up to the start land before any work is risked
+            if let Some(tl) = self.peek_leave() {
+                if tl <= start {
+                    if let Some(victim) = self.fire_leave(tl) {
+                        live.retain(|r| *r != victim);
+                        left_at.push((victim, tl));
+                    }
+                    continue;
+                }
+            }
+            let dur = self.ring.all_reduce_among(
+                &live,
+                payloads[s],
+                spec.lat_jitter_frac,
+            );
+            // a leave landing mid-all-reduce aborts it: the elapsed
+            // rounds are wasted and the stage restarts on the
+            // re-routed (smaller) ring
+            if let Some(tl) = self.peek_leave() {
+                if tl > start && tl < start + dur {
+                    if let Some(victim) = self.fire_leave(tl) {
+                        self.report.allreduce_restarts += 1;
+                        self.report.allreduce_busy += tl - start;
+                        live.retain(|r| *r != victim);
+                        left_at.push((victim, tl));
+                        ring_free = tl;
+                        continue;
+                    }
+                }
+            }
+            self.report.allreduce_busy += dur;
+            ring_free = start + dur;
+            done[s] = true;
+            reduced_any = true;
+        }
+
+        // --- step end: slowest surviving pipeline vs last all-reduce ---
+        let pipe_end = |r: usize, ms: &[(usize, Makespan)]| {
+            ms.iter()
+                .find(|(rr, _)| *rr == r)
+                .map(|(_, m)| barrier + m.total)
+                .unwrap_or(barrier)
+        };
+        // a member that left before its own pipeline drained never
+        // finished the step — its contribution to the drain is dropped
+        let compute_end_over = |left_at: &[(usize, f64)]| -> f64 {
+            let mut end = barrier;
+            for &r in members.iter() {
+                let pe = pipe_end(r, &makespans);
+                let left_before =
+                    left_at.iter().any(|(rr, t)| *rr == r && *t < pe);
+                if !left_before {
+                    end = end.max(pe);
+                }
+            }
+            end
+        };
+        let mut compute_end = compute_end_over(&left_at);
+        let comm_end = if reduced_any { ring_free } else { barrier };
+        let mut step_end = compute_end.max(comm_end);
+        // leaves in the pure-compute tail after the last all-reduce: a
+        // crash at tl drops the crasher's contribution, but the step
+        // still ends no earlier than tl — the survivors were waiting on
+        // the crasher until the failure was detected, so the barrier
+        // cannot retroactively move before the crash instant
+        loop {
+            let tl = match self.peek_leave() {
+                Some(t) if t <= step_end => t,
+                _ => break,
+            };
+            if let Some(victim) = self.fire_leave(tl) {
+                let dropped_pending = pipe_end(victim, &makespans) > tl;
+                live.retain(|r| *r != victim);
+                left_at.push((victim, tl));
+                compute_end = compute_end_over(&left_at);
+                step_end = compute_end.max(comm_end);
+                if dropped_pending && tl > step_end {
+                    // survivors were stalled on the crasher until the
+                    // failure was detected at tl
+                    step_end = tl;
+                }
+            }
+        }
+
+        self.report.dp_bytes += self.ring.total_bytes() - dp_before;
+        if is_last {
+            self.report.compute_end = compute_end - barrier;
+            self.report.comm_end =
+                if reduced_any { comm_end - barrier } else { 0.0 };
+            self.report.tail = step_end - compute_end;
+            self.report.grad_ready = (0..p)
+                .map(|s| {
+                    makespans
+                        .iter()
+                        .map(|(_, m)| {
+                            m.grad_ready.get(s).copied().unwrap_or(0.0)
+                        })
+                        .fold(0.0, f64::max)
+                })
+                .collect();
+        }
+        self.report.overhead += (step_end - barrier) - serial_bound;
+        self.clock = step_end;
+        Ok(step_end - t_sched)
+    }
+
+    fn run(mut self) -> Result<SimReport> {
+        let steps = self.spec.steps;
+        for i in 0..steps {
+            let dt = self.step(i + 1 == steps)?;
+            self.report.step_seconds.push(dt);
+        }
+        self.report.steps = steps;
+        self.report.total = self.clock;
+        Ok(self.report)
+    }
+}
+
+/// Exponential inter-arrival sample for a Poisson process of `rate`/s.
+fn exp_sample(rng: &mut Rng, rate: f64) -> f64 {
+    let u = rng.uniform();
+    -(1.0 - u).ln() / rate
+}
+
+/// Run one swarm simulation end-to-end.
+pub fn simulate_swarm(spec: &SwarmSpec) -> Result<SimReport> {
+    spec.validate()?;
+    Swarm::new(spec).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::MBPS;
+
+    fn quiet(bw_mbps: f64) -> LinkSpec {
+        LinkSpec {
+            bandwidth_bps: bw_mbps * MBPS,
+            latency_s: 2e-3,
+            jitter_frac: 0.0,
+        }
+    }
+
+    fn quiet_spec(replicas: usize, bw_mbps: f64) -> SwarmSpec {
+        let mut s =
+            SwarmSpec::uniform(Hyper::base_sim(), replicas, bw_mbps * MBPS);
+        s.link = quiet(bw_mbps);
+        s.ring_link = quiet(bw_mbps);
+        s
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut spec = quiet_spec(4, 80.0);
+        spec.link.jitter_frac = 0.2; // jittered, still deterministic
+        spec.lat_jitter_frac = 0.2;
+        spec.steps = 3;
+        spec.churn =
+            ChurnSpec::Poisson { rate_per_s: 0.5, downtime_s: 0.4 };
+        let a = simulate_swarm(&spec).unwrap();
+        let b = simulate_swarm(&spec).unwrap();
+        assert_eq!(a.total, b.total);
+        assert_eq!(a.step_seconds, b.step_seconds);
+        assert_eq!(a.leaves, b.leaves);
+        assert_eq!(a.allreduce_restarts, b.allreduce_restarts);
+    }
+
+    #[test]
+    fn zero_bandwidth_link_is_an_error() {
+        let mut spec = quiet_spec(2, 80.0);
+        spec.link.bandwidth_bps = 0.0;
+        let err = simulate_swarm(&spec).unwrap_err();
+        assert!(err.to_string().contains("bandwidth"), "{err}");
+        let mut spec = quiet_spec(2, 80.0);
+        spec.ring_link.bandwidth_bps = f64::NAN;
+        assert!(simulate_swarm(&spec).is_err());
+    }
+
+    #[test]
+    fn multi_step_clock_accumulates() {
+        let mut spec = quiet_spec(2, 300.0);
+        spec.steps = 4;
+        let rep = simulate_swarm(&spec).unwrap();
+        assert_eq!(rep.steps, 4);
+        assert_eq!(rep.step_seconds.len(), 4);
+        let sum: f64 = rep.step_seconds.iter().sum();
+        assert!((rep.total - sum).abs() < 1e-9);
+        // undisturbed homogeneous steps all cost the same
+        for w in rep.step_seconds.windows(2) {
+            assert!((w[0] - w[1]).abs() < 1e-9, "{:?}", rep.step_seconds);
+        }
+    }
+
+    #[test]
+    fn time_varying_straggler_kicks_in_mid_run() {
+        let mut spec = quiet_spec(2, 16_000.0);
+        // compute-bound and latency-free so the 2x factor shows cleanly
+        spec.link.latency_s = 0.0;
+        spec.ring_link.latency_s = 0.0;
+        spec.steps = 4;
+        let base = simulate_swarm(&spec).unwrap();
+        let step = base.step_seconds[0];
+        // replica 1 degrades 2x from just after step 2's start
+        let onset = step * 1.5;
+        spec.straggler = vec![
+            SlowdownProfile::nominal(),
+            SlowdownProfile::Phases(vec![(onset, 2.0)]),
+        ];
+        let slow = simulate_swarm(&spec).unwrap();
+        assert!(
+            (slow.step_seconds[0] - step).abs() < 1e-9,
+            "step 1 unaffected"
+        );
+        assert!(
+            slow.step_seconds[3] > 1.8 * step,
+            "late steps straggled: {:?}",
+            slow.step_seconds
+        );
+    }
+
+    #[test]
+    fn scripted_leave_shrinks_membership_and_rejoin_pays_sync() {
+        let mut spec = quiet_spec(4, 80.0);
+        spec.steps = 3;
+        let base = simulate_swarm(&spec).unwrap();
+        let step = base.step_seconds[0];
+        // replica 2 leaves early in step 2 and is back before step 2
+        // ends, so step 3's barrier integrates it (paying the sync)
+        spec.churn = ChurnSpec::Scripted(vec![
+            ChurnEvent {
+                time: step * 1.01,
+                replica: 2,
+                kind: ChurnKind::Leave,
+            },
+            ChurnEvent {
+                time: step * 1.2,
+                replica: 2,
+                kind: ChurnKind::Rejoin,
+            },
+        ]);
+        let churned = simulate_swarm(&spec).unwrap();
+        assert_eq!(churned.leaves, 1);
+        assert_eq!(churned.rejoins, 1);
+        assert!(churned.sync_seconds > 0.0);
+        // every step *started* with full membership (the leave landed
+        // mid-step and the rejoin was integrated by the next barrier)
+        assert_eq!(churned.min_active, 4);
+        assert!(churned.total > 0.0 && base.total > 0.0);
+    }
+
+    #[test]
+    fn poisson_rate_zero_is_no_churn() {
+        let mut spec = quiet_spec(3, 80.0);
+        spec.steps = 2;
+        let base = simulate_swarm(&spec).unwrap();
+        spec.churn = ChurnSpec::Poisson { rate_per_s: 0.0, downtime_s: 1.0 };
+        let z = simulate_swarm(&spec).unwrap();
+        assert_eq!(z.leaves, 0);
+        assert_eq!(z.total, base.total);
+    }
+
+    #[test]
+    fn last_member_never_leaves() {
+        let mut spec = quiet_spec(1, 80.0);
+        spec.steps = 3;
+        spec.churn = ChurnSpec::Poisson { rate_per_s: 100.0, downtime_s: 0.1 };
+        let rep = simulate_swarm(&spec).unwrap();
+        assert_eq!(rep.leaves, 0, "a 1-replica swarm cannot shrink");
+        assert_eq!(rep.min_active, 1);
+
+        // the scripted path enforces the same invariant: the second
+        // leave would empty the swarm and is skipped
+        let mut spec = quiet_spec(2, 80.0);
+        spec.steps = 2;
+        spec.churn = ChurnSpec::Scripted(vec![
+            ChurnEvent { time: 0.01, replica: 0, kind: ChurnKind::Leave },
+            ChurnEvent { time: 0.02, replica: 1, kind: ChurnKind::Leave },
+        ]);
+        let rep = simulate_swarm(&spec).unwrap();
+        assert_eq!(rep.leaves, 1);
+        assert_eq!(rep.min_active, 1);
+    }
+
+    #[test]
+    fn interleaved_swarm_runs_and_pays_more_comm() {
+        // comm-bound regime: interleaved crosses every boundary twice
+        let mut g = quiet_spec(2, 20.0);
+        let mut i = quiet_spec(2, 20.0);
+        i.schedule = Schedule::Interleaved { chunks: 2 };
+        g.steps = 1;
+        i.steps = 1;
+        let rg = simulate_swarm(&g).unwrap();
+        let ri = simulate_swarm(&i).unwrap();
+        assert!(
+            ri.comm_ser > 1.9 * rg.comm_ser,
+            "interleaved comm {} vs gpipe {}",
+            ri.comm_ser,
+            rg.comm_ser
+        );
+        assert!(ri.total > 0.0 && rg.total > 0.0);
+    }
+}

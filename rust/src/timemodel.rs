@@ -58,6 +58,67 @@ impl TimeModel {
             },
         }
     }
+
+    /// [`TimeModel::scaled`] driven by a *time-varying* straggler
+    /// profile, evaluated at simulated instant `t` — real swarm hosts
+    /// don't straggle by a constant factor, they degrade and recover
+    /// (thermal throttling, co-tenant load). The discrete-event
+    /// simulator prices each step's compute at the profile's factor at
+    /// the step's start.
+    pub fn scaled_at(self, profile: &SlowdownProfile, t: f64) -> TimeModel {
+        self.scaled(profile.at(t))
+    }
+}
+
+/// Compute-slowdown trajectory of one replica over simulated time
+/// (1.0 = nominal throughput, 2.0 = half throughput).
+#[derive(Clone, Debug)]
+pub enum SlowdownProfile {
+    /// the same factor for the whole run — equivalent to the static
+    /// `--hetero` factors fed to [`TimeModel::scaled`]
+    Constant(f64),
+    /// piecewise-constant phases `(start_seconds, factor)`: at time t
+    /// the factor of the last phase with `start <= t` applies (1.0
+    /// before the first phase). Phases must be sorted by start time.
+    Phases(Vec<(f64, f64)>),
+}
+
+impl SlowdownProfile {
+    /// Nominal (no-slowdown) profile.
+    pub fn nominal() -> SlowdownProfile {
+        SlowdownProfile::Constant(1.0)
+    }
+
+    /// Slowdown factor at simulated instant `t`.
+    pub fn at(&self, t: f64) -> f64 {
+        match self {
+            SlowdownProfile::Constant(f) => *f,
+            SlowdownProfile::Phases(phases) => {
+                let mut cur = 1.0;
+                for (start, factor) in phases {
+                    if *start <= t {
+                        cur = *factor;
+                    } else {
+                        break;
+                    }
+                }
+                cur
+            }
+        }
+    }
+
+    /// Whether every factor is finite and positive and phase starts are
+    /// sorted — validated by simulation specs before running.
+    pub fn is_valid(&self) -> bool {
+        match self {
+            SlowdownProfile::Constant(f) => f.is_finite() && *f > 0.0,
+            SlowdownProfile::Phases(phases) => {
+                phases.iter().all(|(s, f)| {
+                    s.is_finite() && *s >= 0.0 && f.is_finite() && *f > 0.0
+                }) && phases.windows(2).all(|w| w[0].0 <= w[1].0)
+            }
+        }
+    }
 }
 
 /// Which entrypoint's cost to estimate.
@@ -254,6 +315,34 @@ mod tests {
             TimeModel::Measured.scaled(3.0),
             TimeModel::Measured
         ));
+    }
+
+    #[test]
+    fn slowdown_profile_phases_and_validation() {
+        let p = SlowdownProfile::Phases(vec![(10.0, 2.0), (20.0, 1.0)]);
+        assert_eq!(p.at(0.0), 1.0, "nominal before the first phase");
+        assert_eq!(p.at(10.0), 2.0);
+        assert_eq!(p.at(15.0), 2.0);
+        assert_eq!(p.at(25.0), 1.0);
+        assert!(p.is_valid());
+        assert!(SlowdownProfile::nominal().is_valid());
+        assert!(!SlowdownProfile::Constant(0.0).is_valid());
+        assert!(!SlowdownProfile::Constant(f64::NAN).is_valid());
+        assert!(
+            !SlowdownProfile::Phases(vec![(5.0, 1.0), (1.0, 2.0)]).is_valid(),
+            "unsorted phases rejected"
+        );
+
+        // scaled_at routes through the profile factor
+        let h = hyper();
+        let base = stage_seconds(
+            TimeModel::default_analytic(), &h, 1, Phase::Fwd, true, None,
+        );
+        let slow = stage_seconds(
+            TimeModel::default_analytic().scaled_at(&p, 12.0),
+            &h, 1, Phase::Fwd, true, None,
+        );
+        assert!((slow / base - 2.0).abs() < 1e-9);
     }
 
     #[test]

@@ -58,8 +58,19 @@ fn have_artifacts() -> Option<PathBuf> {
     Some(dir)
 }
 
-/// Run experiment `name` twice (1 worker vs 4) into sibling dirs and
-/// return the two output trees.
+/// Parallel pool width to compare against the serial run. CI's
+/// determinism matrix sets `PROTOMODELS_TEST_POOL` to {1, 2, 8};
+/// locally it defaults to 4.
+fn pool_width() -> usize {
+    std::env::var("PROTOMODELS_TEST_POOL")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|n| *n >= 1)
+        .unwrap_or(4)
+}
+
+/// Run experiment `name` twice (1 worker vs `pool_width()`) into
+/// sibling dirs and return the two output trees.
 fn run_twice(
     name: &str,
     artifacts: Option<&Path>,
@@ -68,8 +79,11 @@ fn run_twice(
     let base = scratch(sub);
     let _ = std::fs::remove_dir_all(&base);
     let mut trees = Vec::new();
-    for threads in [1usize, 4] {
-        let out_dir = base.join(format!("t{threads}"));
+    // distinct dirs per *run* (not per width): the width-1 matrix leg
+    // compares two independent serial runs — a reproducibility check —
+    // instead of silently diffing one directory against itself
+    for (run, threads) in [(0usize, 1usize), (1, pool_width())] {
+        let out_dir = base.join(format!("run{run}_t{threads}"));
         let mut opts = ExpOpts {
             out_dir: out_dir.clone(),
             fast: true,
@@ -102,6 +116,42 @@ fn dp_grid_csvs_identical_across_pool_sizes() {
     // sanity: the grid actually has content (header + fast-preset cells)
     let csv = String::from_utf8(serial["fig_dp_grid.csv"].clone()).unwrap();
     assert!(csv.lines().count() > 20, "suspiciously small grid:\n{csv}");
+}
+
+#[test]
+fn sim_grid_csvs_identical_across_pool_sizes() {
+    // the discrete-event simulator grid is artifact-free: the full
+    // byte-determinism contract applies unconditionally
+    let (serial, parallel) = run_twice("sim-grid", None, "sim_grid");
+    assert!(
+        serial.contains_key("fig_sim_grid.csv"),
+        "sim-grid wrote no CSV: {:?}",
+        serial.keys().collect::<Vec<_>>()
+    );
+    assert_eq!(
+        serial, parallel,
+        "sim-grid output differs between --threads 1 and --threads N"
+    );
+    let csv = String::from_utf8(serial["fig_sim_grid.csv"].clone()).unwrap();
+    assert!(csv.lines().count() > 10, "suspiciously small grid:\n{csv}");
+    // every zero-jitter GPipe cell carries a parity column ~0
+    for line in csv.lines().skip(1) {
+        let cols: Vec<&str> = line.split(',').collect();
+        if cols[0] == "gpipe" && cols[3] == "0" {
+            let parity: f64 = cols.last().unwrap().parse().unwrap();
+            assert!(parity < 1e-6, "parity column too large: {line}");
+        }
+    }
+}
+
+#[test]
+fn churn_sweep_csvs_identical_across_pool_sizes() {
+    let (serial, parallel) = run_twice("churn-sweep", None, "churn_sweep");
+    assert!(serial.contains_key("fig_churn_sweep.csv"));
+    assert_eq!(
+        serial, parallel,
+        "churn-sweep output differs between --threads 1 and --threads N"
+    );
 }
 
 #[test]
