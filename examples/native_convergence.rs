@@ -1,0 +1,188 @@
+//! The paper's headline claim, computed rather than priced (ISSUE 4):
+//! activations and activation-gradients confined to a k-dimensional
+//! subspace with full reconstruction downstream lose **nothing** —
+//! subspace training tracks the uncompressed loss curve at a >10x wire
+//! reduction — while magnitude top-k at *matched* wire bytes falls
+//! measurably behind and int8 buys nothing for 2.7x more bytes,
+//! exactly the failure of naive activation compression Bian et al.
+//! observed.
+//!
+//! Four tiny transformers train natively (no AOT artifacts, no PJRT)
+//! on the in-process autodiff backend, with **identical seeds, weight
+//! init, and data order** (the init RNG stream is mode-aligned, see
+//! `stage.rs`) — the runs differ only in the stage-boundary codec:
+//!
+//!   subspace — (b·n, k) coefficients, lossless by the Eq. 7 closure
+//!   raw      — uncompressed (b·n, d) activations
+//!   topk     — magnitude top-k at exactly subspace's wire bytes
+//!   quant    — int8, which still ships ~2.7x more bytes than subspace
+//!
+//! The asserted statistic is the mean training loss over steps 51..500
+//! ("curve level" — how the ISSUE words it: subspace must *track the
+//! raw loss curve*), which averages 450 samples and is far less
+//! endpoint-sensitive than a final loss; final val losses are printed
+//! and parity-checked too. Acceptance:
+//!   (a) subspace ships ≥ 10x fewer boundary bytes than raw;
+//!   (b) subspace within 2% of raw — on the curve level and on final
+//!       val loss (it in fact *beats* raw at this scale: the frozen
+//!       high-rank embedding + rank-k trainable residual is a strong
+//!       prior on Zipfian token data);
+//!   (c) topk at matched bytes measurably (> 3%) worse than subspace;
+//!   (d) int8 measurably (> 1.5%) worse than subspace despite 2.7x
+//!       more wire bytes — subspace Pareto-dominates it.
+//!
+//! Thresholds sized from a python line-port of the full backend over
+//! five seeds at 500 steps (curve-level ratios at this seed: sub/raw
+//! 0.96, topk/sub 1.07, quant/sub 1.04 — every assertion has ≥ 1.7x
+//! headroom; across seeds topk/sub never fell below 1.045).
+//!
+//!     cargo run --release --example native_convergence
+
+use protomodels::compress::Mode;
+use protomodels::coordinator::PipelineConfig;
+use protomodels::data::{Corpus, CorpusKind};
+use protomodels::manifest::Hyper;
+use protomodels::netsim::{LinkSpec, Topology};
+use protomodels::nn::{NativePipeline, Optim};
+use protomodels::rng::Rng;
+
+const STEPS: usize = 500;
+/// Steps discarded before the curve-level mean (warmup + takeoff).
+const BURN_IN: usize = 50;
+const SEED: u64 = 5;
+
+struct Outcome {
+    mode: Mode,
+    val_loss: f64,
+    curve_level: f64,
+    boundary_bytes: usize,
+}
+
+fn run(mode: Mode) -> Outcome {
+    let h = Hyper::tiny_native();
+    let mut rng = Rng::new(SEED);
+    let topo =
+        Topology::uniform(h.stages, LinkSpec::internet_80m(), &mut rng);
+    let pcfg = PipelineConfig {
+        mode,
+        microbatches: 2,
+        grassmann_interval: 0,
+        lr: 1e-2,
+        warmup_steps: 6,
+        total_steps: STEPS,
+        seed: SEED,
+        ..Default::default()
+    };
+    let mut pipe = NativePipeline::new(h.clone(), topo, pcfg, Optim::AdamW)
+        .expect("native pipeline");
+    let corpus =
+        Corpus::synthetic(CorpusKind::Wiki, h.vocab, 200_000, SEED ^ 0xDD);
+    let mut post_burn = Vec::new();
+    for step in 0..STEPS {
+        let s = pipe
+            .train_step(|r| corpus.train_batch(h.b, h.n, r))
+            .expect("train step");
+        if step >= BURN_IN {
+            post_burn.push(s.loss);
+        }
+    }
+    let val = pipe
+        .eval(8, |r| corpus.val_batch(h.b, h.n, r))
+        .expect("eval");
+    Outcome {
+        mode,
+        val_loss: val,
+        curve_level: post_burn.iter().sum::<f64>()
+            / post_burn.len() as f64,
+        boundary_bytes: pipe.boundary_bytes(),
+    }
+}
+
+fn main() {
+    let h = Hyper::tiny_native();
+    println!(
+        "native convergence: d={} k={} stages={} — {} steps per mode\n",
+        h.d, h.k, h.stages, STEPS
+    );
+    let outcomes: Vec<Outcome> =
+        [Mode::Subspace, Mode::Raw, Mode::TopK, Mode::Quant]
+            .into_iter()
+            .map(run)
+            .collect();
+    println!(
+        "{:>10} {:>12} {:>10} {:>14} {:>10}",
+        "mode", "curve level", "val loss", "boundary B", "vs raw"
+    );
+    let raw_bytes = outcomes[1].boundary_bytes;
+    for o in &outcomes {
+        println!(
+            "{:>10} {:>12.4} {:>10.4} {:>14} {:>9.1}x",
+            o.mode.as_str(),
+            o.curve_level,
+            o.val_loss,
+            o.boundary_bytes,
+            raw_bytes as f64 / o.boundary_bytes as f64
+        );
+    }
+    let (sub, raw, topk, quant) =
+        (&outcomes[0], &outcomes[1], &outcomes[2], &outcomes[3]);
+
+    // (a) ≥ 10x fewer boundary wire bytes than raw
+    let compression = raw.boundary_bytes as f64 / sub.boundary_bytes as f64;
+    assert!(
+        compression >= 10.0,
+        "subspace compression {compression:.1}x below the 10x bar"
+    );
+    // (b) convergence parity: subspace within 2% of raw, on the curve
+    // level and on the final val loss
+    assert!(
+        sub.curve_level <= raw.curve_level * 1.02,
+        "subspace curve level {:.4} not within 2% of raw {:.4}",
+        sub.curve_level,
+        raw.curve_level
+    );
+    assert!(
+        sub.val_loss <= raw.val_loss * 1.02,
+        "subspace val loss {:.4} not within 2% of raw {:.4}",
+        sub.val_loss,
+        raw.val_loss
+    );
+    // (c) top-k at MATCHED bytes falls measurably behind
+    assert!(
+        topk.boundary_bytes as f64 <= sub.boundary_bytes as f64 * 1.1,
+        "topk bytes {} not matched to subspace {}",
+        topk.boundary_bytes,
+        sub.boundary_bytes
+    );
+    assert!(
+        topk.curve_level > sub.curve_level * 1.03,
+        "topk at matched bytes should degrade: {:.4} vs subspace {:.4}",
+        topk.curve_level,
+        sub.curve_level
+    );
+    // (d) int8 is measurably worse than subspace despite shipping
+    // ~2.7x MORE bytes — Pareto-dominated
+    assert!(
+        quant.boundary_bytes as f64 >= sub.boundary_bytes as f64 * 2.5,
+        "int8 bytes {} unexpectedly near subspace's {}",
+        quant.boundary_bytes,
+        sub.boundary_bytes
+    );
+    assert!(
+        quant.curve_level > sub.curve_level * 1.015,
+        "int8 should trail subspace: {:.4} vs {:.4}",
+        quant.curve_level,
+        sub.curve_level
+    );
+
+    println!(
+        "\nok: subspace tracks raw ({:+.2}% curve, {:+.2}% val) at \
+         {compression:.1}x fewer boundary bytes; topk at matched bytes is \
+         {:.1}% worse, int8 {:.1}% worse at {:.1}x subspace's bytes",
+        (sub.curve_level / raw.curve_level - 1.0) * 100.0,
+        (sub.val_loss / raw.val_loss - 1.0) * 100.0,
+        (topk.curve_level / sub.curve_level - 1.0) * 100.0,
+        (quant.curve_level / sub.curve_level - 1.0) * 100.0,
+        quant.boundary_bytes as f64 / sub.boundary_bytes as f64
+    );
+}

@@ -157,6 +157,7 @@ pub fn check_regressions(
     let pairs = [
         ("BENCH_linalg.json", "linalg.json"),
         ("BENCH_pipeline.json", "pipeline.json"),
+        ("BENCH_nn.json", "nn.json"),
     ];
     let mut report =
         RegressionCheck { checked: 0, skipped: 0, failures: Vec::new() };
@@ -361,6 +362,8 @@ mod tests {
         .unwrap();
         std::fs::write(cur.join("BENCH_pipeline.json"), suite(&[])).unwrap();
         std::fs::write(base.join("pipeline.json"), suite(&[])).unwrap();
+        std::fs::write(cur.join("BENCH_nn.json"), suite(&[])).unwrap();
+        std::fs::write(base.join("nn.json"), suite(&[])).unwrap();
 
         let rep = check_regressions(&cur, &base, 0.25).unwrap();
         assert_eq!(rep.checked, 2, "a and b compared");

@@ -168,11 +168,11 @@ pub fn decode_dense(f: &Frame) -> Tensor {
 pub fn encode_topk(t: &Tensor, ratio: f64) -> Frame {
     let keep = topk_keep(t.numel(), ratio).min(t.numel());
     let mut idx: Vec<u32> = (0..t.numel() as u32).collect();
+    // total_cmp: identical to the partial order on ordinary floats, but
+    // NaNs (possible in a diverging run's activations) sort instead of
+    // panicking — the caller then sees a NaN loss, not an abort
     idx.select_nth_unstable_by(keep.saturating_sub(1), |&a, &b| {
-        t.data[b as usize]
-            .abs()
-            .partial_cmp(&t.data[a as usize].abs())
-            .unwrap()
+        t.data[b as usize].abs().total_cmp(&t.data[a as usize].abs())
     });
     idx.truncate(keep);
     idx.sort_unstable();
@@ -235,6 +235,18 @@ pub fn encode(t: &Tensor, mode: Mode, ratio: f64) -> Frame {
         Mode::TopK => encode_topk(t, ratio),
         Mode::Quant => encode_quant(t),
     }
+}
+
+/// Encode-then-decode one boundary tensor under `mode`'s codec,
+/// returning the reconstruction the receiving stage consumes plus the
+/// frame's wire bytes — the native backend's stage-boundary hook.
+/// Lossless for the dense modes (subspace payloads are already the
+/// (b·n, k) coefficients), genuinely lossy for top-k / int8. PowerLR's
+/// rank-limited reconstruction happens in the caller, which owns the
+/// deterministic sketch RNG; its frame here would be dense.
+pub fn roundtrip(t: &Tensor, mode: Mode, ratio: f64) -> (Tensor, usize) {
+    let f = encode(t, mode, ratio);
+    (decode(&f), f.wire_len())
 }
 
 /// Decode a frame under its recorded mode.
@@ -325,6 +337,30 @@ mod tests {
         assert!(dp_wire_bytes(Mode::Quant, elems, d, k, ratio) < raw);
         assert!(dp_wire_bytes(Mode::TopK, elems, d, k, ratio) < raw);
         assert!(dp_wire_bytes(Mode::PowerLR, elems, d, k, ratio) < raw);
+    }
+
+    #[test]
+    fn codec_frames_match_wire_accounting() {
+        // the native backend ships real frames; their lengths must agree
+        // with the analytic `wire_bytes` the netsim prices transfers by
+        let (b, n, d, k) = (2usize, 16usize, 32usize, 4usize);
+        let ratio = d as f64 / k as f64;
+        let mut rng = Rng::new(9);
+        let full = randt(&mut rng, &[b * n, d]);
+        let coeff = randt(&mut rng, &[b * n, k]);
+        for (mode, t) in [
+            (Mode::Subspace, &coeff),
+            (Mode::Raw, &full),
+            (Mode::TopK, &full),
+            (Mode::Quant, &full),
+        ] {
+            let (recon, bytes) = roundtrip(t, mode, ratio);
+            assert_eq!(bytes, wire_bytes(mode, b, n, d, k, ratio), "{mode:?}");
+            assert_eq!(recon.shape, t.shape);
+            if !mode.is_lossy() {
+                assert_eq!(recon.data, t.data, "{mode:?} must be lossless");
+            }
+        }
     }
 
     #[test]

@@ -68,6 +68,94 @@ impl RtHandle {
     }
 }
 
+/// Which numerics substrate a pipeline trains on (CLI `--backend`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT HLO artifacts executed through the PJRT runtime
+    Pjrt,
+    /// the in-process native autodiff backend (`crate::nn`) —
+    /// artifact-free, runs everywhere the cost model runs
+    Native,
+}
+
+impl BackendKind {
+    /// Parse a CLI backend label (`"pjrt"`, `"native"`).
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "pjrt" => Ok(BackendKind::Pjrt),
+            "native" => Ok(BackendKind::Native),
+            other => bail!("unknown backend {other:?} (have pjrt, native)"),
+        }
+    }
+
+    /// Canonical label.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Native => "native",
+        }
+    }
+}
+
+/// A trainable pipeline behind either numerics backend. Grid cells own
+/// their backend inside one pool worker, exactly like the [`RtHandle`]
+/// ownership regime — a `Backend` is constructed, stepped, and dropped
+/// without ever crossing a thread boundary.
+pub enum Backend {
+    /// PJRT-executed pipeline over AOT artifacts
+    Pjrt(Box<Pipeline>),
+    /// native autodiff pipeline (no artifacts, no PJRT)
+    Native(Box<crate::nn::NativePipeline>),
+}
+
+impl Backend {
+    /// Which substrate this pipeline runs on.
+    pub fn kind(&self) -> BackendKind {
+        match self {
+            Backend::Pjrt(_) => BackendKind::Pjrt,
+            Backend::Native(_) => BackendKind::Native,
+        }
+    }
+
+    /// One full training step (see [`Pipeline::train_step`]).
+    pub fn train_step<F>(&mut self, sampler: F) -> Result<StepStats>
+    where
+        F: FnMut(&mut Rng) -> (IntTensor, IntTensor),
+    {
+        match self {
+            Backend::Pjrt(p) => p.train_step(sampler),
+            Backend::Native(n) => n.train_step(sampler),
+        }
+    }
+
+    /// Mean validation loss over `batches` forward passes.
+    pub fn eval<F>(&mut self, batches: usize, sampler: F) -> Result<f64>
+    where
+        F: FnMut(&mut Rng) -> (IntTensor, IntTensor),
+    {
+        match self {
+            Backend::Pjrt(p) => p.eval(batches, sampler),
+            Backend::Native(n) => n.eval(batches, sampler),
+        }
+    }
+
+    /// Max relative out-of-subspace leak across constrained weights.
+    pub fn subspace_leak(&self) -> f64 {
+        match self {
+            Backend::Pjrt(p) => p.subspace_leak(),
+            Backend::Native(n) => n.subspace_leak(),
+        }
+    }
+
+    /// Simulated seconds since construction.
+    pub fn clock(&self) -> f64 {
+        match self {
+            Backend::Pjrt(p) => p.clock,
+            Backend::Native(n) => n.clock,
+        }
+    }
+}
+
 /// Run-level configuration of the coordinator.
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
@@ -101,6 +189,33 @@ pub struct PipelineConfig {
     /// identical totals by the sim parity contract, exercising the
     /// event path in production runs
     pub event_sim: bool,
+}
+
+impl PipelineConfig {
+    /// Learning rate at 1-based optimizer step `step + 1`: linear
+    /// warmup to `lr`, then linear decay floored at 10%. Shared by both
+    /// backends so pjrt-vs-native comparisons train on one schedule.
+    pub fn lr_at(&self, step: u64) -> f32 {
+        let t = (step + 1) as f32;
+        let w = self.warmup_steps.max(1) as f32;
+        let total = self.total_steps.max(1) as f32;
+        let warm = (t / w).min(1.0);
+        let decay = (1.0 - (t - w).max(0.0) / (total - w).max(1.0))
+            .clamp(0.1, 1.0);
+        self.lr * warm * decay
+    }
+
+    /// Whether the boundary mode is one of the subspace-compressed
+    /// schemes (shared vocabulary for both backends).
+    pub fn compressed(&self) -> bool {
+        matches!(self.mode, Mode::Subspace | Mode::NoFixed)
+    }
+
+    /// Bytes one boundary payload of dimensions `h` occupies on the
+    /// wire under this config's mode.
+    pub fn boundary_bytes(&self, h: &crate::manifest::Hyper) -> usize {
+        wire_bytes(self.mode, h.b, h.n, h.d, h.k, h.ratio)
+    }
 }
 
 impl Default for PipelineConfig {
@@ -253,7 +368,7 @@ impl Pipeline {
         Ok(pipe)
     }
 
-    /// Re-seed the data/eval RNG stream without touching parameters.
+    /// Re-seed the training-data RNG stream without touching parameters.
     /// Replicated data-parallel runs construct every replica from the
     /// same `cfg.seed` (identical initialization) and then diverge the
     /// data streams with this — one shard per replica.
@@ -278,22 +393,15 @@ impl Pipeline {
     }
 
     fn lr_now(&self) -> f32 {
-        let t = (self.step + 1) as f32;
-        let w = self.cfg.warmup_steps.max(1) as f32;
-        let total = self.cfg.total_steps.max(1) as f32;
-        let warm = (t / w).min(1.0);
-        let decay = (1.0 - (t - w).max(0.0) / (total - w).max(1.0))
-            .clamp(0.1, 1.0);
-        self.cfg.lr * warm * decay
+        self.cfg.lr_at(self.step)
     }
 
     fn boundary_bytes(&self) -> usize {
-        let h = &self.cm.hyper;
-        wire_bytes(self.cfg.mode, h.b, h.n, h.d, h.k, h.ratio)
+        self.cfg.boundary_bytes(&self.cm.hyper)
     }
 
     fn compressed(&self) -> bool {
-        matches!(self.cfg.mode, Mode::Subspace | Mode::NoFixed)
+        self.cfg.compressed()
     }
 
     /// Args shared by compressed-mode stage programs. The nofixed
@@ -649,14 +757,20 @@ impl Pipeline {
         Ok(secs)
     }
 
-    /// Mean validation loss over `batches` forward passes.
+    /// Mean validation loss over `batches` forward passes. Side-effect
+    /// free: the eval batch stream derives from `(cfg.seed, step)` only,
+    /// so evaluating mid-training does not shift subsequent training
+    /// batches (which would silently break cross-run batch-order
+    /// alignment).
     pub fn eval<F>(&mut self, batches: usize, mut sampler: F) -> Result<f64>
     where
         F: FnMut(&mut Rng) -> (IntTensor, IntTensor),
     {
         let h = self.cm.hyper.clone();
         let last = h.stages - 1;
-        let mut rng = self.rng.fork(0xE7A1);
+        let mut rng = Rng::new(
+            self.cfg.seed ^ 0xE7A1 ^ self.step.wrapping_mul(0x9E37_79B9),
+        );
         let mut sum = 0.0;
         for _ in 0..batches {
             let (tok, tgt) = sampler(&mut rng);

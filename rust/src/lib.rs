@@ -1,8 +1,9 @@
 //! protomodels — Protocol Models reproduction (see DESIGN.md).
 //!
 //! Layer map (README.md has the full module table):
-//! - L1 numerics are AOT-compiled HLO artifacts (python/compile) executed
-//!   through [`runtime`];
+//! - L1 numerics come in two backends: AOT-compiled HLO artifacts
+//!   (python/compile) executed through [`runtime`], and the native
+//!   in-process autodiff backend [`nn`] (no artifacts, no PJRT);
 //! - L2 model state lives in [`stage`] / [`manifest`];
 //! - L3 systems — the [`coordinator`] pipeline, its replicated
 //!   data-parallel layer ([`coordinator::replica`]), the [`netsim`]
@@ -25,6 +26,7 @@ pub mod manifest;
 pub mod memory;
 pub mod metrics;
 pub mod netsim;
+pub mod nn;
 pub mod par;
 pub mod rng;
 pub mod runtime;

@@ -165,6 +165,76 @@ fn matmul_nt_rows(a: &[f32], k: usize, b: &[f32], n: usize, c: &mut [f32]) {
     }
 }
 
+/// C = A(m×k)ᵀ · B(m×n) without materializing Aᵀ — the backward-pass
+/// weight-gradient kernel (dW = Xᵀ·dY) of the native autodiff backend.
+/// Output rows are partitioned across scoped threads; every output
+/// element accumulates over the shared m index in ascending order, so the
+/// result is bitwise independent of the thread count, like [`matmul`].
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, ka) = a.dims2();
+    let (mb, n) = b.dims2();
+    assert_eq!(m, mb, "matmul_tn {:?}T x {:?}", a.shape, b.shape);
+    let mut c = vec![0.0f32; ka * n];
+    if m == 0 || ka == 0 || n == 0 {
+        return Tensor::new(vec![ka, n], c);
+    }
+    let work = m.saturating_mul(ka).saturating_mul(n);
+    let threads = if work >= MM_PAR_MIN_WORK {
+        crate::par::kernel_threads().min(ka)
+    } else {
+        1
+    };
+    if threads <= 1 {
+        matmul_tn_rows(&a.data, ka, &b.data, n, 0, &mut c);
+        return Tensor::new(vec![ka, n], c);
+    }
+    let rows_per = (ka + threads - 1) / threads;
+    std::thread::scope(|scope| {
+        for (ci, c_rows) in c.chunks_mut(rows_per * n).enumerate() {
+            let i0 = ci * rows_per;
+            let (a, b) = (&a.data, &b.data);
+            scope.spawn(move || matmul_tn_rows(a, ka, b, n, i0, c_rows));
+        }
+    });
+    Tensor::new(vec![ka, n], c)
+}
+
+/// Row-block kernel of [`matmul_tn`]: output rows `i0 ..` of C = Aᵀ·B.
+/// The m index ascends for every output element (one pass over A and B
+/// per row block, streaming B rows), fixing the accumulation order.
+///
+/// Exact zeros in A are skipped — the ReLU-sparsity fast path for the
+/// dW = h₁ᵀ·dY backward matmul, where half of h₁ is zero. For finite
+/// inputs this is bitwise identical to the dense composition; the one
+/// documented divergence is that a zero A element contributes nothing
+/// even against a non-finite B element (0·NaN would poison the dense
+/// result), so a NaN-diverged run surfaces through the loss and the
+/// other gradient paths rather than through every dW row.
+fn matmul_tn_rows(
+    a: &[f32],
+    ka: usize,
+    b: &[f32],
+    n: usize,
+    i0: usize,
+    c: &mut [f32],
+) {
+    let rows = c.len() / n;
+    let m = a.len() / ka;
+    for mm in 0..m {
+        let arow = &a[mm * ka + i0..mm * ka + i0 + rows];
+        let brow = &b[mm * n..(mm + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
 /// Aᵀ for a 2-D tensor, via cache-blocked tiles (both the read and the
 /// write stream stay within a TLB-friendly window).
 pub fn transpose(a: &Tensor) -> Tensor {
@@ -530,6 +600,54 @@ mod tests {
         let fused = matmul_nt(&a, &b);
         let composed = matmul(&a, &transpose(&b));
         assert_eq!(fused.shape, vec![19, 29]);
+        for (x, y) in fused.data.iter().zip(&composed.data) {
+            assert!((x - y).abs() <= 1e-5 * (1.0 + y.abs()));
+        }
+    }
+
+    #[test]
+    fn matmul_tn_matches_transpose_composition() {
+        let mut rng = Rng::new(24);
+        // shapes straddle the threading threshold on both sides
+        for (m, k, n) in [(33usize, 17usize, 29usize), (160, 96, 128)] {
+            let a = randt(&mut rng, m, k);
+            let b = randt(&mut rng, m, n);
+            let fused = matmul_tn(&a, &b);
+            let composed = matmul(&transpose(&a), &b);
+            assert_eq!(fused.shape, vec![k, n]);
+            assert_eq!(fused.data, composed.data, "({m}x{k}x{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_tn_threading_is_bit_stable() {
+        let mut rng = Rng::new(25);
+        let a = randt(&mut rng, 256, 96);
+        let b = randt(&mut rng, 256, 128);
+        let _guard = crate::par::TEST_THREADS_LOCK.lock().unwrap();
+        let before = crate::par::max_threads_setting();
+        crate::par::set_max_threads(1);
+        let c1 = matmul_tn(&a, &b);
+        crate::par::set_max_threads(4);
+        let c4 = matmul_tn(&a, &b);
+        crate::par::set_max_threads(before);
+        assert_eq!(c1.data, c4.data);
+    }
+
+    #[test]
+    fn matmul_tn_skips_relu_zeros_correctly() {
+        // exact-zero rows in A (ReLU sparsity) take the skip path; the
+        // result must still match the dense composition
+        let mut rng = Rng::new(26);
+        let mut a = randt(&mut rng, 20, 12);
+        for x in a.data.iter_mut() {
+            if *x < 0.0 {
+                *x = 0.0;
+            }
+        }
+        let b = randt(&mut rng, 20, 8);
+        let fused = matmul_tn(&a, &b);
+        let composed = matmul(&transpose(&a), &b);
         for (x, y) in fused.data.iter().zip(&composed.data) {
             assert!((x - y).abs() <= 1e-5 * (1.0 + y.abs()));
         }

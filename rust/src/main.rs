@@ -11,7 +11,7 @@ use anyhow::{bail, Result};
 use protomodels::cli::Flags;
 use protomodels::compress::Mode;
 use protomodels::coordinator::replica::{ReplicaConfig, ReplicaSet};
-use protomodels::coordinator::{Pipeline, PipelineConfig};
+use protomodels::coordinator::{Backend, BackendKind, Pipeline, PipelineConfig};
 use protomodels::data::{Corpus, CorpusKind};
 use protomodels::exp::{self, ExpOpts};
 use protomodels::manifest::Manifest;
@@ -27,10 +27,12 @@ fn usage() -> ! {
         "protomodels — Protocol Models reproduction
 
 USAGE:
-  protomodels train   [--config base] [--mode subspace|raw|topk|quant|powerlr|nofixed]
+  protomodels train   [--backend pjrt|native] [--config base]
+                      [--mode subspace|raw|topk|quant|powerlr|nofixed]
                       [--bandwidth 80mbps|16gbps|100gbps|<N>mbps] [--regions]
                       [--steps 200] [--microbatches 8] [--corpus wiki|books|web|c4]
                       [--lr 6e-3] [--grassmann 0] [--seed 17]
+                      [--optim adamw|sgd|sgd:<momentum>]
                       [--time-model analytic|analytic:<TFLOPs>|measured]
                       [--schedule gpipe|1f1b] [--sim]
                       [--replicas R] [--dp-mode subspace|raw|topk|quant]
@@ -64,6 +66,14 @@ rejoins after --downtime and pays a dp-mode-priced state sync), and
 `train --schedule 1f1b` / `train --sim` route the coordinator's step
 timing through the same engine.
 
+`train --backend native` trains on the in-process autodiff backend
+(DESIGN.md §10): artifact-free and PJRT-free, losses computed natively,
+boundary activations and activation-gradients routed through the real
+compression codecs. Configs are built-in presets (tiny/small/base) and
+the defaults differ from the pjrt path (--lr 1e-2, --microbatches 4 —
+sized for the tiny presets); `exp convergence-native` measures the
+convergence-parity claim.
+
 --threads N runs experiment grid cells on an N-worker pool (default:
 all cores; emitted CSVs are byte-identical for any N). `bench --json`
 writes BENCH_linalg.json / BENCH_pipeline.json perf-trajectory files
@@ -88,7 +98,110 @@ fn make_topo(flags: &Flags, stages: usize, rng: &mut Rng) -> Result<Topology> {
     Ok(Topology::uniform(stages, bandwidth_spec(flags, "bandwidth", "80mbps")?, rng))
 }
 
+/// `train --backend native`: the in-process autodiff backend —
+/// artifact-free, so config names resolve to built-in dimension presets
+/// instead of the AOT manifest.
+fn train_native(flags: &Flags) -> Result<()> {
+    use protomodels::manifest::Hyper;
+    use protomodels::nn::{NativePipeline, Optim};
+
+    if flags.usize("replicas", 1)? > 1 {
+        bail!("--backend native trains a single pipeline (no --replicas yet)");
+    }
+    let config = flags.str("config", "tiny");
+    let h = match config.as_str() {
+        "tiny" => Hyper::tiny_native(),
+        "small" => Hyper::small_sim(),
+        "base" => Hyper::base_sim(),
+        other => bail!(
+            "--backend native knows the presets tiny/small/base, not {other:?}"
+        ),
+    };
+    let mode = Mode::parse(&flags.str("mode", "subspace"))?;
+    let steps = flags.usize("steps", 200)?;
+    let seed = flags.usize("seed", 17)? as u64;
+    let tm = TimeModel::parse(&flags.str("time-model", "analytic"))
+        .ok_or_else(|| anyhow::anyhow!("bad --time-model"))?;
+    let schedule = Schedule::parse(&flags.str("schedule", "gpipe"))
+        .ok_or_else(|| anyhow::anyhow!("bad --schedule"))?;
+    let optim = Optim::parse(&flags.str("optim", "adamw"))?;
+    let pcfg = PipelineConfig {
+        mode,
+        microbatches: flags.usize("microbatches", 4)?,
+        grassmann_interval: flags.usize("grassmann", 0)?,
+        lr: flags.f64("lr", 1e-2)? as f32,
+        warmup_steps: (steps / 20).max(5),
+        total_steps: steps,
+        time_model: tm,
+        seed,
+        schedule,
+        event_sim: flags.switch("sim"),
+        ..Default::default()
+    };
+    let corpus_kind = CorpusKind::parse(&flags.str("corpus", "wiki"))
+        .ok_or_else(|| anyhow::anyhow!("bad --corpus"))?;
+    let corpus = Corpus::synthetic(corpus_kind, h.vocab, 400_000, seed ^ 0xDD);
+    let mut rng = Rng::new(seed);
+    let topo = make_topo(flags, h.stages, &mut rng)?;
+    // drive through the coordinator's backend facade — the same surface
+    // a PJRT pipeline presents
+    let mut backend = Backend::Native(Box::new(NativePipeline::new(
+        h.clone(),
+        topo,
+        pcfg,
+        optim,
+    )?));
+    let label = flags.str(
+        "label",
+        &format!(
+            "native_{config}_{}_{}",
+            mode.as_str(),
+            flags.str("bandwidth", "80mbps")
+        ),
+    );
+    let mut log = RunLog::create(flags.str("out", "results"), &label)?;
+    for step in 0..steps {
+        let stats =
+            backend.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
+        log.log(&stats)?;
+        if step % 10 == 0 || step + 1 == steps {
+            println!(
+                "step {:>5}  loss {:.4}  sim_t {:>9.3}s  wire {:>10}B  tps {:>9.1}",
+                stats.step,
+                stats.loss,
+                log.sim_time,
+                stats.wire_bytes,
+                stats.tokens as f64 / stats.sim_seconds
+            );
+        }
+    }
+    let val = backend.eval(8, |r| corpus.val_batch(h.b, h.n, r))?;
+    println!(
+        "final (native, {}): val_loss {:.4}  val_ppl {:.2}  mean_tps {:.1}  \
+         subspace_leak {:.2e}",
+        optim.as_str(),
+        val,
+        perplexity(val),
+        log.tps(),
+        backend.subspace_leak(),
+    );
+    if let Backend::Native(pipe) = &backend {
+        println!(
+            "native: peak_mem {:.1} MB  host {:.2}s",
+            pipe.peak_bytes() as f64 / 1e6,
+            pipe.host_seconds
+        );
+    }
+    log.finish()?;
+    Ok(())
+}
+
 fn cmd_train(flags: &Flags) -> Result<()> {
+    if BackendKind::parse(&flags.str("backend", "pjrt"))?
+        == BackendKind::Native
+    {
+        return train_native(flags);
+    }
     let manifest = Manifest::load(flags.str("artifacts", "artifacts"))?;
     let config = flags.str("config", "base");
     let mode = Mode::parse(&flags.str("mode", "subspace"))?;
@@ -573,6 +686,103 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
         }
     }
 
+    // ---- native autodiff backend: per-stage fwd/bwd + full train step ----
+    let mut nn_entries: Vec<BenchEntry> = Vec::new();
+    {
+        use protomodels::nn::model::{
+            build_stage, high_rank_e, sinusoidal_pe, StageIo,
+        };
+        use protomodels::nn::{NativePipeline, Optim};
+        use protomodels::stage::{GlobalState, StageState};
+        use protomodels::timemodel::{stage_flops, Phase};
+
+        let h = Hyper::tiny_native();
+        let corpus = Corpus::synthetic(CorpusKind::Wiki, h.vocab, 50_000, 3);
+        let mut rng = Rng::new(7);
+        let global = GlobalState::from_hyper(&h, &mut rng);
+        let st = StageState::from_schema(
+            h.stage_schema(1),
+            "mid",
+            1,
+            Mode::Subspace,
+            &global,
+            &mut rng,
+        )
+        .expect("stage init");
+        let pe = sinusoidal_pe(h.n, h.d);
+        let (tok, _) = corpus.train_batch(h.b, h.n, &mut rng);
+        let e = high_rank_e(&h, Mode::Subspace, &pe, &global.t_fixed, &tok);
+        let m = h.b * h.n;
+        let xin = Tensor::new(vec![m, h.k], rng.normal_f32_vec(m * h.k, 0.1));
+        let gc = Tensor::new(vec![m, h.k], rng.normal_f32_vec(m * h.k, 1e-3));
+        let io = || StageIo {
+            u: &global.u,
+            e: &e,
+            tok: &tok,
+            input: Some(&xin),
+            targets: None,
+        };
+        let r = bench.run("nn_stage_fwd_tiny_subspace", || {
+            let built =
+                build_stage(&h, Mode::Subspace, 1, &st.params, io());
+            black_box(built.tape.value(built.output).numel());
+        });
+        println!(
+            "    -> {:.2} GFLOP/s",
+            r.throughput(stage_flops(&h, 1, Phase::Fwd, true)) / 1e9
+        );
+        nn_entries.push(BenchEntry {
+            result: r,
+            items_per_iter: Some(stage_flops(&h, 1, Phase::Fwd, true)),
+        });
+        let r = bench.run("nn_stage_bwd_tiny_subspace", || {
+            let mut built =
+                build_stage(&h, Mode::Subspace, 1, &st.params, io());
+            built.tape.backward_from(built.output, gc.clone());
+            black_box(
+                built.tape.grad(built.input.expect("input")).is_some(),
+            );
+        });
+        nn_entries.push(BenchEntry {
+            result: r,
+            items_per_iter: Some(stage_flops(&h, 1, Phase::Bwd, true)),
+        });
+        for mode in [Mode::Subspace, Mode::Raw] {
+            let pcfg = protomodels::coordinator::PipelineConfig {
+                mode,
+                microbatches: 2,
+                grassmann_interval: 0,
+                total_steps: 10_000,
+                seed: 5,
+                ..Default::default()
+            };
+            let mut rng = Rng::new(5);
+            let topo = protomodels::netsim::Topology::uniform(
+                h.stages,
+                LinkSpec::internet_80m(),
+                &mut rng,
+            );
+            let mut pipe =
+                NativePipeline::new(h.clone(), topo, pcfg, Optim::AdamW)
+                    .expect("native pipeline");
+            let tokens = (2 * h.b * h.n) as f64;
+            let r = bench
+                .run(&format!("nn_train_step_tiny_{}", mode.as_str()), || {
+                    let s = pipe
+                        .train_step(|r| corpus.train_batch(h.b, h.n, r))
+                        .expect("train step");
+                    black_box(s.loss);
+                });
+            println!(
+                "    -> {:.0} tokens/s ({})",
+                r.throughput(tokens),
+                mode.as_str()
+            );
+            nn_entries
+                .push(BenchEntry { result: r, items_per_iter: Some(tokens) });
+        }
+    }
+
     if json {
         write_json(out.join("BENCH_linalg.json"), "linalg", &linalg_entries)?;
         write_json(
@@ -580,6 +790,7 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
             "pipeline",
             &pipe_entries,
         )?;
+        write_json(out.join("BENCH_nn.json"), "nn", &nn_entries)?;
     }
     Ok(())
 }

@@ -99,6 +99,76 @@ impl Hyper {
             param_count: 0,
         }
     }
+
+    /// Dimensions sized for the native autodiff backend's CI smoke runs
+    /// (`exp convergence-native`, `examples/native_convergence.rs`):
+    /// four single-block stages (three compressed boundaries, so lossy
+    /// error accumulates with depth per Thm. B.1) at a d/k ratio above
+    /// the 10x acceptance bar.
+    pub fn tiny_native() -> Hyper {
+        Hyper {
+            d: 64,
+            d_ff: 256,
+            heads: 4,
+            layers: 4,
+            stages: 4,
+            n: 32,
+            vocab: 256,
+            k: 6,
+            b: 4,
+            blocks_per_stage: 1,
+            ratio: 64.0 / 6.0,
+            param_count: 0,
+        }
+    }
+
+    /// Schema kind ("first" / "mid" / "last") for a stage index — the
+    /// manifest-free mirror of [`ConfigManifest::stage_kind`].
+    pub fn stage_kind(&self, stage: usize) -> &'static str {
+        if stage == 0 {
+            "first"
+        } else if stage == self.stages - 1 {
+            "last"
+        } else {
+            "mid"
+        }
+    }
+
+    /// Ordered (name, shape) parameter schema of one pipeline stage,
+    /// derived from the dimensions alone — the rust-side mirror of
+    /// `python/compile/configs.py::stage_param_schema` (same names, same
+    /// shapes, same order), so the native backend trains the *same*
+    /// model the AOT artifacts compile without needing a manifest.
+    pub fn stage_schema(&self, stage: usize) -> Vec<(String, Vec<usize>)> {
+        let (d, d_ff) = (self.d, self.d_ff);
+        let mut schema: Vec<(String, Vec<usize>)> = Vec::new();
+        if stage == 0 {
+            schema.push(("t_s".into(), vec![self.vocab, d]));
+        }
+        for blk in 0..self.blocks_per_stage {
+            let block: [(&str, Vec<usize>); 10] = [
+                ("ln1_g", vec![d]),
+                ("ln1_b", vec![d]),
+                ("wq", vec![d, d]),
+                ("wk", vec![d, d]),
+                ("wv", vec![d, d]),
+                ("wp1", vec![d, d]),
+                ("ln2_g", vec![d]),
+                ("ln2_b", vec![d]),
+                ("w1", vec![d, d_ff]),
+                ("wp2", vec![d_ff, d]),
+            ];
+            for (name, shape) in block {
+                schema.push((format!("b{blk}_{name}"), shape));
+            }
+        }
+        if stage == self.stages - 1 {
+            schema.push(("lnf_g".into(), vec![d]));
+            schema.push(("lnf_b".into(), vec![d]));
+            schema.push(("w_head".into(), vec![d, self.vocab]));
+        }
+        schema
+    }
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -360,6 +430,30 @@ mod tests {
         }
         let m = Manifest::load(artifacts_dir()).unwrap();
         assert!(m.config("nope").is_err());
+    }
+
+    #[test]
+    fn stage_schema_counts_match_analytic_param_count() {
+        // the manifest-free schema must agree with the analytic per-stage
+        // parameter counts the DP all-reduce pricing already uses
+        for h in [Hyper::base_sim(), Hyper::small_sim(), Hyper::tiny_native()]
+        {
+            for s in 0..h.stages {
+                let from_schema: usize = h
+                    .stage_schema(s)
+                    .iter()
+                    .map(|(_, shape)| shape.iter().product::<usize>())
+                    .sum();
+                assert_eq!(
+                    from_schema,
+                    crate::timemodel::stage_param_count(&h, s),
+                    "{} stage {s}",
+                    h.d
+                );
+            }
+            assert_eq!(h.stage_kind(0), "first");
+            assert_eq!(h.stage_kind(h.stages - 1), "last");
+        }
     }
 
     #[test]

@@ -1,0 +1,361 @@
+//! The paper's decoder-only transformer as per-stage tape subgraphs.
+//!
+//! This is the native mirror of `python/compile/model.py`: identical
+//! architecture (pre-LN blocks `x += Attn(LN(x))·W_p1`,
+//! `x += relu(LN(x)·W_1)·W_p2`), identical parameter schema
+//! ([`Hyper::stage_schema`]), and identical boundary semantics — in the
+//! compressed modes the high-rank component `E = PE + T_fixed[tok]` is
+//! subtracted before projecting onto `U_k` at the sending stage and
+//! re-added after reconstruction at the receiver (Eq. 8), so the (b·n, k)
+//! coefficients are the only trainable signal on the wire. Because the
+//! projection/reconstruction pair lives *on the tape*, the gradient of
+//! the boundary-input leaf is already the k-dimensional coefficient
+//! cotangent `G·U_k` (Eq. 9) — the backward wire payload falls out of
+//! autodiff instead of being a bolted-on approximation.
+
+use crate::compress::Mode;
+use crate::manifest::Hyper;
+use crate::tensor::{IntTensor, Tensor};
+
+use super::tape::{AttnDims, Tape, Var};
+
+/// Sinusoidal positional embedding (n, d) — deterministic, computable
+/// locally on every node, hence part of the high-rank component E.
+pub fn sinusoidal_pe(n: usize, d: usize) -> Tensor {
+    let mut data = vec![0.0f32; n * d];
+    for pos in 0..n {
+        for i in 0..d {
+            let angle = pos as f64
+                / 10000f64.powf(2.0 * (i / 2) as f64 / d as f64);
+            data[pos * d + i] =
+                if i % 2 == 0 { angle.sin() } else { angle.cos() } as f32;
+        }
+    }
+    Tensor::new(vec![n, d], data)
+}
+
+/// The high-rank additive component E for one microbatch, as a (b·n, d)
+/// host tensor: `PE + T_fixed[tok]` in subspace mode, plain broadcast PE
+/// in the nofixed ablation and in the raw/lossy modes (whose trainable
+/// embedding lives on the tape instead).
+pub fn high_rank_e(
+    h: &Hyper,
+    mode: Mode,
+    pe: &Tensor,
+    t_fixed: &Tensor,
+    tok: &IntTensor,
+) -> Tensor {
+    let (b, n, d) = (h.b, h.n, h.d);
+    debug_assert_eq!(tok.numel(), b * n);
+    let mut data = vec![0.0f32; b * n * d];
+    for bi in 0..b {
+        for t in 0..n {
+            let row = &mut data[(bi * n + t) * d..(bi * n + t + 1) * d];
+            row.copy_from_slice(&pe.data[t * d..(t + 1) * d]);
+            if mode == Mode::Subspace {
+                let id = tok.data[bi * n + t] as usize;
+                let fixed = &t_fixed.data[id * d..(id + 1) * d];
+                for (r, f) in row.iter_mut().zip(fixed) {
+                    *r += f;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![b * n, d], data)
+}
+
+/// Non-parameter inputs of one stage subgraph.
+pub struct StageIo<'a> {
+    /// shared orthonormal basis U_k (compressed modes)
+    pub u: &'a Tensor,
+    /// high-rank component E of this microbatch, (b·n, d)
+    pub e: &'a Tensor,
+    /// token ids (b, n) — consumed by the stage-0 embedding
+    pub tok: &'a IntTensor,
+    /// boundary input for stages > 0: (b·n, k) coefficients in the
+    /// compressed modes, the (possibly lossily reconstructed) (b·n, d)
+    /// activation otherwise
+    pub input: Option<&'a Tensor>,
+    /// next-token targets — last stage only
+    pub targets: Option<&'a IntTensor>,
+}
+
+/// A stage subgraph, built and ready for backward.
+pub struct BuiltStage {
+    /// the tape holding the graph
+    pub tape: Tape,
+    /// parameter leaves, schema order
+    pub params: Vec<Var>,
+    /// boundary-input leaf (stages > 0): its gradient is the backward
+    /// wire payload
+    pub input: Option<Var>,
+    /// boundary payload (non-last stages) or the scalar loss (last)
+    pub output: Var,
+    /// the full-width activation right after boundary reconstruction
+    /// (stages > 0) — its gradient is `g_full`, the Grassmann
+    /// accumulator term at the last stage
+    pub x_full: Option<Var>,
+    /// the full-width residual stream right before the boundary
+    /// projection (non-last stages) — the closure diagnostic: `x − e`
+    /// must lie in S for the compressed wire to be lossless
+    pub pre_boundary: Option<Var>,
+}
+
+/// Build one stage's forward subgraph. Names/shapes follow
+/// [`Hyper::stage_schema`]; `params` must be in schema order.
+pub fn build_stage(
+    h: &Hyper,
+    mode: Mode,
+    stage: usize,
+    params: &[Tensor],
+    io: StageIo<'_>,
+) -> BuiltStage {
+    let compressed = matches!(mode, Mode::Subspace | Mode::NoFixed);
+    let last = stage == h.stages - 1;
+    let mut tape = Tape::new();
+    let pvars: Vec<Var> =
+        params.iter().map(|p| tape.leaf(p.clone(), true)).collect();
+    // E is consumed by the stage-0 embedding and by the compressed
+    // boundary pair; raw/lossy mid+last stages never touch it
+    let e = (stage == 0 || compressed)
+        .then(|| tape.leaf(io.e.clone(), false));
+    let u = compressed.then(|| tape.leaf(io.u.clone(), false));
+
+    // ---- stage input
+    let mut input_var = None;
+    let mut x_full = None;
+    let mut x = if stage == 0 {
+        let emb = tape.embed(pvars[0], io.tok);
+        tape.add(e.expect("stage 0 uses E"), emb)
+    } else {
+        let xin = tape.leaf(
+            io.input.expect("stage > 0 needs a boundary input").clone(),
+            true,
+        );
+        input_var = Some(xin);
+        let x = if let Some(u) = u {
+            let rec = tape.matmul_nt(xin, u);
+            tape.add(rec, e.expect("compressed stages use E"))
+        } else {
+            xin
+        };
+        x_full = Some(x);
+        x
+    };
+
+    // ---- transformer blocks
+    let dims = AttnDims { b: h.b, n: h.n, heads: h.heads, d: h.d };
+    let first_block = if stage == 0 { 1 } else { 0 };
+    for blk in 0..h.blocks_per_stage {
+        let p = |i: usize| pvars[first_block + blk * 10 + i];
+        let (ln1_g, ln1_b) = (p(0), p(1));
+        let (wq, wk, wv, wp1) = (p(2), p(3), p(4), p(5));
+        let (ln2_g, ln2_b) = (p(6), p(7));
+        let (w1, wp2) = (p(8), p(9));
+
+        let a = tape.layer_norm(x, ln1_g, ln1_b);
+        let q = tape.matmul(a, wq);
+        let k = tape.matmul(a, wk);
+        let v = tape.matmul(a, wv);
+        let attn = tape.causal_attention(q, k, v, dims);
+        let attn_out = tape.matmul(attn, wp1);
+        x = tape.add(x, attn_out);
+
+        let hn = tape.layer_norm(x, ln2_g, ln2_b);
+        let h1 = tape.matmul(hn, w1);
+        let h1 = tape.relu(h1);
+        let mlp_out = tape.matmul(h1, wp2);
+        x = tape.add(x, mlp_out);
+    }
+
+    // ---- stage output
+    let mut pre_boundary = None;
+    let output = if last {
+        let base = first_block + h.blocks_per_stage * 10;
+        let xl = tape.layer_norm(x, pvars[base], pvars[base + 1]);
+        let logits = tape.matmul(xl, pvars[base + 2]);
+        tape.cross_entropy(
+            logits,
+            io.targets.expect("last stage needs targets"),
+        )
+    } else {
+        pre_boundary = Some(x);
+        if let Some(u) = u {
+            let centered = tape.sub(x, e.expect("compressed stages use E"));
+            tape.matmul(centered, u)
+        } else {
+            x
+        }
+    };
+
+    BuiltStage {
+        tape,
+        params: pvars,
+        input: input_var,
+        output,
+        x_full,
+        pre_boundary,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::stage::{GlobalState, StageState};
+
+    fn setup(mode: Mode) -> (Hyper, GlobalState, Vec<StageState>, Rng) {
+        let h = Hyper::tiny_native();
+        let mut rng = Rng::new(7);
+        let global = GlobalState::from_hyper(&h, &mut rng);
+        let stages = (0..h.stages)
+            .map(|s| {
+                StageState::from_schema(
+                    h.stage_schema(s),
+                    h.stage_kind(s),
+                    s,
+                    mode,
+                    &global,
+                    &mut rng,
+                )
+                .unwrap()
+            })
+            .collect();
+        (h, global, stages, rng)
+    }
+
+    fn batch(h: &Hyper, rng: &mut Rng) -> (IntTensor, IntTensor) {
+        let draw = |rng: &mut Rng| {
+            IntTensor::new(
+                vec![h.b, h.n],
+                (0..h.b * h.n).map(|_| rng.below(h.vocab) as i32).collect(),
+            )
+        };
+        (draw(rng), draw(rng))
+    }
+
+    #[test]
+    fn pe_matches_reference_values() {
+        let pe = sinusoidal_pe(8, 4);
+        // pos 0: sin(0)=0, cos(0)=1 alternating
+        assert_eq!(pe.at2(0, 0), 0.0);
+        assert_eq!(pe.at2(0, 1), 1.0);
+        // pos 1, i=0: sin(1)
+        assert!((pe.at2(1, 0) - (1.0f32).sin()).abs() < 1e-6);
+        // pos 1, i=2: sin(1/10000^(2/4)) = sin(0.01)
+        assert!((pe.at2(1, 2) - (0.01f32).sin()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn subspace_boundary_payload_is_lossless() {
+        // forward a microbatch through stage 0; the projected payload,
+        // reconstructed, must reproduce x exactly up to fp rounding
+        // (rows of x − e lie in S by construction: t_s, wp1, wp2 ∈ S)
+        let (h, global, stages, mut rng) = setup(Mode::Subspace);
+        let (tok, _) = batch(&h, &mut rng);
+        let pe = sinusoidal_pe(h.n, h.d);
+        let e = high_rank_e(&h, Mode::Subspace, &pe, &global.t_fixed, &tok);
+        let built = build_stage(
+            &h,
+            Mode::Subspace,
+            0,
+            &stages[0].params,
+            StageIo {
+                u: &global.u,
+                e: &e,
+                tok: &tok,
+                input: None,
+                targets: None,
+            },
+        );
+        let payload = built.tape.value(built.output);
+        assert_eq!(payload.shape, vec![h.b * h.n, h.k]);
+        // losslessness (Eq. 7): the residual stream minus E lies in S by
+        // construction (t_s, wp1, wp2 rows ∈ S), so projecting onto U and
+        // reconstructing loses nothing
+        let x = built.tape.value(built.pre_boundary.unwrap());
+        let mut centered = x.clone();
+        let mut neg = e.clone();
+        neg.scale(-1.0);
+        centered.add_assign(&neg);
+        let leak = crate::linalg::out_of_subspace_norm(&centered, &global.u);
+        let norm = centered.frobenius_norm() as f64 + 1e-12;
+        assert!(leak / norm < 1e-4, "boundary payload leaks {}", leak / norm);
+        // and the reconstruction round-trips to x
+        let mut recon = crate::linalg::matmul_nt(payload, &global.u);
+        recon.add_assign(&e);
+        let err: f64 = recon
+            .data
+            .iter()
+            .zip(&x.data)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let xnorm = x.frobenius_norm() as f64 + 1e-12;
+        assert!(err / xnorm < 1e-4, "reconstruction error {}", err / xnorm);
+    }
+
+    #[test]
+    fn loss_is_finite_and_backward_fills_all_param_grads() {
+        for mode in [Mode::Subspace, Mode::Raw, Mode::NoFixed] {
+            let (h, global, stages, mut rng) = setup(mode);
+            let (tok, tgt) = batch(&h, &mut rng);
+            let pe = sinusoidal_pe(h.n, h.d);
+            let e = high_rank_e(&h, mode, &pe, &global.t_fixed, &tok);
+            let compressed = matches!(mode, Mode::Subspace | Mode::NoFixed);
+            // run the forward wave to the last stage
+            let mut cur: Option<Tensor> = None;
+            for s in 0..h.stages - 1 {
+                let built = build_stage(
+                    &h,
+                    mode,
+                    s,
+                    &stages[s].params,
+                    StageIo {
+                        u: &global.u,
+                        e: &e,
+                        tok: &tok,
+                        input: cur.as_ref(),
+                        targets: None,
+                    },
+                );
+                cur = Some(built.tape.value(built.output).clone());
+            }
+            let last = h.stages - 1;
+            let mut built = build_stage(
+                &h,
+                mode,
+                last,
+                &stages[last].params,
+                StageIo {
+                    u: &global.u,
+                    e: &e,
+                    tok: &tok,
+                    input: cur.as_ref(),
+                    targets: Some(&tgt),
+                },
+            );
+            let loss = built.tape.value(built.output).item();
+            assert!(loss.is_finite() && loss > 0.0, "{mode:?} loss {loss}");
+            // random-ish init: loss should be near ln(vocab)
+            let uniform = (h.vocab as f32).ln();
+            assert!(
+                (loss - uniform).abs() < 1.5,
+                "{mode:?} init loss {loss} vs ln V {uniform}"
+            );
+            built.tape.backward(built.output);
+            for (i, p) in built.params.iter().enumerate() {
+                let g = built.tape.grad(*p).unwrap_or_else(|| {
+                    panic!("{mode:?} param {i} got no gradient")
+                });
+                assert!(g.data.iter().all(|x| x.is_finite()));
+            }
+            let gin = built
+                .tape
+                .grad(built.input.unwrap())
+                .expect("boundary input gradient");
+            let want_cols = if compressed { h.k } else { h.d };
+            assert_eq!(gin.shape, vec![h.b * h.n, want_cols]);
+        }
+    }
+}

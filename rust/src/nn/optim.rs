@@ -1,0 +1,341 @@
+//! Optimizers for the native backend — AdamW plus the Sec. 5
+//! subspace-preserving variant, and plain SGD(+momentum) as a baseline.
+//!
+//! Mirror of `python/compile/optim.py`. Per-parameter rules in subspace
+//! mode:
+//!
+//! * `*_wp2`, `t_s` — gradient projected onto S, then a **row-constant**
+//!   second-moment scaling, which keeps Row(W) ⊆ S exactly without ever
+//!   re-projecting W (Appendix A);
+//! * `*_wp1` — standard AdamW followed by an explicit row projection
+//!   onto S (the attention nonlinearity upstream breaks the row-wise
+//!   argument);
+//! * everything else — standard AdamW.
+//!
+//! Raw/lossy modes use standard AdamW for every parameter. LayerNorm
+//! gains/biases are excluded from weight decay. SGD under the subspace
+//! rules projects the constrained gradients onto S, which (updates being
+//! linear) preserves the constraint without re-projection.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::project_rows;
+use crate::stage::{constrained, StageState};
+use crate::tensor::Tensor;
+
+/// Adam first-moment decay.
+pub const BETA1: f32 = 0.9;
+/// Adam second-moment decay.
+pub const BETA2: f32 = 0.999;
+/// Adam denominator epsilon.
+pub const EPS: f32 = 1e-8;
+/// Decoupled weight decay (skipped for `*_g` / `*_b` norm parameters).
+pub const WEIGHT_DECAY: f32 = 0.01;
+
+/// Which optimizer the native backend steps with.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Optim {
+    /// AdamW (paper default; subspace rules as in Sec. 5)
+    AdamW,
+    /// SGD with momentum (0.0 = plain SGD)
+    Sgd {
+        /// momentum coefficient in [0, 1)
+        momentum: f32,
+    },
+}
+
+impl Optim {
+    /// Parse a CLI label: `"adamw"`, `"sgd"`, `"sgd:<momentum>"`.
+    pub fn parse(s: &str) -> Result<Optim> {
+        if s == "adamw" {
+            return Ok(Optim::AdamW);
+        }
+        if s == "sgd" {
+            return Ok(Optim::Sgd { momentum: 0.0 });
+        }
+        if let Some(rest) = s.strip_prefix("sgd:") {
+            let momentum: f32 = rest
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad momentum {rest:?}"))?;
+            if !(0.0..1.0).contains(&momentum) {
+                bail!("momentum {momentum} outside [0, 1)");
+            }
+            return Ok(Optim::Sgd { momentum });
+        }
+        bail!("unknown optimizer {s:?} (have adamw, sgd, sgd:<momentum>)")
+    }
+
+    /// Canonical label.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Optim::AdamW => "adamw",
+            Optim::Sgd { .. } => "sgd",
+        }
+    }
+}
+
+/// Schedule-dependent scalars of one optimizer step.
+#[derive(Clone, Copy, Debug)]
+pub struct OptStep<'a> {
+    /// which optimizer
+    pub optim: Optim,
+    /// `Some(U)` applies the subspace closure rules; `None` = raw rules
+    pub u: Option<&'a Tensor>,
+    /// learning rate after warmup/decay
+    pub lr: f32,
+    /// 1-based step count (Adam bias correction)
+    pub t: f32,
+}
+
+fn decay_for(name: &str) -> f32 {
+    if name.ends_with("_g") || name.ends_with("_b") {
+        0.0
+    } else {
+        WEIGHT_DECAY
+    }
+}
+
+/// One optimizer step over a whole stage's parameters (schema order).
+pub fn step_stage(st: &mut StageState, grads: &[Tensor], ctx: &OptStep<'_>) {
+    debug_assert_eq!(grads.len(), st.params.len());
+    let bc1 = 1.0 - BETA1.powf(ctx.t);
+    let bc2 = 1.0 - BETA2.powf(ctx.t);
+    for i in 0..st.params.len() {
+        let name = st.schema[i].0.clone();
+        let wd = decay_for(&name);
+        let g = &grads[i];
+        match (ctx.optim, ctx.u) {
+            (Optim::AdamW, Some(u)) => {
+                if name.ends_with("wp2") || name == "t_s" {
+                    rowwise_adamw(
+                        &mut st.params[i],
+                        g,
+                        &mut st.m[i],
+                        &mut st.v[i],
+                        u,
+                        (ctx.lr, bc1, bc2, wd),
+                    );
+                } else if name.ends_with("wp1") {
+                    standard_adamw(
+                        &mut st.params[i],
+                        g,
+                        &mut st.m[i],
+                        &mut st.v[i],
+                        (ctx.lr, bc1, bc2, wd),
+                    );
+                    st.params[i] = project_rows(&st.params[i], u);
+                } else {
+                    standard_adamw(
+                        &mut st.params[i],
+                        g,
+                        &mut st.m[i],
+                        &mut st.v[i],
+                        (ctx.lr, bc1, bc2, wd),
+                    );
+                }
+            }
+            (Optim::AdamW, None) => standard_adamw(
+                &mut st.params[i],
+                g,
+                &mut st.m[i],
+                &mut st.v[i],
+                (ctx.lr, bc1, bc2, wd),
+            ),
+            (Optim::Sgd { momentum }, u) => {
+                let gp = match u {
+                    Some(u) if constrained(&name) => project_rows(g, u),
+                    _ => g.clone(),
+                };
+                sgd(&mut st.params[i], &gp, &mut st.m[i], momentum, ctx.lr, wd);
+            }
+        }
+    }
+}
+
+/// Standard AdamW on one parameter. `h = (lr, 1−β1ᵗ, 1−β2ᵗ, wd)`.
+fn standard_adamw(
+    w: &mut Tensor,
+    g: &Tensor,
+    m: &mut Tensor,
+    v: &mut Tensor,
+    h: (f32, f32, f32, f32),
+) {
+    let (lr, bc1, bc2, wd) = h;
+    for i in 0..w.data.len() {
+        let gi = g.data[i];
+        let mi = BETA1 * m.data[i] + (1.0 - BETA1) * gi;
+        let vi = BETA2 * v.data[i] + (1.0 - BETA2) * gi * gi;
+        m.data[i] = mi;
+        v.data[i] = vi;
+        let mhat = mi / bc1;
+        let vhat = vi / bc2;
+        w.data[i] -=
+            lr * mhat / (vhat.sqrt() + EPS) + lr * wd * w.data[i];
+    }
+}
+
+/// Sec. 5 row-wise AdamW for W_p2 / T_S: project g onto S, then make the
+/// 1/√V̂ scaling constant per row so the update stays inside Row(W) ⊆ S.
+fn rowwise_adamw(
+    w: &mut Tensor,
+    g: &Tensor,
+    m: &mut Tensor,
+    v: &mut Tensor,
+    u: &Tensor,
+    h: (f32, f32, f32, f32),
+) {
+    let (lr, bc1, bc2, wd) = h;
+    let gp = project_rows(g, u);
+    let (rows, cols) = w.dims2();
+    for r in 0..rows {
+        let base = r * cols;
+        // moments first, then the row-mean of v̂
+        let mut vrow = 0.0f64;
+        for c in 0..cols {
+            let gi = gp.data[base + c];
+            let mi = BETA1 * m.data[base + c] + (1.0 - BETA1) * gi;
+            let vi = BETA2 * v.data[base + c] + (1.0 - BETA2) * gi * gi;
+            m.data[base + c] = mi;
+            v.data[base + c] = vi;
+            vrow += (vi / bc2) as f64;
+        }
+        let denom = (vrow / cols as f64).sqrt() as f32 + EPS;
+        for c in 0..cols {
+            let mhat = m.data[base + c] / bc1;
+            w.data[base + c] -=
+                lr * mhat / denom + lr * wd * w.data[base + c];
+        }
+    }
+}
+
+/// SGD with momentum; the momentum buffer lives in the stage's `m` slot.
+fn sgd(
+    w: &mut Tensor,
+    g: &Tensor,
+    m: &mut Tensor,
+    momentum: f32,
+    lr: f32,
+    wd: f32,
+) {
+    for i in 0..w.data.len() {
+        let mi = momentum * m.data[i] + g.data[i];
+        m.data[i] = mi;
+        w.data[i] -= lr * mi + lr * wd * w.data[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Mode;
+    use crate::linalg::{out_of_subspace_norm, random_orthonormal};
+    use crate::manifest::Hyper;
+    use crate::rng::Rng;
+    use crate::stage::GlobalState;
+
+    fn tiny_stage(mode: Mode, rng: &mut Rng) -> (StageState, GlobalState, Hyper) {
+        let h = Hyper::tiny_native();
+        let global = GlobalState::from_hyper(&h, rng);
+        let st = StageState::from_schema(
+            h.stage_schema(1),
+            "mid",
+            1,
+            mode,
+            &global,
+            rng,
+        )
+        .unwrap();
+        (st, global, h)
+    }
+
+    #[test]
+    fn parse_roundtrip_and_validation() {
+        assert_eq!(Optim::parse("adamw").unwrap(), Optim::AdamW);
+        assert_eq!(
+            Optim::parse("sgd").unwrap(),
+            Optim::Sgd { momentum: 0.0 }
+        );
+        assert_eq!(
+            Optim::parse("sgd:0.9").unwrap(),
+            Optim::Sgd { momentum: 0.9 }
+        );
+        assert!(Optim::parse("sgd:1.5").is_err());
+        assert!(Optim::parse("lion").is_err());
+    }
+
+    #[test]
+    fn adamw_step_moves_against_gradient() {
+        let mut w = Tensor::new(vec![2, 2], vec![1.0, -1.0, 0.5, 0.0]);
+        let g = Tensor::new(vec![2, 2], vec![1.0, -1.0, 1.0, -1.0]);
+        let mut m = Tensor::zeros(&[2, 2]);
+        let mut v = Tensor::zeros(&[2, 2]);
+        let before = w.clone();
+        standard_adamw(&mut w, &g, &mut m, &mut v, (0.1, 0.1, 0.001, 0.0));
+        for i in 0..4 {
+            let delta = w.data[i] - before.data[i];
+            assert!(
+                delta * g.data[i] < 0.0,
+                "update {delta} not against grad {}",
+                g.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn subspace_rules_keep_constrained_rows_in_s() {
+        let mut rng = Rng::new(11);
+        let (mut st, global, _h) = tiny_stage(Mode::Subspace, &mut rng);
+        // noisy full-rank gradients — exactly what the closure must absorb
+        let grads: Vec<Tensor> = st
+            .params
+            .iter()
+            .map(|p| {
+                Tensor::new(
+                    p.shape.clone(),
+                    rng.normal_f32_vec(p.numel(), 0.1),
+                )
+            })
+            .collect();
+        for optim in [Optim::AdamW, Optim::Sgd { momentum: 0.9 }] {
+            let mut st2 = st.clone();
+            for t in 1..=5 {
+                step_stage(
+                    &mut st2,
+                    &grads,
+                    &OptStep {
+                        optim,
+                        u: Some(&global.u),
+                        lr: 1e-2,
+                        t: t as f32,
+                    },
+                );
+            }
+            let leak = st2.subspace_leak(&global.u);
+            assert!(leak < 1e-4, "{optim:?} leak {leak}");
+        }
+        // raw rules on the same gradients leak immediately
+        step_stage(
+            &mut st,
+            &grads,
+            &OptStep { optim: Optim::AdamW, u: None, lr: 1e-2, t: 1.0 },
+        );
+        assert!(st.subspace_leak(&global.u) > 1e-3);
+    }
+
+    #[test]
+    fn rowwise_update_direction_is_in_s() {
+        // one rowwise step from W ∈ S must land back in S even with an
+        // out-of-S gradient
+        let mut rng = Rng::new(12);
+        let u = random_orthonormal(32, 4, &mut rng);
+        let w0 = Tensor::new(vec![16, 32], rng.normal_f32_vec(512, 0.1));
+        let mut w = project_rows(&w0, &u);
+        let g = Tensor::new(vec![16, 32], rng.normal_f32_vec(512, 1.0));
+        let mut m = Tensor::zeros(&[16, 32]);
+        let mut v = Tensor::zeros(&[16, 32]);
+        rowwise_adamw(&mut w, &g, &mut m, &mut v, &u, (0.05, 0.1, 0.001, 0.01));
+        let leak = out_of_subspace_norm(&w, &u)
+            / (w.frobenius_norm() as f64 + 1e-12);
+        assert!(leak < 1e-5, "leak {leak}");
+    }
+}

@@ -1,0 +1,624 @@
+//! The native training pipeline: GPipe microbatching over the tape
+//! subgraphs, with the **stage-boundary compression hook** routing every
+//! forward activation and backward activation-gradient through the real
+//! [`crate::compress`] codecs.
+//!
+//! This is the artifact-free sibling of [`crate::coordinator::Pipeline`]:
+//! same [`PipelineConfig`], same [`StepStats`], same netsim byte
+//! accounting and virtual-clock pricing, same RNG streams (identical
+//! seeds produce identical init and data batches on both backends) — but
+//! the numerics run here, in-process, on the [`super::tape`] autodiff
+//! engine instead of AOT HLO through PJRT. Backward uses GPipe-style
+//! rematerialization: the forward wave keeps only each stage's boundary
+//! input; the backward wave rebuilds the stage subgraph and runs the
+//! tape backward through it.
+//!
+//! Determinism: every tensor op is thread-count-bit-stable (tape ops are
+//! serial; matmuls keep a fixed accumulation order), and all randomness
+//! derives from `cfg.seed` — a training run is a pure function of its
+//! config, which is what `tests/par_determinism.rs` asserts for the
+//! `convergence-native` experiment grid.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::compress::{self, powerlr_rank, Mode};
+use crate::coordinator::schedule::{gpipe_makespan, Makespan, StepCosts, Tx};
+use crate::coordinator::{PipelineConfig, StepStats};
+use crate::linalg;
+use crate::manifest::Hyper;
+use crate::netsim::Topology;
+use crate::rng::Rng;
+use crate::stage::{constrained, GlobalState, StageState};
+use crate::tensor::{IntTensor, Tensor};
+use crate::timemodel::{stage_seconds, Phase};
+
+use super::model::{build_stage, high_rank_e, sinusoidal_pe, StageIo};
+use super::optim::{step_stage, OptStep, Optim};
+use super::tape::Tape;
+
+/// Which direction a boundary payload travels (seeds the deterministic
+/// PowerLR sketch stream).
+#[derive(Clone, Copy)]
+enum Dir {
+    Fwd,
+    Bwd,
+}
+
+/// A natively-trained pipeline: P stage subgraphs over a netsim
+/// [`Topology`], stepped entirely in-process.
+pub struct NativePipeline {
+    /// model/pipeline dimensions
+    pub h: Hyper,
+    /// run-level configuration (shared with the PJRT backend)
+    pub cfg: PipelineConfig,
+    /// optimizer the native backend steps with
+    pub optim: Optim,
+    /// stage-to-stage network links
+    pub topo: Topology,
+    /// per-stage parameters + optimizer state
+    pub stages: Vec<StageState>,
+    /// leader-owned global state (U_k basis, fixed embedding)
+    pub global: GlobalState,
+    /// sinusoidal positional embedding (n, d)
+    pub pe: Tensor,
+    /// optimizer steps completed
+    pub step: u64,
+    /// simulated seconds since construction (includes startup broadcast)
+    pub clock: f64,
+    /// host wall-clock seconds actually spent computing
+    pub host_seconds: f64,
+    /// last step's averaged per-stage gradients (when cfg.record_grads)
+    pub last_grads: Option<Vec<Vec<Tensor>>>,
+    /// Grassmann accumulator S = Σ GᵀG and its sample count
+    s_acc: Tensor,
+    s_count: u64,
+    rng: Rng,
+    /// peak transient+persistent bytes observed over the last step
+    peak_bytes: usize,
+}
+
+impl NativePipeline {
+    /// Build a native pipeline from bare dimensions — no manifest, no
+    /// artifacts, no PJRT. Initialization mirrors the PJRT path bit for
+    /// bit (same RNG stream layout), so both backends start from the
+    /// same parameters when their dimensions agree.
+    pub fn new(
+        h: Hyper,
+        topo: Topology,
+        cfg: PipelineConfig,
+        optim: Optim,
+    ) -> Result<NativePipeline> {
+        if topo.stages() != h.stages {
+            bail!(
+                "topology has {} stages, model needs {}",
+                topo.stages(),
+                h.stages
+            );
+        }
+        if h.d % h.heads != 0 {
+            bail!("d={} not divisible by heads={}", h.d, h.heads);
+        }
+        if h.blocks_per_stage * h.stages != h.layers {
+            bail!(
+                "layers={} != blocks_per_stage={} x stages={}",
+                h.layers,
+                h.blocks_per_stage,
+                h.stages
+            );
+        }
+        if h.k >= h.d {
+            bail!("subspace rank k={} must be < d={}", h.k, h.d);
+        }
+        if h.stages < 2 {
+            bail!("the native pipeline needs >= 2 stages (got {})", h.stages);
+        }
+        if matches!(cfg.schedule, crate::sim::Schedule::Interleaved { .. }) {
+            bail!(
+                "interleaved schedules need wrap-link samples the \
+                 coordinator does not carry; use the swarm simulator"
+            );
+        }
+        let mut rng = Rng::new(cfg.seed ^ 0x9137);
+        let global = GlobalState::from_hyper(&h, &mut rng);
+        let stages = (0..h.stages)
+            .map(|s| {
+                StageState::from_schema(
+                    h.stage_schema(s),
+                    h.stage_kind(s),
+                    s,
+                    cfg.mode,
+                    &global,
+                    &mut rng,
+                )
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let pe = sinusoidal_pe(h.n, h.d);
+        let d = h.d;
+        let mut pipe = NativePipeline {
+            pe,
+            stages,
+            global,
+            topo,
+            optim,
+            step: 0,
+            clock: 0.0,
+            host_seconds: 0.0,
+            last_grads: None,
+            s_acc: Tensor::zeros(&[d, d]),
+            s_count: 0,
+            rng,
+            peak_bytes: 0,
+            h,
+            cfg,
+        };
+        if pipe.compressed() {
+            let bytes =
+                (pipe.h.vocab * pipe.h.d + pipe.h.d * pipe.h.k) * 4;
+            pipe.clock += pipe.topo.broadcast(bytes);
+        }
+        Ok(pipe)
+    }
+
+    /// Re-seed the training-data RNG stream without touching parameters.
+    pub fn reseed_data(&mut self, seed: u64) {
+        self.rng = Rng::new(seed ^ 0xDA7A_5EED);
+    }
+
+    fn compressed(&self) -> bool {
+        self.cfg.compressed()
+    }
+
+    /// Bytes one boundary payload occupies on the wire (identical to the
+    /// PJRT path's accounting; the codec frames are asserted against it
+    /// in tests).
+    pub fn boundary_bytes(&self) -> usize {
+        self.cfg.boundary_bytes(&self.h)
+    }
+
+    fn lr_now(&self) -> f32 {
+        self.cfg.lr_at(self.step)
+    }
+
+    /// The boundary hook: route one payload through the configured
+    /// codec. Returns (delivered tensor, wire bytes). Subspace/raw
+    /// payloads round-trip the dense codec losslessly; top-k and int8
+    /// round-trip their real (lossy) encoders; PowerLR applies an
+    /// actual rank-limited reconstruction with a sketch stream derived
+    /// deterministically from (seed, step, stage, microbatch,
+    /// direction).
+    fn ship(
+        &self,
+        t: &Tensor,
+        stage: usize,
+        mb: usize,
+        dir: Dir,
+    ) -> (Tensor, usize) {
+        let bytes = self.boundary_bytes();
+        match self.cfg.mode {
+            Mode::PowerLR => {
+                let rank = powerlr_rank(self.h.n, self.h.d, self.h.ratio);
+                let tag = (stage as u64) << 20
+                    | (mb as u64) << 4
+                    | match dir {
+                        Dir::Fwd => 0,
+                        Dir::Bwd => 1,
+                    };
+                let mut rng = Rng::new(
+                    self.cfg.seed ^ 0x70E7 ^ self.step.wrapping_mul(0x9E37) ^ tag,
+                );
+                (linalg::low_rank_approx(t, rank, &mut rng), bytes)
+            }
+            mode => {
+                let (recon, frame_bytes) =
+                    compress::roundtrip(t, mode, self.h.ratio);
+                debug_assert_eq!(
+                    frame_bytes, bytes,
+                    "codec frame disagrees with wire accounting"
+                );
+                (recon, frame_bytes)
+            }
+        }
+    }
+
+    fn note_peak(&mut self, tape: &Tape, extra: usize) {
+        self.peak_bytes = self.peak_bytes.max(
+            self.persistent_bytes() + tape.bytes() + extra,
+        );
+    }
+
+    /// Bytes held for the whole run: parameters, both optimizer moment
+    /// sets, and the shared global state (U, T_fixed, PE).
+    pub fn persistent_bytes(&self) -> usize {
+        let params: usize =
+            self.stages.iter().map(|s| s.param_count() * 3 * 4).sum();
+        params
+            + (self.global.u.numel()
+                + self.global.t_fixed.numel()
+                + self.pe.numel())
+                * 4
+    }
+
+    /// Peak bytes (persistent + transient) observed during the most
+    /// recent [`NativePipeline::train_step`] — the measured side of the
+    /// `memory::native_peak_bytes` model.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    /// Max relative out-of-subspace leak across constrained weights.
+    pub fn subspace_leak(&self) -> f64 {
+        self.stages
+            .iter()
+            .map(|s| s.subspace_leak(&self.global.u))
+            .fold(0.0, f64::max)
+    }
+
+    /// Accumulate one built stage's parameter gradients into `acc`
+    /// without cloning (grads stay borrowed from the tape; params the
+    /// root does not depend on contribute nothing).
+    fn accumulate_grads(built: &super::model::BuiltStage, acc: &mut [Tensor]) {
+        for (a, p) in acc.iter_mut().zip(&built.params) {
+            if let Some(g) = built.tape.grad(*p) {
+                a.add_assign(g);
+            }
+        }
+    }
+
+    /// One full training step over `cfg.microbatches` sampled batches.
+    pub fn train_step<F>(&mut self, mut sampler: F) -> Result<StepStats>
+    where
+        F: FnMut(&mut Rng) -> (IntTensor, IntTensor),
+    {
+        let t_host = Instant::now();
+        let h = self.h.clone();
+        let (p, m_count) = (h.stages, self.cfg.microbatches);
+        let last = p - 1;
+        let bbytes = self.boundary_bytes();
+        let compressed = self.compressed();
+        let tm = self.cfg.time_model;
+
+        let mut grad_acc: Vec<Vec<Tensor>> =
+            self.stages.iter().map(|st| st.zero_grads()).collect();
+        let grad_acc_bytes: usize =
+            grad_acc.iter().flatten().map(|g| g.numel() * 4).sum();
+        let mut costs = StepCosts {
+            stages: p,
+            microbatches: m_count,
+            fwd: vec![vec![0.0; m_count]; p],
+            bwd: vec![vec![0.0; m_count]; p],
+            tx_fwd: vec![vec![Tx::default(); m_count]; p - 1],
+            tx_bwd: vec![vec![Tx::default(); m_count]; p - 1],
+            opt: vec![0.0; p],
+            tail: 0.0,
+        };
+        let mut loss_sum = 0.0f64;
+        let mut wire = 0u64;
+        self.peak_bytes = 0;
+
+        let mut data_rng = self.rng.fork(0xDA7A ^ self.step);
+        for mb in 0..m_count {
+            let (tok, tgt) = sampler(&mut data_rng);
+            let e = high_rank_e(
+                &h,
+                self.cfg.mode,
+                &self.pe,
+                &self.global.t_fixed,
+                &tok,
+            );
+            // ---- forward wave (tapes dropped: GPipe rematerialization)
+            let mut saved_inputs: Vec<Option<Tensor>> = vec![None; p];
+            let mut saved_bytes = 0usize;
+            for s in 0..last {
+                let t0 = Instant::now();
+                let built = build_stage(
+                    &h,
+                    self.cfg.mode,
+                    s,
+                    &self.stages[s].params,
+                    StageIo {
+                        u: &self.global.u,
+                        e: &e,
+                        tok: &tok,
+                        input: saved_inputs[s].as_ref(),
+                        targets: None,
+                    },
+                );
+                let out = built.tape.value(built.output).clone();
+                costs.fwd[s][mb] = stage_seconds(
+                    tm,
+                    &h,
+                    s,
+                    Phase::Fwd,
+                    compressed,
+                    Some(t0.elapsed().as_secs_f64()),
+                );
+                self.note_peak(
+                    &built.tape,
+                    grad_acc_bytes + saved_bytes,
+                );
+                let (delivered, nbytes) = self.ship(&out, s, mb, Dir::Fwd);
+                let (ser, lat) = self.topo.links[s].sample(bbytes);
+                costs.tx_fwd[s][mb] = Tx { ser, lat };
+                wire += nbytes as u64;
+                saved_bytes += delivered.numel() * 4;
+                saved_inputs[s + 1] = Some(delivered);
+            }
+            // ---- last stage: fused fwd + loss + bwd
+            let t0 = Instant::now();
+            let mut built = build_stage(
+                &h,
+                self.cfg.mode,
+                last,
+                &self.stages[last].params,
+                StageIo {
+                    u: &self.global.u,
+                    e: &e,
+                    tok: &tok,
+                    input: saved_inputs[last].as_ref(),
+                    targets: Some(&tgt),
+                },
+            );
+            loss_sum += built.tape.value(built.output).item() as f64;
+            built.tape.backward(built.output);
+            costs.fwd[last][mb] = stage_seconds(
+                tm,
+                &h,
+                last,
+                Phase::LastLoss,
+                compressed,
+                Some(t0.elapsed().as_secs_f64()),
+            );
+            Self::accumulate_grads(&built, &mut grad_acc[last]);
+            if compressed {
+                let g_full = built
+                    .tape
+                    .grad(built.x_full.expect("last stage reconstructs"))
+                    .expect("g_full");
+                self.s_acc.add_assign(&linalg::matmul_tn(g_full, g_full));
+                self.s_count += 1;
+            }
+            let mut gc = built
+                .tape
+                .grad(built.input.expect("last stage has an input"))
+                .expect("boundary gradient")
+                .clone();
+            self.note_peak(&built.tape, grad_acc_bytes + saved_bytes);
+            drop(built);
+
+            // ---- backward wave
+            for s in (0..last).rev() {
+                let (delivered, nbytes) = self.ship(&gc, s, mb, Dir::Bwd);
+                let (ser, lat) = self.topo.links[s].sample(bbytes);
+                costs.tx_bwd[s][mb] = Tx { ser, lat };
+                wire += nbytes as u64;
+
+                let t0 = Instant::now();
+                let mut built = build_stage(
+                    &h,
+                    self.cfg.mode,
+                    s,
+                    &self.stages[s].params,
+                    StageIo {
+                        u: &self.global.u,
+                        e: &e,
+                        tok: &tok,
+                        input: saved_inputs[s].as_ref(),
+                        targets: None,
+                    },
+                );
+                built.tape.backward_from(built.output, delivered);
+                costs.bwd[s][mb] = stage_seconds(
+                    tm,
+                    &h,
+                    s,
+                    Phase::Bwd,
+                    compressed,
+                    Some(t0.elapsed().as_secs_f64()),
+                );
+                Self::accumulate_grads(&built, &mut grad_acc[s]);
+                self.note_peak(&built.tape, grad_acc_bytes + saved_bytes);
+                if s > 0 {
+                    gc = built
+                        .tape
+                        .grad(built.input.expect("mid stage has an input"))
+                        .expect("boundary gradient")
+                        .clone();
+                }
+            }
+        }
+
+        // ---- average grads, apply optimizer per stage
+        let scale = 1.0 / m_count as f32;
+        if self.cfg.record_grads {
+            let mut snap = grad_acc.clone();
+            for st in snap.iter_mut() {
+                for g in st.iter_mut() {
+                    g.scale(scale);
+                }
+            }
+            self.last_grads = Some(snap);
+        }
+        let lr = self.lr_now();
+        let t_opt = (self.step + 1) as f32;
+        let u = self.global.u.clone();
+        for s in 0..p {
+            for g in grad_acc[s].iter_mut() {
+                g.scale(scale);
+            }
+            let t0 = Instant::now();
+            step_stage(
+                &mut self.stages[s],
+                &grad_acc[s],
+                &OptStep {
+                    optim: self.optim,
+                    u: compressed.then_some(&u),
+                    lr,
+                    t: t_opt,
+                },
+            );
+            costs.opt[s] = stage_seconds(
+                tm,
+                &h,
+                s,
+                Phase::Opt,
+                compressed,
+                Some(t0.elapsed().as_secs_f64()),
+            );
+        }
+
+        // ---- Grassmann subspace maintenance (Sec. 4.5)
+        if compressed
+            && self.cfg.grassmann_interval > 0
+            && (self.step + 1) % self.cfg.grassmann_interval as u64 == 0
+            && self.s_count > 0
+        {
+            costs.tail += self.grassmann_update();
+        }
+
+        let makespan = self.step_makespan(&costs)?;
+        self.clock += makespan.total;
+        self.step += 1;
+        self.host_seconds += t_host.elapsed().as_secs_f64();
+        Ok(StepStats {
+            step: self.step,
+            loss: loss_sum / m_count as f64,
+            sim_seconds: makespan.total,
+            wire_bytes: wire,
+            tokens: m_count * h.b * h.n,
+            makespan,
+        })
+    }
+
+    /// Price one step's costs under the configured schedule (same rules
+    /// as the PJRT path).
+    fn step_makespan(&self, costs: &StepCosts) -> Result<Makespan> {
+        if matches!(self.cfg.schedule, crate::sim::Schedule::Gpipe)
+            && !self.cfg.event_sim
+        {
+            Ok(gpipe_makespan(costs))
+        } else {
+            crate::sim::step_makespan(costs, self.cfg.schedule)
+        }
+    }
+
+    /// Riemannian subspace update + re-projection of constrained
+    /// weights/momenta; returns simulated tail seconds.
+    fn grassmann_update(&mut self) -> f64 {
+        let h = self.h.clone();
+        let mut s_avg = self.s_acc.clone();
+        s_avg.scale(1.0 / self.s_count as f32);
+        let trace: f64 =
+            (0..h.d).map(|i| s_avg.at2(i, i) as f64).sum();
+        let eta = if trace > 1e-12 {
+            (self.cfg.grassmann_eta * h.d as f64 / trace) as f32
+        } else {
+            0.0
+        };
+        let t0 = Instant::now();
+        // ∇L(U) = −2·S·U; tangent = ∇ − U(Uᵀ∇); retraction = MGS
+        let mut g_euc = linalg::matmul(&s_avg, &self.global.u);
+        g_euc.scale(-2.0);
+        let utg = linalg::matmul_tn(&self.global.u, &g_euc);
+        let mut u_new = self.global.u.clone();
+        let proj = linalg::matmul(&self.global.u, &utg);
+        for i in 0..u_new.data.len() {
+            u_new.data[i] -= eta * (g_euc.data[i] - proj.data[i]);
+        }
+        linalg::orthonormalize_columns(&mut u_new);
+        self.global.u = u_new;
+        let mut secs = stage_seconds(
+            self.cfg.time_model,
+            &h,
+            h.stages - 1,
+            Phase::Grassmann,
+            true,
+            Some(t0.elapsed().as_secs_f64()),
+        );
+        for s in 0..h.stages {
+            let t0 = Instant::now();
+            let st = &mut self.stages[s];
+            for i in 0..st.params.len() {
+                if constrained(&st.schema[i].0) {
+                    st.params[i] =
+                        linalg::project_rows(&st.params[i], &self.global.u);
+                    st.m[i] =
+                        linalg::project_rows(&st.m[i], &self.global.u);
+                }
+            }
+            secs += stage_seconds(
+                self.cfg.time_model,
+                &h,
+                s,
+                Phase::Grassmann,
+                true,
+                Some(t0.elapsed().as_secs_f64()),
+            );
+        }
+        secs += self.topo.broadcast(h.d * h.k * 4);
+        self.s_acc = Tensor::zeros(&[h.d, h.d]);
+        self.s_count = 0;
+        secs
+    }
+
+    /// Mean validation loss over `batches` forward passes (no backward,
+    /// no optimizer). Side-effect free like the PJRT path: the batch
+    /// stream derives from `(cfg.seed, step)` only, so mid-training
+    /// evals never shift subsequent training batches.
+    pub fn eval<F>(&mut self, batches: usize, mut sampler: F) -> Result<f64>
+    where
+        F: FnMut(&mut Rng) -> (IntTensor, IntTensor),
+    {
+        let h = self.h.clone();
+        let last = h.stages - 1;
+        let mut rng = Rng::new(
+            self.cfg.seed ^ 0xE7A1 ^ self.step.wrapping_mul(0x9E37_79B9),
+        );
+        let mut sum = 0.0;
+        for _ in 0..batches {
+            let (tok, tgt) = sampler(&mut rng);
+            let e = high_rank_e(
+                &h,
+                self.cfg.mode,
+                &self.pe,
+                &self.global.t_fixed,
+                &tok,
+            );
+            let mut cur: Option<Tensor> = None;
+            for s in 0..last {
+                let built = build_stage(
+                    &h,
+                    self.cfg.mode,
+                    s,
+                    &self.stages[s].params,
+                    StageIo {
+                        u: &self.global.u,
+                        e: &e,
+                        tok: &tok,
+                        input: cur.as_ref(),
+                        targets: None,
+                    },
+                );
+                let out = built.tape.value(built.output).clone();
+                let (delivered, _) = self.ship(&out, s, 0, Dir::Fwd);
+                cur = Some(delivered);
+            }
+            let built = build_stage(
+                &h,
+                self.cfg.mode,
+                last,
+                &self.stages[last].params,
+                StageIo {
+                    u: &self.global.u,
+                    e: &e,
+                    tok: &tok,
+                    input: cur.as_ref(),
+                    targets: Some(&tgt),
+                },
+            );
+            sum += built.tape.value(built.output).item() as f64;
+        }
+        Ok(sum / batches.max(1) as f64)
+    }
+}

@@ -1,0 +1,845 @@
+//! Reverse-mode autodiff on a flat tape of tensor ops.
+//!
+//! The op set is exactly what the paper's decoder-only transformer needs
+//! — matrix products (via the [`crate::linalg`] kernels), residual
+//! add/sub, ReLU, LayerNorm, fused causal self-attention, embedding
+//! gather, and fused softmax cross-entropy — nothing more. Every op
+//! stores its forward value (plus the minimal aux state its backward
+//! rule needs: softmax rows, LN row statistics), so one
+//! [`Tape::backward`] pass yields gradients for every trainable leaf
+//! and for the stage-boundary input, which is what the pipeline ships
+//! upstream.
+//!
+//! Determinism: ops are serial loops with fixed iteration order, and the
+//! matmul family delegates to the thread-count-bit-stable linalg kernels
+//! (DESIGN.md §8) — a tape program produces identical bits under any
+//! `--threads` budget, which is what lets `exp convergence-native` keep
+//! the byte-identical-CSV contract.
+//!
+//! Memory: [`Tape::bytes`] reports the bytes held by values, aux state,
+//! and accumulated gradients — the number `memory.rs` checks against its
+//! analytic native-backend model.
+
+use crate::linalg;
+use crate::tensor::{IntTensor, Tensor};
+
+/// LayerNorm variance epsilon (matches python/compile/model.py).
+pub const LN_EPS: f32 = 1e-5;
+
+/// Handle to one tape node.
+#[derive(Clone, Copy, Debug)]
+pub struct Var {
+    id: usize,
+}
+
+/// One differentiable operation (inputs are node ids, always < self).
+enum Op {
+    /// input or parameter tensor
+    Leaf,
+    /// C = A·B
+    Matmul { a: usize, b: usize },
+    /// C = A·Bᵀ (boundary reconstruction Xc·Uᵀ)
+    MatmulNT { a: usize, b: usize },
+    /// C = A + B
+    Add { a: usize, b: usize },
+    /// C = A − B (high-rank component subtraction before projection)
+    Sub { a: usize, b: usize },
+    /// C = max(A, 0)
+    Relu { x: usize },
+    /// row-wise layer norm with gain/bias; saves per-row (μ, 1/σ)
+    LayerNorm { x: usize, g: usize, b: usize, mu: Vec<f32>, rstd: Vec<f32> },
+    /// fused multi-head causal self-attention; saves softmax rows
+    Attention { q: usize, k: usize, v: usize, dims: AttnDims, att: Vec<f32> },
+    /// row gather C[i] = table[tok[i]]
+    Embed { table: usize, tok: IntTensor },
+    /// mean softmax cross-entropy over all rows; saves softmax probs
+    CrossEntropy { logits: usize, targets: IntTensor, probs: Vec<f32> },
+}
+
+/// Static shape of a fused attention op.
+#[derive(Clone, Copy, Debug)]
+pub struct AttnDims {
+    /// microbatch size
+    pub b: usize,
+    /// sequence length
+    pub n: usize,
+    /// attention heads
+    pub heads: usize,
+    /// embedding dim (heads · head_dim)
+    pub d: usize,
+}
+
+struct Node {
+    op: Op,
+    value: Tensor,
+    grad: Option<Tensor>,
+    requires_grad: bool,
+}
+
+impl Node {
+    fn aux_bytes(&self) -> usize {
+        match &self.op {
+            Op::LayerNorm { mu, rstd, .. } => (mu.len() + rstd.len()) * 4,
+            Op::Attention { att, .. } => att.len() * 4,
+            Op::CrossEntropy { probs, targets, .. } => {
+                probs.len() * 4 + targets.numel() * 4
+            }
+            Op::Embed { tok, .. } => tok.numel() * 4,
+            _ => 0,
+        }
+    }
+}
+
+/// A reverse-mode autodiff tape: build the graph forward, then call
+/// [`Tape::backward`] once from the root.
+pub struct Tape {
+    nodes: Vec<Node>,
+}
+
+impl Default for Tape {
+    fn default() -> Self {
+        Tape::new()
+    }
+}
+
+impl Tape {
+    /// Empty tape.
+    pub fn new() -> Tape {
+        Tape { nodes: Vec::new() }
+    }
+
+    fn push(&mut self, op: Op, value: Tensor, requires_grad: bool) -> Var {
+        let id = self.nodes.len();
+        self.nodes.push(Node { op, value, grad: None, requires_grad });
+        Var { id }
+    }
+
+    fn req(&self, v: Var) -> bool {
+        self.nodes[v.id].requires_grad
+    }
+
+    /// Register an input tensor. `trainable` marks it as wanting a
+    /// gradient (parameters, boundary inputs); constants (U, the
+    /// high-rank E component) pass `false` and backward never touches
+    /// them.
+    pub fn leaf(&mut self, value: Tensor, trainable: bool) -> Var {
+        self.push(Op::Leaf, value, trainable)
+    }
+
+    /// Forward value of a node.
+    pub fn value(&self, v: Var) -> &Tensor {
+        &self.nodes[v.id].value
+    }
+
+    /// Accumulated gradient of a node (after [`Tape::backward`]); `None`
+    /// for constants and nodes the root does not depend on.
+    pub fn grad(&self, v: Var) -> Option<&Tensor> {
+        self.nodes[v.id].grad.as_ref()
+    }
+
+    /// Bytes held by node values, op aux state, and gradients — the
+    /// measured quantity behind `memory::native_*` accounting.
+    pub fn bytes(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| {
+                n.value.numel() * 4
+                    + n.aux_bytes()
+                    + n.grad.as_ref().map_or(0, |g| g.numel() * 4)
+            })
+            .sum()
+    }
+
+    // ---- ops --------------------------------------------------------------
+
+    /// C = A·B.
+    pub fn matmul(&mut self, a: Var, b: Var) -> Var {
+        let value = linalg::matmul(self.value(a), self.value(b));
+        let rg = self.req(a) || self.req(b);
+        self.push(Op::Matmul { a: a.id, b: b.id }, value, rg)
+    }
+
+    /// C = A·Bᵀ (never materializes Bᵀ).
+    pub fn matmul_nt(&mut self, a: Var, b: Var) -> Var {
+        let value = linalg::matmul_nt(self.value(a), self.value(b));
+        let rg = self.req(a) || self.req(b);
+        self.push(Op::MatmulNT { a: a.id, b: b.id }, value, rg)
+    }
+
+    /// C = A + B (same shape).
+    pub fn add(&mut self, a: Var, b: Var) -> Var {
+        let (ta, tb) = (self.value(a), self.value(b));
+        debug_assert_eq!(ta.shape, tb.shape);
+        let data = ta.data.iter().zip(&tb.data).map(|(x, y)| x + y).collect();
+        let value = Tensor::new(ta.shape.clone(), data);
+        let rg = self.req(a) || self.req(b);
+        self.push(Op::Add { a: a.id, b: b.id }, value, rg)
+    }
+
+    /// C = A − B (same shape).
+    pub fn sub(&mut self, a: Var, b: Var) -> Var {
+        let (ta, tb) = (self.value(a), self.value(b));
+        debug_assert_eq!(ta.shape, tb.shape);
+        let data = ta.data.iter().zip(&tb.data).map(|(x, y)| x - y).collect();
+        let value = Tensor::new(ta.shape.clone(), data);
+        let rg = self.req(a) || self.req(b);
+        self.push(Op::Sub { a: a.id, b: b.id }, value, rg)
+    }
+
+    /// C = max(A, 0).
+    pub fn relu(&mut self, x: Var) -> Var {
+        let t = self.value(x);
+        let data = t.data.iter().map(|v| v.max(0.0)).collect();
+        let value = Tensor::new(t.shape.clone(), data);
+        let rg = self.req(x);
+        self.push(Op::Relu { x: x.id }, value, rg)
+    }
+
+    /// Row-wise LayerNorm over the last dim of a 2-D input:
+    /// `y = (x − μ)/√(σ² + ε) · g + b` with 1-D gain/bias.
+    pub fn layer_norm(&mut self, x: Var, g: Var, b: Var) -> Var {
+        let t = self.value(x);
+        let (rows, d) = t.dims2();
+        let gv = &self.value(g).data;
+        let bv = &self.value(b).data;
+        debug_assert_eq!(gv.len(), d);
+        debug_assert_eq!(bv.len(), d);
+        let mut out = vec![0.0f32; rows * d];
+        let mut mu = vec![0.0f32; rows];
+        let mut rstd = vec![0.0f32; rows];
+        for r in 0..rows {
+            let row = &t.data[r * d..(r + 1) * d];
+            let mean = row.iter().map(|v| *v as f64).sum::<f64>() / d as f64;
+            let var = row
+                .iter()
+                .map(|v| (*v as f64 - mean).powi(2))
+                .sum::<f64>()
+                / d as f64;
+            let rs = 1.0 / (var + LN_EPS as f64).sqrt();
+            mu[r] = mean as f32;
+            rstd[r] = rs as f32;
+            let orow = &mut out[r * d..(r + 1) * d];
+            for j in 0..d {
+                let xhat = (row[j] - mu[r]) * rstd[r];
+                orow[j] = xhat * gv[j] + bv[j];
+            }
+        }
+        let value = Tensor::new(vec![rows, d], out);
+        let rg = self.req(x) || self.req(g) || self.req(b);
+        self.push(
+            Op::LayerNorm { x: x.id, g: g.id, b: b.id, mu, rstd },
+            value,
+            rg,
+        )
+    }
+
+    /// Fused multi-head causal self-attention over (b·n, d) inputs
+    /// already projected to Q/K/V: per (batch, head), softmax(QKᵀ/√d_h)
+    /// with a causal mask, times V. Saves the softmax rows for backward.
+    pub fn causal_attention(
+        &mut self,
+        q: Var,
+        k: Var,
+        v: Var,
+        dims: AttnDims,
+    ) -> Var {
+        let AttnDims { b, n, heads, d } = dims;
+        let dh = d / heads;
+        debug_assert_eq!(dh * heads, d);
+        debug_assert_eq!(self.value(q).shape, vec![b * n, d]);
+        let scale = 1.0f32 / (dh as f32).sqrt();
+        let (qd, kd, vd) =
+            (&self.value(q).data, &self.value(k).data, &self.value(v).data);
+        let mut att = vec![0.0f32; b * heads * n * n];
+        let mut out = vec![0.0f32; b * n * d];
+        for bi in 0..b {
+            for h in 0..heads {
+                let off = h * dh;
+                for i in 0..n {
+                    let qrow = &qd[(bi * n + i) * d + off..][..dh];
+                    let arow = &mut att
+                        [((bi * heads + h) * n + i) * n..][..n];
+                    // causal scores for j ≤ i
+                    let mut mx = f32::NEG_INFINITY;
+                    for (j, aj) in arow.iter_mut().enumerate().take(i + 1) {
+                        let krow = &kd[(bi * n + j) * d + off..][..dh];
+                        let mut s = 0.0f32;
+                        for (qc, kc) in qrow.iter().zip(krow) {
+                            s += qc * kc;
+                        }
+                        let s = s * scale;
+                        *aj = s;
+                        mx = mx.max(s);
+                    }
+                    // softmax over the unmasked prefix
+                    let mut sum = 0.0f64;
+                    for aj in arow.iter_mut().take(i + 1) {
+                        let e = (*aj - mx).exp();
+                        *aj = e;
+                        sum += e as f64;
+                    }
+                    let inv = (1.0 / sum) as f32;
+                    for aj in arow.iter_mut().take(i + 1) {
+                        *aj *= inv;
+                    }
+                    // out_i = Σ_j att_ij · v_j
+                    let orow = &mut out[(bi * n + i) * d + off..][..dh];
+                    for j in 0..=i {
+                        let a = arow[j];
+                        let vrow = &vd[(bi * n + j) * d + off..][..dh];
+                        for (oc, vc) in orow.iter_mut().zip(vrow) {
+                            *oc += a * vc;
+                        }
+                    }
+                }
+            }
+        }
+        let value = Tensor::new(vec![b * n, d], out);
+        let rg = self.req(q) || self.req(k) || self.req(v);
+        self.push(
+            Op::Attention { q: q.id, k: k.id, v: v.id, dims, att },
+            value,
+            rg,
+        )
+    }
+
+    /// Row gather: C[i, :] = table[tok[i], :] for a (b, n) token tensor,
+    /// producing (b·n, d).
+    pub fn embed(&mut self, table: Var, tok: &IntTensor) -> Var {
+        let t = self.value(table);
+        let (vocab, d) = t.dims2();
+        let rows = tok.numel();
+        let mut out = vec![0.0f32; rows * d];
+        for (i, &id) in tok.data.iter().enumerate() {
+            let id = id as usize;
+            debug_assert!(id < vocab);
+            out[i * d..(i + 1) * d]
+                .copy_from_slice(&t.data[id * d..(id + 1) * d]);
+        }
+        let value = Tensor::new(vec![rows, d], out);
+        let rg = self.req(table);
+        self.push(Op::Embed { table: table.id, tok: tok.clone() }, value, rg)
+    }
+
+    /// Fused softmax cross-entropy, averaged over every (row, target)
+    /// pair: scalar `−mean log softmax(logits)[target]`.
+    pub fn cross_entropy(&mut self, logits: Var, targets: &IntTensor) -> Var {
+        let t = self.value(logits);
+        let (rows, vocab) = t.dims2();
+        debug_assert_eq!(targets.numel(), rows);
+        let mut probs = vec![0.0f32; rows * vocab];
+        let mut loss = 0.0f64;
+        for r in 0..rows {
+            let row = &t.data[r * vocab..(r + 1) * vocab];
+            let mx = row.iter().fold(f32::NEG_INFINITY, |m, x| m.max(*x));
+            let mut sum = 0.0f64;
+            let prow = &mut probs[r * vocab..(r + 1) * vocab];
+            for (p, l) in prow.iter_mut().zip(row) {
+                let e = (l - mx).exp();
+                *p = e;
+                sum += e as f64;
+            }
+            let inv = (1.0 / sum) as f32;
+            for p in prow.iter_mut() {
+                *p *= inv;
+            }
+            let tgt = targets.data[r] as usize;
+            debug_assert!(tgt < vocab);
+            loss -= (row[tgt] - mx) as f64 - sum.ln();
+        }
+        let value = Tensor::scalar((loss / rows as f64) as f32);
+        let rg = self.req(logits);
+        self.push(
+            Op::CrossEntropy {
+                logits: logits.id,
+                targets: targets.clone(),
+                probs,
+            },
+            value,
+            rg,
+        )
+    }
+
+    // ---- backward ---------------------------------------------------------
+
+    /// Reverse pass from a scalar root (seeds d root = 1).
+    pub fn backward(&mut self, root: Var) {
+        let seed = Tensor::scalar(1.0);
+        self.backward_from(root, seed);
+    }
+
+    /// Reverse pass from any root with an explicit output cotangent —
+    /// how non-last stages inject the boundary gradient arriving from
+    /// downstream.
+    pub fn backward_from(&mut self, root: Var, seed: Tensor) {
+        debug_assert_eq!(self.nodes[root.id].value.shape, seed.shape);
+        if !self.nodes[root.id].requires_grad {
+            return;
+        }
+        self.nodes[root.id].grad = Some(seed);
+        for id in (0..=root.id).rev() {
+            let (head, tail) = self.nodes.split_at_mut(id);
+            let node = &mut tail[0];
+            if node.grad.is_none() || !node.requires_grad {
+                continue;
+            }
+            let g = node.grad.as_ref().unwrap();
+            match &node.op {
+                Op::Leaf => {}
+                Op::Matmul { a, b } => {
+                    if head[*a].requires_grad {
+                        let da = linalg::matmul_nt(g, &head[*b].value);
+                        accumulate(&mut head[*a], da);
+                    }
+                    if head[*b].requires_grad {
+                        let db = linalg::matmul_tn(&head[*a].value, g);
+                        accumulate(&mut head[*b], db);
+                    }
+                }
+                Op::MatmulNT { a, b } => {
+                    if head[*a].requires_grad {
+                        let da = linalg::matmul(g, &head[*b].value);
+                        accumulate(&mut head[*a], da);
+                    }
+                    if head[*b].requires_grad {
+                        let db = linalg::matmul_tn(g, &head[*a].value);
+                        accumulate(&mut head[*b], db);
+                    }
+                }
+                Op::Add { a, b } => {
+                    let (a, b) = (*a, *b);
+                    let g = g.clone();
+                    if head[a].requires_grad {
+                        accumulate(&mut head[a], g.clone());
+                    }
+                    if head[b].requires_grad {
+                        accumulate(&mut head[b], g);
+                    }
+                }
+                Op::Sub { a, b } => {
+                    let (a, b) = (*a, *b);
+                    if head[a].requires_grad {
+                        accumulate(&mut head[a], g.clone());
+                    }
+                    if head[b].requires_grad {
+                        let mut ng = g.clone();
+                        ng.scale(-1.0);
+                        accumulate(&mut head[b], ng);
+                    }
+                }
+                Op::Relu { x } => {
+                    let xv = &head[*x].value;
+                    let data = xv
+                        .data
+                        .iter()
+                        .zip(&g.data)
+                        .map(|(x, gv)| if *x > 0.0 { *gv } else { 0.0 })
+                        .collect();
+                    let dx = Tensor::new(xv.shape.clone(), data);
+                    accumulate(&mut head[*x], dx);
+                }
+                Op::LayerNorm { x, g: gp, b: bp, mu, rstd } => {
+                    let (dx, dg, db) = layer_norm_backward(
+                        &head[*x].value,
+                        &head[*gp].value,
+                        mu,
+                        rstd,
+                        g,
+                    );
+                    let (x, gp, bp) = (*x, *gp, *bp);
+                    if head[x].requires_grad {
+                        accumulate(&mut head[x], dx);
+                    }
+                    if head[gp].requires_grad {
+                        accumulate(&mut head[gp], dg);
+                    }
+                    if head[bp].requires_grad {
+                        accumulate(&mut head[bp], db);
+                    }
+                }
+                Op::Attention { q, k, v, dims, att } => {
+                    let (dq, dk, dv) = attention_backward(
+                        &head[*q].value,
+                        &head[*k].value,
+                        &head[*v].value,
+                        *dims,
+                        att,
+                        g,
+                    );
+                    let (q, k, v) = (*q, *k, *v);
+                    if head[q].requires_grad {
+                        accumulate(&mut head[q], dq);
+                    }
+                    if head[k].requires_grad {
+                        accumulate(&mut head[k], dk);
+                    }
+                    if head[v].requires_grad {
+                        accumulate(&mut head[v], dv);
+                    }
+                }
+                Op::Embed { table, tok } => {
+                    let tv = &head[*table].value;
+                    let (_, d) = tv.dims2();
+                    let mut dt = Tensor::zeros(&tv.shape);
+                    for (i, &id) in tok.data.iter().enumerate() {
+                        let id = id as usize;
+                        let src = &g.data[i * d..(i + 1) * d];
+                        let dst = &mut dt.data[id * d..(id + 1) * d];
+                        for (dv, sv) in dst.iter_mut().zip(src) {
+                            *dv += sv;
+                        }
+                    }
+                    accumulate(&mut head[*table], dt);
+                }
+                Op::CrossEntropy { logits, targets, probs } => {
+                    let lv = &head[*logits].value;
+                    let (rows, vocab) = lv.dims2();
+                    let scale = g.item() / rows as f32;
+                    let mut dl = vec![0.0f32; rows * vocab];
+                    for r in 0..rows {
+                        let prow = &probs[r * vocab..(r + 1) * vocab];
+                        let drow = &mut dl[r * vocab..(r + 1) * vocab];
+                        for (d, p) in drow.iter_mut().zip(prow) {
+                            *d = p * scale;
+                        }
+                        drow[targets.data[r] as usize] -= scale;
+                    }
+                    let dl = Tensor::new(vec![rows, vocab], dl);
+                    accumulate(&mut head[*logits], dl);
+                }
+            }
+        }
+    }
+}
+
+fn accumulate(node: &mut Node, delta: Tensor) {
+    match &mut node.grad {
+        Some(g) => g.add_assign(&delta),
+        None => node.grad = Some(delta),
+    }
+}
+
+/// LayerNorm backward: returns (dx, dg, db).
+fn layer_norm_backward(
+    x: &Tensor,
+    g: &Tensor,
+    mu: &[f32],
+    rstd: &[f32],
+    dy: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let (rows, d) = x.dims2();
+    let mut dx = vec![0.0f32; rows * d];
+    let mut dg = vec![0.0f64; d];
+    let mut db = vec![0.0f64; d];
+    for r in 0..rows {
+        let xrow = &x.data[r * d..(r + 1) * d];
+        let dyrow = &dy.data[r * d..(r + 1) * d];
+        let dxrow = &mut dx[r * d..(r + 1) * d];
+        let (m, rs) = (mu[r], rstd[r]);
+        // dŷ = dy·g; means of dŷ and dŷ·x̂ over the row
+        let mut m1 = 0.0f64;
+        let mut m2 = 0.0f64;
+        for j in 0..d {
+            let xhat = (xrow[j] - m) * rs;
+            let dyh = (dyrow[j] * g.data[j]) as f64;
+            m1 += dyh;
+            m2 += dyh * xhat as f64;
+            dg[j] += (dyrow[j] * xhat) as f64;
+            db[j] += dyrow[j] as f64;
+        }
+        m1 /= d as f64;
+        m2 /= d as f64;
+        for j in 0..d {
+            let xhat = (xrow[j] - m) * rs;
+            let dyh = (dyrow[j] * g.data[j]) as f64;
+            dxrow[j] =
+                (rs as f64 * (dyh - m1 - xhat as f64 * m2)) as f32;
+        }
+    }
+    (
+        Tensor::new(vec![rows, d], dx),
+        Tensor::new(vec![d], dg.into_iter().map(|v| v as f32).collect()),
+        Tensor::new(vec![d], db.into_iter().map(|v| v as f32).collect()),
+    )
+}
+
+/// Fused causal-attention backward: returns (dQ, dK, dV).
+fn attention_backward(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    dims: AttnDims,
+    att: &[f32],
+    dout: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let AttnDims { b, n, heads, d } = dims;
+    let dh = d / heads;
+    let scale = 1.0f32 / (dh as f32).sqrt();
+    let mut dq = vec![0.0f32; b * n * d];
+    let mut dk = vec![0.0f32; b * n * d];
+    let mut dv = vec![0.0f32; b * n * d];
+    let mut datt = vec![0.0f32; n];
+    for bi in 0..b {
+        for h in 0..heads {
+            let off = h * dh;
+            for i in 0..n {
+                let arow = &att[((bi * heads + h) * n + i) * n..][..n];
+                let dorow = &dout.data[(bi * n + i) * d + off..][..dh];
+                // dV_j += att_ij · dOut_i;  dAtt_ij = dOut_i · V_j
+                for j in 0..=i {
+                    let a = arow[j];
+                    let vrow = &v.data[(bi * n + j) * d + off..][..dh];
+                    let dvrow = &mut dv[(bi * n + j) * d + off..][..dh];
+                    let mut dot = 0.0f32;
+                    for c in 0..dh {
+                        dvrow[c] += a * dorow[c];
+                        dot += dorow[c] * vrow[c];
+                    }
+                    datt[j] = dot;
+                }
+                // softmax backward on the causal prefix:
+                // dS_ij = att_ij (dAtt_ij − Σ_l att_il dAtt_il)
+                let mut inner = 0.0f64;
+                for j in 0..=i {
+                    inner += (arow[j] * datt[j]) as f64;
+                }
+                let inner = inner as f32;
+                let qrow = &q.data[(bi * n + i) * d + off..][..dh];
+                let dqrow_i = &mut dq[(bi * n + i) * d + off..][..dh];
+                for j in 0..=i {
+                    let ds = arow[j] * (datt[j] - inner) * scale;
+                    let krow = &k.data[(bi * n + j) * d + off..][..dh];
+                    for (dqc, kc) in dqrow_i.iter_mut().zip(krow) {
+                        *dqc += ds * kc;
+                    }
+                    let dkrow = &mut dk[(bi * n + j) * d + off..][..dh];
+                    for (dkc, qc) in dkrow.iter_mut().zip(qrow) {
+                        *dkc += ds * qc;
+                    }
+                }
+            }
+        }
+    }
+    (
+        Tensor::new(vec![b * n, d], dq),
+        Tensor::new(vec![b * n, d], dk),
+        Tensor::new(vec![b * n, d], dv),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randt(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        Tensor::new(
+            shape.to_vec(),
+            rng.normal_f32_vec(shape.iter().product(), 1.0),
+        )
+    }
+
+    #[test]
+    fn matmul_grads_match_hand_computed() {
+        // L = Σ (A·B): dA = 1·Bᵀ row-sums, dB = Aᵀ·1
+        let mut tape = Tape::new();
+        let a = tape.leaf(
+            Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+            true,
+        );
+        let b = tape.leaf(
+            Tensor::new(vec![2, 2], vec![5.0, 6.0, 7.0, 8.0]),
+            true,
+        );
+        let c = tape.matmul(a, b);
+        tape.backward_from(c, Tensor::new(vec![2, 2], vec![1.0; 4]));
+        assert_eq!(tape.grad(a).unwrap().data, vec![11.0, 15.0, 11.0, 15.0]);
+        assert_eq!(tape.grad(b).unwrap().data, vec![4.0, 4.0, 6.0, 6.0]);
+    }
+
+    #[test]
+    fn matmul_nt_consistent_with_matmul_of_transpose() {
+        let mut rng = Rng::new(2);
+        let av = randt(&mut rng, &[3, 5]);
+        let bv = randt(&mut rng, &[4, 5]);
+        let seed = randt(&mut rng, &[3, 4]);
+
+        let mut t1 = Tape::new();
+        let a1 = t1.leaf(av.clone(), true);
+        let b1 = t1.leaf(bv.clone(), true);
+        let c1 = t1.matmul_nt(a1, b1);
+        t1.backward_from(c1, seed.clone());
+
+        let mut t2 = Tape::new();
+        let a2 = t2.leaf(av, true);
+        let b2 = t2.leaf(linalg::transpose(&bv), true);
+        let c2 = t2.matmul(a2, b2);
+        t2.backward_from(c2, seed);
+
+        assert_eq!(t1.value(c1).data, t2.value(c2).data);
+        for (x, y) in t1
+            .grad(a1)
+            .unwrap()
+            .data
+            .iter()
+            .zip(&t2.grad(a2).unwrap().data)
+        {
+            assert!((x - y).abs() < 1e-5);
+        }
+        let g2t = linalg::transpose(t2.grad(b2).unwrap());
+        for (x, y) in t1.grad(b1).unwrap().data.iter().zip(&g2t.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn constants_get_no_grad_and_fanout_accumulates() {
+        let mut rng = Rng::new(3);
+        let mut tape = Tape::new();
+        let x = tape.leaf(randt(&mut rng, &[4, 4]), true);
+        let c = tape.leaf(randt(&mut rng, &[4, 4]), false);
+        let s = tape.add(x, c);
+        let y = tape.add(s, x); // x used twice: grads must accumulate
+        tape.backward_from(y, Tensor::new(vec![4, 4], vec![1.0; 16]));
+        assert!(tape.grad(c).is_none());
+        assert!(tape.grad(x).unwrap().data.iter().all(|g| *g == 2.0));
+    }
+
+    #[test]
+    fn relu_masks_gradient() {
+        let mut tape = Tape::new();
+        let x = tape.leaf(
+            Tensor::new(vec![1, 4], vec![-1.0, 0.0, 0.5, 2.0]),
+            true,
+        );
+        let y = tape.relu(x);
+        tape.backward_from(y, Tensor::new(vec![1, 4], vec![1.0; 4]));
+        assert_eq!(tape.grad(x).unwrap().data, vec![0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn layer_norm_output_is_normalized() {
+        let mut rng = Rng::new(4);
+        let mut tape = Tape::new();
+        let x = tape.leaf(randt(&mut rng, &[6, 32]), true);
+        let g = tape.leaf(Tensor::new(vec![32], vec![1.0; 32]), true);
+        let b = tape.leaf(Tensor::zeros(&[32]), true);
+        let y = tape.layer_norm(x, g, b);
+        let yv = tape.value(y);
+        for r in 0..6 {
+            let row = &yv.data[r * 32..(r + 1) * 32];
+            let mean: f64 =
+                row.iter().map(|v| *v as f64).sum::<f64>() / 32.0;
+            let var: f64 = row
+                .iter()
+                .map(|v| (*v as f64 - mean).powi(2))
+                .sum::<f64>()
+                / 32.0;
+            assert!(mean.abs() < 1e-5, "row {r} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "row {r} var {var}");
+        }
+        // db is the column-sum of dy
+        let seed = randt(&mut rng, &[6, 32]);
+        let mut colsum = vec![0.0f32; 32];
+        for r in 0..6 {
+            for j in 0..32 {
+                colsum[j] += seed.data[r * 32 + j];
+            }
+        }
+        tape.backward_from(y, seed);
+        for (x, y) in tape.grad(b).unwrap().data.iter().zip(&colsum) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn attention_is_causal() {
+        // output at position i must not depend on inputs at j > i:
+        // perturb the last token's q/k/v and check earlier outputs fixed
+        let mut rng = Rng::new(5);
+        let dims = AttnDims { b: 2, n: 8, heads: 2, d: 16 };
+        let (qv, kv, vv) = (
+            randt(&mut rng, &[16, 16]),
+            randt(&mut rng, &[16, 16]),
+            randt(&mut rng, &[16, 16]),
+        );
+        let out = |qv: &Tensor, kv: &Tensor, vv: &Tensor| {
+            let mut tape = Tape::new();
+            let q = tape.leaf(qv.clone(), false);
+            let k = tape.leaf(kv.clone(), false);
+            let v = tape.leaf(vv.clone(), false);
+            let o = tape.causal_attention(q, k, v, dims);
+            tape.value(o).clone()
+        };
+        let base = out(&qv, &kv, &vv);
+        let mut kv2 = kv.clone();
+        for c in 0..16 {
+            kv2.data[7 * 16 + c] += 1.0; // last token of batch 0
+        }
+        let pert = out(&qv, &kv2, &vv);
+        for i in 0..7 {
+            for c in 0..16 {
+                assert_eq!(
+                    base.data[i * 16 + c],
+                    pert.data[i * 16 + c],
+                    "pos {i} changed"
+                );
+            }
+        }
+        // attention rows sum to 1 over the causal prefix: uniform V maps
+        // to itself
+        let ones = Tensor::new(vec![16, 16], vec![1.0; 256]);
+        let o = out(&qv, &kv, &ones);
+        for x in &o.data {
+            assert!((x - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn cross_entropy_of_uniform_logits_is_log_vocab() {
+        let mut tape = Tape::new();
+        let logits = tape.leaf(Tensor::zeros(&[3, 8]), true);
+        let targets = IntTensor::new(vec![3], vec![1, 5, 7]);
+        let loss = tape.cross_entropy(logits, &targets);
+        assert!((tape.value(loss).item() - (8.0f32).ln()).abs() < 1e-6);
+        tape.backward(loss);
+        let g = tape.grad(logits).unwrap();
+        // rows sum to zero; target entry negative
+        for r in 0..3 {
+            let row = &g.data[r * 8..(r + 1) * 8];
+            let sum: f32 = row.iter().sum();
+            assert!(sum.abs() < 1e-6);
+            assert!(row[targets.data[r] as usize] < 0.0);
+        }
+    }
+
+    #[test]
+    fn embed_scatters_gradient_by_token() {
+        let mut tape = Tape::new();
+        let table = tape.leaf(
+            Tensor::new(vec![4, 2], (0..8).map(|x| x as f32).collect()),
+            true,
+        );
+        let tok = IntTensor::new(vec![1, 3], vec![2, 0, 2]);
+        let e = tape.embed(table, &tok);
+        assert_eq!(tape.value(e).data, vec![4.0, 5.0, 0.0, 1.0, 4.0, 5.0]);
+        tape.backward_from(e, Tensor::new(vec![3, 2], vec![1.0; 6]));
+        let g = tape.grad(table).unwrap();
+        assert_eq!(g.data, vec![1.0, 1.0, 0.0, 0.0, 2.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn bytes_accounting_grows_with_graph_and_backward() {
+        let mut rng = Rng::new(6);
+        let mut tape = Tape::new();
+        let x = tape.leaf(randt(&mut rng, &[8, 16]), true);
+        let b0 = tape.bytes();
+        assert_eq!(b0, 8 * 16 * 4);
+        let w = tape.leaf(randt(&mut rng, &[16, 16]), true);
+        let y = tape.matmul(x, w);
+        let fwd = tape.bytes();
+        assert_eq!(fwd, b0 + 16 * 16 * 4 + 8 * 16 * 4);
+        tape.backward_from(y, Tensor::new(vec![8, 16], vec![1.0; 128]));
+        assert!(tape.bytes() > fwd, "grads must be counted");
+    }
+}

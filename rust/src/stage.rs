@@ -46,7 +46,12 @@ pub struct GlobalState {
 impl GlobalState {
     /// Random orthonormal U plus Gaussian T_fixed.
     pub fn init(cfg: &ConfigManifest, rng: &mut Rng) -> GlobalState {
-        let h = &cfg.hyper;
+        GlobalState::from_hyper(&cfg.hyper, rng)
+    }
+
+    /// [`GlobalState::init`] from bare dimensions — the manifest-free
+    /// path used by the native autodiff backend.
+    pub fn from_hyper(h: &crate::manifest::Hyper, rng: &mut Rng) -> GlobalState {
         let u = linalg::random_orthonormal(h.d, h.k, rng);
         let t_fixed = Tensor::new(
             vec![h.vocab, h.d],
@@ -73,8 +78,29 @@ impl StageState {
         global: &GlobalState,
         rng: &mut Rng,
     ) -> Result<StageState> {
-        let kind = cfg.stage_kind(stage);
-        let schema = cfg.schema(stage).to_vec();
+        StageState::from_schema(
+            cfg.schema(stage).to_vec(),
+            cfg.stage_kind(stage),
+            stage,
+            mode,
+            global,
+            rng,
+        )
+    }
+
+    /// [`StageState::init`] from an explicit schema — shared by the
+    /// manifest path above and the native backend (which derives the
+    /// schema from [`crate::manifest::Hyper::stage_schema`]). The RNG
+    /// draw order is the schema order, so manifest and native runs with
+    /// the same dimensions initialize identically.
+    pub fn from_schema(
+        schema: Vec<(String, Vec<usize>)>,
+        kind: &'static str,
+        stage: usize,
+        mode: Mode,
+        global: &GlobalState,
+        rng: &mut Rng,
+    ) -> Result<StageState> {
         let mut params = Vec::with_capacity(schema.len());
         for (name, shape) in &schema {
             let numel: usize = shape.iter().product();
@@ -83,6 +109,14 @@ impl StageState {
             } else if name.ends_with("_b") {
                 Tensor::zeros(shape)
             } else if name == "t_s" && mode == Mode::Subspace {
+                // consume the draws every other mode makes for this
+                // slot, so the init stream — and everything downstream
+                // of it: later parameters, the data-batch forks — stays
+                // aligned across modes. Cross-mode convergence
+                // comparisons (fig 2/6, `exp convergence-native`,
+                // examples/native_convergence.rs) then differ *only* in
+                // the boundary codec, not in init or batch order.
+                let _ = rng.normal_f32_vec(numel, INIT_STD);
                 linalg::project_rows(&global.t_fixed, &global.u)
             } else {
                 let mut t = Tensor::new(

@@ -1,0 +1,454 @@
+//! Finite-difference gradient checker for every native-backend op.
+//!
+//! For each tape op, over randomized shapes and seeds: build a scalar
+//! probe `L = Σ C ⊙ f(x)` (C a fixed random cotangent; f the op), get
+//! the tape's reverse-mode gradients, and compare input elements (all of
+//! them, or a random sample for big inputs) against central differences.
+//! The probe reduction accumulates in f64 so the check measures the op's
+//! gradient, not the reduction's rounding.
+//!
+//! Robustness: every element is probed at two step sizes (ε and ε/2).
+//! If the two estimates disagree, the loss is locally non-smooth there
+//! (a ReLU kink crossed by the perturbation) or drowned in f32 noise —
+//! the element is skipped rather than asserted, and the test separately
+//! bounds the skip fraction so a broken backward rule cannot hide behind
+//! wholesale skipping.
+//!
+//! A final end-to-end case checks a full micro pipeline stage
+//! (`nn::model::build_stage`, subspace mode) — boundary projection pair
+//! included — against finite differences through the composed graph.
+
+use protomodels::compress::Mode;
+use protomodels::manifest::Hyper;
+use protomodels::nn::model::{build_stage, high_rank_e, sinusoidal_pe, StageIo};
+use protomodels::nn::{AttnDims, Tape, Var};
+use protomodels::rng::Rng;
+use protomodels::stage::{GlobalState, StageState};
+use protomodels::tensor::{IntTensor, Tensor};
+
+fn randt(rng: &mut Rng, shape: &[usize], std: f32) -> Tensor {
+    Tensor::new(
+        shape.to_vec(),
+        rng.normal_f32_vec(shape.iter().product(), std),
+    )
+}
+
+/// Relative-plus-absolute tolerance check.
+fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    (a - b).abs() <= rtol * a.abs().max(b.abs()) + atol
+}
+
+/// Central difference of `probe` at two step sizes; `Some(grad)` when
+/// the estimates agree (locally smooth), `None` otherwise.
+fn two_scale_fd(
+    probe: &dyn Fn(f32) -> f64,
+    eps: f32,
+    atol: f64,
+) -> Option<f64> {
+    let full =
+        (probe(eps) - probe(-eps)) / (2.0 * eps as f64);
+    let half =
+        (probe(eps / 2.0) - probe(-eps / 2.0)) / (eps as f64);
+    if close(full, half, 5e-2, atol) {
+        Some(half)
+    } else {
+        None
+    }
+}
+
+/// Check the tape gradient of every input of `build` against central
+/// differences. `build` constructs the graph from leaves (same order as
+/// `inputs`) and returns the output node.
+fn check_op<F>(
+    name: &str,
+    seed: u64,
+    inputs: &[Tensor],
+    build: F,
+    eps: f32,
+    rtol: f64,
+    atol: f64,
+) where
+    F: Fn(&mut Tape, &[Var]) -> Var,
+{
+    // analytic pass
+    let mut tape = Tape::new();
+    let vars: Vec<Var> =
+        inputs.iter().map(|t| tape.leaf(t.clone(), true)).collect();
+    let out = build(&mut tape, &vars);
+    let out_shape = tape.value(out).shape.clone();
+    let mut crng = Rng::new(seed ^ 0xC07A);
+    let cot = if out_shape.is_empty() {
+        Tensor::scalar(1.0)
+    } else {
+        randt(&mut crng, &out_shape, 1.0)
+    };
+    tape.backward_from(out, cot.clone());
+    let analytic: Vec<Tensor> = vars
+        .iter()
+        .map(|v| {
+            tape.grad(*v)
+                .cloned()
+                .unwrap_or_else(|| Tensor::zeros(&tape.value(*v).shape))
+        })
+        .collect();
+
+    // f64 probe loss of a fresh forward pass
+    let loss = |xs: &[Tensor]| -> f64 {
+        let mut t = Tape::new();
+        let vs: Vec<Var> =
+            xs.iter().map(|x| t.leaf(x.clone(), true)).collect();
+        let o = build(&mut t, &vs);
+        t.value(o)
+            .data
+            .iter()
+            .zip(&cot.data)
+            .map(|(a, c)| *a as f64 * *c as f64)
+            .sum()
+    };
+
+    let mut irng = Rng::new(seed ^ 0x1D);
+    let (mut checked, mut skipped) = (0usize, 0usize);
+    for (wi, x) in inputs.iter().enumerate() {
+        let idxs: Vec<usize> = if x.numel() <= 64 {
+            (0..x.numel()).collect()
+        } else {
+            (0..48).map(|_| irng.below(x.numel())).collect()
+        };
+        for idx in idxs {
+            let probe = |delta: f32| -> f64 {
+                let mut xs = inputs.to_vec();
+                xs[wi].data[idx] += delta;
+                loss(&xs)
+            };
+            let Some(fd) = two_scale_fd(&probe, eps, atol) else {
+                skipped += 1;
+                continue;
+            };
+            checked += 1;
+            let an = analytic[wi].data[idx] as f64;
+            assert!(
+                close(fd, an, rtol, atol),
+                "{name} seed {seed}: input {wi} elem {idx}: fd {fd:.6e} vs \
+                 tape {an:.6e}"
+            );
+        }
+    }
+    assert!(
+        skipped * 3 <= checked,
+        "{name} seed {seed}: {skipped} skipped vs {checked} checked — \
+         too non-smooth to trust"
+    );
+}
+
+#[test]
+fn gradcheck_matmul() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed);
+        let (m, k, n) =
+            (2 + rng.below(6), 2 + rng.below(6), 2 + rng.below(6));
+        let inputs =
+            vec![randt(&mut rng, &[m, k], 1.0), randt(&mut rng, &[k, n], 1.0)];
+        check_op(
+            "matmul",
+            seed,
+            &inputs,
+            |t, v| t.matmul(v[0], v[1]),
+            1e-2,
+            1e-3,
+            1e-4,
+        );
+    }
+}
+
+#[test]
+fn gradcheck_matmul_nt() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed ^ 0x20);
+        let (m, k, n) =
+            (2 + rng.below(6), 2 + rng.below(6), 2 + rng.below(6));
+        let inputs =
+            vec![randt(&mut rng, &[m, k], 1.0), randt(&mut rng, &[n, k], 1.0)];
+        check_op(
+            "matmul_nt",
+            seed,
+            &inputs,
+            |t, v| t.matmul_nt(v[0], v[1]),
+            1e-2,
+            1e-3,
+            1e-4,
+        );
+    }
+}
+
+#[test]
+fn gradcheck_add_sub() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed ^ 0x30);
+        let shape = [1 + rng.below(5), 1 + rng.below(8)];
+        let inputs = vec![
+            randt(&mut rng, &shape, 1.0),
+            randt(&mut rng, &shape, 1.0),
+        ];
+        check_op(
+            "add",
+            seed,
+            &inputs,
+            |t, v| t.add(v[0], v[1]),
+            1e-2,
+            1e-3,
+            1e-5,
+        );
+        check_op(
+            "sub",
+            seed,
+            &inputs,
+            |t, v| t.sub(v[0], v[1]),
+            1e-2,
+            1e-3,
+            1e-5,
+        );
+    }
+}
+
+#[test]
+fn gradcheck_relu() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed ^ 0x40);
+        let shape = [2 + rng.below(4), 2 + rng.below(8)];
+        let mut x = randt(&mut rng, &shape, 1.0);
+        // keep inputs off the kink so no probe straddles it
+        for v in x.data.iter_mut() {
+            if v.abs() < 0.05 {
+                *v = 0.05 * if *v < 0.0 { -1.0 } else { 1.0 };
+            }
+        }
+        check_op("relu", seed, &[x], |t, v| t.relu(v[0]), 1e-2, 1e-3, 1e-5);
+    }
+}
+
+#[test]
+fn gradcheck_layer_norm() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed ^ 0x50);
+        let (r, d) = (1 + rng.below(5), 4 + rng.below(12));
+        let inputs = vec![
+            randt(&mut rng, &[r, d], 1.0),
+            randt(&mut rng, &[d], 0.5),
+            randt(&mut rng, &[d], 0.5),
+        ];
+        check_op(
+            "layer_norm",
+            seed,
+            &inputs,
+            |t, v| t.layer_norm(v[0], v[1], v[2]),
+            1e-2,
+            2e-2,
+            2e-3,
+        );
+    }
+}
+
+#[test]
+fn gradcheck_causal_attention() {
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(seed ^ 0x60);
+        let dims = AttnDims {
+            b: 1 + rng.below(2),
+            n: 2 + rng.below(4),
+            heads: [1, 2][rng.below(2)],
+            d: 8,
+        };
+        let m = dims.b * dims.n;
+        let inputs = vec![
+            randt(&mut rng, &[m, dims.d], 1.0),
+            randt(&mut rng, &[m, dims.d], 1.0),
+            randt(&mut rng, &[m, dims.d], 1.0),
+        ];
+        check_op(
+            "causal_attention",
+            seed,
+            &inputs,
+            move |t, v| t.causal_attention(v[0], v[1], v[2], dims),
+            1e-2,
+            2e-2,
+            2e-3,
+        );
+    }
+}
+
+#[test]
+fn gradcheck_embed() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed ^ 0x70);
+        let (vocab, d) = (4 + rng.below(8), 2 + rng.below(6));
+        let (b, n) = (1 + rng.below(2), 2 + rng.below(4));
+        let table = randt(&mut rng, &[vocab, d], 1.0);
+        let tok = IntTensor::new(
+            vec![b, n],
+            (0..b * n).map(|_| rng.below(vocab) as i32).collect(),
+        );
+        check_op(
+            "embed",
+            seed,
+            &[table],
+            move |t, v| t.embed(v[0], &tok),
+            1e-2,
+            1e-3,
+            1e-5,
+        );
+    }
+}
+
+#[test]
+fn gradcheck_cross_entropy() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed ^ 0x80);
+        let (rows, vocab) = (2 + rng.below(6), 4 + rng.below(12));
+        let logits = randt(&mut rng, &[rows, vocab], 2.0);
+        let targets = IntTensor::new(
+            vec![rows],
+            (0..rows).map(|_| rng.below(vocab) as i32).collect(),
+        );
+        check_op(
+            "cross_entropy",
+            seed,
+            &[logits],
+            move |t, v| t.cross_entropy(v[0], &targets),
+            1e-2,
+            2e-2,
+            1e-4,
+        );
+    }
+}
+
+/// End-to-end: a full subspace-mode pipeline stage (boundary
+/// reconstruction, transformer block with attention+ReLU MLP, final LN,
+/// head, cross-entropy) checked as one composed graph — catches wiring
+/// bugs no per-op check can.
+#[test]
+fn gradcheck_full_stage_composition() {
+    let h = Hyper {
+        d: 8,
+        d_ff: 16,
+        heads: 2,
+        layers: 2,
+        stages: 2,
+        n: 4,
+        vocab: 10,
+        k: 3,
+        b: 2,
+        blocks_per_stage: 1,
+        ratio: 8.0 / 3.0,
+        param_count: 0,
+    };
+    let m = h.b * h.n;
+    let (eps, rtol, atol) = (1e-2f32, 4e-2, 5e-4);
+    for seed in 0..3u64 {
+        let mut rng = Rng::new(seed ^ 0x90);
+        let global = GlobalState::from_hyper(&h, &mut rng);
+        let last = h.stages - 1;
+        let st = StageState::from_schema(
+            h.stage_schema(last),
+            "last",
+            last,
+            Mode::Subspace,
+            &global,
+            &mut rng,
+        )
+        .unwrap();
+        let tok = IntTensor::new(
+            vec![h.b, h.n],
+            (0..m).map(|_| rng.below(h.vocab) as i32).collect(),
+        );
+        let tgt = IntTensor::new(
+            vec![h.b, h.n],
+            (0..m).map(|_| rng.below(h.vocab) as i32).collect(),
+        );
+        let pe = sinusoidal_pe(h.n, h.d);
+        let e = high_rank_e(&h, Mode::Subspace, &pe, &global.t_fixed, &tok);
+        let xc = randt(&mut rng, &[m, h.k], 0.5);
+
+        let loss_of = |params: &[Tensor], xc: &Tensor| -> f64 {
+            let b = build_stage(
+                &h,
+                Mode::Subspace,
+                last,
+                params,
+                StageIo {
+                    u: &global.u,
+                    e: &e,
+                    tok: &tok,
+                    input: Some(xc),
+                    targets: Some(&tgt),
+                },
+            );
+            b.tape.value(b.output).item() as f64
+        };
+        // analytic gradients of the composed stage
+        let built = {
+            let mut b = build_stage(
+                &h,
+                Mode::Subspace,
+                last,
+                &st.params,
+                StageIo {
+                    u: &global.u,
+                    e: &e,
+                    tok: &tok,
+                    input: Some(&xc),
+                    targets: Some(&tgt),
+                },
+            );
+            b.tape.backward(b.output);
+            b
+        };
+        let (mut checked, mut skipped) = (0usize, 0usize);
+        // boundary-input gradient: every coefficient
+        let gin = built.tape.grad(built.input.unwrap()).unwrap();
+        for idx in 0..xc.numel() {
+            let probe = |delta: f32| -> f64 {
+                let mut p = xc.clone();
+                p.data[idx] += delta;
+                loss_of(&st.params, &p)
+            };
+            let Some(fd) = two_scale_fd(&probe, eps, atol) else {
+                skipped += 1;
+                continue;
+            };
+            checked += 1;
+            let an = gin.data[idx] as f64;
+            assert!(
+                close(fd, an, rtol, atol),
+                "seed {seed} xc[{idx}]: fd {fd:.5e} vs tape {an:.5e}"
+            );
+        }
+        // a sample of elements from every parameter
+        let mut irng = Rng::new(seed ^ 0xA0);
+        for (pi, p0) in st.params.iter().enumerate() {
+            let g = built.tape.grad(built.params[pi]).unwrap();
+            for _ in 0..6 {
+                let idx = irng.below(p0.numel());
+                let probe = |delta: f32| -> f64 {
+                    let mut plus = st.params.to_vec();
+                    plus[pi].data[idx] += delta;
+                    loss_of(&plus, &xc)
+                };
+                let Some(fd) = two_scale_fd(&probe, eps, atol) else {
+                    skipped += 1;
+                    continue;
+                };
+                checked += 1;
+                let an = g.data[idx] as f64;
+                assert!(
+                    close(fd, an, rtol, atol),
+                    "seed {seed} param {pi} elem {idx}: fd {fd:.5e} vs \
+                     tape {an:.5e}"
+                );
+            }
+        }
+        assert!(
+            skipped * 2 <= checked,
+            "seed {seed}: {skipped} skipped vs {checked} checked"
+        );
+    }
+}

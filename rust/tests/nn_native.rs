@@ -1,0 +1,203 @@
+//! Integration tests of the native autodiff backend: real training on
+//! the tiny config, end to end through the pipeline, the boundary
+//! codecs, the optimizer closure rules, and the coordinator's Backend
+//! facade. Entirely artifact-free (no manifest, no PJRT).
+
+use protomodels::compress::{wire_bytes, Mode};
+use protomodels::coordinator::{Backend, BackendKind, PipelineConfig};
+use protomodels::data::{Corpus, CorpusKind};
+use protomodels::manifest::Hyper;
+use protomodels::netsim::{LinkSpec, Topology};
+use protomodels::nn::{NativePipeline, Optim};
+use protomodels::rng::Rng;
+
+fn pipe_for(
+    mode: Mode,
+    seed: u64,
+    steps: usize,
+    grassmann: usize,
+) -> NativePipeline {
+    let h = Hyper::tiny_native();
+    let mut rng = Rng::new(seed);
+    let topo =
+        Topology::uniform(h.stages, LinkSpec::internet_80m(), &mut rng);
+    let pcfg = PipelineConfig {
+        mode,
+        microbatches: 2,
+        grassmann_interval: grassmann,
+        lr: 1e-2,
+        warmup_steps: 3,
+        total_steps: steps,
+        seed,
+        ..Default::default()
+    };
+    NativePipeline::new(h, topo, pcfg, Optim::AdamW).unwrap()
+}
+
+fn corpus() -> Corpus {
+    Corpus::synthetic(CorpusKind::Wiki, Hyper::tiny_native().vocab, 60_000, 5)
+}
+
+#[test]
+fn native_training_reduces_loss() {
+    let h = Hyper::tiny_native();
+    let c = corpus();
+    let mut pipe = pipe_for(Mode::Subspace, 17, 12, 0);
+    let mut losses = Vec::new();
+    for _ in 0..12 {
+        let s = pipe.train_step(|r| c.train_batch(h.b, h.n, r)).unwrap();
+        assert!(s.loss.is_finite(), "loss diverged: {}", s.loss);
+        assert!(s.sim_seconds > 0.0);
+        losses.push(s.loss);
+    }
+    let first = losses[0];
+    let tail = losses[9..].iter().sum::<f64>() / 3.0;
+    // port-measured drop ≈ 0.36 after 12 steps; 0.2 leaves ~2x headroom
+    assert!(
+        tail < first - 0.2,
+        "no learning: first {first:.4}, last-3 mean {tail:.4}"
+    );
+    let val = pipe.eval(2, |r| c.val_batch(h.b, h.n, r)).unwrap();
+    assert!(val.is_finite() && val > 0.0);
+}
+
+#[test]
+fn native_runs_are_bitwise_reproducible() {
+    let h = Hyper::tiny_native();
+    let c = corpus();
+    let run = |seed: u64| -> Vec<f64> {
+        let mut pipe = pipe_for(Mode::Subspace, seed, 3, 0);
+        (0..3)
+            .map(|_| {
+                pipe.train_step(|r| c.train_batch(h.b, h.n, r))
+                    .unwrap()
+                    .loss
+            })
+            .collect()
+    };
+    let a = run(17);
+    let b = run(17);
+    assert_eq!(a, b, "same seed must reproduce losses bit for bit");
+    let c2 = run(18);
+    assert_ne!(a, c2, "different seeds must diverge");
+}
+
+#[test]
+fn subspace_closure_holds_during_training() {
+    // constrained rows stay in S through optimizer steps AND through a
+    // Grassmann subspace update + re-projection
+    let h = Hyper::tiny_native();
+    let c = corpus();
+    let mut pipe = pipe_for(Mode::Subspace, 7, 6, 3);
+    for step in 0..6 {
+        pipe.train_step(|r| c.train_batch(h.b, h.n, r)).unwrap();
+        let leak = pipe.subspace_leak();
+        assert!(leak < 1e-4, "step {step}: leak {leak:.3e}");
+    }
+    assert!(pipe.clock > 0.0);
+}
+
+#[test]
+fn backend_facade_drives_native_pipeline() {
+    let h = Hyper::tiny_native();
+    let c = corpus();
+    let mut backend = Backend::Native(Box::new(pipe_for(Mode::Raw, 3, 2, 0)));
+    assert_eq!(backend.kind(), BackendKind::Native);
+    assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+    assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+    assert!(BackendKind::parse("tpu").is_err());
+    let s1 = backend
+        .train_step(|r| c.train_batch(h.b, h.n, r))
+        .unwrap();
+    let s2 = backend
+        .train_step(|r| c.train_batch(h.b, h.n, r))
+        .unwrap();
+    assert_eq!(s2.step, 2);
+    assert!(s1.loss.is_finite() && s2.loss.is_finite());
+    assert!(backend.clock() > 0.0);
+    let val = backend.eval(1, |r| c.val_batch(h.b, h.n, r)).unwrap();
+    assert!(val.is_finite());
+}
+
+#[test]
+fn boundary_bytes_deliver_the_claimed_compression() {
+    let h = Hyper::tiny_native();
+    let c = corpus();
+    let mut sub = pipe_for(Mode::Subspace, 9, 1, 0);
+    let mut raw = pipe_for(Mode::Raw, 9, 1, 0);
+    let rb = raw.boundary_bytes();
+    let sb = sub.boundary_bytes();
+    assert!(
+        rb as f64 / sb as f64 >= 10.0,
+        "compression {rb}/{sb} below the 10x bar"
+    );
+    // StepStats wire bytes = microbatches × 2 directions × (stages−1)
+    // boundaries × payload
+    let m = 2 * 2 * (h.stages - 1);
+    let s = sub.train_step(|r| c.train_batch(h.b, h.n, r)).unwrap();
+    assert_eq!(s.wire_bytes, (m * sb) as u64);
+    let r = raw.train_step(|r| c.train_batch(h.b, h.n, r)).unwrap();
+    assert_eq!(r.wire_bytes, (m * rb) as u64);
+    // and the accounting matches the analytic wire model
+    assert_eq!(sb, wire_bytes(Mode::Subspace, h.b, h.n, h.d, h.k, h.ratio));
+    assert_eq!(rb, wire_bytes(Mode::Raw, h.b, h.n, h.d, h.k, h.ratio));
+}
+
+#[test]
+fn every_mode_trains_one_finite_step() {
+    let h = Hyper::tiny_native();
+    let c = corpus();
+    for mode in [
+        Mode::Subspace,
+        Mode::Raw,
+        Mode::TopK,
+        Mode::Quant,
+        Mode::PowerLR,
+        Mode::NoFixed,
+    ] {
+        let mut pipe = pipe_for(mode, 21, 1, 0);
+        let s = pipe.train_step(|r| c.train_batch(h.b, h.n, r)).unwrap();
+        assert!(
+            s.loss.is_finite() && s.loss > 0.0,
+            "{mode:?} loss {}",
+            s.loss
+        );
+    }
+}
+
+#[test]
+fn sgd_also_trains_and_keeps_closure() {
+    let h = Hyper::tiny_native();
+    let c = corpus();
+    let mut rng = Rng::new(4);
+    let topo =
+        Topology::uniform(h.stages, LinkSpec::internet_80m(), &mut rng);
+    let pcfg = PipelineConfig {
+        mode: Mode::Subspace,
+        microbatches: 2,
+        grassmann_interval: 0,
+        lr: 0.1,
+        warmup_steps: 2,
+        total_steps: 8,
+        seed: 4,
+        ..Default::default()
+    };
+    let mut pipe = NativePipeline::new(
+        h.clone(),
+        topo,
+        pcfg,
+        Optim::Sgd { momentum: 0.9 },
+    )
+    .unwrap();
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for i in 0..8 {
+        let s = pipe.train_step(|r| c.train_batch(h.b, h.n, r)).unwrap();
+        if i == 0 {
+            first = s.loss;
+        }
+        last = s.loss;
+    }
+    assert!(last < first, "sgd did not learn: {first:.4} -> {last:.4}");
+    assert!(pipe.subspace_leak() < 1e-4);
+}

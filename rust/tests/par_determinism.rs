@@ -145,6 +145,40 @@ fn sim_grid_csvs_identical_across_pool_sizes() {
 }
 
 #[test]
+fn convergence_native_csvs_identical_across_pool_sizes() {
+    // the native autodiff backend trains real models inside pool cells:
+    // tape ops are serial and the matmul kernels are thread-count
+    // bit-stable, so the full training curves — not just summary rows —
+    // must be byte-identical at any pool width
+    let (serial, parallel) =
+        run_twice("convergence-native", None, "convergence_native");
+    assert!(
+        serial.contains_key("fig_native_convergence.csv"),
+        "convergence-native wrote no summary CSV: {:?}",
+        serial.keys().collect::<Vec<_>>()
+    );
+    assert!(
+        serial
+            .keys()
+            .any(|k| k.starts_with("fig_native_convergence/")),
+        "convergence-native wrote no per-mode curves"
+    );
+    assert_eq!(
+        serial, parallel,
+        "convergence-native output differs between --threads 1 and N"
+    );
+    // sanity: the summary rows carry real losses, not placeholders
+    let csv =
+        String::from_utf8(serial["fig_native_convergence.csv"].clone())
+            .unwrap();
+    for line in csv.lines().skip(1) {
+        let cols: Vec<&str> = line.split(',').collect();
+        let loss: f64 = cols[1].parse().unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "bad loss row: {line}");
+    }
+}
+
+#[test]
 fn churn_sweep_csvs_identical_across_pool_sizes() {
     let (serial, parallel) = run_twice("churn-sweep", None, "churn_sweep");
     assert!(serial.contains_key("fig_churn_sweep.csv"));

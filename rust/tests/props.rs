@@ -28,6 +28,74 @@ fn randt(rng: &mut Rng, shape: &[usize]) -> Tensor {
     )
 }
 
+#[test]
+fn prop_quant_roundtrip_within_one_step() {
+    // int8 symmetric quantization: every element reconstructs within
+    // half a quantization step (scale = max|x| / 127), across random
+    // shapes and magnitude scales spanning six decades
+    for seed in 0..300u64 {
+        let mut rng = Rng::new(seed ^ 0x0111);
+        let shape = vec![1 + rng.below(8), 1 + rng.below(96)];
+        let amp = 10f64.powf(rng.uniform() * 6.0 - 3.0) as f32;
+        let mut t = randt(&mut rng, &shape);
+        for x in t.data.iter_mut() {
+            *x *= amp;
+        }
+        if seed % 17 == 0 {
+            // degenerate all-zeros tensor must round-trip exactly
+            t = Tensor::zeros(&shape);
+        }
+        let f = encode(&t, Mode::Quant, 1.0);
+        let d = decode(&f);
+        let step = t.max_abs() / 127.0;
+        for (i, (a, b)) in t.data.iter().zip(&d.data).enumerate() {
+            assert!(
+                (a - b).abs() <= 0.5 * step * (1.0 + 1e-5) + f32::MIN_POSITIVE,
+                "seed {seed} elem {i}: {a} -> {b} (step {step})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_topk_exact_on_kept_zero_elsewhere() {
+    // top-k: every surviving element is bitwise-exact, everything else
+    // is exactly zero, at most `keep` survivors, and no dropped element
+    // outweighs a kept one
+    for seed in 0..300u64 {
+        let mut rng = Rng::new(seed ^ 0x707B);
+        let shape = vec![1 + rng.below(6), 1 + rng.below(64)];
+        let ratio = [2.0, 4.0, 8.0, 16.0][rng.below(4)];
+        let t = randt(&mut rng, &shape);
+        let keep = topk_keep(t.numel(), ratio).min(t.numel());
+        let f = encode(&t, Mode::TopK, ratio);
+        let d = decode(&f);
+        let mut kept = 0usize;
+        let mut min_kept = f32::INFINITY;
+        let mut max_dropped = 0.0f32;
+        for (i, (a, b)) in t.data.iter().zip(&d.data).enumerate() {
+            if *b != 0.0 {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "seed {seed} elem {i} not exact"
+                );
+                kept += 1;
+                min_kept = min_kept.min(a.abs());
+            } else {
+                max_dropped = max_dropped.max(a.abs());
+            }
+        }
+        assert!(kept <= keep, "seed {seed}: {kept} survivors > keep {keep}");
+        if kept > 0 {
+            assert!(
+                max_dropped <= min_kept,
+                "seed {seed}: dropped {max_dropped} outweighs kept {min_kept}"
+            );
+        }
+    }
+}
+
 fn rand_costs(rng: &mut Rng) -> StepCosts {
     let p = 2 + rng.below(6);
     let m = 1 + rng.below(12);
