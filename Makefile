@@ -38,7 +38,7 @@ bench-check: bench
 # the gate inherits it.
 define BASELINE_PY
 import json, re
-for suite in ("linalg", "pipeline", "nn"):
+for suite in ("linalg", "pipeline", "nn", "transport"):
     cur = json.load(open("BENCH_%s.json" % suite))
     # drop machine-dependent ..._threadsN entries, but keep ..._threads1
     # (produced on every machine and gated by the committed baseline)
@@ -66,4 +66,4 @@ churn-sweep: build
 clean:
 	cargo clean
 	rm -rf rust/artifacts artifacts results BENCH_linalg.json \
-	       BENCH_pipeline.json BENCH_nn.json
+	       BENCH_pipeline.json BENCH_nn.json BENCH_transport.json

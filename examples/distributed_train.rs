@@ -1,0 +1,182 @@
+//! Distributed training smoke (ISSUE 5): the native pipeline over REAL
+//! transports, with the bitwise-parity and wire-size contracts asserted.
+//!
+//! Three runs of the tiny 4-stage subspace config (Grassmann updates
+//! on, so the U-basis broadcast path is exercised too):
+//!
+//!   1. single-process `NativePipeline`, 200 steps — the reference;
+//!   2. distributed over the **channel** transport (4 workers on
+//!      threads, framed `mpsc`), 200 steps — per-step losses must be
+//!      **bitwise identical** to the reference: every worker replays
+//!      the same seeded init/data streams and the wire is
+//!      bit-transparent, so any divergence is a protocol bug;
+//!   3. distributed over **TCP loopback** (real sockets, one OS thread
+//!      per stage), 40 steps — the same bitwise contract holds: thread
+//!      and socket scheduling may reorder wall-clock, never arithmetic.
+//!
+//! Plus a 40-step raw-mode channel run for the wire claim: subspace
+//! boundary frames must be ≥ 10x smaller than raw on the wire, with
+//! every frame's payload equal to `compress::wire_bytes` (checked
+//! inside the workers on every frame, and re-checked here against the
+//! `memory::transport_frame_bytes` model).
+//!
+//!     cargo run --release --example distributed_train
+
+use protomodels::compress::{wire_bytes, Mode};
+use protomodels::coordinator::PipelineConfig;
+use protomodels::data::CorpusKind;
+use protomodels::manifest::Hyper;
+use protomodels::memory;
+use protomodels::netsim::{LinkSpec, Topology};
+use protomodels::nn::{NativePipeline, Optim};
+use protomodels::rng::Rng;
+use protomodels::transport::{run_local, TransportKind, WorkerSpec};
+
+const STEPS: usize = 200;
+const TCP_STEPS: usize = 40;
+const SEED: u64 = 5;
+
+fn spec(mode: Mode, steps: usize) -> WorkerSpec {
+    WorkerSpec {
+        h: Hyper::tiny_native(),
+        cfg: PipelineConfig {
+            mode,
+            microbatches: 2,
+            // exercise the Grassmann U-broadcast over the wire
+            grassmann_interval: 50,
+            lr: 1e-2,
+            warmup_steps: 6,
+            total_steps: steps,
+            seed: SEED,
+            ..Default::default()
+        },
+        optim: Optim::AdamW,
+        steps,
+        corpus_kind: CorpusKind::Wiki,
+        corpus_tokens: 200_000,
+    }
+}
+
+/// Reference: the single-process native backend under the same spec.
+fn single_process_losses(s: &WorkerSpec) -> Vec<f64> {
+    let h = s.h.clone();
+    let mut rng = Rng::new(SEED);
+    let topo =
+        Topology::uniform(h.stages, LinkSpec::internet_80m(), &mut rng);
+    let corpus = s.corpus();
+    let mut pipe =
+        NativePipeline::new(h.clone(), topo, s.cfg.clone(), s.optim)
+            .expect("native pipeline");
+    (0..s.steps)
+        .map(|_| {
+            pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))
+                .expect("train step")
+                .loss
+        })
+        .collect()
+}
+
+fn assert_bitwise(label: &str, reference: &[f64], got: &[f64]) {
+    assert_eq!(
+        reference.len(),
+        got.len(),
+        "{label}: {} steps vs reference {}",
+        got.len(),
+        reference.len()
+    );
+    for (i, (a, b)) in reference.iter().zip(got).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{label}: loss diverged at step {} ({a} vs {b})",
+            i + 1
+        );
+    }
+}
+
+fn main() {
+    let sub = spec(Mode::Subspace, STEPS);
+    let h = sub.h.clone();
+    println!(
+        "distributed smoke: d={} k={} stages={} microbatches={} — \
+         {STEPS} channel steps, {TCP_STEPS} tcp steps\n",
+        h.d, h.k, h.stages, sub.cfg.microbatches
+    );
+
+    // ---- reference curve (single process)
+    let reference = single_process_losses(&sub);
+
+    // ---- channel transport: full-length bitwise parity
+    let chan = run_local(&sub, TransportKind::Channel).expect("channel run");
+    assert_bitwise("channel", &reference, &chan.losses);
+    println!(
+        "channel: {} steps bitwise-identical to single-process \
+         (final loss {:.4}, mean step {:.2} ms)",
+        STEPS,
+        chan.losses.last().unwrap(),
+        chan.mean_step_seconds() * 1e3
+    );
+
+    // ---- TCP loopback: real sockets, same arithmetic. Keep the
+    // 200-step lr schedule (cfg.total_steps) and run only the first 40
+    // steps, so the curve is a strict prefix of the reference.
+    let mut tcp_spec = spec(Mode::Subspace, STEPS);
+    tcp_spec.steps = TCP_STEPS;
+    let tcp = run_local(&tcp_spec, TransportKind::Tcp).expect("tcp run");
+    assert_bitwise("tcp", &reference[..TCP_STEPS], &tcp.losses);
+    println!(
+        "tcp:     {} steps bitwise-identical over loopback sockets \
+         (mean step {:.2} ms)",
+        TCP_STEPS,
+        tcp.mean_step_seconds() * 1e3
+    );
+
+    // ---- wire-size claim: subspace frames ~10x smaller than raw
+    let raw_spec = spec(Mode::Raw, TCP_STEPS);
+    let raw = run_local(&raw_spec, TransportKind::Channel).expect("raw run");
+    // per-frame payloads match the analytic wire accounting exactly
+    // (workers hard-assert this on every received frame; re-derive here)
+    let sub_frame = tcp.frame_payload_bytes;
+    let raw_frame = raw.frame_payload_bytes;
+    assert_eq!(
+        sub_frame,
+        wire_bytes(Mode::Subspace, h.b, h.n, h.d, h.k, h.ratio),
+        "subspace frame payload != compress::wire_bytes"
+    );
+    assert_eq!(
+        raw_frame,
+        wire_bytes(Mode::Raw, h.b, h.n, h.d, h.k, h.ratio),
+        "raw frame payload != compress::wire_bytes"
+    );
+    assert_eq!(
+        memory::transport_frame_bytes(&h, Mode::Subspace),
+        sub_frame + protomodels::transport::HEADER_LEN,
+        "memory model disagrees with the frame layout"
+    );
+    let ratio = raw_frame as f64 / sub_frame as f64;
+    assert!(
+        ratio >= 10.0,
+        "subspace frames only {ratio:.1}x smaller than raw (need >= 10x)"
+    );
+    // and the totals agree: equal step counts, equal frame counts,
+    // payload totals in exactly the per-frame ratio
+    assert_eq!(tcp.frames, raw.frames, "frame counts must match");
+    let total_ratio =
+        raw.boundary_payload_bytes as f64 / tcp.boundary_payload_bytes as f64;
+    assert!(
+        (total_ratio - ratio).abs() / ratio < 1e-9,
+        "total payload ratio {total_ratio:.3} != per-frame ratio {ratio:.3}"
+    );
+
+    println!(
+        "wire:    subspace {sub_frame} B/frame vs raw {raw_frame} B/frame \
+         -> {ratio:.1}x smaller on the wire ({} frames, {} payload B \
+         total at {} steps)",
+        tcp.frames, tcp.boundary_payload_bytes, TCP_STEPS
+    );
+    println!(
+        "\nok: the pipeline trains over real framed transports with a \
+         bitwise-identical loss curve and a {ratio:.1}x subspace wire \
+         reduction"
+    );
+}

@@ -140,9 +140,9 @@ pub fn load_suite_means(path: &Path) -> Result<BTreeMap<String, f64>> {
     Ok(means)
 }
 
-/// Compare the `BENCH_{linalg,pipeline}.json` under `current_dir`
-/// (written by `bench --json`) against `{linalg,pipeline}.json` under
-/// `baseline_dir` (the committed `BENCH_baseline/`). An entry fails
+/// Compare the `BENCH_{linalg,pipeline,nn,transport}.json` under
+/// `current_dir` (written by `bench --json`) against the matching
+/// `{suite}.json` under `baseline_dir` (the committed `BENCH_baseline/`). An entry fails
 /// when its mean wall time grew beyond `max_regress` (0.25 = +25%)
 /// over the baseline; entries without a baseline (new benches,
 /// machine-dependent names like `..._threadsN`) are skipped with a
@@ -158,6 +158,7 @@ pub fn check_regressions(
         ("BENCH_linalg.json", "linalg.json"),
         ("BENCH_pipeline.json", "pipeline.json"),
         ("BENCH_nn.json", "nn.json"),
+        ("BENCH_transport.json", "transport.json"),
     ];
     let mut report =
         RegressionCheck { checked: 0, skipped: 0, failures: Vec::new() };
@@ -364,6 +365,8 @@ mod tests {
         std::fs::write(base.join("pipeline.json"), suite(&[])).unwrap();
         std::fs::write(cur.join("BENCH_nn.json"), suite(&[])).unwrap();
         std::fs::write(base.join("nn.json"), suite(&[])).unwrap();
+        std::fs::write(cur.join("BENCH_transport.json"), suite(&[])).unwrap();
+        std::fs::write(base.join("transport.json"), suite(&[])).unwrap();
 
         let rep = check_regressions(&cur, &base, 0.25).unwrap();
         assert_eq!(rep.checked, 2, "a and b compared");

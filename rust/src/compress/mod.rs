@@ -64,6 +64,34 @@ impl Mode {
     pub fn is_lossy(&self) -> bool {
         matches!(self, Mode::TopK | Mode::Quant | Mode::PowerLR)
     }
+
+    /// Stable one-byte identifier of this mode in the framed wire
+    /// protocol's codec field (DESIGN.md §11). The numbering is part of
+    /// the wire format: never reorder, only append.
+    pub fn wire_tag(self) -> u8 {
+        match self {
+            Mode::Subspace => 0,
+            Mode::Raw => 1,
+            Mode::TopK => 2,
+            Mode::Quant => 3,
+            Mode::PowerLR => 4,
+            Mode::NoFixed => 5,
+        }
+    }
+
+    /// Inverse of [`Mode::wire_tag`]; `None` for unknown bytes (frames
+    /// from a newer peer are rejected, not misinterpreted).
+    pub fn from_wire_tag(tag: u8) -> Option<Mode> {
+        Some(match tag {
+            0 => Mode::Subspace,
+            1 => Mode::Raw,
+            2 => Mode::TopK,
+            3 => Mode::Quant,
+            4 => Mode::PowerLR,
+            5 => Mode::NoFixed,
+            _ => return None,
+        })
+    }
 }
 
 /// Elements kept by top-k so (value,index) pairs hit the target byte
@@ -238,12 +266,14 @@ pub fn encode(t: &Tensor, mode: Mode, ratio: f64) -> Frame {
 }
 
 /// Encode-then-decode one boundary tensor under `mode`'s codec,
-/// returning the reconstruction the receiving stage consumes plus the
-/// frame's wire bytes — the native backend's stage-boundary hook.
+/// returning the reconstruction plus the frame's wire bytes — an
+/// `encode`∘`decode` convenience for tests and external callers.
 /// Lossless for the dense modes (subspace payloads are already the
-/// (b·n, k) coefficients), genuinely lossy for top-k / int8. PowerLR's
-/// rank-limited reconstruction happens in the caller, which owns the
-/// deterministic sketch RNG; its frame here would be dense.
+/// (b·n, k) coefficients), genuinely lossy for top-k / int8. The
+/// backends themselves ship through `nn::encode_boundary` (the shared
+/// single-process/distributed hook, which also owns PowerLR's
+/// deterministic sketch RNG); this helper stays byte-identical to it
+/// for every non-PowerLR mode by construction.
 pub fn roundtrip(t: &Tensor, mode: Mode, ratio: f64) -> (Tensor, usize) {
     let f = encode(t, mode, ratio);
     (decode(&f), f.wire_len())
@@ -369,5 +399,24 @@ mod tests {
             assert_eq!(Mode::parse(m.as_str()).unwrap(), m);
         }
         assert!(Mode::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn wire_tags_are_stable_and_invertible() {
+        // the numbering is a wire-format contract (DESIGN.md §11)
+        let all = [
+            (Mode::Subspace, 0u8),
+            (Mode::Raw, 1),
+            (Mode::TopK, 2),
+            (Mode::Quant, 3),
+            (Mode::PowerLR, 4),
+            (Mode::NoFixed, 5),
+        ];
+        for (m, tag) in all {
+            assert_eq!(m.wire_tag(), tag);
+            assert_eq!(Mode::from_wire_tag(tag), Some(m));
+        }
+        assert_eq!(Mode::from_wire_tag(6), None);
+        assert_eq!(Mode::from_wire_tag(255), None);
     }
 }

@@ -1351,6 +1351,113 @@ pub fn error_accumulation(opts: &ExpOpts) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// transport-report: measured vs predicted distributed step wall-clock
+// ---------------------------------------------------------------------------
+
+/// Measured-vs-predicted wall-clock for the distributed transport
+/// (DESIGN.md §11): run the tiny preset distributed over both transport
+/// backends and compare the measured mean step wall-clock against the
+/// cost model's prediction. The predictor is a single-process native
+/// run priced with `TimeModel::Measured` (real per-stage host compute)
+/// over a loopback-class `LinkSpec`, composed once by the analytic
+/// GPipe recurrence and once by the discrete-event engine — the same
+/// measured-vs-predicted discipline `sim-grid` applies to virtual time,
+/// applied to real wall-clock. Emits `fig_transport_report.csv`; no
+/// thresholds are asserted here (absolute wall-clock is
+/// machine-dependent), the smoke example checks structure instead.
+pub fn transport_report(opts: &ExpOpts) -> Result<()> {
+    use crate::netsim::GBPS;
+    use crate::nn::{NativePipeline, Optim};
+    use crate::transport::{run_local, TransportKind, WorkerSpec};
+
+    let steps = opts.steps_or(30, 8);
+    let h = Hyper::tiny_native();
+    let mk_cfg = |tm: TimeModel, event_sim: bool| PipelineConfig {
+        mode: Mode::Subspace,
+        microbatches: 2,
+        grassmann_interval: 0,
+        lr: 1e-2,
+        warmup_steps: (steps / 20).max(3),
+        total_steps: steps,
+        time_model: tm,
+        seed: opts.seed,
+        event_sim,
+        ..Default::default()
+    };
+    let spec = WorkerSpec {
+        h: h.clone(),
+        cfg: mk_cfg(TimeModel::default_analytic(), false),
+        optim: Optim::AdamW,
+        steps,
+        corpus_kind: CorpusKind::Wiki,
+        corpus_tokens: 100_000,
+    };
+
+    // predictions: per-stage compute measured in this process, boundary
+    // transfers priced on a loopback-class link, composed by the gpipe
+    // recurrence and by the event engine (identical for gpipe by the
+    // sim parity contract — both are emitted to show it holds on
+    // measured costs too)
+    let loopback = LinkSpec {
+        bandwidth_bps: 10.0 * GBPS,
+        latency_s: 50e-6,
+        jitter_frac: 0.0,
+    };
+    let mut predicted = [0.0f64; 2];
+    for (i, event_sim) in [false, true].into_iter().enumerate() {
+        let mut rng = Rng::new(opts.seed);
+        let topo = Topology::uniform(h.stages, loopback, &mut rng);
+        let mut pipe = NativePipeline::new(
+            h.clone(),
+            topo,
+            mk_cfg(TimeModel::Measured, event_sim),
+            Optim::AdamW,
+        )?;
+        let corpus = spec.corpus();
+        let mut sum = 0.0;
+        for _ in 0..steps {
+            sum += pipe
+                .train_step(|r| corpus.train_batch(h.b, h.n, r))?
+                .sim_seconds;
+        }
+        predicted[i] = sum / steps as f64;
+    }
+
+    let mut csv = CsvWriter::create(
+        opts.out_dir.join("fig_transport_report.csv"),
+        &[
+            "transport",
+            "steps",
+            "measured_step_s",
+            "predicted_gpipe_s",
+            "predicted_event_s",
+            "measured_over_predicted",
+        ],
+    )?;
+    for kind in [TransportKind::Channel, TransportKind::Tcp] {
+        let rep = run_local(&spec, kind)?;
+        let measured = rep.mean_step_seconds();
+        csv.row(&[
+            kind.as_str().into(),
+            steps.to_string(),
+            format!("{measured:.6}"),
+            format!("{:.6}", predicted[0]),
+            format!("{:.6}", predicted[1]),
+            format!("{:.3}", measured / predicted[0].max(1e-12)),
+        ])?;
+        eprintln!(
+            "[transport-report] {}: measured {measured:.4}s/step vs \
+             predicted {:.4}s (gpipe) / {:.4}s (event)",
+            kind.as_str(),
+            predicted[0],
+            predicted[1]
+        );
+    }
+    csv.finish()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // dispatcher
 // ---------------------------------------------------------------------------
 
@@ -1376,6 +1483,7 @@ pub const ALL: &[&str] = &[
     "memory-seqlen",
     "memory-workers",
     "error-accumulation",
+    "transport-report",
 ];
 
 /// Run one experiment driver by name (`"all"` runs the full suite).
@@ -1403,6 +1511,7 @@ pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
         "memory-seqlen" => memory_seqlen(opts),
         "memory-workers" => memory_workers(opts),
         "error-accumulation" => error_accumulation(opts),
+        "transport-report" => transport_report(opts),
         "all" => {
             for e in ALL {
                 eprintln!("=== exp {e} ===");

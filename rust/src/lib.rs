@@ -34,3 +34,4 @@ pub mod sim;
 pub mod stage;
 pub mod tensor;
 pub mod timemodel;
+pub mod transport;

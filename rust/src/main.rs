@@ -21,6 +21,7 @@ use protomodels::par;
 use protomodels::rng::Rng;
 use protomodels::sim::{simulate_swarm, ChurnSpec, Schedule, SwarmSpec};
 use protomodels::timemodel::{SlowdownProfile, TimeModel};
+use protomodels::transport::{self, TransportKind, WorkerSpec};
 
 fn usage() -> ! {
     eprintln!(
@@ -37,7 +38,12 @@ USAGE:
                       [--schedule gpipe|1f1b] [--sim]
                       [--replicas R] [--dp-mode subspace|raw|topk|quant]
                       [--dp-bandwidth 80mbps] [--hetero 1,1,2]
+                      [--transport channel|tcp]  (native backend only)
                       [--artifacts artifacts] [--out results] [--label NAME]
+  protomodels serve   --stage I [--config tiny] [--mode subspace] [--steps 200]
+                      [--microbatches 4] [--seed 17] [--optim adamw]
+                      [--schedule gpipe|1f1b] [--grassmann 0]
+                      [--host 127.0.0.1] [--port-base 7070]
   protomodels sim     [--preset base|small] [--replicas 4] [--steps 5]
                       [--bandwidth 80mbps] [--dp-bandwidth 80mbps]
                       [--mode subspace] [--dp-mode subspace]
@@ -65,6 +71,15 @@ rejoins after --downtime and pays a dp-mode-priced state sync), and
 --schedule picks the pipeline schedule the event engine executes.
 `train --schedule 1f1b` / `train --sim` route the coordinator's step
 timing through the same engine.
+
+`train --backend native --transport tcp|channel` runs the SAME training
+distributed: one worker per pipeline stage, boundary tensors moving as
+framed codec payloads over real sockets (tcp, loopback) or in-process
+channels — the loss curve is bitwise identical to the single-process
+run (DESIGN.md §11). `serve --stage I` runs one stage as a standalone
+TCP worker process: launch one per stage with identical flags (stage I
+listens on port-base+I; launch order is free) and stage 0 prints the
+curve.
 
 `train --backend native` trains on the in-process autodiff backend
 (DESIGN.md §10): artifact-free and PJRT-free, losses computed natively,
@@ -98,16 +113,14 @@ fn make_topo(flags: &Flags, stages: usize, rng: &mut Rng) -> Result<Topology> {
     Ok(Topology::uniform(stages, bandwidth_spec(flags, "bandwidth", "80mbps")?, rng))
 }
 
-/// `train --backend native`: the in-process autodiff backend —
-/// artifact-free, so config names resolve to built-in dimension presets
-/// instead of the AOT manifest.
-fn train_native(flags: &Flags) -> Result<()> {
+/// Build the native backend's [`WorkerSpec`] from CLI flags — shared by
+/// `train --backend native` (single-process and `--transport`
+/// distributed) and by `serve --stage`, so a leader and its standalone
+/// workers derive identical specs (the transport handshake enforces it).
+fn native_spec(flags: &Flags) -> Result<WorkerSpec> {
     use protomodels::manifest::Hyper;
-    use protomodels::nn::{NativePipeline, Optim};
+    use protomodels::nn::Optim;
 
-    if flags.usize("replicas", 1)? > 1 {
-        bail!("--backend native trains a single pipeline (no --replicas yet)");
-    }
     let config = flags.str("config", "tiny");
     let h = match config.as_str() {
         "tiny" => Hyper::tiny_native(),
@@ -125,7 +138,7 @@ fn train_native(flags: &Flags) -> Result<()> {
     let schedule = Schedule::parse(&flags.str("schedule", "gpipe"))
         .ok_or_else(|| anyhow::anyhow!("bad --schedule"))?;
     let optim = Optim::parse(&flags.str("optim", "adamw"))?;
-    let pcfg = PipelineConfig {
+    let cfg = PipelineConfig {
         mode,
         microbatches: flags.usize("microbatches", 4)?,
         grassmann_interval: flags.usize("grassmann", 0)?,
@@ -140,7 +153,96 @@ fn train_native(flags: &Flags) -> Result<()> {
     };
     let corpus_kind = CorpusKind::parse(&flags.str("corpus", "wiki"))
         .ok_or_else(|| anyhow::anyhow!("bad --corpus"))?;
-    let corpus = Corpus::synthetic(corpus_kind, h.vocab, 400_000, seed ^ 0xDD);
+    Ok(WorkerSpec {
+        h,
+        cfg,
+        optim,
+        steps,
+        corpus_kind,
+        corpus_tokens: 400_000,
+    })
+}
+
+/// `train --backend native --transport channel|tcp`: the distributed
+/// pipeline — one worker per stage inside this process, joined by real
+/// framed transports (DESIGN.md §11). The loss curve is bitwise
+/// identical to the single-process native run with the same flags.
+fn train_native_distributed(
+    flags: &Flags,
+    spec: WorkerSpec,
+    kind: TransportKind,
+) -> Result<()> {
+    let config = flags.str("config", "tiny");
+    let steps = spec.steps;
+    let tokens_per_step = spec.cfg.microbatches * spec.h.b * spec.h.n;
+    println!(
+        "distributed native train: {config} x{} stages over {} transport, \
+         {} steps, frame payload {} B",
+        spec.h.stages,
+        kind.as_str(),
+        steps,
+        spec.cfg.boundary_bytes(&spec.h),
+    );
+    let report = transport::run_local(&spec, kind)?;
+    let label = flags.str(
+        "label",
+        &format!(
+            "native_dist_{config}_{}_{}",
+            spec.cfg.mode.as_str(),
+            kind.as_str()
+        ),
+    );
+    let mut log = RunLog::create(flags.str("out", "results"), &label)?;
+    let wire_per_step = report.wire_bytes / steps.max(1) as u64;
+    for (i, loss) in report.losses.iter().enumerate() {
+        log.log_parts(
+            (i + 1) as u64,
+            *loss,
+            report.step_seconds[i],
+            wire_per_step,
+            tokens_per_step,
+        )?;
+        if i % 10 == 0 || i + 1 == steps {
+            println!(
+                "step {:>5}  loss {:.4}  wall {:>8.4}s",
+                i + 1,
+                loss,
+                report.step_seconds[i]
+            );
+        }
+    }
+    println!(
+        "final ({} transport): loss {:.4}  mean step {:.4}s  \
+         {} boundary frames, {} payload B, {} wire B",
+        kind.as_str(),
+        report.losses.last().copied().unwrap_or(f64::NAN),
+        report.mean_step_seconds(),
+        report.frames,
+        report.boundary_payload_bytes,
+        report.wire_bytes,
+    );
+    log.finish()?;
+    Ok(())
+}
+
+/// `train --backend native`: the in-process autodiff backend —
+/// artifact-free, so config names resolve to built-in dimension presets
+/// instead of the AOT manifest.
+fn train_native(flags: &Flags) -> Result<()> {
+    use protomodels::nn::NativePipeline;
+
+    if flags.usize("replicas", 1)? > 1 {
+        bail!("--backend native trains a single pipeline (no --replicas yet)");
+    }
+    let spec = native_spec(flags)?;
+    if let Some(t) = flags.opt("transport") {
+        return train_native_distributed(flags, spec, TransportKind::parse(t)?);
+    }
+    let config = flags.str("config", "tiny");
+    let WorkerSpec { h, cfg: pcfg, optim, steps, .. } = spec.clone();
+    let mode = pcfg.mode;
+    let seed = pcfg.seed;
+    let corpus = spec.corpus();
     let mut rng = Rng::new(seed);
     let topo = make_topo(flags, h.stages, &mut rng)?;
     // drive through the coordinator's backend facade — the same surface
@@ -421,6 +523,48 @@ fn cmd_sim(flags: &Flags) -> Result<()> {
     println!(
         "bytes: {} activation, {} gradient | ring busy {:.4}s",
         rep.wire_bytes, rep.dp_bytes, rep.allreduce_busy
+    );
+    Ok(())
+}
+
+/// `serve --stage I`: run one pipeline stage as a standalone TCP worker
+/// (one process per stage; see DESIGN.md §11). All model/run flags must
+/// match across the swarm — the transport handshake rejects mismatches.
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let spec = native_spec(flags)?;
+    let stage: usize = flags.require("stage")?.parse().map_err(|_| {
+        anyhow::anyhow!("--stage wants a stage index in [0, stages)")
+    })?;
+    let host = flags.str("host", "127.0.0.1");
+    let port_base = flags.usize("port-base", 7070)?;
+    if port_base + spec.h.stages > u16::MAX as usize {
+        bail!("--port-base {port_base} leaves no room for {} stage ports", spec.h.stages);
+    }
+    println!(
+        "serve: stage {stage}/{} ({} mode, {} steps) on {host}, ports \
+         {port_base}+",
+        spec.h.stages,
+        spec.cfg.mode.as_str(),
+        spec.steps,
+    );
+    let report =
+        transport::serve_stage(&spec, stage, &host, port_base as u16)?;
+    if stage == 0 {
+        for (i, loss) in report.losses.iter().enumerate() {
+            if i % 10 == 0 || i + 1 == report.losses.len() {
+                println!("step {:>5}  loss {loss:.4}", i + 1);
+            }
+        }
+        let mean: f64 = report.step_seconds.iter().sum::<f64>()
+            / report.step_seconds.len().max(1) as f64;
+        println!(
+            "final: loss {:.4}  mean step {mean:.4}s",
+            report.losses.last().copied().unwrap_or(f64::NAN)
+        );
+    }
+    println!(
+        "stage {stage} done: {} frames, {} B boundary payload, {} B wire",
+        report.frames_sent, report.boundary_payload_bytes, report.wire_bytes
     );
     Ok(())
 }
@@ -783,6 +927,105 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
         }
     }
 
+    // ---- transport: frame codec + one distributed TCP step ----
+    let mut transport_entries: Vec<BenchEntry> = Vec::new();
+    {
+        use protomodels::compress;
+        use protomodels::data::CorpusKind;
+        use protomodels::nn::Optim;
+        use protomodels::transport::frame::{FrameKind, WireFrame};
+
+        let h = Hyper::tiny_native();
+        let mut rng = Rng::new(21);
+        let m = h.b * h.n;
+        let payload_t =
+            Tensor::new(vec![m, h.k], rng.normal_f32_vec(m * h.k, 1.0));
+        let frame_bytes =
+            protomodels::memory::transport_frame_bytes(&h, Mode::Subspace)
+                as f64;
+        let r = bench.run("transport_frame_encode", || {
+            let cf = compress::encode(
+                black_box(&payload_t),
+                Mode::Subspace,
+                h.ratio,
+            );
+            let wf = WireFrame::boundary(
+                FrameKind::Fwd,
+                Mode::Subspace,
+                3,
+                0,
+                cf.payload,
+            );
+            black_box(wf.to_bytes().len());
+        });
+        println!(
+            "    -> {:.2} MB/s framed",
+            r.throughput(frame_bytes) / 1e6
+        );
+        transport_entries
+            .push(BenchEntry { result: r, items_per_iter: Some(frame_bytes) });
+        let r = bench.run("transport_roundtrip", || {
+            // the full wire path: codec encode → frame → bytes → parse →
+            // codec decode, exactly what one boundary hop costs
+            let cf = compress::encode(
+                black_box(&payload_t),
+                Mode::Subspace,
+                h.ratio,
+            );
+            let wf = WireFrame::boundary(
+                FrameKind::Fwd,
+                Mode::Subspace,
+                3,
+                0,
+                cf.payload,
+            );
+            let bytes = wf.to_bytes();
+            let parsed = WireFrame::read_from(&mut std::io::Cursor::new(
+                bytes,
+            ))
+            .expect("frame parse");
+            let back = compress::Frame {
+                mode: Mode::Subspace,
+                shape: vec![m, h.k],
+                payload: parsed.payload,
+            };
+            black_box(compress::decode(&back).numel());
+        });
+        transport_entries
+            .push(BenchEntry { result: r, items_per_iter: Some(frame_bytes) });
+        // one synchronous distributed step over real loopback sockets,
+        // session setup (listeners, handshake, init replay) included —
+        // the end-to-end latency floor of the TCP transport
+        let mut h2 = Hyper::tiny_native();
+        h2.stages = 2;
+        h2.layers = h2.blocks_per_stage * h2.stages;
+        let spec = protomodels::transport::WorkerSpec {
+            h: h2,
+            cfg: protomodels::coordinator::PipelineConfig {
+                mode: Mode::Subspace,
+                microbatches: 2,
+                grassmann_interval: 0,
+                total_steps: 1,
+                seed: 5,
+                ..Default::default()
+            },
+            optim: Optim::AdamW,
+            steps: 1,
+            corpus_kind: CorpusKind::Wiki,
+            corpus_tokens: 20_000,
+        };
+        let r = bench.run("transport_step_tcp", || {
+            let rep = protomodels::transport::run_local(
+                black_box(&spec),
+                protomodels::transport::TransportKind::Tcp,
+            )
+            .expect("tcp distributed step");
+            black_box(rep.losses.len());
+        });
+        transport_entries
+            .push(BenchEntry { result: r, items_per_iter: None });
+    }
+
     if json {
         write_json(out.join("BENCH_linalg.json"), "linalg", &linalg_entries)?;
         write_json(
@@ -791,6 +1034,11 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
             &pipe_entries,
         )?;
         write_json(out.join("BENCH_nn.json"), "nn", &nn_entries)?;
+        write_json(
+            out.join("BENCH_transport.json"),
+            "transport",
+            &transport_entries,
+        )?;
     }
     Ok(())
 }
@@ -806,6 +1054,7 @@ fn main() -> Result<()> {
     par::set_max_threads(flags.usize("threads", 0)?);
     match args[0].as_str() {
         "train" => cmd_train(&flags),
+        "serve" => cmd_serve(&flags),
         "sim" => cmd_sim(&flags),
         "inspect" => cmd_inspect(&flags),
         "timing" => cmd_timing(&flags),

@@ -198,6 +198,34 @@ pub fn native_peak_bytes(h: &Hyper, compressed: bool) -> usize {
     native_persistent_bytes(h) + grad_acc + saved + tape
 }
 
+// ---------------------------------------------------------------------------
+// distributed transport (rust/src/transport) — per-worker accounting
+// ---------------------------------------------------------------------------
+
+/// Bytes one boundary tensor occupies as a framed message on the wire:
+/// the codec payload priced by [`crate::compress::wire_bytes`] plus the
+/// fixed frame header. The distributed smoke asserts measured frame
+/// sizes against exactly this (DESIGN.md §11).
+pub fn transport_frame_bytes(h: &Hyper, mode: crate::compress::Mode) -> usize {
+    crate::transport::HEADER_LEN
+        + crate::compress::wire_bytes(mode, h.b, h.n, h.d, h.k, h.ratio)
+}
+
+/// Persistent bytes ONE distributed stage worker holds: its own stage's
+/// parameters with both moment buffers, plus the replicated global
+/// state every worker carries (U, T_fixed, PE) — the distributed
+/// memory claim: per-worker residency scales with `params/P + O(v·d)`,
+/// not with total model size. (Transient tape/frame buffers come on top
+/// per [`native_tape_bytes`]; frames add two in-flight
+/// [`transport_frame_bytes`] per link.)
+pub fn transport_worker_bytes(h: &Hyper, stage: usize) -> usize {
+    (3 * stage_param_count(h, stage)
+        + h.d * h.k
+        + h.vocab * h.d
+        + h.n * h.d)
+        * 4
+}
+
 /// Compute one Table-3/4 row at the paper's 2B dimensions.
 pub fn table_row(seq_total: usize, workers: usize) -> MemRow {
     // context parallel: each worker holds seq_total / workers tokens
@@ -340,6 +368,36 @@ mod tests {
             (sub - raw).abs() / raw < 0.1,
             "subspace peak {sub} vs raw {raw}: boundary overhead must be \
              marginal"
+        );
+    }
+
+    #[test]
+    fn transport_accounting_consistency() {
+        use crate::compress::{wire_bytes, Mode};
+
+        let h = Hyper::tiny_native();
+        // frame = header + exactly the codec payload the wire carries
+        for mode in [Mode::Subspace, Mode::Raw, Mode::TopK, Mode::Quant] {
+            assert_eq!(
+                transport_frame_bytes(&h, mode),
+                crate::transport::HEADER_LEN
+                    + wire_bytes(mode, h.b, h.n, h.d, h.k, h.ratio),
+            );
+        }
+        // subspace frames stay ~10x under raw even with header overhead
+        let sub = transport_frame_bytes(&h, Mode::Subspace) as f64;
+        let raw = transport_frame_bytes(&h, Mode::Raw) as f64;
+        assert!(raw / sub >= 10.0, "framed ratio {:.2}", raw / sub);
+        // per-worker residency: every worker carries the shared global
+        // state; the stage split covers the rest, so the sum over
+        // workers exceeds the single-process persistent bytes by
+        // exactly (P − 1) global-state copies
+        let per_worker: usize =
+            (0..h.stages).map(|s| transport_worker_bytes(&h, s)).sum();
+        let global = (h.d * h.k + h.vocab * h.d + h.n * h.d) * 4;
+        assert_eq!(
+            per_worker,
+            native_persistent_bytes(&h) + (h.stages - 1) * global
         );
     }
 }

@@ -31,5 +31,8 @@ pub mod pipeline;
 pub mod tape;
 
 pub use optim::Optim;
-pub use pipeline::NativePipeline;
+pub use pipeline::{
+    encode_boundary, grassmann_step_u, reproject_stage, BoundaryDir,
+    NativePipeline,
+};
 pub use tape::{AttnDims, Tape, Var};

@@ -39,11 +39,99 @@ use super::optim::{step_stage, OptStep, Optim};
 use super::tape::Tape;
 
 /// Which direction a boundary payload travels (seeds the deterministic
-/// PowerLR sketch stream).
-#[derive(Clone, Copy)]
-enum Dir {
+/// PowerLR sketch stream and picks the wire-frame kind in the
+/// distributed transport).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BoundaryDir {
+    /// stage s → s+1 activation payload
     Fwd,
+    /// stage s+1 → s activation-gradient payload
     Bwd,
+}
+
+/// Encode one boundary payload exactly as the native backend ships it —
+/// the **single** codec path shared by [`NativePipeline`] (in-process)
+/// and the distributed transport workers, so a frame produced on one
+/// side of a socket is bit-identical to what the single-process run
+/// would have round-tripped. For PowerLR the deterministic rank-limited
+/// reconstruction (sketch stream derived from `(seed, step, link, mb,
+/// dir)`) is applied *before* dense encoding, mirroring the in-process
+/// hook; its frame is the dense stand-in while `wire_bytes` accounts
+/// factor shipping (see [`crate::compress::encode`]). `link` is the
+/// pipeline link index the payload crosses: the sending stage for
+/// forward payloads, the receiving stage for backward ones.
+pub fn encode_boundary(
+    cfg: &PipelineConfig,
+    h: &Hyper,
+    t: &Tensor,
+    link: usize,
+    mb: usize,
+    dir: BoundaryDir,
+    step: u64,
+) -> compress::Frame {
+    match cfg.mode {
+        Mode::PowerLR => {
+            let rank = powerlr_rank(h.n, h.d, h.ratio);
+            let tag = (link as u64) << 20
+                | (mb as u64) << 4
+                | match dir {
+                    BoundaryDir::Fwd => 0,
+                    BoundaryDir::Bwd => 1,
+                };
+            let mut rng = Rng::new(
+                cfg.seed ^ 0x70E7 ^ step.wrapping_mul(0x9E37) ^ tag,
+            );
+            let reduced = linalg::low_rank_approx(t, rank, &mut rng);
+            compress::encode_dense(&reduced, Mode::PowerLR)
+        }
+        mode => compress::encode(t, mode, h.ratio),
+    }
+}
+
+/// One Riemannian Grassmann step of the shared basis: U ← retract(U −
+/// η·tangent) with η adapted by trace(S̄) — the pure math of
+/// `grassmann_update`, extracted so the distributed last-stage worker
+/// computes the *same* new basis the single-process backend would
+/// (timing/broadcast accounting stays with the callers).
+pub fn grassmann_step_u(
+    u: &Tensor,
+    s_acc: &Tensor,
+    s_count: u64,
+    eta_base: f64,
+) -> Tensor {
+    let d = u.dims2().0;
+    let mut s_avg = s_acc.clone();
+    s_avg.scale(1.0 / s_count.max(1) as f32);
+    let trace: f64 = (0..d).map(|i| s_avg.at2(i, i) as f64).sum();
+    let eta = if trace > 1e-12 {
+        (eta_base * d as f64 / trace) as f32
+    } else {
+        0.0
+    };
+    // ∇L(U) = −2·S·U; tangent = ∇ − U(Uᵀ∇); retraction = MGS
+    let mut g_euc = linalg::matmul(&s_avg, u);
+    g_euc.scale(-2.0);
+    let utg = linalg::matmul_tn(u, &g_euc);
+    let mut u_new = u.clone();
+    let proj = linalg::matmul(u, &utg);
+    for i in 0..u_new.data.len() {
+        u_new.data[i] -= eta * (g_euc.data[i] - proj.data[i]);
+    }
+    linalg::orthonormalize_columns(&mut u_new);
+    u_new
+}
+
+/// Re-project one stage's constrained weights and first moments onto
+/// the (new) subspace — the per-stage half of the Grassmann protocol,
+/// shared verbatim between the in-process backend and the distributed
+/// workers (each worker re-projects only the stage it owns).
+pub fn reproject_stage(st: &mut StageState, u: &Tensor) {
+    for i in 0..st.params.len() {
+        if constrained(&st.schema[i].0) {
+            st.params[i] = linalg::project_rows(&st.params[i], u);
+            st.m[i] = linalg::project_rows(&st.m[i], u);
+        }
+    }
 }
 
 /// A natively-trained pipeline: P stage subgraphs over a netsim
@@ -182,44 +270,37 @@ impl NativePipeline {
     }
 
     /// The boundary hook: route one payload through the configured
-    /// codec. Returns (delivered tensor, wire bytes). Subspace/raw
-    /// payloads round-trip the dense codec losslessly; top-k and int8
-    /// round-trip their real (lossy) encoders; PowerLR applies an
-    /// actual rank-limited reconstruction with a sketch stream derived
-    /// deterministically from (seed, step, stage, microbatch,
-    /// direction).
+    /// codec via the shared [`encode_boundary`] path (the same frames
+    /// the distributed transport puts on the wire). Returns (delivered
+    /// tensor, wire bytes). Subspace/raw payloads round-trip the dense
+    /// codec losslessly; top-k and int8 round-trip their real (lossy)
+    /// encoders; PowerLR applies an actual rank-limited reconstruction
+    /// with a sketch stream derived deterministically from (seed, step,
+    /// stage, microbatch, direction).
     fn ship(
         &self,
         t: &Tensor,
         stage: usize,
         mb: usize,
-        dir: Dir,
+        dir: BoundaryDir,
     ) -> (Tensor, usize) {
         let bytes = self.boundary_bytes();
-        match self.cfg.mode {
-            Mode::PowerLR => {
-                let rank = powerlr_rank(self.h.n, self.h.d, self.h.ratio);
-                let tag = (stage as u64) << 20
-                    | (mb as u64) << 4
-                    | match dir {
-                        Dir::Fwd => 0,
-                        Dir::Bwd => 1,
-                    };
-                let mut rng = Rng::new(
-                    self.cfg.seed ^ 0x70E7 ^ self.step.wrapping_mul(0x9E37) ^ tag,
-                );
-                (linalg::low_rank_approx(t, rank, &mut rng), bytes)
-            }
-            mode => {
-                let (recon, frame_bytes) =
-                    compress::roundtrip(t, mode, self.h.ratio);
-                debug_assert_eq!(
-                    frame_bytes, bytes,
-                    "codec frame disagrees with wire accounting"
-                );
-                (recon, frame_bytes)
-            }
-        }
+        let frame =
+            encode_boundary(&self.cfg, &self.h, t, stage, mb, dir, self.step);
+        // PowerLR's dense frame stands in for factor shipping — wire
+        // accounting stays on the factor bytes; every other codec's
+        // frame IS the wire representation
+        let wire = if self.cfg.mode == Mode::PowerLR {
+            bytes
+        } else {
+            debug_assert_eq!(
+                frame.wire_len(),
+                bytes,
+                "codec frame disagrees with wire accounting"
+            );
+            frame.wire_len()
+        };
+        (compress::decode(&frame), wire)
     }
 
     fn note_peak(&mut self, tape: &Tape, extra: usize) {
@@ -338,7 +419,7 @@ impl NativePipeline {
                     &built.tape,
                     grad_acc_bytes + saved_bytes,
                 );
-                let (delivered, nbytes) = self.ship(&out, s, mb, Dir::Fwd);
+                let (delivered, nbytes) = self.ship(&out, s, mb, BoundaryDir::Fwd);
                 let (ser, lat) = self.topo.links[s].sample(bbytes);
                 costs.tx_fwd[s][mb] = Tx { ser, lat };
                 wire += nbytes as u64;
@@ -389,7 +470,7 @@ impl NativePipeline {
 
             // ---- backward wave
             for s in (0..last).rev() {
-                let (delivered, nbytes) = self.ship(&gc, s, mb, Dir::Bwd);
+                let (delivered, nbytes) = self.ship(&gc, s, mb, BoundaryDir::Bwd);
                 let (ser, lat) = self.topo.links[s].sample(bbytes);
                 costs.tx_bwd[s][mb] = Tx { ser, lat };
                 wire += nbytes as u64;
@@ -504,30 +585,18 @@ impl NativePipeline {
     }
 
     /// Riemannian subspace update + re-projection of constrained
-    /// weights/momenta; returns simulated tail seconds.
+    /// weights/momenta; returns simulated tail seconds. The math lives
+    /// in [`grassmann_step_u`] / [`reproject_stage`], shared with the
+    /// distributed transport's last-stage worker.
     fn grassmann_update(&mut self) -> f64 {
         let h = self.h.clone();
-        let mut s_avg = self.s_acc.clone();
-        s_avg.scale(1.0 / self.s_count as f32);
-        let trace: f64 =
-            (0..h.d).map(|i| s_avg.at2(i, i) as f64).sum();
-        let eta = if trace > 1e-12 {
-            (self.cfg.grassmann_eta * h.d as f64 / trace) as f32
-        } else {
-            0.0
-        };
         let t0 = Instant::now();
-        // ∇L(U) = −2·S·U; tangent = ∇ − U(Uᵀ∇); retraction = MGS
-        let mut g_euc = linalg::matmul(&s_avg, &self.global.u);
-        g_euc.scale(-2.0);
-        let utg = linalg::matmul_tn(&self.global.u, &g_euc);
-        let mut u_new = self.global.u.clone();
-        let proj = linalg::matmul(&self.global.u, &utg);
-        for i in 0..u_new.data.len() {
-            u_new.data[i] -= eta * (g_euc.data[i] - proj.data[i]);
-        }
-        linalg::orthonormalize_columns(&mut u_new);
-        self.global.u = u_new;
+        self.global.u = grassmann_step_u(
+            &self.global.u,
+            &self.s_acc,
+            self.s_count,
+            self.cfg.grassmann_eta,
+        );
         let mut secs = stage_seconds(
             self.cfg.time_model,
             &h,
@@ -538,15 +607,7 @@ impl NativePipeline {
         );
         for s in 0..h.stages {
             let t0 = Instant::now();
-            let st = &mut self.stages[s];
-            for i in 0..st.params.len() {
-                if constrained(&st.schema[i].0) {
-                    st.params[i] =
-                        linalg::project_rows(&st.params[i], &self.global.u);
-                    st.m[i] =
-                        linalg::project_rows(&st.m[i], &self.global.u);
-                }
-            }
+            reproject_stage(&mut self.stages[s], &self.global.u);
             secs += stage_seconds(
                 self.cfg.time_model,
                 &h,
@@ -601,7 +662,7 @@ impl NativePipeline {
                     },
                 );
                 let out = built.tape.value(built.output).clone();
-                let (delivered, _) = self.ship(&out, s, 0, Dir::Fwd);
+                let (delivered, _) = self.ship(&out, s, 0, BoundaryDir::Fwd);
                 cur = Some(delivered);
             }
             let built = build_stage(

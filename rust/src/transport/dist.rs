@@ -1,0 +1,1089 @@
+//! The distributed native pipeline: one worker per stage, joined by
+//! [`super::Transport`] links, training the exact model the
+//! single-process [`crate::nn::NativePipeline`] trains (DESIGN.md §11).
+//!
+//! ## Determinism-first protocol
+//!
+//! Every worker derives *all* state a step needs from the handshaked
+//! [`WorkerSpec`]: it replays the full seeded init stream (keeping only
+//! its own stage's parameters) and regenerates every microbatch locally
+//! from the shared data RNG — so token ids never cross the wire, and
+//! the only payloads are the compressed boundary tensors the paper's
+//! protocol actually ships. Because the init replay leaves each
+//! worker's RNG in the identical state the single-process backend
+//! carries, and the wire is bit-transparent (f32 LE round-trips
+//! exactly), a distributed run's loss curve is **bitwise identical** to
+//! the single-process run — the contract `tests/transport_parity.rs`
+//! and `examples/distributed_train.rs` enforce over both backends.
+//!
+//! ## Per-step protocol (stage s of P, M microbatches)
+//!
+//! 1. sample all M batches from the step's data fork (stream order
+//!    matches the single-process loop);
+//! 2. execute the wave order of the configured schedule — GPipe
+//!    (fill-then-drain) or 1F1B (warmup `min(M, P−s)` forwards, then
+//!    alternate) — where a forward task receives the left boundary
+//!    frame, builds the stage subgraph, and ships the codec frame
+//!    right, and a backward task receives the gradient cotangent from
+//!    the right, rebuilds the subgraph (GPipe rematerialization), and
+//!    ships the input-gradient frame left; the last stage fuses
+//!    fwd+loss+bwd per microbatch like the in-process backend;
+//! 3. average gradients, step the stage's optimizer;
+//! 4. relay one `StepEnd` frame from the last stage to stage 0 carrying
+//!    the exact f64 loss-sum bits — and, on Grassmann-update steps, the
+//!    new U basis, which every worker applies by re-projecting its own
+//!    constrained parameters (the paper's basis-broadcast, for real).
+//!
+//! A vanished peer surfaces as a graceful `Err` whose message names the
+//! stage, direction, and step — the transport mirror of the swarm
+//! simulator's churn leave events — instead of a hang or a panic.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress::{self, Mode};
+use crate::coordinator::PipelineConfig;
+use crate::data::{Corpus, CorpusKind};
+use crate::linalg;
+use crate::manifest::Hyper;
+use crate::nn::model::{build_stage, high_rank_e, sinusoidal_pe, StageIo};
+use crate::nn::optim::{step_stage, OptStep};
+use crate::nn::{
+    encode_boundary, grassmann_step_u, reproject_stage, BoundaryDir, Optim,
+};
+use crate::rng::Rng;
+use crate::sim::Schedule;
+use crate::stage::{GlobalState, StageState};
+use crate::tensor::Tensor;
+
+use super::frame::{FrameKind, WireFrame};
+use super::{channel_pair, TcpTransport, Transport};
+
+/// Which transport backend a distributed run uses (`--transport`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// in-process `mpsc` channels — deterministic, used by parity tests
+    Channel,
+    /// real TCP sockets over loopback, one OS thread per stage
+    Tcp,
+}
+
+impl TransportKind {
+    /// Parse a CLI label (`"channel"`, `"tcp"`).
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        match s {
+            "channel" => Ok(TransportKind::Channel),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => bail!("unknown transport {other:?} (have channel, tcp)"),
+        }
+    }
+
+    /// Canonical label.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TransportKind::Channel => "channel",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// Everything a stage worker needs to train — the unit the handshake
+/// digests. Two workers whose specs differ in any digested field refuse
+/// to train together.
+#[derive(Clone, Debug)]
+pub struct WorkerSpec {
+    /// model/pipeline dimensions
+    pub h: Hyper,
+    /// run-level configuration (mode, microbatches, seed, lr schedule,
+    /// Grassmann cadence, pipeline schedule)
+    pub cfg: PipelineConfig,
+    /// optimizer every stage steps with
+    pub optim: Optim,
+    /// optimizer steps to run
+    pub steps: usize,
+    /// synthetic corpus preset
+    pub corpus_kind: CorpusKind,
+    /// corpus length in tokens
+    pub corpus_tokens: usize,
+}
+
+impl WorkerSpec {
+    /// The corpus every worker regenerates locally (same derivation as
+    /// `train --backend native` and the native examples).
+    pub fn corpus(&self) -> Corpus {
+        Corpus::synthetic(
+            self.corpus_kind,
+            self.h.vocab,
+            self.corpus_tokens,
+            self.cfg.seed ^ 0xDD,
+        )
+    }
+
+    /// Reject specs the distributed runtime cannot execute.
+    pub fn validate(&self) -> Result<()> {
+        if self.h.stages < 2 {
+            bail!("distributed pipeline needs >= 2 stages, got {}", self.h.stages);
+        }
+        if self.cfg.microbatches == 0 {
+            bail!("need >= 1 microbatch");
+        }
+        if matches!(self.cfg.schedule, Schedule::Interleaved { .. }) {
+            bail!(
+                "interleaved schedules are simulator-only \
+                 (`protomodels sim --schedule interleaved`); the \
+                 transport runs gpipe or 1f1b wave orders"
+            );
+        }
+        Ok(())
+    }
+
+    /// Canonical byte digest of every numerics-affecting field,
+    /// exchanged in the `Hello` handshake. Fields that cannot change
+    /// the loss curve (time model, event-sim routing, grad recording)
+    /// are deliberately excluded.
+    pub fn digest(&self) -> Vec<u8> {
+        let h = &self.h;
+        let c = &self.cfg;
+        let mut d = Vec::with_capacity(96);
+        d.extend_from_slice(b"PMCFG1");
+        for v in [
+            h.d, h.d_ff, h.heads, h.layers, h.stages, h.n, h.vocab, h.k,
+            h.b, h.blocks_per_stage,
+        ] {
+            d.extend_from_slice(&(v as u64).to_le_bytes());
+        }
+        d.extend_from_slice(&h.ratio.to_le_bytes());
+        d.push(c.mode.wire_tag());
+        d.extend_from_slice(&(c.microbatches as u64).to_le_bytes());
+        d.extend_from_slice(&(c.grassmann_interval as u64).to_le_bytes());
+        d.extend_from_slice(&c.grassmann_eta.to_le_bytes());
+        d.extend_from_slice(&c.lr.to_le_bytes());
+        d.extend_from_slice(&(c.warmup_steps as u64).to_le_bytes());
+        d.extend_from_slice(&(c.total_steps as u64).to_le_bytes());
+        d.extend_from_slice(&c.seed.to_le_bytes());
+        d.push(match c.schedule {
+            Schedule::Gpipe => 0,
+            Schedule::OneFOneB => 1,
+            Schedule::Interleaved { .. } => 2, // rejected by validate()
+        });
+        match self.optim {
+            Optim::AdamW => d.push(0),
+            Optim::Sgd { momentum } => {
+                d.push(1);
+                d.extend_from_slice(&momentum.to_le_bytes());
+            }
+        }
+        d.push(match self.corpus_kind {
+            CorpusKind::Wiki => 0,
+            CorpusKind::Books => 1,
+            CorpusKind::Web => 2,
+            CorpusKind::C4 => 3,
+        });
+        d.extend_from_slice(&(self.corpus_tokens as u64).to_le_bytes());
+        d.extend_from_slice(&(self.steps as u64).to_le_bytes());
+        d
+    }
+}
+
+/// What one stage worker reports after a run.
+#[derive(Clone, Debug)]
+pub struct WorkerReport {
+    /// stage this worker drove
+    pub stage: usize,
+    /// per-step mean training loss (stage 0 only — the relay terminus)
+    pub losses: Vec<f64>,
+    /// per-step wall-clock seconds (stage 0 only; spans the full wave
+    /// including the StepEnd relay, i.e. the step makespan)
+    pub step_seconds: Vec<f64>,
+    /// boundary payload bytes this worker sent (codec bytes, no headers)
+    pub boundary_payload_bytes: u64,
+    /// total bytes this worker sent, frame headers and control included
+    pub wire_bytes: u64,
+    /// frames this worker sent
+    pub frames_sent: u64,
+}
+
+/// Aggregate result of a distributed run.
+#[derive(Clone, Debug)]
+pub struct DistReport {
+    /// per-step mean training loss (bitwise-comparable to the
+    /// single-process backend's `StepStats::loss`)
+    pub losses: Vec<f64>,
+    /// per-step wall-clock seconds measured at stage 0
+    pub step_seconds: Vec<f64>,
+    /// boundary payload bytes that crossed all links, both directions
+    pub boundary_payload_bytes: u64,
+    /// total wire bytes including frame headers and control frames
+    pub wire_bytes: u64,
+    /// total frames sent
+    pub frames: u64,
+    /// payload bytes of one boundary frame — asserted equal to
+    /// [`crate::compress::wire_bytes`] on every frame received
+    pub frame_payload_bytes: usize,
+}
+
+impl DistReport {
+    /// Mean wall-clock seconds per step.
+    pub fn mean_step_seconds(&self) -> f64 {
+        if self.step_seconds.is_empty() {
+            return 0.0;
+        }
+        self.step_seconds.iter().sum::<f64>() / self.step_seconds.len() as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// stage worker
+// ---------------------------------------------------------------------------
+
+/// One unit of the wave order.
+#[derive(Clone, Copy, Debug)]
+enum Task {
+    Fwd(usize),
+    Bwd(usize),
+}
+
+/// The microbatch task order for one stage under a schedule. Both
+/// orders process backwards in ascending microbatch order, so gradient
+/// accumulation — hence the loss curve — is schedule-independent and
+/// bitwise-identical to the single-process loop; the schedules differ
+/// only in how many forwards are in flight (link buffering / overlap).
+fn wave_order(
+    schedule: Schedule,
+    stages: usize,
+    stage: usize,
+    m: usize,
+) -> Vec<Task> {
+    let last = stages - 1;
+    if stage == last {
+        // the last stage fuses fwd+loss+bwd per microbatch
+        return (0..m).map(Task::Fwd).collect();
+    }
+    let warmup = match schedule {
+        // fill-then-drain: every forward before any backward
+        Schedule::Gpipe => m,
+        // classic 1F1B: keep at most P − s microbatches in flight
+        Schedule::OneFOneB => m.min(stages - stage),
+        Schedule::Interleaved { .. } => m, // unreachable (validate())
+    };
+    let mut order = Vec::with_capacity(2 * m);
+    for mb in 0..warmup {
+        order.push(Task::Fwd(mb));
+    }
+    let mut next_fwd = warmup;
+    for mb in 0..m {
+        order.push(Task::Bwd(mb));
+        if next_fwd < m {
+            order.push(Task::Fwd(next_fwd));
+            next_fwd += 1;
+        }
+    }
+    order
+}
+
+/// Neighbor links of one worker.
+struct Links {
+    left: Option<Box<dyn Transport>>,
+    right: Option<Box<dyn Transport>>,
+}
+
+impl Links {
+    fn left(&mut self) -> &mut dyn Transport {
+        self.left.as_deref_mut().expect("stage > 0 has a left link")
+    }
+
+    fn right(&mut self) -> &mut dyn Transport {
+        self.right.as_deref_mut().expect("stage < last has a right link")
+    }
+}
+
+/// Receive one frame and validate its header against expectations; a
+/// `Bye` or a closed connection is reported as a departure with enough
+/// context to locate the leave in the pipeline.
+fn recv_expect(
+    conn: &mut dyn Transport,
+    kind: FrameKind,
+    step: u64,
+    mb: Option<u32>,
+    stage: usize,
+    from: &str,
+) -> Result<WireFrame> {
+    let f = conn.recv().with_context(|| {
+        format!(
+            "stage {stage}: awaiting a {} frame from the {from} neighbor \
+             at step {step}",
+            kind.name()
+        )
+    })?;
+    if f.kind == FrameKind::Bye {
+        bail!(
+            "stage {stage}: worker departed — {from} neighbor said \
+             goodbye at step {step} while we expected a {} frame \
+             (mirrors a swarm leave event)",
+            kind.name()
+        );
+    }
+    if f.kind != kind {
+        bail!(
+            "stage {stage}: protocol error — expected a {} frame from \
+             the {from} neighbor at step {step}, got {}",
+            kind.name(),
+            f.kind.name()
+        );
+    }
+    if f.step != step {
+        bail!(
+            "stage {stage}: {} frame from the {from} neighbor is for \
+             step {} but we are at step {step} — desynchronized pipeline",
+            kind.name(),
+            f.step
+        );
+    }
+    if let Some(mb) = mb {
+        if f.microbatch != mb {
+            bail!(
+                "stage {stage}: {} frame from the {from} neighbor is \
+                 for microbatch {} but we expected {mb}",
+                kind.name(),
+                f.microbatch
+            );
+        }
+    }
+    Ok(f)
+}
+
+/// Accumulate one built stage's parameter gradients into `acc`
+/// (borrowed from the tape; mirrors the in-process backend).
+fn accumulate_grads(built: &crate::nn::model::BuiltStage, acc: &mut [Tensor]) {
+    for (a, p) in acc.iter_mut().zip(&built.params) {
+        if let Some(g) = built.tape.grad(*p) {
+            a.add_assign(g);
+        }
+    }
+}
+
+/// Logical shape of a decoded boundary tensor under a spec.
+fn boundary_shape(h: &Hyper, mode: Mode) -> Vec<usize> {
+    if matches!(mode, Mode::Subspace | Mode::NoFixed) {
+        vec![h.b * h.n, h.k]
+    } else {
+        vec![h.b * h.n, h.d]
+    }
+}
+
+/// Validate a received boundary frame (codec tag + the `payload_len ==
+/// wire_bytes` contract) and decode it to the delivered tensor.
+fn decode_boundary(
+    spec: &WorkerSpec,
+    f: &WireFrame,
+    stage: usize,
+) -> Result<Tensor> {
+    let mode = spec.cfg.mode;
+    match f.codec {
+        Some(c) if c == mode => {}
+        other => bail!(
+            "stage {stage}: boundary frame codec {other:?} does not \
+             match the handshaked mode {mode:?}"
+        ),
+    }
+    // the acceptance contract: what the codec accounts is what the wire
+    // carries (PowerLR's dense stand-in is the documented exception)
+    if mode != Mode::PowerLR {
+        let want = spec.cfg.boundary_bytes(&spec.h);
+        if f.payload.len() != want {
+            bail!(
+                "stage {stage}: boundary frame payload is {} B but \
+                 compress::wire_bytes prices {want} B for mode {}",
+                f.payload.len(),
+                mode.as_str()
+            );
+        }
+    }
+    let cf = compress::Frame {
+        mode,
+        shape: boundary_shape(&spec.h, mode),
+        payload: f.payload.clone(),
+    };
+    Ok(compress::decode(&cf))
+}
+
+/// Run one stage worker to completion over its neighbor links. This is
+/// the function `serve --stage` drives directly (one process per stage)
+/// and [`run_local`] drives on threads (one process, P workers).
+pub fn run_stage(
+    spec: &WorkerSpec,
+    stage: usize,
+    left: Option<Box<dyn Transport>>,
+    right: Option<Box<dyn Transport>>,
+) -> Result<WorkerReport> {
+    spec.validate()?;
+    let h = spec.h.clone();
+    let cfg = spec.cfg.clone();
+    let last = h.stages - 1;
+    if stage > h.stages - 1 {
+        bail!("stage {stage} out of range for a {}-stage pipeline", h.stages);
+    }
+    if (stage > 0) != left.is_some() || (stage < last) != right.is_some() {
+        bail!("stage {stage}: neighbor links do not match the position");
+    }
+    let mut links = Links { left, right };
+
+    // ---- handshake: exchange config digests on every link
+    let digest = spec.digest();
+    for (conn, name) in [
+        (links.left.as_deref_mut(), "left"),
+        (links.right.as_deref_mut(), "right"),
+    ] {
+        let Some(conn) = conn else { continue };
+        conn.send(&WireFrame::control(
+            FrameKind::Hello,
+            0,
+            digest.clone(),
+        ))?;
+        let hello =
+            recv_expect(conn, FrameKind::Hello, 0, None, stage, name)?;
+        if hello.payload != digest {
+            bail!(
+                "stage {stage}: config digest mismatch with the {name} \
+                 neighbor ({} vs our {} bytes) — both workers must be \
+                 launched with identical model/run flags",
+                hello.payload.len(),
+                digest.len()
+            );
+        }
+    }
+
+    // ---- init replay: identical RNG stream to NativePipeline::new —
+    // every worker builds every stage's init draws, keeps its own
+    let mut rng = Rng::new(cfg.seed ^ 0x9137);
+    let global = GlobalState::from_hyper(&h, &mut rng);
+    let mut my_stage: Option<StageState> = None;
+    for s in 0..h.stages {
+        let st = StageState::from_schema(
+            h.stage_schema(s),
+            h.stage_kind(s),
+            s,
+            cfg.mode,
+            &global,
+            &mut rng,
+        )?;
+        if s == stage {
+            my_stage = Some(st);
+        }
+    }
+    let mut st = my_stage.expect("own stage initialized");
+    let mut global = global;
+    let pe = sinusoidal_pe(h.n, h.d);
+    let corpus = spec.corpus();
+    let compressed = cfg.compressed();
+    let m_count = cfg.microbatches;
+    let bbytes = cfg.boundary_bytes(&h);
+    let order = wave_order(cfg.schedule, h.stages, stage, m_count);
+
+    // Grassmann accumulator: last stage only (the one worker that sees
+    // g_full) — the other P−1 workers never touch it, so they skip the
+    // d×d residency
+    let mut s_acc: Option<Tensor> = (stage == last && compressed)
+        .then(|| Tensor::zeros(&[h.d, h.d]));
+    let mut s_count = 0u64;
+    // priced bytes of one boundary frame: the codec payload for every
+    // mode except PowerLR, whose dense frame stands in for factor
+    // shipping — accounting stays on the factor bytes, exactly like
+    // the single-process ship() hook
+    let priced_frame = |payload_len: usize| -> u64 {
+        if cfg.mode == Mode::PowerLR {
+            bbytes as u64
+        } else {
+            payload_len as u64
+        }
+    };
+    let mut losses = Vec::new();
+    let mut step_seconds = Vec::new();
+    let mut boundary_payload = 0u64;
+    let mut frames_sent = 0u64;
+
+    for step in 0..spec.steps as u64 {
+        let t0 = Instant::now();
+        // data stream: one fork per step, batches drawn in microbatch
+        // order — byte-for-byte the single-process sampler sequence
+        let mut data_rng = rng.fork(0xDA7A ^ step);
+        let batches: Vec<_> = (0..m_count)
+            .map(|_| corpus.train_batch(h.b, h.n, &mut data_rng))
+            .collect();
+        let es: Vec<Tensor> = batches
+            .iter()
+            .map(|(tok, _)| {
+                high_rank_e(&h, cfg.mode, &pe, &global.t_fixed, tok)
+            })
+            .collect();
+
+        let mut grad_acc = st.zero_grads();
+        let mut saved: Vec<Option<Tensor>> = vec![None; m_count];
+        let mut loss_sum = 0.0f64;
+
+        for task in &order {
+            match *task {
+                Task::Fwd(mb) => {
+                    let (tok, tgt) = &batches[mb];
+                    if stage > 0 {
+                        let f = recv_expect(
+                            links.left(),
+                            FrameKind::Fwd,
+                            step,
+                            Some(mb as u32),
+                            stage,
+                            "left",
+                        )?;
+                        saved[mb] = Some(decode_boundary(spec, &f, stage)?);
+                    }
+                    if stage < last {
+                        let built = build_stage(
+                            &h,
+                            cfg.mode,
+                            stage,
+                            &st.params,
+                            StageIo {
+                                u: &global.u,
+                                e: &es[mb],
+                                tok,
+                                input: saved[mb].as_ref(),
+                                targets: None,
+                            },
+                        );
+                        let out = built.tape.value(built.output).clone();
+                        let cf = encode_boundary(
+                            &cfg,
+                            &h,
+                            &out,
+                            stage,
+                            mb,
+                            BoundaryDir::Fwd,
+                            step,
+                        );
+                        if cfg.mode != Mode::PowerLR
+                            && cf.wire_len() != bbytes
+                        {
+                            bail!(
+                                "stage {stage}: encoded fwd frame is {} B, \
+                                 wire accounting prices {bbytes} B",
+                                cf.wire_len()
+                            );
+                        }
+                        boundary_payload += priced_frame(cf.wire_len());
+                        frames_sent += 1;
+                        links.right().send(&WireFrame::boundary(
+                            FrameKind::Fwd,
+                            cfg.mode,
+                            step,
+                            mb,
+                            cf.payload,
+                        ))?;
+                    } else {
+                        // last stage: fused fwd + loss + bwd
+                        let mut built = build_stage(
+                            &h,
+                            cfg.mode,
+                            stage,
+                            &st.params,
+                            StageIo {
+                                u: &global.u,
+                                e: &es[mb],
+                                tok,
+                                input: saved[mb].as_ref(),
+                                targets: Some(tgt),
+                            },
+                        );
+                        loss_sum +=
+                            built.tape.value(built.output).item() as f64;
+                        built.tape.backward(built.output);
+                        accumulate_grads(&built, &mut grad_acc);
+                        if compressed {
+                            let g_full = built
+                                .tape
+                                .grad(
+                                    built
+                                        .x_full
+                                        .expect("last stage reconstructs"),
+                                )
+                                .expect("g_full");
+                            s_acc
+                                .as_mut()
+                                .expect("last-stage accumulator")
+                                .add_assign(&linalg::matmul_tn(
+                                    g_full, g_full,
+                                ));
+                            s_count += 1;
+                        }
+                        let gc = built
+                            .tape
+                            .grad(built.input.expect("last stage input"))
+                            .expect("boundary gradient")
+                            .clone();
+                        let cf = encode_boundary(
+                            &cfg,
+                            &h,
+                            &gc,
+                            stage - 1,
+                            mb,
+                            BoundaryDir::Bwd,
+                            step,
+                        );
+                        boundary_payload += priced_frame(cf.wire_len());
+                        frames_sent += 1;
+                        links.left().send(&WireFrame::boundary(
+                            FrameKind::Bwd,
+                            cfg.mode,
+                            step,
+                            mb,
+                            cf.payload,
+                        ))?;
+                        saved[mb] = None;
+                    }
+                }
+                Task::Bwd(mb) => {
+                    // stages < last only: rebuild (rematerialization),
+                    // inject the delivered cotangent, ship the
+                    // input-gradient further left
+                    let (tok, _) = &batches[mb];
+                    let f = recv_expect(
+                        links.right(),
+                        FrameKind::Bwd,
+                        step,
+                        Some(mb as u32),
+                        stage,
+                        "right",
+                    )?;
+                    let delivered = decode_boundary(spec, &f, stage)?;
+                    let mut built = build_stage(
+                        &h,
+                        cfg.mode,
+                        stage,
+                        &st.params,
+                        StageIo {
+                            u: &global.u,
+                            e: &es[mb],
+                            tok,
+                            input: saved[mb].as_ref(),
+                            targets: None,
+                        },
+                    );
+                    built.tape.backward_from(built.output, delivered);
+                    accumulate_grads(&built, &mut grad_acc);
+                    if stage > 0 {
+                        let gc = built
+                            .tape
+                            .grad(built.input.expect("mid stage input"))
+                            .expect("boundary gradient")
+                            .clone();
+                        let cf = encode_boundary(
+                            &cfg,
+                            &h,
+                            &gc,
+                            stage - 1,
+                            mb,
+                            BoundaryDir::Bwd,
+                            step,
+                        );
+                        boundary_payload += priced_frame(cf.wire_len());
+                        frames_sent += 1;
+                        links.left().send(&WireFrame::boundary(
+                            FrameKind::Bwd,
+                            cfg.mode,
+                            step,
+                            mb,
+                            cf.payload,
+                        ))?;
+                    }
+                    saved[mb] = None;
+                }
+            }
+        }
+
+        // ---- average gradients, optimizer step (own stage only)
+        let scale = 1.0 / m_count as f32;
+        for g in grad_acc.iter_mut() {
+            g.scale(scale);
+        }
+        let lr = cfg.lr_at(step);
+        let u_now = global.u.clone();
+        step_stage(
+            &mut st,
+            &grad_acc,
+            &OptStep {
+                optim: spec.optim,
+                u: compressed.then_some(&u_now),
+                lr,
+                t: (step + 1) as f32,
+            },
+        );
+
+        // ---- StepEnd relay: loss bits (+ new U on Grassmann steps)
+        let due = compressed
+            && cfg.grassmann_interval > 0
+            && (step + 1) % cfg.grassmann_interval as u64 == 0
+            && s_count > 0;
+        if stage == last {
+            let mut payload = loss_sum.to_le_bytes().to_vec();
+            if due {
+                let acc = s_acc.as_mut().expect("last-stage accumulator");
+                global.u = grassmann_step_u(
+                    &global.u,
+                    acc,
+                    s_count,
+                    cfg.grassmann_eta,
+                );
+                reproject_stage(&mut st, &global.u);
+                *acc = Tensor::zeros(&[h.d, h.d]);
+                s_count = 0;
+                for x in &global.u.data {
+                    payload.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            frames_sent += 1;
+            links.left().send(&WireFrame::control(
+                FrameKind::StepEnd,
+                step,
+                payload,
+            ))?;
+        } else {
+            let f = recv_expect(
+                links.right(),
+                FrameKind::StepEnd,
+                step,
+                None,
+                stage,
+                "right",
+            )?;
+            let u_len = h.d * h.k * 4;
+            match f.payload.len() {
+                8 => {}
+                n if n == 8 + u_len => {
+                    let mut u_new = Vec::with_capacity(h.d * h.k);
+                    for c in f.payload[8..].chunks_exact(4) {
+                        u_new.push(f32::from_le_bytes([
+                            c[0], c[1], c[2], c[3],
+                        ]));
+                    }
+                    global.u = Tensor::new(vec![h.d, h.k], u_new);
+                    reproject_stage(&mut st, &global.u);
+                }
+                n => bail!(
+                    "stage {stage}: StepEnd payload is {n} B (expected 8 \
+                     or {})",
+                    8 + u_len
+                ),
+            }
+            let relayed_loss = f64::from_le_bytes(
+                f.payload[0..8].try_into().expect("8-byte loss prefix"),
+            );
+            if stage > 0 {
+                frames_sent += 1;
+                links.left().send(&f)?;
+            } else {
+                losses.push(relayed_loss / m_count as f64);
+                step_seconds.push(t0.elapsed().as_secs_f64());
+            }
+        }
+    }
+
+    // ---- graceful goodbye on both links (best effort)
+    let bye = WireFrame::control(FrameKind::Bye, spec.steps as u64, Vec::new());
+    if let Some(conn) = links.left.as_deref_mut() {
+        let _ = conn.send(&bye);
+    }
+    if let Some(conn) = links.right.as_deref_mut() {
+        let _ = conn.send(&bye);
+    }
+
+    let wire_bytes = links.left.as_deref().map_or(0, |c| c.bytes_sent())
+        + links.right.as_deref().map_or(0, |c| c.bytes_sent());
+    Ok(WorkerReport {
+        stage,
+        losses,
+        step_seconds,
+        boundary_payload_bytes: boundary_payload,
+        wire_bytes,
+        frames_sent,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// local multi-worker drivers (threads in one process)
+// ---------------------------------------------------------------------------
+
+/// Run the full distributed pipeline locally: P stage workers on OS
+/// threads, joined by the chosen transport (in-process channels, or
+/// real TCP sockets over loopback). Returns the aggregate report; any
+/// worker error — including a departed peer — propagates with its
+/// stage context.
+pub fn run_local(spec: &WorkerSpec, kind: TransportKind) -> Result<DistReport> {
+    spec.validate()?;
+    let p = spec.h.stages;
+    // per-stage (left, right) link ends
+    type LinkEnd = Option<Box<dyn Transport>>;
+    let mut ends: Vec<(LinkEnd, LinkEnd)> =
+        (0..p).map(|_| (None, None)).collect();
+    for link in 0..p - 1 {
+        let (a, b): (Box<dyn Transport>, Box<dyn Transport>) = match kind {
+            TransportKind::Channel => {
+                let (a, b) = channel_pair();
+                (Box::new(a), Box::new(b))
+            }
+            TransportKind::Tcp => {
+                let listener = std::net::TcpListener::bind("127.0.0.1:0")
+                    .context("binding loopback listener")?;
+                let addr = listener.local_addr()?;
+                let client = std::net::TcpStream::connect(addr)
+                    .with_context(|| format!("connecting loopback {addr}"))?;
+                let (server, _) = listener
+                    .accept()
+                    .context("accepting loopback connection")?;
+                (
+                    Box::new(TcpTransport::new(client)?),
+                    Box::new(TcpTransport::new(server)?),
+                )
+            }
+        };
+        ends[link].1 = Some(a); // stage `link`'s right end
+        ends[link + 1].0 = Some(b); // stage `link + 1`'s left end
+    }
+
+    let reports: Vec<Result<WorkerReport>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = ends
+            .drain(..)
+            .enumerate()
+            .map(|(stage, (left, right))| {
+                let spec = spec.clone();
+                scope.spawn(move || run_stage(&spec, stage, left, right))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|han| match han.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow::anyhow!("stage worker panicked")),
+            })
+            .collect()
+    });
+
+    let mut stage0: Option<WorkerReport> = None;
+    let mut boundary = 0u64;
+    let mut wire = 0u64;
+    let mut frames = 0u64;
+    for (stage, r) in reports.into_iter().enumerate() {
+        let r = r.with_context(|| format!("stage {stage} worker failed"))?;
+        boundary += r.boundary_payload_bytes;
+        wire += r.wire_bytes;
+        frames += r.frames_sent;
+        if stage == 0 {
+            stage0 = Some(r);
+        }
+    }
+    let stage0 = stage0.expect("stage 0 report");
+    Ok(DistReport {
+        losses: stage0.losses,
+        step_seconds: stage0.step_seconds,
+        boundary_payload_bytes: boundary,
+        wire_bytes: wire,
+        frames,
+        frame_payload_bytes: spec.cfg.boundary_bytes(&spec.h),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// standalone worker processes (`protomodels serve --stage i`)
+// ---------------------------------------------------------------------------
+
+/// Connection-establishment retry budget for `serve` workers: how long
+/// a dialing stage waits for its left neighbor's listener to appear.
+const DIAL_ATTEMPTS: usize = 120;
+const DIAL_BACKOFF_MS: u64 = 250;
+
+/// Run one stage as a standalone process over real TCP: stage `i` binds
+/// `host:port_base+i` for its right neighbor and dials
+/// `host:port_base+i−1` (with retries, so launch order is free). Blocks
+/// until the run completes; returns this worker's report (stage 0's
+/// carries the loss curve).
+pub fn serve_stage(
+    spec: &WorkerSpec,
+    stage: usize,
+    host: &str,
+    port_base: u16,
+) -> Result<WorkerReport> {
+    spec.validate()?;
+    let last = spec.h.stages - 1;
+    if stage > last {
+        bail!("--stage {stage} out of range for {} stages", spec.h.stages);
+    }
+    // bind our own listener before dialing left, so the successor can
+    // complete its dial regardless of process launch order
+    let listener = if stage < last {
+        let port = port_base
+            .checked_add(stage as u16)
+            .ok_or_else(|| anyhow::anyhow!("port base too high"))?;
+        Some(
+            std::net::TcpListener::bind((host, port))
+                .with_context(|| format!("binding {host}:{port}"))?,
+        )
+    } else {
+        None
+    };
+    let left: Option<Box<dyn Transport>> = if stage > 0 {
+        let port = port_base + (stage as u16) - 1;
+        let mut stream = None;
+        for attempt in 0..DIAL_ATTEMPTS {
+            match std::net::TcpStream::connect((host, port)) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) if attempt + 1 == DIAL_ATTEMPTS => {
+                    return Err(e).with_context(|| {
+                        format!(
+                            "stage {stage}: left neighbor never appeared \
+                             at {host}:{port}"
+                        )
+                    });
+                }
+                Err(_) => std::thread::sleep(
+                    std::time::Duration::from_millis(DIAL_BACKOFF_MS),
+                ),
+            }
+        }
+        Some(Box::new(TcpTransport::new(stream.expect("dialed"))?))
+    } else {
+        None
+    };
+    let right: Option<Box<dyn Transport>> = match listener {
+        Some(l) => {
+            let (s, peer) = l.accept().with_context(|| {
+                format!("stage {stage}: accepting the right neighbor")
+            })?;
+            eprintln!("[serve] stage {stage}: right neighbor {peer}");
+            Some(Box::new(TcpTransport::new(s)?))
+        }
+        None => None,
+    };
+    run_stage(spec, stage, left, right)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec(steps: usize) -> WorkerSpec {
+        WorkerSpec {
+            h: Hyper::tiny_native(),
+            cfg: PipelineConfig {
+                mode: Mode::Subspace,
+                microbatches: 2,
+                grassmann_interval: 0,
+                lr: 1e-2,
+                warmup_steps: 3,
+                total_steps: steps,
+                seed: 5,
+                ..Default::default()
+            },
+            optim: Optim::AdamW,
+            steps,
+            corpus_kind: CorpusKind::Wiki,
+            corpus_tokens: 50_000,
+        }
+    }
+
+    #[test]
+    fn digest_is_sensitive_to_numerics_fields_only() {
+        let a = tiny_spec(4);
+        let mut b = tiny_spec(4);
+        assert_eq!(a.digest(), b.digest());
+        b.cfg.seed ^= 1;
+        assert_ne!(a.digest(), b.digest());
+        let mut c = tiny_spec(4);
+        c.cfg.mode = Mode::Raw;
+        assert_ne!(a.digest(), c.digest());
+        // the virtual-clock model cannot change the loss curve: excluded
+        let mut d = tiny_spec(4);
+        d.cfg.event_sim = true;
+        d.cfg.record_grads = true;
+        assert_eq!(a.digest(), d.digest());
+    }
+
+    #[test]
+    fn wave_orders_cover_every_microbatch_once() {
+        for schedule in [Schedule::Gpipe, Schedule::OneFOneB] {
+            for stages in [2usize, 4] {
+                for stage in 0..stages {
+                    for m in [1usize, 2, 5, 8] {
+                        let order = wave_order(schedule, stages, stage, m);
+                        let mut fwd = vec![0usize; m];
+                        let mut bwd = vec![0usize; m];
+                        let mut last_bwd = None;
+                        for t in &order {
+                            match *t {
+                                Task::Fwd(mb) => fwd[mb] += 1,
+                                Task::Bwd(mb) => {
+                                    // backwards strictly ascending — the
+                                    // bitwise grad-accumulation contract
+                                    let in_order = match last_bwd {
+                                        None => mb == 0,
+                                        Some(p) => mb == p + 1,
+                                    };
+                                    assert!(
+                                        in_order,
+                                        "bwd order broke at {mb}"
+                                    );
+                                    last_bwd = Some(mb);
+                                    // fwd must precede its own bwd
+                                    assert_eq!(fwd[mb], 1, "mb {mb}");
+                                    bwd[mb] += 1;
+                                }
+                            }
+                        }
+                        assert!(fwd.iter().all(|&c| c == 1));
+                        if stage == stages - 1 {
+                            // last stage fuses: no separate bwd tasks
+                            assert!(bwd.iter().all(|&c| c == 0));
+                        } else {
+                            assert!(bwd.iter().all(|&c| c == 1));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_bounds_in_flight_forwards() {
+        // at most P − s forwards may run before the first backward
+        let order = wave_order(Schedule::OneFOneB, 4, 1, 8);
+        let before_first_bwd = order
+            .iter()
+            .take_while(|t| matches!(**t, Task::Fwd(_)))
+            .count();
+        assert_eq!(before_first_bwd, 3);
+        // gpipe drains every forward first
+        let order = wave_order(Schedule::Gpipe, 4, 1, 8);
+        let before_first_bwd = order
+            .iter()
+            .take_while(|t| matches!(**t, Task::Fwd(_)))
+            .count();
+        assert_eq!(before_first_bwd, 8);
+    }
+
+    #[test]
+    fn interleaved_schedule_rejected() {
+        let mut spec = tiny_spec(2);
+        spec.cfg.schedule = Schedule::Interleaved { chunks: 2 };
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("interleaved"), "{err}");
+    }
+
+    #[test]
+    fn transport_kind_parse_roundtrip() {
+        for k in [TransportKind::Channel, TransportKind::Tcp] {
+            assert_eq!(TransportKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(TransportKind::parse("carrier-pigeon").is_err());
+    }
+}

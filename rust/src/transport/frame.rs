@@ -1,0 +1,393 @@
+//! The framed wire protocol for boundary tensors (DESIGN.md §11).
+//!
+//! Every message between stage workers is one length-prefixed frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"PMF1"
+//! 4       1     kind   (0 hello, 1 fwd, 2 bwd, 3 step-end, 4 bye)
+//! 5       1     codec  Mode::wire_tag for boundary frames, 0xFF control
+//! 6       2     reserved (zero)
+//! 8       8     step        u64 LE
+//! 16      4     microbatch  u32 LE
+//! 20      4     payload_len u32 LE
+//! 24      …     payload     exactly payload_len bytes
+//! ```
+//!
+//! The payload of a boundary frame is **the exact byte string the
+//! [`crate::compress`] codecs emit** (`compress::Frame::payload`) — no
+//! re-serialization layer — so a boundary frame's `payload_len` equals
+//! `compress::wire_bytes` for every codec whose rust-side frame is the
+//! wire representation (all modes except PowerLR, whose dense frame
+//! stands in for factor shipping; see [`crate::compress::encode`]).
+//! Tensor shapes travel out-of-band: both ends derive them from the
+//! handshaked config, exactly as the AOT entry-point shapes are static.
+//!
+//! Decoding is hardened for untrusted sockets: magic/kind/codec bytes
+//! are validated before the length is trusted, and `payload_len` is
+//! rejected against [`MAX_PAYLOAD`] *before* any allocation, so a
+//! corrupt or hostile peer cannot trigger a multi-gigabyte allocation
+//! with a 24-byte header.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress::Mode;
+
+/// Frame header magic (`b"PMF1"` — Protocol Models Frame v1).
+pub const MAGIC: [u8; 4] = *b"PMF1";
+
+/// Serialized header length in bytes.
+pub const HEADER_LEN: usize = 24;
+
+/// Hard ceiling on a frame payload (256 MiB). Far above any boundary
+/// tensor this repo ships, far below an allocation that could hurt.
+pub const MAX_PAYLOAD: usize = 1 << 28;
+
+/// Codec byte used by control frames (no tensor payload semantics).
+pub const CODEC_NONE: u8 = 0xFF;
+
+/// What a frame carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// handshake: payload is the sender's config digest
+    Hello,
+    /// forward boundary activation payload
+    Fwd,
+    /// backward activation-gradient payload
+    Bwd,
+    /// end-of-step relay: loss sum (+ optional new U basis) toward stage 0
+    StepEnd,
+    /// graceful goodbye before closing the connection
+    Bye,
+}
+
+impl FrameKind {
+    /// Wire byte of this kind.
+    pub fn tag(self) -> u8 {
+        match self {
+            FrameKind::Hello => 0,
+            FrameKind::Fwd => 1,
+            FrameKind::Bwd => 2,
+            FrameKind::StepEnd => 3,
+            FrameKind::Bye => 4,
+        }
+    }
+
+    /// Inverse of [`FrameKind::tag`].
+    pub fn from_tag(tag: u8) -> Option<FrameKind> {
+        Some(match tag {
+            0 => FrameKind::Hello,
+            1 => FrameKind::Fwd,
+            2 => FrameKind::Bwd,
+            3 => FrameKind::StepEnd,
+            4 => FrameKind::Bye,
+            _ => return None,
+        })
+    }
+
+    /// Human-readable label for protocol errors.
+    pub fn name(self) -> &'static str {
+        match self {
+            FrameKind::Hello => "hello",
+            FrameKind::Fwd => "fwd",
+            FrameKind::Bwd => "bwd",
+            FrameKind::StepEnd => "step-end",
+            FrameKind::Bye => "bye",
+        }
+    }
+}
+
+/// One parsed wire frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireFrame {
+    /// what this frame carries
+    pub kind: FrameKind,
+    /// boundary codec of the payload (`None` for control frames)
+    pub codec: Option<Mode>,
+    /// optimizer step the frame belongs to
+    pub step: u64,
+    /// microbatch index (0 for control frames)
+    pub microbatch: u32,
+    /// payload bytes — for boundary frames, exactly the
+    /// [`crate::compress`] codec output
+    pub payload: Vec<u8>,
+}
+
+impl WireFrame {
+    /// A control frame (hello / step-end / bye).
+    pub fn control(kind: FrameKind, step: u64, payload: Vec<u8>) -> WireFrame {
+        WireFrame { kind, codec: None, step, microbatch: 0, payload }
+    }
+
+    /// A boundary frame wrapping one codec payload.
+    pub fn boundary(
+        kind: FrameKind,
+        codec: Mode,
+        step: u64,
+        microbatch: usize,
+        payload: Vec<u8>,
+    ) -> WireFrame {
+        debug_assert!(matches!(kind, FrameKind::Fwd | FrameKind::Bwd));
+        WireFrame {
+            kind,
+            codec: Some(codec),
+            step,
+            microbatch: microbatch as u32,
+            payload,
+        }
+    }
+
+    /// Total bytes this frame occupies on the wire.
+    pub fn wire_len(&self) -> usize {
+        HEADER_LEN + self.payload.len()
+    }
+
+    /// Serialize to one contiguous buffer (header + payload).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_len());
+        out.extend_from_slice(&MAGIC);
+        out.push(self.kind.tag());
+        out.push(self.codec.map(Mode::wire_tag).unwrap_or(CODEC_NONE));
+        out.extend_from_slice(&[0u8; 2]); // reserved
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.extend_from_slice(&self.microbatch.to_le_bytes());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Write this frame to a stream as one buffer (a single syscall on
+    /// sockets — keeps small control frames from fragmenting).
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        if self.payload.len() > MAX_PAYLOAD {
+            bail!(
+                "refusing to send a {} B payload (> MAX_PAYLOAD {})",
+                self.payload.len(),
+                MAX_PAYLOAD
+            );
+        }
+        w.write_all(&self.to_bytes())
+            .context("writing wire frame")?;
+        Ok(())
+    }
+
+    /// Read one frame, tolerating arbitrarily fragmented reads (TCP
+    /// segments, 1-byte test readers): `read_exact` loops until the
+    /// header and payload are complete or the stream ends. A stream end
+    /// mid-frame is reported as a departed peer.
+    pub fn read_from(r: &mut impl Read) -> Result<WireFrame> {
+        let mut header = [0u8; HEADER_LEN];
+        r.read_exact(&mut header).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                anyhow::anyhow!(
+                    "worker departed: connection closed before a \
+                     complete frame header"
+                )
+            } else {
+                anyhow::anyhow!("reading frame header: {e}")
+            }
+        })?;
+        let (kind, codec, step, microbatch, len) = parse_header(&header)?;
+        let mut payload = vec![0u8; len];
+        r.read_exact(&mut payload).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                anyhow::anyhow!(
+                    "worker departed: connection closed mid-payload \
+                     (expected {len} B)"
+                )
+            } else {
+                anyhow::anyhow!("reading {len} B frame payload: {e}")
+            }
+        })?;
+        Ok(WireFrame { kind, codec, step, microbatch, payload })
+    }
+}
+
+/// Validate and destructure a serialized header. Pure — shared by the
+/// stream reader and the header unit tests. The payload length is
+/// checked against [`MAX_PAYLOAD`] here, before any allocation.
+pub fn parse_header(
+    h: &[u8; HEADER_LEN],
+) -> Result<(FrameKind, Option<Mode>, u64, u32, usize)> {
+    if h[0..4] != MAGIC {
+        bail!(
+            "bad frame magic {:02x?} (expected {:02x?}) — peer is not \
+             speaking the protomodels wire protocol",
+            &h[0..4],
+            MAGIC
+        );
+    }
+    let kind = FrameKind::from_tag(h[4])
+        .ok_or_else(|| anyhow::anyhow!("unknown frame kind byte {}", h[4]))?;
+    let codec = match h[5] {
+        CODEC_NONE => None,
+        tag => Some(Mode::from_wire_tag(tag).ok_or_else(|| {
+            anyhow::anyhow!("unknown boundary codec byte {tag}")
+        })?),
+    };
+    let step = u64::from_le_bytes([
+        h[8], h[9], h[10], h[11], h[12], h[13], h[14], h[15],
+    ]);
+    let microbatch = u32::from_le_bytes([h[16], h[17], h[18], h[19]]);
+    let len = u32::from_le_bytes([h[20], h[21], h[22], h[23]]) as usize;
+    if len > MAX_PAYLOAD {
+        bail!(
+            "frame payload length {len} exceeds MAX_PAYLOAD {MAX_PAYLOAD} \
+             — rejecting before allocation"
+        );
+    }
+    Ok((kind, codec, step, microbatch, len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    /// A reader that hands out at most `chunk` bytes per `read` call —
+    /// models short reads on a congested socket.
+    struct Trickle<'a> {
+        data: &'a [u8],
+        pos: usize,
+        chunk: usize,
+    }
+
+    impl Read for Trickle<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            let n = buf
+                .len()
+                .min(self.chunk)
+                .min(self.data.len() - self.pos);
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    fn sample_frame() -> WireFrame {
+        WireFrame::boundary(
+            FrameKind::Fwd,
+            Mode::Subspace,
+            42,
+            3,
+            vec![1, 2, 3, 4, 5, 6, 7, 8],
+        )
+    }
+
+    #[test]
+    fn roundtrip_through_bytes() {
+        let f = sample_frame();
+        let bytes = f.to_bytes();
+        assert_eq!(bytes.len(), f.wire_len());
+        let g = WireFrame::read_from(&mut Cursor::new(&bytes)).unwrap();
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn control_frames_carry_no_codec() {
+        let f = WireFrame::control(FrameKind::StepEnd, 7, vec![0u8; 8]);
+        let bytes = f.to_bytes();
+        assert_eq!(bytes[5], CODEC_NONE);
+        let g = WireFrame::read_from(&mut Cursor::new(&bytes)).unwrap();
+        assert_eq!(g.codec, None);
+        assert_eq!(g.kind, FrameKind::StepEnd);
+        assert_eq!(g.step, 7);
+    }
+
+    #[test]
+    fn survives_one_byte_reads() {
+        // partial/short reads: the reader loops until the frame is whole
+        let f = sample_frame();
+        let bytes = f.to_bytes();
+        let mut r = Trickle { data: &bytes, pos: 0, chunk: 1 };
+        let g = WireFrame::read_from(&mut r).unwrap();
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn truncated_header_and_payload_report_departure() {
+        let bytes = sample_frame().to_bytes();
+        // cut inside the header
+        let err = WireFrame::read_from(&mut Cursor::new(&bytes[..10]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("departed"), "{err}");
+        // cut inside the payload
+        let err = WireFrame::read_from(&mut Cursor::new(
+            &bytes[..HEADER_LEN + 3],
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("departed"), "{err}");
+        // clean EOF before any bytes is also a departure, not a panic
+        let err = WireFrame::read_from(&mut Cursor::new(&[] as &[u8]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("departed"), "{err}");
+    }
+
+    #[test]
+    fn oversized_length_rejected_before_allocation() {
+        let mut bytes = sample_frame().to_bytes();
+        bytes[20..24]
+            .copy_from_slice(&((MAX_PAYLOAD as u32) + 1).to_le_bytes());
+        let err = WireFrame::read_from(&mut Cursor::new(&bytes))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("MAX_PAYLOAD"), "{err}");
+    }
+
+    #[test]
+    fn bad_magic_kind_and_codec_rejected() {
+        let good = sample_frame().to_bytes();
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(WireFrame::read_from(&mut Cursor::new(&bad))
+            .unwrap_err()
+            .to_string()
+            .contains("magic"));
+        let mut bad = good.clone();
+        bad[4] = 99;
+        assert!(WireFrame::read_from(&mut Cursor::new(&bad))
+            .unwrap_err()
+            .to_string()
+            .contains("kind"));
+        let mut bad = good;
+        bad[5] = 42;
+        assert!(WireFrame::read_from(&mut Cursor::new(&bad))
+            .unwrap_err()
+            .to_string()
+            .contains("codec"));
+    }
+
+    #[test]
+    fn interleaved_microbatches_parse_in_order() {
+        // two microbatches' frames back-to-back in one stream — headers
+        // keep them apart without any out-of-band framing
+        let f0 = WireFrame::boundary(
+            FrameKind::Fwd,
+            Mode::Raw,
+            5,
+            0,
+            vec![0xA0; 16],
+        );
+        let f1 = WireFrame::boundary(
+            FrameKind::Fwd,
+            Mode::Raw,
+            5,
+            1,
+            vec![0xB1; 24],
+        );
+        let mut stream = f0.to_bytes();
+        stream.extend_from_slice(&f1.to_bytes());
+        let mut cur = Cursor::new(&stream);
+        let g0 = WireFrame::read_from(&mut cur).unwrap();
+        let g1 = WireFrame::read_from(&mut cur).unwrap();
+        assert_eq!(g0, f0);
+        assert_eq!(g1, f1);
+        assert_eq!(g0.microbatch, 0);
+        assert_eq!(g1.microbatch, 1);
+    }
+}
