@@ -1,0 +1,477 @@
+//! Checkpoint payload codec for elastic recovery (DESIGN.md §12).
+//!
+//! A stage worker periodically serializes its trainable state — stage
+//! parameters, AdamW moments, the shared basis U, and (last stage only)
+//! the Grassmann activation accumulator — into one `Checkpoint` frame
+//! payload. Two codecs:
+//!
+//! - [`CkptCodec::Raw`] — every tensor dense f32. Restore is **bitwise**:
+//!   a run resumed from a raw checkpoint reproduces the unfailed run's
+//!   loss curve exactly (the flagship chaos test's contract).
+//! - [`CkptCodec::Coeff`] — subspace-constrained parameters (`wp1`,
+//!   `wp2`, `t_s`; see `stage::constrained`) ship as their k-dim row
+//!   coefficients `P·U`, the checkpoint analogue of the boundary scheme;
+//!   the byte cost of each such tensor is *exactly*
+//!   [`crate::compress::dp_wire_bytes`] under the run's mode. Optimizer
+//!   moments always ship raw — `m`/`v` are not subspace-closed (the
+//!   moment of a projected gradient is not itself projected), so
+//!   compressing them would corrupt the optimizer.
+//!
+//! Layout (little-endian; `PMCK` magic, then a 32-byte header):
+//!
+//! ```text
+//! magic     4 B   "PMCK"
+//! mode      1 B   compress::Mode::wire_tag of the training run
+//! codec     1 B   CkptCodec tag (0 raw, 1 coeff)
+//! flags     1 B   bit 0: s_acc present
+//! reserved  1 B   zero
+//! step      8 B   u64 — first un-trained step (checkpoint boundary)
+//! stage     4 B   u32 — stage index the state belongs to
+//! n_params  4 B   u32 — schema length, validated on decode
+//! s_count   8 B   u64 — samples in the Grassmann accumulator
+//! ```
+//!
+//! followed by U (d·k f32), then per schema slot: param bytes (coeff or
+//! raw), m (raw), v (raw), and finally s_acc (d·d f32) when flagged.
+//! The analytic size is [`crate::memory::checkpoint_payload_bytes`];
+//! tests here pin encoder output length to that formula.
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg;
+use crate::stage::{constrained, StageState};
+use crate::tensor::Tensor;
+
+use super::Mode;
+
+/// Checkpoint payload magic.
+pub const CKPT_MAGIC: [u8; 4] = *b"PMCK";
+
+/// Fixed checkpoint header length (magic included), in bytes.
+pub const CKPT_HEADER_LEN: usize = 32;
+
+/// How parameter tensors are serialized inside a checkpoint payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CkptCodec {
+    /// Dense f32 for everything — bitwise-exact restore.
+    Raw,
+    /// Subspace-constrained parameters as k-dim row coefficients `P·U`
+    /// (priced by `dp_wire_bytes`); everything else dense.
+    Coeff,
+}
+
+impl CkptCodec {
+    /// Parse a CLI label (`"raw"` / `"coeff"`).
+    pub fn parse(s: &str) -> Result<CkptCodec> {
+        match s {
+            "raw" => Ok(CkptCodec::Raw),
+            "coeff" => Ok(CkptCodec::Coeff),
+            other => bail!(
+                "unknown checkpoint codec {other:?} (expected raw|coeff)"
+            ),
+        }
+    }
+
+    /// Canonical label.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CkptCodec::Raw => "raw",
+            CkptCodec::Coeff => "coeff",
+        }
+    }
+
+    /// Stable one-byte identifier in the checkpoint header. Part of the
+    /// wire format: never reorder, only append.
+    pub fn tag(self) -> u8 {
+        match self {
+            CkptCodec::Raw => 0,
+            CkptCodec::Coeff => 1,
+        }
+    }
+
+    /// Inverse of [`CkptCodec::tag`].
+    pub fn from_tag(tag: u8) -> Option<CkptCodec> {
+        match tag {
+            0 => Some(CkptCodec::Raw),
+            1 => Some(CkptCodec::Coeff),
+            _ => None,
+        }
+    }
+}
+
+/// True when `codec` stores this parameter as subspace coefficients
+/// under `mode` (constrained name + compressed mode + coeff codec).
+fn coeff_encoded(name: &str, mode: Mode, codec: CkptCodec) -> bool {
+    codec == CkptCodec::Coeff
+        && matches!(mode, Mode::Subspace | Mode::NoFixed)
+        && constrained(name)
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn take_f32s(buf: &[u8], off: &mut usize, n: usize) -> Result<Vec<f32>> {
+    let need = n * 4;
+    let Some(chunk) = buf.get(*off..*off + need) else {
+        bail!(
+            "checkpoint truncated: need {need} B at offset {off} of a \
+             {} B payload",
+            buf.len()
+        );
+    };
+    *off += need;
+    Ok(chunk
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// The non-`StageState` half of a decoded checkpoint: everything the
+/// worker restores *around* the parameters.
+#[derive(Clone)]
+pub struct StageCheckpoint {
+    /// stage index recorded in the header
+    pub stage: usize,
+    /// first un-trained step — training resumes here
+    pub step: u64,
+    /// shared subspace basis U at the boundary
+    pub u: Tensor,
+    /// Grassmann activation accumulator (last stage, compressed modes)
+    pub s_acc: Option<Tensor>,
+    /// samples in `s_acc`
+    pub s_count: u64,
+}
+
+/// Serialize one stage's trainable state at a step boundary.
+pub fn encode_stage(
+    st: &StageState,
+    u: &Tensor,
+    s_acc: Option<&Tensor>,
+    s_count: u64,
+    step: u64,
+    mode: Mode,
+    codec: CkptCodec,
+) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&CKPT_MAGIC);
+    out.push(mode.wire_tag());
+    out.push(codec.tag());
+    out.push(u8::from(s_acc.is_some()));
+    out.push(0);
+    out.extend_from_slice(&step.to_le_bytes());
+    out.extend_from_slice(&(st.stage as u32).to_le_bytes());
+    out.extend_from_slice(&(st.schema.len() as u32).to_le_bytes());
+    out.extend_from_slice(&s_count.to_le_bytes());
+    debug_assert_eq!(out.len(), CKPT_HEADER_LEN);
+    put_f32s(&mut out, &u.data);
+    for (i, (name, _)) in st.schema.iter().enumerate() {
+        if coeff_encoded(name, mode, codec) {
+            put_f32s(&mut out, &linalg::matmul(&st.params[i], u).data);
+        } else {
+            put_f32s(&mut out, &st.params[i].data);
+        }
+        put_f32s(&mut out, &st.m[i].data);
+        put_f32s(&mut out, &st.v[i].data);
+    }
+    if let Some(s) = s_acc {
+        put_f32s(&mut out, &s.data);
+    }
+    out
+}
+
+/// Restore a stage from a checkpoint payload: parameters and moments are
+/// written into `st` (whose schema must match the encoder's), and the
+/// surrounding state comes back as a [`StageCheckpoint`]. `d`/`k` are
+/// the run's subspace dimensions (they size U and the coefficient
+/// expansion); `mode` must equal the training run's boundary mode.
+pub fn decode_stage(
+    bytes: &[u8],
+    st: &mut StageState,
+    d: usize,
+    k: usize,
+    mode: Mode,
+) -> Result<StageCheckpoint> {
+    if bytes.len() < CKPT_HEADER_LEN {
+        bail!(
+            "checkpoint truncated: {} B is shorter than the {CKPT_HEADER_LEN} \
+             B header",
+            bytes.len()
+        );
+    }
+    if bytes[0..4] != CKPT_MAGIC {
+        bail!("bad checkpoint magic {:02x?}", &bytes[0..4]);
+    }
+    let got_mode = Mode::from_wire_tag(bytes[4])
+        .with_context(|| format!("unknown checkpoint mode tag {}", bytes[4]))?;
+    if got_mode != mode {
+        bail!(
+            "checkpoint mode {} does not match the run's mode {}",
+            got_mode.as_str(),
+            mode.as_str()
+        );
+    }
+    let codec = CkptCodec::from_tag(bytes[5])
+        .with_context(|| format!("unknown checkpoint codec tag {}", bytes[5]))?;
+    let has_s_acc = bytes[6] & 1 == 1;
+    let step = u64::from_le_bytes(bytes[8..16].try_into().expect("u64"));
+    let stage =
+        u32::from_le_bytes(bytes[16..20].try_into().expect("u32")) as usize;
+    let n_params =
+        u32::from_le_bytes(bytes[20..24].try_into().expect("u32")) as usize;
+    let s_count = u64::from_le_bytes(bytes[24..32].try_into().expect("u64"));
+    if stage != st.stage {
+        bail!(
+            "checkpoint for stage {stage} offered to stage {}",
+            st.stage
+        );
+    }
+    if n_params != st.schema.len() {
+        bail!(
+            "checkpoint schema length {n_params} != local schema {}",
+            st.schema.len()
+        );
+    }
+    let mut off = CKPT_HEADER_LEN;
+    let u = Tensor::new(vec![d, k], take_f32s(bytes, &mut off, d * k)?);
+    for i in 0..st.schema.len() {
+        let (name, shape) = st.schema[i].clone();
+        let numel: usize = shape.iter().product();
+        if coeff_encoded(&name, mode, codec) {
+            let rows = numel / d;
+            let coeff = Tensor::new(
+                vec![rows, k],
+                take_f32s(bytes, &mut off, rows * k)?,
+            );
+            let mut p = linalg::matmul_nt(&coeff, &u);
+            p.shape = shape;
+            st.params[i] = p;
+        } else {
+            st.params[i] = Tensor::new(
+                shape.clone(),
+                take_f32s(bytes, &mut off, numel)?,
+            );
+        }
+        st.m[i] =
+            Tensor::new(shape.clone(), take_f32s(bytes, &mut off, numel)?);
+        st.v[i] = Tensor::new(shape, take_f32s(bytes, &mut off, numel)?);
+    }
+    let s_acc = if has_s_acc {
+        Some(Tensor::new(vec![d, d], take_f32s(bytes, &mut off, d * d)?))
+    } else {
+        None
+    };
+    if off != bytes.len() {
+        bail!(
+            "checkpoint has {} trailing bytes past the decoded state",
+            bytes.len() - off
+        );
+    }
+    Ok(StageCheckpoint { stage, step, u, s_acc, s_count })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Hyper;
+    use crate::rng::Rng;
+    use crate::stage::GlobalState;
+
+    fn setup(mode: Mode, stage: usize) -> (Hyper, GlobalState, StageState) {
+        let h = Hyper::tiny_native();
+        let mut rng = Rng::new(31);
+        let g = GlobalState::from_hyper(&h, &mut rng);
+        let st = StageState::from_schema(
+            h.stage_schema(stage),
+            h.stage_kind(stage),
+            stage,
+            mode,
+            &g,
+            &mut rng,
+        )
+        .unwrap();
+        (h, g, st)
+    }
+
+    fn scramble_moments(st: &mut StageState, rng: &mut Rng) {
+        for t in st.m.iter_mut().chain(st.v.iter_mut()) {
+            t.data = rng.normal_f32_vec(t.numel(), 0.5);
+        }
+    }
+
+    #[test]
+    fn raw_codec_roundtrips_bitwise() {
+        let (h, g, mut st) = setup(Mode::Subspace, 0);
+        let mut rng = Rng::new(5);
+        scramble_moments(&mut st, &mut rng);
+        let bytes = encode_stage(
+            &st,
+            &g.u,
+            None,
+            0,
+            12,
+            Mode::Subspace,
+            CkptCodec::Raw,
+        );
+        let mut fresh = setup(Mode::Subspace, 0).2;
+        let ck = decode_stage(&bytes, &mut fresh, h.d, h.k, Mode::Subspace)
+            .unwrap();
+        assert_eq!(ck.step, 12);
+        assert_eq!(ck.u.data, g.u.data);
+        assert!(ck.s_acc.is_none());
+        for i in 0..st.params.len() {
+            assert_eq!(fresh.params[i].data, st.params[i].data, "param {i}");
+            assert_eq!(fresh.m[i].data, st.m[i].data, "m {i}");
+            assert_eq!(fresh.v[i].data, st.v[i].data, "v {i}");
+        }
+    }
+
+    #[test]
+    fn coeff_codec_restores_within_projection_error_and_stays_in_s() {
+        let (h, g, mut st) = setup(Mode::Subspace, 0);
+        let mut rng = Rng::new(6);
+        scramble_moments(&mut st, &mut rng);
+        let bytes = encode_stage(
+            &st,
+            &g.u,
+            None,
+            0,
+            3,
+            Mode::Subspace,
+            CkptCodec::Coeff,
+        );
+        let mut fresh = setup(Mode::Subspace, 0).2;
+        decode_stage(&bytes, &mut fresh, h.d, h.k, Mode::Subspace).unwrap();
+        for (i, (name, _)) in st.schema.iter().enumerate() {
+            let (a, b) = (&st.params[i], &fresh.params[i]);
+            assert_eq!(a.shape, b.shape);
+            let err: f32 = a
+                .data
+                .iter()
+                .zip(&b.data)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0, f32::max);
+            if constrained(name) {
+                // params start in S, so P·U·Uᵀ ≈ P to float rounding
+                assert!(err < 1e-4, "{name}: coeff error {err}");
+            } else {
+                assert_eq!(a.data, b.data, "{name} must ship raw");
+            }
+            // moments are never compressed, even on constrained slots
+            assert_eq!(fresh.m[i].data, st.m[i].data, "m {i}");
+            assert_eq!(fresh.v[i].data, st.v[i].data, "v {i}");
+        }
+        assert!(fresh.subspace_leak(&g.u) < 1e-5);
+    }
+
+    #[test]
+    fn payload_length_matches_memory_model_for_all_codecs() {
+        let h = Hyper::tiny_native();
+        for stage in 0..h.stages {
+            let (_, g, st) = setup(Mode::Subspace, stage);
+            let last = stage == h.stages - 1;
+            let s_acc = last.then(|| Tensor::zeros(&[h.d, h.d]));
+            for codec in [CkptCodec::Raw, CkptCodec::Coeff] {
+                let bytes = encode_stage(
+                    &st,
+                    &g.u,
+                    s_acc.as_ref(),
+                    7,
+                    9,
+                    Mode::Subspace,
+                    codec,
+                );
+                assert_eq!(
+                    bytes.len(),
+                    crate::memory::checkpoint_payload_bytes(
+                        &h,
+                        stage,
+                        Mode::Subspace,
+                        codec,
+                        last,
+                    ),
+                    "stage {stage} {codec:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn coeff_constrained_tensors_cost_exactly_dp_wire_bytes() {
+        let (h, g, st) = setup(Mode::Subspace, 0);
+        let raw = encode_stage(
+            &st, &g.u, None, 0, 0, Mode::Subspace, CkptCodec::Raw,
+        );
+        let coeff = encode_stage(
+            &st, &g.u, None, 0, 0, Mode::Subspace, CkptCodec::Coeff,
+        );
+        let constrained_elems: usize = st
+            .schema
+            .iter()
+            .filter(|(n, _)| constrained(n))
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum();
+        let saved = raw.len() - coeff.len();
+        assert_eq!(
+            saved,
+            constrained_elems * 4
+                - crate::compress::dp_wire_bytes(
+                    Mode::Subspace,
+                    constrained_elems,
+                    h.d,
+                    h.k,
+                    h.ratio,
+                ),
+            "coeff savings must equal the dp_wire_bytes discount"
+        );
+    }
+
+    #[test]
+    fn corrupt_and_mismatched_payloads_are_rejected() {
+        let (h, g, st) = setup(Mode::Subspace, 1);
+        let bytes = encode_stage(
+            &st,
+            &g.u,
+            None,
+            0,
+            2,
+            Mode::Subspace,
+            CkptCodec::Raw,
+        );
+        let mut fresh = setup(Mode::Subspace, 1).2;
+        // truncation
+        let err = decode_stage(
+            &bytes[..bytes.len() / 2],
+            &mut fresh,
+            h.d,
+            h.k,
+            Mode::Subspace,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("truncated"), "{err}");
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        let err =
+            decode_stage(&bad, &mut fresh, h.d, h.k, Mode::Subspace)
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("magic"), "{err}");
+        // wrong mode
+        let err = decode_stage(&bytes, &mut fresh, h.d, h.k, Mode::Raw)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mode"), "{err}");
+        // wrong stage
+        let mut other = setup(Mode::Subspace, 2).2;
+        let err =
+            decode_stage(&bytes, &mut other, h.d, h.k, Mode::Subspace)
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("stage"), "{err}");
+    }
+}

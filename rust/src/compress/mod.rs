@@ -11,7 +11,11 @@
 //!     is backed by an actual serialization a deployment would ship —
 //!     tested for round-trip fidelity where the scheme is lossless.
 
+pub mod ckpt;
+
 use anyhow::{bail, Result};
+
+pub use ckpt::{CkptCodec, StageCheckpoint};
 
 use crate::tensor::Tensor;
 

@@ -9,7 +9,7 @@
 use anyhow::{bail, Result};
 
 use protomodels::cli::Flags;
-use protomodels::compress::Mode;
+use protomodels::compress::{CkptCodec, Mode};
 use protomodels::coordinator::replica::{ReplicaConfig, ReplicaSet};
 use protomodels::coordinator::{Backend, BackendKind, Pipeline, PipelineConfig};
 use protomodels::data::{Corpus, CorpusKind};
@@ -19,9 +19,12 @@ use protomodels::metrics::{perplexity, RunLog};
 use protomodels::netsim::{LinkSpec, ReplicaRing, Topology};
 use protomodels::par;
 use protomodels::rng::Rng;
-use protomodels::sim::{simulate_swarm, ChurnSpec, Schedule, SwarmSpec};
+use protomodels::sim::{simulate_swarm, ChurnSpec, ChurnTimeline, Schedule, SwarmSpec};
 use protomodels::timemodel::{SlowdownProfile, TimeModel};
-use protomodels::transport::{self, TransportKind, WorkerSpec};
+use protomodels::transport::{
+    self, ElasticSpec, FaultFamily, FaultPlan, FaultSchedule, LinkSide,
+    TransportKind, WorkerSpec,
+};
 
 fn usage() -> ! {
     eprintln!(
@@ -39,11 +42,16 @@ USAGE:
                       [--replicas R] [--dp-mode subspace|raw|topk|quant]
                       [--dp-bandwidth 80mbps] [--hetero 1,1,2]
                       [--transport channel|tcp]  (native backend only)
+                      [--chaos kill:W@S,join:W@S] [--fault drop|delay|sever]
+                      [--fault-seed N] [--ckpt-every N] [--ckpt-codec raw|coeff]
+                      [--stale-ms 5000] [--hb-every 1] [--spares 1]
+                      [--max-epochs 8]           (elastic native runtime)
                       [--artifacts artifacts] [--out results] [--label NAME]
   protomodels serve   --stage I [--config tiny] [--mode subspace] [--steps 200]
                       [--microbatches 4] [--seed 17] [--optim adamw]
                       [--schedule gpipe|1f1b] [--grassmann 0]
                       [--host 127.0.0.1] [--port-base 7070]
+                      [--elastic] [--spare] [+ elastic train flags]
   protomodels sim     [--preset base|small] [--replicas 4] [--steps 5]
                       [--bandwidth 80mbps] [--dp-bandwidth 80mbps]
                       [--mode subspace] [--dp-mode subspace]
@@ -80,6 +88,17 @@ run (DESIGN.md §11). `serve --stage I` runs one stage as a standalone
 TCP worker process: launch one per stage with identical flags (stage I
 listens on port-base+I; launch order is free) and stage 0 prints the
 curve.
+
+`train --chaos` / `--fault` (native backend) runs the elastic runtime
+(DESIGN.md §12): stage workers emit heartbeats and ship compressed
+per-stage checkpoints every --ckpt-every steps; a supervisor detects
+departed workers by heartbeat staleness (--stale-ms), consumes a spare
+for each permanent leave, and resumes every stage from the newest
+complete checkpoint boundary. --chaos scripts deterministic worker
+kills/rejoins; --fault injects a seeded drop/delay/sever schedule into
+a chain link. With --ckpt-codec raw the recovered loss curve is bitwise
+identical to the no-churn run. `serve --elastic` runs the same runtime
+across processes: stage 0 leads, `serve --spare` enrolls hot standbys.
 
 `train --backend native` trains on the in-process autodiff backend
 (DESIGN.md §10): artifact-free and PJRT-free, losses computed natively,
@@ -163,6 +182,124 @@ fn native_spec(flags: &Flags) -> Result<WorkerSpec> {
     })
 }
 
+/// Build the elastic runtime's spec from CLI flags: the churn timeline
+/// (`--chaos kill:W@S,join:W@S`), an optional seeded link-fault family
+/// (`--fault drop|delay|sever`, applied to stage 1's left link during
+/// the first epoch), and the liveness/checkpoint cadences (DESIGN.md
+/// §12).
+fn elastic_spec(flags: &Flags, worker: WorkerSpec) -> Result<ElasticSpec> {
+    let mut es = ElasticSpec::new(worker);
+    if let Some(script) = flags.opt("chaos") {
+        es.chaos = ChurnTimeline::parse(script)?;
+    }
+    es.ckpt_every =
+        flags.usize("ckpt-every", es.ckpt_every as usize)? as u64;
+    es.ckpt_codec = CkptCodec::parse(&flags.str("ckpt-codec", "raw"))?;
+    es.heartbeat_every = flags.usize("hb-every", 1)? as u64;
+    es.stale_ms = flags.usize("stale-ms", 5_000)? as u64;
+    es.spares = flags.usize("spares", 1)?;
+    es.max_epochs = flags.usize("max-epochs", 8)?;
+    if let Some(fam) = flags.opt("fault") {
+        let family = FaultFamily::parse(fam)?;
+        let seed =
+            flags.usize("fault-seed", es.worker.cfg.seed as usize)? as u64;
+        // a middle link receives ~2M frames per step (Fwd + StepEnd in,
+        // Bwd out is the other side), so this horizon spans the run
+        let horizon =
+            (es.worker.steps * es.worker.cfg.microbatches * 2) as u64;
+        es.faults = FaultPlan {
+            target_epoch: 0,
+            entries: vec![(
+                1,
+                LinkSide::Left,
+                FaultSchedule::seeded(seed, horizon, family),
+            )],
+        };
+    }
+    es.validate()?;
+    Ok(es)
+}
+
+/// `train --backend native --chaos/--fault`: the elastic distributed
+/// pipeline (DESIGN.md §12) — stage workers on threads joined by real
+/// transports, a supervisor that detects departures via heartbeat
+/// staleness, and recovery that resumes every stage from the newest
+/// complete checkpoint boundary (spares absorb permanent leaves).
+fn train_native_elastic(
+    flags: &Flags,
+    spec: WorkerSpec,
+    kind: TransportKind,
+) -> Result<()> {
+    let config = flags.str("config", "tiny");
+    let es = elastic_spec(flags, spec)?;
+    let steps = es.worker.steps;
+    let tokens_per_step =
+        es.worker.cfg.microbatches * es.worker.h.b * es.worker.h.n;
+    println!(
+        "elastic native train: {config} x{} stages over {} transport, \
+         {steps} steps, ckpt every {} ({}), stale {} ms, spares {}, \
+         chaos {:?}",
+        es.worker.h.stages,
+        kind.as_str(),
+        es.ckpt_every,
+        es.ckpt_codec.as_str(),
+        es.stale_ms,
+        es.spares,
+        es.chaos.to_script(),
+    );
+    let report = transport::run_elastic(&es, kind)?;
+    let label = flags.str(
+        "label",
+        &format!(
+            "native_elastic_{config}_{}_{}",
+            es.worker.cfg.mode.as_str(),
+            kind.as_str()
+        ),
+    );
+    let mut log = RunLog::create(flags.str("out", "results"), &label)?;
+    // step_seconds covers the final epoch only; earlier (recomputed)
+    // steps log zero wall-clock
+    let sec_off = steps.saturating_sub(report.dist.step_seconds.len());
+    let wire_per_step = report.dist.wire_bytes / steps.max(1) as u64;
+    for (i, loss) in report.losses.iter().enumerate() {
+        let secs = if i >= sec_off {
+            report.dist.step_seconds[i - sec_off]
+        } else {
+            0.0
+        };
+        log.log_parts(
+            (i + 1) as u64,
+            *loss,
+            secs,
+            wire_per_step,
+            tokens_per_step,
+        )?;
+        if i % 10 == 0 || i + 1 == steps {
+            println!("step {:>5}  loss {loss:.4}", i + 1);
+        }
+    }
+    println!(
+        "final: loss {:.4}  epochs {}  recoveries {}  resumed from {:?}  \
+         spares used {}",
+        report.losses.last().copied().unwrap_or(f64::NAN),
+        report.epochs,
+        report.recoveries,
+        report.resume_steps,
+        report.spares_used,
+    );
+    println!(
+        "control plane: {} heartbeat frames ({} B), {} checkpoint frames \
+         ({} B); data plane: {} B wire",
+        report.heartbeat_frames,
+        report.heartbeat_bytes,
+        report.ckpt_frames,
+        report.ckpt_bytes,
+        report.dist.wire_bytes,
+    );
+    log.finish()?;
+    Ok(())
+}
+
 /// `train --backend native --transport channel|tcp`: the distributed
 /// pipeline — one worker per stage inside this process, joined by real
 /// framed transports (DESIGN.md §11). The loss curve is bitwise
@@ -235,6 +372,17 @@ fn train_native(flags: &Flags) -> Result<()> {
         bail!("--backend native trains a single pipeline (no --replicas yet)");
     }
     let spec = native_spec(flags)?;
+    let elastic = flags.opt("chaos").is_some()
+        || flags.opt("fault").is_some()
+        || flags.switch("elastic");
+    if elastic {
+        let kind = flags
+            .opt("transport")
+            .map(TransportKind::parse)
+            .transpose()?
+            .unwrap_or(TransportKind::Channel);
+        return train_native_elastic(flags, spec, kind);
+    }
     if let Some(t) = flags.opt("transport") {
         return train_native_distributed(flags, spec, TransportKind::parse(t)?);
     }
@@ -532,6 +680,12 @@ fn cmd_sim(flags: &Flags) -> Result<()> {
 /// match across the swarm — the transport handshake rejects mismatches.
 fn cmd_serve(flags: &Flags) -> Result<()> {
     let spec = native_spec(flags)?;
+    if flags.switch("elastic")
+        || flags.switch("spare")
+        || flags.opt("chaos").is_some()
+    {
+        return cmd_serve_elastic(flags, spec);
+    }
     let stage: usize = flags.require("stage")?.parse().map_err(|_| {
         anyhow::anyhow!("--stage wants a stage index in [0, stages)")
     })?;
@@ -567,6 +721,78 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         report.frames_sent, report.boundary_payload_bytes, report.wire_bytes
     );
     Ok(())
+}
+
+/// `serve --elastic` / `serve --spare`: the churn-tolerant serve mode
+/// (DESIGN.md §12). Stage 0 is the leader: it enrolls workers and
+/// spares over a control port, monitors heartbeats, and reassigns dead
+/// stages to spares across recovery epochs. `--spare` processes enroll
+/// as hot standbys and wait for a stage assignment; `--stage I` (I ≥ 1)
+/// processes run their stage and re-enroll for resume orders after a
+/// failure tears the epoch down.
+fn cmd_serve_elastic(flags: &Flags, spec: WorkerSpec) -> Result<()> {
+    let es = elastic_spec(flags, spec)?;
+    let host = flags.str("host", "127.0.0.1");
+    let port_base = flags.usize("port-base", 7070)?;
+    if port_base > u16::MAX as usize {
+        bail!("--port-base {port_base} is not a TCP port");
+    }
+    let port_base = port_base as u16;
+    if flags.switch("spare") {
+        println!(
+            "serve: spare standby on {host}, ctl port {port_base} — waiting \
+             for a stage assignment"
+        );
+        return transport::serve_spare(&es, &host, port_base);
+    }
+    let stage = flags.usize("stage", 0)?;
+    if stage == 0 {
+        println!(
+            "serve: elastic leader (stage 0/{}) on {host}, ctl port \
+             {port_base} — {} workers + {} spare(s) expected",
+            es.worker.h.stages,
+            es.worker.h.stages - 1,
+            es.spares,
+        );
+        let report = transport::serve_elastic(&es, &host, port_base)?;
+        for (i, loss) in report.losses.iter().enumerate() {
+            if i % 10 == 0 || i + 1 == report.losses.len() {
+                println!("step {:>5}  loss {loss:.4}", i + 1);
+            }
+        }
+        println!(
+            "final: loss {:.4}  epochs {}  recoveries {}  resumed from \
+             {:?}  spares used {}",
+            report.losses.last().copied().unwrap_or(f64::NAN),
+            report.epochs,
+            report.recoveries,
+            report.resume_steps,
+            report.spares_used,
+        );
+        println!(
+            "control plane: {} heartbeat frames ({} B), {} checkpoint \
+             frames ({} B)",
+            report.heartbeat_frames,
+            report.heartbeat_bytes,
+            report.ckpt_frames,
+            report.ckpt_bytes,
+        );
+        return Ok(());
+    }
+    println!(
+        "serve: elastic stage {stage}/{} on {host}, ctl port {port_base}",
+        es.worker.h.stages
+    );
+    match transport::serve_stage_elastic(&es, stage, &host, port_base) {
+        Ok(()) => Ok(()),
+        // a scripted chaos kill is this process's success condition: the
+        // timeline told it to die, and it did
+        Err(e) if format!("{e:#}").contains("chaos kill") => {
+            println!("stage {stage}: {e:#}");
+            Ok(())
+        }
+        Err(e) => Err(e),
+    }
 }
 
 fn cmd_inspect(flags: &Flags) -> Result<()> {

@@ -226,6 +226,52 @@ pub fn transport_worker_bytes(h: &Hyper, stage: usize) -> usize {
         * 4
 }
 
+/// Bytes of one stage's checkpoint payload under the elastic recovery
+/// protocol (DESIGN.md §12): the fixed header, the basis U, then per
+/// schema slot the parameter (dense, or — under the `Coeff` codec in a
+/// compressed mode — priced *exactly* by
+/// [`crate::compress::dp_wire_bytes`] since every constrained matrix is
+/// `rows × d`) plus both AdamW moments dense, plus the d×d Grassmann
+/// accumulator when `has_s_acc`. `compress::ckpt` tests pin the encoder
+/// output length to this formula; the chaos suite asserts measured
+/// `Checkpoint` frame payloads against it.
+pub fn checkpoint_payload_bytes(
+    h: &Hyper,
+    stage: usize,
+    mode: crate::compress::Mode,
+    codec: crate::compress::CkptCodec,
+    has_s_acc: bool,
+) -> usize {
+    use crate::compress::{dp_wire_bytes, CkptCodec, Mode};
+    let compressed = matches!(mode, Mode::Subspace | Mode::NoFixed);
+    let mut bytes =
+        crate::compress::ckpt::CKPT_HEADER_LEN + h.d * h.k * 4;
+    for (name, shape) in h.stage_schema(stage) {
+        let numel: usize = shape.iter().product();
+        bytes += if codec == CkptCodec::Coeff
+            && compressed
+            && crate::stage::constrained(&name)
+        {
+            dp_wire_bytes(mode, numel, h.d, h.k, h.ratio)
+        } else {
+            numel * 4
+        };
+        bytes += 2 * numel * 4; // m, v — never compressed
+    }
+    if has_s_acc {
+        bytes += h.d * h.d * 4;
+    }
+    bytes
+}
+
+/// Bytes of one heartbeat frame payload: the sender's step (u64) + its
+/// local monotonic clock in milliseconds (u64). The liveness protocol's
+/// entire steady-state overhead is this payload plus the frame header,
+/// once per `--hb-every` steps per worker.
+pub fn heartbeat_payload_bytes() -> usize {
+    16
+}
+
 /// Compute one Table-3/4 row at the paper's 2B dimensions.
 pub fn table_row(seq_total: usize, workers: usize) -> MemRow {
     // context parallel: each worker holds seq_total / workers tokens

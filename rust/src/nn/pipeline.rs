@@ -21,7 +21,7 @@
 
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::compress::{self, powerlr_rank, Mode};
 use crate::coordinator::schedule::{gpipe_makespan, Makespan, StepCosts, Tx};
@@ -681,5 +681,85 @@ impl NativePipeline {
             sum += built.tape.value(built.output).item() as f64;
         }
         Ok(sum / batches.max(1) as f64)
+    }
+
+    /// Serialize every stage's trainable state at the current step
+    /// boundary — one [`crate::compress::ckpt`] blob per stage, the
+    /// exact payloads the elastic runtime ships in `Checkpoint` frames
+    /// (the Grassmann accumulator rides with the last stage, mirroring
+    /// the one distributed worker that owns it).
+    pub fn checkpoint(&self, codec: crate::compress::CkptCodec) -> Vec<Vec<u8>> {
+        let last = self.h.stages - 1;
+        let with_acc = self.compressed();
+        (0..self.h.stages)
+            .map(|s| {
+                crate::compress::ckpt::encode_stage(
+                    &self.stages[s],
+                    &self.global.u,
+                    (s == last && with_acc).then_some(&self.s_acc),
+                    self.s_count,
+                    self.step,
+                    self.cfg.mode,
+                    codec,
+                )
+            })
+            .collect()
+    }
+
+    /// Restore from per-stage checkpoint blobs taken at step boundary
+    /// `step` (by this pipeline or a distributed worker with the same
+    /// spec). The data-RNG forks of the skipped steps are burned so the
+    /// post-restore batch stream is byte-identical to a pipeline that
+    /// really trained them — with the `Raw` codec, resumed training is
+    /// **bitwise** the uninterrupted run. Restoring backwards is
+    /// rejected: the RNG stream cannot rewind (build a fresh pipeline).
+    pub fn restore(&mut self, blobs: &[Vec<u8>], step: u64) -> Result<()> {
+        if blobs.len() != self.h.stages {
+            bail!(
+                "restore got {} blobs for a {}-stage pipeline",
+                blobs.len(),
+                self.h.stages
+            );
+        }
+        if step < self.step {
+            bail!(
+                "cannot rewind from step {} to {step}: the data-RNG \
+                 stream only advances",
+                self.step
+            );
+        }
+        let (d, k) = (self.h.d, self.h.k);
+        let mode = self.cfg.mode;
+        let mut restored: Option<crate::compress::ckpt::StageCheckpoint> =
+            None;
+        for (s, blob) in blobs.iter().enumerate() {
+            let ck = crate::compress::ckpt::decode_stage(
+                blob,
+                &mut self.stages[s],
+                d,
+                k,
+                mode,
+            )
+            .with_context(|| format!("restoring stage {s}"))?;
+            if ck.step != step {
+                bail!(
+                    "stage {s} checkpoint is for boundary {} (expected \
+                     {step})",
+                    ck.step
+                );
+            }
+            restored = Some(ck);
+        }
+        let ck = restored.expect(">= 2 stages");
+        self.global.u = ck.u;
+        self.s_count = ck.s_count;
+        if let Some(acc) = ck.s_acc {
+            self.s_acc = acc;
+        }
+        for s in self.step..step {
+            let _ = self.rng.fork(0xDA7A ^ s);
+        }
+        self.step = step;
+        Ok(())
     }
 }

@@ -23,5 +23,6 @@ pub mod swarm;
 pub use queue::EventQueue;
 pub use step::{simulate_step_spec, step_makespan, Schedule, StepSpec};
 pub use swarm::{
-    simulate_swarm, ChurnEvent, ChurnKind, ChurnSpec, SimReport, SwarmSpec,
+    simulate_swarm, ChurnEvent, ChurnKind, ChurnSpec, ChurnTimeline,
+    SimReport, StepChurn, SwarmSpec,
 };

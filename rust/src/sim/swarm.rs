@@ -91,6 +91,146 @@ pub enum ChurnSpec {
     Scripted(Vec<ChurnEvent>),
 }
 
+/// One step-indexed membership change — the unit of the shared churn
+/// script consumed by *both* the swarm simulator (via
+/// [`ChurnTimeline::to_scripted`]) and the real elastic runtime
+/// (`transport::elastic`), so a chaos run and its predicted envelope
+/// execute the exact same timeline (DESIGN.md §12).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StepChurn {
+    /// 0-based optimizer step during which the change lands
+    pub step: u64,
+    /// which worker / replica
+    pub worker: usize,
+    /// leave (kill) or rejoin (restart)
+    pub kind: ChurnKind,
+}
+
+/// A deterministic, step-indexed churn script. The CLI syntax (for
+/// `train --chaos`) is comma-separated `kill:W@S` / `join:W@S` clauses:
+/// `"kill:1@15,join:1@16"` kills worker 1 during step 15 and restarts
+/// it during step 16.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ChurnTimeline {
+    /// the script, sorted by step
+    pub events: Vec<StepChurn>,
+}
+
+impl ChurnTimeline {
+    /// Parse the CLI syntax above. Events come back sorted by step.
+    pub fn parse(s: &str) -> Result<ChurnTimeline> {
+        let mut events = Vec::new();
+        for clause in s.split(',').filter(|c| !c.trim().is_empty()) {
+            let clause = clause.trim();
+            let (verb, rest) = clause.split_once(':').ok_or_else(|| {
+                anyhow::anyhow!(
+                    "churn clause {clause:?} missing ':' (expected \
+                     kill:W@S or join:W@S)"
+                )
+            })?;
+            let kind = match verb {
+                "kill" => ChurnKind::Leave,
+                "join" => ChurnKind::Rejoin,
+                other => bail!(
+                    "unknown churn verb {other:?} (expected kill|join)"
+                ),
+            };
+            let (worker, step) = rest.split_once('@').ok_or_else(|| {
+                anyhow::anyhow!(
+                    "churn clause {clause:?} missing '@' (expected \
+                     {verb}:W@S)"
+                )
+            })?;
+            let worker: usize = worker.trim().parse().map_err(|_| {
+                anyhow::anyhow!("bad worker index {worker:?} in {clause:?}")
+            })?;
+            let step: u64 = step.trim().parse().map_err(|_| {
+                anyhow::anyhow!("bad step {step:?} in {clause:?}")
+            })?;
+            events.push(StepChurn { step, worker, kind });
+        }
+        let mut t = ChurnTimeline { events };
+        t.events.sort_by_key(|e| e.step);
+        Ok(t)
+    }
+
+    /// Render back to the CLI syntax (inverse of [`ChurnTimeline::parse`]
+    /// up to ordering/whitespace).
+    pub fn to_script(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| {
+                let verb = match e.kind {
+                    ChurnKind::Leave => "kill",
+                    ChurnKind::Rejoin => "join",
+                };
+                format!("{verb}:{}@{}", e.worker, e.step)
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Check every event against the run's shape: workers in range,
+    /// steps inside the run.
+    pub fn validate(&self, workers: usize, steps: u64) -> Result<()> {
+        for e in &self.events {
+            if e.worker >= workers {
+                bail!(
+                    "churn timeline names worker {} of {workers}",
+                    e.worker
+                );
+            }
+            if e.step >= steps {
+                bail!(
+                    "churn timeline fires at step {} of a {steps}-step run",
+                    e.step
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Workers the script kills during `step`.
+    pub fn kills_at(&self, step: u64) -> Vec<usize> {
+        self.events
+            .iter()
+            .filter(|e| e.step == step && e.kind == ChurnKind::Leave)
+            .map(|e| e.worker)
+            .collect()
+    }
+
+    /// Number of leave (kill) events in the script.
+    pub fn leaves(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| e.kind == ChurnKind::Leave)
+            .count()
+    }
+
+    /// True when the script is empty (a no-churn run).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Lower the step-indexed script onto the simulator's continuous
+    /// clock: an event at step S lands mid-step, at `(S + 0.5) ·
+    /// step_seconds`. Feeding the result into [`SwarmSpec::churn`] makes
+    /// the simulator predict the envelope for the *same* timeline the
+    /// elastic runtime executes.
+    pub fn to_scripted(&self, step_seconds: f64) -> ChurnSpec {
+        ChurnSpec::Scripted(
+            self.events
+                .iter()
+                .map(|e| ChurnEvent {
+                    time: (e.step as f64 + 0.5) * step_seconds,
+                    replica: e.worker,
+                    kind: e.kind,
+                })
+                .collect(),
+        )
+    }
+}
+
 /// Full specification of one swarm simulation.
 #[derive(Clone, Debug)]
 pub struct SwarmSpec {
@@ -842,6 +982,52 @@ mod tests {
         s.link = quiet(bw_mbps);
         s.ring_link = quiet(bw_mbps);
         s
+    }
+
+    #[test]
+    fn churn_timeline_parses_and_roundtrips() {
+        let t = ChurnTimeline::parse("kill:1@15, join:1@16").unwrap();
+        assert_eq!(
+            t.events,
+            vec![
+                StepChurn { step: 15, worker: 1, kind: ChurnKind::Leave },
+                StepChurn { step: 16, worker: 1, kind: ChurnKind::Rejoin },
+            ]
+        );
+        assert_eq!(t.to_script(), "kill:1@15,join:1@16");
+        assert_eq!(ChurnTimeline::parse(&t.to_script()).unwrap(), t);
+        assert_eq!(t.kills_at(15), vec![1]);
+        assert!(t.kills_at(16).is_empty());
+        assert_eq!(t.leaves(), 1);
+        // events come back sorted by step regardless of input order
+        let t = ChurnTimeline::parse("join:0@9,kill:0@3").unwrap();
+        assert_eq!(t.events[0].step, 3);
+        assert!(ChurnTimeline::parse("").unwrap().is_empty());
+        for bad in ["kill1@2", "boom:1@2", "kill:x@2", "kill:1@y"] {
+            assert!(ChurnTimeline::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn churn_timeline_validates_against_run_shape() {
+        let t = ChurnTimeline::parse("kill:2@5").unwrap();
+        assert!(t.validate(3, 10).is_ok());
+        assert!(t.validate(2, 10).unwrap_err().to_string().contains("worker"));
+        assert!(t.validate(3, 5).unwrap_err().to_string().contains("step"));
+    }
+
+    #[test]
+    fn churn_timeline_lowers_to_mid_step_scripted_events() {
+        let t = ChurnTimeline::parse("kill:1@4,join:1@6").unwrap();
+        let ChurnSpec::Scripted(events) = t.to_scripted(2.0) else {
+            panic!("expected scripted churn");
+        };
+        assert_eq!(events.len(), 2);
+        assert!((events[0].time - 9.0).abs() < 1e-12); // (4+0.5)·2
+        assert_eq!(events[0].replica, 1);
+        assert_eq!(events[0].kind, ChurnKind::Leave);
+        assert!((events[1].time - 13.0).abs() < 1e-12);
+        assert_eq!(events[1].kind, ChurnKind::Rejoin);
     }
 
     #[test]

@@ -38,7 +38,7 @@
 //! stage, direction, and step — the transport mirror of the swarm
 //! simulator's churn leave events — instead of a hang or a panic.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -57,6 +57,7 @@ use crate::sim::Schedule;
 use crate::stage::{GlobalState, StageState};
 use crate::tensor::Tensor;
 
+use super::elastic::{heartbeat_payload, ElasticCtx};
 use super::frame::{FrameKind, WireFrame};
 use super::{channel_pair, TcpTransport, Transport};
 
@@ -300,7 +301,10 @@ impl Links {
 
 /// Receive one frame and validate its header against expectations; a
 /// `Bye` or a closed connection is reported as a departure with enough
-/// context to locate the leave in the pipeline.
+/// context to locate the leave in the pipeline. With `stale` set (the
+/// elastic runtime), the wait is bounded: heartbeat frames refresh the
+/// deadline, and total silence past it surfaces as a departure — a hung
+/// or vanished peer can never block a worker forever (DESIGN.md §12).
 fn recv_expect(
     conn: &mut dyn Transport,
     kind: FrameKind,
@@ -308,14 +312,32 @@ fn recv_expect(
     mb: Option<u32>,
     stage: usize,
     from: &str,
+    stale: Option<Duration>,
 ) -> Result<WireFrame> {
-    let f = conn.recv().with_context(|| {
+    let ctx = || {
         format!(
             "stage {stage}: awaiting a {} frame from the {from} neighbor \
              at step {step}",
             kind.name()
         )
-    })?;
+    };
+    let f = loop {
+        match stale {
+            None => break conn.recv().with_context(ctx)?,
+            Some(limit) => match conn.recv_timeout(limit).with_context(ctx)? {
+                // liveness chatter: note it and keep waiting
+                Some(f) if f.kind == FrameKind::Heartbeat => continue,
+                Some(f) => break f,
+                None => bail!(
+                    "stage {stage}: worker departed — no {} frame or \
+                     heartbeat from the {from} neighbor within {} ms at \
+                     step {step} (stale liveness timeout)",
+                    kind.name(),
+                    limit.as_millis()
+                ),
+            },
+        }
+    };
     if f.kind == FrameKind::Bye {
         bail!(
             "stage {stage}: worker departed — {from} neighbor said \
@@ -417,6 +439,24 @@ pub fn run_stage(
     left: Option<Box<dyn Transport>>,
     right: Option<Box<dyn Transport>>,
 ) -> Result<WorkerReport> {
+    run_stage_inner(spec, stage, left, right, None, None)
+}
+
+/// [`run_stage`] plus the elastic hooks (DESIGN.md §12): a control link
+/// to the supervisor/leader carrying heartbeats, per-boundary
+/// checkpoints, and (stage 0) per-step losses, and an [`ElasticCtx`]
+/// that resumes the worker from a checkpointed step boundary, bounds
+/// every receive by the stale timeout, and — in chaos runs — kills the
+/// worker at a scripted step. With `ctl`/`ectx` absent, behavior is
+/// byte-for-byte the classic `run_stage`.
+pub(crate) fn run_stage_inner(
+    spec: &WorkerSpec,
+    stage: usize,
+    left: Option<Box<dyn Transport>>,
+    right: Option<Box<dyn Transport>>,
+    mut ctl: Option<&mut dyn Transport>,
+    ectx: Option<&ElasticCtx>,
+) -> Result<WorkerReport> {
     spec.validate()?;
     let h = spec.h.clone();
     let cfg = spec.cfg.clone();
@@ -428,6 +468,9 @@ pub fn run_stage(
         bail!("stage {stage}: neighbor links do not match the position");
     }
     let mut links = Links { left, right };
+    let stale =
+        ectx.map(|e| Duration::from_millis(e.stale_ms.max(1)));
+    let clock0 = Instant::now();
 
     // ---- handshake: exchange config digests on every link
     let digest = spec.digest();
@@ -442,7 +485,7 @@ pub fn run_stage(
             digest.clone(),
         ))?;
         let hello =
-            recv_expect(conn, FrameKind::Hello, 0, None, stage, name)?;
+            recv_expect(conn, FrameKind::Hello, 0, None, stage, name, stale)?;
         if hello.payload != digest {
             bail!(
                 "stage {stage}: config digest mismatch with the {name} \
@@ -487,6 +530,44 @@ pub fn run_stage(
     let mut s_acc: Option<Tensor> = (stage == last && compressed)
         .then(|| Tensor::zeros(&[h.d, h.d]));
     let mut s_count = 0u64;
+
+    // ---- elastic resume: burn the data forks of already-trained steps
+    // (fork() advances the parent stream, so the RNG lands in exactly
+    // the state a worker that really ran them carries), then restore
+    // state from the checkpointed boundary
+    let resume = ectx.map_or(0, |e| e.resume_step);
+    if let Some(e) = ectx {
+        for s in 0..e.resume_step {
+            let _ = rng.fork(0xDA7A ^ s);
+        }
+        if let Some(blob) = &e.ckpt {
+            let ck = crate::compress::ckpt::decode_stage(
+                blob, &mut st, h.d, h.k, cfg.mode,
+            )
+            .with_context(|| {
+                format!("stage {stage}: restoring the recovery checkpoint")
+            })?;
+            if ck.step != e.resume_step {
+                bail!(
+                    "stage {stage}: checkpoint is for boundary {} but the \
+                     leader ordered a resume from {}",
+                    ck.step,
+                    e.resume_step
+                );
+            }
+            global.u = ck.u;
+            s_count = ck.s_count;
+            if let Some(acc) = ck.s_acc {
+                s_acc = Some(acc);
+            }
+        } else if e.resume_step > 0 {
+            bail!(
+                "stage {stage}: ordered to resume from step {} without a \
+                 checkpoint payload",
+                e.resume_step
+            );
+        }
+    }
     // priced bytes of one boundary frame: the codec payload for every
     // mode except PowerLR, whose dense frame stands in for factor
     // shipping — accounting stays on the factor bytes, exactly like
@@ -503,7 +584,31 @@ pub fn run_stage(
     let mut boundary_payload = 0u64;
     let mut frames_sent = 0u64;
 
-    for step in 0..spec.steps as u64 {
+    for step in resume..spec.steps as u64 {
+        // ---- elastic step preamble: scripted kill, then heartbeat
+        if let Some(e) = ectx {
+            if e.kill_at == Some(step) {
+                // scripted churn: leave the swarm abruptly — no Bye, no
+                // cleanup; neighbors see a departure, exactly like a
+                // yanked process (the chaos harness's leave event)
+                bail!(
+                    "chaos kill: stage {stage} leaves the swarm at step \
+                     {step} (scripted churn timeline)"
+                );
+            }
+            if let Some(ctl) = ctl.as_deref_mut() {
+                if e.heartbeat_every > 0 && step % e.heartbeat_every == 0 {
+                    ctl.send(&WireFrame::control(
+                        FrameKind::Heartbeat,
+                        step,
+                        heartbeat_payload(
+                            step,
+                            clock0.elapsed().as_millis() as u64,
+                        ),
+                    ))?;
+                }
+            }
+        }
         let t0 = Instant::now();
         // data stream: one fork per step, batches drawn in microbatch
         // order — byte-for-byte the single-process sampler sequence
@@ -534,6 +639,7 @@ pub fn run_stage(
                             Some(mb as u32),
                             stage,
                             "left",
+                            stale,
                         )?;
                         saved[mb] = Some(decode_boundary(spec, &f, stage)?);
                     }
@@ -653,6 +759,7 @@ pub fn run_stage(
                         Some(mb as u32),
                         stage,
                         "right",
+                        stale,
                     )?;
                     let delivered = decode_boundary(spec, &f, stage)?;
                     let mut built = build_stage(
@@ -754,6 +861,7 @@ pub fn run_stage(
                 None,
                 stage,
                 "right",
+                stale,
             )?;
             let u_len = h.d * h.k * 4;
             match f.payload.len() {
@@ -781,8 +889,39 @@ pub fn run_stage(
                 frames_sent += 1;
                 links.left().send(&f)?;
             } else {
-                losses.push(relayed_loss / m_count as f64);
+                let mean = relayed_loss / m_count as f64;
+                losses.push(mean);
                 step_seconds.push(t0.elapsed().as_secs_f64());
+                // elastic: relay the step's loss to the supervisor so
+                // the curve survives an epoch that later fails
+                if let Some(ctl) = ctl.as_deref_mut() {
+                    ctl.send(&WireFrame::control(
+                        FrameKind::StepEnd,
+                        step,
+                        mean.to_le_bytes().to_vec(),
+                    ))?;
+                }
+            }
+        }
+
+        // ---- elastic: ship a compressed checkpoint of this stage's
+        // state at the configured boundary cadence
+        if let (Some(e), Some(ctl)) = (ectx, ctl.as_deref_mut()) {
+            if e.ckpt_every > 0 && (step + 1) % e.ckpt_every == 0 {
+                let blob = crate::compress::ckpt::encode_stage(
+                    &st,
+                    &global.u,
+                    s_acc.as_ref(),
+                    s_count,
+                    step + 1,
+                    cfg.mode,
+                    e.ckpt_codec,
+                );
+                ctl.send(&WireFrame::control(
+                    FrameKind::Checkpoint,
+                    step + 1,
+                    blob,
+                ))?;
             }
         }
     }
@@ -812,16 +951,16 @@ pub fn run_stage(
 // local multi-worker drivers (threads in one process)
 // ---------------------------------------------------------------------------
 
-/// Run the full distributed pipeline locally: P stage workers on OS
-/// threads, joined by the chosen transport (in-process channels, or
-/// real TCP sockets over loopback). Returns the aggregate report; any
-/// worker error — including a departed peer — propagates with its
-/// stage context.
-pub fn run_local(spec: &WorkerSpec, kind: TransportKind) -> Result<DistReport> {
-    spec.validate()?;
-    let p = spec.h.stages;
-    // per-stage (left, right) link ends
-    type LinkEnd = Option<Box<dyn Transport>>;
+/// One optional link end (absent at the pipeline's outer edges).
+pub(crate) type LinkEnd = Option<Box<dyn Transport>>;
+
+/// Build the per-stage (left, right) link ends of one pipeline chain
+/// over the chosen backend — shared by [`run_local`] and the elastic
+/// supervisor (which rebuilds a fresh chain every recovery epoch).
+pub(crate) fn chain_ends(
+    p: usize,
+    kind: TransportKind,
+) -> Result<Vec<(LinkEnd, LinkEnd)>> {
     let mut ends: Vec<(LinkEnd, LinkEnd)> =
         (0..p).map(|_| (None, None)).collect();
     for link in 0..p - 1 {
@@ -848,6 +987,18 @@ pub fn run_local(spec: &WorkerSpec, kind: TransportKind) -> Result<DistReport> {
         ends[link].1 = Some(a); // stage `link`'s right end
         ends[link + 1].0 = Some(b); // stage `link + 1`'s left end
     }
+    Ok(ends)
+}
+
+/// Run the full distributed pipeline locally: P stage workers on OS
+/// threads, joined by the chosen transport (in-process channels, or
+/// real TCP sockets over loopback). Returns the aggregate report; any
+/// worker error — including a departed peer — propagates with its
+/// stage context.
+pub fn run_local(spec: &WorkerSpec, kind: TransportKind) -> Result<DistReport> {
+    spec.validate()?;
+    let p = spec.h.stages;
+    let mut ends = chain_ends(p, kind)?;
 
     let reports: Vec<Result<WorkerReport>> = std::thread::scope(|scope| {
         let handles: Vec<_> = ends

@@ -1,0 +1,1398 @@
+//! Elastic churn-tolerant distributed training (DESIGN.md §12).
+//!
+//! The classic distributed pipeline ([`super::dist`]) treats a vanished
+//! worker as a terminal error. This module converts that into a
+//! **bounded recovery event**:
+//!
+//! - every worker sends [`FrameKind::Heartbeat`] frames on a control
+//!   link to the supervisor/leader at a step cadence, and every receive
+//!   in the data plane is bounded by a stale timeout — total silence
+//!   past the deadline surfaces as a departure, never a hang;
+//! - every worker ships a compressed checkpoint of its stage state
+//!   ([`crate::compress::ckpt`]) at a step-boundary cadence, priced by
+//!   [`crate::memory::checkpoint_payload_bytes`] against the same
+//!   `dp_wire_bytes` vocabulary the paper's DP sync uses;
+//! - when an epoch fails (a scripted chaos kill, an injected fault, or
+//!   a real dead peer), the supervisor reassigns the lost stage — to a
+//!   spare, or to the restarted process, both of which rebuild the
+//!   seeded init stream deterministically — and resumes **all** stages
+//!   from the newest step boundary whose checkpoints are complete;
+//! - because the checkpoint boundary is a full-pipeline synchronization
+//!   point and the data RNG forks are replayed per step, a `Raw`-codec
+//!   recovery rejoins the no-churn loss curve **bitwise**, and a
+//!   `Coeff`-codec recovery rejoins within float-rounding of the
+//!   subspace projection — the recovery parity contract `tests/chaos.rs`
+//!   enforces against the envelope `sim/swarm.rs` predicts on the same
+//!   churn timeline.
+//!
+//! Failure detection is deliberately epoch-grained: any departure tears
+//! down the whole epoch (errors cascade along the dropped links, and
+//! every receive is stale-bounded, so teardown terminates), and recovery
+//! restarts the full chain from the checkpoint boundary. That trades a
+//! few recomputed steps for a protocol with no partial-pipeline state
+//! machine — the same trade the swarm simulator's churn model makes.
+
+use std::collections::{BTreeMap, HashSet};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::compress::CkptCodec;
+use crate::sim::{ChurnKind, ChurnTimeline};
+
+use super::dist::{
+    chain_ends, run_stage_inner, DistReport, TransportKind, WorkerReport,
+    WorkerSpec,
+};
+use super::fault::{FaultPlan, FaultTransport, LinkSide};
+use super::frame::{FrameKind, WireFrame};
+use super::{channel_pair, TcpTransport, Transport};
+
+// ---------------------------------------------------------------------------
+// wire codecs: heartbeat payloads and reassignment orders
+// ---------------------------------------------------------------------------
+
+/// Encode a heartbeat payload: the sender's last started step and its
+/// local monotonic clock in ms, both u64 LE — 16 bytes, the figure
+/// [`crate::memory::heartbeat_payload_bytes`] prices. The clock is
+/// informational only: liveness is judged on the *receiver's* arrival
+/// clock, so a skewed sender cannot trip (or mask) staleness.
+pub fn heartbeat_payload(step: u64, clock_ms: u64) -> Vec<u8> {
+    let mut p = Vec::with_capacity(16);
+    p.extend_from_slice(&step.to_le_bytes());
+    p.extend_from_slice(&clock_ms.to_le_bytes());
+    p
+}
+
+/// Decode a heartbeat payload back to `(step, clock_ms)`.
+pub fn parse_heartbeat(payload: &[u8]) -> Result<(u64, u64)> {
+    if payload.len() != 16 {
+        bail!(
+            "heartbeat payload is {} B (expected exactly 16)",
+            payload.len()
+        );
+    }
+    Ok((
+        u64::from_le_bytes(payload[0..8].try_into().expect("8 B")),
+        u64::from_le_bytes(payload[8..16].try_into().expect("8 B")),
+    ))
+}
+
+/// Sentinel stage in a [`ReassignOrder`] meaning "the run is complete —
+/// shut down cleanly" (no real pipeline has 2^32 − 1 stages).
+pub const REASSIGN_DONE: u32 = u32::MAX;
+
+/// The payload of a [`FrameKind::Reassign`] control frame: the leader's
+/// order to one actor to run one stage for one epoch, resuming from a
+/// checkpointed boundary.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReassignOrder {
+    /// recovery epoch this order starts (0 = the first attempt)
+    pub epoch: u32,
+    /// stage to run, or [`REASSIGN_DONE`]
+    pub stage: u32,
+    /// step boundary to resume from (0 = fresh start)
+    pub resume: u64,
+    /// the stage's checkpoint blob at `resume` (required when
+    /// `resume > 0`)
+    pub ckpt: Option<Vec<u8>>,
+}
+
+impl ReassignOrder {
+    /// The shutdown order: the run completed, actors may exit.
+    pub fn done(epoch: u32) -> ReassignOrder {
+        ReassignOrder { epoch, stage: REASSIGN_DONE, resume: 0, ckpt: None }
+    }
+
+    /// True for the shutdown order.
+    pub fn is_done(&self) -> bool {
+        self.stage == REASSIGN_DONE
+    }
+
+    /// Serialize: epoch u32, stage u32, resume u64, has-ckpt u8,
+    /// blob len u64, blob bytes — all LE.
+    pub fn encode(&self) -> Vec<u8> {
+        let blob = self.ckpt.as_deref().unwrap_or(&[]);
+        let mut out = Vec::with_capacity(25 + blob.len());
+        out.extend_from_slice(&self.epoch.to_le_bytes());
+        out.extend_from_slice(&self.stage.to_le_bytes());
+        out.extend_from_slice(&self.resume.to_le_bytes());
+        out.push(u8::from(self.ckpt.is_some()));
+        out.extend_from_slice(&(blob.len() as u64).to_le_bytes());
+        out.extend_from_slice(blob);
+        out
+    }
+
+    /// Parse an encoded order, validating the length envelope.
+    pub fn decode(bytes: &[u8]) -> Result<ReassignOrder> {
+        if bytes.len() < 25 {
+            bail!(
+                "reassign order is {} B, shorter than the 25 B header",
+                bytes.len()
+            );
+        }
+        let epoch = u32::from_le_bytes(bytes[0..4].try_into().expect("u32"));
+        let stage = u32::from_le_bytes(bytes[4..8].try_into().expect("u32"));
+        let resume = u64::from_le_bytes(bytes[8..16].try_into().expect("u64"));
+        let has_ckpt = bytes[16] == 1;
+        let blob_len =
+            u64::from_le_bytes(bytes[17..25].try_into().expect("u64")) as usize;
+        if bytes.len() != 25 + blob_len {
+            bail!(
+                "reassign order declares a {blob_len} B checkpoint but \
+                 carries {} trailing bytes",
+                bytes.len() - 25
+            );
+        }
+        Ok(ReassignOrder {
+            epoch,
+            stage,
+            resume,
+            ckpt: has_ckpt.then(|| bytes[25..].to_vec()),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// liveness
+// ---------------------------------------------------------------------------
+
+/// Stale-timeout liveness detection over one link. Staleness is judged
+/// **only** on the local arrival clock: the deadline is `last frame's
+/// arrival + stale`, a peer is stale strictly *after* the deadline
+/// (exactly-at-deadline is alive), and the `clock_ms` a heartbeat
+/// carries never feeds the decision — so a clock-skewed sender can
+/// neither trip nor mask the timeout (DESIGN.md §12).
+pub struct LivenessMonitor {
+    stale: Duration,
+    last_seen: Instant,
+    /// highest step any observed heartbeat reported
+    pub last_step: u64,
+    /// heartbeat frames observed
+    pub beats: u64,
+}
+
+impl LivenessMonitor {
+    /// Start monitoring now, with the given stale timeout.
+    pub fn new(stale: Duration) -> LivenessMonitor {
+        LivenessMonitor {
+            stale,
+            last_seen: Instant::now(),
+            last_step: 0,
+            beats: 0,
+        }
+    }
+
+    /// Record one received frame: *any* frame refreshes the deadline
+    /// (bulk traffic proves liveness as well as chatter does); a
+    /// well-formed heartbeat additionally updates the step/beat stats.
+    pub fn observe(&mut self, frame: &WireFrame) {
+        self.last_seen = Instant::now();
+        if frame.kind == FrameKind::Heartbeat {
+            if let Ok((step, _clock_ms)) = parse_heartbeat(&frame.payload) {
+                self.last_step = self.last_step.max(step);
+                self.beats += 1;
+            }
+        }
+    }
+
+    /// The instant after which the peer counts as departed.
+    pub fn deadline(&self) -> Instant {
+        self.last_seen + self.stale
+    }
+
+    /// Staleness at an explicit instant — strictly after the deadline,
+    /// so a heartbeat landing exactly on it keeps the peer alive.
+    pub fn is_stale_at(&self, now: Instant) -> bool {
+        now > self.deadline()
+    }
+
+    /// Staleness now.
+    pub fn is_stale(&self) -> bool {
+        self.is_stale_at(Instant::now())
+    }
+}
+
+/// One bounded, liveness-aware receive: waits until the monitor's
+/// deadline, feeds every arrival to the monitor, and yields `Ok(None)`
+/// for heartbeats (callers loop) or quiet timeouts that have not yet
+/// crossed the deadline. Total silence past the deadline — and only
+/// that — comes back as a `"departed"` error.
+pub fn recv_live(
+    conn: &mut dyn Transport,
+    mon: &mut LivenessMonitor,
+) -> Result<Option<WireFrame>> {
+    let now = Instant::now();
+    let stale_err = |mon: &LivenessMonitor| {
+        anyhow!(
+            "worker departed: stale liveness timeout — no frame or \
+             heartbeat for over {} ms (last heartbeat reported step {})",
+            mon.stale.as_millis(),
+            mon.last_step
+        )
+    };
+    if mon.is_stale_at(now) {
+        return Err(stale_err(mon));
+    }
+    let wait = mon.deadline().saturating_duration_since(now);
+    match conn.recv_timeout(wait)? {
+        None => {
+            if mon.is_stale() {
+                return Err(stale_err(mon));
+            }
+            Ok(None)
+        }
+        Some(f) => {
+            mon.observe(&f);
+            if f.kind == FrameKind::Heartbeat {
+                Ok(None)
+            } else {
+                Ok(Some(f))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// elastic run configuration
+// ---------------------------------------------------------------------------
+
+/// Per-worker elastic context, handed into the stage loop: where to
+/// resume, what to restore, the liveness/checkpoint cadences, and — in
+/// chaos runs — when to die.
+#[derive(Clone, Debug)]
+pub struct ElasticCtx {
+    /// first step to train (0 = fresh start)
+    pub resume_step: u64,
+    /// checkpoint blob to restore (required when `resume_step > 0`)
+    pub ckpt: Option<Vec<u8>>,
+    /// ship a checkpoint every this many steps (≥ 1)
+    pub ckpt_every: u64,
+    /// checkpoint parameter codec
+    pub ckpt_codec: CkptCodec,
+    /// send a heartbeat every this many steps (≥ 1)
+    pub heartbeat_every: u64,
+    /// stale liveness timeout bounding every data-plane receive
+    pub stale_ms: u64,
+    /// scripted chaos: abruptly leave at the top of this step
+    pub kill_at: Option<u64>,
+}
+
+/// Configuration of one elastic run: the worker spec everything else is
+/// derived from, plus the liveness/checkpoint cadences, the spare
+/// budget, and the chaos inputs (churn timeline + fault plan).
+#[derive(Clone, Debug)]
+pub struct ElasticSpec {
+    /// the run every stage executes (model, data, schedule, steps)
+    pub worker: WorkerSpec,
+    /// checkpoint cadence in steps (≥ 1)
+    pub ckpt_every: u64,
+    /// checkpoint parameter codec (`raw` = bitwise recovery, `coeff` =
+    /// subspace-priced recovery)
+    pub ckpt_codec: CkptCodec,
+    /// heartbeat cadence in steps (≥ 1)
+    pub heartbeat_every: u64,
+    /// stale liveness timeout in ms — set it above the slowest step
+    pub stale_ms: u64,
+    /// spare workers standing by to adopt a dead stage
+    pub spares: usize,
+    /// scripted churn timeline (`kill:W@S,join:W@S`)
+    pub chaos: ChurnTimeline,
+    /// deterministic link-fault plan (drops / delays / severs)
+    pub faults: FaultPlan,
+    /// recovery attempts before the run is declared unrecoverable
+    pub max_epochs: usize,
+}
+
+impl ElasticSpec {
+    /// Defaults around a worker spec: checkpoint four times per run,
+    /// heartbeat every step, 5 s stale timeout, one spare, no chaos.
+    pub fn new(worker: WorkerSpec) -> ElasticSpec {
+        let ckpt_every = (worker.steps as u64 / 4).max(1);
+        ElasticSpec {
+            worker,
+            ckpt_every,
+            ckpt_codec: CkptCodec::Raw,
+            heartbeat_every: 1,
+            stale_ms: 5_000,
+            spares: 1,
+            chaos: ChurnTimeline::default(),
+            faults: FaultPlan::default(),
+            max_epochs: 8,
+        }
+    }
+
+    /// Reject configurations the elastic runtime cannot execute.
+    pub fn validate(&self) -> Result<()> {
+        self.worker.validate()?;
+        if self.ckpt_every == 0 {
+            bail!("--ckpt-every must be >= 1");
+        }
+        if self.heartbeat_every == 0 {
+            bail!("--hb-every must be >= 1");
+        }
+        if self.stale_ms == 0 {
+            bail!("--stale-ms must be >= 1");
+        }
+        if self.max_epochs == 0 {
+            bail!("max epochs must be >= 1");
+        }
+        self.chaos
+            .validate(self.worker.h.stages, self.worker.steps as u64)
+            .context("validating the --chaos timeline")?;
+        Ok(())
+    }
+}
+
+/// What an elastic run reports beyond the classic [`DistReport`]: the
+/// recovery history and the liveness/checkpoint wire accounting the
+/// chaos tests assert against the `memory.rs` cost model.
+#[derive(Clone, Debug)]
+pub struct ElasticReport {
+    /// per-step mean training loss, stitched across epochs — steps
+    /// recomputed after a recovery keep their *final* (post-recovery)
+    /// value, which the parity contract compares to the no-churn curve
+    pub losses: Vec<f64>,
+    /// epochs executed (1 = no recovery was needed)
+    pub epochs: usize,
+    /// recovery events (epochs that failed)
+    pub recoveries: usize,
+    /// the step boundary each recovery resumed from
+    pub resume_steps: Vec<u64>,
+    /// spares consumed by permanent departures
+    pub spares_used: usize,
+    /// checkpoint frames shipped on control links, all epochs
+    pub ckpt_frames: u64,
+    /// checkpoint payload bytes shipped, all epochs — equals
+    /// `ckpt_frames / stages` complete boundaries priced by
+    /// [`crate::memory::checkpoint_payload_bytes`]
+    pub ckpt_bytes: u64,
+    /// heartbeat frames shipped on control links, all epochs
+    pub heartbeat_frames: u64,
+    /// heartbeat payload bytes shipped — `16 ×` the frame count
+    pub heartbeat_bytes: u64,
+    /// the data-plane report of the epoch that completed (recovery
+    /// epochs that failed ship no worker reports)
+    pub dist: DistReport,
+}
+
+// ---------------------------------------------------------------------------
+// control-plane bookkeeping shared by both supervisors
+// ---------------------------------------------------------------------------
+
+/// Everything the supervisor accumulates from control links: checkpoint
+/// blobs by boundary, the stitched loss curve, and the wire counters.
+#[derive(Default)]
+struct CtlStore {
+    /// boundary step → per-stage checkpoint blobs (a boundary is usable
+    /// only when every slot is `Some`)
+    ckpts: BTreeMap<u64, Vec<Option<Vec<u8>>>>,
+    /// per-step mean loss relayed by stage 0
+    losses: Vec<Option<f64>>,
+    /// (frames, payload bytes) of heartbeats seen
+    hb: (u64, u64),
+    /// (frames, payload bytes) of checkpoints seen
+    ck: (u64, u64),
+}
+
+impl CtlStore {
+    fn with_steps(steps: usize) -> CtlStore {
+        CtlStore { losses: vec![None; steps], ..CtlStore::default() }
+    }
+
+    /// Record one control frame from `stage`.
+    fn record(&mut self, stage: usize, p: usize, f: WireFrame) {
+        match f.kind {
+            FrameKind::Heartbeat => {
+                self.hb.0 += 1;
+                self.hb.1 += f.payload.len() as u64;
+            }
+            FrameKind::Checkpoint => {
+                self.ck.0 += 1;
+                self.ck.1 += f.payload.len() as u64;
+                let row = self
+                    .ckpts
+                    .entry(f.step)
+                    .or_insert_with(|| vec![None; p]);
+                if stage < row.len() {
+                    row[stage] = Some(f.payload);
+                }
+            }
+            FrameKind::StepEnd => {
+                if f.payload.len() >= 8 {
+                    let idx = f.step as usize;
+                    if idx < self.losses.len() {
+                        self.losses[idx] = Some(f64::from_le_bytes(
+                            f.payload[0..8].try_into().expect("8 B"),
+                        ));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Newest boundary whose checkpoints are complete across all stages.
+    fn best_boundary(&self) -> u64 {
+        self.ckpts
+            .iter()
+            .rev()
+            .find(|(_, row)| row.iter().all(Option::is_some))
+            .map(|(step, _)| *step)
+            .unwrap_or(0)
+    }
+
+    /// The stitched loss curve — every step must have reported.
+    fn full_losses(&self) -> Result<Vec<f64>> {
+        self.losses
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                l.ok_or_else(|| {
+                    anyhow!("step {i} never reported a loss to the supervisor")
+                })
+            })
+            .collect()
+    }
+}
+
+/// Drain every frame already queued on a control link (the worker has
+/// exited, so this terminates: buffered frames, then disconnect).
+fn drain_ctl(ctl: &mut dyn Transport, stage: usize, p: usize, store: &mut CtlStore) {
+    while let Ok(Some(f)) = ctl.recv_timeout(Duration::from_millis(1)) {
+        store.record(stage, p, f);
+    }
+}
+
+/// The scripted kill step for each stage this epoch: the earliest
+/// not-yet-fired `kill` event per worker.
+fn kills_this_epoch(
+    chaos: &ChurnTimeline,
+    p: usize,
+    fired: &HashSet<(usize, u64)>,
+) -> Vec<Option<u64>> {
+    (0..p)
+        .map(|s| {
+            chaos
+                .events
+                .iter()
+                .filter(|e| {
+                    e.kind == ChurnKind::Leave
+                        && e.worker == s
+                        && !fired.contains(&(s, e.step))
+                })
+                .map(|e| e.step)
+                .min()
+        })
+        .collect()
+}
+
+/// Whether a scripted `join` covers a kill of `stage` at `step` — i.e.
+/// the same worker restarts, so no spare is consumed.
+fn rejoin_covers(chaos: &ChurnTimeline, stage: usize, step: u64) -> bool {
+    chaos
+        .events
+        .iter()
+        .any(|e| e.kind == ChurnKind::Rejoin && e.worker == stage && e.step >= step)
+}
+
+// ---------------------------------------------------------------------------
+// in-process elastic supervisor
+// ---------------------------------------------------------------------------
+
+/// Run the full elastic pipeline locally: P stage workers on OS threads
+/// joined by the chosen transport, a control link per worker, and a
+/// supervisor that detects failed epochs, accounts the scripted churn
+/// (consuming spares for permanent departures), and resumes everyone
+/// from the newest complete checkpoint boundary. Fault schedules from
+/// `spec.faults` wrap the matching link ends with [`FaultTransport`].
+pub fn run_elastic(es: &ElasticSpec, kind: TransportKind) -> Result<ElasticReport> {
+    es.validate()?;
+    let spec = &es.worker;
+    let p = spec.h.stages;
+    let mut store = CtlStore::with_steps(spec.steps);
+    let mut fired: HashSet<(usize, u64)> = HashSet::new();
+    let mut spares_left = es.spares;
+    let mut spares_used = 0usize;
+    let mut resume = 0u64;
+    let mut recoveries = 0usize;
+    let mut resume_steps = Vec::new();
+
+    for epoch in 0..es.max_epochs {
+        let kill_at = kills_this_epoch(&es.chaos, p, &fired);
+        let blobs: Vec<Option<Vec<u8>>> = if resume > 0 {
+            store
+                .ckpts
+                .get(&resume)
+                .cloned()
+                .expect("best_boundary returned a stored boundary")
+        } else {
+            vec![None; p]
+        };
+
+        // fresh chain, optionally fault-wrapped on the scheduled ends
+        let mut ends = chain_ends(p, kind)?;
+        for (stage, end) in ends.iter_mut().enumerate() {
+            for (side, slot) in
+                [(LinkSide::Left, &mut end.0), (LinkSide::Right, &mut end.1)]
+            {
+                if let Some(sched) = es.faults.schedule_for(epoch, stage, side) {
+                    if let Some(inner) = slot.take() {
+                        *slot = Some(Box::new(FaultTransport::new(inner, sched)));
+                    }
+                }
+            }
+        }
+
+        // one control link per worker; the supervisor keeps one half
+        let mut worker_ctl = Vec::with_capacity(p);
+        let mut sup_ctl = Vec::with_capacity(p);
+        for _ in 0..p {
+            let (w, s) = channel_pair();
+            worker_ctl.push(w);
+            sup_ctl.push(s);
+        }
+        let ctxs: Vec<ElasticCtx> = (0..p)
+            .map(|s| ElasticCtx {
+                resume_step: resume,
+                ckpt: blobs[s].clone(),
+                ckpt_every: es.ckpt_every,
+                ckpt_codec: es.ckpt_codec,
+                heartbeat_every: es.heartbeat_every,
+                stale_ms: es.stale_ms,
+                kill_at: kill_at[s],
+            })
+            .collect();
+
+        let results: Vec<Result<WorkerReport>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = ends
+                .drain(..)
+                .zip(worker_ctl.drain(..))
+                .zip(ctxs.iter())
+                .enumerate()
+                .map(|(stage, (((left, right), mut ctl), ctx))| {
+                    let spec = spec.clone();
+                    scope.spawn(move || {
+                        run_stage_inner(
+                            &spec,
+                            stage,
+                            left,
+                            right,
+                            Some(&mut ctl as &mut dyn Transport),
+                            Some(ctx),
+                        )
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(r) => r,
+                    Err(_) => Err(anyhow!("stage worker panicked")),
+                })
+                .collect()
+        });
+
+        // harvest everything the epoch's control links carried (the
+        // workers have exited, so the queues are final)
+        for (stage, ctl) in sup_ctl.iter_mut().enumerate() {
+            drain_ctl(ctl, stage, p, &mut store);
+        }
+
+        if results.iter().all(Result::is_ok) {
+            let mut stage0: Option<WorkerReport> = None;
+            let mut boundary = 0u64;
+            let mut wire = 0u64;
+            let mut frames = 0u64;
+            for (stage, r) in results.into_iter().enumerate() {
+                let r = r.expect("checked all_ok");
+                boundary += r.boundary_payload_bytes;
+                wire += r.wire_bytes;
+                frames += r.frames_sent;
+                if stage == 0 {
+                    stage0 = Some(r);
+                }
+            }
+            let stage0 = stage0.expect("stage 0 report");
+            let losses = store.full_losses()?;
+            return Ok(ElasticReport {
+                losses: losses.clone(),
+                epochs: epoch + 1,
+                recoveries,
+                resume_steps,
+                spares_used,
+                ckpt_frames: store.ck.0,
+                ckpt_bytes: store.ck.1,
+                heartbeat_frames: store.hb.0,
+                heartbeat_bytes: store.hb.1,
+                dist: DistReport {
+                    losses,
+                    step_seconds: stage0.step_seconds,
+                    boundary_payload_bytes: boundary,
+                    wire_bytes: wire,
+                    frames,
+                    frame_payload_bytes: spec.cfg.boundary_bytes(&spec.h),
+                },
+            });
+        }
+
+        // ---- recovery: account the epoch's scripted kills, consume a
+        // spare for permanent departures, pick the resume boundary
+        recoveries += 1;
+        for (stage, r) in results.iter().enumerate() {
+            let Err(e) = r else { continue };
+            if !format!("{e:#}").contains("chaos kill") {
+                continue;
+            }
+            let k = kill_at[stage].expect("scripted kill fired");
+            fired.insert((stage, k));
+            if !rejoin_covers(&es.chaos, stage, k) {
+                if spares_left == 0 {
+                    bail!(
+                        "stage {stage} left permanently at step {k} and no \
+                         spare remains — unrecoverable churn"
+                    );
+                }
+                spares_left -= 1;
+                spares_used += 1;
+            }
+        }
+        resume = store.best_boundary();
+        resume_steps.push(resume);
+    }
+    bail!(
+        "elastic run did not complete within {} epochs — the churn/fault \
+         schedule outpaces the checkpoint cadence",
+        es.max_epochs
+    )
+}
+
+// ---------------------------------------------------------------------------
+// standalone elastic processes (`serve --elastic`, `serve --spare`)
+// ---------------------------------------------------------------------------
+
+/// Dial/accept budgets mirroring the classic `serve_stage` worker.
+const DIAL_ATTEMPTS: usize = 120;
+const DIAL_BACKOFF_MS: u64 = 250;
+/// How long a bound chain listener waits for its right neighbor.
+const ACCEPT_WAIT_MS: u64 = DIAL_ATTEMPTS as u64 * DIAL_BACKOFF_MS;
+/// Idle actors ping the leader at this cadence while awaiting orders.
+const IDLE_HEARTBEAT_MS: u64 = 200;
+
+/// The control-plane port is `port_base`; chain link `link` of recovery
+/// epoch `epoch` lives at `port_base + 1 + epoch·(P−1) + link` — every
+/// epoch gets fresh ports so stale half-open sockets from a torn-down
+/// epoch can never be dialed by the next one.
+fn chain_port(port_base: u16, epoch: usize, link: usize, p: usize) -> Result<u16> {
+    let off = 1 + epoch * (p - 1) + link;
+    u16::try_from(port_base as usize + off).map_err(|_| {
+        anyhow!(
+            "port budget exceeded: base {port_base} + offset {off} \
+             overflows u16 (lower the port base or max epochs)"
+        )
+    })
+}
+
+/// Dial with retries so process launch order is free.
+fn dial_retry(host: &str, port: u16, what: &str) -> Result<TcpStream> {
+    for attempt in 0..DIAL_ATTEMPTS {
+        match TcpStream::connect((host, port)) {
+            Ok(s) => return Ok(s),
+            Err(e) if attempt + 1 == DIAL_ATTEMPTS => {
+                return Err(e).with_context(|| {
+                    format!("{what} never appeared at {host}:{port}")
+                });
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(DIAL_BACKOFF_MS)),
+        }
+    }
+    unreachable!("loop returns on the final attempt")
+}
+
+/// Accept one connection within a bounded window — a dead dialer must
+/// surface as an error, never a hang (the liveness discipline applies
+/// to connection establishment too).
+fn accept_within(listener: &TcpListener, what: &str) -> Result<TcpStream> {
+    listener
+        .set_nonblocking(true)
+        .context("arming nonblocking accept")?;
+    let deadline = Instant::now() + Duration::from_millis(ACCEPT_WAIT_MS);
+    loop {
+        match listener.accept() {
+            Ok((s, _)) => {
+                s.set_nonblocking(false)
+                    .context("restoring blocking mode on accepted stream")?;
+                return Ok(s);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() > deadline {
+                    bail!("{what} never dialed us (accept window expired)");
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => return Err(e).with_context(|| format!("accepting {what}")),
+        }
+    }
+}
+
+/// A control connection shared between the leader's epoch loop (sends
+/// reassignment orders) and its monitor thread (drains frames, judges
+/// liveness).
+type CtlConn = Arc<Mutex<Box<dyn Transport>>>;
+
+/// Run the elastic **leader**: stage 0 of the pipeline plus the
+/// supervisor role — it accepts every worker/spare on the control port,
+/// monitors their liveness, reassigns dead stages to spares, and
+/// resumes each recovery epoch from the newest complete checkpoint
+/// boundary. Blocks until the run completes (or is unrecoverable).
+///
+/// The returned report's `dist` leg carries **stage 0's** data-plane
+/// accounting only: remote workers' wire counters stay in their own
+/// processes (the in-process [`run_elastic`] aggregates all stages).
+pub fn serve_elastic(
+    es: &ElasticSpec,
+    host: &str,
+    port_base: u16,
+) -> Result<ElasticReport> {
+    es.validate()?;
+    let spec = &es.worker;
+    let p = spec.h.stages;
+    if es.chaos.events.iter().any(|e| e.worker == 0) {
+        bail!(
+            "the --chaos timeline names worker 0, but stage 0 is the \
+             elastic leader and cannot be killed"
+        );
+    }
+    // fail fast if the last possible epoch's ports do not fit
+    chain_port(port_base, es.max_epochs - 1, p - 2, p)?;
+
+    // ---- enrollment: every worker and spare dials the control port
+    let listener = TcpListener::bind((host, port_base))
+        .with_context(|| format!("binding the control port {host}:{port_base}"))?;
+    let digest = spec.digest();
+    let mut actors: Vec<CtlConn> = Vec::new();
+    let mut assignment: Vec<Option<usize>> = vec![None; p]; // stage → actor
+    let mut spares_q: Vec<usize> = Vec::new();
+    for _ in 0..(p - 1) + es.spares {
+        let stream = accept_within(&listener, "an elastic worker or spare")?;
+        let mut conn: Box<dyn Transport> = Box::new(TcpTransport::new(stream)?);
+        let hello = conn
+            .recv_timeout(Duration::from_millis(ACCEPT_WAIT_MS))
+            .context("receiving an enrollment Hello")?
+            .ok_or_else(|| {
+                anyhow!("an enrolling actor connected but never said Hello")
+            })?;
+        if hello.kind != FrameKind::Hello
+            || hello.payload.len() != digest.len() + 5
+            || hello.payload[..digest.len()] != digest[..]
+        {
+            bail!(
+                "enrollment rejected: config digest mismatch — every \
+                 worker must be launched with identical model/run flags"
+            );
+        }
+        let role = hello.payload[digest.len()];
+        let stage = u32::from_le_bytes(
+            hello.payload[digest.len() + 1..].try_into().expect("u32"),
+        ) as usize;
+        let idx = actors.len();
+        if role == 0 {
+            if stage == 0 || stage >= p {
+                bail!("worker announced stage {stage} of a {p}-stage pipeline");
+            }
+            if assignment[stage].is_some() {
+                bail!("two workers announced stage {stage}");
+            }
+            assignment[stage] = Some(idx);
+        } else {
+            spares_q.push(idx);
+        }
+        actors.push(Arc::new(Mutex::new(conn)));
+    }
+    for (stage, a) in assignment.iter().enumerate().skip(1) {
+        if a.is_none() {
+            bail!("no worker enrolled for stage {stage} — launch it first");
+        }
+    }
+
+    // ---- liveness monitors: one thread per control connection
+    let shared = Arc::new(Mutex::new(CtlStore::with_steps(spec.steps)));
+    let dead: Arc<Mutex<HashSet<usize>>> = Arc::new(Mutex::new(HashSet::new()));
+    let stop = Arc::new(AtomicBool::new(false));
+    // double the data-plane stale bound: a worker parked in a bounded
+    // recv can be ctl-silent for up to stale_ms without being dead
+    let ctl_stale = Duration::from_millis(es.stale_ms * 2 + 500);
+    let monitors: Vec<std::thread::JoinHandle<()>> = actors
+        .iter()
+        .enumerate()
+        .map(|(idx, conn)| {
+            let conn = Arc::clone(conn);
+            let shared = Arc::clone(&shared);
+            let dead = Arc::clone(&dead);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut mon = LivenessMonitor::new(ctl_stale);
+                while !stop.load(Ordering::Relaxed) {
+                    let r = {
+                        let mut c = conn.lock().expect("ctl conn");
+                        c.recv_timeout(Duration::from_millis(50))
+                    };
+                    match r {
+                        Ok(Some(f)) => {
+                            mon.observe(&f);
+                            // checkpoints carry their stage in the blob
+                            // header (bytes 16..20); other control
+                            // frames need no attribution
+                            let stage = if f.kind == FrameKind::Checkpoint
+                                && f.payload.len() >= 20
+                            {
+                                u32::from_le_bytes(
+                                    f.payload[16..20]
+                                        .try_into()
+                                        .expect("u32"),
+                                ) as usize
+                            } else {
+                                usize::MAX
+                            };
+                            shared
+                                .lock()
+                                .expect("ctl store")
+                                .record(stage, p, f);
+                        }
+                        Ok(None) => {
+                            if mon.is_stale() {
+                                dead.lock().expect("dead set").insert(idx);
+                                return;
+                            }
+                        }
+                        Err(_) => {
+                            dead.lock().expect("dead set").insert(idx);
+                            return;
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+
+    // everything below must stop the monitors before returning
+    let result = serve_elastic_epochs(
+        es,
+        host,
+        port_base,
+        &actors,
+        &mut assignment,
+        &mut spares_q,
+        &shared,
+        &dead,
+    );
+    stop.store(true, Ordering::Relaxed);
+    for m in monitors {
+        let _ = m.join();
+    }
+    result
+}
+
+/// The leader's epoch loop, split out so [`serve_elastic`] can stop the
+/// monitor threads on every exit path.
+#[allow(clippy::too_many_arguments)]
+fn serve_elastic_epochs(
+    es: &ElasticSpec,
+    host: &str,
+    port_base: u16,
+    actors: &[CtlConn],
+    assignment: &mut [Option<usize>],
+    spares_q: &mut Vec<usize>,
+    shared: &Arc<Mutex<CtlStore>>,
+    dead: &Arc<Mutex<HashSet<usize>>>,
+) -> Result<ElasticReport> {
+    let spec = &es.worker;
+    let p = spec.h.stages;
+    let mut resume = 0u64;
+    let mut recoveries = 0usize;
+    let mut resume_steps = Vec::new();
+    let mut spares_used = 0usize;
+
+    for epoch in 0..es.max_epochs {
+        let blobs: Vec<Option<Vec<u8>>> = if resume > 0 {
+            shared
+                .lock()
+                .expect("ctl store")
+                .ckpts
+                .get(&resume)
+                .cloned()
+                .expect("resume points at a stored boundary")
+        } else {
+            vec![None; p]
+        };
+        // order every assigned worker into position for this epoch
+        for stage in 1..p {
+            let idx = assignment[stage].expect("stage assigned");
+            let order = ReassignOrder {
+                epoch: epoch as u32,
+                stage: stage as u32,
+                resume,
+                ckpt: blobs[stage].clone(),
+            };
+            let mut c = actors[idx].lock().expect("ctl conn");
+            // a failed send surfaces as a dead actor next epoch
+            let _ = c.send(&WireFrame::control(
+                FrameKind::Reassign,
+                resume,
+                order.encode(),
+            ));
+        }
+
+        // run our own stage 0 inline
+        let epoch_result: Result<WorkerReport> = (|| {
+            let port = chain_port(port_base, epoch, 0, p)?;
+            let listener = TcpListener::bind((host, port))
+                .with_context(|| format!("binding chain link 0 at {host}:{port}"))?;
+            let stream = accept_within(&listener, "stage 1 (right neighbor)")?;
+            let right: Option<Box<dyn Transport>> =
+                Some(Box::new(TcpTransport::new(stream)?));
+            let (mut wctl, mut sctl) = channel_pair();
+            let ectx = ElasticCtx {
+                resume_step: resume,
+                ckpt: blobs[0].clone(),
+                ckpt_every: es.ckpt_every,
+                ckpt_codec: es.ckpt_codec,
+                heartbeat_every: es.heartbeat_every,
+                stale_ms: es.stale_ms,
+                kill_at: None, // the leader is never scripted to die
+            };
+            let r = run_stage_inner(
+                spec,
+                0,
+                None,
+                right,
+                Some(&mut wctl as &mut dyn Transport),
+                Some(&ectx),
+            );
+            drop(wctl);
+            {
+                let mut s = shared.lock().expect("ctl store");
+                drain_ctl(&mut sctl, 0, p, &mut s);
+            }
+            r
+        })();
+
+        match epoch_result {
+            Ok(r0) => {
+                // the relay reached us every step: the pipeline is done.
+                // release every actor (workers and unused spares alike)
+                for conn in actors {
+                    let mut c = conn.lock().expect("ctl conn");
+                    let _ = c.send(&WireFrame::control(
+                        FrameKind::Reassign,
+                        0,
+                        ReassignOrder::done(epoch as u32).encode(),
+                    ));
+                }
+                let s = shared.lock().expect("ctl store");
+                let losses = s.full_losses()?;
+                return Ok(ElasticReport {
+                    losses: losses.clone(),
+                    epochs: epoch + 1,
+                    recoveries,
+                    resume_steps,
+                    spares_used,
+                    ckpt_frames: s.ck.0,
+                    ckpt_bytes: s.ck.1,
+                    heartbeat_frames: s.hb.0,
+                    heartbeat_bytes: s.hb.1,
+                    dist: DistReport {
+                        losses,
+                        step_seconds: r0.step_seconds,
+                        boundary_payload_bytes: r0.boundary_payload_bytes,
+                        wire_bytes: r0.wire_bytes,
+                        frames: r0.frames_sent,
+                        frame_payload_bytes: spec.cfg.boundary_bytes(&spec.h),
+                    },
+                });
+            }
+            Err(e) => {
+                recoveries += 1;
+                eprintln!(
+                    "[elastic] epoch {epoch} failed ({e:#}); recovering"
+                );
+                // give the monitors one stale window to notice deaths
+                std::thread::sleep(Duration::from_millis(es.stale_ms.min(500)));
+                let dead_now = dead.lock().expect("dead set").clone();
+                for stage in 1..p {
+                    let idx = assignment[stage].expect("stage assigned");
+                    if !dead_now.contains(&idx) {
+                        continue;
+                    }
+                    // promote the first living spare
+                    let replacement = loop {
+                        let Some(cand) = spares_q.first().copied() else {
+                            bail!(
+                                "stage {stage} departed permanently and no \
+                                 spare remains — unrecoverable churn"
+                            );
+                        };
+                        spares_q.remove(0);
+                        if dead_now.contains(&cand) {
+                            continue;
+                        }
+                        break cand;
+                    };
+                    assignment[stage] = Some(replacement);
+                    spares_used += 1;
+                    eprintln!(
+                        "[elastic] stage {stage}: reassigned to a spare"
+                    );
+                }
+                resume = shared.lock().expect("ctl store").best_boundary();
+                resume_steps.push(resume);
+            }
+        }
+    }
+    bail!(
+        "elastic run did not complete within {} epochs — the churn/fault \
+         schedule outpaces the checkpoint cadence",
+        es.max_epochs
+    )
+}
+
+/// The shared body of [`serve_stage_elastic`] and [`serve_spare`]: dial
+/// the leader's control port, enroll (announcing a fixed stage, or
+/// spare-hood), then serve reassignment orders until the leader says
+/// done. While idle — and that includes a spare that is never needed —
+/// the actor heartbeats the leader so its liveness monitor stays fed.
+fn serve_actor(
+    es: &ElasticSpec,
+    announce: Option<usize>,
+    host: &str,
+    port_base: u16,
+) -> Result<()> {
+    es.validate()?;
+    let spec = &es.worker;
+    let p = spec.h.stages;
+    let stream = dial_retry(host, port_base, "the elastic leader")?;
+    let mut ctl: Box<dyn Transport> = Box::new(TcpTransport::new(stream)?);
+    let mut hello = spec.digest();
+    hello.push(u8::from(announce.is_none()));
+    hello.extend_from_slice(&(announce.unwrap_or(0) as u32).to_le_bytes());
+    ctl.send(&WireFrame::control(FrameKind::Hello, 0, hello))?;
+
+    loop {
+        let f = match ctl
+            .recv_timeout(Duration::from_millis(IDLE_HEARTBEAT_MS))?
+        {
+            None => {
+                ctl.send(&WireFrame::control(
+                    FrameKind::Heartbeat,
+                    0,
+                    heartbeat_payload(0, 0),
+                ))?;
+                continue;
+            }
+            Some(f) => f,
+        };
+        if f.kind != FrameKind::Reassign {
+            continue; // stray control chatter
+        }
+        let order = ReassignOrder::decode(&f.payload)?;
+        if order.is_done() {
+            return Ok(());
+        }
+        let stage = order.stage as usize;
+        if stage == 0 || stage >= p {
+            bail!("leader assigned stage {stage} of a {p}-stage pipeline");
+        }
+        let epoch = order.epoch as usize;
+        // bind our right listener before dialing left: launch order free
+        let listener = if stage < p - 1 {
+            let port = chain_port(port_base, epoch, stage, p)?;
+            Some(
+                TcpListener::bind((host, port))
+                    .with_context(|| format!("binding {host}:{port}"))?,
+            )
+        } else {
+            None
+        };
+        let left_port = chain_port(port_base, epoch, stage - 1, p)?;
+        let left_stream = dial_retry(
+            host,
+            left_port,
+            &format!("stage {stage}: the left neighbor"),
+        )?;
+        let left: Option<Box<dyn Transport>> =
+            Some(Box::new(TcpTransport::new(left_stream)?));
+        let right: Option<Box<dyn Transport>> = match &listener {
+            Some(l) => Some(Box::new(TcpTransport::new(accept_within(
+                l,
+                &format!("stage {stage}: the right neighbor"),
+            )?)?)),
+            None => None,
+        };
+        // multi-process chaos honors first-epoch kills only: fired-kill
+        // bookkeeping lives in the supervisor's process in the
+        // in-process runtime, and a killed serve worker *exits* — its
+        // restart (or a spare) runs later epochs cleanly
+        let kill_at = if epoch == 0 {
+            es.chaos
+                .events
+                .iter()
+                .filter(|e| e.kind == ChurnKind::Leave && e.worker == stage)
+                .map(|e| e.step)
+                .min()
+        } else {
+            None
+        };
+        let ectx = ElasticCtx {
+            resume_step: order.resume,
+            ckpt: order.ckpt,
+            ckpt_every: es.ckpt_every,
+            ckpt_codec: es.ckpt_codec,
+            heartbeat_every: es.heartbeat_every,
+            stale_ms: es.stale_ms,
+            kill_at,
+        };
+        match run_stage_inner(
+            spec,
+            stage,
+            left,
+            right,
+            Some(ctl.as_mut()),
+            Some(&ectx),
+        ) {
+            // epoch done: loop back and await done / the next epoch
+            Ok(_) => {}
+            Err(e) => {
+                let msg = format!("{e:#}");
+                if msg.contains("chaos kill") {
+                    // scripted death: exit the process like a real kill
+                    return Err(e);
+                }
+                eprintln!(
+                    "[elastic] stage {stage} epoch {epoch} failed: {msg}; \
+                     awaiting reassignment"
+                );
+            }
+        }
+    }
+}
+
+/// Run one non-leader stage as a standalone elastic process: enroll
+/// with the leader at `host:port_base`, then follow its reassignment
+/// orders (including resumes from checkpointed boundaries) until the
+/// run completes.
+pub fn serve_stage_elastic(
+    es: &ElasticSpec,
+    stage: usize,
+    host: &str,
+    port_base: u16,
+) -> Result<()> {
+    if stage == 0 {
+        bail!(
+            "stage 0 is the elastic leader — run `serve --elastic` \
+             without --stage (or with --stage 0) to host it"
+        );
+    }
+    if stage >= es.worker.h.stages {
+        bail!(
+            "--stage {stage} out of range for {} stages",
+            es.worker.h.stages
+        );
+    }
+    serve_actor(es, Some(stage), host, port_base)
+}
+
+/// Run a hot spare: enroll with the leader, heartbeat while idle, and
+/// adopt whatever stage the leader assigns after a worker dies. Returns
+/// when the leader declares the run done (possibly never having run a
+/// single step).
+pub fn serve_spare(es: &ElasticSpec, host: &str, port_base: u16) -> Result<()> {
+    serve_actor(es, None, host, port_base)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Mode;
+    use crate::transport::fault::{FaultEvent, FaultKind, FaultSchedule};
+
+    #[test]
+    fn heartbeat_payload_roundtrips_at_priced_length() {
+        let p = heartbeat_payload(7, 123_456);
+        assert_eq!(p.len(), crate::memory::heartbeat_payload_bytes());
+        assert_eq!(parse_heartbeat(&p).unwrap(), (7, 123_456));
+        let err = parse_heartbeat(&p[..15]).unwrap_err().to_string();
+        assert!(err.contains("15 B"), "{err}");
+        assert!(parse_heartbeat(&[0; 17]).is_err());
+    }
+
+    #[test]
+    fn reassign_order_roundtrips() {
+        for order in [
+            ReassignOrder {
+                epoch: 2,
+                stage: 3,
+                resume: 12,
+                ckpt: Some(vec![1, 2, 3, 4, 5]),
+            },
+            ReassignOrder { epoch: 0, stage: 1, resume: 0, ckpt: None },
+            ReassignOrder::done(4),
+        ] {
+            let back = ReassignOrder::decode(&order.encode()).unwrap();
+            assert_eq!(back, order);
+        }
+        assert!(ReassignOrder::done(0).is_done());
+        // a lying length envelope is rejected, not sliced wrong
+        let mut bytes = ReassignOrder {
+            epoch: 1,
+            stage: 2,
+            resume: 6,
+            ckpt: Some(vec![9; 8]),
+        }
+        .encode();
+        bytes.pop();
+        let err = ReassignOrder::decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+        assert!(ReassignOrder::decode(&bytes[..10]).is_err());
+    }
+
+    #[test]
+    fn liveness_exactly_at_deadline_is_alive() {
+        let mon = LivenessMonitor::new(Duration::from_millis(50));
+        let d = mon.deadline();
+        // the boundary itself: alive — staleness is *strictly after*
+        assert!(!mon.is_stale_at(d));
+        assert!(mon.is_stale_at(d + Duration::from_nanos(1)));
+        // well before: alive
+        assert!(!mon.is_stale_at(d - Duration::from_millis(49)));
+    }
+
+    #[test]
+    fn clock_skewed_sender_cannot_trip_liveness() {
+        let mut mon = LivenessMonitor::new(Duration::from_secs(60));
+        // a sender whose local clock claims an absurd future: liveness
+        // only reads the local arrival instant, so this stays alive
+        let hb = WireFrame::control(
+            FrameKind::Heartbeat,
+            9,
+            heartbeat_payload(9, u64::MAX),
+        );
+        mon.observe(&hb);
+        assert!(!mon.is_stale());
+        assert_eq!(mon.beats, 1);
+        assert_eq!(mon.last_step, 9);
+        // ...and a heartbeat claiming the distant past refreshes too
+        let t_before = mon.deadline();
+        std::thread::sleep(Duration::from_millis(5));
+        mon.observe(&WireFrame::control(
+            FrameKind::Heartbeat,
+            10,
+            heartbeat_payload(10, 0),
+        ));
+        assert!(mon.deadline() > t_before);
+        assert_eq!(mon.last_step, 10);
+    }
+
+    #[test]
+    fn heartbeat_keeps_link_alive_through_delayed_bulk_frame() {
+        // the bulk frame (receive ordinal 1) is held 40 ms by the fault
+        // schedule; the heartbeat ahead of it refreshes the deadline, so
+        // the delayed payload still lands inside the stale window intact
+        let (mut a, b) = channel_pair();
+        let mut ft = FaultTransport::new(
+            Box::new(b),
+            FaultSchedule::scripted(vec![FaultEvent {
+                at: 1,
+                kind: FaultKind::DelayMs(40),
+            }]),
+        );
+        a.send(&WireFrame::control(
+            FrameKind::Heartbeat,
+            3,
+            heartbeat_payload(3, 7),
+        ))
+        .unwrap();
+        let bulk =
+            WireFrame::boundary(FrameKind::Fwd, Mode::Raw, 3, 0, vec![9; 4096]);
+        a.send(&bulk).unwrap();
+        let mut mon = LivenessMonitor::new(Duration::from_millis(1_000));
+        // the heartbeat is consumed silently but observed
+        assert!(recv_live(&mut ft, &mut mon).unwrap().is_none());
+        assert_eq!(mon.beats, 1);
+        assert_eq!(mon.last_step, 3);
+        let t0 = Instant::now();
+        let f = loop {
+            if let Some(f) = recv_live(&mut ft, &mut mon).unwrap() {
+                break f;
+            }
+        };
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+        assert_eq!(f, bulk);
+        assert_eq!(ft.stats().delayed, 1);
+        assert!(!mon.is_stale());
+    }
+
+    #[test]
+    fn recv_live_flags_stale_silence_as_departure() {
+        let (mut a, _b) = channel_pair();
+        let mut mon = LivenessMonitor::new(Duration::from_millis(15));
+        let err = loop {
+            match recv_live(&mut a as &mut dyn Transport, &mut mon) {
+                Ok(None) => continue, // marginal timing: not stale yet
+                Ok(Some(f)) => panic!("silent link delivered {f:?}"),
+                Err(e) => break e.to_string(),
+            }
+        };
+        assert!(err.contains("departed"), "{err}");
+        assert!(err.contains("stale"), "{err}");
+    }
+
+    fn tiny_worker(steps: usize) -> WorkerSpec {
+        WorkerSpec {
+            h: crate::manifest::Hyper::tiny_native(),
+            cfg: crate::coordinator::PipelineConfig {
+                mode: Mode::Subspace,
+                microbatches: 2,
+                grassmann_interval: 0,
+                lr: 1e-2,
+                warmup_steps: 3,
+                total_steps: steps,
+                seed: 5,
+                ..Default::default()
+            },
+            optim: crate::nn::Optim::AdamW,
+            steps,
+            corpus_kind: crate::data::CorpusKind::Wiki,
+            corpus_tokens: 50_000,
+        }
+    }
+
+    #[test]
+    fn elastic_spec_validation_rejects_bad_shapes() {
+        let es = ElasticSpec::new(tiny_worker(8));
+        assert_eq!(es.ckpt_every, 2); // steps / 4
+        es.validate().unwrap();
+        let mut bad = es.clone();
+        bad.ckpt_every = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = es.clone();
+        bad.heartbeat_every = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = es.clone();
+        bad.stale_ms = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = es.clone();
+        bad.max_epochs = 0;
+        assert!(bad.validate().is_err());
+        // chaos naming a worker beyond the pipeline is caught up front
+        let mut bad = es;
+        bad.chaos = ChurnTimeline::parse("kill:99@1").unwrap();
+        let err = bad.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("worker 99"), "{err:#}");
+    }
+}
+
+
+

@@ -1,0 +1,526 @@
+//! Deterministic fault injection for the framed transport
+//! (DESIGN.md §12).
+//!
+//! [`FaultTransport`] wraps any [`Transport`] and applies a *seeded,
+//! replayable* schedule of faults on the receive side: dropping frames,
+//! delaying them, truncating them mid-bytes (re-using the exact
+//! severed-link errors `frame.rs` produces for real partial reads), or
+//! severing the link outright. Every chaos scenario in `tests/chaos.rs`
+//! replays bit-identically because the schedule is data, not chance: a
+//! [`FaultSchedule`] maps receive ordinals (0-based count of frames the
+//! wrapped link has produced) to [`FaultKind`]s, and
+//! [`FaultSchedule::seeded`] derives that map from the repo's own
+//! deterministic [`crate::rng::Rng`].
+//!
+//! The wrapper is bitwise transparent under the empty schedule — a
+//! parity leg in `tests/transport_parity.rs` pins that invariant, so
+//! the harness itself can never skew a measured curve.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::rng::Rng;
+
+use super::{Transport, WireFrame};
+
+/// One fault to apply to a received frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Swallow the frame entirely; the receiver never sees it.
+    Drop,
+    /// Hold the frame for this many milliseconds before delivering it.
+    DelayMs(u64),
+    /// Deliver only the first `n` bytes of the frame's wire encoding,
+    /// then treat the link as severed — surfaces the same
+    /// "severed mid-header" / "severed mid-payload" errors a real
+    /// partial read produces.
+    Truncate(usize),
+    /// Cut the link: this and every later receive fails with a
+    /// `"departed"` error.
+    Sever,
+}
+
+/// A fault pinned to one receive ordinal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// 0-based index of the received frame this fault applies to.
+    pub at: u64,
+    /// What to do to that frame.
+    pub kind: FaultKind,
+}
+
+/// Named fault mixes for [`FaultSchedule::seeded`] — the three families
+/// the CI chaos matrix runs (DESIGN.md §12).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultFamily {
+    /// Mostly dropped frames (lost packets on a flaky link).
+    DropHeavy,
+    /// Mostly short delays (congested but lossless link).
+    DelayHeavy,
+    /// A single mid-horizon sever (a peer yanked off the network).
+    Sever,
+}
+
+impl FaultFamily {
+    /// Parse a family name (`drop` / `delay` / `sever`), as accepted by
+    /// the `--fault` CLI flag.
+    pub fn parse(s: &str) -> Result<FaultFamily> {
+        match s {
+            "drop" => Ok(FaultFamily::DropHeavy),
+            "delay" => Ok(FaultFamily::DelayHeavy),
+            "sever" => Ok(FaultFamily::Sever),
+            other => bail!(
+                "unknown fault family {other:?} (expected drop|delay|sever)"
+            ),
+        }
+    }
+}
+
+/// A deterministic receive-ordinal → fault map. Cloneable so the same
+/// schedule can be handed to several epochs or compared across runs.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultSchedule {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultSchedule {
+    /// The empty schedule: every frame passes through untouched. Under
+    /// this schedule [`FaultTransport`] is bitwise transparent.
+    pub fn transparent() -> FaultSchedule {
+        FaultSchedule { events: Vec::new() }
+    }
+
+    /// A hand-written schedule. Events are sorted by ordinal; the first
+    /// event at a given ordinal wins.
+    pub fn scripted(mut events: Vec<FaultEvent>) -> FaultSchedule {
+        events.sort_by_key(|e| e.at);
+        FaultSchedule { events }
+    }
+
+    /// Derive a schedule from a seed: roughly one fault per eight
+    /// receive ordinals over `[0, horizon)`, drawn from the family's
+    /// mix. Same `(seed, horizon, family)` → same schedule, always.
+    pub fn seeded(
+        seed: u64,
+        horizon: u64,
+        family: FaultFamily,
+    ) -> FaultSchedule {
+        let mut rng = Rng::new(seed ^ 0xFA017);
+        let mut events = Vec::new();
+        match family {
+            FaultFamily::Sever => {
+                // one cut somewhere in the middle half of the horizon
+                let span = (horizon / 2).max(1);
+                let at = horizon / 4 + rng.next_u64() % span;
+                events.push(FaultEvent { at, kind: FaultKind::Sever });
+            }
+            FaultFamily::DropHeavy | FaultFamily::DelayHeavy => {
+                let mut at = rng.next_u64() % 8;
+                while at < horizon {
+                    let kind = match family {
+                        FaultFamily::DropHeavy => FaultKind::Drop,
+                        _ => FaultKind::DelayMs(1 + rng.next_u64() % 5),
+                    };
+                    events.push(FaultEvent { at, kind });
+                    at += 1 + rng.next_u64() % 15;
+                }
+            }
+        }
+        FaultSchedule::scripted(events)
+    }
+
+    /// The fault scheduled for receive ordinal `at`, if any.
+    pub fn fault_at(&self, at: u64) -> Option<FaultKind> {
+        self.events
+            .iter()
+            .find(|e| e.at == at)
+            .map(|e| e.kind)
+    }
+
+    /// True if no fault is ever scheduled.
+    pub fn is_transparent(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The scheduled events, sorted by ordinal.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+}
+
+/// Counters of what the wrapper actually did — chaos tests assert these
+/// so a schedule that silently never fired cannot pass as coverage.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Frames delivered untouched.
+    pub passed: u64,
+    /// Frames swallowed by [`FaultKind::Drop`].
+    pub dropped: u64,
+    /// Frames held back by [`FaultKind::DelayMs`] before delivery.
+    pub delayed: u64,
+    /// Frames cut short by [`FaultKind::Truncate`].
+    pub truncated: u64,
+    /// Links cut by [`FaultKind::Sever`].
+    pub severed: u64,
+}
+
+/// A [`Transport`] wrapper that injects the faults a [`FaultSchedule`]
+/// prescribes, on the receive side, by receive ordinal. Sends pass
+/// through untouched until the link is severed (after which both
+/// directions fail with `"departed"` errors, like a real dead peer).
+pub struct FaultTransport {
+    inner: Box<dyn Transport>,
+    sched: FaultSchedule,
+    recvs: u64,
+    stats: FaultStats,
+    /// a delayed frame waiting for its delivery instant
+    pending: Option<(WireFrame, Instant)>,
+    /// once set, the link is dead and every call fails with this message
+    dead: Option<String>,
+}
+
+impl FaultTransport {
+    /// Wrap `inner` under `sched`.
+    pub fn new(
+        inner: Box<dyn Transport>,
+        sched: FaultSchedule,
+    ) -> FaultTransport {
+        FaultTransport {
+            inner,
+            sched,
+            recvs: 0,
+            stats: FaultStats::default(),
+            pending: None,
+            dead: None,
+        }
+    }
+
+    /// What the wrapper has done so far.
+    pub fn stats(&self) -> FaultStats {
+        self.stats
+    }
+
+    /// Apply the scheduled fault (if any) to a freshly received frame.
+    /// `Ok(Some)` delivers now, `Ok(None)` means the frame was dropped
+    /// or parked for delayed delivery, `Err` means the link died.
+    fn apply(&mut self, frame: WireFrame) -> Result<Option<WireFrame>> {
+        let ord = self.recvs;
+        self.recvs += 1;
+        match self.sched.fault_at(ord) {
+            None => {
+                self.stats.passed += 1;
+                Ok(Some(frame))
+            }
+            Some(FaultKind::Drop) => {
+                self.stats.dropped += 1;
+                Ok(None)
+            }
+            Some(FaultKind::DelayMs(ms)) => {
+                self.pending =
+                    Some((frame, Instant::now() + Duration::from_millis(ms)));
+                Ok(None)
+            }
+            Some(FaultKind::Truncate(n)) => {
+                self.stats.truncated += 1;
+                let bytes = frame.to_bytes();
+                let cut = &bytes[..n.min(bytes.len())];
+                match WireFrame::read_from(&mut std::io::Cursor::new(cut)) {
+                    // degenerate truncation (n >= frame length): whole
+                    // frame survives, deliver it
+                    Ok(f) => Ok(Some(f)),
+                    Err(e) => {
+                        let msg = e.to_string();
+                        self.dead = Some(msg.clone());
+                        bail!("{msg}")
+                    }
+                }
+            }
+            Some(FaultKind::Sever) => {
+                self.stats.severed += 1;
+                let msg = format!(
+                    "worker departed: link severed by fault injection \
+                     at receive ordinal {ord}"
+                );
+                self.dead = Some(msg.clone());
+                bail!("{msg}")
+            }
+        }
+    }
+
+    /// Deliver the parked delayed frame, sleeping out its remaining
+    /// hold time.
+    fn release_pending(&mut self, frame: WireFrame, at: Instant) -> WireFrame {
+        let now = Instant::now();
+        if at > now {
+            std::thread::sleep(at - now);
+        }
+        self.stats.delayed += 1;
+        frame
+    }
+}
+
+impl Transport for FaultTransport {
+    fn send(&mut self, frame: &WireFrame) -> Result<()> {
+        if let Some(msg) = &self.dead {
+            bail!("{msg}");
+        }
+        self.inner.send(frame)
+    }
+
+    fn recv(&mut self) -> Result<WireFrame> {
+        loop {
+            if let Some(msg) = &self.dead {
+                bail!("{msg}");
+            }
+            if let Some((frame, at)) = self.pending.take() {
+                return Ok(self.release_pending(frame, at));
+            }
+            let frame = self.inner.recv()?;
+            if let Some(f) = self.apply(frame)? {
+                return Ok(f);
+            }
+        }
+    }
+
+    fn recv_timeout(
+        &mut self,
+        timeout: Duration,
+    ) -> Result<Option<WireFrame>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(msg) = &self.dead {
+                bail!("{msg}");
+            }
+            if let Some((frame, at)) = self.pending.take() {
+                if at > deadline {
+                    // the hold outlasts this wait: park it again and
+                    // report silence, like a genuinely slow link
+                    self.pending = Some((frame, at));
+                    let now = Instant::now();
+                    if deadline > now {
+                        std::thread::sleep(deadline - now);
+                    }
+                    return Ok(None);
+                }
+                return Ok(Some(self.release_pending(frame, at)));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            match self.inner.recv_timeout(deadline - now)? {
+                None => return Ok(None),
+                Some(frame) => {
+                    if let Some(f) = self.apply(frame)? {
+                        return Ok(Some(f));
+                    }
+                }
+            }
+        }
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.inner.bytes_sent()
+    }
+
+    fn label(&self) -> &'static str {
+        "fault"
+    }
+}
+
+/// Which end of a stage's two links a schedule attaches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkSide {
+    /// The link toward stage - 1.
+    Left,
+    /// The link toward stage + 1.
+    Right,
+}
+
+/// A per-epoch fault assignment for the elastic runtime: schedules keyed
+/// by `(stage, side)`, applied only during `target_epoch` so recovery
+/// epochs run clean and the run terminates (DESIGN.md §12).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Epoch the faults fire in (0 = the first attempt).
+    pub target_epoch: usize,
+    /// `(stage, side, schedule)` triples.
+    pub entries: Vec<(usize, LinkSide, FaultSchedule)>,
+}
+
+impl FaultPlan {
+    /// The schedule for `(stage, side)` in `epoch`, if one applies.
+    pub fn schedule_for(
+        &self,
+        epoch: usize,
+        stage: usize,
+        side: LinkSide,
+    ) -> Option<FaultSchedule> {
+        if epoch != self.target_epoch {
+            return None;
+        }
+        self.entries
+            .iter()
+            .find(|(s, d, _)| *s == stage && *d == side)
+            .map(|(_, _, sched)| sched.clone())
+    }
+
+    /// True if no schedule is registered at all.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{channel_pair, FrameKind};
+    use super::*;
+    use crate::compress::Mode;
+
+    fn frame(step: u64, fill: u8) -> WireFrame {
+        WireFrame::boundary(FrameKind::Fwd, Mode::Raw, step, 0, vec![fill; 40])
+    }
+
+    #[test]
+    fn transparent_schedule_is_bitwise_passthrough() {
+        let (a, mut b) = channel_pair();
+        let mut ft =
+            FaultTransport::new(Box::new(a), FaultSchedule::transparent());
+        let mut sent = Vec::new();
+        for i in 0..5u64 {
+            let f = frame(i, i as u8);
+            b.send(&f).unwrap();
+            sent.push(f);
+        }
+        for f in &sent {
+            assert_eq!(&ft.recv().unwrap(), f);
+        }
+        assert_eq!(ft.stats().passed, 5);
+        assert_eq!(
+            ft.stats(),
+            FaultStats { passed: 5, ..FaultStats::default() }
+        );
+    }
+
+    #[test]
+    fn drop_swallows_exactly_the_scheduled_ordinal() {
+        let (a, mut b) = channel_pair();
+        let sched = FaultSchedule::scripted(vec![FaultEvent {
+            at: 1,
+            kind: FaultKind::Drop,
+        }]);
+        let mut ft = FaultTransport::new(Box::new(a), sched);
+        for i in 0..3u64 {
+            b.send(&frame(i, 0)).unwrap();
+        }
+        // ordinal 1 vanishes: we see steps 0 then 2
+        assert_eq!(ft.recv().unwrap().step, 0);
+        assert_eq!(ft.recv().unwrap().step, 2);
+        assert_eq!(ft.stats().dropped, 1);
+        assert_eq!(ft.stats().passed, 2);
+    }
+
+    #[test]
+    fn delay_holds_then_delivers_intact() {
+        let (a, mut b) = channel_pair();
+        let sched = FaultSchedule::scripted(vec![FaultEvent {
+            at: 0,
+            kind: FaultKind::DelayMs(30),
+        }]);
+        let mut ft = FaultTransport::new(Box::new(a), sched);
+        let f = frame(7, 9);
+        b.send(&f).unwrap();
+        // a short wait sees silence (the frame is parked)…
+        assert!(ft
+            .recv_timeout(Duration::from_millis(5))
+            .unwrap()
+            .is_none());
+        // …but a blocking recv rides out the hold and gets it intact
+        let start = Instant::now();
+        assert_eq!(ft.recv().unwrap(), f);
+        assert!(start.elapsed() >= Duration::from_millis(10));
+        assert_eq!(ft.stats().delayed, 1);
+    }
+
+    #[test]
+    fn truncation_surfaces_frame_layer_severed_errors() {
+        // mid-header cut
+        let (a, mut b) = channel_pair();
+        let sched = FaultSchedule::scripted(vec![FaultEvent {
+            at: 0,
+            kind: FaultKind::Truncate(10),
+        }]);
+        let mut ft = FaultTransport::new(Box::new(a), sched);
+        b.send(&frame(0, 1)).unwrap();
+        let err = ft.recv().unwrap_err().to_string();
+        assert!(err.contains("severed mid-header"), "{err}");
+        // the link stays dead afterwards, both directions
+        let err = ft.recv().unwrap_err().to_string();
+        assert!(err.contains("departed"), "{err}");
+        let err = ft.send(&frame(1, 1)).unwrap_err().to_string();
+        assert!(err.contains("departed"), "{err}");
+
+        // mid-payload cut (past the 24 B header)
+        let (a, mut b) = channel_pair();
+        let sched = FaultSchedule::scripted(vec![FaultEvent {
+            at: 0,
+            kind: FaultKind::Truncate(30),
+        }]);
+        let mut ft = FaultTransport::new(Box::new(a), sched);
+        b.send(&frame(0, 2)).unwrap();
+        let err = ft.recv().unwrap_err().to_string();
+        assert!(err.contains("severed mid-payload"), "{err}");
+    }
+
+    #[test]
+    fn sever_kills_the_link_with_a_departed_error() {
+        let (a, mut b) = channel_pair();
+        let sched = FaultSchedule::scripted(vec![FaultEvent {
+            at: 2,
+            kind: FaultKind::Sever,
+        }]);
+        let mut ft = FaultTransport::new(Box::new(a), sched);
+        for i in 0..4u64 {
+            b.send(&frame(i, 0)).unwrap();
+        }
+        assert_eq!(ft.recv().unwrap().step, 0);
+        assert_eq!(ft.recv().unwrap().step, 1);
+        let err = ft.recv().unwrap_err().to_string();
+        assert!(err.contains("departed"), "{err}");
+        assert!(err.contains("fault injection"), "{err}");
+        assert_eq!(ft.stats().severed, 1);
+    }
+
+    #[test]
+    fn seeded_schedules_replay_bit_identically() {
+        for family in
+            [FaultFamily::DropHeavy, FaultFamily::DelayHeavy, FaultFamily::Sever]
+        {
+            let a = FaultSchedule::seeded(99, 64, family);
+            let b = FaultSchedule::seeded(99, 64, family);
+            assert_eq!(a, b, "{family:?} not deterministic");
+            assert!(!a.is_transparent(), "{family:?} scheduled nothing");
+            assert!(
+                a.events().iter().all(|e| e.at < 64),
+                "{family:?} event past horizon"
+            );
+            // a different seed moves the schedule
+            let c = FaultSchedule::seeded(100, 64, family);
+            assert_ne!(a, c, "{family:?} ignores the seed");
+        }
+    }
+
+    #[test]
+    fn fault_plan_scopes_schedules_to_epoch_stage_and_side() {
+        let sched = FaultSchedule::seeded(5, 16, FaultFamily::DropHeavy);
+        let plan = FaultPlan {
+            target_epoch: 0,
+            entries: vec![(1, LinkSide::Left, sched.clone())],
+        };
+        assert_eq!(plan.schedule_for(0, 1, LinkSide::Left), Some(sched));
+        assert_eq!(plan.schedule_for(0, 1, LinkSide::Right), None);
+        assert_eq!(plan.schedule_for(0, 2, LinkSide::Left), None);
+        assert_eq!(plan.schedule_for(1, 1, LinkSide::Left), None);
+    }
+}

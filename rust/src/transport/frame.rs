@@ -5,7 +5,8 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic  b"PMF1"
-//! 4       1     kind   (0 hello, 1 fwd, 2 bwd, 3 step-end, 4 bye)
+//! 4       1     kind   (0 hello, 1 fwd, 2 bwd, 3 step-end, 4 bye,
+//!                       5 heartbeat, 6 checkpoint, 7 reassign)
 //! 5       1     codec  Mode::wire_tag for boundary frames, 0xFF control
 //! 6       2     reserved (zero)
 //! 8       8     step        u64 LE
@@ -61,6 +62,13 @@ pub enum FrameKind {
     StepEnd,
     /// graceful goodbye before closing the connection
     Bye,
+    /// liveness beacon: sender's step + local clock (DESIGN.md §12)
+    Heartbeat,
+    /// periodic per-stage state snapshot shipped to the leader
+    Checkpoint,
+    /// leader → worker recovery order: epoch, stage, resume boundary
+    /// (+ checkpoint payload when a spare takes over a dead stage)
+    Reassign,
 }
 
 impl FrameKind {
@@ -72,6 +80,9 @@ impl FrameKind {
             FrameKind::Bwd => 2,
             FrameKind::StepEnd => 3,
             FrameKind::Bye => 4,
+            FrameKind::Heartbeat => 5,
+            FrameKind::Checkpoint => 6,
+            FrameKind::Reassign => 7,
         }
     }
 
@@ -83,6 +94,9 @@ impl FrameKind {
             2 => FrameKind::Bwd,
             3 => FrameKind::StepEnd,
             4 => FrameKind::Bye,
+            5 => FrameKind::Heartbeat,
+            6 => FrameKind::Checkpoint,
+            7 => FrameKind::Reassign,
             _ => return None,
         })
     }
@@ -95,6 +109,9 @@ impl FrameKind {
             FrameKind::Bwd => "bwd",
             FrameKind::StepEnd => "step-end",
             FrameKind::Bye => "bye",
+            FrameKind::Heartbeat => "heartbeat",
+            FrameKind::Checkpoint => "checkpoint",
+            FrameKind::Reassign => "reassign",
         }
     }
 }
@@ -174,35 +191,63 @@ impl WireFrame {
     }
 
     /// Read one frame, tolerating arbitrarily fragmented reads (TCP
-    /// segments, 1-byte test readers): `read_exact` loops until the
-    /// header and payload are complete or the stream ends. A stream end
-    /// mid-frame is reported as a departed peer.
+    /// segments, 1-byte test readers): the reader loops until the header
+    /// and payload are complete or the stream ends. A stream end is
+    /// reported as a departed peer, with the *cut position*
+    /// distinguished so chaos assertions can tell a clean shutdown from
+    /// a severed link:
+    ///
+    /// - EOF exactly at a frame boundary (zero header bytes) — the peer
+    ///   closed cleanly between frames ("closed cleanly at a frame
+    ///   boundary");
+    /// - EOF mid-header or mid-payload — the link was cut while a frame
+    ///   was in flight ("link severed mid-header" / "mid-payload").
     pub fn read_from(r: &mut impl Read) -> Result<WireFrame> {
         let mut header = [0u8; HEADER_LEN];
-        r.read_exact(&mut header).map_err(|e| {
-            if e.kind() == std::io::ErrorKind::UnexpectedEof {
-                anyhow::anyhow!(
-                    "worker departed: connection closed before a \
-                     complete frame header"
-                )
-            } else {
-                anyhow::anyhow!("reading frame header: {e}")
-            }
-        })?;
+        let got = read_full(r, &mut header)
+            .map_err(|e| anyhow::anyhow!("reading frame header: {e}"))?;
+        if got == 0 {
+            bail!(
+                "worker departed: connection closed cleanly at a frame \
+                 boundary (no frame in flight)"
+            );
+        }
+        if got < HEADER_LEN {
+            bail!(
+                "worker departed: link severed mid-header (got {got} of \
+                 {HEADER_LEN} header bytes)"
+            );
+        }
         let (kind, codec, step, microbatch, len) = parse_header(&header)?;
         let mut payload = vec![0u8; len];
-        r.read_exact(&mut payload).map_err(|e| {
-            if e.kind() == std::io::ErrorKind::UnexpectedEof {
-                anyhow::anyhow!(
-                    "worker departed: connection closed mid-payload \
-                     (expected {len} B)"
-                )
-            } else {
-                anyhow::anyhow!("reading {len} B frame payload: {e}")
-            }
-        })?;
+        let got = read_full(r, &mut payload)
+            .map_err(|e| anyhow::anyhow!("reading {len} B frame payload: {e}"))?;
+        if got < len {
+            bail!(
+                "worker departed: link severed mid-payload (got {got} of \
+                 {len} payload bytes)"
+            );
+        }
         Ok(WireFrame { kind, codec, step, microbatch, payload })
     }
+}
+
+/// Fill `buf` from `r`, looping over short reads, and return how many
+/// bytes actually arrived (less than `buf.len()` only at end of
+/// stream). Unlike `read_exact`, the caller learns *where* the stream
+/// ended — the information the severed-vs-clean-shutdown distinction
+/// needs.
+fn read_full(r: &mut impl Read, buf: &mut [u8]) -> std::io::Result<usize> {
+    let mut n = 0;
+    while n < buf.len() {
+        match r.read(&mut buf[n..]) {
+            Ok(0) => break,
+            Ok(m) => n += m,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(n)
 }
 
 /// Validate and destructure a serialized header. Pure — shared by the
@@ -309,23 +354,47 @@ mod tests {
     #[test]
     fn truncated_header_and_payload_report_departure() {
         let bytes = sample_frame().to_bytes();
-        // cut inside the header
+        // cut inside the header: a severed link, and the message says so
         let err = WireFrame::read_from(&mut Cursor::new(&bytes[..10]))
             .unwrap_err()
             .to_string();
         assert!(err.contains("departed"), "{err}");
-        // cut inside the payload
+        assert!(err.contains("severed mid-header"), "{err}");
+        // cut inside the payload: severed too, at the other position
         let err = WireFrame::read_from(&mut Cursor::new(
             &bytes[..HEADER_LEN + 3],
         ))
         .unwrap_err()
         .to_string();
         assert!(err.contains("departed"), "{err}");
-        // clean EOF before any bytes is also a departure, not a panic
+        assert!(err.contains("severed mid-payload"), "{err}");
+        // clean EOF before any bytes is a departure as well, but a
+        // *clean-shutdown* one — chaos assertions tell them apart
         let err = WireFrame::read_from(&mut Cursor::new(&[] as &[u8]))
             .unwrap_err()
             .to_string();
         assert!(err.contains("departed"), "{err}");
+        assert!(err.contains("frame boundary"), "{err}");
+        assert!(!err.contains("severed"), "{err}");
+    }
+
+    #[test]
+    fn liveness_frame_kinds_roundtrip_with_stable_tags() {
+        // the recovery protocol's kinds append to the tag space — the
+        // wire numbering is a compatibility contract, like Mode tags
+        for (kind, tag) in [
+            (FrameKind::Heartbeat, 5u8),
+            (FrameKind::Checkpoint, 6),
+            (FrameKind::Reassign, 7),
+        ] {
+            assert_eq!(kind.tag(), tag);
+            assert_eq!(FrameKind::from_tag(tag), Some(kind));
+            let f = WireFrame::control(kind, 9, vec![0xEE; 16]);
+            let bytes = f.to_bytes();
+            assert_eq!(bytes[4], tag);
+            let g = WireFrame::read_from(&mut Cursor::new(&bytes)).unwrap();
+            assert_eq!(g, f);
+        }
     }
 
     #[test]

@@ -26,6 +26,8 @@
 //! data streams and the wire is lossless for what the codec preserves.
 
 pub mod dist;
+pub mod elastic;
+pub mod fault;
 pub mod frame;
 
 use anyhow::{Context, Result};
@@ -33,6 +35,16 @@ use anyhow::{Context, Result};
 pub use dist::{
     run_local, serve_stage, DistReport, TransportKind, WorkerReport,
     WorkerSpec,
+};
+pub use elastic::{
+    heartbeat_payload, parse_heartbeat, recv_live, run_elastic,
+    serve_elastic, serve_spare, serve_stage_elastic, ElasticCtx,
+    ElasticReport, ElasticSpec, LivenessMonitor, ReassignOrder,
+    REASSIGN_DONE,
+};
+pub use fault::{
+    FaultEvent, FaultFamily, FaultKind, FaultPlan, FaultSchedule,
+    FaultStats, FaultTransport, LinkSide,
 };
 pub use frame::{FrameKind, WireFrame, HEADER_LEN, MAX_PAYLOAD};
 
@@ -49,6 +61,20 @@ pub trait Transport: Send {
     /// Receive the next frame. Blocks until one arrives or the peer
     /// departs.
     fn recv(&mut self) -> Result<WireFrame>;
+
+    /// Receive with a bounded wait: `Ok(None)` if no frame *started*
+    /// arriving within `timeout` (the liveness probe the elastic
+    /// runtime's stale detection is built on — DESIGN.md §12), `Ok(Some)`
+    /// once a whole frame is in, `Err` if the peer departed. The default
+    /// implementation ignores the timeout and blocks — backends that can
+    /// wait boundedly override it.
+    fn recv_timeout(
+        &mut self,
+        timeout: std::time::Duration,
+    ) -> Result<Option<WireFrame>> {
+        let _ = timeout;
+        self.recv().map(Some)
+    }
 
     /// Cumulative bytes this end has sent, frame headers included.
     fn bytes_sent(&self) -> u64;
@@ -105,6 +131,24 @@ impl Transport for ChannelTransport {
             )
         })?;
         WireFrame::read_from(&mut std::io::Cursor::new(bytes))
+    }
+
+    fn recv_timeout(
+        &mut self,
+        timeout: std::time::Duration,
+    ) -> Result<Option<WireFrame>> {
+        use std::sync::mpsc::RecvTimeoutError;
+        match self.rx.recv_timeout(timeout) {
+            Ok(bytes) => WireFrame::read_from(&mut std::io::Cursor::new(
+                bytes,
+            ))
+            .map(Some),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(anyhow::anyhow!(
+                "worker departed: channel peer dropped while we \
+                 awaited a frame"
+            )),
+        }
     }
 
     fn bytes_sent(&self) -> u64 {
@@ -205,6 +249,41 @@ impl Transport for TcpTransport {
         WireFrame::read_from(&mut self.reader)
     }
 
+    fn recv_timeout(
+        &mut self,
+        timeout: std::time::Duration,
+    ) -> Result<Option<WireFrame>> {
+        // Probe with `peek` under a read timeout: peek never consumes, so
+        // a timeout leaves the stream exactly where it was and the
+        // subsequent blocking `recv` still sees whole frames. The probe
+        // only answers "has the next frame *started* arriving" — which is
+        // all stale detection needs.
+        self.reader
+            .set_read_timeout(Some(timeout))
+            .context("arming transport read timeout")?;
+        let probe = self.reader.peek(&mut [0u8; 1]);
+        self.reader
+            .set_read_timeout(None)
+            .context("disarming transport read timeout")?;
+        match probe {
+            Ok(0) => Err(anyhow::anyhow!(
+                "worker departed: tcp peer closed the stream while we \
+                 awaited a frame"
+            )),
+            Ok(_) => self.recv().map(Some),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                Ok(None)
+            }
+            Err(e) => Err(anyhow::anyhow!(
+                "worker departed: tcp stream error while we awaited a \
+                 frame ({e})"
+            )),
+        }
+    }
+
     fn bytes_sent(&self) -> u64 {
         self.sent
     }
@@ -258,6 +337,50 @@ mod tests {
         let err = a.send(&f).unwrap_err().to_string();
         assert!(err.contains("departed"), "{err}");
         let err = a.recv().unwrap_err().to_string();
+        assert!(err.contains("departed"), "{err}");
+    }
+
+    #[test]
+    fn channel_recv_timeout_distinguishes_silence_from_departure() {
+        let (mut a, mut b) = channel_pair();
+        let t = std::time::Duration::from_millis(10);
+        // silence: no frame within the window
+        assert!(a.recv_timeout(t).unwrap().is_none());
+        // a queued frame arrives whole
+        let f = WireFrame::control(FrameKind::Heartbeat, 4, vec![1; 16]);
+        b.send(&f).unwrap();
+        assert_eq!(a.recv_timeout(t).unwrap(), Some(f));
+        // a dropped peer is a departure, not a timeout
+        drop(b);
+        let err = a.recv_timeout(t).unwrap_err().to_string();
+        assert!(err.contains("departed"), "{err}");
+    }
+
+    #[test]
+    fn tcp_recv_timeout_probes_without_consuming() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let mut a = TcpTransport::new(client).unwrap();
+        let mut b = TcpTransport::new(server).unwrap();
+        let t = std::time::Duration::from_millis(20);
+        assert!(b.recv_timeout(t).unwrap().is_none());
+        let f = WireFrame::boundary(
+            FrameKind::Checkpoint,
+            Mode::Raw,
+            2,
+            0,
+            vec![5; 96],
+        );
+        a.send(&f).unwrap();
+        // the probe must not eat header bytes: the whole frame survives
+        assert_eq!(
+            b.recv_timeout(std::time::Duration::from_secs(5)).unwrap(),
+            Some(f)
+        );
+        drop(a);
+        let err = b.recv_timeout(t).unwrap_err().to_string();
         assert!(err.contains("departed"), "{err}");
     }
 

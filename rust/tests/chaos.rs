@@ -1,0 +1,304 @@
+//! The chaos harness's flagship contract (DESIGN.md §12): a distributed
+//! run that loses and replaces workers mid-flight must *rejoin the
+//! no-churn loss curve* — bitwise under the raw checkpoint codec — with
+//! every recovery byte priced by `memory::checkpoint_payload_bytes`,
+//! and the discrete-event swarm simulator must predict the envelope for
+//! the *same* churn timeline the elastic runtime executed. Faults are
+//! injected from seeded deterministic schedules, so every failure in
+//! this suite reproduces exactly.
+
+use protomodels::compress::{CkptCodec, Mode};
+use protomodels::coordinator::PipelineConfig;
+use protomodels::data::CorpusKind;
+use protomodels::manifest::Hyper;
+use protomodels::memory::{checkpoint_payload_bytes, heartbeat_payload_bytes};
+use protomodels::nn::Optim;
+use protomodels::sim::{simulate_swarm, ChurnTimeline, SwarmSpec};
+use protomodels::transport::{
+    run_elastic, run_local, ElasticSpec, FaultFamily, FaultPlan,
+    FaultSchedule, LinkSide, TransportKind, WorkerSpec,
+};
+
+fn spec(mode: Mode, steps: usize, stages: usize) -> WorkerSpec {
+    let mut h = Hyper::tiny_native();
+    h.stages = stages;
+    h.layers = h.blocks_per_stage * stages;
+    WorkerSpec {
+        h,
+        cfg: PipelineConfig {
+            mode,
+            microbatches: 2,
+            grassmann_interval: 0,
+            lr: 1e-2,
+            warmup_steps: 3,
+            total_steps: steps,
+            seed: 11,
+            ..Default::default()
+        },
+        optim: Optim::AdamW,
+        steps,
+        corpus_kind: CorpusKind::Wiki,
+        corpus_tokens: 60_000,
+    }
+}
+
+/// The no-churn reference curve, from the already-proven distributed
+/// runtime (itself bitwise-equal to the single-process backend — see
+/// `transport_parity.rs`).
+fn clean_curve(s: &WorkerSpec) -> Vec<f64> {
+    run_local(s, TransportKind::Channel)
+        .expect("clean distributed run")
+        .losses
+}
+
+fn assert_bitwise(label: &str, reference: &[f64], got: &[f64]) {
+    assert_eq!(reference.len(), got.len(), "{label}: curve length");
+    for (i, (a, b)) in reference.iter().zip(got).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{label}: loss diverged at step {} ({a} vs {b})",
+            i + 1
+        );
+    }
+}
+
+/// Total checkpoint payload bytes one complete boundary costs, summed
+/// over every stage — the memory.rs cost model the wire is held to.
+fn boundary_cost(s: &WorkerSpec, codec: CkptCodec) -> u64 {
+    let p = s.h.stages;
+    (0..p)
+        .map(|st| {
+            checkpoint_payload_bytes(
+                &s.h,
+                st,
+                s.cfg.mode,
+                codec,
+                st == p - 1 && s.cfg.compressed(),
+            ) as u64
+        })
+        .sum()
+}
+
+#[test]
+fn killed_worker_recovers_and_rejoins_the_clean_curve_bitwise() {
+    // the flagship: kill worker 1 at step 15 of an 18-step run with a
+    // checkpoint every 6 steps. The supervisor must detect the death,
+    // hand the stage to a spare, resync everyone from boundary 12, and
+    // finish — and under the raw checkpoint codec the final curve is
+    // BITWISE the no-churn curve (the paper-level claim: churn costs
+    // recomputation, never training fidelity)
+    let s = spec(Mode::Subspace, 18, 3);
+    let reference = clean_curve(&s);
+    let mut es = ElasticSpec::new(s.clone());
+    es.ckpt_every = 6;
+    es.ckpt_codec = CkptCodec::Raw;
+    es.chaos = ChurnTimeline::parse("kill:1@15").expect("timeline");
+    let rep = run_elastic(&es, TransportKind::Channel).expect("elastic run");
+
+    assert_bitwise("chaos/kill+spare", &reference, &rep.losses);
+    assert_eq!(rep.epochs, 2, "one failed epoch, one clean epoch");
+    assert_eq!(rep.recoveries, 1);
+    assert_eq!(
+        rep.resume_steps,
+        vec![12],
+        "must resume from the newest complete boundary before the kill"
+    );
+    assert_eq!(rep.spares_used, 1, "no rejoin scripted: a spare steps in");
+
+    // ---- recovery wire bytes against the memory.rs cost model ----
+    // epoch 0 ships boundaries 6 and 12 from each stage before dying at
+    // step 15; the recovery epoch (12..18) ships boundary 18: three
+    // complete boundaries, never a partial one
+    let p = s.h.stages as u64;
+    assert_eq!(rep.ckpt_frames % p, 0, "no partial checkpoint boundary");
+    assert_eq!(rep.ckpt_frames / p, 3, "boundaries 6, 12, 18");
+    assert_eq!(
+        rep.ckpt_bytes,
+        (rep.ckpt_frames / p) * boundary_cost(&s, CkptCodec::Raw),
+        "checkpoint wire bytes must match memory::checkpoint_payload_bytes"
+    );
+    assert!(rep.heartbeat_frames > 0, "liveness beacons must have flowed");
+    assert_eq!(
+        rep.heartbeat_bytes,
+        rep.heartbeat_frames * heartbeat_payload_bytes() as u64,
+        "heartbeat wire bytes must match memory::heartbeat_payload_bytes"
+    );
+}
+
+#[test]
+fn scripted_rejoin_consumes_no_spare() {
+    // kill:1@3,join:1@4 — the same worker restarts, so the recovery must
+    // succeed with zero spares configured and still rejoin bitwise
+    let s = spec(Mode::Subspace, 8, 2);
+    let reference = clean_curve(&s);
+    let mut es = ElasticSpec::new(s);
+    es.ckpt_every = 2;
+    es.spares = 0;
+    es.chaos = ChurnTimeline::parse("kill:1@3,join:1@4").expect("timeline");
+    let rep = run_elastic(&es, TransportKind::Channel).expect("elastic run");
+    assert_bitwise("chaos/rejoin", &reference, &rep.losses);
+    assert_eq!(rep.recoveries, 1);
+    assert_eq!(rep.spares_used, 0, "a scripted rejoin is not a spare");
+    assert_eq!(rep.resume_steps, vec![2]);
+}
+
+#[test]
+fn spare_exhaustion_is_a_descriptive_error_not_a_hang() {
+    let s = spec(Mode::Subspace, 6, 2);
+    let mut es = ElasticSpec::new(s);
+    es.ckpt_every = 3;
+    es.spares = 0;
+    es.chaos = ChurnTimeline::parse("kill:1@4").expect("timeline");
+    let err = run_elastic(&es, TransportKind::Channel)
+        .expect_err("a permanent leave with no spare cannot complete")
+        .to_string();
+    assert!(err.contains("no spare remains"), "{err}");
+    assert!(err.contains("unrecoverable churn"), "{err}");
+}
+
+/// A seeded fault plan targeting stage 1's left chain link during the
+/// first epoch only (recovery epochs run on clean links, mirroring a
+/// transient network event).
+fn fault_plan(seed: u64, horizon: u64, family: FaultFamily) -> FaultPlan {
+    FaultPlan {
+        target_epoch: 0,
+        entries: vec![(
+            1,
+            LinkSide::Left,
+            FaultSchedule::seeded(seed, horizon, family),
+        )],
+    }
+}
+
+#[test]
+fn drop_heavy_link_faults_trigger_recovery_and_bitwise_rejoin() {
+    // dropped frames desynchronize the stream (wrong microbatch / kind /
+    // missing hello), which must surface as a protocol error, tear the
+    // epoch down, and recover — never train on misordered tensors
+    let s = spec(Mode::Subspace, 8, 2);
+    let reference = clean_curve(&s);
+    let mut es = ElasticSpec::new(s);
+    es.ckpt_every = 4;
+    es.stale_ms = 400; // bound the post-drop silence, keep the test fast
+    es.faults = fault_plan(33, 32, FaultFamily::DropHeavy);
+    let rep = run_elastic(&es, TransportKind::Channel).expect("elastic run");
+    assert_bitwise("chaos/drop-heavy", &reference, &rep.losses);
+    assert_eq!(rep.recoveries, 1, "the drop-scarred epoch must fail once");
+    assert_eq!(rep.spares_used, 0, "a link fault is not a worker death");
+}
+
+#[test]
+fn severed_link_triggers_recovery_and_bitwise_rejoin() {
+    let s = spec(Mode::Subspace, 8, 2);
+    let reference = clean_curve(&s);
+    let mut es = ElasticSpec::new(s);
+    es.ckpt_every = 4;
+    es.stale_ms = 400;
+    // horizon 16 puts the single sever inside epoch 0's receive range
+    es.faults = fault_plan(7, 16, FaultFamily::Sever);
+    let rep = run_elastic(&es, TransportKind::Channel).expect("elastic run");
+    assert_bitwise("chaos/sever", &reference, &rep.losses);
+    assert_eq!(rep.recoveries, 1);
+    // whatever boundary the cut landed after, the resume point is one
+    // the checkpoint cadence produced
+    assert_eq!(rep.resume_steps.len(), 1);
+    assert_eq!(rep.resume_steps[0] % 4, 0);
+}
+
+#[test]
+fn small_delays_are_absorbed_without_any_recovery() {
+    // 1–5 ms holds sit far under the stale timeout: the liveness layer
+    // must wait them out, deliver every frame intact, and finish in one
+    // epoch with the exact clean curve — delay is not failure
+    let s = spec(Mode::Subspace, 6, 2);
+    let reference = clean_curve(&s);
+    let mut es = ElasticSpec::new(s);
+    es.ckpt_every = 3;
+    es.faults = fault_plan(91, 24, FaultFamily::DelayHeavy);
+    let rep = run_elastic(&es, TransportKind::Channel).expect("elastic run");
+    assert_bitwise("chaos/delay-heavy", &reference, &rep.losses);
+    assert_eq!(rep.recoveries, 0, "delays under the deadline never kill");
+    assert_eq!(rep.epochs, 1);
+    assert_eq!(rep.spares_used, 0);
+}
+
+#[test]
+fn swarm_simulator_prices_the_same_churn_timeline() {
+    // the envelope leg: the discrete-event simulator consumes the SAME
+    // step-indexed timeline `scripted_rejoin_consumes_no_spare` executes
+    // on the real runtime, lowered onto the simulator's own measured
+    // clock, and must predict the churn's cost — a membership dip and a
+    // priced resync. The loss-curve side of the envelope is exact: the
+    // raw-codec chaos runs above rejoin the clean curve bitwise, which
+    // lies inside any envelope the simulator predicts for this timeline.
+    let timeline =
+        ChurnTimeline::parse("kill:1@3,join:1@4").expect("timeline");
+    timeline.validate(4, 8).expect("shape-checked script");
+    assert_eq!(timeline.leaves(), 1);
+    assert_eq!(timeline.kills_at(3), vec![1]);
+    assert!(!timeline.is_empty());
+
+    let mut sim = SwarmSpec::uniform(Hyper::tiny_native(), 4, 80e6);
+    sim.steps = 8;
+    let clean = simulate_swarm(&sim).expect("clean sim");
+    assert_eq!(clean.leaves, 0);
+
+    // lower step indices onto the simulator's measured step time, so
+    // "during step 3" lands during step 3 of the simulated run
+    let step_s = clean.total / clean.steps as f64;
+    sim.churn = timeline.to_scripted(step_s);
+    let churned = simulate_swarm(&sim).expect("churned sim");
+
+    assert_eq!(churned.leaves, 1, "the scripted kill must land");
+    assert_eq!(churned.rejoins, 1, "the scripted restart must land");
+    assert!(
+        churned.sync_seconds > 0.0,
+        "a rejoin pays a priced state resync"
+    );
+    assert!(
+        churned.min_active >= 3,
+        "exactly one member may be down at the trough: {}",
+        churned.min_active
+    );
+    assert_eq!(churned.steps, 8);
+    assert!(churned.total.is_finite() && churned.total > 0.0);
+}
+
+#[test]
+fn coeff_checkpoint_codec_prices_smaller_and_still_converges() {
+    // the compressed checkpoint codec ships constrained parameters as
+    // k-dim coefficient rows (priced by dp_wire_bytes): a boundary must
+    // cost strictly less than raw, the wire must match the model, and a
+    // recovery through a coeff checkpoint must still complete with a
+    // finite curve (raw's bitwise guarantee is relaxed to within
+    // float-rounding of the clean curve)
+    let s = spec(Mode::Subspace, 8, 2);
+    let reference = clean_curve(&s);
+    let raw_cost = boundary_cost(&s, CkptCodec::Raw);
+    let coeff_cost = boundary_cost(&s, CkptCodec::Coeff);
+    assert!(
+        coeff_cost < raw_cost,
+        "coeff boundary ({coeff_cost} B) must undercut raw ({raw_cost} B)"
+    );
+
+    let mut es = ElasticSpec::new(s.clone());
+    es.ckpt_every = 4;
+    es.ckpt_codec = CkptCodec::Coeff;
+    es.chaos = ChurnTimeline::parse("kill:1@6").expect("timeline");
+    let rep = run_elastic(&es, TransportKind::Channel).expect("elastic run");
+    assert_eq!(rep.recoveries, 1);
+    let p = s.h.stages as u64;
+    assert_eq!(rep.ckpt_frames % p, 0);
+    assert_eq!(rep.ckpt_bytes, (rep.ckpt_frames / p) * coeff_cost);
+    assert_eq!(rep.losses.len(), reference.len());
+    for (i, (a, b)) in reference.iter().zip(&rep.losses).enumerate() {
+        assert!(b.is_finite(), "step {}: non-finite loss", i + 1);
+        let tol = 1e-3 * a.abs().max(1.0);
+        assert!(
+            (a - b).abs() <= tol,
+            "step {}: {b} strayed past float-rounding of {a}",
+            i + 1
+        );
+    }
+}

@@ -201,3 +201,60 @@ fn sgd_also_trains_and_keeps_closure() {
     assert!(last < first, "sgd did not learn: {first:.4} -> {last:.4}");
     assert!(pipe.subspace_leak() < 1e-4);
 }
+
+#[test]
+fn checkpoint_restore_resumes_bitwise() {
+    use protomodels::compress::CkptCodec;
+    let h = Hyper::tiny_native();
+    let c = corpus();
+    // reference: 6 uninterrupted steps (Grassmann cadence exercises the
+    // s_acc/s_count round-trip across the checkpoint boundary)
+    let mut full = pipe_for(Mode::Subspace, 23, 6, 2);
+    let full_losses: Vec<f64> = (0..6)
+        .map(|_| {
+            full.train_step(|r| c.train_batch(h.b, h.n, r)).unwrap().loss
+        })
+        .collect();
+    // interrupted: 3 steps, checkpoint, resume in a FRESH pipeline
+    let mut head = pipe_for(Mode::Subspace, 23, 6, 2);
+    let head_losses: Vec<f64> = (0..3)
+        .map(|_| {
+            head.train_step(|r| c.train_batch(h.b, h.n, r)).unwrap().loss
+        })
+        .collect();
+    assert_eq!(head_losses[..], full_losses[..3]);
+    let blobs = head.checkpoint(CkptCodec::Raw);
+    assert_eq!(blobs.len(), h.stages);
+    // every blob is priced exactly by the memory model
+    for (s, b) in blobs.iter().enumerate() {
+        assert_eq!(
+            b.len(),
+            protomodels::memory::checkpoint_payload_bytes(
+                &h,
+                s,
+                Mode::Subspace,
+                CkptCodec::Raw,
+                s == h.stages - 1,
+            ),
+            "stage {s} blob length off the cost model"
+        );
+    }
+    let mut tail = pipe_for(Mode::Subspace, 23, 6, 2);
+    tail.restore(&blobs, 3).unwrap();
+    let tail_losses: Vec<f64> = (0..3)
+        .map(|_| {
+            tail.train_step(|r| c.train_batch(h.b, h.n, r)).unwrap().loss
+        })
+        .collect();
+    assert_eq!(
+        tail_losses[..],
+        full_losses[3..],
+        "resumed training must be bitwise the uninterrupted run"
+    );
+    // the RNG stream cannot rewind
+    let err = head.restore(&blobs, 2).unwrap_err().to_string();
+    assert!(err.contains("rewind"), "{err}");
+    // blob count must match the pipeline
+    let mut fresh = pipe_for(Mode::Subspace, 23, 6, 2);
+    assert!(fresh.restore(&blobs[..1], 3).is_err());
+}

@@ -559,3 +559,104 @@ fn prop_wire_frames_bit_transparent_for_every_codec() {
         }
     }
 }
+
+#[test]
+fn prop_every_prefix_of_a_frame_stream_parses_or_classifies_the_cut() {
+    // chaos-harness framing property: for EVERY prefix length of a valid
+    // multi-frame stream (liveness kinds included), the reader must (a)
+    // recover each fully-contained frame bit-exactly, resuming at the
+    // right offset after each one, and (b) classify the cut position of
+    // the first incomplete frame — clean shutdown exactly at a frame
+    // boundary vs a link severed mid-header vs mid-payload. No prefix
+    // may panic or allocate past the declared payload length.
+    use protomodels::transport::{FrameKind, WireFrame, HEADER_LEN};
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(seed ^ 0x5EAF);
+        // a plausible session: handshake, boundary traffic, liveness
+        // beacons, a checkpoint, a recovery order, goodbye — with
+        // randomized payload sizes (zero-length control payloads too)
+        let frames = vec![
+            WireFrame::control(
+                FrameKind::Hello,
+                0,
+                rng.normal_f32_vec(8, 1.0).iter().map(|x| *x as u8).collect(),
+            ),
+            WireFrame::boundary(
+                FrameKind::Fwd,
+                Mode::Subspace,
+                seed,
+                0,
+                vec![0xF0; 1 + rng.below(96)],
+            ),
+            WireFrame::control(FrameKind::Heartbeat, seed, vec![0xB1; 16]),
+            WireFrame::boundary(
+                FrameKind::Bwd,
+                Mode::Raw,
+                seed,
+                1,
+                vec![0x0B; 1 + rng.below(64)],
+            ),
+            WireFrame::control(
+                FrameKind::Checkpoint,
+                seed + 1,
+                vec![0xCC; 32 + rng.below(128)],
+            ),
+            WireFrame::control(FrameKind::StepEnd, seed + 1, vec![]),
+            WireFrame::control(
+                FrameKind::Reassign,
+                seed + 2,
+                vec![0x12; 25 + rng.below(40)],
+            ),
+            WireFrame::control(FrameKind::Bye, seed + 2, vec![]),
+        ];
+        let mut stream = Vec::new();
+        for f in &frames {
+            stream.extend_from_slice(&f.to_bytes());
+        }
+        for cut in 0..=stream.len() {
+            let mut cur = std::io::Cursor::new(&stream[..cut]);
+            let mut offset = 0usize;
+            let mut parsed = 0usize;
+            // every frame wholly inside the prefix parses bit-exactly
+            while parsed < frames.len()
+                && offset + frames[parsed].wire_len() <= cut
+            {
+                let got = WireFrame::read_from(&mut cur)
+                    .unwrap_or_else(|e| {
+                        panic!("seed {seed} cut {cut} frame {parsed}: {e}")
+                    });
+                assert_eq!(
+                    got, frames[parsed],
+                    "seed {seed} cut {cut} frame {parsed}"
+                );
+                offset += frames[parsed].wire_len();
+                parsed += 1;
+            }
+            // …and the next read classifies where the stream ended
+            let err = WireFrame::read_from(&mut cur)
+                .expect_err("truncated stream must not yield a frame")
+                .to_string();
+            let rem = cut - offset;
+            assert!(
+                err.contains("departed"),
+                "seed {seed} cut {cut}: every cut is a departure: {err}"
+            );
+            if rem == 0 {
+                assert!(
+                    err.contains("frame boundary") && !err.contains("severed"),
+                    "seed {seed} cut {cut}: clean shutdown misreported: {err}"
+                );
+            } else if rem < HEADER_LEN {
+                assert!(
+                    err.contains("severed mid-header"),
+                    "seed {seed} cut {cut} (rem {rem}): {err}"
+                );
+            } else {
+                assert!(
+                    err.contains("severed mid-payload"),
+                    "seed {seed} cut {cut} (rem {rem}): {err}"
+                );
+            }
+        }
+    }
+}

@@ -15,8 +15,8 @@ use protomodels::nn::{NativePipeline, Optim};
 use protomodels::rng::Rng;
 use protomodels::sim::Schedule;
 use protomodels::transport::{
-    channel_pair, run_local, FrameKind, Transport, TransportKind, WireFrame,
-    WorkerSpec,
+    channel_pair, run_local, FaultSchedule, FaultTransport, FrameKind,
+    Transport, TransportKind, WireFrame, WorkerSpec,
 };
 
 fn spec(mode: Mode, steps: usize, stages: usize) -> WorkerSpec {
@@ -201,6 +201,63 @@ fn departed_peer_surfaces_as_graceful_churn_error() {
     let err = worker.unwrap_err().to_string();
     assert!(err.contains("departed"), "{err}");
     assert!(err.contains("stage 0"), "should name the stage: {err}");
+}
+
+#[test]
+fn transparent_fault_wrapper_is_bitwise_invisible() {
+    // the chaos harness's FaultTransport under an empty schedule must be
+    // a perfect pass-through: a training run with both ends of the chain
+    // link wrapped reproduces the single-process curve bitwise
+    let s = spec(Mode::Subspace, 6, 2);
+    let reference = single_process(&s);
+    let (e0, e1) = channel_pair();
+    let wrap = |end| {
+        Box::new(FaultTransport::new(
+            Box::new(end),
+            FaultSchedule::transparent(),
+        )) as Box<dyn Transport>
+    };
+    let (r0, r1) = std::thread::scope(|scope| {
+        let h0 = scope.spawn(|| dist_stage(&s, 0, None, Some(wrap(e0))));
+        let h1 = scope.spawn(|| dist_stage(&s, 1, Some(wrap(e1)), None));
+        (h0.join().unwrap(), h1.join().unwrap())
+    });
+    let rep = r0.expect("stage 0 under transparent faults");
+    r1.expect("stage 1 under transparent faults");
+    assert_bitwise("channel/transparent-fault", &reference, &rep.losses);
+}
+
+#[test]
+fn transparent_fault_wrapper_counts_passed_frames_only() {
+    // frame-level leg: every frame comes back byte-identical and lands
+    // in the `passed` counter — no other counter moves without a fault
+    let (mut tx, rx) = channel_pair();
+    let sched = FaultSchedule::transparent();
+    assert!(sched.is_transparent());
+    let mut ft = FaultTransport::new(Box::new(rx), sched);
+    let frames = [
+        WireFrame::control(FrameKind::Hello, 0, vec![1, 2, 3]),
+        WireFrame::boundary(FrameKind::Fwd, Mode::Subspace, 4, 2, vec![9u8; 64]),
+        WireFrame::control(FrameKind::Heartbeat, 5, vec![0u8; 16]),
+        WireFrame::control(FrameKind::Checkpoint, 6, vec![7u8; 40]),
+        WireFrame::control(FrameKind::StepEnd, 6, vec![]),
+    ];
+    for f in &frames {
+        tx.send(f).expect("send");
+        let got = ft.recv().expect("recv through transparent wrapper");
+        assert_eq!(
+            got.to_bytes(),
+            f.to_bytes(),
+            "frame must cross the wrapper byte-identically"
+        );
+    }
+    let stats = ft.stats();
+    assert_eq!(stats.passed, frames.len() as u64);
+    assert_eq!(
+        (stats.dropped, stats.delayed, stats.truncated, stats.severed),
+        (0, 0, 0, 0),
+        "no fault counter may move under the empty schedule"
+    );
 }
 
 /// Thin alias so the tests read as "drive one stage" (the public
