@@ -16,6 +16,8 @@
 //!   raw      — uncompressed (b·n, d) activations
 //!   topk     — magnitude top-k at exactly subspace's wire bytes
 //!   quant    — int8, which still ships ~2.7x more bytes than subspace
+//!   raw-bf16 — raw math with a bf16 wire: half of raw's bytes, and the
+//!              asserted convergence envelope is within 2% of f32 raw
 //!
 //! The asserted statistic is the mean training loss over steps 51..500
 //! ("curve level" — how the ISSUE words it: subspace must *track the
@@ -104,11 +106,16 @@ fn main() {
         "native convergence: d={} k={} stages={} — {} steps per mode\n",
         h.d, h.k, h.stages, STEPS
     );
-    let outcomes: Vec<Outcome> =
-        [Mode::Subspace, Mode::Raw, Mode::TopK, Mode::Quant]
-            .into_iter()
-            .map(run)
-            .collect();
+    let outcomes: Vec<Outcome> = [
+        Mode::Subspace,
+        Mode::Raw,
+        Mode::TopK,
+        Mode::Quant,
+        Mode::RawBf16,
+    ]
+    .into_iter()
+    .map(run)
+    .collect();
     println!(
         "{:>10} {:>12} {:>10} {:>14} {:>10}",
         "mode", "curve level", "val loss", "boundary B", "vs raw"
@@ -124,8 +131,13 @@ fn main() {
             raw_bytes as f64 / o.boundary_bytes as f64
         );
     }
-    let (sub, raw, topk, quant) =
-        (&outcomes[0], &outcomes[1], &outcomes[2], &outcomes[3]);
+    let (sub, raw, topk, quant, raw_bf16) = (
+        &outcomes[0],
+        &outcomes[1],
+        &outcomes[2],
+        &outcomes[3],
+        &outcomes[4],
+    );
 
     // (a) ≥ 10x fewer boundary wire bytes than raw
     let compression = raw.boundary_bytes as f64 / sub.boundary_bytes as f64;
@@ -174,15 +186,39 @@ fn main() {
         quant.curve_level,
         sub.curve_level
     );
+    // (e) bf16 convergence envelope: the raw-bf16 wire (truncate to
+    // bf16 on encode, widen exactly on decode — DESIGN.md §13) halves
+    // the raw wire and stays within 2% of f32-raw on the curve level
+    // and the final val loss — bf16's ~2⁻⁷ relative boundary error is
+    // noise next to SGD noise, unlike int8's
+    assert_eq!(
+        raw.boundary_bytes,
+        2 * raw_bf16.boundary_bytes,
+        "raw-bf16 must ship exactly half of raw's boundary bytes"
+    );
+    assert!(
+        raw_bf16.curve_level <= raw.curve_level * 1.02,
+        "raw-bf16 curve level {:.4} not within 2% of f32 raw {:.4}",
+        raw_bf16.curve_level,
+        raw.curve_level
+    );
+    assert!(
+        raw_bf16.val_loss <= raw.val_loss * 1.02,
+        "raw-bf16 val loss {:.4} not within 2% of f32 raw {:.4}",
+        raw_bf16.val_loss,
+        raw.val_loss
+    );
 
     println!(
         "\nok: subspace tracks raw ({:+.2}% curve, {:+.2}% val) at \
          {compression:.1}x fewer boundary bytes; topk at matched bytes is \
-         {:.1}% worse, int8 {:.1}% worse at {:.1}x subspace's bytes",
+         {:.1}% worse, int8 {:.1}% worse at {:.1}x subspace's bytes; \
+         raw-bf16 tracks raw ({:+.2}% curve) at half the wire",
         (sub.curve_level / raw.curve_level - 1.0) * 100.0,
         (sub.val_loss / raw.val_loss - 1.0) * 100.0,
         (topk.curve_level / sub.curve_level - 1.0) * 100.0,
         (quant.curve_level / sub.curve_level - 1.0) * 100.0,
-        quant.boundary_bytes as f64 / sub.boundary_bytes as f64
+        quant.boundary_bytes as f64 / sub.boundary_bytes as f64,
+        (raw_bf16.curve_level / raw.curve_level - 1.0) * 100.0
     );
 }

@@ -208,6 +208,77 @@ pub fn check_regressions(
     Ok(report)
 }
 
+/// One row of a `bench --compare` speedup table.
+pub struct CompareRow {
+    /// entry name
+    pub name: String,
+    /// mean ns in the old suite (`None` = entry only in the new run)
+    pub old_ns: Option<f64>,
+    /// mean ns in the new suite (`None` = entry only in the old run)
+    pub new_ns: Option<f64>,
+}
+
+impl CompareRow {
+    /// old/new — >1 means the new run is faster.
+    pub fn speedup(&self) -> Option<f64> {
+        match (self.old_ns, self.new_ns) {
+            (Some(o), Some(n)) => Some(o / n.max(1e-9)),
+            _ => None,
+        }
+    }
+}
+
+/// Compare two bench-suite JSON files (`bench --compare old new`): the
+/// union of entry names with the per-entry speedup `old/new`. Entries
+/// present on only one side are kept with a `None` slot so renames and
+/// new benches show up instead of vanishing from the report.
+pub fn compare_suites(old: &Path, new: &Path) -> Result<Vec<CompareRow>> {
+    let old_means = load_suite_means(old)?;
+    let new_means = load_suite_means(new)?;
+    let mut names: Vec<&String> =
+        old_means.keys().chain(new_means.keys()).collect();
+    names.sort();
+    names.dedup();
+    Ok(names
+        .into_iter()
+        .map(|name| CompareRow {
+            name: name.clone(),
+            old_ns: old_means.get(name).copied(),
+            new_ns: new_means.get(name).copied(),
+        })
+        .collect())
+}
+
+/// Print a `bench --compare` table and return the best speedup seen.
+pub fn print_comparison(rows: &[CompareRow]) -> f64 {
+    println!(
+        "{:<48} {:>12} {:>12} {:>9}",
+        "entry", "old", "new", "speedup"
+    );
+    let mut best = 0.0f64;
+    for row in rows {
+        let fmt_side = |ns: Option<f64>| match ns {
+            Some(ns) => fmt_ns(ns),
+            None => "-".to_string(),
+        };
+        let speed = match row.speedup() {
+            Some(s) => {
+                best = best.max(s);
+                format!("{s:.2}x")
+            }
+            None => "-".to_string(),
+        };
+        println!(
+            "{:<48} {:>12} {:>12} {:>9}",
+            row.name,
+            fmt_side(row.old_ns),
+            fmt_side(row.new_ns),
+            speed,
+        );
+    }
+    best
+}
+
 /// Human-readable duration from nanoseconds.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -392,6 +463,34 @@ mod tests {
         assert!(
             check_regressions(&cur, &root.join("nope"), 0.25).is_err()
         );
+    }
+
+    #[test]
+    fn compare_tables_union_and_speedup() {
+        let dir = std::env::temp_dir().join("protomodels_test_bench_cmp");
+        std::fs::create_dir_all(&dir).unwrap();
+        let suite = |entries: &[(&str, f64)]| {
+            let rows: Vec<String> = entries
+                .iter()
+                .map(|(n, m)| format!(r#"{{"name":"{n}","mean_ns":{m}}}"#))
+                .collect();
+            format!(r#"{{"suite":"x","results":[{}]}}"#, rows.join(","))
+        };
+        let old = dir.join("old.json");
+        let new = dir.join("new.json");
+        std::fs::write(&old, suite(&[("a", 3000.0), ("gone", 10.0)]))
+            .unwrap();
+        std::fs::write(&new, suite(&[("a", 1000.0), ("fresh", 20.0)]))
+            .unwrap();
+        let rows = compare_suites(&old, &new).unwrap();
+        assert_eq!(rows.len(), 3);
+        let a = rows.iter().find(|r| r.name == "a").unwrap();
+        assert!((a.speedup().unwrap() - 3.0).abs() < 1e-9);
+        let gone = rows.iter().find(|r| r.name == "gone").unwrap();
+        assert!(gone.new_ns.is_none() && gone.speedup().is_none());
+        let fresh = rows.iter().find(|r| r.name == "fresh").unwrap();
+        assert!(fresh.old_ns.is_none());
+        assert!((print_comparison(&rows) - 3.0).abs() < 1e-9);
     }
 
     #[test]

@@ -102,9 +102,7 @@ impl CkptCodec {
 /// True when `codec` stores this parameter as subspace coefficients
 /// under `mode` (constrained name + compressed mode + coeff codec).
 fn coeff_encoded(name: &str, mode: Mode, codec: CkptCodec) -> bool {
-    codec == CkptCodec::Coeff
-        && matches!(mode, Mode::Subspace | Mode::NoFixed)
-        && constrained(name)
+    codec == CkptCodec::Coeff && mode.compressed() && constrained(name)
 }
 
 fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {

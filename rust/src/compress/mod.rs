@@ -36,6 +36,14 @@ pub enum Mode {
     /// Fig.-15 ablation: subspace wire format, but the token embedding is
     /// restricted entirely to S (no fixed high-rank component).
     NoFixed,
+    /// `Raw` math with a bf16 wire: f32 boundary tensors truncated to
+    /// bf16 (upper 16 bits) on encode, widened exactly back to f32 on
+    /// decode. Halves the raw wire at ~3 significant decimal digits.
+    RawBf16,
+    /// `Subspace` math with a bf16 wire over the (b·n, k) coefficients.
+    /// Composes the paper's k/d reduction with a further 2x from
+    /// precision (DESIGN.md §13).
+    SubspaceBf16,
 }
 
 impl Mode {
@@ -48,6 +56,8 @@ impl Mode {
             "quant" => Mode::Quant,
             "powerlr" => Mode::PowerLR,
             "nofixed" => Mode::NoFixed,
+            "raw-bf16" => Mode::RawBf16,
+            "subspace-bf16" => Mode::SubspaceBf16,
             other => bail!("unknown mode {other:?}"),
         })
     }
@@ -61,12 +71,55 @@ impl Mode {
             Mode::Quant => "quant",
             Mode::PowerLR => "powerlr",
             Mode::NoFixed => "nofixed",
+            Mode::RawBf16 => "raw-bf16",
+            Mode::SubspaceBf16 => "subspace-bf16",
         }
     }
 
     /// True for schemes that do not reconstruct the payload exactly.
     pub fn is_lossy(&self) -> bool {
-        matches!(self, Mode::TopK | Mode::Quant | Mode::PowerLR)
+        matches!(
+            self,
+            Mode::TopK
+                | Mode::Quant
+                | Mode::PowerLR
+                | Mode::RawBf16
+                | Mode::SubspaceBf16
+        )
+    }
+
+    /// True for schemes whose boundary payload is the (b·n, k) subspace
+    /// coefficients rather than the full (b·n, d) activations — the
+    /// stages then carry the paper's projection/reconstruction maps.
+    pub fn compressed(self) -> bool {
+        matches!(
+            self,
+            Mode::Subspace | Mode::NoFixed | Mode::SubspaceBf16
+        )
+    }
+
+    /// True for subspace schemes that keep the fixed high-rank token
+    /// embedding component E (everything but the `NoFixed` ablation).
+    pub fn uses_fixed_embedding(self) -> bool {
+        matches!(self, Mode::Subspace | Mode::SubspaceBf16)
+    }
+
+    /// True for schemes that ship bf16 payloads on the wire (the math
+    /// stays f32; precision is dropped only at the boundary).
+    pub fn bf16_wire(self) -> bool {
+        matches!(self, Mode::RawBf16 | Mode::SubspaceBf16)
+    }
+
+    /// The f32 scheme whose *math* this mode runs — identity for the
+    /// f32 modes, the base scheme for the bf16-wire variants. Weight
+    /// gradients, optimizer state, and checkpoints are priced under the
+    /// base mode: bf16 applies to the boundary wire only.
+    pub fn base(self) -> Mode {
+        match self {
+            Mode::RawBf16 => Mode::Raw,
+            Mode::SubspaceBf16 => Mode::Subspace,
+            other => other,
+        }
     }
 
     /// Stable one-byte identifier of this mode in the framed wire
@@ -80,6 +133,8 @@ impl Mode {
             Mode::Quant => 3,
             Mode::PowerLR => 4,
             Mode::NoFixed => 5,
+            Mode::RawBf16 => 6,
+            Mode::SubspaceBf16 => 7,
         }
     }
 
@@ -93,6 +148,8 @@ impl Mode {
             3 => Mode::Quant,
             4 => Mode::PowerLR,
             5 => Mode::NoFixed,
+            6 => Mode::RawBf16,
+            7 => Mode::SubspaceBf16,
             _ => return None,
         })
     }
@@ -120,6 +177,8 @@ pub fn wire_bytes(mode: Mode, b: usize, n: usize, d: usize, k: usize, ratio: f64
         Mode::TopK => topk_keep(b * n * d, ratio) * 8,
         Mode::Quant => b * n * d + 4, // int8 payload + f32 scale
         Mode::PowerLR => b * (n + d) * powerlr_rank(n, d, ratio) * 4,
+        Mode::RawBf16 => b * n * d * 2,
+        Mode::SubspaceBf16 => b * n * k * 2,
     }
 }
 
@@ -144,6 +203,11 @@ pub fn dp_wire_bytes(mode: Mode, elems: usize, d: usize, k: usize, ratio: f64) -
         }
         Mode::PowerLR => {
             (((elems * 4) as f64 / ratio.max(1.0)).ceil() as usize).max(4) + 8
+        }
+        // bf16 is a boundary-wire precision, not a gradient scheme: the
+        // DP all-reduce stays f32 under the base mode's accounting
+        Mode::RawBf16 | Mode::SubspaceBf16 => {
+            dp_wire_bytes(mode.base(), elems, d, k, ratio)
         }
     }
 }
@@ -194,6 +258,43 @@ pub fn encode_dense(t: &Tensor, mode: Mode) -> Frame {
 /// Decode a dense f32 frame.
 pub fn decode_dense(f: &Frame) -> Tensor {
     Tensor::new(f.shape.clone(), get_f32s(&f.payload))
+}
+
+/// f32 → bf16 by truncation: keep the upper 16 bits (sign, exponent,
+/// top 7 mantissa bits), drop the rest. Truncation — not
+/// round-to-nearest — so the rule is branch-free and documented as the
+/// wire contract (DESIGN.md §13); relative error ≤ 2⁻⁷ per element.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    (x.to_bits() >> 16) as u16
+}
+
+/// bf16 → f32 widening: place the 16 bits as the upper half of an f32.
+/// Exact — every bf16 value is representable in f32, so downstream
+/// accumulation happens in full f32.
+#[inline]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Dense bf16 — `RawBf16` / `SubspaceBf16` wires: 2 bytes per element,
+/// truncate on encode, widen exactly on decode.
+pub fn encode_dense_bf16(t: &Tensor, mode: Mode) -> Frame {
+    let mut payload = Vec::with_capacity(t.numel() * 2);
+    for &x in &t.data {
+        payload.extend_from_slice(&f32_to_bf16(x).to_le_bytes());
+    }
+    Frame { mode, shape: t.shape.clone(), payload }
+}
+
+/// Decode a dense bf16 frame back to f32.
+pub fn decode_dense_bf16(f: &Frame) -> Tensor {
+    let data = f
+        .payload
+        .chunks_exact(2)
+        .map(|c| bf16_to_f32(u16::from_le_bytes([c[0], c[1]])))
+        .collect();
+    Tensor::new(f.shape.clone(), data)
 }
 
 /// Top-k: (u32 index, f32 value) pairs for the `keep` largest |values|.
@@ -264,6 +365,7 @@ pub fn encode(t: &Tensor, mode: Mode, ratio: f64) -> Frame {
         Mode::Subspace | Mode::NoFixed | Mode::Raw | Mode::PowerLR => {
             encode_dense(t, mode)
         }
+        Mode::RawBf16 | Mode::SubspaceBf16 => encode_dense_bf16(t, mode),
         Mode::TopK => encode_topk(t, ratio),
         Mode::Quant => encode_quant(t),
     }
@@ -289,6 +391,7 @@ pub fn decode(f: &Frame) -> Tensor {
         Mode::Subspace | Mode::NoFixed | Mode::Raw | Mode::PowerLR => {
             decode_dense(f)
         }
+        Mode::RawBf16 | Mode::SubspaceBf16 => decode_dense_bf16(f),
         Mode::TopK => decode_topk(f),
         Mode::Quant => decode_quant(f),
     }
@@ -399,7 +502,16 @@ mod tests {
 
     #[test]
     fn mode_parse_roundtrip() {
-        for m in [Mode::Subspace, Mode::Raw, Mode::TopK, Mode::Quant, Mode::PowerLR] {
+        for m in [
+            Mode::Subspace,
+            Mode::Raw,
+            Mode::TopK,
+            Mode::Quant,
+            Mode::PowerLR,
+            Mode::NoFixed,
+            Mode::RawBf16,
+            Mode::SubspaceBf16,
+        ] {
             assert_eq!(Mode::parse(m.as_str()).unwrap(), m);
         }
         assert!(Mode::parse("bogus").is_err());
@@ -407,7 +519,8 @@ mod tests {
 
     #[test]
     fn wire_tags_are_stable_and_invertible() {
-        // the numbering is a wire-format contract (DESIGN.md §11)
+        // the numbering is a wire-format contract (DESIGN.md §11):
+        // append-only — 6/7 were claimed by the bf16 wires
         let all = [
             (Mode::Subspace, 0u8),
             (Mode::Raw, 1),
@@ -415,12 +528,71 @@ mod tests {
             (Mode::Quant, 3),
             (Mode::PowerLR, 4),
             (Mode::NoFixed, 5),
+            (Mode::RawBf16, 6),
+            (Mode::SubspaceBf16, 7),
         ];
         for (m, tag) in all {
             assert_eq!(m.wire_tag(), tag);
             assert_eq!(Mode::from_wire_tag(tag), Some(m));
         }
-        assert_eq!(Mode::from_wire_tag(6), None);
+        assert_eq!(Mode::from_wire_tag(8), None);
         assert_eq!(Mode::from_wire_tag(255), None);
+    }
+
+    #[test]
+    fn bf16_truncate_and_widen_rules() {
+        // widening is exact for already-bf16 values
+        for x in [0.0f32, -0.0, 1.0, -2.5, 3.0e20, -1.0e-20] {
+            let h = f32_to_bf16(x);
+            let w = bf16_to_f32(h);
+            assert_eq!(f32_to_bf16(w), h);
+        }
+        // truncation toward zero: |bf16(x)| ≤ |x|, rel err ≤ 2⁻⁷
+        let mut rng = Rng::new(11);
+        for x in rng.normal_f32_vec(256, 3.0) {
+            let w = bf16_to_f32(f32_to_bf16(x));
+            assert!(w.abs() <= x.abs());
+            assert!((w - x).abs() <= x.abs() / 128.0 + f32::MIN_POSITIVE);
+        }
+    }
+
+    #[test]
+    fn bf16_frames_match_wire_accounting() {
+        let (b, n, d, k) = (2usize, 16usize, 32usize, 4usize);
+        let ratio = d as f64 / k as f64;
+        let mut rng = Rng::new(10);
+        let full = randt(&mut rng, &[b * n, d]);
+        let coeff = randt(&mut rng, &[b * n, k]);
+        for (mode, t) in
+            [(Mode::RawBf16, &full), (Mode::SubspaceBf16, &coeff)]
+        {
+            let (recon, bytes) = roundtrip(t, mode, ratio);
+            assert_eq!(bytes, wire_bytes(mode, b, n, d, k, ratio), "{mode:?}");
+            assert_eq!(bytes, t.numel() * 2);
+            assert!(mode.is_lossy());
+            for (a, r) in t.data.iter().zip(&recon.data) {
+                assert!((a - r).abs() <= a.abs() / 128.0 + f32::MIN_POSITIVE);
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_base_mode_and_predicates() {
+        assert_eq!(Mode::RawBf16.base(), Mode::Raw);
+        assert_eq!(Mode::SubspaceBf16.base(), Mode::Subspace);
+        assert!(!Mode::RawBf16.compressed());
+        assert!(Mode::SubspaceBf16.compressed());
+        assert!(Mode::SubspaceBf16.uses_fixed_embedding());
+        assert!(!Mode::NoFixed.uses_fixed_embedding());
+        assert!(Mode::RawBf16.bf16_wire() && Mode::SubspaceBf16.bf16_wire());
+        assert!(!Mode::Raw.bf16_wire());
+        // DP gradients stay f32 under the base mode's accounting
+        let (elems, d, k) = (10_000usize, 64usize, 8usize);
+        for m in [Mode::RawBf16, Mode::SubspaceBf16] {
+            assert_eq!(
+                dp_wire_bytes(m, elems, d, k, 8.0),
+                dp_wire_bytes(m.base(), elems, d, k, 8.0)
+            );
+        }
     }
 }

@@ -208,7 +208,7 @@ impl PipelineConfig {
     /// Whether the boundary mode is one of the subspace-compressed
     /// schemes (shared vocabulary for both backends).
     pub fn compressed(&self) -> bool {
-        matches!(self.mode, Mode::Subspace | Mode::NoFixed)
+        self.mode.compressed()
     }
 
     /// Bytes one boundary payload of dimensions `h` occupies on the
@@ -361,7 +361,7 @@ impl Pipeline {
             last_grads: None,
         };
         // startup: broadcast T_fixed (compressed modes) + U_k once
-        if matches!(pipe.cfg.mode, Mode::Subspace | Mode::NoFixed) {
+        if pipe.cfg.mode.compressed() {
             let bytes = (h.vocab * h.d + h.d * h.k) * 4;
             pipe.clock += pipe.topo.broadcast(bytes);
         }

@@ -254,8 +254,7 @@ impl ReplicaSet {
         // re-project onto the adopted basis when bases may have diverged
         // (a no-op when they haven't: S is closed under averaging, so
         // this only runs when Grassmann maintenance is active)
-        let compressed =
-            matches!(leader.cfg.mode, Mode::Subspace | Mode::NoFixed);
+        let compressed = leader.cfg.mode.compressed();
         if compressed && leader.cfg.grassmann_interval > 0 {
             for s in 0..leader.stages.len() {
                 for i in 0..leader.stages[s].params.len() {
@@ -391,7 +390,7 @@ pub fn simulate_hybrid_step(spec: &HybridSimSpec) -> HybridSimResult {
         "slowdown factors must be positive, got {:?}",
         spec.slowdown
     );
-    let compressed = matches!(spec.mode, Mode::Subspace | Mode::NoFixed);
+    let compressed = spec.mode.compressed();
     let bbytes = wire_bytes(spec.mode, h.b, h.n, h.d, h.k, h.ratio);
     let (p, m) = (h.stages, spec.microbatches.max(1));
 

@@ -1013,6 +1013,8 @@ pub fn convergence_native(opts: &ExpOpts) -> Result<()> {
             Mode::Quant,
             Mode::PowerLR,
             Mode::NoFixed,
+            Mode::RawBf16,
+            Mode::SubspaceBf16,
         ]
     };
     let rows = par::try_map(opts.pool_threads(), modes, |_, mode| {

@@ -26,7 +26,12 @@ const MM_TILE_K: usize = 64;
 /// of f32, resident in L1 across the k strip).
 const MM_TILE_J: usize = 256;
 /// Multiply-add count below which threading is not worth the spawns.
-const MM_PAR_MIN_WORK: usize = 1 << 21;
+/// Tuned down from the original 2²¹ once the backward pass started
+/// issuing many mid-sized products per step (the tape's dW/dX matmuls on
+/// tiny/small presets): at 2¹⁸ multiply-adds a scoped spawn costs well
+/// under 10% of the kernel body, and the determinism contract makes the
+/// threshold value invisible to results.
+const MM_PAR_MIN_WORK: usize = 1 << 18;
 /// Edge length of the blocked-transpose tile (32² f32 = 4 KiB).
 const TR_TILE: usize = 32;
 
@@ -81,8 +86,13 @@ fn par_rows(
 }
 
 /// Row-block micro-kernel: `c (rows×n) += a (rows×k) · b (k×n)` with
-/// k/j tiling. For each output element the k index ascends exactly as in
-/// the naive ikj loop, so tiling changes nothing but locality.
+/// k/j tiling and a 4-deep k unroll. For each output element the k index
+/// ascends exactly as in the naive ikj loop — the unroll keeps the four
+/// partial adds as *sequential* statements, so tiling and unrolling
+/// change nothing but locality: the C segment is loaded and stored once
+/// per four k values instead of once per k value, and the four
+/// independent B streams give the autovectorizer contiguous
+/// unit-stride work.
 fn matmul_rows(a: &[f32], k: usize, b: &[f32], n: usize, c: &mut [f32]) {
     if n == 0 || k == 0 {
         return;
@@ -97,13 +107,43 @@ fn matmul_rows(a: &[f32], k: usize, b: &[f32], n: usize, c: &mut [f32]) {
             let mut j0 = 0;
             while j0 < n {
                 let j1 = (j0 + MM_TILE_J).min(n);
-                for kk in k0..k1 {
+                let cseg = &mut crow[j0..j1];
+                let mut kk = k0;
+                while kk + 4 <= k1 {
+                    let (a0, a1, a2, a3) = (
+                        arow[kk],
+                        arow[kk + 1],
+                        arow[kk + 2],
+                        arow[kk + 3],
+                    );
+                    let b0 = &b[kk * n + j0..kk * n + j1];
+                    let b1 = &b[(kk + 1) * n + j0..(kk + 1) * n + j1];
+                    let b2 = &b[(kk + 2) * n + j0..(kk + 2) * n + j1];
+                    let b3 = &b[(kk + 3) * n + j0..(kk + 3) * n + j1];
+                    for ((((cv, v0), v1), v2), v3) in cseg
+                        .iter_mut()
+                        .zip(b0)
+                        .zip(b1)
+                        .zip(b2)
+                        .zip(b3)
+                    {
+                        // sequential adds: the naive k-ascending order
+                        let mut t = *cv;
+                        t += a0 * v0;
+                        t += a1 * v1;
+                        t += a2 * v2;
+                        t += a3 * v3;
+                        *cv = t;
+                    }
+                    kk += 4;
+                }
+                while kk < k1 {
                     let aik = arow[kk];
                     let brow = &b[kk * n + j0..kk * n + j1];
-                    let cseg = &mut crow[j0..j1];
                     for (cv, bv) in cseg.iter_mut().zip(brow) {
                         *cv += aik * bv;
                     }
+                    kk += 1;
                 }
                 j0 = j1;
             }
@@ -145,7 +185,13 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     Tensor::new(vec![m, n], c)
 }
 
-/// Row-block kernel of [`matmul_nt`]: `c[i][j] = a_row_i · b_row_j`.
+/// Row-block kernel of [`matmul_nt`]: `c[i][j] = a_row_i · b_row_j`,
+/// register-blocked four output columns at a time. Each of the four
+/// dots keeps its own accumulator running in k-ascending order —
+/// bitwise the same per-element sum as the plain loop — but the four
+/// independent chains break the one-add-per-cycle latency wall of a
+/// single serial dot, and each A element is loaded once per four
+/// outputs instead of once per output.
 fn matmul_nt_rows(a: &[f32], k: usize, b: &[f32], n: usize, c: &mut [f32]) {
     if n == 0 {
         return;
@@ -154,13 +200,36 @@ fn matmul_nt_rows(a: &[f32], k: usize, b: &[f32], n: usize, c: &mut [f32]) {
     for i in 0..rows {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
-        for j in 0..n {
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = &b[j * k..(j + 1) * k];
+            let b1 = &b[(j + 1) * k..(j + 2) * k];
+            let b2 = &b[(j + 2) * k..(j + 3) * k];
+            let b3 = &b[(j + 3) * k..(j + 4) * k];
+            let (mut s0, mut s1, mut s2, mut s3) =
+                (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for ((((av, v0), v1), v2), v3) in
+                arow.iter().zip(b0).zip(b1).zip(b2).zip(b3)
+            {
+                s0 += av * v0;
+                s1 += av * v1;
+                s2 += av * v2;
+                s3 += av * v3;
+            }
+            crow[j] = s0;
+            crow[j + 1] = s1;
+            crow[j + 2] = s2;
+            crow[j + 3] = s3;
+            j += 4;
+        }
+        while j < n {
             let brow = &b[j * k..(j + 1) * k];
             let mut acc = 0.0f32;
             for (av, bv) in arow.iter().zip(brow) {
                 acc += av * bv;
             }
             crow[j] = acc;
+            j += 1;
         }
     }
 }
@@ -171,12 +240,33 @@ fn matmul_nt_rows(a: &[f32], k: usize, b: &[f32], n: usize, c: &mut [f32]) {
 /// element accumulates over the shared m index in ascending order, so the
 /// result is bitwise independent of the thread count, like [`matmul`].
 pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (_, ka) = a.dims2();
+    let (_, n) = b.dims2();
+    let mut c = Tensor::zeros(&[ka, n]);
+    matmul_tn_acc(a, b, &mut c);
+    c
+}
+
+/// C += A(m×k)ᵀ · B(m×n) — the accumulate-into form of [`matmul_tn`]
+/// behind microbatch-fused weight gradients: calling it once per
+/// microbatch in microbatch order, on one running accumulator, performs
+/// *exactly* the sum a single [`matmul_tn`] over the row-concatenated
+/// microbatches would (the kernel streams the shared m index in
+/// ascending order into C, so per-call accumulation just resumes the
+/// same stream). Threading and bitwise thread-stability are identical
+/// to [`matmul_tn`], which is implemented as this over a zero C.
+pub fn matmul_tn_acc(a: &Tensor, b: &Tensor, c: &mut Tensor) {
     let (m, ka) = a.dims2();
     let (mb, n) = b.dims2();
     assert_eq!(m, mb, "matmul_tn {:?}T x {:?}", a.shape, b.shape);
-    let mut c = vec![0.0f32; ka * n];
+    assert_eq!(
+        c.shape,
+        vec![ka, n],
+        "matmul_tn_acc accumulator shape {:?}",
+        c.shape
+    );
     if m == 0 || ka == 0 || n == 0 {
-        return Tensor::new(vec![ka, n], c);
+        return;
     }
     let work = m.saturating_mul(ka).saturating_mul(n);
     let threads = if work >= MM_PAR_MIN_WORK {
@@ -185,18 +275,17 @@ pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
         1
     };
     if threads <= 1 {
-        matmul_tn_rows(&a.data, ka, &b.data, n, 0, &mut c);
-        return Tensor::new(vec![ka, n], c);
+        matmul_tn_rows(&a.data, ka, &b.data, n, 0, &mut c.data);
+        return;
     }
     let rows_per = (ka + threads - 1) / threads;
     std::thread::scope(|scope| {
-        for (ci, c_rows) in c.chunks_mut(rows_per * n).enumerate() {
+        for (ci, c_rows) in c.data.chunks_mut(rows_per * n).enumerate() {
             let i0 = ci * rows_per;
             let (a, b) = (&a.data, &b.data);
             scope.spawn(move || matmul_tn_rows(a, ka, b, n, i0, c_rows));
         }
     });
-    Tensor::new(vec![ka, n], c)
 }
 
 /// Row-block kernel of [`matmul_tn`]: output rows `i0 ..` of C = Aᵀ·B.
@@ -617,6 +706,73 @@ mod tests {
             assert_eq!(fused.shape, vec![k, n]);
             assert_eq!(fused.data, composed.data, "({m}x{k}x{n})");
         }
+    }
+
+    #[test]
+    fn tiled_matmul_matches_reference_bitwise() {
+        // stronger than the tolerance check above: the tile/unroll
+        // structure keeps each output element's k-ascending add order,
+        // so tiled and naive results must agree to the bit
+        let mut rng = Rng::new(27);
+        for (m, k, n) in [(65usize, 130usize, 47usize), (7, 256, 300)] {
+            let a = randt(&mut rng, m, k);
+            let b = randt(&mut rng, k, n);
+            assert_eq!(
+                matmul(&a, &b).data,
+                matmul_reference(&a, &b).data,
+                "({m}x{k}x{n})"
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_nt_threading_is_bit_stable() {
+        let mut rng = Rng::new(28);
+        let a = randt(&mut rng, 192, 96);
+        let b = randt(&mut rng, 130, 96);
+        let _guard = crate::par::TEST_THREADS_LOCK.lock().unwrap();
+        let before = crate::par::max_threads_setting();
+        crate::par::set_max_threads(1);
+        let c1 = matmul_nt(&a, &b);
+        crate::par::set_max_threads(4);
+        let c4 = matmul_nt(&a, &b);
+        crate::par::set_max_threads(before);
+        assert_eq!(c1.data, c4.data);
+    }
+
+    #[test]
+    fn matmul_tn_acc_accumulates_microbatches_exactly() {
+        // the fused-gradient contract: per-microbatch accumulate-into
+        // calls, in microbatch order, equal ONE matmul_tn over the
+        // row-concatenated microbatches — to the bit, at any thread
+        // count (the kernel streams the shared m index ascending)
+        let mut rng = Rng::new(29);
+        let (k, n) = (48usize, 56usize);
+        let parts: Vec<(Tensor, Tensor)> = [13usize, 96, 1, 30]
+            .iter()
+            .map(|m| (randt(&mut rng, *m, k), randt(&mut rng, *m, n)))
+            .collect();
+        let cat = |sel: fn(&(Tensor, Tensor)) -> &Tensor, cols: usize| {
+            let mut data = Vec::new();
+            for p in &parts {
+                data.extend_from_slice(&sel(p).data);
+            }
+            Tensor::new(vec![data.len() / cols, cols], data)
+        };
+        let a_cat = cat(|p| &p.0, k);
+        let b_cat = cat(|p| &p.1, n);
+        let _guard = crate::par::TEST_THREADS_LOCK.lock().unwrap();
+        let before = crate::par::max_threads_setting();
+        for threads in [1usize, 4] {
+            crate::par::set_max_threads(threads);
+            let fused = matmul_tn(&a_cat, &b_cat);
+            let mut acc = Tensor::zeros(&[k, n]);
+            for (a, b) in &parts {
+                matmul_tn_acc(a, b, &mut acc);
+            }
+            assert_eq!(acc.data, fused.data, "threads={threads}");
+        }
+        crate::par::set_max_threads(before);
     }
 
     #[test]

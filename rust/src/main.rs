@@ -32,7 +32,8 @@ fn usage() -> ! {
 
 USAGE:
   protomodels train   [--backend pjrt|native] [--config base]
-                      [--mode subspace|raw|topk|quant|powerlr|nofixed]
+                      [--mode subspace|raw|topk|quant|powerlr|nofixed
+                              |raw-bf16|subspace-bf16]
                       [--bandwidth 80mbps|16gbps|100gbps|<N>mbps] [--regions]
                       [--steps 200] [--microbatches 8] [--corpus wiki|books|web|c4]
                       [--lr 6e-3] [--grassmann 0] [--seed 17]
@@ -66,6 +67,7 @@ USAGE:
   protomodels timing  [--config tiny] [--steps 3]
   protomodels bench   [--json] [--fast] [--out .] [--threads N]
                       [--check BENCH_baseline] [--max-regress 0.25]
+                      [--compare <old.json> <new.json>]
 
 Replicated runs (--replicas > 1) train R data-parallel pipeline replicas
 and all-reduce weight gradients over a simulated cross-replica ring; the
@@ -112,7 +114,11 @@ convergence-parity claim.
 all cores; emitted CSVs are byte-identical for any N). `bench --json`
 writes BENCH_linalg.json / BENCH_pipeline.json perf-trajectory files
 to --out (DESIGN.md §8); `bench --check <dir>` compares them against
-the committed baseline and fails on >25% wall-time regression.
+the committed baseline and fails on >25% wall-time regression;
+`bench --compare old.json new.json` prints a per-entry speedup table
+between two suite files. The raw-bf16 / subspace-bf16 modes ship bf16
+boundary payloads (truncate on encode, widen exactly on decode) at
+half the wire bytes of their f32 base modes (DESIGN.md §13).
 ",
         exp::ALL.join(", ")
     );
@@ -863,6 +869,24 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
     // regression-gate mode: compare the BENCH_*.json in --out against a
     // committed baseline directory and fail on >--max-regress wall-time
     // growth for any entry present in both
+    // speedup-table mode: `bench --compare old.json new.json` prints
+    // per-entry old/new means and the speedup ratio — kernel wins are
+    // reportable without hand-diffing JSON
+    if let Some(old) = flags.opt("compare") {
+        let new = flags.positional.first().ok_or_else(|| {
+            anyhow::anyhow!(
+                "bench --compare needs two suite files: \
+                 --compare <old.json> <new.json>"
+            )
+        })?;
+        let rows = protomodels::bench::compare_suites(
+            std::path::Path::new(old),
+            std::path::Path::new(new),
+        )?;
+        let best = protomodels::bench::print_comparison(&rows);
+        println!("best speedup: {best:.2}x ({old} -> {new})");
+        return Ok(());
+    }
     if let Some(baseline) = flags.opt("check") {
         let max_regress = flags.f64("max-regress", 0.25)?;
         let report = protomodels::bench::check_regressions(
@@ -911,6 +935,16 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
             .push(BenchEntry { result: r, items_per_iter: Some(flops) });
         let r = bench.run(&format!("matmul_reference_{d}"), || {
             black_box(linalg::matmul_reference(black_box(&a), black_box(&b)));
+        });
+        linalg_entries
+            .push(BenchEntry { result: r, items_per_iter: Some(flops) });
+        let r = bench.run(&format!("matmul_nt_{d}"), || {
+            black_box(linalg::matmul_nt(black_box(&a), black_box(&b)));
+        });
+        linalg_entries
+            .push(BenchEntry { result: r, items_per_iter: Some(flops) });
+        let r = bench.run(&format!("matmul_tn_{d}"), || {
+            black_box(linalg::matmul_tn(black_box(&a), black_box(&b)));
         });
         linalg_entries
             .push(BenchEntry { result: r, items_per_iter: Some(flops) });
@@ -1109,6 +1143,28 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
             let mut built =
                 build_stage(&h, Mode::Subspace, 1, &st.params, io());
             built.tape.backward_from(built.output, gc.clone());
+            black_box(
+                built.tape.grad(built.input.expect("input")).is_some(),
+            );
+        });
+        nn_entries.push(BenchEntry {
+            result: r,
+            items_per_iter: Some(stage_flops(&h, 1, Phase::Bwd, true)),
+        });
+        // the hot-path variant the pipelines actually run: matmul
+        // weight grads stream into persistent accumulators
+        // (`backward_into`), skipping the per-tape grad tensors
+        let mut acc: Vec<Tensor> =
+            st.params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        let r = bench.run("nn_stage_bwd_fused_tiny_subspace", || {
+            let mut built =
+                build_stage(&h, Mode::Subspace, 1, &st.params, io());
+            built.tape.backward_into(
+                built.output,
+                Some(gc.clone()),
+                &built.params,
+                &mut acc,
+            );
             black_box(
                 built.tape.grad(built.input.expect("input")).is_some(),
             );

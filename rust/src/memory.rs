@@ -133,8 +133,15 @@ pub fn native_tape_bytes(h: &Hyper, stage: usize, compressed: bool) -> usize {
     let last = stage == h.stages - 1;
     let c_in = if compressed { h.k } else { d };
     let p_s = stage_param_count(h, stage);
-    // params + their grads
-    let mut floats = 2 * p_s;
+    // params + their grads — minus the matmul-weight grads
+    // (wq/wk/wv/wp1/w1/wp2 per block, the logits matrix on the last
+    // stage), which `Tape::backward_into` streams straight into the
+    // persistent grad accumulators instead of materializing on the tape
+    // (DESIGN.md §13); LN gains/biases and the embedding tables keep
+    // tape-held grads
+    let fused_w = h.blocks_per_stage * (4 * d * d + 2 * d * dff)
+        + if last { d * v } else { 0 };
+    let mut floats = 2 * p_s - fused_w;
     // constant leaves: E (stage 0 and compressed stages), U (compressed)
     if stage == 0 || compressed {
         floats += m * d;
@@ -243,7 +250,7 @@ pub fn checkpoint_payload_bytes(
     has_s_acc: bool,
 ) -> usize {
     use crate::compress::{dp_wire_bytes, CkptCodec, Mode};
-    let compressed = matches!(mode, Mode::Subspace | Mode::NoFixed);
+    let compressed = mode.compressed();
     let mut bytes =
         crate::compress::ckpt::CKPT_HEADER_LEN + h.d * h.k * 4;
     for (name, shape) in h.stage_schema(stage) {

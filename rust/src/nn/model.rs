@@ -52,7 +52,7 @@ pub fn high_rank_e(
         for t in 0..n {
             let row = &mut data[(bi * n + t) * d..(bi * n + t + 1) * d];
             row.copy_from_slice(&pe.data[t * d..(t + 1) * d]);
-            if mode == Mode::Subspace {
+            if mode.uses_fixed_embedding() {
                 let id = tok.data[bi * n + t] as usize;
                 let fixed = &t_fixed.data[id * d..(id + 1) * d];
                 for (r, f) in row.iter_mut().zip(fixed) {
@@ -110,7 +110,7 @@ pub fn build_stage(
     params: &[Tensor],
     io: StageIo<'_>,
 ) -> BuiltStage {
-    let compressed = matches!(mode, Mode::Subspace | Mode::NoFixed);
+    let compressed = mode.compressed();
     let last = stage == h.stages - 1;
     let mut tape = Tape::new();
     let pvars: Vec<Var> =
@@ -302,7 +302,7 @@ mod tests {
             let (tok, tgt) = batch(&h, &mut rng);
             let pe = sinusoidal_pe(h.n, h.d);
             let e = high_rank_e(&h, mode, &pe, &global.t_fixed, &tok);
-            let compressed = matches!(mode, Mode::Subspace | Mode::NoFixed);
+            let compressed = mode.compressed();
             // run the forward wave to the last stage
             let mut cur: Option<Tensor> = None;
             for s in 0..h.stages - 1 {

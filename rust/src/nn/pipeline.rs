@@ -13,11 +13,19 @@
 //! input; the backward wave rebuilds the stage subgraph and runs the
 //! tape backward through it.
 //!
-//! Determinism: every tensor op is thread-count-bit-stable (tape ops are
-//! serial; matmuls keep a fixed accumulation order), and all randomness
-//! derives from `cfg.seed` — a training run is a pure function of its
-//! config, which is what `tests/par_determinism.rs` asserts for the
-//! `convergence-native` experiment grid.
+//! Determinism: every tensor op is thread-count-bit-stable (matmuls
+//! keep a fixed accumulation order; the tape's data-parallel ops give
+//! each pool task sole ownership of its output region — DESIGN.md §13),
+//! and all randomness derives from `cfg.seed` — a training run is a
+//! pure function of its config, which is what
+//! `tests/par_determinism.rs` asserts for the `convergence-native`
+//! experiment grid.
+//!
+//! Weight gradients are microbatch-fused: each backward runs
+//! [`Tape::backward_into`], streaming matmul dW products straight into
+//! the cross-microbatch accumulators (bitwise what one `matmul_tn` over
+//! the row-concatenated microbatches would produce) instead of
+//! materializing per-microbatch gradients on the tape and adding them.
 
 use std::time::Instant;
 
@@ -442,7 +450,12 @@ impl NativePipeline {
                 },
             );
             loss_sum += built.tape.value(built.output).item() as f64;
-            built.tape.backward(built.output);
+            built.tape.backward_into(
+                built.output,
+                None,
+                &built.params,
+                &mut grad_acc[last],
+            );
             costs.fwd[last][mb] = stage_seconds(
                 tm,
                 &h,
@@ -451,13 +464,15 @@ impl NativePipeline {
                 compressed,
                 Some(t0.elapsed().as_secs_f64()),
             );
+            // matmul weight grads went straight into grad_acc; harvest
+            // the tape-held rest (LayerNorm gains/biases, t_s)
             Self::accumulate_grads(&built, &mut grad_acc[last]);
             if compressed {
                 let g_full = built
                     .tape
                     .grad(built.x_full.expect("last stage reconstructs"))
                     .expect("g_full");
-                self.s_acc.add_assign(&linalg::matmul_tn(g_full, g_full));
+                linalg::matmul_tn_acc(g_full, g_full, &mut self.s_acc);
                 self.s_count += 1;
             }
             let mut gc = built
@@ -489,7 +504,12 @@ impl NativePipeline {
                         targets: None,
                     },
                 );
-                built.tape.backward_from(built.output, delivered);
+                built.tape.backward_into(
+                    built.output,
+                    Some(delivered),
+                    &built.params,
+                    &mut grad_acc[s],
+                );
                 costs.bwd[s][mb] = stage_seconds(
                     tm,
                     &h,

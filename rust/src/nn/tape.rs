@@ -10,15 +10,22 @@
 //! and for the stage-boundary input, which is what the pipeline ships
 //! upstream.
 //!
-//! Determinism: ops are serial loops with fixed iteration order, and the
-//! matmul family delegates to the thread-count-bit-stable linalg kernels
-//! (DESIGN.md §8) — a tape program produces identical bits under any
+//! Determinism (DESIGN.md §8/§13): every op is either a serial loop
+//! with fixed iteration order, a delegate to the thread-count-bit-stable
+//! linalg kernels, or — for the attention and cross-entropy hot spots —
+//! data-parallel over the `par` pool with each output region owned by
+//! exactly one task whose internal arithmetic is the serial loop
+//! verbatim (batch rows for attention, row blocks for cross-entropy;
+//! the scalar loss folds per-row f64 terms in row order on the caller).
+//! A tape program therefore produces identical bits under any
 //! `--threads` budget, which is what lets `exp convergence-native` keep
 //! the byte-identical-CSV contract.
 //!
 //! Memory: [`Tape::bytes`] reports the bytes held by values, aux state,
 //! and accumulated gradients — the number `memory.rs` checks against its
-//! analytic native-backend model.
+//! analytic native-backend model. [`Tape::backward_into`] keeps matmul
+//! weight gradients *off* the tape entirely, streaming them into the
+//! caller's cross-microbatch accumulators.
 
 use crate::linalg;
 use crate::tensor::{IntTensor, Tensor};
@@ -247,52 +254,22 @@ impl Tape {
         let dh = d / heads;
         debug_assert_eq!(dh * heads, d);
         debug_assert_eq!(self.value(q).shape, vec![b * n, d]);
-        let scale = 1.0f32 / (dh as f32).sqrt();
         let (qd, kd, vd) =
             (&self.value(q).data, &self.value(k).data, &self.value(v).data);
-        let mut att = vec![0.0f32; b * heads * n * n];
-        let mut out = vec![0.0f32; b * n * d];
-        for bi in 0..b {
-            for h in 0..heads {
-                let off = h * dh;
-                for i in 0..n {
-                    let qrow = &qd[(bi * n + i) * d + off..][..dh];
-                    let arow = &mut att
-                        [((bi * heads + h) * n + i) * n..][..n];
-                    // causal scores for j ≤ i
-                    let mut mx = f32::NEG_INFINITY;
-                    for (j, aj) in arow.iter_mut().enumerate().take(i + 1) {
-                        let krow = &kd[(bi * n + j) * d + off..][..dh];
-                        let mut s = 0.0f32;
-                        for (qc, kc) in qrow.iter().zip(krow) {
-                            s += qc * kc;
-                        }
-                        let s = s * scale;
-                        *aj = s;
-                        mx = mx.max(s);
-                    }
-                    // softmax over the unmasked prefix
-                    let mut sum = 0.0f64;
-                    for aj in arow.iter_mut().take(i + 1) {
-                        let e = (*aj - mx).exp();
-                        *aj = e;
-                        sum += e as f64;
-                    }
-                    let inv = (1.0 / sum) as f32;
-                    for aj in arow.iter_mut().take(i + 1) {
-                        *aj *= inv;
-                    }
-                    // out_i = Σ_j att_ij · v_j
-                    let orow = &mut out[(bi * n + i) * d + off..][..dh];
-                    for j in 0..=i {
-                        let a = arow[j];
-                        let vrow = &vd[(bi * n + j) * d + off..][..dh];
-                        for (oc, vc) in orow.iter_mut().zip(vrow) {
-                            *oc += a * vc;
-                        }
-                    }
-                }
-            }
+        // batch rows are independent: run each on the par pool and
+        // stitch the owned chunks back in batch order — per-chunk
+        // arithmetic is the serial loop verbatim, so the result is
+        // bitwise the same at any thread count
+        let bis: Vec<usize> = (0..b).collect();
+        let threads = crate::par::kernel_threads().min(b.max(1));
+        let parts = crate::par::map(threads, &bis, |_, &bi| {
+            attention_forward_batch(qd, kd, vd, dims, bi)
+        });
+        let mut att = Vec::with_capacity(b * heads * n * n);
+        let mut out = Vec::with_capacity(b * n * d);
+        for (a_chunk, o_chunk) in parts {
+            att.extend_from_slice(&a_chunk);
+            out.extend_from_slice(&o_chunk);
         }
         let value = Tensor::new(vec![b * n, d], out);
         let rg = self.req(q) || self.req(k) || self.req(v);
@@ -327,25 +304,50 @@ impl Tape {
         let t = self.value(logits);
         let (rows, vocab) = t.dims2();
         debug_assert_eq!(targets.numel(), rows);
-        let mut probs = vec![0.0f32; rows * vocab];
+        // rows are independent: block them across the par pool; the
+        // scalar loss folds the per-row f64 terms serially in row order
+        // afterwards, so neither probs nor the loss bits depend on the
+        // pool width or the block boundaries
+        let threads = crate::par::kernel_threads().min(rows.max(1));
+        let per = ((rows + threads - 1) / threads.max(1)).max(1);
+        let blocks: Vec<(usize, usize)> = (0..rows)
+            .step_by(per)
+            .map(|r0| (r0, (r0 + per).min(rows)))
+            .collect();
+        let td = &t.data;
+        let parts = crate::par::map(threads, &blocks, |_, &(r0, r1)| {
+            let mut probs = vec![0.0f32; (r1 - r0) * vocab];
+            let mut losses = vec![0.0f64; r1 - r0];
+            for r in r0..r1 {
+                let row = &td[r * vocab..(r + 1) * vocab];
+                let mx =
+                    row.iter().fold(f32::NEG_INFINITY, |m, x| m.max(*x));
+                let mut sum = 0.0f64;
+                let prow =
+                    &mut probs[(r - r0) * vocab..(r - r0 + 1) * vocab];
+                for (p, l) in prow.iter_mut().zip(row) {
+                    let e = (l - mx).exp();
+                    *p = e;
+                    sum += e as f64;
+                }
+                let inv = (1.0 / sum) as f32;
+                for p in prow.iter_mut() {
+                    *p *= inv;
+                }
+                let tgt = targets.data[r] as usize;
+                debug_assert!(tgt < vocab);
+                losses[r - r0] = -((row[tgt] - mx) as f64 - sum.ln());
+            }
+            (probs, losses)
+        });
+        let mut probs = Vec::with_capacity(rows * vocab);
         let mut loss = 0.0f64;
-        for r in 0..rows {
-            let row = &t.data[r * vocab..(r + 1) * vocab];
-            let mx = row.iter().fold(f32::NEG_INFINITY, |m, x| m.max(*x));
-            let mut sum = 0.0f64;
-            let prow = &mut probs[r * vocab..(r + 1) * vocab];
-            for (p, l) in prow.iter_mut().zip(row) {
-                let e = (l - mx).exp();
-                *p = e;
-                sum += e as f64;
+        for (p_chunk, l_chunk) in parts {
+            probs.extend_from_slice(&p_chunk);
+            for l in l_chunk {
+                // `loss += -x` is bit-identical to the serial `loss -= x`
+                loss += l;
             }
-            let inv = (1.0 / sum) as f32;
-            for p in prow.iter_mut() {
-                *p *= inv;
-            }
-            let tgt = targets.data[r] as usize;
-            debug_assert!(tgt < vocab);
-            loss -= (row[tgt] - mx) as f64 - sum.ln();
         }
         let value = Tensor::scalar((loss / rows as f64) as f32);
         let rg = self.req(logits);
@@ -372,6 +374,53 @@ impl Tape {
     /// how non-last stages inject the boundary gradient arriving from
     /// downstream.
     pub fn backward_from(&mut self, root: Var, seed: Tensor) {
+        self.reverse(root, seed, None);
+    }
+
+    /// Reverse pass that streams matmul weight gradients straight into
+    /// caller-owned accumulators instead of materializing them on the
+    /// tape: for every `Op::Matmul`/`Op::MatmulNT` whose weight side is
+    /// a leaf listed in `params`, the dW product runs as
+    /// [`linalg::matmul_tn_acc`] into `acc[i]` (the microbatch-fused
+    /// accumulation). Called once per microbatch in microbatch order,
+    /// the accumulated dW is **bitwise** what one `matmul_tn` over the
+    /// row-concatenated microbatch activations would produce — the
+    /// kernel streams the shared index ascending — so fused and
+    /// concatenated-unfused gradients are exactly equal at any thread
+    /// count. Non-matmul parameters (LayerNorm gain/bias, the embedding
+    /// table) keep their tape gradients; harvest those with the usual
+    /// per-param `grad()` walk, which sees `None` for fused weights and
+    /// therefore never double-counts.
+    ///
+    /// `seed` is the output cotangent (`None` seeds a scalar 1 — the
+    /// last-stage loss root).
+    pub fn backward_into(
+        &mut self,
+        root: Var,
+        seed: Option<Tensor>,
+        params: &[Var],
+        acc: &mut [Tensor],
+    ) {
+        debug_assert_eq!(params.len(), acc.len());
+        let seed = seed.unwrap_or_else(|| Tensor::scalar(1.0));
+        let mut slots = vec![None; self.nodes.len()];
+        for (i, p) in params.iter().enumerate() {
+            if matches!(self.nodes[p.id].op, Op::Leaf) {
+                slots[p.id] = Some(i);
+            }
+        }
+        self.reverse(root, seed, Some((slots, acc)));
+    }
+
+    /// Shared reverse walk behind [`Tape::backward_from`] and
+    /// [`Tape::backward_into`]; `fused` maps node id → fused
+    /// accumulator index for the weight-gradient fast path.
+    fn reverse(
+        &mut self,
+        root: Var,
+        seed: Tensor,
+        mut fused: Option<(Vec<Option<usize>>, &mut [Tensor])>,
+    ) {
         debug_assert_eq!(self.nodes[root.id].value.shape, seed.shape);
         if !self.nodes[root.id].requires_grad {
             return;
@@ -392,8 +441,26 @@ impl Tape {
                         accumulate(&mut head[*a], da);
                     }
                     if head[*b].requires_grad {
-                        let db = linalg::matmul_tn(&head[*a].value, g);
-                        accumulate(&mut head[*b], db);
+                        let slot =
+                            fused.as_ref().and_then(|(s, _)| s[*b]);
+                        match (slot, fused.as_mut()) {
+                            (Some(ai), Some((_, acc))) => {
+                                // fused path: dW = Aᵀ·g streamed into
+                                // the cross-microbatch accumulator
+                                linalg::matmul_tn_acc(
+                                    &head[*a].value,
+                                    g,
+                                    &mut acc[ai],
+                                );
+                            }
+                            _ => {
+                                let db = linalg::matmul_tn(
+                                    &head[*a].value,
+                                    g,
+                                );
+                                accumulate(&mut head[*b], db);
+                            }
+                        }
                     }
                 }
                 Op::MatmulNT { a, b } => {
@@ -402,8 +469,24 @@ impl Tape {
                         accumulate(&mut head[*a], da);
                     }
                     if head[*b].requires_grad {
-                        let db = linalg::matmul_tn(g, &head[*a].value);
-                        accumulate(&mut head[*b], db);
+                        let slot =
+                            fused.as_ref().and_then(|(s, _)| s[*b]);
+                        match (slot, fused.as_mut()) {
+                            (Some(ai), Some((_, acc))) => {
+                                linalg::matmul_tn_acc(
+                                    g,
+                                    &head[*a].value,
+                                    &mut acc[ai],
+                                );
+                            }
+                            _ => {
+                                let db = linalg::matmul_tn(
+                                    g,
+                                    &head[*a].value,
+                                );
+                                accumulate(&mut head[*b], db);
+                            }
+                        }
                     }
                 }
                 Op::Add { a, b } => {
@@ -563,7 +646,69 @@ fn layer_norm_backward(
     )
 }
 
-/// Fused causal-attention backward: returns (dQ, dK, dV).
+/// Forward fused causal attention for ONE batch row `bi`: returns the
+/// (heads·n·n) softmax chunk and the (n·d) output chunk that row owns.
+/// This is the serial per-batch loop body, factored out so the op can
+/// fan batch rows across the `par` pool without changing any bit.
+fn attention_forward_batch(
+    qd: &[f32],
+    kd: &[f32],
+    vd: &[f32],
+    dims: AttnDims,
+    bi: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let AttnDims { b: _, n, heads, d } = dims;
+    let dh = d / heads;
+    let scale = 1.0f32 / (dh as f32).sqrt();
+    let mut att = vec![0.0f32; heads * n * n];
+    let mut out = vec![0.0f32; n * d];
+    for h in 0..heads {
+        let off = h * dh;
+        for i in 0..n {
+            let qrow = &qd[(bi * n + i) * d + off..][..dh];
+            let arow = &mut att[(h * n + i) * n..][..n];
+            // causal scores for j ≤ i
+            let mut mx = f32::NEG_INFINITY;
+            for (j, aj) in arow.iter_mut().enumerate().take(i + 1) {
+                let krow = &kd[(bi * n + j) * d + off..][..dh];
+                let mut s = 0.0f32;
+                for (qc, kc) in qrow.iter().zip(krow) {
+                    s += qc * kc;
+                }
+                let s = s * scale;
+                *aj = s;
+                mx = mx.max(s);
+            }
+            // softmax over the unmasked prefix
+            let mut sum = 0.0f64;
+            for aj in arow.iter_mut().take(i + 1) {
+                let e = (*aj - mx).exp();
+                *aj = e;
+                sum += e as f64;
+            }
+            let inv = (1.0 / sum) as f32;
+            for aj in arow.iter_mut().take(i + 1) {
+                *aj *= inv;
+            }
+            // out_i = Σ_j att_ij · v_j
+            let orow = &mut out[i * d + off..][..dh];
+            for j in 0..=i {
+                let a = arow[j];
+                let vrow = &vd[(bi * n + j) * d + off..][..dh];
+                for (oc, vc) in orow.iter_mut().zip(vrow) {
+                    *oc += a * vc;
+                }
+            }
+        }
+    }
+    (att, out)
+}
+
+/// Fused causal-attention backward: returns (dQ, dK, dV). Batch rows
+/// are independent (the causal mask never crosses a batch row), so they
+/// fan across the `par` pool exactly like the forward pass — each task
+/// owns the dQ/dK/dV chunks of one batch row and runs the serial loop
+/// verbatim, keeping the result bitwise thread-count-invariant.
 fn attention_backward(
     q: &Tensor,
     k: &Tensor,
@@ -573,58 +718,84 @@ fn attention_backward(
     dout: &Tensor,
 ) -> (Tensor, Tensor, Tensor) {
     let AttnDims { b, n, heads, d } = dims;
-    let dh = d / heads;
-    let scale = 1.0f32 / (dh as f32).sqrt();
-    let mut dq = vec![0.0f32; b * n * d];
-    let mut dk = vec![0.0f32; b * n * d];
-    let mut dv = vec![0.0f32; b * n * d];
-    let mut datt = vec![0.0f32; n];
-    for bi in 0..b {
-        for h in 0..heads {
-            let off = h * dh;
-            for i in 0..n {
-                let arow = &att[((bi * heads + h) * n + i) * n..][..n];
-                let dorow = &dout.data[(bi * n + i) * d + off..][..dh];
-                // dV_j += att_ij · dOut_i;  dAtt_ij = dOut_i · V_j
-                for j in 0..=i {
-                    let a = arow[j];
-                    let vrow = &v.data[(bi * n + j) * d + off..][..dh];
-                    let dvrow = &mut dv[(bi * n + j) * d + off..][..dh];
-                    let mut dot = 0.0f32;
-                    for c in 0..dh {
-                        dvrow[c] += a * dorow[c];
-                        dot += dorow[c] * vrow[c];
-                    }
-                    datt[j] = dot;
-                }
-                // softmax backward on the causal prefix:
-                // dS_ij = att_ij (dAtt_ij − Σ_l att_il dAtt_il)
-                let mut inner = 0.0f64;
-                for j in 0..=i {
-                    inner += (arow[j] * datt[j]) as f64;
-                }
-                let inner = inner as f32;
-                let qrow = &q.data[(bi * n + i) * d + off..][..dh];
-                let dqrow_i = &mut dq[(bi * n + i) * d + off..][..dh];
-                for j in 0..=i {
-                    let ds = arow[j] * (datt[j] - inner) * scale;
-                    let krow = &k.data[(bi * n + j) * d + off..][..dh];
-                    for (dqc, kc) in dqrow_i.iter_mut().zip(krow) {
-                        *dqc += ds * kc;
-                    }
-                    let dkrow = &mut dk[(bi * n + j) * d + off..][..dh];
-                    for (dkc, qc) in dkrow.iter_mut().zip(qrow) {
-                        *dkc += ds * qc;
-                    }
-                }
-            }
-        }
+    let bis: Vec<usize> = (0..b).collect();
+    let threads = crate::par::kernel_threads().min(b.max(1));
+    let parts = crate::par::map(threads, &bis, |_, &bi| {
+        attention_backward_batch(q, k, v, dims, att, dout, bi)
+    });
+    let mut dq = Vec::with_capacity(b * n * d);
+    let mut dk = Vec::with_capacity(b * n * d);
+    let mut dv = Vec::with_capacity(b * n * d);
+    for (dq_chunk, dk_chunk, dv_chunk) in parts {
+        dq.extend_from_slice(&dq_chunk);
+        dk.extend_from_slice(&dk_chunk);
+        dv.extend_from_slice(&dv_chunk);
     }
     (
         Tensor::new(vec![b * n, d], dq),
         Tensor::new(vec![b * n, d], dk),
         Tensor::new(vec![b * n, d], dv),
     )
+}
+
+/// Backward fused causal attention for ONE batch row: the (n·d) dQ, dK
+/// and dV chunks that row owns.
+fn attention_backward_batch(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    dims: AttnDims,
+    att: &[f32],
+    dout: &Tensor,
+    bi: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let AttnDims { b: _, n, heads, d } = dims;
+    let dh = d / heads;
+    let scale = 1.0f32 / (dh as f32).sqrt();
+    let mut dq = vec![0.0f32; n * d];
+    let mut dk = vec![0.0f32; n * d];
+    let mut dv = vec![0.0f32; n * d];
+    let mut datt = vec![0.0f32; n];
+    for h in 0..heads {
+        let off = h * dh;
+        for i in 0..n {
+            let arow = &att[((bi * heads + h) * n + i) * n..][..n];
+            let dorow = &dout.data[(bi * n + i) * d + off..][..dh];
+            // dV_j += att_ij · dOut_i;  dAtt_ij = dOut_i · V_j
+            for j in 0..=i {
+                let a = arow[j];
+                let vrow = &v.data[(bi * n + j) * d + off..][..dh];
+                let dvrow = &mut dv[j * d + off..][..dh];
+                let mut dot = 0.0f32;
+                for c in 0..dh {
+                    dvrow[c] += a * dorow[c];
+                    dot += dorow[c] * vrow[c];
+                }
+                datt[j] = dot;
+            }
+            // softmax backward on the causal prefix:
+            // dS_ij = att_ij (dAtt_ij − Σ_l att_il dAtt_il)
+            let mut inner = 0.0f64;
+            for j in 0..=i {
+                inner += (arow[j] * datt[j]) as f64;
+            }
+            let inner = inner as f32;
+            let qrow = &q.data[(bi * n + i) * d + off..][..dh];
+            let dqrow_i = &mut dq[i * d + off..][..dh];
+            for j in 0..=i {
+                let ds = arow[j] * (datt[j] - inner) * scale;
+                let krow = &k.data[(bi * n + j) * d + off..][..dh];
+                for (dqc, kc) in dqrow_i.iter_mut().zip(krow) {
+                    *dqc += ds * kc;
+                }
+                let dkrow = &mut dk[j * d + off..][..dh];
+                for (dkc, qc) in dkrow.iter_mut().zip(qrow) {
+                    *dkc += ds * qc;
+                }
+            }
+        }
+    }
+    (dq, dk, dv)
 }
 
 #[cfg(test)]
@@ -826,6 +997,196 @@ mod tests {
         tape.backward_from(e, Tensor::new(vec![3, 2], vec![1.0; 6]));
         let g = tape.grad(table).unwrap();
         assert_eq!(g.data, vec![1.0, 1.0, 0.0, 0.0, 2.0, 2.0, 0.0, 0.0]);
+    }
+
+    /// Build a graph exercising EVERY op kind (embed, layer_norm,
+    /// matmul, causal_attention, matmul_nt, relu, add, sub,
+    /// cross_entropy), run backward, and return the loss bits plus
+    /// every trainable leaf's gradient.
+    fn full_graph_grads() -> (u32, Vec<Vec<f32>>) {
+        let mut rng = Rng::new(11);
+        let dims = AttnDims { b: 4, n: 16, heads: 2, d: 32 };
+        let (b, n, d, vocab) = (4usize, 16usize, 32usize, 40usize);
+        let rows = b * n;
+        let mut tape = Tape::new();
+        let table = tape.leaf(randt(&mut rng, &[vocab, d]), true);
+        let tok = IntTensor::new(
+            vec![b, n],
+            (0..rows).map(|i| ((i * 7 + 3) % vocab) as i32).collect(),
+        );
+        let x = tape.embed(table, &tok);
+        let lg = tape.leaf(randt(&mut rng, &[d]), true);
+        let lb = tape.leaf(randt(&mut rng, &[d]), true);
+        let ln = tape.layer_norm(x, lg, lb);
+        let wq = tape.leaf(randt(&mut rng, &[d, d]), true);
+        let wk = tape.leaf(randt(&mut rng, &[d, d]), true);
+        let wv = tape.leaf(randt(&mut rng, &[d, d]), true);
+        let q = tape.matmul(ln, wq);
+        let k = tape.matmul(ln, wk);
+        let v = tape.matmul(ln, wv);
+        let attn = tape.causal_attention(q, k, v, dims);
+        let u = tape.leaf(randt(&mut rng, &[d, d]), true);
+        let rec = tape.matmul_nt(attn, u);
+        let r = tape.relu(rec);
+        let s = tape.add(r, x);
+        let e = tape.leaf(randt(&mut rng, &[rows, d]), false);
+        let s2 = tape.sub(s, e);
+        let wo = tape.leaf(randt(&mut rng, &[d, vocab]), true);
+        let logits = tape.matmul(s2, wo);
+        let targets = IntTensor::new(
+            vec![rows],
+            (0..rows).map(|i| ((i * 11 + 5) % vocab) as i32).collect(),
+        );
+        let loss = tape.cross_entropy(logits, &targets);
+        tape.backward(loss);
+        let grads = [table, lg, lb, wq, wk, wv, u, wo]
+            .iter()
+            .map(|p| tape.grad(*p).expect("trainable grad").data.clone())
+            .collect();
+        (tape.value(loss).item().to_bits(), grads)
+    }
+
+    #[test]
+    fn backward_bitwise_stable_across_thread_counts() {
+        // the §13 contract, end to end: loss AND every leaf gradient of
+        // a graph touching every op kind are bit-identical at any
+        // kernel-thread budget
+        let _guard = crate::par::TEST_THREADS_LOCK.lock().unwrap();
+        let before = crate::par::max_threads_setting();
+        crate::par::set_max_threads(1);
+        let (loss1, grads1) = full_graph_grads();
+        for threads in [2usize, 4, 8] {
+            crate::par::set_max_threads(threads);
+            let (lossn, gradsn) = full_graph_grads();
+            assert_eq!(loss1, lossn, "loss bits at threads={threads}");
+            for (i, (a, b)) in grads1.iter().zip(&gradsn).enumerate() {
+                assert_eq!(a, b, "grad {i} at threads={threads}");
+            }
+        }
+        crate::par::set_max_threads(before);
+    }
+
+    #[test]
+    fn backward_matmul_grads_match_reference_composition() {
+        // the matmul_reference property extended to the backward path:
+        // tape gradients of C = A·B and C = A·Bᵀ equal the reference-
+        // matmul compositions dA = g·Bᵀ, dB = Aᵀ·g — to the bit (all
+        // kernels keep the naive ascending accumulation order)
+        let mut rng = Rng::new(12);
+        let (m, k, n) = (21usize, 33usize, 18usize);
+        let av = randt(&mut rng, &[m, k]);
+        let bv = randt(&mut rng, &[k, n]);
+        let seed = randt(&mut rng, &[m, n]);
+        let mut tape = Tape::new();
+        let a = tape.leaf(av.clone(), true);
+        let b = tape.leaf(bv.clone(), true);
+        let c = tape.matmul(a, b);
+        tape.backward_from(c, seed.clone());
+        let da_ref =
+            linalg::matmul_reference(&seed, &linalg::transpose(&bv));
+        let db_ref =
+            linalg::matmul_reference(&linalg::transpose(&av), &seed);
+        assert_eq!(tape.grad(a).unwrap().data, da_ref.data);
+        assert_eq!(tape.grad(b).unwrap().data, db_ref.data);
+
+        // and the NT variant: C = A·Uᵀ → dA = g·U, dU = gᵀ·A
+        let uv = randt(&mut rng, &[n, k]);
+        let seed2 = randt(&mut rng, &[m, n]);
+        let mut t2 = Tape::new();
+        let a2 = t2.leaf(av.clone(), true);
+        let u2 = t2.leaf(uv.clone(), true);
+        let c2 = t2.matmul_nt(a2, u2);
+        t2.backward_from(c2, seed2.clone());
+        let da2_ref = linalg::matmul_reference(&seed2, &uv);
+        let du2_ref =
+            linalg::matmul_reference(&linalg::transpose(&seed2), &av);
+        assert_eq!(t2.grad(a2).unwrap().data, da2_ref.data);
+        assert_eq!(t2.grad(u2).unwrap().data, du2_ref.data);
+    }
+
+    #[test]
+    fn backward_into_fused_grads_match_concatenated_bitwise() {
+        // the microbatch-fusion contract: backward_into per microbatch,
+        // in microbatch order, accumulates weight grads EXACTLY as one
+        // backward over the row-concatenated batch would — and the
+        // fused weights leave no gradient on the tape
+        let mut rng = Rng::new(13);
+        let (k, n, p) = (24usize, 20usize, 16usize);
+        let wv = randt(&mut rng, &[k, n]);
+        let uv = randt(&mut rng, &[p, n]);
+        let mbs: Vec<(Tensor, Tensor)> = [7usize, 12, 5]
+            .iter()
+            .map(|m| {
+                (randt(&mut rng, &[*m, k]), randt(&mut rng, &[*m, p]))
+            })
+            .collect();
+
+        // fused: per-microbatch backward_into on shared accumulators
+        let mut acc =
+            vec![Tensor::zeros(&[k, n]), Tensor::zeros(&[p, n])];
+        for (xv, seed) in &mbs {
+            let mut tape = Tape::new();
+            let x = tape.leaf(xv.clone(), true);
+            let w = tape.leaf(wv.clone(), true);
+            let u = tape.leaf(uv.clone(), true);
+            let y = tape.matmul(x, w);
+            let z = tape.matmul_nt(y, u);
+            tape.backward_into(
+                z,
+                Some(seed.clone()),
+                &[w, u],
+                &mut acc,
+            );
+            assert!(
+                tape.grad(w).is_none() && tape.grad(u).is_none(),
+                "fused weights must leave no tape gradient"
+            );
+            assert!(
+                tape.grad(x).is_some(),
+                "non-fused leaves keep tape gradients"
+            );
+        }
+
+        // reference: ONE backward over the row-concatenated microbatches
+        let cat = |sel: fn(&(Tensor, Tensor)) -> &Tensor, cols: usize| {
+            let mut data = Vec::new();
+            for mb in &mbs {
+                data.extend_from_slice(&sel(mb).data);
+            }
+            Tensor::new(vec![data.len() / cols, cols], data)
+        };
+        let x_cat = cat(|mb| &mb.0, k);
+        let seed_cat = cat(|mb| &mb.1, p);
+        let mut tape = Tape::new();
+        let x = tape.leaf(x_cat, true);
+        let w = tape.leaf(wv.clone(), true);
+        let u = tape.leaf(uv.clone(), true);
+        let y = tape.matmul(x, w);
+        let z = tape.matmul_nt(y, u);
+        tape.backward_from(z, seed_cat);
+        assert_eq!(acc[0].data, tape.grad(w).unwrap().data);
+        assert_eq!(acc[1].data, tape.grad(u).unwrap().data);
+
+        // the unfused M-small-matmuls-plus-adds path agrees within
+        // rounding (association differs, so only approximately)
+        let mut unfused =
+            vec![Tensor::zeros(&[k, n]), Tensor::zeros(&[p, n])];
+        for (xv, seed) in &mbs {
+            let mut t = Tape::new();
+            let x = t.leaf(xv.clone(), true);
+            let w = t.leaf(wv.clone(), true);
+            let u = t.leaf(uv.clone(), true);
+            let y = t.matmul(x, w);
+            let z = t.matmul_nt(y, u);
+            t.backward_from(z, seed.clone());
+            unfused[0].add_assign(t.grad(w).unwrap());
+            unfused[1].add_assign(t.grad(u).unwrap());
+        }
+        for (f, uf) in acc.iter().zip(&unfused) {
+            for (a, b) in f.data.iter().zip(&uf.data) {
+                assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()));
+            }
+        }
     }
 
     #[test]

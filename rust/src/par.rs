@@ -119,8 +119,12 @@ where
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<R>>> =
         (0..n).map(|_| Mutex::new(None)).collect();
-    // each worker's fair share of the global budget, for nested kernels
-    let kernel_budget = (max_threads() / threads).max(1);
+    // each worker's fair share of the *caller's* budget, for nested
+    // kernels: from the main thread that is the global budget; from
+    // inside a pool worker (e.g. the tape's data-parallel ops running
+    // in a grid cell) it is the worker's granted share, so nesting
+    // divides the budget instead of multiplying the thread count
+    let kernel_budget = (kernel_threads() / threads).max(1);
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| {
@@ -227,6 +231,24 @@ mod tests {
         let flags = map(4, &[0u8; 16], |_, _| in_worker());
         assert!(flags.iter().all(|f| *f));
         assert!(!in_worker());
+    }
+
+    #[test]
+    fn nested_map_divides_the_worker_budget() {
+        // an outer 2-way map on a budget of 8 grants 4 per worker; a
+        // nested 2-way map inside a worker must grant 2 per inner
+        // worker — dividing the caller's share, never re-reading the
+        // global budget (which would oversubscribe 2×2×4 threads)
+        let _guard = TEST_THREADS_LOCK.lock().unwrap();
+        let before = max_threads_setting();
+        set_max_threads(8);
+        let budgets = map(2, &[0u8; 2], |_, _| {
+            map(2, &[0u8; 2], |_, _| kernel_threads())
+        });
+        set_max_threads(before);
+        for inner in budgets {
+            assert_eq!(inner, vec![2, 2], "nested budgets {inner:?}");
+        }
     }
 
     #[test]

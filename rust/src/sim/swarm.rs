@@ -688,7 +688,7 @@ impl<'a> Swarm<'a> {
         };
         let vstages = p * chunks;
         let tm = spec.time_model.scaled_at(&spec.profile_of(r), barrier);
-        let compressed = matches!(spec.mode, Mode::Subspace | Mode::NoFixed);
+        let compressed = spec.mode.compressed();
         let bbytes = wire_bytes(spec.mode, h.b, h.n, h.d, h.k, h.ratio);
         let cf = chunks as f64;
 

@@ -108,7 +108,7 @@ impl StageState {
                 Tensor::new(shape.clone(), vec![1.0; numel])
             } else if name.ends_with("_b") {
                 Tensor::zeros(shape)
-            } else if name == "t_s" && mode == Mode::Subspace {
+            } else if name == "t_s" && mode.uses_fixed_embedding() {
                 // consume the draws every other mode makes for this
                 // slot, so the init stream — and everything downstream
                 // of it: later parameters, the data-batch forks — stays
@@ -123,9 +123,8 @@ impl StageState {
                     shape.clone(),
                     rng.normal_f32_vec(numel, INIT_STD),
                 );
-                let compressed =
-                    matches!(mode, Mode::Subspace | Mode::NoFixed);
-                if compressed && (constrained(name) || name == "t_s") {
+                if mode.compressed() && (constrained(name) || name == "t_s")
+                {
                     t = linalg::project_rows(&t, &global.u);
                 }
                 t

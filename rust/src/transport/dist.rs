@@ -387,7 +387,7 @@ fn accumulate_grads(built: &crate::nn::model::BuiltStage, acc: &mut [Tensor]) {
 
 /// Logical shape of a decoded boundary tensor under a spec.
 fn boundary_shape(h: &Hyper, mode: Mode) -> Vec<usize> {
-    if matches!(mode, Mode::Subspace | Mode::NoFixed) {
+    if mode.compressed() {
         vec![h.b * h.n, h.k]
     } else {
         vec![h.b * h.n, h.d]
@@ -702,7 +702,12 @@ pub(crate) fn run_stage_inner(
                         );
                         loss_sum +=
                             built.tape.value(built.output).item() as f64;
-                        built.tape.backward(built.output);
+                        built.tape.backward_into(
+                            built.output,
+                            None,
+                            &built.params,
+                            &mut grad_acc,
+                        );
                         accumulate_grads(&built, &mut grad_acc);
                         if compressed {
                             let g_full = built
@@ -713,12 +718,13 @@ pub(crate) fn run_stage_inner(
                                         .expect("last stage reconstructs"),
                                 )
                                 .expect("g_full");
-                            s_acc
-                                .as_mut()
-                                .expect("last-stage accumulator")
-                                .add_assign(&linalg::matmul_tn(
-                                    g_full, g_full,
-                                ));
+                            linalg::matmul_tn_acc(
+                                g_full,
+                                g_full,
+                                s_acc
+                                    .as_mut()
+                                    .expect("last-stage accumulator"),
+                            );
                             s_count += 1;
                         }
                         let gc = built
@@ -775,7 +781,12 @@ pub(crate) fn run_stage_inner(
                             targets: None,
                         },
                     );
-                    built.tape.backward_from(built.output, delivered);
+                    built.tape.backward_into(
+                        built.output,
+                        Some(delivered),
+                        &built.params,
+                        &mut grad_acc,
+                    );
                     accumulate_grads(&built, &mut grad_acc);
                     if stage > 0 {
                         let gc = built

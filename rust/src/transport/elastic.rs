@@ -96,6 +96,13 @@ pub struct ReassignOrder {
     pub stage: u32,
     /// step boundary to resume from (0 = fresh start)
     pub resume: u64,
+    /// scripted chaos kill this worker must execute during this epoch
+    /// (the step at which it dies). Scheduled by the *leader*, which
+    /// owns the fired-kill bookkeeping — that is what lets multi-process
+    /// chaos honor kill scripts in any epoch, not just the first: a
+    /// replacement actor enrolling fresh cannot know which kills already
+    /// fired, but the leader does.
+    pub kill_at: Option<u64>,
     /// the stage's checkpoint blob at `resume` (required when
     /// `resume > 0`)
     pub ckpt: Option<Vec<u8>>,
@@ -104,7 +111,13 @@ pub struct ReassignOrder {
 impl ReassignOrder {
     /// The shutdown order: the run completed, actors may exit.
     pub fn done(epoch: u32) -> ReassignOrder {
-        ReassignOrder { epoch, stage: REASSIGN_DONE, resume: 0, ckpt: None }
+        ReassignOrder {
+            epoch,
+            stage: REASSIGN_DONE,
+            resume: 0,
+            kill_at: None,
+            ckpt: None,
+        }
     }
 
     /// True for the shutdown order.
@@ -112,14 +125,16 @@ impl ReassignOrder {
         self.stage == REASSIGN_DONE
     }
 
-    /// Serialize: epoch u32, stage u32, resume u64, has-ckpt u8,
-    /// blob len u64, blob bytes — all LE.
+    /// Serialize: epoch u32, stage u32, resume u64, has-kill u8,
+    /// kill step u64, has-ckpt u8, blob len u64, blob bytes — all LE.
     pub fn encode(&self) -> Vec<u8> {
         let blob = self.ckpt.as_deref().unwrap_or(&[]);
-        let mut out = Vec::with_capacity(25 + blob.len());
+        let mut out = Vec::with_capacity(34 + blob.len());
         out.extend_from_slice(&self.epoch.to_le_bytes());
         out.extend_from_slice(&self.stage.to_le_bytes());
         out.extend_from_slice(&self.resume.to_le_bytes());
+        out.push(u8::from(self.kill_at.is_some()));
+        out.extend_from_slice(&self.kill_at.unwrap_or(0).to_le_bytes());
         out.push(u8::from(self.ckpt.is_some()));
         out.extend_from_slice(&(blob.len() as u64).to_le_bytes());
         out.extend_from_slice(blob);
@@ -128,30 +143,34 @@ impl ReassignOrder {
 
     /// Parse an encoded order, validating the length envelope.
     pub fn decode(bytes: &[u8]) -> Result<ReassignOrder> {
-        if bytes.len() < 25 {
+        if bytes.len() < 34 {
             bail!(
-                "reassign order is {} B, shorter than the 25 B header",
+                "reassign order is {} B, shorter than the 34 B header",
                 bytes.len()
             );
         }
         let epoch = u32::from_le_bytes(bytes[0..4].try_into().expect("u32"));
         let stage = u32::from_le_bytes(bytes[4..8].try_into().expect("u32"));
         let resume = u64::from_le_bytes(bytes[8..16].try_into().expect("u64"));
-        let has_ckpt = bytes[16] == 1;
+        let has_kill = bytes[16] == 1;
+        let kill =
+            u64::from_le_bytes(bytes[17..25].try_into().expect("u64"));
+        let has_ckpt = bytes[25] == 1;
         let blob_len =
-            u64::from_le_bytes(bytes[17..25].try_into().expect("u64")) as usize;
-        if bytes.len() != 25 + blob_len {
+            u64::from_le_bytes(bytes[26..34].try_into().expect("u64")) as usize;
+        if bytes.len() != 34 + blob_len {
             bail!(
                 "reassign order declares a {blob_len} B checkpoint but \
                  carries {} trailing bytes",
-                bytes.len() - 25
+                bytes.len() - 34
             );
         }
         Ok(ReassignOrder {
             epoch,
             stage,
             resume,
-            ckpt: has_ckpt.then(|| bytes[25..].to_vec()),
+            kill_at: has_kill.then_some(kill),
+            ckpt: has_ckpt.then(|| bytes[34..].to_vec()),
         })
     }
 }
@@ -915,8 +934,16 @@ fn serve_elastic_epochs(
     let mut recoveries = 0usize;
     let mut resume_steps = Vec::new();
     let mut spares_used = 0usize;
+    // chaos kills already executed, keyed (stage, step). Kill
+    // scheduling lives HERE — in the leader — because actor processes
+    // exit when killed: whatever replaces them (a restart or a
+    // promoted spare) enrolls with no memory of which scripted kills
+    // already fired. The leader ships each epoch's kill in the
+    // reassignment order instead, so kill scripts work in any epoch.
+    let mut fired: HashSet<(usize, u64)> = HashSet::new();
 
     for epoch in 0..es.max_epochs {
+        let kill_at = kills_this_epoch(&es.chaos, p, &fired);
         let blobs: Vec<Option<Vec<u8>>> = if resume > 0 {
             shared
                 .lock()
@@ -935,6 +962,7 @@ fn serve_elastic_epochs(
                 epoch: epoch as u32,
                 stage: stage as u32,
                 resume,
+                kill_at: kill_at[stage],
                 ckpt: blobs[stage].clone(),
             };
             let mut c = actors[idx].lock().expect("ctl conn");
@@ -1026,6 +1054,13 @@ fn serve_elastic_epochs(
                     let idx = assignment[stage].expect("stage assigned");
                     if !dead_now.contains(&idx) {
                         continue;
+                    }
+                    // a killed actor *exits*, so an assigned actor
+                    // turning up dead while its stage had a scheduled
+                    // kill means that kill fired — retire it so the
+                    // replacement's epoch schedules the next one
+                    if let Some(k) = kill_at[stage] {
+                        fired.insert((stage, k));
                     }
                     // promote the first living spare
                     let replacement = loop {
@@ -1131,20 +1166,10 @@ fn serve_actor(
             )?)?)),
             None => None,
         };
-        // multi-process chaos honors first-epoch kills only: fired-kill
-        // bookkeeping lives in the supervisor's process in the
-        // in-process runtime, and a killed serve worker *exits* — its
-        // restart (or a spare) runs later epochs cleanly
-        let kill_at = if epoch == 0 {
-            es.chaos
-                .events
-                .iter()
-                .filter(|e| e.kind == ChurnKind::Leave && e.worker == stage)
-                .map(|e| e.step)
-                .min()
-        } else {
-            None
-        };
+        // scripted kills come from the leader's order: the leader owns
+        // the fired-kill bookkeeping (a replacement actor enrolling
+        // fresh can't know which kills already fired), so multi-process
+        // chaos honors kill scripts in ANY epoch, not just the first
         let ectx = ElasticCtx {
             resume_step: order.resume,
             ckpt: order.ckpt,
@@ -1152,7 +1177,7 @@ fn serve_actor(
             ckpt_codec: es.ckpt_codec,
             heartbeat_every: es.heartbeat_every,
             stale_ms: es.stale_ms,
-            kill_at,
+            kill_at: order.kill_at,
         };
         match run_stage_inner(
             spec,
@@ -1235,9 +1260,16 @@ mod tests {
                 epoch: 2,
                 stage: 3,
                 resume: 12,
+                kill_at: Some(37),
                 ckpt: Some(vec![1, 2, 3, 4, 5]),
             },
-            ReassignOrder { epoch: 0, stage: 1, resume: 0, ckpt: None },
+            ReassignOrder {
+                epoch: 0,
+                stage: 1,
+                resume: 0,
+                kill_at: None,
+                ckpt: None,
+            },
             ReassignOrder::done(4),
         ] {
             let back = ReassignOrder::decode(&order.encode()).unwrap();
@@ -1249,6 +1281,7 @@ mod tests {
             epoch: 1,
             stage: 2,
             resume: 6,
+            kill_at: None,
             ckpt: Some(vec![9; 8]),
         }
         .encode();

@@ -331,6 +331,34 @@ mod tests {
     }
 
     #[test]
+    fn bf16_codec_bytes_roundtrip() {
+        // the bf16 wires (tags 6/7) are first-class boundary codecs:
+        // their 2-byte-per-element payloads frame and parse unchanged
+        let payload = crate::compress::encode_dense_bf16(
+            &crate::tensor::Tensor::new(
+                vec![2, 3],
+                vec![1.5, -2.25, 0.0, 3.75e8, -1.0e-9, 42.0],
+            ),
+            Mode::RawBf16,
+        )
+        .payload;
+        for mode in [Mode::RawBf16, Mode::SubspaceBf16] {
+            let f = WireFrame::boundary(
+                FrameKind::Fwd,
+                mode,
+                11,
+                0,
+                payload.clone(),
+            );
+            let bytes = f.to_bytes();
+            assert_eq!(bytes[5], mode.wire_tag());
+            let g = WireFrame::read_from(&mut Cursor::new(&bytes)).unwrap();
+            assert_eq!(g, f);
+            assert_eq!(g.codec, Some(mode));
+        }
+    }
+
+    #[test]
     fn control_frames_carry_no_codec() {
         let f = WireFrame::control(FrameKind::StepEnd, 7, vec![0u8; 8]);
         let bytes = f.to_bytes();

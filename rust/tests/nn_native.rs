@@ -154,6 +154,8 @@ fn every_mode_trains_one_finite_step() {
         Mode::Quant,
         Mode::PowerLR,
         Mode::NoFixed,
+        Mode::RawBf16,
+        Mode::SubspaceBf16,
     ] {
         let mut pipe = pipe_for(mode, 21, 1, 0);
         let s = pipe.train_step(|r| c.train_batch(h.b, h.n, r)).unwrap();

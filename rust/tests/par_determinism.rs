@@ -146,10 +146,12 @@ fn sim_grid_csvs_identical_across_pool_sizes() {
 
 #[test]
 fn convergence_native_csvs_identical_across_pool_sizes() {
-    // the native autodiff backend trains real models inside pool cells:
-    // tape ops are serial and the matmul kernels are thread-count
-    // bit-stable, so the full training curves — not just summary rows —
-    // must be byte-identical at any pool width
+    // the native autodiff backend trains real models inside pool cells,
+    // and the tape itself now runs data-parallel (backward matmul rows
+    // split across a nested worker-kernel budget, DESIGN.md §13) — the
+    // kernels stay thread-count bit-stable, so the full training
+    // curves — not just summary rows — must be byte-identical at any
+    // pool width
     let (serial, parallel) =
         run_twice("convergence-native", None, "convergence_native");
     assert!(

@@ -518,6 +518,8 @@ fn prop_wire_frames_bit_transparent_for_every_codec() {
             Mode::Quant,
             Mode::PowerLR,
             Mode::NoFixed,
+            Mode::RawBf16,
+            Mode::SubspaceBf16,
         ] {
             let f = encode(&t, mode, ratio);
             let kind = if seed % 2 == 0 {

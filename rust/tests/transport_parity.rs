@@ -90,9 +90,15 @@ fn every_codec_is_transport_parity_clean() {
     // lossy codecs too: the wire moves the codec's exact bytes, so even
     // a lossy boundary is *deterministically* lossy — bitwise parity
     // holds for every mode, including PowerLR's sketch-RNG path
-    for mode in
-        [Mode::Raw, Mode::TopK, Mode::Quant, Mode::PowerLR, Mode::NoFixed]
-    {
+    for mode in [
+        Mode::Raw,
+        Mode::TopK,
+        Mode::Quant,
+        Mode::PowerLR,
+        Mode::NoFixed,
+        Mode::RawBf16,
+        Mode::SubspaceBf16,
+    ] {
         let s = spec(mode, 6, 4);
         let reference = single_process(&s);
         let rep = run_local(&s, TransportKind::Channel)
