@@ -30,10 +30,14 @@ use protomodels::memory;
 use protomodels::netsim::{LinkSpec, Topology};
 use protomodels::nn::{NativePipeline, Optim};
 use protomodels::rng::Rng;
-use protomodels::transport::{run_local, TransportKind, WorkerSpec};
+use protomodels::transport::{
+    launch, reference_dp_losses, run_local, Reduce, TrainSpec,
+    TransportKind, WorkerSpec,
+};
 
 const STEPS: usize = 200;
 const TCP_STEPS: usize = 40;
+const GRID_STEPS: usize = 6;
 const SEED: u64 = 5;
 
 fn spec(mode: Mode, steps: usize) -> WorkerSpec {
@@ -174,6 +178,36 @@ fn main() {
          total at {} steps)",
         tcp.frames, tcp.boundary_payload_bytes, TCP_STEPS
     );
+    // ---- R×P grid (DESIGN.md §14): 2 replicas × 4 stages on the
+    // channel backend with the ring all-reduce, launched through the
+    // unified TrainSpec/Topology API; the grid's mean loss curve must
+    // be bitwise the in-process replica reference (shared init, ring
+    // order adds, exact codec arithmetic on every gradient hop)
+    let grid = TrainSpec::builder(h.clone())
+        .mode(Mode::Subspace)
+        .steps(GRID_STEPS)
+        .microbatches(2)
+        .seed(SEED)
+        .lr(1e-2)
+        .warmup(6)
+        .grassmann(0)
+        .corpus(CorpusKind::Wiki, 200_000)
+        .replicas(2)
+        .dp_mode(Mode::Subspace)
+        .reduce(Reduce::Ring)
+        .build()
+        .expect("grid spec");
+    let want = reference_dp_losses(&grid).expect("replica reference");
+    let rep = launch(&grid.topology(TransportKind::Channel), &grid)
+        .expect("grid run");
+    assert_bitwise("ring grid", &want, &rep.losses);
+    assert!(rep.dp_payload_bytes > 0, "no gradient bytes crossed the mesh");
+    println!(
+        "grid:    2x{} ring grid, {} steps bitwise-identical to the \
+         in-process replica path ({} gradient payload B on the mesh)",
+        h.stages, GRID_STEPS, rep.dp_payload_bytes
+    );
+
     println!(
         "\nok: the pipeline trains over real framed transports with a \
          bitwise-identical loss curve and a {ratio:.1}x subspace wire \

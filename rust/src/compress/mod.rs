@@ -153,6 +153,38 @@ impl Mode {
             _ => return None,
         })
     }
+
+    /// Every mode, in wire-tag order — the one list the exhaustive
+    /// `FromStr`/`Display`/`wire_tag` round-trip properties sweep, so a
+    /// new variant that misses any of the three fails a test instead of
+    /// silently falling back to string matching.
+    pub const ALL: [Mode; 8] = [
+        Mode::Subspace,
+        Mode::Raw,
+        Mode::TopK,
+        Mode::Quant,
+        Mode::PowerLR,
+        Mode::NoFixed,
+        Mode::RawBf16,
+        Mode::SubspaceBf16,
+    ];
+}
+
+impl std::str::FromStr for Mode {
+    type Err = anyhow::Error;
+
+    /// The canonical parse: `"subspace".parse::<Mode>()` — same table
+    /// as [`Mode::parse`], exposed through the standard trait so call
+    /// sites compare parsed `Mode` values instead of matching strings.
+    fn from_str(s: &str) -> Result<Mode> {
+        Mode::parse(s)
+    }
+}
+
+impl std::fmt::Display for Mode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
 }
 
 /// Elements kept by top-k so (value,index) pairs hit the target byte
@@ -192,7 +224,10 @@ pub fn wire_bytes(mode: Mode, b: usize, n: usize, d: usize, k: usize, ratio: f64
 /// - `Subspace`/`NoFixed` — "U-only" gradients: each d-dim row reduced
 ///   to its k subspace coefficients (k/d of the elements, the DP analogue
 ///   of the boundary scheme; never exceeds `Raw` since k ≤ d),
-/// - `PowerLR` — low-rank factors sized to the target `ratio`.
+/// - `PowerLR` — low-rank factors sized to the target `ratio`,
+/// - `RawBf16`/`SubspaceBf16` — the base scheme's element count at
+///   2 B/element: gradient frames ship bf16 coefficients on the wire
+///   and accumulate in f32 after the exact widen (DESIGN.md §14).
 pub fn dp_wire_bytes(mode: Mode, elems: usize, d: usize, k: usize, ratio: f64) -> usize {
     match mode {
         Mode::Raw => elems * 4,
@@ -204,11 +239,8 @@ pub fn dp_wire_bytes(mode: Mode, elems: usize, d: usize, k: usize, ratio: f64) -
         Mode::PowerLR => {
             (((elems * 4) as f64 / ratio.max(1.0)).ceil() as usize).max(4) + 8
         }
-        // bf16 is a boundary-wire precision, not a gradient scheme: the
-        // DP all-reduce stays f32 under the base mode's accounting
-        Mode::RawBf16 | Mode::SubspaceBf16 => {
-            dp_wire_bytes(mode.base(), elems, d, k, ratio)
-        }
+        Mode::RawBf16 => elems * 2,
+        Mode::SubspaceBf16 => (elems * k + d.max(1) - 1) / d.max(1) * 2,
     }
 }
 
@@ -502,19 +534,14 @@ mod tests {
 
     #[test]
     fn mode_parse_roundtrip() {
-        for m in [
-            Mode::Subspace,
-            Mode::Raw,
-            Mode::TopK,
-            Mode::Quant,
-            Mode::PowerLR,
-            Mode::NoFixed,
-            Mode::RawBf16,
-            Mode::SubspaceBf16,
-        ] {
+        for m in Mode::ALL {
             assert_eq!(Mode::parse(m.as_str()).unwrap(), m);
+            // the FromStr/Display pair is the same table
+            assert_eq!(m.to_string().parse::<Mode>().unwrap(), m);
+            assert_eq!(m.to_string(), m.as_str());
         }
         assert!(Mode::parse("bogus").is_err());
+        assert!("bogus".parse::<Mode>().is_err());
     }
 
     #[test]
@@ -586,13 +613,19 @@ mod tests {
         assert!(!Mode::NoFixed.uses_fixed_embedding());
         assert!(Mode::RawBf16.bf16_wire() && Mode::SubspaceBf16.bf16_wire());
         assert!(!Mode::Raw.bf16_wire());
-        // DP gradients stay f32 under the base mode's accounting
+        // bf16 DP gradient frames ship half the base mode's bytes: the
+        // same element count at 2 B/element (PR 7's reserved headroom)
         let (elems, d, k) = (10_000usize, 64usize, 8usize);
         for m in [Mode::RawBf16, Mode::SubspaceBf16] {
             assert_eq!(
-                dp_wire_bytes(m, elems, d, k, 8.0),
+                dp_wire_bytes(m, elems, d, k, 8.0) * 2,
                 dp_wire_bytes(m.base(), elems, d, k, 8.0)
             );
         }
+        assert_eq!(dp_wire_bytes(Mode::RawBf16, elems, d, k, 8.0), elems * 2);
+        assert_eq!(
+            dp_wire_bytes(Mode::SubspaceBf16, elems, d, k, 8.0),
+            (elems * k + d - 1) / d * 2
+        );
     }
 }

@@ -325,7 +325,16 @@ impl Pipeline {
                 h.stages
             );
         }
-        if !cm.modes.iter().any(|m| m == cfg.mode.as_str()) {
+        // compare parsed Modes, not name strings: bf16 wire variants
+        // execute the artifacts of their f32 base mode, and a manifest
+        // typo surfaces as an unknown-mode entry instead of a silent
+        // mismatch
+        let base = cfg.mode.base();
+        let compiled = cm
+            .modes
+            .iter()
+            .any(|m| m.parse::<Mode>().is_ok_and(|m| m == base));
+        if !compiled {
             bail!(
                 "config {} was not AOT-compiled for mode {:?} (have {:?})",
                 cm.name,
@@ -382,14 +391,17 @@ impl Pipeline {
     }
 
     fn key(&self, name: &str) -> String {
-        format!("{}/{}", self.cfg.mode.as_str(), name)
+        // artifact entries exist under the f32 base mode's name; the
+        // bf16 variants change only the wire encoding
+        format!("{}/{}", self.cfg.mode.base().as_str(), name)
     }
 
     /// adamw entries only exist for subspace/raw: nofixed shares
     /// subspace's (same schema + constraint rules), lossy modes share raw's.
     fn opt_key(&self, kind: &str) -> String {
-        let mode = if self.compressed() { "subspace" } else { "raw" };
-        format!("{mode}/adamw_{kind}")
+        let mode =
+            if self.compressed() { Mode::Subspace } else { Mode::Raw };
+        format!("{}/adamw_{kind}", mode.as_str())
     }
 
     fn lr_now(&self) -> f32 {

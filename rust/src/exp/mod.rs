@@ -1460,6 +1460,125 @@ pub fn transport_report(opts: &ExpOpts) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// dp-real: ring vs gossip step wall on a real R×P grid with a straggler
+// ---------------------------------------------------------------------------
+
+/// Real data parallelism under a straggler (DESIGN.md §14): train the
+/// tiny preset on a 3×P worker grid over the channel backend, once with
+/// the ring all-reduce and once with gossip, while replica 1 sleeps an
+/// extra `straggle` seconds before every gradient exchange. The ring is
+/// a per-step barrier, so *every* replica's predicted step wall is
+/// `base + straggle`; gossip couples a healthy replica to the straggler
+/// only on the steps the seeded schedule pairs them, so its predicted
+/// wall is `base + straggle·frac(r)` with `frac` read off the exact
+/// deterministic [`crate::transport::gossip_partner`] schedule. `base`
+/// is the measured single-replica (R = 1) step wall of the identical
+/// spec. Emits `fig_dp_real.csv` (one row per reduce × replica,
+/// measured vs predicted); no thresholds are asserted (absolute
+/// wall-clock is machine-dependent), the CI smoke leg checks structure.
+pub fn dp_real(opts: &ExpOpts) -> Result<()> {
+    use crate::transport::{
+        gossip_partner, launch, Reduce, TrainSpec, TransportKind,
+    };
+
+    let steps = opts.steps_or(12, 6);
+    let replicas = 3usize;
+    let straggler = 1usize;
+    let straggle_s = 0.06f64;
+    let h = Hyper::tiny_native();
+    let mk_spec = |r: usize, reduce: Reduce| -> Result<TrainSpec> {
+        TrainSpec::builder(h.clone())
+            .mode(Mode::Subspace)
+            .steps(steps)
+            .microbatches(2)
+            .seed(opts.seed)
+            .lr(1e-2)
+            .warmup(3)
+            .grassmann(0)
+            .corpus(CorpusKind::Wiki, 60_000)
+            .replicas(r)
+            .dp_mode(Mode::Subspace)
+            .reduce(reduce)
+            .build()
+    };
+
+    // base: the same chain without a dp axis, measured in this process
+    let base_spec = mk_spec(1, Reduce::None)?;
+    let base_rep =
+        launch(&base_spec.topology(TransportKind::Channel), &base_spec)?;
+    let base = base_rep.mean_step_seconds();
+
+    let mut csv = CsvWriter::create(
+        opts.out_dir.join("fig_dp_real.csv"),
+        &[
+            "reduce",
+            "replica",
+            "role",
+            "steps",
+            "partner_frac",
+            "measured_step_s",
+            "predicted_step_s",
+            "measured_over_predicted",
+            "dp_payload_bytes",
+        ],
+    )?;
+    for reduce in [Reduce::Ring, Reduce::Gossip { degree: 1 }] {
+        let spec = mk_spec(replicas, reduce)?;
+        let mut topo = spec.topology(TransportKind::Channel);
+        topo.straggle = Some((straggler, straggle_s));
+        let rep = launch(&topo, &spec)?;
+        for r in 0..replicas {
+            // fraction of steps replica r waits on the straggler
+            let frac = match reduce {
+                Reduce::Ring => 1.0,
+                _ if r == straggler => 1.0,
+                _ => {
+                    let paired = (0..steps as u64)
+                        .filter(|&s| {
+                            gossip_partner(opts.seed, s, replicas, r)
+                                == Some(straggler)
+                        })
+                        .count();
+                    paired as f64 / steps as f64
+                }
+            };
+            let secs = &rep.replica_step_seconds[r];
+            let measured =
+                secs.iter().sum::<f64>() / secs.len().max(1) as f64;
+            let predicted = base + straggle_s * frac;
+            csv.row(&[
+                reduce.label().to_string(),
+                r.to_string(),
+                if r == straggler { "straggler" } else { "healthy" }
+                    .into(),
+                steps.to_string(),
+                format!("{frac:.3}"),
+                format!("{measured:.6}"),
+                format!("{predicted:.6}"),
+                format!("{:.3}", measured / predicted.max(1e-12)),
+                rep.dp_payload_bytes.to_string(),
+            ])?;
+        }
+        let healthy: Vec<f64> = (0..replicas)
+            .filter(|&r| r != straggler)
+            .map(|r| {
+                let s = &rep.replica_step_seconds[r];
+                s.iter().sum::<f64>() / s.len().max(1) as f64
+            })
+            .collect();
+        eprintln!(
+            "[dp-real] {}: healthy mean {:.4}s/step (base {base:.4}s, \
+             straggler +{straggle_s:.3}s, dp payload {} B)",
+            reduce.label(),
+            healthy.iter().sum::<f64>() / healthy.len() as f64,
+            rep.dp_payload_bytes,
+        );
+    }
+    csv.finish()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // dispatcher
 // ---------------------------------------------------------------------------
 
@@ -1486,6 +1605,7 @@ pub const ALL: &[&str] = &[
     "memory-workers",
     "error-accumulation",
     "transport-report",
+    "dp-real",
 ];
 
 /// Run one experiment driver by name (`"all"` runs the full suite).
@@ -1514,6 +1634,7 @@ pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
         "memory-workers" => memory_workers(opts),
         "error-accumulation" => error_accumulation(opts),
         "transport-report" => transport_report(opts),
+        "dp-real" => dp_real(opts),
         "all" => {
             for e in ALL {
                 eprintln!("=== exp {e} ===");

@@ -22,8 +22,8 @@ use protomodels::rng::Rng;
 use protomodels::sim::{simulate_swarm, ChurnSpec, ChurnTimeline, Schedule, SwarmSpec};
 use protomodels::timemodel::{SlowdownProfile, TimeModel};
 use protomodels::transport::{
-    self, ElasticSpec, FaultFamily, FaultPlan, FaultSchedule, LinkSide,
-    TransportKind, WorkerSpec,
+    self, ElasticOpts, ElasticSpec, FaultFamily, FaultPlan, FaultSchedule,
+    LinkSide, Reduce, TrainSpec, TransportKind, WorkerSpec,
 };
 
 fn usage() -> ! {
@@ -42,7 +42,8 @@ USAGE:
                       [--schedule gpipe|1f1b] [--sim]
                       [--replicas R] [--dp-mode subspace|raw|topk|quant]
                       [--dp-bandwidth 80mbps] [--hetero 1,1,2]
-                      [--transport channel|tcp]  (native backend only)
+                      [--transport channel|tcp] [--reduce ring|gossip]
+                      [--stages N] [--kill-replica R@S] (native backend only)
                       [--chaos kill:W@S,join:W@S] [--fault drop|delay|sever]
                       [--fault-seed N] [--ckpt-every N] [--ckpt-codec raw|coeff]
                       [--stale-ms 5000] [--hb-every 1] [--spares 1]
@@ -56,6 +57,7 @@ USAGE:
   protomodels sim     [--preset base|small] [--replicas 4] [--steps 5]
                       [--bandwidth 80mbps] [--dp-bandwidth 80mbps]
                       [--mode subspace] [--dp-mode subspace]
+                      [--reduce ring|gossip[:rounds]|none]
                       [--schedule gpipe|1f1b|interleaved[:chunks]]
                       [--microbatches 8] [--jitter 0.2] [--churn-rate 0.0]
                       [--downtime 0.5] [--hetero 1,1,2] [--seed 17]
@@ -86,7 +88,13 @@ timing through the same engine.
 distributed: one worker per pipeline stage, boundary tensors moving as
 framed codec payloads over real sockets (tcp, loopback) or in-process
 channels — the loss curve is bitwise identical to the single-process
-run (DESIGN.md §11). `serve --stage I` runs one stage as a standalone
+run (DESIGN.md §11). With --replicas R the native backend launches a
+real R×P worker grid (DESIGN.md §14): R pipeline chains plus a
+per-stage replica mesh carrying gradient frames priced by --dp-mode.
+--reduce ring all-reduces gradients synchronously (bitwise identical to
+the in-process replica path); --reduce gossip exchanges with one seeded
+peer per step, no global barrier, and survives scripted replica kills
+(--kill-replica R@S). `serve --stage I` runs one stage as a standalone
 TCP worker process: launch one per stage with identical flags (stage I
 listens on port-base+I; launch order is free) and stage 0 prints the
 curve.
@@ -155,6 +163,14 @@ fn native_spec(flags: &Flags) -> Result<WorkerSpec> {
             "--backend native knows the presets tiny/small/base, not {other:?}"
         ),
     };
+    let mut h = h;
+    // shrink/stretch the pipeline depth without a new preset (the CI
+    // dp-smoke grid trains 2 replicas x 2 stages)
+    let stages = flags.usize("stages", 0)?;
+    if stages > 0 {
+        h.stages = stages;
+        h.layers = h.blocks_per_stage * stages;
+    }
     let mode = Mode::parse(&flags.str("mode", "subspace"))?;
     let steps = flags.usize("steps", 200)?;
     let seed = flags.usize("seed", 17)? as u64;
@@ -188,32 +204,31 @@ fn native_spec(flags: &Flags) -> Result<WorkerSpec> {
     })
 }
 
-/// Build the elastic runtime's spec from CLI flags: the churn timeline
-/// (`--chaos kill:W@S,join:W@S`), an optional seeded link-fault family
-/// (`--fault drop|delay|sever`, applied to stage 1's left link during
-/// the first epoch), and the liveness/checkpoint cadences (DESIGN.md
-/// §12).
-fn elastic_spec(flags: &Flags, worker: WorkerSpec) -> Result<ElasticSpec> {
-    let mut es = ElasticSpec::new(worker);
+/// Parse the elastic/chaos flags into the [`ElasticOpts`] nested inside
+/// [`TrainSpec`]: the churn timeline (`--chaos kill:W@S,join:W@S`), an
+/// optional seeded link-fault family (`--fault drop|delay|sever`,
+/// applied to stage 1's left link during the first epoch), and the
+/// liveness/checkpoint cadences (DESIGN.md §12).
+fn elastic_opts(flags: &Flags, worker: &WorkerSpec) -> Result<ElasticOpts> {
+    let mut o = ElasticOpts::default();
     if let Some(script) = flags.opt("chaos") {
-        es.chaos = ChurnTimeline::parse(script)?;
+        o.chaos = ChurnTimeline::parse(script)?;
     }
-    es.ckpt_every =
-        flags.usize("ckpt-every", es.ckpt_every as usize)? as u64;
-    es.ckpt_codec = CkptCodec::parse(&flags.str("ckpt-codec", "raw"))?;
-    es.heartbeat_every = flags.usize("hb-every", 1)? as u64;
-    es.stale_ms = flags.usize("stale-ms", 5_000)? as u64;
-    es.spares = flags.usize("spares", 1)?;
-    es.max_epochs = flags.usize("max-epochs", 8)?;
+    // 0 = auto (steps/4); the CLI default keeps the auto cadence
+    o.ckpt_every = flags.usize("ckpt-every", 0)? as u64;
+    o.ckpt_codec = CkptCodec::parse(&flags.str("ckpt-codec", "raw"))?;
+    o.heartbeat_every = flags.usize("hb-every", 1)? as u64;
+    o.stale_ms = flags.usize("stale-ms", 5_000)? as u64;
+    o.spares = flags.usize("spares", 1)?;
+    o.max_epochs = flags.usize("max-epochs", 8)?;
     if let Some(fam) = flags.opt("fault") {
         let family = FaultFamily::parse(fam)?;
         let seed =
-            flags.usize("fault-seed", es.worker.cfg.seed as usize)? as u64;
+            flags.usize("fault-seed", worker.cfg.seed as usize)? as u64;
         // a middle link receives ~2M frames per step (Fwd + StepEnd in,
         // Bwd out is the other side), so this horizon spans the run
-        let horizon =
-            (es.worker.steps * es.worker.cfg.microbatches * 2) as u64;
-        es.faults = FaultPlan {
+        let horizon = (worker.steps * worker.cfg.microbatches * 2) as u64;
+        o.faults = FaultPlan {
             target_epoch: 0,
             entries: vec![(
                 1,
@@ -222,8 +237,41 @@ fn elastic_spec(flags: &Flags, worker: WorkerSpec) -> Result<ElasticSpec> {
             )],
         };
     }
+    Ok(o)
+}
+
+/// Assemble the legacy [`ElasticSpec`] (the multi-process `serve
+/// --elastic` entry still consumes it directly).
+fn elastic_spec(flags: &Flags, worker: WorkerSpec) -> Result<ElasticSpec> {
+    let opts = elastic_opts(flags, &worker)?;
+    let mut spec = TrainSpec::from_worker(worker);
+    spec.elastic = Some(opts);
+    spec.validate()?;
+    let es = spec.elastic_spec().expect("elastic opts present");
     es.validate()?;
     Ok(es)
+}
+
+/// Parse the full `train --backend native` flag surface into the
+/// canonical validated [`TrainSpec`]: the per-chain worker, the
+/// data-parallel axis (`--replicas`, `--reduce`, `--dp-mode`), and —
+/// when any chaos flag is present — the nested elastic options.
+fn native_train_spec(flags: &Flags) -> Result<TrainSpec> {
+    let worker = native_spec(flags)?;
+    let replicas = flags.usize("replicas", 1)?;
+    let reduce = Reduce::parse(&flags.str(
+        "reduce",
+        if replicas > 1 { "ring" } else { "none" },
+    ))?;
+    let dp_mode = Mode::parse(&flags.str("dp-mode", "raw"))?;
+    let elastic = (flags.opt("chaos").is_some()
+        || flags.opt("fault").is_some()
+        || flags.switch("elastic"))
+    .then(|| elastic_opts(flags, &worker))
+    .transpose()?;
+    let spec = TrainSpec { worker, replicas, dp_mode, reduce, elastic };
+    spec.validate()?;
+    Ok(spec)
 }
 
 /// `train --backend native --chaos/--fault`: the elastic distributed
@@ -233,11 +281,11 @@ fn elastic_spec(flags: &Flags, worker: WorkerSpec) -> Result<ElasticSpec> {
 /// complete checkpoint boundary (spares absorb permanent leaves).
 fn train_native_elastic(
     flags: &Flags,
-    spec: WorkerSpec,
+    spec: TrainSpec,
     kind: TransportKind,
 ) -> Result<()> {
     let config = flags.str("config", "tiny");
-    let es = elastic_spec(flags, spec)?;
+    let es = spec.elastic_spec().expect("elastic opts present");
     let steps = es.worker.steps;
     let tokens_per_step =
         es.worker.cfg.microbatches * es.worker.h.b * es.worker.h.n;
@@ -253,7 +301,8 @@ fn train_native_elastic(
         es.spares,
         es.chaos.to_script(),
     );
-    let report = transport::run_elastic(&es, kind)?;
+    let launched = transport::launch(&spec.topology(kind), &spec)?;
+    let report = *launched.elastic.expect("elastic runs report detail");
     let label = flags.str(
         "label",
         &format!(
@@ -306,32 +355,45 @@ fn train_native_elastic(
     Ok(())
 }
 
-/// `train --backend native --transport channel|tcp`: the distributed
-/// pipeline — one worker per stage inside this process, joined by real
-/// framed transports (DESIGN.md §11). The loss curve is bitwise
-/// identical to the single-process native run with the same flags.
-fn train_native_distributed(
+/// `train --backend native --transport channel|tcp` (and/or
+/// `--replicas R`): the distributed pipeline — R×P workers inside this
+/// process, joined by real framed transports (DESIGN.md §11/§14). With
+/// `--reduce ring` the grid's loss curve is bitwise identical to the
+/// single-process replica path with the same flags.
+fn train_native_grid(
     flags: &Flags,
-    spec: WorkerSpec,
+    spec: TrainSpec,
     kind: TransportKind,
 ) -> Result<()> {
     let config = flags.str("config", "tiny");
-    let steps = spec.steps;
-    let tokens_per_step = spec.cfg.microbatches * spec.h.b * spec.h.n;
+    let steps = spec.worker.steps;
+    let w = &spec.worker;
+    let tokens_per_step =
+        w.cfg.microbatches * w.h.b * w.h.n * spec.replicas;
+    let mut topo = spec.topology(kind);
+    if let Some(kill) = flags.opt("kill-replica") {
+        let (r, s) = kill.split_once('@').ok_or_else(|| {
+            anyhow::anyhow!("--kill-replica wants R@S, got {kill:?}")
+        })?;
+        topo.chaos_kill = Some((r.parse()?, s.parse()?));
+    }
     println!(
-        "distributed native train: {config} x{} stages over {} transport, \
-         {} steps, frame payload {} B",
-        spec.h.stages,
+        "distributed native train: {config} {}x{} grid over {} \
+         transport, reduce {}, dp-mode {}, {} steps, frame payload {} B",
+        spec.replicas,
+        w.h.stages,
         kind.as_str(),
+        spec.reduce.label(),
+        spec.dp_mode.as_str(),
         steps,
-        spec.cfg.boundary_bytes(&spec.h),
+        w.cfg.boundary_bytes(&w.h),
     );
-    let report = transport::run_local(&spec, kind)?;
+    let report = transport::launch(&topo, &spec)?;
     let label = flags.str(
         "label",
         &format!(
             "native_dist_{config}_{}_{}",
-            spec.cfg.mode.as_str(),
+            w.cfg.mode.as_str(),
             kind.as_str()
         ),
     );
@@ -355,13 +417,17 @@ fn train_native_distributed(
         }
     }
     println!(
-        "final ({} transport): loss {:.4}  mean step {:.4}s  \
-         {} boundary frames, {} payload B, {} wire B",
+        "final ({} transport, {}/{} replicas finished): loss {:.4}  \
+         mean step {:.4}s  {} frames, {} boundary payload B, \
+         {} dp payload B, {} wire B",
         kind.as_str(),
+        report.survivors,
+        report.replicas,
         report.losses.last().copied().unwrap_or(f64::NAN),
         report.mean_step_seconds(),
         report.frames,
         report.boundary_payload_bytes,
+        report.dp_payload_bytes,
         report.wire_bytes,
     );
     log.finish()?;
@@ -374,29 +440,23 @@ fn train_native_distributed(
 fn train_native(flags: &Flags) -> Result<()> {
     use protomodels::nn::NativePipeline;
 
-    if flags.usize("replicas", 1)? > 1 {
-        bail!("--backend native trains a single pipeline (no --replicas yet)");
-    }
-    let spec = native_spec(flags)?;
-    let elastic = flags.opt("chaos").is_some()
-        || flags.opt("fault").is_some()
-        || flags.switch("elastic");
-    if elastic {
-        let kind = flags
-            .opt("transport")
-            .map(TransportKind::parse)
-            .transpose()?
-            .unwrap_or(TransportKind::Channel);
+    let spec = native_train_spec(flags)?;
+    let kind = flags
+        .opt("transport")
+        .map(TransportKind::parse)
+        .transpose()?
+        .unwrap_or(TransportKind::Channel);
+    if spec.elastic.is_some() {
         return train_native_elastic(flags, spec, kind);
     }
-    if let Some(t) = flags.opt("transport") {
-        return train_native_distributed(flags, spec, TransportKind::parse(t)?);
+    if spec.replicas > 1 || flags.opt("transport").is_some() {
+        return train_native_grid(flags, spec, kind);
     }
     let config = flags.str("config", "tiny");
-    let WorkerSpec { h, cfg: pcfg, optim, steps, .. } = spec.clone();
+    let WorkerSpec { h, cfg: pcfg, optim, steps, .. } = spec.worker.clone();
     let mode = pcfg.mode;
     let seed = pcfg.seed;
-    let corpus = spec.corpus();
+    let corpus = spec.worker.corpus();
     let mut rng = Rng::new(seed);
     let topo = make_topo(flags, h.stages, &mut rng)?;
     // drive through the coordinator's backend facade — the same surface
@@ -620,6 +680,7 @@ fn cmd_sim(flags: &Flags) -> Result<()> {
     )?;
     spec.mode = Mode::parse(&flags.str("mode", "subspace"))?;
     spec.dp_mode = Mode::parse(&flags.str("dp-mode", "subspace"))?;
+    spec.reduce = Reduce::parse(&flags.str("reduce", "ring"))?;
     spec.schedule = Schedule::parse(&flags.str("schedule", "gpipe"))
         .ok_or_else(|| anyhow::anyhow!("bad --schedule"))?;
     spec.microbatches = flags.usize("microbatches", 8)?;
@@ -1303,6 +1364,48 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
             )
             .expect("tcp distributed step");
             black_box(rep.losses.len());
+        });
+        transport_entries
+            .push(BenchEntry { result: r, items_per_iter: None });
+
+        // the dp gradient-reduce primitives, in process: the exact
+        // codec arithmetic every grid hop runs (transport/dp.rs),
+        // minus sockets — stable enough for a wall-time ceiling
+        let n = 16_384usize;
+        let template: Vec<Vec<f32>> =
+            (0..4).map(|_| rng.normal_f32_vec(n, 1.0)).collect();
+        for mode in [Mode::Raw, Mode::Subspace] {
+            let name =
+                format!("dp_allreduce_ring_{}_r4_16k", mode.as_str());
+            let r = bench.run(&name, || {
+                let mut flats = black_box(template.clone());
+                protomodels::transport::ring_allreduce_local(
+                    &mut flats, mode, h.d, h.k, h.ratio,
+                )
+                .expect("ring allreduce");
+                black_box(flats[0][0]);
+            });
+            transport_entries
+                .push(BenchEntry { result: r, items_per_iter: None });
+        }
+        let (ga, gb) = (template[0].clone(), template[1].clone());
+        let r = bench.run("dp_allreduce_gossip_subspace_pair_16k", || {
+            use protomodels::transport::dp::{decode_grad, encode_grad};
+            let ea =
+                encode_grad(Mode::Subspace, black_box(&ga), h.d, h.k, h.ratio)
+                    .expect("encode");
+            let eb =
+                encode_grad(Mode::Subspace, black_box(&gb), h.d, h.k, h.ratio)
+                    .expect("encode");
+            let da =
+                decode_grad(Mode::Subspace, &ea, ga.len(), h.d, h.k, h.ratio)
+                    .expect("decode");
+            let db =
+                decode_grad(Mode::Subspace, &eb, gb.len(), h.d, h.k, h.ratio)
+                    .expect("decode");
+            let avg: f32 =
+                da.iter().zip(&db).map(|(x, y)| 0.5 * (x + y)).sum();
+            black_box(avg);
         });
         transport_entries
             .push(BenchEntry { result: r, items_per_iter: None });

@@ -259,7 +259,10 @@ pub fn checkpoint_payload_bytes(
             && compressed
             && crate::stage::constrained(&name)
         {
-            dp_wire_bytes(mode, numel, h.d, h.k, h.ratio)
+            // checkpoints serialize f32 coefficient rows (ckpt.rs), so
+            // they price under the base mode: bf16 halving applies to
+            // gradient frames on the wire, never to recovery state
+            dp_wire_bytes(mode.base(), numel, h.d, h.k, h.ratio)
         } else {
             numel * 4
         };
@@ -277,6 +280,50 @@ pub fn checkpoint_payload_bytes(
 /// once per `--hb-every` steps per worker.
 pub fn heartbeat_payload_bytes() -> usize {
     16
+}
+
+/// Wire bytes ALL replicas of one stage send per training step to
+/// ring-all-reduce an `elems`-element fused weight-gradient accumulator
+/// across `replicas` workers (DESIGN.md §14): 2(R−1) phases
+/// (reduce-scatter then all-gather), each shipping every one of the R
+/// balanced chunks exactly once across the ring, framed `GradRing`
+/// payloads priced by [`crate::compress::dp_wire_bytes`] plus the frame
+/// header. R ≤ 1 sends nothing. `transport::dp` asserts its measured
+/// frame bytes against exactly this.
+pub fn dp_ring_step_wire_bytes(
+    elems: usize,
+    replicas: usize,
+    mode: crate::compress::Mode,
+    d: usize,
+    k: usize,
+    ratio: f64,
+) -> usize {
+    if replicas < 2 {
+        return 0;
+    }
+    let per_round: usize = (0..replicas)
+        .map(|i| {
+            let c = elems / replicas + usize::from(i < elems % replicas);
+            crate::transport::HEADER_LEN
+                + crate::compress::dp_wire_bytes(mode, c, d, k, ratio)
+        })
+        .sum();
+    2 * (replicas - 1) * per_round
+}
+
+/// Wire bytes ONE replica of one stage sends in a gossip exchange: the
+/// whole `elems`-element gradient as a single framed `GradGossip`
+/// payload (each partner sends one frame and receives one — no chunking,
+/// no barrier; unpaired replicas send nothing that step).
+pub fn dp_gossip_exchange_wire_bytes(
+    elems: usize,
+    mode: crate::compress::Mode,
+    d: usize,
+    k: usize,
+    ratio: f64,
+) -> usize {
+    crate::transport::HEADER_LEN
+        + crate::compress::dp_wire_bytes(mode, elems, d, k, ratio)
 }
 
 /// Compute one Table-3/4 row at the paper's 2B dimensions.
@@ -422,6 +469,34 @@ mod tests {
             "subspace peak {sub} vs raw {raw}: boundary overhead must be \
              marginal"
         );
+    }
+
+    #[test]
+    fn dp_grad_frame_pricing() {
+        use crate::compress::{dp_wire_bytes, Mode};
+        let hdr = crate::transport::HEADER_LEN;
+        // balanced split, every chunk once per phase, 2(R−1) phases
+        let (elems, r, d, k, ratio) = (1200usize, 3usize, 32, 4, 8.0);
+        let want = 2 * (r - 1)
+            * (hdr * r + 3 * dp_wire_bytes(Mode::Raw, 400, d, k, ratio));
+        assert_eq!(
+            dp_ring_step_wire_bytes(elems, r, Mode::Raw, d, k, ratio),
+            want
+        );
+        // a lone replica reduces nothing
+        assert_eq!(
+            dp_ring_step_wire_bytes(elems, 1, Mode::Raw, d, k, ratio),
+            0
+        );
+        // uneven split still prices every element exactly once per round
+        let uneven =
+            dp_ring_step_wire_bytes(1201, 2, Mode::Raw, d, k, ratio);
+        assert_eq!(uneven, 2 * (hdr * 2 + 601 * 4 + 600 * 4));
+        // bf16 gossip frames halve the raw payload
+        let g32 = dp_gossip_exchange_wire_bytes(elems, Mode::Raw, d, k, ratio);
+        let g16 =
+            dp_gossip_exchange_wire_bytes(elems, Mode::RawBf16, d, k, ratio);
+        assert_eq!(g32 - hdr, 2 * (g16 - hdr));
     }
 
     #[test]

@@ -337,6 +337,33 @@ impl ReplicaRing {
         total
     }
 
+    /// One seeded gossip round over the ring's members: `pairs` are
+    /// disjoint `(a, b)` member pairs; each member pushes the full
+    /// `bytes` payload to its partner over its own directed link, all
+    /// pairs concurrently. The round completes when the slowest
+    /// sampled exchange finishes — there is no global barrier, so an
+    /// idle (unpaired) member costs nothing. Returns simulated seconds
+    /// (0 with no pairs).
+    pub fn gossip_among(
+        &mut self,
+        pairs: &[(usize, usize)],
+        bytes: usize,
+        lat_jitter_frac: f64,
+    ) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        let mut slowest = 0.0f64;
+        for &(a, b) in pairs {
+            for m in [a, b] {
+                let (ser, lat) =
+                    self.links[m].sample_jittered(bytes, lat_jitter_frac);
+                slowest = slowest.max(ser + lat);
+            }
+        }
+        slowest
+    }
+
     /// Jitter-free expected seconds for one all-reduce of `bytes`.
     pub fn expected_all_reduce(&self, bytes: usize) -> f64 {
         let r = self.replicas();

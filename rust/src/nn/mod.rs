@@ -33,6 +33,6 @@ pub mod tape;
 pub use optim::Optim;
 pub use pipeline::{
     encode_boundary, grassmann_step_u, reproject_stage, BoundaryDir,
-    NativePipeline,
+    NativePipeline, PendingStep,
 };
 pub use tape::{AttnDims, Tape, Var};

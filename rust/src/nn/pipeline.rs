@@ -142,6 +142,25 @@ pub fn reproject_stage(st: &mut StageState, u: &Tensor) {
     }
 }
 
+/// The state suspended between the two halves of a training step —
+/// produced by [`NativePipeline::forward_backward`], consumed by
+/// [`NativePipeline::apply_update`]. `grad_acc` is the only field a
+/// caller mutates: the DP drivers (in-process reference and wire grid
+/// alike) all-reduce it across replicas at this seam, so the optimizer
+/// sees replica-averaged gradients exactly where a fused single-process
+/// run would (DESIGN.md §14).
+pub struct PendingStep {
+    /// per-stage parameter gradients, already averaged over
+    /// microbatches (the 1/M scale is applied)
+    pub grad_acc: Vec<Vec<Tensor>>,
+    /// f64 sum of this step's microbatch losses (divide by M for the
+    /// step's mean loss)
+    pub loss_sum: f64,
+    costs: StepCosts,
+    wire: u64,
+    t_host: Instant,
+}
+
 /// A natively-trained pipeline: P stage subgraphs over a netsim
 /// [`Topology`], stepped entirely in-process.
 pub struct NativePipeline {
@@ -355,8 +374,25 @@ impl NativePipeline {
         }
     }
 
-    /// One full training step over `cfg.microbatches` sampled batches.
-    pub fn train_step<F>(&mut self, mut sampler: F) -> Result<StepStats>
+    /// One full training step over `cfg.microbatches` sampled batches —
+    /// [`forward_backward`](Self::forward_backward) then
+    /// [`apply_update`](Self::apply_update), with nothing in between.
+    pub fn train_step<F>(&mut self, sampler: F) -> Result<StepStats>
+    where
+        F: FnMut(&mut Rng) -> (IntTensor, IntTensor),
+    {
+        let pending = self.forward_backward(sampler)?;
+        self.apply_update(pending)
+    }
+
+    /// The forward/backward half of one training step: run every
+    /// microbatch's waves, fuse weight gradients, and return the
+    /// per-stage accumulators already averaged over microbatches (the
+    /// 1/M scale applied). This is the data-parallel seam: a DP driver
+    /// reduces `PendingStep::grad_acc` across replicas before handing it
+    /// to [`apply_update`](Self::apply_update); calling the two halves
+    /// back-to-back is bitwise [`train_step`](Self::train_step).
+    pub fn forward_backward<F>(&mut self, mut sampler: F) -> Result<PendingStep>
     where
         F: FnMut(&mut Rng) -> (IntTensor, IntTensor),
     {
@@ -530,24 +566,35 @@ impl NativePipeline {
             }
         }
 
-        // ---- average grads, apply optimizer per stage
+        // ---- average grads over microbatches (the 1/M scale)
         let scale = 1.0 / m_count as f32;
-        if self.cfg.record_grads {
-            let mut snap = grad_acc.clone();
-            for st in snap.iter_mut() {
-                for g in st.iter_mut() {
-                    g.scale(scale);
-                }
+        for st_grads in grad_acc.iter_mut() {
+            for g in st_grads.iter_mut() {
+                g.scale(scale);
             }
-            self.last_grads = Some(snap);
         }
+        if self.cfg.record_grads {
+            self.last_grads = Some(grad_acc.clone());
+        }
+        Ok(PendingStep { grad_acc, loss_sum, costs, wire, t_host })
+    }
+
+    /// The optimizer half of one training step: step every stage with
+    /// the (possibly replica-reduced) gradients, run Grassmann subspace
+    /// maintenance at its cadence, and settle the step's makespan and
+    /// clocks. Consumes the [`PendingStep`] its
+    /// [`forward_backward`](Self::forward_backward) produced.
+    pub fn apply_update(&mut self, pending: PendingStep) -> Result<StepStats> {
+        let PendingStep { grad_acc, loss_sum, mut costs, wire, t_host } =
+            pending;
+        let h = self.h.clone();
+        let (p, m_count) = (h.stages, self.cfg.microbatches);
+        let compressed = self.compressed();
+        let tm = self.cfg.time_model;
         let lr = self.lr_now();
         let t_opt = (self.step + 1) as f32;
         let u = self.global.u.clone();
         for s in 0..p {
-            for g in grad_acc[s].iter_mut() {
-                g.scale(scale);
-            }
             let t0 = Instant::now();
             step_stage(
                 &mut self.stages[s],

@@ -51,6 +51,7 @@ use crate::sim::step::{simulate_step_spec, Schedule, StepSpec};
 use crate::timemodel::{
     stage_param_count, stage_seconds, Phase, SlowdownProfile, TimeModel,
 };
+use crate::transport::{gossip_pairs, Reduce};
 
 /// What kind of membership change a scripted churn event applies.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -242,6 +243,12 @@ pub struct SwarmSpec {
     pub mode: Mode,
     /// weight-gradient all-reduce + rejoin-sync pricing mode
     pub dp_mode: Mode,
+    /// cross-replica reduce the engine simulates: the churn-re-routed
+    /// ring (default), seeded gossip rounds (`Gossip { degree }` runs
+    /// `degree` pairing rounds per stage exchange — degrees > 1 live
+    /// here in the simulator; real grids pin degree = 1), or `None`
+    /// (pipelines only, no gradient exchange)
+    pub reduce: Reduce,
     /// number of pipeline replicas R
     pub replicas: usize,
     /// pipeline schedule executed by the event engine
@@ -276,6 +283,7 @@ impl SwarmSpec {
             microbatches: 8,
             mode: Mode::Subspace,
             dp_mode: Mode::Subspace,
+            reduce: Reduce::Ring,
             replicas,
             schedule: Schedule::Gpipe,
             link: LinkSpec::internet(bw_bps),
@@ -328,6 +336,11 @@ impl SwarmSpec {
         }
         if self.steps == 0 {
             bail!("need >= 1 step");
+        }
+        if let Reduce::Gossip { degree } = self.reduce {
+            if degree == 0 {
+                bail!("gossip needs >= 1 round per exchange");
+            }
         }
         SwarmSpec::validate_link(&self.link, "pipeline link")?;
         SwarmSpec::validate_link(&self.ring_link, "ring link")?;
@@ -802,6 +815,11 @@ impl<'a> Swarm<'a> {
         let mut live: Vec<usize> = members.clone();
         let mut left_at: Vec<(usize, f64)> = Vec::new();
         let mut done = vec![false; p];
+        if matches!(spec.reduce, Reduce::None) {
+            // pipelines only: no gradient exchange to schedule
+            done.fill(true);
+        }
+        let step_idx = self.report.step_seconds.len() as u64;
         let mut ring_free = barrier;
         let mut reduced_any = false;
         let ready_of = |live: &[usize], ms: &[(usize, Makespan)], s: usize| {
@@ -843,11 +861,40 @@ impl<'a> Swarm<'a> {
                     continue;
                 }
             }
-            let dur = self.ring.all_reduce_among(
-                &live,
-                payloads[s],
-                spec.lat_jitter_frac,
-            );
+            let dur = match spec.reduce {
+                Reduce::Gossip { degree } => {
+                    // seeded pairing rounds over the full replica set
+                    // (the wire schedule: dead members drop out of a
+                    // pair, never out of the shuffle), filtered to the
+                    // live pairs — same `gossip_pairs` stream the real
+                    // grid draws, so degree = 1 round g = 0 matches the
+                    // transport schedule exactly
+                    let mut total = 0.0;
+                    for g in 0..degree as u64 {
+                        let pairs: Vec<(usize, usize)> = gossip_pairs(
+                            spec.seed,
+                            step_idx * degree as u64 + g,
+                            spec.replicas,
+                        )
+                        .into_iter()
+                        .filter(|&(a, b)| {
+                            live.contains(&a) && live.contains(&b)
+                        })
+                        .collect();
+                        total += self.ring.gossip_among(
+                            &pairs,
+                            payloads[s],
+                            spec.lat_jitter_frac,
+                        );
+                    }
+                    total
+                }
+                _ => self.ring.all_reduce_among(
+                    &live,
+                    payloads[s],
+                    spec.lat_jitter_frac,
+                ),
+            };
             // a leave landing mid-all-reduce aborts it: the elapsed
             // rounds are wasted and the stage restarts on the
             // re-routed (smaller) ring
@@ -982,6 +1029,35 @@ mod tests {
         s.link = quiet(bw_mbps);
         s.ring_link = quiet(bw_mbps);
         s
+    }
+
+    #[test]
+    fn gossip_reduce_moves_fewer_dp_bytes_than_the_ring() {
+        let mut ring = quiet_spec(4, 80.0);
+        ring.steps = 3;
+        let mut gossip = ring.clone();
+        gossip.reduce = Reduce::Gossip { degree: 1 };
+        let a = simulate_swarm(&ring).unwrap();
+        let b = simulate_swarm(&gossip).unwrap();
+        // R = 4 ring: 4 links × 2·3 rounds × ⌈payload/4⌉ ≈ 6·payload
+        // per stage; one gossip round: 2 pairs × 2 dirs × payload =
+        // 4·payload — gossip strictly cheaper on the wire
+        assert!(b.dp_bytes > 0);
+        assert!(b.dp_bytes < a.dp_bytes, "{} vs {}", b.dp_bytes, a.dp_bytes);
+        // R = 4 always shuffles into 2 pairs, so wire bytes scale
+        // linearly in the gossip degree
+        let mut twice = ring.clone();
+        twice.reduce = Reduce::Gossip { degree: 2 };
+        let c = simulate_swarm(&twice).unwrap();
+        assert_eq!(c.dp_bytes, 2 * b.dp_bytes);
+        // pipelines are untouched by the reduce choice
+        assert_eq!(a.min_active, b.min_active);
+        // and `none` schedules no exchange at all
+        let mut none = ring.clone();
+        none.reduce = Reduce::None;
+        let d = simulate_swarm(&none).unwrap();
+        assert_eq!(d.dp_bytes, 0);
+        assert!(d.allreduce_busy == 0.0);
     }
 
     #[test]

@@ -57,6 +57,7 @@ use crate::sim::Schedule;
 use crate::stage::{GlobalState, StageState};
 use crate::tensor::Tensor;
 
+use super::dp::{dp_reduce_stage, DpCtx};
 use super::elastic::{heartbeat_payload, ElasticCtx};
 use super::frame::{FrameKind, WireFrame};
 use super::{channel_pair, TcpTransport, Transport};
@@ -203,6 +204,8 @@ pub struct WorkerReport {
     pub wire_bytes: u64,
     /// frames this worker sent
     pub frames_sent: u64,
+    /// gradient-frame payload bytes this worker sent on the dp mesh
+    pub dp_payload_bytes: u64,
 }
 
 /// Aggregate result of a distributed run.
@@ -222,6 +225,8 @@ pub struct DistReport {
     /// payload bytes of one boundary frame — asserted equal to
     /// [`crate::compress::wire_bytes`] on every frame received
     pub frame_payload_bytes: usize,
+    /// gradient-frame payload bytes across the dp mesh (0 for R = 1)
+    pub dp_payload_bytes: u64,
 }
 
 impl DistReport {
@@ -305,7 +310,7 @@ impl Links {
 /// elastic runtime), the wait is bounded: heartbeat frames refresh the
 /// deadline, and total silence past it surfaces as a departure — a hung
 /// or vanished peer can never block a worker forever (DESIGN.md §12).
-fn recv_expect(
+pub(crate) fn recv_expect(
     conn: &mut dyn Transport,
     kind: FrameKind,
     step: u64,
@@ -439,7 +444,7 @@ pub fn run_stage(
     left: Option<Box<dyn Transport>>,
     right: Option<Box<dyn Transport>>,
 ) -> Result<WorkerReport> {
-    run_stage_inner(spec, stage, left, right, None, None)
+    run_stage_inner(spec, stage, left, right, None, None, None)
 }
 
 /// [`run_stage`] plus the elastic hooks (DESIGN.md §12): a control link
@@ -456,6 +461,7 @@ pub(crate) fn run_stage_inner(
     right: Option<Box<dyn Transport>>,
     mut ctl: Option<&mut dyn Transport>,
     ectx: Option<&ElasticCtx>,
+    mut dp: Option<DpCtx>,
 ) -> Result<WorkerReport> {
     spec.validate()?;
     let h = spec.h.clone();
@@ -472,8 +478,13 @@ pub(crate) fn run_stage_inner(
         ectx.map(|e| Duration::from_millis(e.stale_ms.max(1)));
     let clock0 = Instant::now();
 
-    // ---- handshake: exchange config digests on every link
-    let digest = spec.digest();
+    // ---- handshake: exchange config digests on every link. In a
+    // replica grid the dp context carries the grid-wide PMCFG2 digest
+    // (the TrainSpec digest), which wraps this worker's PMCFG1 digest —
+    // chain and mesh links then all agree on the full run description.
+    let digest = dp
+        .as_ref()
+        .map_or_else(|| spec.digest(), |d| d.digest.clone());
     for (conn, name) in [
         (links.left.as_deref_mut(), "left"),
         (links.right.as_deref_mut(), "right"),
@@ -494,6 +505,35 @@ pub(crate) fn run_stage_inner(
                 hello.payload.len(),
                 digest.len()
             );
+        }
+    }
+    if let Some(dp) = dp.as_mut() {
+        for peer in 0..dp.replicas {
+            let Some(conn) = dp.links[peer].as_deref_mut() else {
+                continue;
+            };
+            conn.send(&WireFrame::control(
+                FrameKind::Hello,
+                0,
+                digest.clone(),
+            ))?;
+            let hello = recv_expect(
+                conn,
+                FrameKind::Hello,
+                0,
+                None,
+                stage,
+                "replica",
+                None,
+            )?;
+            if hello.payload != digest {
+                bail!(
+                    "replica {} stage {stage}: grid digest mismatch \
+                     with replica {peer} — every worker must be \
+                     launched from the identical TrainSpec",
+                    dp.replica
+                );
+            }
         }
     }
 
@@ -517,6 +557,13 @@ pub(crate) fn run_stage_inner(
     }
     let mut st = my_stage.expect("own stage initialized");
     let mut global = global;
+    if let Some(dp) = dp.as_ref() {
+        // replica data sharding: after the shared init replay, continue
+        // from this replica's shard seed — the exact
+        // `NativePipeline::reseed_data` transformation, so grid and
+        // in-process replicas draw identical batch streams
+        rng = Rng::new(dp.shard_seed ^ 0xDA7A_5EED);
+    }
     let pe = sinusoidal_pe(h.n, h.d);
     let corpus = spec.corpus();
     let compressed = cfg.compressed();
@@ -585,6 +632,18 @@ pub(crate) fn run_stage_inner(
     let mut frames_sent = 0u64;
 
     for step in resume..spec.steps as u64 {
+        if let Some(dp) = dp.as_ref() {
+            if dp.kill_at == Some(step) {
+                // scripted grid churn: every stage of this replica
+                // leaves abruptly; gossip survivors detect the
+                // departure at their next exchange and keep training
+                bail!(
+                    "chaos kill: replica {} stage {stage} leaves the \
+                     grid at step {step} (scripted gossip churn)",
+                    dp.replica
+                );
+            }
+        }
         // ---- elastic step preamble: scripted kill, then heartbeat
         if let Some(e) = ectx {
             if e.kill_at == Some(step) {
@@ -823,6 +882,13 @@ pub(crate) fn run_stage_inner(
         for g in grad_acc.iter_mut() {
             g.scale(scale);
         }
+        // ---- data-parallel axis: reduce this stage's averaged
+        // gradients across the replica mesh before the optimizer sees
+        // them (ring: exact mean of all replicas; gossip: pairwise
+        // average with the step's scheduled peer)
+        if let Some(dp) = dp.as_mut() {
+            dp_reduce_stage(dp, &mut grad_acc, &h, step, stage)?;
+        }
         let lr = cfg.lr_at(step);
         let u_now = global.u.clone();
         step_stage(
@@ -946,8 +1012,14 @@ pub(crate) fn run_stage_inner(
         let _ = conn.send(&bye);
     }
 
-    let wire_bytes = links.left.as_deref().map_or(0, |c| c.bytes_sent())
+    let mut wire_bytes = links.left.as_deref().map_or(0, |c| c.bytes_sent())
         + links.right.as_deref().map_or(0, |c| c.bytes_sent());
+    let mut dp_payload_bytes = 0u64;
+    if let Some(dp) = dp.as_ref() {
+        wire_bytes += dp.link_bytes_sent();
+        frames_sent += dp.dp_frames;
+        dp_payload_bytes = dp.dp_payload_bytes;
+    }
     Ok(WorkerReport {
         stage,
         losses,
@@ -955,6 +1027,7 @@ pub(crate) fn run_stage_inner(
         boundary_payload_bytes: boundary_payload,
         wire_bytes,
         frames_sent,
+        dp_payload_bytes,
     })
 }
 
@@ -1007,49 +1080,18 @@ pub(crate) fn chain_ends(
 /// worker error — including a departed peer — propagates with its
 /// stage context.
 pub fn run_local(spec: &WorkerSpec, kind: TransportKind) -> Result<DistReport> {
-    spec.validate()?;
-    let p = spec.h.stages;
-    let mut ends = chain_ends(p, kind)?;
-
-    let reports: Vec<Result<WorkerReport>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = ends
-            .drain(..)
-            .enumerate()
-            .map(|(stage, (left, right))| {
-                let spec = spec.clone();
-                scope.spawn(move || run_stage(&spec, stage, left, right))
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|han| match han.join() {
-                Ok(r) => r,
-                Err(_) => Err(anyhow::anyhow!("stage worker panicked")),
-            })
-            .collect()
-    });
-
-    let mut stage0: Option<WorkerReport> = None;
-    let mut boundary = 0u64;
-    let mut wire = 0u64;
-    let mut frames = 0u64;
-    for (stage, r) in reports.into_iter().enumerate() {
-        let r = r.with_context(|| format!("stage {stage} worker failed"))?;
-        boundary += r.boundary_payload_bytes;
-        wire += r.wire_bytes;
-        frames += r.frames_sent;
-        if stage == 0 {
-            stage0 = Some(r);
-        }
-    }
-    let stage0 = stage0.expect("stage 0 report");
+    // thin shim over the unified entry point: a 1×P grid with no
+    // reduce is exactly the classic single-chain run
+    let tspec = super::dp::TrainSpec::from_worker(spec.clone());
+    let rep = super::dp::launch(&tspec.topology(kind), &tspec)?;
     Ok(DistReport {
-        losses: stage0.losses,
-        step_seconds: stage0.step_seconds,
-        boundary_payload_bytes: boundary,
-        wire_bytes: wire,
-        frames,
+        losses: rep.losses,
+        step_seconds: rep.step_seconds,
+        boundary_payload_bytes: rep.boundary_payload_bytes,
+        wire_bytes: rep.wire_bytes,
+        frames: rep.frames,
         frame_payload_bytes: spec.cfg.boundary_bytes(&spec.h),
+        dp_payload_bytes: rep.dp_payload_bytes,
     })
 }
 

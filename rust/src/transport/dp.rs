@@ -1,0 +1,1817 @@
+//! Real cross-replica data parallelism over the wire: gradient frames,
+//! ring all-reduce, gossip partial exchange, and the unified
+//! [`TrainSpec`]/[`Topology`] launch API (DESIGN.md §14).
+//!
+//! Until this module existed the repo's data-parallel axis lived only in
+//! accounting ([`crate::memory::dp_ring_step_wire_bytes`]) and in the
+//! in-process [`crate::coordinator::replica::ReplicaSet`]. Here the
+//! replica axis becomes real worker grids: an R×P run is R pipeline
+//! chains (each identical to the single-replica distributed pipeline)
+//! plus a per-stage cross-replica mesh carrying **gradient frames** —
+//! [`FrameKind::GradRing`] / [`FrameKind::GradGossip`] payloads that are
+//! the exact byte strings the dp codecs emit, so
+//! `payload_len == compress::dp_wire_bytes` holds on the wire and is
+//! asserted on every received frame.
+//!
+//! ## Ring all-reduce (synchronous DP)
+//!
+//! Each stage's fused weight-gradient accumulator is flattened, split
+//! into R balanced chunks, and reduced around the replica ring in the
+//! classic 2(R−1) phases: R−1 reduce-scatter hops (each hop encodes the
+//! *running partial sum* under the dp codec, so lossy codecs degrade
+//! identically everywhere) and R−1 all-gather hops (the owner encodes
+//! its fully reduced chunk **once** and the bytes relay unchanged, so
+//! every replica decodes the identical payload). The in-process
+//! reference [`ring_allreduce_local`] performs the same hops with the
+//! same codec calls in the same order — which is why a ring grid's loss
+//! curve is **bitwise identical** to the single-process replica path
+//! (`tests/transport_parity.rs` compares f64 loss bits).
+//!
+//! ## Gossip partial exchange (asynchronous DP)
+//!
+//! No global barrier: every step, a deterministic schedule seeded by
+//! [`crate::par::cell_seed`]`(seed, step)` shuffles the replica ids and
+//! pairs them off; each pair exchanges one full gradient frame and
+//! averages (the Decent-DP-style optimizer-aware exchange: gradients are
+//! averaged *before* the local optimizer step, so each replica's Adam
+//! moments track its own averaged stream). An odd replica idles for the
+//! step. A dead peer — scripted kill or vanished process — surfaces as a
+//! departed transport error; the survivor keeps its local gradients and
+//! never schedules that peer again. Gossip runs are therefore
+//! churn-tolerant but only statistically aligned: the contract is a
+//! convergence envelope (`tests/chaos.rs`), not bitwise parity.
+//!
+//! ## TrainSpec / Topology
+//!
+//! [`TrainSpec`] is the one validated description of a training run —
+//! the CLI parses into it, `launch` digests it into the `Hello`
+//! handshake (`PMCFG2`, wrapping the per-chain `PMCFG1` worker digest),
+//! and elastic/chaos options nest inside it as [`ElasticOpts`] (carrying
+//! the [`FaultPlan`] and churn timeline). [`Topology`] is the runtime
+//! shape — `{replicas, stages, backend, reduce}` — and
+//! [`launch`]`(topology, spec)` is the single entry point the legacy
+//! free functions (`run_local`, `run_elastic`) now shim to.
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress::{
+    self, dp_wire_bytes, topk_keep, CkptCodec, Mode,
+};
+use crate::coordinator::PipelineConfig;
+use crate::data::CorpusKind;
+use crate::manifest::Hyper;
+use crate::nn::{NativePipeline, Optim};
+use crate::par::cell_seed;
+use crate::rng::Rng;
+use crate::sim::ChurnTimeline;
+use crate::tensor::Tensor;
+
+use super::dist::{
+    chain_ends, recv_expect, run_stage_inner, LinkEnd, TransportKind,
+    WorkerReport, WorkerSpec,
+};
+use super::elastic::{run_elastic, ElasticReport, ElasticSpec};
+use super::fault::FaultPlan;
+use super::frame::{FrameKind, WireFrame};
+use super::{channel_pair, TcpTransport, Transport};
+
+// ---------------------------------------------------------------------------
+// reduce algorithms
+// ---------------------------------------------------------------------------
+
+/// How a replica grid reduces gradients across the data-parallel axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Reduce {
+    /// single replica chain — no cross-replica traffic
+    None,
+    /// synchronous ring all-reduce: 2(R−1) phases, bitwise-deterministic
+    Ring,
+    /// asynchronous gossip: `degree` seeded peers per step (only
+    /// `degree: 1` — pairwise — runs on the wire; higher degrees are
+    /// simulator-only)
+    Gossip {
+        /// peers exchanged with per step
+        degree: usize,
+    },
+}
+
+impl Reduce {
+    /// Parse a CLI label: `none`, `ring`, `gossip`, `gossip:<degree>`.
+    pub fn parse(s: &str) -> Result<Reduce> {
+        match s {
+            "none" => Ok(Reduce::None),
+            "ring" => Ok(Reduce::Ring),
+            "gossip" => Ok(Reduce::Gossip { degree: 1 }),
+            other => match other.strip_prefix("gossip:") {
+                Some(deg) => {
+                    let degree: usize = deg.parse().with_context(|| {
+                        format!("gossip degree {deg:?} is not a number")
+                    })?;
+                    Ok(Reduce::Gossip { degree })
+                }
+                None => bail!(
+                    "unknown reduce {other:?} (have none, ring, gossip, \
+                     gossip:<degree>)"
+                ),
+            },
+        }
+    }
+
+    /// Canonical label (round-trips through [`Reduce::parse`]).
+    pub fn label(&self) -> String {
+        match self {
+            Reduce::None => "none".into(),
+            Reduce::Ring => "ring".into(),
+            Reduce::Gossip { degree: 1 } => "gossip".into(),
+            Reduce::Gossip { degree } => format!("gossip:{degree}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// gradient-frame codecs
+// ---------------------------------------------------------------------------
+
+/// The R balanced `[start, end)` chunks of a flattened gradient — the
+/// same split [`crate::memory::dp_ring_step_wire_bytes`] prices (chunk
+/// `i` gets `elems/R + (i < elems % R)` elements).
+pub fn chunk_ranges(elems: usize, replicas: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(replicas);
+    let mut off = 0;
+    for i in 0..replicas {
+        let len = elems / replicas + usize::from(i < elems % replicas);
+        out.push((off, off + len));
+        off += len;
+    }
+    debug_assert_eq!(off, elems);
+    out
+}
+
+/// Segment count of the subspace-mean dp codec: ⌈elems·k/d⌉ — the
+/// "U-only" gradient ratio applied along the flat parameter axis.
+fn subspace_segments(elems: usize, d: usize, k: usize) -> usize {
+    (elems * k + d.max(1) - 1) / d.max(1)
+}
+
+/// Mean of each of `n_keep` balanced contiguous segments (f32
+/// accumulation in index order — the deterministic arithmetic both the
+/// wire and the in-process reference share).
+fn segment_means(xs: &[f32], n_keep: usize) -> Vec<f32> {
+    let base = xs.len() / n_keep;
+    let rem = xs.len() % n_keep;
+    let mut means = Vec::with_capacity(n_keep);
+    let mut off = 0;
+    for i in 0..n_keep {
+        let len = base + usize::from(i < rem);
+        let mut s = 0.0f32;
+        for &x in &xs[off..off + len] {
+            s += x;
+        }
+        means.push(s / len as f32);
+        off += len;
+    }
+    means
+}
+
+/// Broadcast `n_keep` segment means back over `elems` elements.
+fn segment_broadcast(means: &[f32], elems: usize) -> Vec<f32> {
+    let n_keep = means.len();
+    let base = elems / n_keep;
+    let rem = elems % n_keep;
+    let mut out = Vec::with_capacity(elems);
+    for (i, &m) in means.iter().enumerate() {
+        let len = base + usize::from(i < rem);
+        out.extend(std::iter::repeat(m).take(len));
+    }
+    out
+}
+
+/// Encode one gradient slice under the dp codec for `mode`. The
+/// returned payload is **exactly** [`dp_wire_bytes`] long — enforced
+/// here so every sender upholds the pricing contract the receiver
+/// asserts.
+pub fn encode_grad(
+    mode: Mode,
+    xs: &[f32],
+    d: usize,
+    k: usize,
+    ratio: f64,
+) -> Result<Vec<u8>> {
+    let want = dp_wire_bytes(mode, xs.len(), d, k, ratio);
+    let payload = match mode {
+        Mode::Raw => {
+            let mut p = Vec::with_capacity(xs.len() * 4);
+            for x in xs {
+                p.extend_from_slice(&x.to_le_bytes());
+            }
+            p
+        }
+        Mode::RawBf16 => {
+            let mut p = Vec::with_capacity(xs.len() * 2);
+            for &x in xs {
+                p.extend_from_slice(
+                    &compress::f32_to_bf16(x).to_le_bytes(),
+                );
+            }
+            p
+        }
+        Mode::Quant => {
+            // same rule as compress::encode_quant: symmetric int8 with
+            // one f32 scale per payload
+            let max = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let scale = if max > 0.0 { max / 127.0 } else { 1.0 };
+            let mut p = Vec::with_capacity(4 + xs.len());
+            p.extend_from_slice(&scale.to_le_bytes());
+            for &x in xs {
+                let q = (x / scale).round().clamp(-127.0, 127.0) as i8;
+                p.push(q as u8);
+            }
+            p
+        }
+        Mode::TopK => {
+            let keep = topk_keep(xs.len(), ratio);
+            if keep > xs.len() {
+                bail!(
+                    "top-k keeps {keep} of a {}-element gradient chunk \
+                     (ratio {ratio} is too low for dp chunking)",
+                    xs.len()
+                );
+            }
+            let mut idx: Vec<u32> = (0..xs.len() as u32).collect();
+            idx.select_nth_unstable_by(keep.saturating_sub(1), |&a, &b| {
+                xs[b as usize].abs().total_cmp(&xs[a as usize].abs())
+            });
+            idx.truncate(keep);
+            idx.sort_unstable();
+            let mut p = Vec::with_capacity(keep * 8);
+            for &i in &idx {
+                p.extend_from_slice(&i.to_le_bytes());
+                p.extend_from_slice(&xs[i as usize].to_le_bytes());
+            }
+            p
+        }
+        Mode::Subspace | Mode::NoFixed => {
+            let means = segment_means(xs, subspace_segments(xs.len(), d, k));
+            let mut p = Vec::with_capacity(means.len() * 4);
+            for m in &means {
+                p.extend_from_slice(&m.to_le_bytes());
+            }
+            p
+        }
+        Mode::SubspaceBf16 => {
+            let means = segment_means(xs, subspace_segments(xs.len(), d, k));
+            let mut p = Vec::with_capacity(means.len() * 2);
+            for &m in &means {
+                p.extend_from_slice(
+                    &compress::f32_to_bf16(m).to_le_bytes(),
+                );
+            }
+            p
+        }
+        Mode::PowerLR => bail!(
+            "powerlr is a boundary-activation scheme; gradient frames \
+             have no factor codec — pick raw, quant, topk, subspace, \
+             raw-bf16, or subspace-bf16 for the dp wire"
+        ),
+    };
+    if payload.len() != want {
+        bail!(
+            "encoded gradient payload is {} B but dp_wire_bytes prices \
+             {want} B for mode {} over {} elements",
+            payload.len(),
+            mode.as_str(),
+            xs.len()
+        );
+    }
+    Ok(payload)
+}
+
+/// Decode one gradient payload back to `elems` f32 values, enforcing
+/// the `payload_len == dp_wire_bytes` contract on the receiving side.
+pub fn decode_grad(
+    mode: Mode,
+    payload: &[u8],
+    elems: usize,
+    d: usize,
+    k: usize,
+    ratio: f64,
+) -> Result<Vec<f32>> {
+    let want = dp_wire_bytes(mode, elems, d, k, ratio);
+    if payload.len() != want {
+        bail!(
+            "gradient frame payload is {} B but dp_wire_bytes prices \
+             {want} B for mode {} over {elems} elements",
+            payload.len(),
+            mode.as_str()
+        );
+    }
+    match mode {
+        Mode::Raw => Ok(payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()),
+        Mode::RawBf16 => Ok(payload
+            .chunks_exact(2)
+            .map(|c| compress::bf16_to_f32(u16::from_le_bytes([c[0], c[1]])))
+            .collect()),
+        Mode::Quant => {
+            let scale = f32::from_le_bytes([
+                payload[0], payload[1], payload[2], payload[3],
+            ]);
+            Ok(payload[4..]
+                .iter()
+                .map(|&b| (b as i8) as f32 * scale)
+                .collect())
+        }
+        Mode::TopK => {
+            let mut out = vec![0.0f32; elems];
+            for c in payload.chunks_exact(8) {
+                let i =
+                    u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as usize;
+                let v = f32::from_le_bytes([c[4], c[5], c[6], c[7]]);
+                if i >= elems {
+                    bail!(
+                        "top-k gradient index {i} out of range for a \
+                         {elems}-element chunk"
+                    );
+                }
+                out[i] = v;
+            }
+            Ok(out)
+        }
+        Mode::Subspace | Mode::NoFixed => {
+            let means: Vec<f32> = payload
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Ok(segment_broadcast(&means, elems))
+        }
+        Mode::SubspaceBf16 => {
+            let means: Vec<f32> = payload
+                .chunks_exact(2)
+                .map(|c| {
+                    compress::bf16_to_f32(u16::from_le_bytes([c[0], c[1]]))
+                })
+                .collect();
+            Ok(segment_broadcast(&means, elems))
+        }
+        Mode::PowerLR => bail!(
+            "powerlr gradient frames cannot exist (no factor codec)"
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ring all-reduce — in-process reference
+// ---------------------------------------------------------------------------
+
+/// The in-process ring all-reduce reference: performs **exactly** the
+/// hops, codec calls, and arithmetic of the wire ring (reduce-scatter
+/// with per-hop re-encode of partial sums; all-gather relaying the
+/// owner's one encoding; final 1/R scale) on R flat gradients held in
+/// one address space. The wire ring in [`launch`] matches this function
+/// bitwise — the data-parallel analogue of the chain parity contract.
+pub fn ring_allreduce_local(
+    flats: &mut [Vec<f32>],
+    mode: Mode,
+    d: usize,
+    k: usize,
+    ratio: f64,
+) -> Result<()> {
+    let r_count = flats.len();
+    if r_count < 2 {
+        return Ok(());
+    }
+    let len = flats[0].len();
+    if flats.iter().any(|f| f.len() != len) {
+        bail!("replica gradients disagree in length");
+    }
+    if len < r_count {
+        bail!(
+            "{len} gradient elements cannot be ring-chunked over \
+             {r_count} replicas"
+        );
+    }
+    let ranges = chunk_ranges(len, r_count);
+    // reduce-scatter: R−1 phases; every hop re-encodes the running
+    // partial sum (lossy codecs degrade the same way on the wire)
+    for p in 0..r_count - 1 {
+        let enc: Vec<Vec<u8>> = (0..r_count)
+            .map(|r| {
+                let idx = (2 * r_count + r - p) % r_count;
+                let (a, b) = ranges[idx];
+                encode_grad(mode, &flats[r][a..b], d, k, ratio)
+            })
+            .collect::<Result<_>>()?;
+        for r in 0..r_count {
+            let to = (r + 1) % r_count;
+            let idx = (2 * r_count + r - p) % r_count;
+            let (a, b) = ranges[idx];
+            let dec = decode_grad(mode, &enc[r], b - a, d, k, ratio)?;
+            for (dst, v) in flats[to][a..b].iter_mut().zip(&dec) {
+                *dst += *v;
+            }
+        }
+    }
+    // all-gather: each owner encodes its fully reduced chunk once and
+    // applies its own codec locally (so the owner holds the same
+    // post-codec values every other replica will decode), then the
+    // bytes relay unchanged around the ring
+    let mut carry: Vec<Vec<u8>> = (0..r_count)
+        .map(|r| {
+            let owned = (r + 1) % r_count;
+            let (a, b) = ranges[owned];
+            let enc = encode_grad(mode, &flats[r][a..b], d, k, ratio)?;
+            let dec = decode_grad(mode, &enc, b - a, d, k, ratio)?;
+            flats[r][a..b].copy_from_slice(&dec);
+            Ok(enc)
+        })
+        .collect::<Result<_>>()?;
+    for p in 0..r_count - 1 {
+        let mut next: Vec<Vec<u8>> = vec![Vec::new(); r_count];
+        for r in 0..r_count {
+            let to = (r + 1) % r_count;
+            let idx = (2 * r_count + to - p) % r_count;
+            let (a, b) = ranges[idx];
+            let dec = decode_grad(mode, &carry[r], b - a, d, k, ratio)?;
+            flats[to][a..b].copy_from_slice(&dec);
+            next[to] = std::mem::take(&mut carry[r]);
+        }
+        carry = next;
+    }
+    let inv = 1.0 / r_count as f32;
+    for f in flats.iter_mut() {
+        for v in f.iter_mut() {
+            *v *= inv;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// gossip schedule
+// ---------------------------------------------------------------------------
+
+/// The step's deterministic gossip pairing: Fisher–Yates shuffle of all
+/// replica ids seeded by [`cell_seed`]`(seed, step)`, adjacent ids
+/// paired, an odd leftover idling. Every replica computes the identical
+/// schedule from shared config alone — no coordinator, no barrier.
+pub fn gossip_pairs(
+    seed: u64,
+    step: u64,
+    replicas: usize,
+) -> Vec<(usize, usize)> {
+    let mut order: Vec<usize> = (0..replicas).collect();
+    let mut rng = Rng::new(cell_seed(seed, step as usize));
+    for i in (1..order.len()).rev() {
+        let j = rng.below(i + 1);
+        order.swap(i, j);
+    }
+    order.chunks_exact(2).map(|c| (c[0], c[1])).collect()
+}
+
+/// This replica's peer for the step, if the schedule pairs it.
+pub fn gossip_partner(
+    seed: u64,
+    step: u64,
+    replicas: usize,
+    me: usize,
+) -> Option<usize> {
+    gossip_pairs(seed, step, replicas).iter().find_map(|&(a, b)| {
+        if a == me {
+            Some(b)
+        } else if b == me {
+            Some(a)
+        } else {
+            None
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// the per-worker DP context (consumed by dist::run_stage_inner)
+// ---------------------------------------------------------------------------
+
+/// Everything one stage worker needs to participate in the
+/// data-parallel axis: its replica coordinate, the cross-replica links
+/// of its stage, the reduce algorithm, and the grid-wide `PMCFG2`
+/// digest that replaces the per-chain digest in the handshake.
+pub(crate) struct DpCtx {
+    pub replica: usize,
+    pub replicas: usize,
+    pub reduce: Reduce,
+    pub dp_mode: Mode,
+    /// gossip schedule seed (the run seed; every worker derives the
+    /// same pairings)
+    pub seed: u64,
+    /// replica-sharded data seed — mirrors
+    /// `NativePipeline::reseed_data(seed ^ ((r+1)·0x9E37_79B9))`
+    pub shard_seed: u64,
+    /// the [`TrainSpec::digest`] every grid link handshakes with
+    pub digest: Vec<u8>,
+    /// scripted chaos: leave the grid at this step (gossip runs only)
+    pub kill_at: Option<u64>,
+    /// straggler profile: extra wall seconds this replica spends per
+    /// step before its gradient exchange (0 = healthy)
+    pub straggle_s: f64,
+    /// same-stage links to every other replica (index = replica id)
+    pub links: Vec<LinkEnd>,
+    /// peers observed dead (failed exchange) — never rescheduled
+    pub dead: Vec<bool>,
+    /// gradient-frame payload bytes sent
+    pub dp_payload_bytes: u64,
+    /// gradient frames sent
+    pub dp_frames: u64,
+}
+
+impl DpCtx {
+    /// Total bytes sent on the dp links (headers included).
+    pub fn link_bytes_sent(&self) -> u64 {
+        self.links
+            .iter()
+            .map(|l| l.as_deref().map_or(0, |c| c.bytes_sent()))
+            .sum()
+    }
+}
+
+/// Validate a received gradient frame: kind-specific codec tag and the
+/// acceptance contract `payload_len == dp_wire_bytes`.
+fn check_grad_frame(
+    f: &WireFrame,
+    mode: Mode,
+    elems: usize,
+    h: &Hyper,
+    stage: usize,
+    replica: usize,
+) -> Result<()> {
+    match f.codec {
+        Some(c) if c == mode => {}
+        other => bail!(
+            "replica {replica} stage {stage}: gradient frame codec \
+             {other:?} does not match the handshaked dp mode {mode:?}"
+        ),
+    }
+    let want = dp_wire_bytes(mode, elems, h.d, h.k, h.ratio);
+    if f.payload.len() != want {
+        bail!(
+            "replica {replica} stage {stage}: gradient frame payload is \
+             {} B but compress::dp_wire_bytes prices {want} B for mode \
+             {} over {elems} elements",
+            f.payload.len(),
+            mode.as_str()
+        );
+    }
+    Ok(())
+}
+
+/// The DP hook `dist::run_stage_inner` calls between gradient averaging
+/// and the optimizer step: flatten the stage's accumulators, reduce
+/// across the replica axis (ring or gossip), and unflatten in place.
+pub(crate) fn dp_reduce_stage(
+    dp: &mut DpCtx,
+    grad_acc: &mut [Tensor],
+    h: &Hyper,
+    step: u64,
+    stage: usize,
+) -> Result<()> {
+    if dp.replicas < 2 || matches!(dp.reduce, Reduce::None) {
+        return Ok(());
+    }
+    if dp.straggle_s > 0.0 {
+        std::thread::sleep(std::time::Duration::from_secs_f64(
+            dp.straggle_s,
+        ));
+    }
+    let total: usize = grad_acc.iter().map(|g| g.numel()).sum();
+    let mut flat = Vec::with_capacity(total);
+    for g in grad_acc.iter() {
+        flat.extend_from_slice(&g.data);
+    }
+    match dp.reduce {
+        Reduce::None => unreachable!(),
+        Reduce::Ring => ring_allreduce_wire(dp, &mut flat, h, step, stage)?,
+        Reduce::Gossip { .. } => {
+            gossip_exchange(dp, &mut flat, h, step, stage)?
+        }
+    }
+    let mut off = 0;
+    for g in grad_acc.iter_mut() {
+        let n = g.numel();
+        g.data.copy_from_slice(&flat[off..off + n]);
+        off += n;
+    }
+    Ok(())
+}
+
+/// The wire ring: same hops as [`ring_allreduce_local`], executed from
+/// one replica's point of view. Sends never block (both backends queue),
+/// so the per-phase send-then-receive order is deadlock-free.
+fn ring_allreduce_wire(
+    dp: &mut DpCtx,
+    flat: &mut [f32],
+    h: &Hyper,
+    step: u64,
+    stage: usize,
+) -> Result<()> {
+    let r_count = dp.replicas;
+    let me = dp.replica;
+    let len = flat.len();
+    if len < r_count {
+        bail!(
+            "replica {me} stage {stage}: {len} gradient elements cannot \
+             be ring-chunked over {r_count} replicas"
+        );
+    }
+    let (mode, d, k, ratio) = (dp.dp_mode, h.d, h.k, h.ratio);
+    let ranges = chunk_ranges(len, r_count);
+    let right = (me + 1) % r_count;
+    let left = (me + r_count - 1) % r_count;
+    // reduce-scatter
+    for p in 0..r_count - 1 {
+        let si = (2 * r_count + me - p) % r_count;
+        let ri = (2 * r_count + me - 1 - p) % r_count;
+        let (sa, sb) = ranges[si];
+        let payload = encode_grad(mode, &flat[sa..sb], d, k, ratio)?;
+        dp.dp_payload_bytes += payload.len() as u64;
+        dp.dp_frames += 1;
+        dp.links[right]
+            .as_deref_mut()
+            .expect("ring right link")
+            .send(&WireFrame::grad(
+                FrameKind::GradRing,
+                mode,
+                step,
+                p,
+                payload,
+            ))?;
+        let f = recv_expect(
+            dp.links[left].as_deref_mut().expect("ring left link"),
+            FrameKind::GradRing,
+            step,
+            Some(p as u32),
+            stage,
+            "left replica",
+            None,
+        )?;
+        let (ra, rb) = ranges[ri];
+        check_grad_frame(&f, mode, rb - ra, h, stage, me)?;
+        let dec = decode_grad(mode, &f.payload, rb - ra, d, k, ratio)?;
+        for (dst, v) in flat[ra..rb].iter_mut().zip(&dec) {
+            *dst += *v;
+        }
+    }
+    // all-gather: encode the owned chunk once, self-decode, relay bytes
+    let owned = (me + 1) % r_count;
+    let (oa, ob) = ranges[owned];
+    let mut carry = encode_grad(mode, &flat[oa..ob], d, k, ratio)?;
+    let dec = decode_grad(mode, &carry, ob - oa, d, k, ratio)?;
+    flat[oa..ob].copy_from_slice(&dec);
+    for p in 0..r_count - 1 {
+        let phase = (r_count - 1 + p) as u32;
+        dp.dp_payload_bytes += carry.len() as u64;
+        dp.dp_frames += 1;
+        dp.links[right]
+            .as_deref_mut()
+            .expect("ring right link")
+            .send(&WireFrame::grad(
+                FrameKind::GradRing,
+                mode,
+                step,
+                phase as usize,
+                carry.clone(),
+            ))?;
+        let f = recv_expect(
+            dp.links[left].as_deref_mut().expect("ring left link"),
+            FrameKind::GradRing,
+            step,
+            Some(phase),
+            stage,
+            "left replica",
+            None,
+        )?;
+        let ri = (2 * r_count + me - p) % r_count;
+        let (ra, rb) = ranges[ri];
+        check_grad_frame(&f, mode, rb - ra, h, stage, me)?;
+        let dec = decode_grad(mode, &f.payload, rb - ra, d, k, ratio)?;
+        flat[ra..rb].copy_from_slice(&dec);
+        carry = f.payload;
+    }
+    let inv = 1.0 / r_count as f32;
+    for v in flat.iter_mut() {
+        *v *= inv;
+    }
+    Ok(())
+}
+
+/// One gossip step: exchange full gradient frames with the scheduled
+/// peer (if any) and average. Both sides decode their **own** encoding
+/// too, so a pair lands on identical values — pairwise consensus — for
+/// every codec, lossless or not. A failed exchange (peer killed or
+/// departed) marks the peer dead and keeps the local gradients; any
+/// other error propagates.
+fn gossip_exchange(
+    dp: &mut DpCtx,
+    flat: &mut [f32],
+    h: &Hyper,
+    step: u64,
+    stage: usize,
+) -> Result<()> {
+    let Some(peer) = gossip_partner(dp.seed, step, dp.replicas, dp.replica)
+    else {
+        return Ok(()); // odd replica out this step
+    };
+    if dp.dead[peer] {
+        return Ok(());
+    }
+    let (mode, d, k, ratio) = (dp.dp_mode, h.d, h.k, h.ratio);
+    let payload = encode_grad(mode, flat, d, k, ratio)?;
+    let fr = WireFrame::grad(
+        FrameKind::GradGossip,
+        mode,
+        step,
+        0,
+        payload,
+    );
+    let conn = dp.links[peer].as_deref_mut().expect("gossip peer link");
+    if let Err(e) = conn.send(&fr) {
+        if format!("{e:#}").contains("departed") {
+            dp.dead[peer] = true;
+            return Ok(());
+        }
+        return Err(e);
+    }
+    dp.dp_payload_bytes += fr.payload.len() as u64;
+    dp.dp_frames += 1;
+    match recv_expect(
+        conn,
+        FrameKind::GradGossip,
+        step,
+        Some(0),
+        stage,
+        "gossip peer",
+        None,
+    ) {
+        Ok(f) => {
+            check_grad_frame(&f, mode, flat.len(), h, stage, dp.replica)?;
+            let theirs =
+                decode_grad(mode, &f.payload, flat.len(), d, k, ratio)?;
+            let mine =
+                decode_grad(mode, &fr.payload, flat.len(), d, k, ratio)?;
+            for ((dst, m), t) in
+                flat.iter_mut().zip(&mine).zip(&theirs)
+            {
+                *dst = 0.5 * (*m + *t);
+            }
+        }
+        Err(e) => {
+            // a vanished peer is a churn event, not a run failure —
+            // the Decent-DP survivor keeps its local gradients
+            if format!("{e:#}").contains("departed") {
+                dp.dead[peer] = true;
+            } else {
+                return Err(e);
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// TrainSpec — the one validated run description
+// ---------------------------------------------------------------------------
+
+/// Elastic/chaos options nested inside [`TrainSpec`] — the same knobs
+/// [`ElasticSpec`] carries, minus the worker (the spec owns it).
+#[derive(Clone, Debug)]
+pub struct ElasticOpts {
+    /// checkpoint cadence in steps; 0 = auto (steps/4, min 1)
+    pub ckpt_every: u64,
+    /// checkpoint parameter codec
+    pub ckpt_codec: CkptCodec,
+    /// heartbeat cadence in steps
+    pub heartbeat_every: u64,
+    /// stale liveness timeout in ms
+    pub stale_ms: u64,
+    /// spare workers standing by
+    pub spares: usize,
+    /// scripted churn timeline (`kill:W@S,join:W@S`)
+    pub chaos: ChurnTimeline,
+    /// deterministic link-fault plan (drops / delays / severs)
+    pub faults: FaultPlan,
+    /// recovery attempts before the run is unrecoverable
+    pub max_epochs: usize,
+}
+
+impl Default for ElasticOpts {
+    fn default() -> Self {
+        ElasticOpts {
+            ckpt_every: 0,
+            ckpt_codec: CkptCodec::Raw,
+            heartbeat_every: 1,
+            stale_ms: 5_000,
+            spares: 1,
+            chaos: ChurnTimeline::default(),
+            faults: FaultPlan::default(),
+            max_epochs: 8,
+        }
+    }
+}
+
+/// The canonical, validated description of a training run: the
+/// per-chain [`WorkerSpec`] plus the data-parallel axis (replica count,
+/// gradient codec, reduce algorithm) and optional nested elastic/chaos
+/// options. The CLI parses into this; [`launch`] digests it into the
+/// handshake; everything else derives from it.
+#[derive(Clone, Debug)]
+pub struct TrainSpec {
+    /// the run every stage worker of every replica executes
+    pub worker: WorkerSpec,
+    /// data-parallel replica count (1 = a single pipeline chain)
+    pub replicas: usize,
+    /// gradient-frame codec on the dp wire
+    pub dp_mode: Mode,
+    /// cross-replica reduce algorithm
+    pub reduce: Reduce,
+    /// elastic/chaos options (single-replica chains only)
+    pub elastic: Option<ElasticOpts>,
+}
+
+impl TrainSpec {
+    /// Wrap a bare worker spec: one replica, no reduce, no elastic —
+    /// the exact run the legacy `run_local` executed.
+    pub fn from_worker(worker: WorkerSpec) -> TrainSpec {
+        TrainSpec {
+            worker,
+            replicas: 1,
+            dp_mode: Mode::Raw,
+            reduce: Reduce::None,
+            elastic: None,
+        }
+    }
+
+    /// Start a builder from model dimensions.
+    pub fn builder(h: Hyper) -> TrainSpecBuilder {
+        TrainSpecBuilder::new(h)
+    }
+
+    /// Reject configurations the runtime cannot execute — with errors
+    /// that say *why* and what to do instead.
+    pub fn validate(&self) -> Result<()> {
+        self.worker.validate()?;
+        if self.replicas == 0 {
+            bail!("need >= 1 replica (got 0)");
+        }
+        if self.replicas > 16 {
+            bail!(
+                "replica grids above 16 are untested ({} requested); \
+                 the thread-per-worker runtime would spawn {} workers",
+                self.replicas,
+                self.replicas * self.worker.h.stages
+            );
+        }
+        if self.replicas > 1 && matches!(self.reduce, Reduce::None) {
+            bail!(
+                "{} replicas need a gradient reduce algorithm: pick \
+                 --reduce ring (synchronous, bitwise-deterministic) or \
+                 --reduce gossip (asynchronous, churn-tolerant)",
+                self.replicas
+            );
+        }
+        if self.dp_mode == Mode::PowerLR {
+            bail!(
+                "powerlr cannot serve as --dp-mode: its sketch factors \
+                 are boundary-activation-only and gradient frames have \
+                 no factor codec; pick raw, quant, topk, subspace, \
+                 raw-bf16, or subspace-bf16"
+            );
+        }
+        if self.dp_mode == Mode::TopK && self.worker.h.ratio < 1.0 {
+            bail!(
+                "top-k dp gradients need ratio >= 1 (got {}); smaller \
+                 ratios would keep more (index, value) pairs than a \
+                 chunk has elements",
+                self.worker.h.ratio
+            );
+        }
+        if let Reduce::Gossip { degree } = self.reduce {
+            if degree != 1 {
+                bail!(
+                    "gossip exchanges one peer per step on the wire \
+                     (degree 1); degree-{degree} schedules are \
+                     simulator-only (`protomodels sim`)"
+                );
+            }
+        }
+        if self.replicas > 1 && self.worker.cfg.grassmann_interval > 0 {
+            bail!(
+                "Grassmann basis adaptation would drift per replica \
+                 under data parallelism (each last stage adapts its own \
+                 U); run replica grids with --grassmann 0"
+            );
+        }
+        if self.replicas > 1 && self.elastic.is_some() {
+            bail!(
+                "elastic recovery drives a single replica chain; \
+                 replica grids tolerate churn through --reduce gossip \
+                 instead"
+            );
+        }
+        Ok(())
+    }
+
+    /// The grid handshake digest: `PMCFG2` wrapping the per-chain
+    /// `PMCFG1` worker digest plus every dp-axis field. Two workers
+    /// whose TrainSpecs differ anywhere numerics-affecting refuse to
+    /// train together.
+    pub fn digest(&self) -> Vec<u8> {
+        let mut d = Vec::with_capacity(160);
+        d.extend_from_slice(b"PMCFG2");
+        d.extend_from_slice(&self.worker.digest());
+        d.extend_from_slice(&(self.replicas as u64).to_le_bytes());
+        d.push(self.dp_mode.wire_tag());
+        match self.reduce {
+            Reduce::None => d.push(0),
+            Reduce::Ring => d.push(1),
+            Reduce::Gossip { degree } => {
+                d.push(2);
+                d.extend_from_slice(&(degree as u64).to_le_bytes());
+            }
+        }
+        d
+    }
+
+    /// Replica `r`'s data-shard seed — the `ReplicaSet` convention, so
+    /// grids and the in-process replica path draw identical shards.
+    pub fn shard_seed(&self, replica: usize) -> u64 {
+        self.worker.cfg.seed ^ ((replica as u64 + 1) * 0x9E37_79B9)
+    }
+
+    /// The runtime topology this spec trains on over `backend`.
+    pub fn topology(&self, backend: TransportKind) -> Topology {
+        Topology {
+            replicas: self.replicas,
+            stages: self.worker.h.stages,
+            backend,
+            reduce: self.reduce,
+            chaos_kill: None,
+            straggle: None,
+        }
+    }
+
+    /// Assemble the legacy [`ElasticSpec`] from the nested options.
+    pub fn elastic_spec(&self) -> Option<ElasticSpec> {
+        let o = self.elastic.as_ref()?;
+        Some(ElasticSpec {
+            worker: self.worker.clone(),
+            ckpt_every: if o.ckpt_every == 0 {
+                (self.worker.steps as u64 / 4).max(1)
+            } else {
+                o.ckpt_every
+            },
+            ckpt_codec: o.ckpt_codec,
+            heartbeat_every: o.heartbeat_every,
+            stale_ms: o.stale_ms,
+            spares: o.spares,
+            chaos: o.chaos.clone(),
+            faults: o.faults.clone(),
+            max_epochs: o.max_epochs,
+        })
+    }
+}
+
+/// Builder for [`TrainSpec`] — every setter returns `self`; `build`
+/// validates.
+pub struct TrainSpecBuilder {
+    spec: TrainSpec,
+}
+
+impl TrainSpecBuilder {
+    fn new(h: Hyper) -> TrainSpecBuilder {
+        let cfg = PipelineConfig {
+            total_steps: 200,
+            ..Default::default()
+        };
+        TrainSpecBuilder {
+            spec: TrainSpec::from_worker(WorkerSpec {
+                h,
+                cfg,
+                optim: Optim::AdamW,
+                steps: 200,
+                corpus_kind: CorpusKind::Wiki,
+                corpus_tokens: 400_000,
+            }),
+        }
+    }
+
+    /// Boundary compression mode.
+    pub fn mode(mut self, m: Mode) -> Self {
+        self.spec.worker.cfg.mode = m;
+        self
+    }
+
+    /// Optimizer steps (also sets the LR schedule horizon).
+    pub fn steps(mut self, n: usize) -> Self {
+        self.spec.worker.steps = n;
+        self.spec.worker.cfg.total_steps = n;
+        self
+    }
+
+    /// Microbatches per step.
+    pub fn microbatches(mut self, m: usize) -> Self {
+        self.spec.worker.cfg.microbatches = m;
+        self
+    }
+
+    /// Run seed (init, data, gossip schedules).
+    pub fn seed(mut self, s: u64) -> Self {
+        self.spec.worker.cfg.seed = s;
+        self
+    }
+
+    /// Peak learning rate.
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.spec.worker.cfg.lr = lr;
+        self
+    }
+
+    /// Warmup steps.
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.spec.worker.cfg.warmup_steps = n;
+        self
+    }
+
+    /// Grassmann cadence (0 disables).
+    pub fn grassmann(mut self, interval: usize) -> Self {
+        self.spec.worker.cfg.grassmann_interval = interval;
+        self
+    }
+
+    /// Pipeline schedule.
+    pub fn schedule(mut self, s: crate::sim::Schedule) -> Self {
+        self.spec.worker.cfg.schedule = s;
+        self
+    }
+
+    /// Synthetic corpus preset and length.
+    pub fn corpus(mut self, kind: CorpusKind, tokens: usize) -> Self {
+        self.spec.worker.corpus_kind = kind;
+        self.spec.worker.corpus_tokens = tokens;
+        self
+    }
+
+    /// Optimizer.
+    pub fn optim(mut self, o: Optim) -> Self {
+        self.spec.worker.optim = o;
+        self
+    }
+
+    /// Data-parallel replica count.
+    pub fn replicas(mut self, r: usize) -> Self {
+        self.spec.replicas = r;
+        self
+    }
+
+    /// Gradient-frame codec on the dp wire.
+    pub fn dp_mode(mut self, m: Mode) -> Self {
+        self.spec.dp_mode = m;
+        self
+    }
+
+    /// Cross-replica reduce algorithm.
+    pub fn reduce(mut self, r: Reduce) -> Self {
+        self.spec.reduce = r;
+        self
+    }
+
+    /// Nest elastic/chaos options.
+    pub fn elastic(mut self, e: ElasticOpts) -> Self {
+        self.spec.elastic = Some(e);
+        self
+    }
+
+    /// Escape hatch for rarely-set worker fields (time model, event
+    /// sim, grad recording) without widening the builder surface.
+    pub fn tweak(mut self, f: impl FnOnce(&mut WorkerSpec)) -> Self {
+        f(&mut self.spec.worker);
+        self
+    }
+
+    /// Validate and return the spec.
+    pub fn build(self) -> Result<TrainSpec> {
+        self.spec.validate()?;
+        Ok(self.spec)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Topology + launch — the single entry point
+// ---------------------------------------------------------------------------
+
+/// The runtime shape of a run: how many replicas × stages, which
+/// transport carries the frames, and how gradients reduce. Derive one
+/// from a spec with [`TrainSpec::topology`]; `launch` cross-checks the
+/// two so a topology cannot silently disagree with the digested spec.
+#[derive(Clone, Copy, Debug)]
+pub struct Topology {
+    /// data-parallel width R
+    pub replicas: usize,
+    /// pipeline depth P
+    pub stages: usize,
+    /// wire backend (channel / tcp)
+    pub backend: TransportKind,
+    /// cross-replica reduce algorithm
+    pub reduce: Reduce,
+    /// scripted chaos: kill every stage of one replica at a step
+    /// (gossip grids only — runtime context, never digested)
+    pub chaos_kill: Option<(usize, u64)>,
+    /// straggler profile: one replica sleeps this many extra wall
+    /// seconds per step before its gradient exchange (runtime context,
+    /// never digested — `exp dp-real` uses it to contrast ring and
+    /// gossip step wall under a slow member)
+    pub straggle: Option<(usize, f64)>,
+}
+
+/// Aggregate result of a [`launch`]ed run.
+#[derive(Clone, Debug)]
+pub struct LaunchReport {
+    /// per-step training loss, averaged over surviving replicas in
+    /// replica order (R = 1: bitwise the chain's curve)
+    pub losses: Vec<f64>,
+    /// each replica's own per-step curve (a killed replica's is
+    /// truncated at its death)
+    pub replica_losses: Vec<Vec<f64>>,
+    /// each replica's own per-step wall seconds (same truncation)
+    pub replica_step_seconds: Vec<Vec<f64>>,
+    /// per-step wall seconds — the max over surviving replicas
+    pub step_seconds: Vec<f64>,
+    /// boundary payload bytes across all chains
+    pub boundary_payload_bytes: u64,
+    /// gradient-frame payload bytes across the dp meshes
+    pub dp_payload_bytes: u64,
+    /// total wire bytes, headers and control included
+    pub wire_bytes: u64,
+    /// total frames sent
+    pub frames: u64,
+    /// replicas that finished every step
+    pub survivors: usize,
+    /// replicas launched
+    pub replicas: usize,
+    /// elastic detail when the run routed through the elastic runtime
+    pub elastic: Option<Box<ElasticReport>>,
+}
+
+impl LaunchReport {
+    /// Mean wall seconds per step.
+    pub fn mean_step_seconds(&self) -> f64 {
+        if self.step_seconds.is_empty() {
+            return 0.0;
+        }
+        self.step_seconds.iter().sum::<f64>()
+            / self.step_seconds.len() as f64
+    }
+}
+
+/// Build one connected transport pair over `backend` (the two ends of a
+/// dp mesh link; chains reuse `dist::chain_ends`).
+fn link_pair(
+    backend: TransportKind,
+) -> Result<(Box<dyn Transport>, Box<dyn Transport>)> {
+    Ok(match backend {
+        TransportKind::Channel => {
+            let (a, b) = channel_pair();
+            (Box::new(a), Box::new(b))
+        }
+        TransportKind::Tcp => {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0")
+                .context("binding loopback listener for a dp link")?;
+            let addr = listener.local_addr()?;
+            let client = std::net::TcpStream::connect(addr)
+                .with_context(|| format!("connecting loopback {addr}"))?;
+            let (server, _) = listener
+                .accept()
+                .context("accepting loopback dp connection")?;
+            (
+                Box::new(TcpTransport::new(client)?),
+                Box::new(TcpTransport::new(server)?),
+            )
+        }
+    })
+}
+
+/// Launch a run on a topology: the **single entry point** every driver
+/// routes through. `R = 1` without elastic options is exactly the
+/// legacy `run_local` chain; elastic options route to the elastic
+/// runtime; `R ≥ 2` builds the full R×P grid — R chains plus a
+/// per-stage replica mesh — and composes stage pipelining with replica
+/// reduction.
+pub fn launch(topo: &Topology, spec: &TrainSpec) -> Result<LaunchReport> {
+    spec.validate()?;
+    if topo.replicas != spec.replicas
+        || topo.stages != spec.worker.h.stages
+    {
+        bail!(
+            "topology {}x{} disagrees with the spec's {}x{} grid — \
+             derive the topology with TrainSpec::topology",
+            topo.replicas,
+            topo.stages,
+            spec.replicas,
+            spec.worker.h.stages
+        );
+    }
+    if topo.reduce != spec.reduce {
+        bail!(
+            "topology reduce {} disagrees with the spec's {}",
+            topo.reduce.label(),
+            spec.reduce.label()
+        );
+    }
+    if let Some((r, _)) = topo.chaos_kill {
+        if r >= spec.replicas {
+            bail!("chaos kill targets replica {r} of {}", spec.replicas);
+        }
+        if !matches!(spec.reduce, Reduce::Gossip { .. }) {
+            bail!(
+                "scripted replica kills need --reduce gossip (a ring \
+                 cannot survive a missing member); elastic chains \
+                 handle kills through ElasticOpts::chaos"
+            );
+        }
+    }
+    if let Some((r, s)) = topo.straggle {
+        if r >= spec.replicas {
+            bail!("straggler targets replica {r} of {}", spec.replicas);
+        }
+        if !(s.is_finite() && s >= 0.0) {
+            bail!("straggler delay must be finite and non-negative");
+        }
+    }
+    if spec.elastic.is_some() {
+        let es = spec.elastic_spec().expect("elastic options present");
+        let er = run_elastic(&es, topo.backend)?;
+        return Ok(LaunchReport {
+            losses: er.losses.clone(),
+            replica_losses: vec![er.losses.clone()],
+            replica_step_seconds: vec![er.dist.step_seconds.clone()],
+            step_seconds: er.dist.step_seconds.clone(),
+            boundary_payload_bytes: er.dist.boundary_payload_bytes,
+            dp_payload_bytes: 0,
+            wire_bytes: er.dist.wire_bytes,
+            frames: er.dist.frames,
+            survivors: 1,
+            replicas: 1,
+            elastic: Some(Box::new(er)),
+        });
+    }
+    run_grid(spec, topo)
+}
+
+/// The R×P grid runner behind [`launch`].
+fn run_grid(spec: &TrainSpec, topo: &Topology) -> Result<LaunchReport> {
+    let r_count = spec.replicas;
+    let p = spec.worker.h.stages;
+    let backend = topo.backend;
+    let digest = spec.digest();
+    let mut chains: Vec<Vec<(LinkEnd, LinkEnd)>> = (0..r_count)
+        .map(|_| chain_ends(p, backend))
+        .collect::<Result<_>>()?;
+    // dp mesh: one bidirectional link per stage per replica pair
+    let mut mesh: Vec<Vec<Vec<LinkEnd>>> = (0..r_count)
+        .map(|_| {
+            (0..p).map(|_| (0..r_count).map(|_| None).collect()).collect()
+        })
+        .collect();
+    if r_count > 1 {
+        for s in 0..p {
+            for a in 0..r_count {
+                for b in a + 1..r_count {
+                    let (ea, eb) = link_pair(backend)?;
+                    mesh[a][s][b] = Some(ea);
+                    mesh[b][s][a] = Some(eb);
+                }
+            }
+        }
+    }
+
+    let reports: Vec<Vec<Result<WorkerReport>>> =
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(r_count);
+            for (r, chain) in chains.drain(..).enumerate() {
+                let mut rows = Vec::with_capacity(p);
+                for (s, (left, right)) in chain.into_iter().enumerate() {
+                    let links = std::mem::take(&mut mesh[r][s]);
+                    let wspec = spec.worker.clone();
+                    let dp = (r_count > 1).then(|| DpCtx {
+                        replica: r,
+                        replicas: r_count,
+                        reduce: spec.reduce,
+                        dp_mode: spec.dp_mode,
+                        seed: spec.worker.cfg.seed,
+                        shard_seed: spec.shard_seed(r),
+                        digest: digest.clone(),
+                        kill_at: topo
+                            .chaos_kill
+                            .and_then(|(kr, ks)| (kr == r).then_some(ks)),
+                        straggle_s: topo
+                            .straggle
+                            .and_then(|(sr, s)| (sr == r).then_some(s))
+                            .unwrap_or(0.0),
+                        links,
+                        dead: vec![false; r_count],
+                        dp_payload_bytes: 0,
+                        dp_frames: 0,
+                    });
+                    rows.push(scope.spawn(move || {
+                        run_stage_inner(&wspec, s, left, right, None, None, dp)
+                    }));
+                }
+                handles.push(rows);
+            }
+            handles
+                .into_iter()
+                .map(|rows| {
+                    rows.into_iter()
+                        .map(|h| {
+                            h.join().unwrap_or_else(|_| {
+                                Err(anyhow::anyhow!(
+                                    "stage worker panicked"
+                                ))
+                            })
+                        })
+                        .collect()
+                })
+                .collect()
+        });
+
+    let tolerate_kills = matches!(spec.reduce, Reduce::Gossip { .. });
+    let mut replica_losses: Vec<Vec<f64>> = vec![Vec::new(); r_count];
+    let mut replica_secs: Vec<Vec<f64>> = vec![Vec::new(); r_count];
+    let mut boundary = 0u64;
+    let mut dp_payload = 0u64;
+    let mut wire = 0u64;
+    let mut frames = 0u64;
+    let mut survivors = 0usize;
+    for (r, rows) in reports.into_iter().enumerate() {
+        let mut alive = true;
+        for (s, res) in rows.into_iter().enumerate() {
+            match res {
+                Ok(w) => {
+                    boundary += w.boundary_payload_bytes;
+                    dp_payload += w.dp_payload_bytes;
+                    wire += w.wire_bytes;
+                    frames += w.frames_sent;
+                    if s == 0 {
+                        replica_losses[r] = w.losses;
+                        replica_secs[r] = w.step_seconds;
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    if tolerate_kills && msg.contains("chaos kill") {
+                        alive = false;
+                    } else {
+                        return Err(e.context(format!(
+                            "replica {r} stage {s} worker failed"
+                        )));
+                    }
+                }
+            }
+        }
+        if alive {
+            survivors += 1;
+        }
+    }
+    if survivors == 0 {
+        bail!("every replica died — nothing survived to report");
+    }
+
+    let (losses, step_seconds) = if r_count == 1 {
+        (replica_losses[0].clone(), replica_secs[0].clone())
+    } else {
+        let steps = replica_losses.iter().map(Vec::len).max().unwrap_or(0);
+        let mut losses = Vec::with_capacity(steps);
+        let mut secs = Vec::with_capacity(steps);
+        for i in 0..steps {
+            let vals: Vec<f64> = replica_losses
+                .iter()
+                .filter(|l| i < l.len())
+                .map(|l| l[i])
+                .collect();
+            losses.push(vals.iter().sum::<f64>() / vals.len() as f64);
+            secs.push(
+                replica_secs
+                    .iter()
+                    .filter(|l| i < l.len())
+                    .map(|l| l[i])
+                    .fold(0.0f64, f64::max),
+            );
+        }
+        (losses, secs)
+    };
+    Ok(LaunchReport {
+        losses,
+        replica_losses,
+        replica_step_seconds: replica_secs,
+        step_seconds,
+        boundary_payload_bytes: boundary,
+        dp_payload_bytes: dp_payload,
+        wire_bytes: wire,
+        frames,
+        survivors,
+        replicas: r_count,
+        elastic: None,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// in-process reference — the single-process replica path
+// ---------------------------------------------------------------------------
+
+/// Train `spec` entirely in process: R [`NativePipeline`]s stepping in
+/// lockstep, with the per-stage gradient reduce performed by the exact
+/// codec arithmetic the wire uses ([`ring_allreduce_local`], or the
+/// gossip pairing with self-codec averaging). This is the path a ring
+/// grid must match **bitwise** (f64 loss bits) and a kill-free gossip
+/// grid matches too — the R×P generalization of the chain parity
+/// contract.
+pub fn reference_dp_losses(spec: &TrainSpec) -> Result<Vec<f64>> {
+    spec.validate()?;
+    if spec.elastic.is_some() {
+        bail!("the in-process reference has no elastic runtime");
+    }
+    let r_count = spec.replicas;
+    let w = &spec.worker;
+    let h = &w.h;
+    let mut pipes = (0..r_count)
+        .map(|r| {
+            let mut trng = Rng::new(w.cfg.seed);
+            let topo = crate::netsim::Topology::uniform(
+                h.stages,
+                crate::netsim::LinkSpec::internet_80m(),
+                &mut trng,
+            );
+            let mut pipe = NativePipeline::new(
+                h.clone(),
+                topo,
+                w.cfg.clone(),
+                w.optim,
+            )?;
+            if r_count > 1 {
+                pipe.reseed_data(spec.shard_seed(r));
+            }
+            Ok(pipe)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let corpus = w.corpus();
+    let m = w.cfg.microbatches as f64;
+    let mut losses = Vec::with_capacity(w.steps);
+    for step in 0..w.steps as u64 {
+        let mut pendings = pipes
+            .iter_mut()
+            .map(|pipe| {
+                pipe.forward_backward(|rng| {
+                    corpus.train_batch(h.b, h.n, rng)
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if r_count > 1 {
+            let stages = pendings[0].grad_acc.len();
+            match spec.reduce {
+                Reduce::None => unreachable!("validate rejects"),
+                Reduce::Ring => {
+                    for s in 0..stages {
+                        let mut flats: Vec<Vec<f32>> = pendings
+                            .iter()
+                            .map(|pd| flatten(&pd.grad_acc[s]))
+                            .collect();
+                        ring_allreduce_local(
+                            &mut flats, spec.dp_mode, h.d, h.k, h.ratio,
+                        )?;
+                        for (pd, fl) in pendings.iter_mut().zip(&flats) {
+                            unflatten(fl, &mut pd.grad_acc[s]);
+                        }
+                    }
+                }
+                Reduce::Gossip { .. } => {
+                    for (a, b) in
+                        gossip_pairs(w.cfg.seed, step, r_count)
+                    {
+                        for s in 0..stages {
+                            let fa = flatten(&pendings[a].grad_acc[s]);
+                            let fb = flatten(&pendings[b].grad_acc[s]);
+                            let ea = encode_grad(
+                                spec.dp_mode, &fa, h.d, h.k, h.ratio,
+                            )?;
+                            let eb = encode_grad(
+                                spec.dp_mode, &fb, h.d, h.k, h.ratio,
+                            )?;
+                            let da = decode_grad(
+                                spec.dp_mode, &ea, fa.len(), h.d, h.k,
+                                h.ratio,
+                            )?;
+                            let db = decode_grad(
+                                spec.dp_mode, &eb, fb.len(), h.d, h.k,
+                                h.ratio,
+                            )?;
+                            let avg: Vec<f32> = da
+                                .iter()
+                                .zip(&db)
+                                .map(|(x, y)| 0.5 * (*x + *y))
+                                .collect();
+                            unflatten(&avg, &mut pendings[a].grad_acc[s]);
+                            unflatten(&avg, &mut pendings[b].grad_acc[s]);
+                        }
+                    }
+                }
+            }
+        }
+        let step_losses: Vec<f64> =
+            pendings.iter().map(|pd| pd.loss_sum / m).collect();
+        for (pipe, pd) in pipes.iter_mut().zip(pendings) {
+            pipe.apply_update(pd)?;
+        }
+        if r_count == 1 {
+            losses.push(step_losses[0]);
+        } else {
+            losses.push(
+                step_losses.iter().sum::<f64>() / r_count as f64,
+            );
+        }
+    }
+    Ok(losses)
+}
+
+/// Concatenate a stage's gradient tensors into one flat vector.
+pub fn flatten(grads: &[Tensor]) -> Vec<f32> {
+    let total: usize = grads.iter().map(Tensor::numel).sum();
+    let mut out = Vec::with_capacity(total);
+    for g in grads {
+        out.extend_from_slice(&g.data);
+    }
+    out
+}
+
+/// Scatter a flat vector back over a stage's gradient tensors.
+pub fn unflatten(flat: &[f32], grads: &mut [Tensor]) {
+    let mut off = 0;
+    for g in grads.iter_mut() {
+        let n = g.numel();
+        g.data.copy_from_slice(&flat[off..off + n]);
+        off += n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dp_modes() -> Vec<Mode> {
+        vec![
+            Mode::Raw,
+            Mode::RawBf16,
+            Mode::Quant,
+            Mode::TopK,
+            Mode::Subspace,
+            Mode::SubspaceBf16,
+        ]
+    }
+
+    fn noisy(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        rng.normal_f32_vec(n, 1.0)
+    }
+
+    #[test]
+    fn chunk_ranges_are_balanced_and_cover() {
+        for (elems, r) in [(1200, 3), (1201, 2), (7, 7), (10, 3)] {
+            let ranges = chunk_ranges(elems, r);
+            assert_eq!(ranges.len(), r);
+            assert_eq!(ranges[0].0, 0);
+            assert_eq!(ranges[r - 1].1, elems);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+            let (min, max) = ranges.iter().fold(
+                (usize::MAX, 0),
+                |(mn, mx), &(a, b)| (mn.min(b - a), mx.max(b - a)),
+            );
+            assert!(max - min <= 1, "unbalanced: {ranges:?}");
+        }
+    }
+
+    #[test]
+    fn grad_codecs_price_exactly_and_roundtrip() {
+        let (d, k, ratio) = (32, 4, 4.0);
+        for mode in dp_modes() {
+            for n in [13usize, 64, 257] {
+                let xs = noisy(mode.wire_tag() as u64 + n as u64, n);
+                let enc = encode_grad(mode, &xs, d, k, ratio).unwrap();
+                assert_eq!(
+                    enc.len(),
+                    dp_wire_bytes(mode, n, d, k, ratio),
+                    "{mode:?} n={n}"
+                );
+                let dec =
+                    decode_grad(mode, &enc, n, d, k, ratio).unwrap();
+                assert_eq!(dec.len(), n);
+                if mode == Mode::Raw {
+                    assert_eq!(dec, xs, "raw must be lossless");
+                }
+                // every dp codec is idempotent: re-encoding the decode
+                // reproduces values (the all-gather consensus property)
+                let enc2 = encode_grad(mode, &dec, d, k, ratio).unwrap();
+                let dec2 =
+                    decode_grad(mode, &enc2, n, d, k, ratio).unwrap();
+                for (a, b) in dec.iter().zip(&dec2) {
+                    assert!(
+                        (a - b).abs() <= 1e-6 * a.abs().max(1.0),
+                        "{mode:?} not stable: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn powerlr_grad_frames_are_rejected() {
+        let xs = noisy(1, 16);
+        let err = encode_grad(Mode::PowerLR, &xs, 32, 4, 4.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("powerlr"), "{err}");
+    }
+
+    #[test]
+    fn ring_local_matches_plain_mean_for_raw() {
+        let n = 101;
+        let r = 3;
+        let mut flats: Vec<Vec<f32>> =
+            (0..r).map(|i| noisy(40 + i as u64, n)).collect();
+        let mean: Vec<f32> = (0..n)
+            .map(|j| {
+                flats.iter().map(|f| f[j]).sum::<f32>() / r as f32
+            })
+            .collect();
+        ring_allreduce_local(&mut flats, Mode::Raw, 32, 4, 4.0).unwrap();
+        for f in &flats {
+            for (a, b) in f.iter().zip(&mean) {
+                assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_local_leaves_replicas_in_consensus_for_lossy_codecs() {
+        for mode in dp_modes() {
+            for r in [2usize, 3, 4] {
+                let n = 97;
+                let mut flats: Vec<Vec<f32>> = (0..r)
+                    .map(|i| noisy(7 * (i as u64 + 1), n))
+                    .collect();
+                ring_allreduce_local(&mut flats, mode, 32, 4, 4.0)
+                    .unwrap();
+                for f in &flats[1..] {
+                    assert_eq!(
+                        flats[0], *f,
+                        "{mode:?} R={r}: replicas diverged after ring"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gossip_pairs_are_deterministic_symmetric_and_disjoint() {
+        for r in [2usize, 3, 4, 5, 8] {
+            for step in 0..20u64 {
+                let pairs = gossip_pairs(17, step, r);
+                assert_eq!(pairs, gossip_pairs(17, step, r));
+                let mut seen = std::collections::HashSet::new();
+                for &(a, b) in &pairs {
+                    assert_ne!(a, b);
+                    assert!(seen.insert(a) && seen.insert(b));
+                    assert_eq!(
+                        gossip_partner(17, step, r, a),
+                        Some(b)
+                    );
+                    assert_eq!(
+                        gossip_partner(17, step, r, b),
+                        Some(a)
+                    );
+                }
+                assert_eq!(pairs.len(), r / 2);
+            }
+            // different steps shuffle differently (almost surely)
+            let all: std::collections::HashSet<_> =
+                (0..20u64).map(|s| gossip_pairs(17, s, r)).collect();
+            if r > 2 {
+                assert!(all.len() > 1, "schedule never varied at R={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_parse_roundtrips() {
+        for r in [
+            Reduce::None,
+            Reduce::Ring,
+            Reduce::Gossip { degree: 1 },
+            Reduce::Gossip { degree: 3 },
+        ] {
+            assert_eq!(Reduce::parse(&r.label()).unwrap(), r);
+        }
+        assert!(Reduce::parse("tree").is_err());
+    }
+
+    fn tiny_spec() -> TrainSpec {
+        TrainSpec::builder(Hyper::tiny_native())
+            .steps(2)
+            .microbatches(2)
+            .seed(5)
+            .lr(1e-2)
+            .warmup(3)
+            .grassmann(0)
+            .corpus(CorpusKind::Wiki, 20_000)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn trainspec_validate_gives_descriptive_errors() {
+        let base = tiny_spec();
+        let mut s = base.clone();
+        s.replicas = 2;
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("--reduce"), "{err}");
+        s.reduce = Reduce::Ring;
+        s.validate().unwrap();
+        s.dp_mode = Mode::PowerLR;
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("powerlr"), "{err}");
+        s.dp_mode = Mode::Raw;
+        s.worker.cfg.grassmann_interval = 10;
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("Grassmann"), "{err}");
+        s.worker.cfg.grassmann_interval = 0;
+        s.reduce = Reduce::Gossip { degree: 2 };
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("degree"), "{err}");
+        s.reduce = Reduce::Gossip { degree: 1 };
+        s.elastic = Some(ElasticOpts::default());
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("elastic"), "{err}");
+    }
+
+    #[test]
+    fn trainspec_digest_covers_the_dp_axis() {
+        let a = tiny_spec();
+        assert!(a.digest().starts_with(b"PMCFG2"));
+        let mut b = a.clone();
+        b.replicas = 2;
+        b.reduce = Reduce::Ring;
+        assert_ne!(a.digest(), b.digest());
+        let mut c = b.clone();
+        c.dp_mode = Mode::Quant;
+        assert_ne!(b.digest(), c.digest());
+        let mut d = b.clone();
+        d.reduce = Reduce::Gossip { degree: 1 };
+        assert_ne!(b.digest(), d.digest());
+        // the worker digest is nested verbatim
+        let mut e = a.clone();
+        e.worker.cfg.seed ^= 1;
+        assert_ne!(a.digest(), e.digest());
+    }
+
+    #[test]
+    fn topology_mismatch_is_rejected() {
+        let spec = tiny_spec();
+        let mut topo = spec.topology(TransportKind::Channel);
+        topo.replicas = 3;
+        let err = launch(&topo, &spec).unwrap_err().to_string();
+        assert!(err.contains("disagrees"), "{err}");
+        let mut topo = spec.topology(TransportKind::Channel);
+        topo.reduce = Reduce::Ring;
+        let err = launch(&topo, &spec).unwrap_err().to_string();
+        assert!(err.contains("reduce"), "{err}");
+        let mut topo = spec.topology(TransportKind::Channel);
+        topo.chaos_kill = Some((0, 1));
+        let err = launch(&topo, &spec).unwrap_err().to_string();
+        assert!(err.contains("gossip"), "{err}");
+    }
+
+    #[test]
+    fn r2_ring_grid_matches_the_reference_bitwise() {
+        let mut spec = tiny_spec();
+        spec.replicas = 2;
+        spec.reduce = Reduce::Ring;
+        spec.dp_mode = Mode::Quant; // lossy: parity must still be exact
+        let topo = spec.topology(TransportKind::Channel);
+        let grid = launch(&topo, &spec).unwrap();
+        let reference = reference_dp_losses(&spec).unwrap();
+        assert_eq!(grid.losses.len(), reference.len());
+        for (a, b) in grid.losses.iter().zip(&reference) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+        assert_eq!(grid.survivors, 2);
+        assert!(grid.dp_payload_bytes > 0);
+    }
+}

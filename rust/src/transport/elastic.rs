@@ -602,6 +602,7 @@ pub fn run_elastic(es: &ElasticSpec, kind: TransportKind) -> Result<ElasticRepor
                             right,
                             Some(&mut ctl as &mut dyn Transport),
                             Some(ctx),
+                            None,
                         )
                     })
                 })
@@ -654,6 +655,7 @@ pub fn run_elastic(es: &ElasticSpec, kind: TransportKind) -> Result<ElasticRepor
                     wire_bytes: wire,
                     frames,
                     frame_payload_bytes: spec.cfg.boundary_bytes(&spec.h),
+                    dp_payload_bytes: 0,
                 },
             });
         }
@@ -999,6 +1001,7 @@ fn serve_elastic_epochs(
                 right,
                 Some(&mut wctl as &mut dyn Transport),
                 Some(&ectx),
+                None,
             );
             drop(wctl);
             {
@@ -1039,6 +1042,7 @@ fn serve_elastic_epochs(
                         wire_bytes: r0.wire_bytes,
                         frames: r0.frames_sent,
                         frame_payload_bytes: spec.cfg.boundary_bytes(&spec.h),
+                        dp_payload_bytes: 0,
                     },
                 });
             }
@@ -1186,6 +1190,7 @@ fn serve_actor(
             right,
             Some(ctl.as_mut()),
             Some(&ectx),
+            None,
         ) {
             // epoch done: loop back and await done / the next epoch
             Ok(_) => {}

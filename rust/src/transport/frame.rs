@@ -6,7 +6,8 @@
 //! offset  size  field
 //! 0       4     magic  b"PMF1"
 //! 4       1     kind   (0 hello, 1 fwd, 2 bwd, 3 step-end, 4 bye,
-//!                       5 heartbeat, 6 checkpoint, 7 reassign)
+//!                       5 heartbeat, 6 checkpoint, 7 reassign,
+//!                       8 grad-ring, 9 grad-gossip)
 //! 5       1     codec  Mode::wire_tag for boundary frames, 0xFF control
 //! 6       2     reserved (zero)
 //! 8       8     step        u64 LE
@@ -69,6 +70,13 @@ pub enum FrameKind {
     /// leader → worker recovery order: epoch, stage, resume boundary
     /// (+ checkpoint payload when a spare takes over a dead stage)
     Reassign,
+    /// one ring-all-reduce chunk of a stage's weight gradients, crossing
+    /// the replica ring (DESIGN.md §14); `microbatch` carries the ring
+    /// phase, the payload is exact `dp_wire_bytes`-priced codec bytes
+    GradRing,
+    /// one gossip exchange of a stage's whole weight gradient with the
+    /// step's scheduled peer — same dp codec payload, no global barrier
+    GradGossip,
 }
 
 impl FrameKind {
@@ -83,6 +91,8 @@ impl FrameKind {
             FrameKind::Heartbeat => 5,
             FrameKind::Checkpoint => 6,
             FrameKind::Reassign => 7,
+            FrameKind::GradRing => 8,
+            FrameKind::GradGossip => 9,
         }
     }
 
@@ -97,6 +107,8 @@ impl FrameKind {
             5 => FrameKind::Heartbeat,
             6 => FrameKind::Checkpoint,
             7 => FrameKind::Reassign,
+            8 => FrameKind::GradRing,
+            9 => FrameKind::GradGossip,
             _ => return None,
         })
     }
@@ -112,6 +124,8 @@ impl FrameKind {
             FrameKind::Heartbeat => "heartbeat",
             FrameKind::Checkpoint => "checkpoint",
             FrameKind::Reassign => "reassign",
+            FrameKind::GradRing => "grad-ring",
+            FrameKind::GradGossip => "grad-gossip",
         }
     }
 }
@@ -152,6 +166,31 @@ impl WireFrame {
             codec: Some(codec),
             step,
             microbatch: microbatch as u32,
+            payload,
+        }
+    }
+
+    /// A gradient frame on the data-parallel axis: one ring chunk
+    /// (`phase` = ring phase index, reusing the microbatch header slot)
+    /// or one whole gossip exchange (`phase` = 0). The payload is the
+    /// dp codec's exact byte string — receivers assert `payload_len ==
+    /// compress::dp_wire_bytes` before decoding.
+    pub fn grad(
+        kind: FrameKind,
+        codec: Mode,
+        step: u64,
+        phase: usize,
+        payload: Vec<u8>,
+    ) -> WireFrame {
+        debug_assert!(matches!(
+            kind,
+            FrameKind::GradRing | FrameKind::GradGossip
+        ));
+        WireFrame {
+            kind,
+            codec: Some(codec),
+            step,
+            microbatch: phase as u32,
             payload,
         }
     }
@@ -414,6 +453,8 @@ mod tests {
             (FrameKind::Heartbeat, 5u8),
             (FrameKind::Checkpoint, 6),
             (FrameKind::Reassign, 7),
+            (FrameKind::GradRing, 8),
+            (FrameKind::GradGossip, 9),
         ] {
             assert_eq!(kind.tag(), tag);
             assert_eq!(FrameKind::from_tag(tag), Some(kind));
@@ -422,6 +463,21 @@ mod tests {
             assert_eq!(bytes[4], tag);
             let g = WireFrame::read_from(&mut Cursor::new(&bytes)).unwrap();
             assert_eq!(g, f);
+        }
+    }
+
+    #[test]
+    fn grad_frames_carry_codec_and_phase() {
+        // the DP kinds (tags 8/9) ride the same header: codec byte names
+        // the dp scheme, the microbatch slot carries the ring phase
+        for kind in [FrameKind::GradRing, FrameKind::GradGossip] {
+            let f = WireFrame::grad(kind, Mode::Quant, 13, 2, vec![9u8; 12]);
+            let bytes = f.to_bytes();
+            assert_eq!(bytes[4], kind.tag());
+            assert_eq!(bytes[5], Mode::Quant.wire_tag());
+            let g = WireFrame::read_from(&mut Cursor::new(&bytes)).unwrap();
+            assert_eq!(g, f);
+            assert_eq!(g.microbatch, 2);
         }
     }
 

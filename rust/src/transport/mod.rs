@@ -26,6 +26,7 @@
 //! data streams and the wire is lossless for what the codec preserves.
 
 pub mod dist;
+pub mod dp;
 pub mod elastic;
 pub mod fault;
 pub mod frame;
@@ -35,6 +36,11 @@ use anyhow::{Context, Result};
 pub use dist::{
     run_local, serve_stage, DistReport, TransportKind, WorkerReport,
     WorkerSpec,
+};
+pub use dp::{
+    gossip_pairs, gossip_partner, launch, reference_dp_losses,
+    ring_allreduce_local, ElasticOpts, LaunchReport, Reduce, Topology,
+    TrainSpec, TrainSpecBuilder,
 };
 pub use elastic::{
     heartbeat_payload, parse_heartbeat, recv_live, run_elastic,

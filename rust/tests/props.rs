@@ -609,6 +609,20 @@ fn prop_every_prefix_of_a_frame_stream_parses_or_classifies_the_cut() {
                 seed + 2,
                 vec![0x12; 25 + rng.below(40)],
             ),
+            WireFrame::grad(
+                FrameKind::GradRing,
+                Mode::Quant,
+                seed + 2,
+                (seed % 5) as usize,
+                vec![0x6A; 4 + rng.below(80)],
+            ),
+            WireFrame::grad(
+                FrameKind::GradGossip,
+                Mode::Raw,
+                seed + 2,
+                0,
+                vec![0x60; 4 * (1 + rng.below(24))],
+            ),
             WireFrame::control(FrameKind::Bye, seed + 2, vec![]),
         ];
         let mut stream = Vec::new();
@@ -660,5 +674,105 @@ fn prop_every_prefix_of_a_frame_stream_parses_or_classifies_the_cut() {
                 );
             }
         }
+    }
+}
+
+#[test]
+fn prop_grad_frame_payloads_roundtrip_for_every_dp_codec() {
+    // gradient frames on the dp wire: for every dp codec and random
+    // gradient, (a) the encoded payload is EXACTLY the dp_wire_bytes
+    // pricing, (b) framing as GradRing/GradGossip and re-parsing is
+    // bit-transparent, and (c) decoding the re-framed payload matches
+    // decoding the original bytes bitwise
+    use protomodels::transport::dp::{decode_grad, encode_grad};
+    use protomodels::transport::{FrameKind, WireFrame};
+    let (d, k) = (32usize, 4usize);
+    for seed in 0..80u64 {
+        let mut rng = Rng::new(seed ^ 0x6A0D);
+        let n = 8 + rng.below(300);
+        let xs = rng.normal_f32_vec(n, 1.0);
+        let ratio = 1.5 + rng.uniform() * 10.0;
+        for mode in [
+            Mode::Raw,
+            Mode::RawBf16,
+            Mode::Quant,
+            Mode::TopK,
+            Mode::Subspace,
+            Mode::NoFixed,
+            Mode::SubspaceBf16,
+        ] {
+            let payload = encode_grad(mode, &xs, d, k, ratio).unwrap();
+            assert_eq!(
+                payload.len(),
+                dp_wire_bytes(mode, n, d, k, ratio),
+                "seed {seed} {mode:?}: payload must price exactly"
+            );
+            let kind = if seed % 2 == 0 {
+                FrameKind::GradRing
+            } else {
+                FrameKind::GradGossip
+            };
+            let wf = WireFrame::grad(
+                kind,
+                mode,
+                seed,
+                (seed % 4) as usize,
+                payload.clone(),
+            );
+            let parsed =
+                WireFrame::read_from(&mut std::io::Cursor::new(wf.to_bytes()))
+                    .unwrap();
+            assert_eq!(parsed.kind, kind);
+            assert_eq!(parsed.codec, Some(mode));
+            assert_eq!(parsed.payload, payload, "seed {seed} {mode:?}");
+            let a = decode_grad(mode, &payload, n, d, k, ratio).unwrap();
+            let b = decode_grad(mode, &parsed.payload, n, d, k, ratio).unwrap();
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "seed {seed} {mode:?} elem {i}"
+                );
+            }
+            // a truncated payload must be rejected, not misdecoded
+            if !payload.is_empty() {
+                assert!(decode_grad(
+                    mode,
+                    &payload[..payload.len() - 1],
+                    n,
+                    d,
+                    k,
+                    ratio
+                )
+                .is_err());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_mode_fromstr_display_roundtrip_is_exhaustive() {
+    // Mode's FromStr/Display pair must round-trip every variant (the
+    // exhaustive Mode::ALL sweep — adding a variant without wiring both
+    // impls fails here), agree with wire_tag's numbering, and reject
+    // unknown or near-miss labels instead of guessing
+    use std::collections::HashSet;
+    let mut seen_labels = HashSet::new();
+    let mut seen_tags = HashSet::new();
+    for m in Mode::ALL {
+        let label = m.to_string();
+        assert_eq!(label, m.as_str());
+        assert!(seen_labels.insert(label.clone()), "duplicate {label}");
+        let back: Mode = label.parse().unwrap();
+        assert_eq!(back, m, "{label} must round-trip");
+        assert!(seen_tags.insert(m.wire_tag()), "duplicate tag for {label}");
+        assert_eq!(Mode::from_wire_tag(m.wire_tag()), Some(m));
+        // labels are canonical: case and whitespace variants are errors
+        assert!(label.to_uppercase().parse::<Mode>().is_err());
+        assert!(format!(" {label}").parse::<Mode>().is_err());
+    }
+    assert_eq!(seen_labels.len(), Mode::ALL.len());
+    for bad in ["", "sub", "raw16", "bf16", "gossip", "none"] {
+        assert!(bad.parse::<Mode>().is_err(), "{bad:?} must not parse");
     }
 }

@@ -276,3 +276,173 @@ fn dist_stage(
 ) -> anyhow::Result<protomodels::transport::WorkerReport> {
     protomodels::transport::dist::run_stage(s, stage, left, right)
 }
+
+// ---------------------------------------------------------------------------
+// the data-parallel axis (DESIGN.md §14): R×P grids vs the in-process
+// replica path
+// ---------------------------------------------------------------------------
+
+/// A validated R×P grid spec on the tiny preset.
+fn grid_spec(
+    replicas: usize,
+    stages: usize,
+    dp_mode: Mode,
+    reduce: protomodels::transport::Reduce,
+    steps: usize,
+) -> protomodels::transport::TrainSpec {
+    let mut t =
+        protomodels::transport::TrainSpec::from_worker(spec(
+            Mode::Subspace,
+            steps,
+            stages,
+        ));
+    t.replicas = replicas;
+    t.dp_mode = dp_mode;
+    t.reduce = reduce;
+    t.validate().expect("grid spec validates");
+    t
+}
+
+#[test]
+fn ring_grid_matrix_matches_the_replica_reference_bitwise() {
+    // the acceptance matrix: R ∈ {1,2,3} × every dp codec, over
+    // channel — a ring grid's per-step loss (mean over replicas) must
+    // reproduce the single-process replica path BITWISE, because the
+    // wire ring performs the identical codec arithmetic in the
+    // identical order (lossy codecs are deterministically lossy)
+    use protomodels::transport::{launch, reference_dp_losses, Reduce};
+    for replicas in [1usize, 2, 3] {
+        for dp_mode in [
+            Mode::Raw,
+            Mode::RawBf16,
+            Mode::Quant,
+            Mode::TopK,
+            Mode::Subspace,
+            Mode::SubspaceBf16,
+        ] {
+            let reduce =
+                if replicas == 1 { Reduce::None } else { Reduce::Ring };
+            let t = grid_spec(replicas, 2, dp_mode, reduce, 3);
+            let reference = reference_dp_losses(&t)
+                .unwrap_or_else(|e| panic!("reference R={replicas}: {e}"));
+            let rep = launch(&t.topology(TransportKind::Channel), &t)
+                .unwrap_or_else(|e| {
+                    panic!("R={replicas} {dp_mode:?} grid: {e}")
+                });
+            assert_bitwise(
+                &format!("ring R={replicas} {dp_mode:?}"),
+                &reference,
+                &rep.losses,
+            );
+            assert_eq!(rep.survivors, replicas);
+            if replicas > 1 {
+                assert!(rep.dp_payload_bytes > 0, "dp wire was silent");
+            } else {
+                assert_eq!(rep.dp_payload_bytes, 0);
+            }
+            // R = 1 is exactly the classic single-chain run
+            if replicas == 1 && dp_mode == Mode::Raw {
+                let sp = single_process(&t.worker);
+                assert_bitwise("R=1 vs single-process", &sp, &rep.losses);
+            }
+        }
+    }
+}
+
+#[test]
+fn tcp_ring_grid_matches_the_replica_reference_bitwise() {
+    // same contract over real loopback sockets (both dp mesh and chains)
+    use protomodels::transport::{launch, reference_dp_losses, Reduce};
+    for dp_mode in [Mode::Raw, Mode::Subspace] {
+        let t = grid_spec(2, 2, dp_mode, Reduce::Ring, 3);
+        let reference = reference_dp_losses(&t).expect("reference");
+        let rep = launch(&t.topology(TransportKind::Tcp), &t)
+            .unwrap_or_else(|e| panic!("tcp grid {dp_mode:?}: {e}"));
+        assert_bitwise(
+            &format!("tcp ring {dp_mode:?}"),
+            &reference,
+            &rep.losses,
+        );
+    }
+}
+
+#[test]
+fn gossip_grid_without_churn_matches_the_reference_bitwise() {
+    // kill-free gossip is ALSO deterministic: the pair schedule is
+    // seeded, both pair members average the identical post-codec
+    // values, so the grid matches the in-process gossip emulation
+    // bitwise (the stronger envelope contract lives in chaos.rs)
+    use protomodels::transport::{launch, reference_dp_losses, Reduce};
+    for (replicas, dp_mode) in
+        [(2usize, Mode::Raw), (3, Mode::Quant), (3, Mode::Raw)]
+    {
+        let t = grid_spec(
+            replicas,
+            2,
+            dp_mode,
+            Reduce::Gossip { degree: 1 },
+            4,
+        );
+        let reference = reference_dp_losses(&t).expect("reference");
+        let rep = launch(&t.topology(TransportKind::Channel), &t)
+            .unwrap_or_else(|e| {
+                panic!("gossip R={replicas} {dp_mode:?}: {e}")
+            });
+        assert_bitwise(
+            &format!("gossip R={replicas} {dp_mode:?}"),
+            &reference,
+            &rep.losses,
+        );
+        assert_eq!(rep.survivors, replicas);
+    }
+}
+
+#[test]
+fn ring_dp_payload_bytes_match_the_memory_pricing() {
+    // every gradient frame's payload is priced by dp_wire_bytes; the
+    // run's dp byte total must therefore equal the memory model's
+    // ring pricing (minus the frame headers it includes) exactly
+    use protomodels::memory::dp_ring_step_wire_bytes;
+    use protomodels::transport::{launch, Reduce, HEADER_LEN};
+    let t = grid_spec(2, 2, Mode::Subspace, Reduce::Ring, 2);
+    let w = &t.worker;
+    // measure each stage's gradient element count in process
+    let h = w.h.clone();
+    let mut rng = Rng::new(w.cfg.seed);
+    let topo =
+        Topology::uniform(h.stages, LinkSpec::internet_80m(), &mut rng);
+    let mut pipe =
+        NativePipeline::new(h.clone(), topo, w.cfg.clone(), w.optim)
+            .expect("pipe");
+    let corpus = w.corpus();
+    let pending = pipe
+        .forward_backward(|r| corpus.train_batch(h.b, h.n, r))
+        .expect("fb");
+    let elems: Vec<usize> = pending
+        .grad_acc
+        .iter()
+        .map(|g| g.iter().map(|t| t.numel()).sum())
+        .collect();
+    let r = t.replicas;
+    let per_step: u64 = elems
+        .iter()
+        .map(|&e| {
+            let priced = dp_ring_step_wire_bytes(
+                e, r, t.dp_mode, h.d, h.k, h.ratio,
+            ) as u64;
+            // the pricing includes one header per frame; the report
+            // counts codec payload only
+            priced - (2 * (r - 1) * r * HEADER_LEN) as u64
+        })
+        .sum();
+    // every replica worker counts its own sends: R× the per-ring total
+    // is already folded in (each of the R workers sends 2(R−1) frames,
+    // which together cover each chunk once per phase)
+    let rep = launch(&t.topology(TransportKind::Channel), &t)
+        .expect("grid");
+    assert_eq!(
+        rep.dp_payload_bytes,
+        per_step * w.steps as u64,
+        "measured dp payload diverged from memory::dp_ring_step_wire_bytes"
+    );
+}
