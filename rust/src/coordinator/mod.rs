@@ -455,8 +455,9 @@ impl Pipeline {
         self.rt.with(|r| r.total_compute_seconds())
     }
 
-    /// CSV-formatted per-entry timing table (profiling).
-    pub fn timing_report(&self) -> String {
+    /// Structured per-entry timing table (profiling); its `Display`
+    /// renders the legacy `entry,calls,total_s,mean_ms` CSV text.
+    pub fn timing_report(&self) -> crate::obs::counters::TimingReport {
         self.rt.with(|r| r.timing_report())
     }
 

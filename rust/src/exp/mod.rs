@@ -1579,6 +1579,92 @@ pub fn dp_real(opts: &ExpOpts) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// trace-diff: recorded spans replayed against the event engine
+// ---------------------------------------------------------------------------
+
+/// Record a small distributed channel run with the span tracer, then
+/// replay the recorded per-(stage, microbatch) compute spans and frame
+/// sends through the §9 event engine and report per-task placement
+/// error (DESIGN.md §15). The engine is fed the *measured* durations
+/// from the trace, so the comparison isolates the scheduler's task
+/// placement from machine speed — what remains is host-side queueing
+/// and thread wakeup latency the engine does not model. Emits
+/// `fig_trace_diff.csv` (one row per task) and prints the summary; no
+/// hard threshold is asserted here (wall-clock noise is
+/// machine-dependent), the CI smoke job applies its ceiling to the
+/// printed mean.
+pub fn trace_diff(opts: &ExpOpts) -> Result<()> {
+    use crate::nn::Optim;
+    use crate::obs::diff::diff_trace;
+    use crate::obs::trace::{Clock, TraceSession};
+    use crate::transport::{run_local, TransportKind, WorkerSpec};
+
+    let steps = opts.steps_or(8, 4);
+    let h = Hyper::tiny_native();
+    let cfg = PipelineConfig {
+        mode: Mode::Subspace,
+        microbatches: 4,
+        grassmann_interval: 0,
+        lr: 1e-2,
+        warmup_steps: 3,
+        total_steps: steps,
+        seed: opts.seed,
+        ..Default::default()
+    };
+    let spec = WorkerSpec {
+        h: h.clone(),
+        cfg,
+        optim: Optim::AdamW,
+        steps,
+        corpus_kind: CorpusKind::Wiki,
+        corpus_tokens: 100_000,
+    };
+    let session = TraceSession::start(Clock::Host);
+    let rep = run_local(&spec, TransportKind::Channel)?;
+    let trace = session.stop();
+    if rep.losses.len() != steps {
+        bail!("traced run logged {} of {steps} steps", rep.losses.len());
+    }
+    let report = diff_trace(&trace, Schedule::Gpipe)?;
+    if report.rows.is_empty() {
+        bail!("trace-diff produced no comparable tasks");
+    }
+    if !report.max_rel_err.is_finite() {
+        bail!("trace-diff relative error is not finite");
+    }
+    let mut csv = CsvWriter::create(
+        opts.out_dir.join("fig_trace_diff.csv"),
+        &[
+            "step",
+            "stage",
+            "mb",
+            "class",
+            "measured_start_s",
+            "measured_end_s",
+            "predicted_start_s",
+            "predicted_end_s",
+            "rel_err",
+        ],
+    )?;
+    for r in &report.rows {
+        csv.row(&[
+            r.step.to_string(),
+            r.stage.to_string(),
+            r.mb.to_string(),
+            r.class.to_string(),
+            format!("{:.6}", r.measured_start_s),
+            format!("{:.6}", r.measured_end_s),
+            format!("{:.6}", r.predicted_start_s),
+            format!("{:.6}", r.predicted_end_s),
+            format!("{:.4}", r.rel_err),
+        ])?;
+    }
+    csv.finish()?;
+    eprintln!("[trace-diff] {}", report.summary());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // dispatcher
 // ---------------------------------------------------------------------------
 
@@ -1606,6 +1692,7 @@ pub const ALL: &[&str] = &[
     "error-accumulation",
     "transport-report",
     "dp-real",
+    "trace-diff",
 ];
 
 /// Run one experiment driver by name (`"all"` runs the full suite).
@@ -1635,6 +1722,7 @@ pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
         "error-accumulation" => error_accumulation(opts),
         "transport-report" => transport_report(opts),
         "dp-real" => dp_real(opts),
+        "trace-diff" => trace_diff(opts),
         "all" => {
             for e in ALL {
                 eprintln!("=== exp {e} ===");

@@ -27,6 +27,7 @@ pub mod memory;
 pub mod metrics;
 pub mod netsim;
 pub mod nn;
+pub mod obs;
 pub mod par;
 pub mod rng;
 pub mod runtime;

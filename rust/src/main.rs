@@ -17,6 +17,8 @@ use protomodels::exp::{self, ExpOpts};
 use protomodels::manifest::Manifest;
 use protomodels::metrics::{perplexity, RunLog};
 use protomodels::netsim::{LinkSpec, ReplicaRing, Topology};
+use protomodels::obs::counters::RunMetrics;
+use protomodels::obs::trace::{Clock, Trace, TraceSession};
 use protomodels::par;
 use protomodels::rng::Rng;
 use protomodels::sim::{simulate_swarm, ChurnSpec, ChurnTimeline, Schedule, SwarmSpec};
@@ -49,11 +51,13 @@ USAGE:
                       [--stale-ms 5000] [--hb-every 1] [--spares 1]
                       [--max-epochs 8]           (elastic native runtime)
                       [--artifacts artifacts] [--out results] [--label NAME]
+                      [--trace trace.json]       (span trace + METRICS.json)
   protomodels serve   --stage I [--config tiny] [--mode subspace] [--steps 200]
                       [--microbatches 4] [--seed 17] [--optim adamw]
                       [--schedule gpipe|1f1b] [--grassmann 0]
                       [--host 127.0.0.1] [--port-base 7070]
                       [--elastic] [--spare] [+ elastic train flags]
+                      [--trace trace.json]
   protomodels sim     [--preset base|small] [--replicas 4] [--steps 5]
                       [--bandwidth 80mbps] [--dp-bandwidth 80mbps]
                       [--mode subspace] [--dp-mode subspace]
@@ -61,12 +65,14 @@ USAGE:
                       [--schedule gpipe|1f1b|interleaved[:chunks]]
                       [--microbatches 8] [--jitter 0.2] [--churn-rate 0.0]
                       [--downtime 0.5] [--hetero 1,1,2] [--seed 17]
+                      [--trace trace.json]       (virtual-clock spans)
   protomodels exp     <name|all> [--fast] [--steps N] [--seed N]
                       [--threads N] [--exact-rank]
                       [--artifacts artifacts] [--out results]
       names: {}
   protomodels inspect [--artifacts artifacts]
   protomodels timing  [--config tiny] [--steps 3]
+  protomodels trace   <trace.json>   (summarize a recorded span trace)
   protomodels bench   [--json] [--fast] [--out .] [--threads N]
                       [--check BENCH_baseline] [--max-regress 0.25]
                       [--compare <old.json> <new.json>]
@@ -127,6 +133,16 @@ the committed baseline and fails on >25% wall-time regression;
 between two suite files. The raw-bf16 / subspace-bf16 modes ship bf16
 boundary payloads (truncate on encode, widen exactly on decode) at
 half the wire bytes of their f32 base modes (DESIGN.md §13).
+
+--trace <path> records every span the run emits — fwd/bwd per (stage,
+microbatch), codec encode/decode, every transport frame, ring/gossip
+reduce phases, heartbeats, checkpoints — as Chrome trace_event JSON
+(open in https://ui.perfetto.dev) and writes METRICS.json (the unified
+counter registry) beside it; tracing off or on, loss curves are
+bitwise identical. `protomodels trace <file>` summarizes a recording;
+`exp trace-diff` replays one against the event engine's predicted
+timeline (DESIGN.md §15). PROTOMODELS_LOG=error|warn|info|debug
+enables leveled runtime diagnostics on stderr (default: off).
 ",
         exp::ALL.join(", ")
     );
@@ -144,6 +160,47 @@ fn make_topo(flags: &Flags, stages: usize, rng: &mut Rng) -> Result<Topology> {
         return Ok(Topology::global_regions(stages, rng));
     }
     Ok(Topology::uniform(stages, bandwidth_spec(flags, "bandwidth", "80mbps")?, rng))
+}
+
+/// `--trace <path>` plumbing shared by train/serve/sim: when the flag
+/// is present, record the run in a [`TraceSession`] and on `finish`
+/// write the Chrome-JSON trace plus a sibling `METRICS.json` holding
+/// the unified counter registry (DESIGN.md §15).
+struct TraceOut {
+    path: std::path::PathBuf,
+    session: TraceSession,
+}
+
+impl TraceOut {
+    fn start(flags: &Flags, clock: Clock) -> Option<TraceOut> {
+        let path = flags.opt("trace")?;
+        Some(TraceOut {
+            path: path.into(),
+            session: TraceSession::start(clock),
+        })
+    }
+
+    fn finish(self, extra: impl FnOnce(&mut RunMetrics)) -> Result<()> {
+        let trace = self.session.stop();
+        trace.write_file(&self.path)?;
+        let mut m = RunMetrics::new();
+        m.absorb_trace(&trace);
+        extra(&mut m);
+        let mpath = self
+            .path
+            .parent()
+            .map(|p| p.to_path_buf())
+            .unwrap_or_default()
+            .join("METRICS.json");
+        m.write_file(&mpath)?;
+        println!(
+            "trace: {} events -> {}  metrics -> {}",
+            trace.events.len(),
+            self.path.display(),
+            mpath.display()
+        );
+        Ok(())
+    }
 }
 
 /// Build the native backend's [`WorkerSpec`] from CLI flags — shared by
@@ -301,7 +358,11 @@ fn train_native_elastic(
         es.spares,
         es.chaos.to_script(),
     );
+    let tr = TraceOut::start(flags, Clock::Host);
     let launched = transport::launch(&spec.topology(kind), &spec)?;
+    if let Some(tr) = tr {
+        tr.finish(|m| m.absorb_launch(&launched))?;
+    }
     let report = *launched.elastic.expect("elastic runs report detail");
     let label = flags.str(
         "label",
@@ -388,7 +449,11 @@ fn train_native_grid(
         steps,
         w.cfg.boundary_bytes(&w.h),
     );
+    let tr = TraceOut::start(flags, Clock::Host);
     let report = transport::launch(&topo, &spec)?;
+    if let Some(tr) = tr {
+        tr.finish(|m| m.absorb_launch(&report))?;
+    }
     let label = flags.str(
         "label",
         &format!(
@@ -476,6 +541,7 @@ fn train_native(flags: &Flags) -> Result<()> {
         ),
     );
     let mut log = RunLog::create(flags.str("out", "results"), &label)?;
+    let tr = TraceOut::start(flags, Clock::Host);
     for step in 0..steps {
         let stats =
             backend.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
@@ -492,6 +558,9 @@ fn train_native(flags: &Flags) -> Result<()> {
         }
     }
     let val = backend.eval(8, |r| corpus.val_batch(h.b, h.n, r))?;
+    if let Some(tr) = tr {
+        tr.finish(|_| {})?;
+    }
     println!(
         "final (native, {}): val_loss {:.4}  val_ppl {:.2}  mean_tps {:.1}  \
          subspace_leak {:.2e}",
@@ -562,6 +631,7 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     let topo = make_topo(flags, h.stages, &mut rng)?;
     let mut pipe = Pipeline::new(&manifest, &config, topo, pcfg)?;
     let mut log = RunLog::create(flags.str("out", "results"), &label)?;
+    let tr = TraceOut::start(flags, Clock::Host);
     for step in 0..steps {
         let stats = pipe.train_step(|r| corpus.train_batch(h.b, h.n, r))?;
         log.log(&stats)?;
@@ -577,6 +647,9 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         }
     }
     let val = pipe.eval(8, |r| corpus.val_batch(h.b, h.n, r))?;
+    if let Some(tr) = tr {
+        tr.finish(|m| m.absorb_timing(&pipe.timing_report()))?;
+    }
     println!(
         "final: val_loss {:.4}  val_ppl {:.2}  mean_tps {:.1}  subspace_leak {:.2e}",
         val,
@@ -707,7 +780,11 @@ fn cmd_sim(flags: &Flags) -> Result<()> {
         };
     }
 
+    let tr = TraceOut::start(flags, Clock::Virtual);
     let rep = simulate_swarm(&spec)?;
+    if let Some(tr) = tr {
+        tr.finish(|_| {})?;
+    }
     println!(
         "swarm: {preset} x{replicas} replicas, {} schedule, {} steps, \
          jitter {jitter}, churn {rate}/s",
@@ -768,8 +845,12 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         spec.cfg.mode.as_str(),
         spec.steps,
     );
+    let tr = TraceOut::start(flags, Clock::Host);
     let report =
         transport::serve_stage(&spec, stage, &host, port_base as u16)?;
+    if let Some(tr) = tr {
+        tr.finish(|_| {})?;
+    }
     if stage == 0 {
         for (i, loss) in report.losses.iter().enumerate() {
             if i % 10 == 0 || i + 1 == report.losses.len() {
@@ -821,7 +902,11 @@ fn cmd_serve_elastic(flags: &Flags, spec: WorkerSpec) -> Result<()> {
             es.worker.h.stages - 1,
             es.spares,
         );
+        let tr = TraceOut::start(flags, Clock::Host);
         let report = transport::serve_elastic(&es, &host, port_base)?;
+        if let Some(tr) = tr {
+            tr.finish(|m| m.absorb_elastic(&report))?;
+        }
         for (i, loss) in report.losses.iter().enumerate() {
             if i % 10 == 0 || i + 1 == report.losses.len() {
                 println!("step {:>5}  loss {loss:.4}", i + 1);
@@ -860,6 +945,17 @@ fn cmd_serve_elastic(flags: &Flags, spec: WorkerSpec) -> Result<()> {
         }
         Err(e) => Err(e),
     }
+}
+
+/// `trace <file>`: print the per-(cat, name) summary of a recorded
+/// trace file (event count, total duration, summed `bytes`).
+fn cmd_trace(flags: &Flags) -> Result<()> {
+    let path = flags.positional.first().ok_or_else(|| {
+        anyhow::anyhow!("usage: protomodels trace <trace.json>")
+    })?;
+    let trace = Trace::read_file(std::path::Path::new(path))?;
+    print!("{}", trace.summary());
+    Ok(())
 }
 
 fn cmd_inspect(flags: &Flags) -> Result<()> {
@@ -1368,6 +1464,38 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
         transport_entries
             .push(BenchEntry { result: r, items_per_iter: None });
 
+        // tracing cost on the same distributed step over in-process
+        // channels: the off entry measures the disabled fast path (one
+        // relaxed atomic load per span site), the on entry records
+        // every span into an active session
+        let r_off = bench.run("trace_overhead_off_step_channel", || {
+            let rep = protomodels::transport::run_local(
+                black_box(&spec),
+                protomodels::transport::TransportKind::Channel,
+            )
+            .expect("channel distributed step");
+            black_box(rep.losses.len());
+        });
+        let off_ns = r_off.mean_ns;
+        transport_entries
+            .push(BenchEntry { result: r_off, items_per_iter: None });
+        let session = TraceSession::start(Clock::Host);
+        let r_on = bench.run("trace_overhead_on_step_channel", || {
+            let rep = protomodels::transport::run_local(
+                black_box(&spec),
+                protomodels::transport::TransportKind::Channel,
+            )
+            .expect("channel distributed step");
+            black_box(rep.losses.len());
+        });
+        drop(session.stop());
+        println!(
+            "    -> tracing overhead: {:+.1}%",
+            (r_on.mean_ns / off_ns - 1.0) * 100.0
+        );
+        transport_entries
+            .push(BenchEntry { result: r_on, items_per_iter: None });
+
         // the dp gradient-reduce primitives, in process: the exact
         // codec arithmetic every grid hop runs (transport/dp.rs),
         // minus sockets — stable enough for a wall-time ceiling
@@ -1443,6 +1571,7 @@ fn main() -> Result<()> {
         "sim" => cmd_sim(&flags),
         "inspect" => cmd_inspect(&flags),
         "timing" => cmd_timing(&flags),
+        "trace" => cmd_trace(&flags),
         "exp" => {
             let name = flags
                 .positional

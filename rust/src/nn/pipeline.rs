@@ -37,6 +37,7 @@ use crate::coordinator::{PipelineConfig, StepStats};
 use crate::linalg;
 use crate::manifest::Hyper;
 use crate::netsim::Topology;
+use crate::obs::trace;
 use crate::rng::Rng;
 use crate::stage::{constrained, GlobalState, StageState};
 use crate::tensor::{IntTensor, Tensor};
@@ -311,6 +312,7 @@ impl NativePipeline {
         mb: usize,
         dir: BoundaryDir,
     ) -> (Tensor, usize) {
+        let tt = trace::begin();
         let bytes = self.boundary_bytes();
         let frame =
             encode_boundary(&self.cfg, &self.h, t, stage, mb, dir, self.step);
@@ -327,7 +329,24 @@ impl NativePipeline {
             );
             frame.wire_len()
         };
-        (compress::decode(&frame), wire)
+        let delivered = compress::decode(&frame);
+        if trace::enabled() {
+            trace::set_track(0, stage as u32);
+            trace::end(
+                "codec",
+                match dir {
+                    BoundaryDir::Fwd => "ship:fwd",
+                    BoundaryDir::Bwd => "ship:bwd",
+                },
+                tt,
+                vec![
+                    trace::u("step", self.step),
+                    trace::u("mb", mb as u64),
+                    trace::u("bytes", wire as u64),
+                ],
+            );
+        }
+        (delivered, wire)
     }
 
     fn note_peak(&mut self, tape: &Tape, extra: usize) {
@@ -436,7 +455,11 @@ impl NativePipeline {
             let mut saved_inputs: Vec<Option<Tensor>> = vec![None; p];
             let mut saved_bytes = 0usize;
             for s in 0..last {
+                if trace::enabled() {
+                    trace::set_track(0, s as u32);
+                }
                 let t0 = Instant::now();
+                let tt = trace::begin();
                 let built = build_stage(
                     &h,
                     self.cfg.mode,
@@ -451,6 +474,17 @@ impl NativePipeline {
                     },
                 );
                 let out = built.tape.value(built.output).clone();
+                if trace::enabled() {
+                    trace::end(
+                        "compute",
+                        "fwd",
+                        tt,
+                        vec![
+                            trace::u("step", self.step),
+                            trace::u("mb", mb as u64),
+                        ],
+                    );
+                }
                 costs.fwd[s][mb] = stage_seconds(
                     tm,
                     &h,
@@ -471,7 +505,11 @@ impl NativePipeline {
                 saved_inputs[s + 1] = Some(delivered);
             }
             // ---- last stage: fused fwd + loss + bwd
+            if trace::enabled() {
+                trace::set_track(0, last as u32);
+            }
             let t0 = Instant::now();
+            let tt = trace::begin();
             let mut built = build_stage(
                 &h,
                 self.cfg.mode,
@@ -500,6 +538,17 @@ impl NativePipeline {
                 compressed,
                 Some(t0.elapsed().as_secs_f64()),
             );
+            if trace::enabled() {
+                trace::end(
+                    "compute",
+                    "fused",
+                    tt,
+                    vec![
+                        trace::u("step", self.step),
+                        trace::u("mb", mb as u64),
+                    ],
+                );
+            }
             // matmul weight grads went straight into grad_acc; harvest
             // the tape-held rest (LayerNorm gains/biases, t_s)
             Self::accumulate_grads(&built, &mut grad_acc[last]);
@@ -526,7 +575,11 @@ impl NativePipeline {
                 costs.tx_bwd[s][mb] = Tx { ser, lat };
                 wire += nbytes as u64;
 
+                if trace::enabled() {
+                    trace::set_track(0, s as u32);
+                }
                 let t0 = Instant::now();
+                let tt = trace::begin();
                 let mut built = build_stage(
                     &h,
                     self.cfg.mode,
@@ -554,6 +607,17 @@ impl NativePipeline {
                     compressed,
                     Some(t0.elapsed().as_secs_f64()),
                 );
+                if trace::enabled() {
+                    trace::end(
+                        "compute",
+                        "bwd",
+                        tt,
+                        vec![
+                            trace::u("step", self.step),
+                            trace::u("mb", mb as u64),
+                        ],
+                    );
+                }
                 Self::accumulate_grads(&built, &mut grad_acc[s]);
                 self.note_peak(&built.tape, grad_acc_bytes + saved_bytes);
                 if s > 0 {
@@ -595,7 +659,11 @@ impl NativePipeline {
         let t_opt = (self.step + 1) as f32;
         let u = self.global.u.clone();
         for s in 0..p {
+            if trace::enabled() {
+                trace::set_track(0, s as u32);
+            }
             let t0 = Instant::now();
+            let tt = trace::begin();
             step_stage(
                 &mut self.stages[s],
                 &grad_acc[s],
@@ -614,6 +682,14 @@ impl NativePipeline {
                 compressed,
                 Some(t0.elapsed().as_secs_f64()),
             );
+            if trace::enabled() {
+                trace::end(
+                    "compute",
+                    "opt",
+                    tt,
+                    vec![trace::u("step", self.step)],
+                );
+            }
         }
 
         // ---- Grassmann subspace maintenance (Sec. 4.5)
@@ -657,6 +733,10 @@ impl NativePipeline {
     /// distributed transport's last-stage worker.
     fn grassmann_update(&mut self) -> f64 {
         let h = self.h.clone();
+        if trace::enabled() {
+            trace::set_track(0, (h.stages - 1) as u32);
+        }
+        let tt = trace::begin();
         let t0 = Instant::now();
         self.global.u = grassmann_step_u(
             &self.global.u,
@@ -687,6 +767,14 @@ impl NativePipeline {
         secs += self.topo.broadcast(h.d * h.k * 4);
         self.s_acc = Tensor::zeros(&[h.d, h.d]);
         self.s_count = 0;
+        if trace::enabled() {
+            trace::end(
+                "compute",
+                "grassmann",
+                tt,
+                vec![trace::u("step", self.step)],
+            );
+        }
         secs
     }
 
@@ -756,9 +844,10 @@ impl NativePipeline {
     /// (the Grassmann accumulator rides with the last stage, mirroring
     /// the one distributed worker that owns it).
     pub fn checkpoint(&self, codec: crate::compress::CkptCodec) -> Vec<Vec<u8>> {
+        let tt = trace::begin();
         let last = self.h.stages - 1;
         let with_acc = self.compressed();
-        (0..self.h.stages)
+        let blobs: Vec<Vec<u8>> = (0..self.h.stages)
             .map(|s| {
                 crate::compress::ckpt::encode_stage(
                     &self.stages[s],
@@ -770,7 +859,20 @@ impl NativePipeline {
                     codec,
                 )
             })
-            .collect()
+            .collect();
+        if trace::enabled() {
+            let bytes: usize = blobs.iter().map(Vec::len).sum();
+            trace::end(
+                "ckpt",
+                "write",
+                tt,
+                vec![
+                    trace::u("step", self.step),
+                    trace::u("bytes", bytes as u64),
+                ],
+            );
+        }
+        blobs
     }
 
     /// Restore from per-stage checkpoint blobs taken at step boundary
@@ -781,6 +883,7 @@ impl NativePipeline {
     /// **bitwise** the uninterrupted run. Restoring backwards is
     /// rejected: the RNG stream cannot rewind (build a fresh pipeline).
     pub fn restore(&mut self, blobs: &[Vec<u8>], step: u64) -> Result<()> {
+        let tt = trace::begin();
         if blobs.len() != self.h.stages {
             bail!(
                 "restore got {} blobs for a {}-stage pipeline",
@@ -827,6 +930,18 @@ impl NativePipeline {
             let _ = self.rng.fork(0xDA7A ^ s);
         }
         self.step = step;
+        if trace::enabled() {
+            let bytes: usize = blobs.iter().map(Vec::len).sum();
+            trace::end(
+                "ckpt",
+                "restore",
+                tt,
+                vec![
+                    trace::u("step", step),
+                    trace::u("bytes", bytes as u64),
+                ],
+            );
+        }
         Ok(())
     }
 }

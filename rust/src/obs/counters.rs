@@ -1,0 +1,531 @@
+//! Unified run metrics: monotonic counters, gauges, and fixed-bucket
+//! histograms with deterministic snapshot ordering (DESIGN.md §15).
+//!
+//! One [`RunMetrics`] registry per run replaces the scattered byte /
+//! [`FaultStats`] / `LaunchReport.replica_step_seconds` accounting:
+//! drivers absorb their reports (and, when tracing, the recorded
+//! [`Trace`]) into the registry and dump it as `METRICS.json` at run
+//! end. Everything is a `BTreeMap`, so the snapshot is byte-stable and
+//! assertable in tests — in particular the per-frame wire-byte
+//! counters must equal the `memory::*_wire_bytes` analytic models
+//! exactly (`tests/obs.rs`).
+//!
+//! Counter naming convention (dot-separated, lowercase):
+//! `frames.sent.<kind>` / `frames.recv.<kind>`,
+//! `bytes.wire.<kind>` / `bytes.payload.<kind>` (sender-side),
+//! `fault.<outcome>`, `liveness.<field>`, `elastic.<field>`,
+//! `dp.<field>`, `timing.calls.<entry>`; gauges use the same scheme
+//! for non-monotonic values (`timing.total_s.<entry>`,
+//! `step.mean_seconds`); histogram names are `span_ms.<cat>`.
+
+use std::collections::{BTreeMap, HashMap};
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::json::Json;
+use crate::obs::trace::{Arg, Trace};
+use crate::transport::{
+    ElasticReport, FaultStats, LaunchReport, LivenessMonitor,
+};
+
+/// Default bucket upper bounds (milliseconds) for span-duration
+/// histograms: spans in this repo range from sub-10 µs frame sends to
+/// multi-second fused stage steps.
+pub const SPAN_MS_BOUNDS: [f64; 6] =
+    [0.01, 0.1, 1.0, 10.0, 100.0, 1000.0];
+
+/// A fixed-bucket histogram: `counts[i]` holds observations
+/// `<= bounds[i]`, and the final slot is the overflow bucket, so
+/// `counts.len() == bounds.len() + 1`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hist {
+    /// Inclusive upper bounds, strictly increasing.
+    pub bounds: Vec<f64>,
+    /// Per-bucket observation counts (last = overflow).
+    pub counts: Vec<u64>,
+}
+
+impl Hist {
+    /// Empty histogram over the given bucket bounds.
+    pub fn new(bounds: &[f64]) -> Hist {
+        Hist {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+        }
+    }
+
+    /// Count one observation into its bucket.
+    pub fn observe(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|b| v <= *b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+    }
+
+    /// Total observations across all buckets.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
+/// The per-run metrics registry. Deterministic by construction: all
+/// three families live in `BTreeMap`s, so [`RunMetrics::to_json`]
+/// output depends only on what was recorded, never on insertion or
+/// thread order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RunMetrics {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Hist>,
+}
+
+impl RunMetrics {
+    /// Fresh empty registry.
+    pub fn new() -> RunMetrics {
+        RunMetrics::default()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty()
+            && self.gauges.is_empty()
+            && self.hists.is_empty()
+    }
+
+    /// Add `by` to the monotonic counter `name` (created at 0).
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Set the gauge `name` to `v` (last write wins).
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Count `v` into histogram `name`, creating it over `bounds` on
+    /// first use (later calls keep the original bounds).
+    pub fn observe(&mut self, name: &str, bounds: &[f64], v: f64) {
+        self.hists
+            .entry(name.to_string())
+            .or_insert_with(|| Hist::new(bounds))
+            .observe(v);
+    }
+
+    /// Current value of counter `name` (0 when never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Current value of gauge `name`.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Histogram `name`, if any observation created it.
+    pub fn hist(&self, name: &str) -> Option<&Hist> {
+        self.hists.get(name)
+    }
+
+    /// Fold a recorded trace into the registry: every `frame`-category
+    /// send/recv event becomes `frames.(sent|recv).<kind>` counts
+    /// (byte counters sum **sender-side** only, so in-process runs
+    /// never double-count a frame), and every complete span feeds the
+    /// `span_ms.<cat>` duration histogram.
+    pub fn absorb_trace(&mut self, trace: &Trace) {
+        for e in &trace.events {
+            if e.cat == "frame" {
+                if let Some((dir, kind)) = e.name.split_once(':') {
+                    let dir = match dir {
+                        "send" => "sent",
+                        "recv" => "recv",
+                        _ => continue,
+                    };
+                    self.inc(&format!("frames.{dir}.{kind}"), 1);
+                    self.inc(&format!("frames.{dir}"), 1);
+                    if dir == "sent" {
+                        for (k, v) in &e.args {
+                            if let Arg::U(n) = v {
+                                match k.as_str() {
+                                    "bytes" => {
+                                        self.inc(
+                                            &format!(
+                                                "bytes.wire.{kind}"
+                                            ),
+                                            *n,
+                                        );
+                                        self.inc("bytes.wire", *n);
+                                    }
+                                    "payload" => {
+                                        self.inc(
+                                            &format!(
+                                                "bytes.payload.{kind}"
+                                            ),
+                                            *n,
+                                        );
+                                        self.inc("bytes.payload", *n);
+                                    }
+                                    _ => {}
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if !e.instant {
+                self.observe(
+                    &format!("span_ms.{}", e.cat),
+                    &SPAN_MS_BOUNDS,
+                    e.dur_us / 1e3,
+                );
+            }
+        }
+    }
+
+    /// Surface injected-fault outcomes as `fault.*` counters — the
+    /// chaos tests assert these equal the seeded schedule's event
+    /// counts.
+    pub fn absorb_fault(&mut self, stats: &FaultStats) {
+        self.inc("fault.passed", stats.passed);
+        self.inc("fault.dropped", stats.dropped);
+        self.inc("fault.delayed", stats.delayed);
+        self.inc("fault.truncated", stats.truncated);
+        self.inc("fault.severed", stats.severed);
+    }
+
+    /// Surface a liveness monitor's verdicts: heartbeat count, the
+    /// newest step a heartbeat acknowledged, and the staleness verdict
+    /// at absorb time (1.0 = stale).
+    pub fn absorb_liveness(&mut self, mon: &LivenessMonitor) {
+        self.inc("liveness.beats", mon.beats);
+        self.set_gauge("liveness.last_step", mon.last_step as f64);
+        self.set_gauge(
+            "liveness.stale",
+            if mon.is_stale() { 1.0 } else { 0.0 },
+        );
+    }
+
+    /// Fold a [`LaunchReport`] (the unified grid/chain/elastic result)
+    /// into run-level counters and gauges.
+    pub fn absorb_launch(&mut self, rep: &LaunchReport) {
+        self.inc("run.steps", rep.losses.len() as u64);
+        self.inc("run.replicas", rep.replicas as u64);
+        self.inc("run.survivors", rep.survivors as u64);
+        self.inc("run.frames", rep.frames);
+        self.inc("run.bytes.wire", rep.wire_bytes);
+        self.inc(
+            "run.bytes.boundary_payload",
+            rep.boundary_payload_bytes,
+        );
+        self.inc("run.bytes.dp_payload", rep.dp_payload_bytes);
+        self.set_gauge("step.mean_seconds", rep.mean_step_seconds());
+        if let Some(last) = rep.losses.last() {
+            self.set_gauge("loss.final", *last);
+        }
+        if let Some(es) = &rep.elastic {
+            self.absorb_elastic(es);
+        }
+    }
+
+    /// Fold the elastic runtime's recovery/liveness-wire accounting.
+    pub fn absorb_elastic(&mut self, rep: &ElasticReport) {
+        self.inc("elastic.epochs", rep.epochs as u64);
+        self.inc("elastic.recoveries", rep.recoveries as u64);
+        self.inc("elastic.spares_used", rep.spares_used as u64);
+        self.inc("frames.sent.heartbeat.ctl", rep.heartbeat_frames);
+        self.inc("bytes.payload.heartbeat.ctl", rep.heartbeat_bytes);
+        self.inc("frames.sent.checkpoint.ctl", rep.ckpt_frames);
+        self.inc("bytes.payload.checkpoint.ctl", rep.ckpt_bytes);
+    }
+
+    /// Fold a structured kernel-timing report: per-entry call counts
+    /// as counters, per-entry total seconds as gauges.
+    pub fn absorb_timing(&mut self, rep: &TimingReport) {
+        for row in &rep.rows {
+            self.inc(&format!("timing.calls.{}", row.entry), row.calls);
+            self.set_gauge(
+                &format!("timing.total_s.{}", row.entry),
+                row.total_s,
+            );
+        }
+    }
+
+    /// Serialize as the `METRICS.json` object:
+    /// `{"counters": {...}, "gauges": {...}, "hists": {name:
+    /// {"bounds": [...], "counts": [...]}}}`.
+    pub fn to_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> = self
+            .gauges
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+            .collect();
+        let hists: BTreeMap<String, Json> = self
+            .hists
+            .iter()
+            .map(|(k, h)| {
+                let mut o = BTreeMap::new();
+                o.insert(
+                    "bounds".to_string(),
+                    Json::Arr(
+                        h.bounds.iter().map(|b| Json::Num(*b)).collect(),
+                    ),
+                );
+                o.insert(
+                    "counts".to_string(),
+                    Json::Arr(
+                        h.counts
+                            .iter()
+                            .map(|c| Json::Num(*c as f64))
+                            .collect(),
+                    ),
+                );
+                (k.clone(), Json::Obj(o))
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("counters".to_string(), Json::Obj(counters));
+        top.insert("gauges".to_string(), Json::Obj(gauges));
+        top.insert("hists".to_string(), Json::Obj(hists));
+        Json::Obj(top)
+    }
+
+    /// Rebuild a registry from [`RunMetrics::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<RunMetrics> {
+        let mut m = RunMetrics::new();
+        if let Some(Json::Obj(o)) = j.opt("counters") {
+            for (k, v) in o {
+                m.counters.insert(k.clone(), v.num()? as u64);
+            }
+        }
+        if let Some(Json::Obj(o)) = j.opt("gauges") {
+            for (k, v) in o {
+                m.gauges.insert(k.clone(), v.num()?);
+            }
+        }
+        if let Some(Json::Obj(o)) = j.opt("hists") {
+            for (k, v) in o {
+                let bounds: Result<Vec<f64>> =
+                    v.get("bounds")?.arr()?.iter().map(Json::num).collect();
+                let counts: Result<Vec<u64>> = v
+                    .get("counts")?
+                    .arr()?
+                    .iter()
+                    .map(|c| Ok(c.num()? as u64))
+                    .collect();
+                m.hists.insert(
+                    k.clone(),
+                    Hist { bounds: bounds?, counts: counts? },
+                );
+            }
+        }
+        Ok(m)
+    }
+
+    /// Parse from JSON text.
+    pub fn parse(text: &str) -> Result<RunMetrics> {
+        RunMetrics::from_json(&Json::parse(text)?)
+    }
+
+    /// Write `METRICS.json` to `path` (creating parent directories).
+    pub fn write_file(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).with_context(|| {
+                    format!("creating {}", parent.display())
+                })?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string()).with_context(
+            || format!("writing metrics {}", path.display()),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// structured kernel-timing report
+// ---------------------------------------------------------------------------
+
+/// One executable's accumulated timing: call count and total wall
+/// seconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimingRow {
+    /// Executable/entry name.
+    pub entry: String,
+    /// Number of calls recorded.
+    pub calls: u64,
+    /// Total wall seconds across all calls.
+    pub total_s: f64,
+}
+
+impl TimingRow {
+    /// Mean milliseconds per call.
+    pub fn mean_ms(&self) -> f64 {
+        self.total_s / self.calls.max(1) as f64 * 1e3
+    }
+}
+
+/// Structured replacement for the old string-valued
+/// `Runtime::timing_report`: rows sorted by descending total time
+/// (entry name breaks ties deterministically), with a `Display` that
+/// reproduces the legacy CSV text byte-for-byte.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TimingReport {
+    /// Rows, hottest entry first.
+    pub rows: Vec<TimingRow>,
+}
+
+impl TimingReport {
+    /// Build from the runtime's `entry -> (calls, total_seconds)` map.
+    pub fn from_timings(
+        timings: &HashMap<String, (u64, f64)>,
+    ) -> TimingReport {
+        let mut rows: Vec<TimingRow> = timings
+            .iter()
+            .map(|(k, (n, t))| TimingRow {
+                entry: k.clone(),
+                calls: *n,
+                total_s: *t,
+            })
+            .collect();
+        rows.sort_by(|a, b| {
+            b.total_s
+                .total_cmp(&a.total_s)
+                .then_with(|| a.entry.cmp(&b.entry))
+        });
+        TimingReport { rows }
+    }
+
+    /// Total wall seconds across every entry.
+    pub fn total_seconds(&self) -> f64 {
+        self.rows.iter().map(|r| r.total_s).sum()
+    }
+}
+
+impl fmt::Display for TimingReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("entry,calls,total_s,mean_ms\n")?;
+        for r in &self.rows {
+            writeln!(
+                f,
+                "{},{},{:.4},{:.3}",
+                r.entry, r.calls, r.total_s, r.mean_ms()
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{u, Clock, TraceEvent};
+
+    #[test]
+    fn hist_buckets_observations_with_overflow() {
+        let mut h = Hist::new(&[1.0, 10.0]);
+        h.observe(0.5);
+        h.observe(1.0); // inclusive upper bound
+        h.observe(5.0);
+        h.observe(100.0); // overflow
+        assert_eq!(h.counts, vec![2, 1, 1]);
+        assert_eq!(h.total(), 4);
+    }
+
+    #[test]
+    fn metrics_json_round_trips() {
+        let mut m = RunMetrics::new();
+        m.inc("frames.sent.fwd", 12);
+        m.set_gauge("loss.final", 0.25);
+        m.observe("span_ms.compute", &SPAN_MS_BOUNDS, 3.5);
+        let text = m.to_json().to_string();
+        let back = RunMetrics::parse(&text).expect("parse");
+        assert_eq!(back, m);
+        assert_eq!(back.counter("frames.sent.fwd"), 12);
+        assert_eq!(back.gauge("loss.final"), Some(0.25));
+        assert_eq!(back.hist("span_ms.compute").map(Hist::total), Some(1));
+    }
+
+    #[test]
+    fn absorb_trace_counts_frames_sender_side_only() {
+        let mk = |name: &str, bytes: u64, payload: u64| TraceEvent {
+            cat: "frame".to_string(),
+            name: name.to_string(),
+            pid: 0,
+            tid: 0,
+            ts_us: 0.0,
+            dur_us: 1.0,
+            instant: false,
+            args: vec![u("bytes", bytes), u("payload", payload)],
+        };
+        let trace = Trace {
+            events: vec![
+                mk("send:fwd", 124, 100),
+                mk("send:fwd", 124, 100),
+                mk("recv:fwd", 124, 100),
+                mk("send:heartbeat", 40, 16),
+            ],
+            clock: Clock::Host,
+        };
+        let mut m = RunMetrics::new();
+        m.absorb_trace(&trace);
+        assert_eq!(m.counter("frames.sent.fwd"), 2);
+        assert_eq!(m.counter("frames.recv.fwd"), 1);
+        assert_eq!(m.counter("bytes.wire.fwd"), 248);
+        assert_eq!(m.counter("bytes.payload.fwd"), 200);
+        // recv side never adds to byte counters
+        assert_eq!(m.counter("bytes.wire"), 248 + 40);
+        assert_eq!(m.counter("frames.sent"), 3);
+        assert_eq!(
+            m.hist("span_ms.frame").map(Hist::total),
+            Some(4)
+        );
+    }
+
+    #[test]
+    fn timing_report_display_matches_legacy_text() {
+        let mut t = HashMap::new();
+        t.insert("matmul".to_string(), (4u64, 0.02f64));
+        t.insert("ortho".to_string(), (1u64, 0.5f64));
+        let rep = TimingReport::from_timings(&t);
+        assert_eq!(rep.rows[0].entry, "ortho");
+        let legacy = {
+            let mut rows: Vec<_> = t.iter().collect();
+            rows.sort_by(|a, b| b.1 .1.partial_cmp(&a.1 .1).unwrap());
+            let mut s = String::from("entry,calls,total_s,mean_ms\n");
+            for (k, (n, t)) in rows {
+                s.push_str(&format!(
+                    "{k},{n},{t:.4},{:.3}\n",
+                    t / (*n).max(1) as f64 * 1e3
+                ));
+            }
+            s
+        };
+        assert_eq!(rep.to_string(), legacy);
+    }
+
+    #[test]
+    fn absorb_fault_mirrors_stats() {
+        let stats = FaultStats {
+            passed: 7,
+            dropped: 2,
+            delayed: 1,
+            truncated: 0,
+            severed: 1,
+        };
+        let mut m = RunMetrics::new();
+        m.absorb_fault(&stats);
+        assert_eq!(m.counter("fault.passed"), 7);
+        assert_eq!(m.counter("fault.dropped"), 2);
+        assert_eq!(m.counter("fault.delayed"), 1);
+        assert_eq!(m.counter("fault.truncated"), 0);
+        assert_eq!(m.counter("fault.severed"), 1);
+    }
+}

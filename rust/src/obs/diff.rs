@@ -1,0 +1,333 @@
+//! Trace-vs-simulator comparator: replay a recorded trace against the
+//! §9 event engine's predicted timeline (DESIGN.md §15).
+//!
+//! The repo's measured-vs-predicted discipline compares step *walls*;
+//! this module compares *placements*. For every training step in a
+//! recorded trace it rebuilds a [`StepCosts`] whose compute and
+//! transfer durations are the trace's own span durations, asks the
+//! event engine where each (stage, microbatch, class) task *should*
+//! have landed given those durations, and reports the per-span
+//! relative placement error
+//! `max(|Δstart|, |Δend|) / predicted_makespan` — i.e. how far the
+//! real pipeline's dispatch order and overlap drift from the
+//! simulator's model once per-task costs are equalized. `exp
+//! trace-diff` turns this into a figure CSV; the CI `obs-smoke` job
+//! asserts the error stays under a generous ceiling.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::schedule::{StepCosts, Tx};
+use crate::obs::trace::{Arg, Trace, TraceEvent};
+use crate::sim::step::{
+    simulate_step_timeline, Class, Schedule, StepSpec,
+};
+
+/// One compared task: where the trace measured it vs where the event
+/// engine predicted it, both in seconds relative to the step's first
+/// compute dispatch.
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    /// training step the task belongs to
+    pub step: u64,
+    /// pipeline stage (trace `tid`)
+    pub stage: usize,
+    /// microbatch index
+    pub mb: usize,
+    /// task class label: `fwd`, `fused`, or `bwd`
+    pub class: &'static str,
+    /// measured start, seconds from the step's first compute dispatch
+    pub measured_start_s: f64,
+    /// measured end
+    pub measured_end_s: f64,
+    /// predicted start (event engine, same per-task durations)
+    pub predicted_start_s: f64,
+    /// predicted end
+    pub predicted_end_s: f64,
+    /// `max(|Δstart|, |Δend|) / predicted_makespan`
+    pub rel_err: f64,
+}
+
+/// Comparator output: all compared rows plus the error aggregates.
+#[derive(Clone, Debug, Default)]
+pub struct DiffReport {
+    /// every compared (step, stage, mb, class) placement
+    pub rows: Vec<DiffRow>,
+    /// steps successfully compared
+    pub steps: usize,
+    /// steps skipped because their span set was incomplete (e.g. a
+    /// partial trailing step in a truncated trace)
+    pub skipped_steps: usize,
+    /// worst per-span relative error across all rows
+    pub max_rel_err: f64,
+    /// mean per-span relative error
+    pub mean_rel_err: f64,
+}
+
+impl DiffReport {
+    /// Short human summary for CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "trace-diff: {} spans over {} steps ({} skipped), \
+             rel err max {:.4} mean {:.4}",
+            self.rows.len(),
+            self.steps,
+            self.skipped_steps,
+            self.max_rel_err,
+            self.mean_rel_err
+        )
+    }
+}
+
+fn arg_u(e: &TraceEvent, key: &str) -> Option<u64> {
+    e.args.iter().find_map(|(k, v)| match v {
+        Arg::U(n) if k == key => Some(*n),
+        _ => None,
+    })
+}
+
+fn class_of(name: &str) -> Option<(&'static str, Class)> {
+    match name {
+        "fwd" => Some(("fwd", Class::Fwd)),
+        "fused" => Some(("fused", Class::Fwd)),
+        "bwd" => Some(("bwd", Class::Bwd)),
+        _ => None,
+    }
+}
+
+/// Compare a recorded trace's compute-span placements against the
+/// event engine under `schedule`. Groups `compute`-category spans by
+/// (replica, step), rebuilds each step's [`StepCosts`] from the spans'
+/// own durations (frame-send span durations become the link
+/// serialization costs), and reports per-span relative placement
+/// error. Steps whose span set is incomplete are skipped, not errors.
+pub fn diff_trace(
+    trace: &Trace,
+    schedule: Schedule,
+) -> Result<DiffReport> {
+    // (pid, step) -> compute spans; same key -> frame-send spans
+    let mut compute: BTreeMap<(u32, u64), Vec<&TraceEvent>> =
+        BTreeMap::new();
+    let mut sends: BTreeMap<(u32, u64), Vec<&TraceEvent>> =
+        BTreeMap::new();
+    for e in &trace.events {
+        if e.instant {
+            continue;
+        }
+        let step = match (arg_u(e, "step"), arg_u(e, "mb")) {
+            (Some(s), Some(_)) => s,
+            _ => continue,
+        };
+        if e.cat == "compute" && class_of(&e.name).is_some() {
+            compute.entry((e.pid, step)).or_default().push(e);
+        } else if e.cat == "frame"
+            && (e.name == "send:fwd" || e.name == "send:bwd")
+        {
+            sends.entry((e.pid, step)).or_default().push(e);
+        }
+    }
+    if compute.is_empty() {
+        bail!(
+            "trace holds no compute spans with step/mb args — was it \
+             recorded from a training run?"
+        );
+    }
+
+    let mut report = DiffReport::default();
+    let mut err_sum = 0.0f64;
+    for ((pid, step), spans) in &compute {
+        let stages = spans.iter().map(|e| e.tid as usize).max().unwrap() + 1;
+        let m = spans
+            .iter()
+            .filter_map(|e| arg_u(e, "mb"))
+            .max()
+            .unwrap_or(0) as usize
+            + 1;
+        if stages < 2 {
+            report.skipped_steps += 1;
+            continue;
+        }
+        // rebuild the step's costs from the measured durations
+        let mut fwd = vec![vec![f64::NAN; m]; stages];
+        let mut bwd = vec![vec![f64::NAN; m]; stages];
+        // fused last stage: its gradient cost lives in fwd[last]
+        for x in bwd[stages - 1].iter_mut() {
+            *x = 0.0;
+        }
+        for e in spans {
+            let v = e.tid as usize;
+            let mb = arg_u(e, "mb").unwrap() as usize;
+            let dur_s = e.dur_us / 1e6;
+            match class_of(&e.name) {
+                Some((_, Class::Fwd)) => fwd[v][mb] = dur_s,
+                Some((_, Class::Bwd)) => bwd[v][mb] = dur_s,
+                None => {}
+            }
+        }
+        let mut tx_fwd = vec![vec![Tx { ser: 0.0, lat: 0.0 }; m]; stages - 1];
+        let mut tx_bwd = vec![vec![Tx { ser: 0.0, lat: 0.0 }; m]; stages - 1];
+        for e in sends.get(&(*pid, *step)).map_or(&[][..], |v| &v[..]) {
+            let v = e.tid as usize;
+            let mb = match arg_u(e, "mb") {
+                Some(mb) => mb as usize,
+                None => continue,
+            };
+            if mb >= m {
+                continue;
+            }
+            let ser = e.dur_us / 1e6;
+            if e.name == "send:fwd" && v < stages - 1 {
+                tx_fwd[v][mb] = Tx { ser, lat: 0.0 };
+            } else if e.name == "send:bwd" && v > 0 && v - 1 < stages - 1 {
+                tx_bwd[v - 1][mb] = Tx { ser, lat: 0.0 };
+            }
+        }
+        if fwd.iter().flatten().chain(bwd.iter().flatten()).any(|x| x.is_nan())
+        {
+            report.skipped_steps += 1;
+            continue;
+        }
+        let costs = StepCosts {
+            stages,
+            microbatches: m,
+            fwd,
+            bwd,
+            tx_fwd,
+            tx_bwd,
+            opt: vec![0.0; stages],
+            tail: 0.0,
+        };
+        let spec = StepSpec::from_costs(&costs, schedule)?;
+        let (ms, timeline) = simulate_step_timeline(&spec)?;
+        let predicted: BTreeMap<(usize, usize, Class), (f64, f64)> =
+            timeline
+                .iter()
+                .map(|t| ((t.v, t.mb, t.class), (t.start, t.end)))
+                .collect();
+        let base = spans
+            .iter()
+            .map(|e| e.ts_us)
+            .fold(f64::INFINITY, f64::min);
+        let scale = if ms.total > 0.0 { ms.total } else { 1.0 };
+        for e in spans {
+            let (label, class) = class_of(&e.name).unwrap();
+            let v = e.tid as usize;
+            let mb = arg_u(e, "mb").unwrap() as usize;
+            let (ps, pe) = match predicted.get(&(v, mb, class)) {
+                Some(p) => *p,
+                None => continue,
+            };
+            let ms_start = (e.ts_us - base) / 1e6;
+            let ms_end = (e.ts_us + e.dur_us - base) / 1e6;
+            let rel = ((ms_start - ps).abs().max((ms_end - pe).abs()))
+                / scale;
+            err_sum += rel;
+            report.max_rel_err = report.max_rel_err.max(rel);
+            report.rows.push(DiffRow {
+                step: *step,
+                stage: v,
+                mb,
+                class: label,
+                measured_start_s: ms_start,
+                measured_end_s: ms_end,
+                predicted_start_s: ps,
+                predicted_end_s: pe,
+                rel_err: rel,
+            });
+        }
+        report.steps += 1;
+    }
+    if !report.rows.is_empty() {
+        report.mean_rel_err = err_sum / report.rows.len() as f64;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{u, Clock};
+
+    /// Build a synthetic trace straight from the engine's own
+    /// prediction, so measured == predicted by construction.
+    fn trace_from_prediction(
+        costs: &StepCosts,
+        schedule: Schedule,
+    ) -> Trace {
+        let spec = StepSpec::from_costs(costs, schedule).unwrap();
+        let (_, timeline) = simulate_step_timeline(&spec).unwrap();
+        let last = costs.stages - 1;
+        let events = timeline
+            .iter()
+            .map(|t| {
+                let name = match t.class {
+                    Class::Fwd if t.v == last => "fused",
+                    Class::Fwd => "fwd",
+                    Class::Bwd => "bwd",
+                };
+                TraceEvent {
+                    cat: "compute".to_string(),
+                    name: name.to_string(),
+                    pid: 0,
+                    tid: t.v as u32,
+                    ts_us: t.start * 1e6,
+                    dur_us: (t.end - t.start) * 1e6,
+                    instant: false,
+                    args: vec![u("step", 0), u("mb", t.mb as u64)],
+                }
+            })
+            .collect();
+        Trace { events, clock: Clock::Host }
+    }
+
+    fn costs(p: usize, m: usize) -> StepCosts {
+        StepCosts {
+            stages: p,
+            microbatches: m,
+            fwd: vec![vec![1.0; m]; p],
+            bwd: vec![vec![2.0; m]; p],
+            tx_fwd: vec![vec![Tx { ser: 0.0, lat: 0.0 }; m]; p - 1],
+            tx_bwd: vec![vec![Tx { ser: 0.0, lat: 0.0 }; m]; p - 1],
+            opt: vec![0.0; p],
+            tail: 0.0,
+        }
+    }
+
+    #[test]
+    fn self_consistent_trace_diffs_to_zero() {
+        let c = costs(3, 4);
+        let trace = trace_from_prediction(&c, Schedule::Gpipe);
+        let rep = diff_trace(&trace, Schedule::Gpipe).unwrap();
+        assert_eq!(rep.steps, 1);
+        assert_eq!(rep.skipped_steps, 0);
+        assert_eq!(rep.rows.len(), 3 * 4 + 2 * 4);
+        assert!(rep.max_rel_err < 1e-9, "{}", rep.max_rel_err);
+    }
+
+    #[test]
+    fn displaced_span_reports_proportional_error() {
+        let c = costs(2, 2);
+        let mut trace = trace_from_prediction(&c, Schedule::Gpipe);
+        // shift one span late by 1 simulated second
+        let e = trace
+            .events
+            .iter_mut()
+            .find(|e| e.name == "bwd")
+            .expect("bwd span");
+        e.ts_us += 1e6;
+        let rep = diff_trace(&trace, Schedule::Gpipe).unwrap();
+        assert!(rep.max_rel_err > 0.05, "{}", rep.max_rel_err);
+        assert!(rep.summary().contains("trace-diff"));
+    }
+
+    #[test]
+    fn incomplete_steps_are_skipped_not_fatal() {
+        let c = costs(2, 2);
+        let mut trace = trace_from_prediction(&c, Schedule::Gpipe);
+        trace.events.pop(); // drop one task: step becomes incomplete
+        let rep = diff_trace(&trace, Schedule::Gpipe).unwrap();
+        assert_eq!(rep.steps, 0);
+        assert_eq!(rep.skipped_steps, 1);
+    }
+}

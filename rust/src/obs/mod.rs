@@ -1,0 +1,139 @@
+//! Observability: span tracing, unified run metrics, trace-vs-sim diff.
+//!
+//! Zero-dependency instrumentation layer (DESIGN.md §15) threaded
+//! through the native pipeline, the transports, the elastic runtime,
+//! and the event simulator:
+//!
+//! - [`trace`]: a lock-cheap per-thread span recorder emitting Chrome
+//!   `trace_event` JSON (perfetto-loadable). Real runs stamp spans from
+//!   a host monotonic clock; the discrete-event simulator records the
+//!   *same schema* from its virtual clock, so both open in the same
+//!   viewer and feed the same comparator.
+//! - [`counters`]: the unified [`counters::RunMetrics`] registry —
+//!   monotonic counters, gauges, and fixed-bucket histograms with
+//!   deterministic snapshot ordering, dumped as `METRICS.json`.
+//! - [`diff`]: replays a recorded trace's per-(stage, microbatch)
+//!   compute spans against the §9 event engine's predicted timeline
+//!   and reports per-span relative error (`exp trace-diff`).
+//!
+//! The module also owns the leveled [`log!`](crate::obs::log) macro
+//! that replaces raw `eprintln!` diagnostics: filtering is driven by
+//! the `PROTOMODELS_LOG` environment variable (`error`, `warn`,
+//! `info`, `debug`; unset = fully off, so test CSV byte-identity is
+//! untouched).
+
+pub mod counters;
+pub mod diff;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Severity of an [`obs::log!`](crate::obs::log) line, ordered from
+/// most to least urgent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable problems that abort or degrade the run.
+    Error = 1,
+    /// Recoverable anomalies (fault recovery, reassignment).
+    Warn = 2,
+    /// Progress landmarks (epoch start, neighbor connect).
+    Info = 3,
+    /// High-volume diagnostics.
+    Debug = 4,
+}
+
+impl Level {
+    /// Short lowercase tag used as the line prefix.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    fn parse(s: &str) -> u8 {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" | "1" => 1,
+            "warn" | "warning" | "2" => 2,
+            "info" | "3" => 3,
+            "debug" | "trace" | "4" => 4,
+            // unrecognized values (including "off"/"0") disable logging
+            _ => 0,
+        }
+    }
+}
+
+/// Cached max enabled level: 0xFF = not yet read from the environment,
+/// 0 = logging fully off, 1..=4 = [`Level`] discriminants.
+static LEVEL: AtomicU8 = AtomicU8::new(0xFF);
+
+/// True when a [`log!`](crate::obs::log) line at `level` should print,
+/// per the `PROTOMODELS_LOG` environment variable (read once and
+/// cached; unset means fully off).
+pub fn log_enabled(level: Level) -> bool {
+    let mut cur = LEVEL.load(Ordering::Relaxed);
+    if cur == 0xFF {
+        cur = std::env::var("PROTOMODELS_LOG")
+            .map(|v| Level::parse(&v))
+            .unwrap_or(0);
+        LEVEL.store(cur, Ordering::Relaxed);
+    }
+    level as u8 <= cur
+}
+
+/// Override the cached log level (`None` = off). Tests use this to
+/// exercise the macro without touching process environment.
+pub fn set_log_level(level: Option<Level>) {
+    LEVEL.store(level.map(|l| l as u8).unwrap_or(0), Ordering::Relaxed);
+}
+
+/// Leveled diagnostic logging: `obs::log!(Warn, "stage {s} lost")`.
+///
+/// Lines print to stderr as `[<tag>] <message>` only when
+/// `PROTOMODELS_LOG` enables the level (see [`Level`] and
+/// [`log_enabled`]); with the variable unset the macro is a cheap
+/// atomic load and no formatting happens. This is the replacement for
+/// raw `eprintln!` progress/diagnostic lines in `transport/` and
+/// `nn/pipeline.rs`.
+#[macro_export]
+macro_rules! obs_log {
+    ($lvl:ident, $($arg:tt)*) => {{
+        if $crate::obs::log_enabled($crate::obs::Level::$lvl) {
+            eprintln!(
+                "[{}] {}",
+                $crate::obs::Level::$lvl.tag(),
+                format_args!($($arg)*)
+            );
+        }
+    }};
+}
+
+pub use crate::obs_log as log;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_accepts_names_and_numbers() {
+        assert_eq!(Level::parse("error"), 1);
+        assert_eq!(Level::parse("WARN"), 2);
+        assert_eq!(Level::parse("info"), 3);
+        assert_eq!(Level::parse("debug"), 4);
+        assert_eq!(Level::parse("4"), 4);
+        assert_eq!(Level::parse("off"), 0);
+        assert_eq!(Level::parse("garbage"), 0);
+    }
+
+    #[test]
+    fn log_enabled_respects_override() {
+        set_log_level(Some(Level::Warn));
+        assert!(log_enabled(Level::Error));
+        assert!(log_enabled(Level::Warn));
+        assert!(!log_enabled(Level::Info));
+        set_log_level(None);
+        assert!(!log_enabled(Level::Error));
+    }
+}

@@ -1,0 +1,637 @@
+//! Lock-cheap span tracing to Chrome `trace_event` JSON.
+//!
+//! The recorder is process-global but *session-scoped*: nothing is
+//! recorded until a [`TraceSession`] starts, and the fast path while
+//! disabled is a single relaxed atomic load (call sites additionally
+//! guard their argument construction behind [`enabled`], so a build
+//! without an active session pays no formatting or allocation — loss
+//! curves stay bitwise identical with tracing off *and* on, because
+//! tracing never touches model arithmetic).
+//!
+//! Events land in a per-thread buffer and are flushed into a global
+//! sink under a mutex only every [`FLUSH_AT`] events or at thread
+//! exit, so concurrent stage workers never contend per-span.
+//!
+//! Tracks are **logical**, not OS threads: `pid` is the replica index
+//! and `tid` the pipeline-stage index ([`set_track`]), so a trace is
+//! stable across pool widths and thread scheduling. The discrete-event
+//! simulator emits the same schema from its virtual clock via
+//! [`span_at`]/[`instant_at`]; [`Trace::clock`] records which domain
+//! stamped the file.
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Json;
+
+/// Flush the thread-local buffer into the global sink at this size.
+const FLUSH_AT: usize = 1024;
+
+/// One typed span/instant argument value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Arg {
+    /// Unsigned integer (counts, byte sizes, step/microbatch indices).
+    U(u64),
+    /// Float (seconds, ratios).
+    F(f64),
+    /// Short label (codec name, peer address).
+    S(String),
+}
+
+/// Shorthand: an unsigned-integer argument pair.
+pub fn u(key: &str, v: u64) -> (String, Arg) {
+    (key.to_string(), Arg::U(v))
+}
+
+/// Shorthand: a float argument pair.
+pub fn f(key: &str, v: f64) -> (String, Arg) {
+    (key.to_string(), Arg::F(v))
+}
+
+/// Shorthand: a string argument pair.
+pub fn s(key: &str, v: &str) -> (String, Arg) {
+    (key.to_string(), Arg::S(v.to_string()))
+}
+
+/// Clock domain that stamped a trace: real runs use the host monotonic
+/// clock, the event simulator stamps spans from simulated time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Clock {
+    /// Host monotonic time (microseconds since session start).
+    Host,
+    /// Simulated time from the discrete-event engine.
+    Virtual,
+}
+
+impl Clock {
+    /// Stable lowercase name used in the JSON `otherData.clock` field.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Clock::Host => "host",
+            Clock::Virtual => "virtual",
+        }
+    }
+
+    /// Inverse of [`Clock::as_str`].
+    pub fn parse(s: &str) -> Option<Clock> {
+        match s {
+            "host" => Some(Clock::Host),
+            "virtual" => Some(Clock::Virtual),
+            _ => None,
+        }
+    }
+}
+
+/// One recorded event: a complete span (`ph:"X"`) or an instant
+/// (`ph:"i"`). Timestamps/durations are microseconds in the trace's
+/// [`Clock`] domain; `pid`/`tid` are the logical replica/stage track.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Category (`compute`, `codec`, `frame`, `reduce`, `ckpt`,
+    /// `elastic`, `sim`, ...).
+    pub cat: String,
+    /// Event name (`fwd`, `send:grad-ring`, ...).
+    pub name: String,
+    /// Logical process track: replica index.
+    pub pid: u32,
+    /// Logical thread track: pipeline-stage index.
+    pub tid: u32,
+    /// Start timestamp in microseconds.
+    pub ts_us: f64,
+    /// Duration in microseconds (0 for instants).
+    pub dur_us: f64,
+    /// True for instant events.
+    pub instant: bool,
+    /// Typed arguments. Never timing — only `ts_us`/`dur_us` carry
+    /// clock values, which keeps the canonical span form (see
+    /// [`Trace::canonical_lines`]) identical across pool widths.
+    pub args: Vec<(String, Arg)>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn sink() -> &'static Mutex<Vec<TraceEvent>> {
+    static SINK: OnceLock<Mutex<Vec<TraceEvent>>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn session_lock() -> &'static Mutex<()> {
+    static SESSION: OnceLock<Mutex<()>> = OnceLock::new();
+    SESSION.get_or_init(|| Mutex::new(()))
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+struct Buf {
+    events: Vec<TraceEvent>,
+}
+
+impl Drop for Buf {
+    fn drop(&mut self) {
+        flush_into_sink(&mut self.events);
+    }
+}
+
+thread_local! {
+    static TRACK: Cell<(u32, u32)> = const { Cell::new((0, 0)) };
+    static BUF: RefCell<Buf> = RefCell::new(Buf { events: Vec::new() });
+}
+
+fn flush_into_sink(events: &mut Vec<TraceEvent>) {
+    if events.is_empty() {
+        return;
+    }
+    let mut sink =
+        sink().lock().unwrap_or_else(|poison| poison.into_inner());
+    sink.append(events);
+}
+
+fn push(ev: TraceEvent) {
+    BUF.with(|b| {
+        let mut b = b.borrow_mut();
+        b.events.push(ev);
+        if b.events.len() >= FLUSH_AT {
+            flush_into_sink(&mut b.events);
+        }
+    });
+}
+
+/// True while a [`TraceSession`] is recording. Call sites wrap any
+/// argument construction in this check so a disabled build pays one
+/// relaxed atomic load per site and nothing else.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Bind the current OS thread to a logical (replica, stage) track.
+/// Subsequent [`end`]/[`instant`] events record onto it. Stage workers
+/// call this once at startup; the single-process pipeline switches the
+/// stage id as it walks its stages.
+pub fn set_track(pid: u32, tid: u32) {
+    TRACK.with(|t| t.set((pid, tid)));
+}
+
+/// Start a span: returns the host timestamp (µs) to hand back to
+/// [`end`], or NaN when tracing is disabled (in which case `end`
+/// drops the span even if a session started in between).
+#[inline]
+pub fn begin() -> f64 {
+    if !enabled() {
+        return f64::NAN;
+    }
+    epoch().elapsed().as_secs_f64() * 1e6
+}
+
+/// Finish a span started by [`begin`] on the current track.
+pub fn end(cat: &str, name: &str, t0_us: f64, args: Vec<(String, Arg)>) {
+    if !enabled() || t0_us.is_nan() {
+        return;
+    }
+    let now = epoch().elapsed().as_secs_f64() * 1e6;
+    let (pid, tid) = TRACK.with(|t| t.get());
+    push(TraceEvent {
+        cat: cat.to_string(),
+        name: name.to_string(),
+        pid,
+        tid,
+        ts_us: t0_us,
+        dur_us: (now - t0_us).max(0.0),
+        instant: false,
+        args,
+    });
+}
+
+/// Record an instant event on the current track at the host clock.
+pub fn instant(cat: &str, name: &str, args: Vec<(String, Arg)>) {
+    if !enabled() {
+        return;
+    }
+    let now = epoch().elapsed().as_secs_f64() * 1e6;
+    let (pid, tid) = TRACK.with(|t| t.get());
+    push(TraceEvent {
+        cat: cat.to_string(),
+        name: name.to_string(),
+        pid,
+        tid,
+        ts_us: now,
+        dur_us: 0.0,
+        instant: true,
+        args,
+    });
+}
+
+/// Record a complete span with explicit track and timestamps — the
+/// virtual-clock entry point used by the event simulator (times in
+/// microseconds of simulated time).
+pub fn span_at(
+    cat: &str,
+    name: &str,
+    pid: u32,
+    tid: u32,
+    ts_us: f64,
+    dur_us: f64,
+    args: Vec<(String, Arg)>,
+) {
+    if !enabled() {
+        return;
+    }
+    push(TraceEvent {
+        cat: cat.to_string(),
+        name: name.to_string(),
+        pid,
+        tid,
+        ts_us,
+        dur_us: dur_us.max(0.0),
+        instant: false,
+        args,
+    });
+}
+
+/// Record an instant with explicit track and timestamp (virtual-clock
+/// companion of [`instant`]).
+pub fn instant_at(
+    cat: &str,
+    name: &str,
+    pid: u32,
+    tid: u32,
+    ts_us: f64,
+    args: Vec<(String, Arg)>,
+) {
+    if !enabled() {
+        return;
+    }
+    push(TraceEvent {
+        cat: cat.to_string(),
+        name: name.to_string(),
+        pid,
+        tid,
+        ts_us,
+        dur_us: 0.0,
+        instant: true,
+        args,
+    });
+}
+
+/// An active recording session. Holds a process-wide lock so
+/// concurrent tests serialize instead of cross-polluting; recording is
+/// enabled for its lifetime and disabled on [`TraceSession::stop`] (or
+/// drop). All recording threads must be joined before `stop` — the
+/// repo's transports and grids join their workers, so this holds by
+/// construction.
+pub struct TraceSession {
+    _guard: MutexGuard<'static, ()>,
+    clock: Clock,
+}
+
+impl TraceSession {
+    /// Begin recording in the given clock domain, clearing any stale
+    /// buffered events from a previous session.
+    pub fn start(clock: Clock) -> TraceSession {
+        let guard = session_lock()
+            .lock()
+            .unwrap_or_else(|poison| poison.into_inner());
+        sink()
+            .lock()
+            .unwrap_or_else(|poison| poison.into_inner())
+            .clear();
+        BUF.with(|b| b.borrow_mut().events.clear());
+        epoch(); // pin the epoch before the first span
+        ENABLED.store(true, Ordering::SeqCst);
+        TraceSession { _guard: guard, clock }
+    }
+
+    /// Stop recording and collect the trace. Host-clock timestamps are
+    /// normalized so the earliest event starts at 0; events are sorted
+    /// by (ts, pid, tid, name) for a stable file layout.
+    pub fn stop(self) -> Trace {
+        ENABLED.store(false, Ordering::SeqCst);
+        BUF.with(|b| flush_into_sink(&mut b.borrow_mut().events));
+        let mut events = std::mem::take(
+            &mut *sink()
+                .lock()
+                .unwrap_or_else(|poison| poison.into_inner()),
+        );
+        if self.clock == Clock::Host && !events.is_empty() {
+            let min = events
+                .iter()
+                .map(|e| e.ts_us)
+                .fold(f64::INFINITY, f64::min);
+            for e in &mut events {
+                e.ts_us -= min;
+            }
+        }
+        events.sort_by(|a, b| {
+            a.ts_us
+                .total_cmp(&b.ts_us)
+                .then(a.pid.cmp(&b.pid))
+                .then(a.tid.cmp(&b.tid))
+                .then(a.name.cmp(&b.name))
+        });
+        Trace { events, clock: self.clock }
+    }
+}
+
+impl Drop for TraceSession {
+    fn drop(&mut self) {
+        ENABLED.store(false, Ordering::SeqCst);
+    }
+}
+
+/// A completed recording: the event list plus its clock domain.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    /// All recorded events.
+    pub events: Vec<TraceEvent>,
+    /// Which clock stamped `ts_us`/`dur_us`.
+    pub clock: Clock,
+}
+
+fn arg_to_json(a: &Arg) -> Json {
+    match a {
+        Arg::U(v) => Json::Num(*v as f64),
+        Arg::F(v) => Json::Num(*v),
+        Arg::S(v) => Json::Str(v.clone()),
+    }
+}
+
+fn arg_from_json(j: &Json) -> Result<Arg> {
+    match j {
+        Json::Num(n) => {
+            if n.fract() == 0.0 && *n >= 0.0 && *n < 1e15 {
+                Ok(Arg::U(*n as u64))
+            } else {
+                Ok(Arg::F(*n))
+            }
+        }
+        Json::Str(s) => Ok(Arg::S(s.clone())),
+        other => bail!("trace arg is neither number nor string: {other:?}"),
+    }
+}
+
+impl Trace {
+    /// Serialize to the Chrome `trace_event` JSON object format:
+    /// `{"traceEvents": [...], "displayTimeUnit": "ms", "otherData":
+    /// {"clock": ...}}` — loadable by perfetto / `chrome://tracing`.
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut o = BTreeMap::new();
+                o.insert("cat".to_string(), Json::Str(e.cat.clone()));
+                o.insert("name".to_string(), Json::Str(e.name.clone()));
+                o.insert("pid".to_string(), Json::Num(e.pid as f64));
+                o.insert("tid".to_string(), Json::Num(e.tid as f64));
+                o.insert("ts".to_string(), Json::Num(e.ts_us));
+                if e.instant {
+                    o.insert("ph".to_string(), Json::Str("i".to_string()));
+                    o.insert("s".to_string(), Json::Str("t".to_string()));
+                } else {
+                    o.insert("ph".to_string(), Json::Str("X".to_string()));
+                    o.insert("dur".to_string(), Json::Num(e.dur_us));
+                }
+                if !e.args.is_empty() {
+                    let args: BTreeMap<String, Json> = e
+                        .args
+                        .iter()
+                        .map(|(k, v)| (k.clone(), arg_to_json(v)))
+                        .collect();
+                    o.insert("args".to_string(), Json::Obj(args));
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        let mut other = BTreeMap::new();
+        other.insert(
+            "clock".to_string(),
+            Json::Str(self.clock.as_str().to_string()),
+        );
+        let mut top = BTreeMap::new();
+        top.insert("traceEvents".to_string(), Json::Arr(events));
+        top.insert(
+            "displayTimeUnit".to_string(),
+            Json::Str("ms".to_string()),
+        );
+        top.insert("otherData".to_string(), Json::Obj(other));
+        Json::Obj(top)
+    }
+
+    /// Rebuild a trace from [`Trace::to_json`] output. Integral
+    /// non-negative numeric args parse back as [`Arg::U`] (the
+    /// canonical form); unknown `ph` kinds are rejected.
+    pub fn from_json(j: &Json) -> Result<Trace> {
+        let clock = match j.opt("otherData").and_then(|o| o.opt("clock")) {
+            Some(Json::Str(s)) => Clock::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("bad trace clock {s:?}"))?,
+            _ => Clock::Host,
+        };
+        let raw = j
+            .opt("traceEvents")
+            .ok_or_else(|| anyhow::anyhow!("trace JSON lacks traceEvents"))?
+            .arr()?;
+        let mut events = Vec::with_capacity(raw.len());
+        for ev in raw {
+            let ph = ev.get("ph")?.str()?;
+            let instant = match ph {
+                "X" => false,
+                "i" => true,
+                other => bail!("unsupported trace event ph {other:?}"),
+            };
+            let num = |key: &str| -> Result<f64> { ev.get(key)?.num() };
+            let mut args = Vec::new();
+            if let Some(Json::Obj(o)) = ev.opt("args") {
+                for (k, v) in o {
+                    args.push((k.clone(), arg_from_json(v)?));
+                }
+            }
+            events.push(TraceEvent {
+                cat: ev
+                    .opt("cat")
+                    .and_then(|c| c.str().ok())
+                    .unwrap_or_default()
+                    .to_string(),
+                name: ev.get("name")?.str()?.to_string(),
+                pid: num("pid")? as u32,
+                tid: num("tid")? as u32,
+                ts_us: num("ts")?,
+                dur_us: if instant { 0.0 } else { num("dur")? },
+                instant,
+                args,
+            });
+        }
+        Ok(Trace { events, clock })
+    }
+
+    /// Parse a trace from its JSON text.
+    pub fn parse(text: &str) -> Result<Trace> {
+        Trace::from_json(&Json::parse(text)?)
+    }
+
+    /// Write the JSON to `path` (creating parent directories).
+    pub fn write_file(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).with_context(|| {
+                    format!("creating {}", parent.display())
+                })?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing trace {}", path.display()))
+    }
+
+    /// Load and parse a trace file.
+    pub fn read_file(path: &Path) -> Result<Trace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        Trace::parse(&text)
+    }
+
+    /// The *timing-free* canonical form: one sorted line per event
+    /// (`cat|name|pid|tid|i?|k=v,...`, args sorted by key, `ts`/`dur`
+    /// excluded). Two runs of the same workload must produce identical
+    /// canonical multisets regardless of pool width or scheduling —
+    /// the trace-determinism contract tested in `tests/obs.rs`.
+    pub fn canonical_lines(&self) -> Vec<String> {
+        let mut lines: Vec<String> = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut args: Vec<String> = e
+                    .args
+                    .iter()
+                    .map(|(k, v)| match v {
+                        Arg::U(n) => format!("{k}={n}"),
+                        Arg::F(x) => format!("{k}={x}"),
+                        Arg::S(s) => format!("{k}={s}"),
+                    })
+                    .collect();
+                args.sort();
+                format!(
+                    "{}|{}|{}|{}|{}|{}",
+                    e.cat,
+                    e.name,
+                    e.pid,
+                    e.tid,
+                    if e.instant { "i" } else { "x" },
+                    args.join(",")
+                )
+            })
+            .collect();
+        lines.sort();
+        lines
+    }
+
+    /// Human summary: per (cat, name) the event count, total duration,
+    /// and summed `bytes` arg — what `protomodels trace <file>` prints.
+    pub fn summary(&self) -> String {
+        #[derive(Default)]
+        struct Agg {
+            count: u64,
+            dur_us: f64,
+            bytes: u64,
+        }
+        let mut by_name: BTreeMap<(String, String), Agg> = BTreeMap::new();
+        for e in &self.events {
+            let a = by_name
+                .entry((e.cat.clone(), e.name.clone()))
+                .or_default();
+            a.count += 1;
+            a.dur_us += e.dur_us;
+            for (k, v) in &e.args {
+                if k == "bytes" {
+                    if let Arg::U(n) = v {
+                        a.bytes += n;
+                    }
+                }
+            }
+        }
+        let mut s = format!(
+            "trace: {} events, clock {}\n{:<28} {:>8} {:>12} {:>12}\n",
+            self.events.len(),
+            self.clock.as_str(),
+            "cat/name",
+            "count",
+            "total_ms",
+            "bytes"
+        );
+        for ((cat, name), a) in &by_name {
+            s.push_str(&format!(
+                "{:<28} {:>8} {:>12.3} {:>12}\n",
+                format!("{cat}/{name}"),
+                a.count,
+                a.dur_us / 1e3,
+                a.bytes
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recording_is_dropped() {
+        assert!(!enabled());
+        let t0 = begin();
+        assert!(t0.is_nan());
+        end("compute", "fwd", t0, vec![]);
+        instant("x", "y", vec![]);
+        let sess = TraceSession::start(Clock::Host);
+        let trace = sess.stop();
+        assert!(trace.events.is_empty());
+    }
+
+    #[test]
+    fn session_records_and_round_trips() {
+        let sess = TraceSession::start(Clock::Host);
+        set_track(1, 2);
+        let t0 = begin();
+        end(
+            "frame",
+            "send:fwd",
+            t0,
+            vec![u("bytes", 128), f("ratio", 0.5), s("codec", "subspace")],
+        );
+        instant("elastic", "reassign", vec![u("stage", 1)]);
+        span_at("sim", "pipeline", 3, 0, 10.0, 25.5, vec![u("step", 2)]);
+        let trace = sess.stop();
+        assert_eq!(trace.events.len(), 3);
+        let text = trace.to_json().to_string();
+        let back = Trace::parse(&text).expect("parse");
+        assert_eq!(back, trace);
+        assert_eq!(back.canonical_lines(), trace.canonical_lines());
+    }
+
+    #[test]
+    fn host_timestamps_normalize_to_zero() {
+        let sess = TraceSession::start(Clock::Host);
+        let t0 = begin();
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        end("compute", "fwd", t0, vec![]);
+        let trace = sess.stop();
+        assert_eq!(trace.events[0].ts_us, 0.0);
+        assert!(trace.events[0].dur_us > 0.0);
+    }
+
+    #[test]
+    fn virtual_clock_keeps_absolute_times() {
+        let sess = TraceSession::start(Clock::Virtual);
+        span_at("sim", "step", 0, 0, 5e6, 1e6, vec![]);
+        let trace = sess.stop();
+        assert_eq!(trace.clock, Clock::Virtual);
+        assert_eq!(trace.events[0].ts_us, 5e6);
+    }
+}

@@ -221,17 +221,9 @@ impl Runtime {
         self.timings.values().map(|(_, t)| t).sum()
     }
 
-    /// CSV-formatted per-entry timing table (profiling).
-    pub fn timing_report(&self) -> String {
-        let mut rows: Vec<_> = self.timings.iter().collect();
-        rows.sort_by(|a, b| b.1 .1.partial_cmp(&a.1 .1).unwrap());
-        let mut s = String::from("entry,calls,total_s,mean_ms\n");
-        for (k, (n, t)) in rows {
-            s.push_str(&format!(
-                "{k},{n},{t:.4},{:.3}\n",
-                t / (*n).max(1) as f64 * 1e3
-            ));
-        }
-        s
+    /// Structured per-entry timing table (profiling); its `Display`
+    /// renders the legacy `entry,calls,total_s,mean_ms` CSV text.
+    pub fn timing_report(&self) -> crate::obs::counters::TimingReport {
+        crate::obs::counters::TimingReport::from_timings(&self.timings)
     }
 }

@@ -151,10 +151,33 @@ impl StepSpec {
     }
 }
 
+/// Task class in the predicted timeline. At the *last* virtual stage
+/// `Fwd` is the fused fwd+loss+bwd task (as in `StepCosts`), so a full
+/// step has `V·M` forwards and `(V−1)·M` explicit backwards.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
-enum Class {
+pub enum Class {
+    /// forward compute (fused fwd+loss+bwd at the last vstage)
     Fwd,
+    /// explicit backward compute
     Bwd,
+}
+
+/// One dispatched task in the engine's predicted timeline: vstage,
+/// microbatch, class, and the `[start, end)` interval in simulated
+/// seconds. Produced by [`simulate_step_timeline`]; `obs::diff`
+/// compares these placements against a recorded trace's spans.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TaskSpan {
+    /// virtual stage the task ran on
+    pub v: usize,
+    /// microbatch index
+    pub mb: usize,
+    /// forward (fused at the last vstage) or backward
+    pub class: Class,
+    /// dispatch time, simulated seconds
+    pub start: f64,
+    /// completion time, simulated seconds
+    pub end: f64,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -186,6 +209,8 @@ struct Engine<'a> {
     /// per-vstage completion time of its latest gradient (bwd / fused)
     grad_done_v: Vec<f64>,
     tasks_done: usize,
+    /// when `Some`, every dispatched task is recorded (obs::diff)
+    timeline: Option<Vec<TaskSpan>>,
 }
 
 impl<'a> Engine<'a> {
@@ -204,6 +229,7 @@ impl<'a> Engine<'a> {
             last_done: vec![0.0; spec.workers],
             grad_done_v: vec![0.0; spec.vstages],
             tasks_done: 0,
+            timeline: None,
         }
     }
 
@@ -280,7 +306,13 @@ impl<'a> Engine<'a> {
             }
         };
         self.worker_busy[w] = true;
-        self.q.push(t + dur, Event::TaskDone { v, mb, class });
+        // one shared `end` feeds both the queue and the timeline, so
+        // recording adds no fp operation to the parity-contracted path
+        let end = t + dur;
+        if let Some(tl) = &mut self.timeline {
+            tl.push(TaskSpan { v, mb, class, start: t, end });
+        }
+        self.q.push(end, Event::TaskDone { v, mb, class });
     }
 
     /// Serialize a transfer on a physical link direction and schedule
@@ -337,7 +369,7 @@ impl<'a> Engine<'a> {
         self.dispatch(w, t);
     }
 
-    fn run(mut self) -> Result<Makespan> {
+    fn run(&mut self) -> Result<Makespan> {
         let s = self.spec;
         // all first-vstage forwards are ready at t = 0
         for mb in 0..s.microbatches {
@@ -446,6 +478,26 @@ pub fn simulate_step_spec(spec: &StepSpec) -> Result<Makespan> {
     Engine::new(spec).run()
 }
 
+/// Execute one step and also return the engine's task *placements* —
+/// every dispatched (vstage, microbatch, class) with its simulated
+/// `[start, end)` interval. The makespan is bit-identical to
+/// [`simulate_step_spec`] (recording reuses the engine's own `t + dur`
+/// value); `obs::diff` replays a recorded trace against this timeline.
+pub fn simulate_step_timeline(
+    spec: &StepSpec,
+) -> Result<(Makespan, Vec<TaskSpan>)> {
+    if spec.vstages < 2 {
+        bail!("pipeline needs >= 2 virtual stages, got {}", spec.vstages);
+    }
+    if spec.microbatches == 0 {
+        bail!("step needs >= 1 microbatch");
+    }
+    let mut engine = Engine::new(spec);
+    engine.timeline = Some(Vec::new());
+    let ms = engine.run()?;
+    Ok((ms, engine.timeline.take().unwrap_or_default()))
+}
+
 /// Event-simulate one coordinator step under `schedule` — the drop-in
 /// replacement for `gpipe_makespan` used by the pipeline when a
 /// non-GPipe schedule (or `--sim`) is requested.
@@ -551,6 +603,29 @@ mod tests {
         let o_sym = step_makespan(&c_sym, Schedule::OneFOneB).unwrap();
         assert!((g_sym.total - 20.0).abs() < 1e-9, "{}", g_sym.total);
         assert!((o_sym.total - 20.0).abs() < 1e-9, "{}", o_sym.total);
+    }
+
+    #[test]
+    fn timeline_recording_is_exact_and_complete() {
+        let mut rng = Rng::new(0x7131);
+        for sched in [Schedule::Gpipe, Schedule::OneFOneB] {
+            let c = random_costs(&mut rng, 4, 6);
+            let spec = StepSpec::from_costs(&c, sched).unwrap();
+            let plain = simulate_step_spec(&spec).unwrap();
+            let (ms, tl) = simulate_step_timeline(&spec).unwrap();
+            // recording must not perturb a single fp operation
+            assert_eq!(ms.total, plain.total, "{sched:?}");
+            assert_eq!(ms.grad_ready, plain.grad_ready);
+            // every task appears exactly once, with sane intervals
+            assert_eq!(tl.len(), 4 * 6 + 3 * 6);
+            let last_end =
+                tl.iter().map(|t| t.end).fold(0.0f64, f64::max);
+            assert!(last_end <= ms.total);
+            for t in &tl {
+                assert!(t.start <= t.end);
+                assert!(t.v < 4 && t.mb < 6);
+            }
+        }
     }
 
     #[test]

@@ -45,6 +45,7 @@ use crate::compress::{dp_wire_bytes, wire_bytes, Mode};
 use crate::coordinator::schedule::{Makespan, Tx};
 use crate::manifest::Hyper;
 use crate::netsim::{Link, LinkSpec, ReplicaRing};
+use crate::obs::trace;
 use crate::par::cell_seed;
 use crate::rng::Rng;
 use crate::sim::step::{simulate_step_spec, Schedule, StepSpec};
@@ -586,6 +587,14 @@ impl<'a> Swarm<'a> {
                 self.active[victim] = false;
                 self.report.leaves += 1;
                 self.pending_rejoin.push((t + downtime_s, victim));
+                trace::instant_at(
+                    "sim",
+                    "leave",
+                    victim as u32,
+                    0,
+                    t * 1e6,
+                    vec![trace::u("replica", victim as u64)],
+                );
                 Some(victim)
             }
             ChurnSpec::Scripted(_) => {
@@ -606,6 +615,14 @@ impl<'a> Swarm<'a> {
                 }
                 self.active[replica] = false;
                 self.report.leaves += 1;
+                trace::instant_at(
+                    "sim",
+                    "leave",
+                    replica as u32,
+                    0,
+                    t * 1e6,
+                    vec![trace::u("replica", replica as u64)],
+                );
                 Some(replica)
             }
             ChurnSpec::None => None,
@@ -645,6 +662,15 @@ impl<'a> Swarm<'a> {
                 self.report.sync_seconds += dur;
                 self.report.rejoins += 1;
                 self.active[r] = true;
+                trace::span_at(
+                    "sim",
+                    "state-sync",
+                    r as u32,
+                    0,
+                    rt * 1e6,
+                    dur * 1e6,
+                    vec![trace::u("replica", r as u64)],
+                );
                 if rt + dur > barrier {
                     barrier = rt + dur;
                 }
@@ -772,6 +798,7 @@ impl<'a> Swarm<'a> {
         let h = &spec.hyper;
         let p = h.stages;
         let t_sched = self.clock;
+        let step_idx = self.report.step_seconds.len() as u64;
         // captured before the barrier so rejoin state-sync bytes (which
         // cross ring links inside barrier()) land in this step's delta
         let dp_before = self.ring.total_bytes();
@@ -793,6 +820,18 @@ impl<'a> Swarm<'a> {
             let ms = simulate_step_spec(&sspec)?;
             self.report.compute += ms.compute;
             self.report.comm_ser += ms.comm_ser;
+            trace::span_at(
+                "sim",
+                "pipeline",
+                r as u32,
+                0,
+                barrier * 1e6,
+                ms.total * 1e6,
+                vec![
+                    trace::u("step", step_idx),
+                    trace::u("replica", r as u64),
+                ],
+            );
             makespans.push((r, ms));
         }
         let serial_bound = makespans
@@ -819,7 +858,6 @@ impl<'a> Swarm<'a> {
             // pipelines only: no gradient exchange to schedule
             done.fill(true);
         }
-        let step_idx = self.report.step_seconds.len() as u64;
         let mut ring_free = barrier;
         let mut reduced_any = false;
         let ready_of = |live: &[usize], ms: &[(usize, Makespan)], s: usize| {
@@ -914,6 +952,22 @@ impl<'a> Swarm<'a> {
             ring_free = start + dur;
             done[s] = true;
             reduced_any = true;
+            trace::span_at(
+                "sim",
+                match spec.reduce {
+                    Reduce::Gossip { .. } => "gossip",
+                    _ => "all-reduce",
+                },
+                0,
+                s as u32,
+                start * 1e6,
+                dur * 1e6,
+                vec![
+                    trace::u("step", step_idx),
+                    trace::u("stage", s as u64),
+                    trace::u("bytes", payloads[s] as u64),
+                ],
+            );
         }
 
         // --- step end: slowest surviving pipeline vs last all-reduce ---
@@ -982,6 +1036,15 @@ impl<'a> Swarm<'a> {
                 .collect();
         }
         self.report.overhead += (step_end - barrier) - serial_bound;
+        trace::span_at(
+            "sim",
+            "step",
+            0,
+            0,
+            t_sched * 1e6,
+            (step_end - t_sched) * 1e6,
+            vec![trace::u("step", step_idx)],
+        );
         self.clock = step_end;
         Ok(step_end - t_sched)
     }

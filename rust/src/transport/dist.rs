@@ -49,6 +49,7 @@ use crate::linalg;
 use crate::manifest::Hyper;
 use crate::nn::model::{build_stage, high_rank_e, sinusoidal_pe, StageIo};
 use crate::nn::optim::{step_stage, OptStep};
+use crate::obs::trace;
 use crate::nn::{
     encode_boundary, grassmann_step_u, reproject_stage, BoundaryDir, Optim,
 };
@@ -477,6 +478,14 @@ pub(crate) fn run_stage_inner(
     let stale =
         ectx.map(|e| Duration::from_millis(e.stale_ms.max(1)));
     let clock0 = Instant::now();
+    // logical trace track: pid = replica, tid = stage — stable across
+    // transports, pool widths, and OS thread scheduling
+    if trace::enabled() {
+        trace::set_track(
+            dp.as_ref().map_or(0, |d| d.replica as u32),
+            stage as u32,
+        );
+    }
 
     // ---- handshake: exchange config digests on every link. In a
     // replica grid the dp context carries the grid-wide PMCFG2 digest
@@ -669,6 +678,7 @@ pub(crate) fn run_stage_inner(
             }
         }
         let t0 = Instant::now();
+        let tt_step = trace::begin();
         // data stream: one fork per step, batches drawn in microbatch
         // order — byte-for-byte the single-process sampler sequence
         let mut data_rng = rng.fork(0xDA7A ^ step);
@@ -700,9 +710,26 @@ pub(crate) fn run_stage_inner(
                             "left",
                             stale,
                         )?;
+                        let td = trace::begin();
                         saved[mb] = Some(decode_boundary(spec, &f, stage)?);
+                        if trace::enabled() {
+                            trace::end(
+                                "codec",
+                                "decode:fwd",
+                                td,
+                                vec![
+                                    trace::u("step", step),
+                                    trace::u("mb", mb as u64),
+                                    trace::u(
+                                        "bytes",
+                                        f.payload.len() as u64,
+                                    ),
+                                ],
+                            );
+                        }
                     }
                     if stage < last {
+                        let tt = trace::begin();
                         let built = build_stage(
                             &h,
                             cfg.mode,
@@ -717,6 +744,18 @@ pub(crate) fn run_stage_inner(
                             },
                         );
                         let out = built.tape.value(built.output).clone();
+                        if trace::enabled() {
+                            trace::end(
+                                "compute",
+                                "fwd",
+                                tt,
+                                vec![
+                                    trace::u("step", step),
+                                    trace::u("mb", mb as u64),
+                                ],
+                            );
+                        }
+                        let te = trace::begin();
                         let cf = encode_boundary(
                             &cfg,
                             &h,
@@ -726,6 +765,21 @@ pub(crate) fn run_stage_inner(
                             BoundaryDir::Fwd,
                             step,
                         );
+                        if trace::enabled() {
+                            trace::end(
+                                "codec",
+                                "encode:fwd",
+                                te,
+                                vec![
+                                    trace::u("step", step),
+                                    trace::u("mb", mb as u64),
+                                    trace::u(
+                                        "bytes",
+                                        cf.wire_len() as u64,
+                                    ),
+                                ],
+                            );
+                        }
                         if cfg.mode != Mode::PowerLR
                             && cf.wire_len() != bbytes
                         {
@@ -746,6 +800,7 @@ pub(crate) fn run_stage_inner(
                         ))?;
                     } else {
                         // last stage: fused fwd + loss + bwd
+                        let tt = trace::begin();
                         let mut built = build_stage(
                             &h,
                             cfg.mode,
@@ -791,6 +846,18 @@ pub(crate) fn run_stage_inner(
                             .grad(built.input.expect("last stage input"))
                             .expect("boundary gradient")
                             .clone();
+                        if trace::enabled() {
+                            trace::end(
+                                "compute",
+                                "fused",
+                                tt,
+                                vec![
+                                    trace::u("step", step),
+                                    trace::u("mb", mb as u64),
+                                ],
+                            );
+                        }
+                        let te = trace::begin();
                         let cf = encode_boundary(
                             &cfg,
                             &h,
@@ -800,6 +867,21 @@ pub(crate) fn run_stage_inner(
                             BoundaryDir::Bwd,
                             step,
                         );
+                        if trace::enabled() {
+                            trace::end(
+                                "codec",
+                                "encode:bwd",
+                                te,
+                                vec![
+                                    trace::u("step", step),
+                                    trace::u("mb", mb as u64),
+                                    trace::u(
+                                        "bytes",
+                                        cf.wire_len() as u64,
+                                    ),
+                                ],
+                            );
+                        }
                         boundary_payload += priced_frame(cf.wire_len());
                         frames_sent += 1;
                         links.left().send(&WireFrame::boundary(
@@ -826,7 +908,21 @@ pub(crate) fn run_stage_inner(
                         "right",
                         stale,
                     )?;
+                    let td = trace::begin();
                     let delivered = decode_boundary(spec, &f, stage)?;
+                    if trace::enabled() {
+                        trace::end(
+                            "codec",
+                            "decode:bwd",
+                            td,
+                            vec![
+                                trace::u("step", step),
+                                trace::u("mb", mb as u64),
+                                trace::u("bytes", f.payload.len() as u64),
+                            ],
+                        );
+                    }
+                    let tt = trace::begin();
                     let mut built = build_stage(
                         &h,
                         cfg.mode,
@@ -847,6 +943,17 @@ pub(crate) fn run_stage_inner(
                         &mut grad_acc,
                     );
                     accumulate_grads(&built, &mut grad_acc);
+                    if trace::enabled() {
+                        trace::end(
+                            "compute",
+                            "bwd",
+                            tt,
+                            vec![
+                                trace::u("step", step),
+                                trace::u("mb", mb as u64),
+                            ],
+                        );
+                    }
                     if stage > 0 {
                         let gc = built
                             .tape
@@ -1000,6 +1107,9 @@ pub(crate) fn run_stage_inner(
                     blob,
                 ))?;
             }
+        }
+        if trace::enabled() {
+            trace::end("step", "step", tt_step, vec![trace::u("step", step)]);
         }
     }
 
@@ -1164,7 +1274,10 @@ pub fn serve_stage(
             let (s, peer) = l.accept().with_context(|| {
                 format!("stage {stage}: accepting the right neighbor")
             })?;
-            eprintln!("[serve] stage {stage}: right neighbor {peer}");
+            crate::obs::log!(
+                Info,
+                "serve: stage {stage}: right neighbor {peer}"
+            );
             Some(Box::new(TcpTransport::new(s)?))
         }
         None => None,

@@ -61,6 +61,7 @@ use crate::coordinator::PipelineConfig;
 use crate::data::CorpusKind;
 use crate::manifest::Hyper;
 use crate::nn::{NativePipeline, Optim};
+use crate::obs::trace;
 use crate::par::cell_seed;
 use crate::rng::Rng;
 use crate::sim::ChurnTimeline;
@@ -627,6 +628,8 @@ fn ring_allreduce_wire(
     let right = (me + 1) % r_count;
     let left = (me + r_count - 1) % r_count;
     // reduce-scatter
+    let tt = trace::begin();
+    let bytes0 = dp.dp_payload_bytes;
     for p in 0..r_count - 1 {
         let si = (2 * r_count + me - p) % r_count;
         let ri = (2 * r_count + me - 1 - p) % r_count;
@@ -660,7 +663,20 @@ fn ring_allreduce_wire(
             *dst += *v;
         }
     }
+    if trace::enabled() {
+        trace::end(
+            "reduce",
+            "ring:reduce-scatter",
+            tt,
+            vec![
+                trace::u("step", step),
+                trace::u("bytes", dp.dp_payload_bytes - bytes0),
+            ],
+        );
+    }
     // all-gather: encode the owned chunk once, self-decode, relay bytes
+    let tt = trace::begin();
+    let bytes0 = dp.dp_payload_bytes;
     let owned = (me + 1) % r_count;
     let (oa, ob) = ranges[owned];
     let mut carry = encode_grad(mode, &flat[oa..ob], d, k, ratio)?;
@@ -696,6 +712,17 @@ fn ring_allreduce_wire(
         flat[ra..rb].copy_from_slice(&dec);
         carry = f.payload;
     }
+    if trace::enabled() {
+        trace::end(
+            "reduce",
+            "ring:all-gather",
+            tt,
+            vec![
+                trace::u("step", step),
+                trace::u("bytes", dp.dp_payload_bytes - bytes0),
+            ],
+        );
+    }
     let inv = 1.0 / r_count as f32;
     for v in flat.iter_mut() {
         *v *= inv;
@@ -723,6 +750,7 @@ fn gossip_exchange(
     if dp.dead[peer] {
         return Ok(());
     }
+    let tt = trace::begin();
     let (mode, d, k, ratio) = (dp.dp_mode, h.d, h.k, h.ratio);
     let payload = encode_grad(mode, flat, d, k, ratio)?;
     let fr = WireFrame::grad(
@@ -772,6 +800,18 @@ fn gossip_exchange(
                 return Err(e);
             }
         }
+    }
+    if trace::enabled() {
+        trace::end(
+            "reduce",
+            "gossip",
+            tt,
+            vec![
+                trace::u("step", step),
+                trace::u("peer", peer as u64),
+                trace::u("bytes", fr.payload.len() as u64),
+            ],
+        );
     }
     Ok(())
 }

@@ -1048,9 +1048,17 @@ fn serve_elastic_epochs(
             }
             Err(e) => {
                 recoveries += 1;
-                eprintln!(
-                    "[elastic] epoch {epoch} failed ({e:#}); recovering"
+                crate::obs::log!(
+                    Warn,
+                    "elastic: epoch {epoch} failed ({e:#}); recovering"
                 );
+                if crate::obs::trace::enabled() {
+                    crate::obs::trace::instant(
+                        "elastic",
+                        "recovery",
+                        vec![crate::obs::trace::u("epoch", epoch as u64)],
+                    );
+                }
                 // give the monitors one stale window to notice deaths
                 std::thread::sleep(Duration::from_millis(es.stale_ms.min(500)));
                 let dead_now = dead.lock().expect("dead set").clone();
@@ -1082,9 +1090,17 @@ fn serve_elastic_epochs(
                     };
                     assignment[stage] = Some(replacement);
                     spares_used += 1;
-                    eprintln!(
-                        "[elastic] stage {stage}: reassigned to a spare"
+                    crate::obs::log!(
+                        Warn,
+                        "elastic: stage {stage}: reassigned to a spare"
                     );
+                    if crate::obs::trace::enabled() {
+                        crate::obs::trace::instant(
+                            "elastic",
+                            "reassign",
+                            vec![crate::obs::trace::u("stage", stage as u64)],
+                        );
+                    }
                 }
                 resume = shared.lock().expect("ctl store").best_boundary();
                 resume_steps.push(resume);
@@ -1200,8 +1216,9 @@ fn serve_actor(
                     // scripted death: exit the process like a real kill
                     return Err(e);
                 }
-                eprintln!(
-                    "[elastic] stage {stage} epoch {epoch} failed: {msg}; \
+                crate::obs::log!(
+                    Warn,
+                    "elastic: stage {stage} epoch {epoch} failed: {msg}; \
                      awaiting reassignment"
                 );
             }

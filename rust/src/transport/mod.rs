@@ -33,6 +33,9 @@ pub mod frame;
 
 use anyhow::{Context, Result};
 
+use crate::compress::Mode;
+use crate::obs::trace;
+
 pub use dist::{
     run_local, serve_stage, DistReport, TransportKind, WorkerReport,
     WorkerSpec,
@@ -53,6 +56,38 @@ pub use fault::{
     FaultStats, FaultTransport, LinkSide,
 };
 pub use frame::{FrameKind, WireFrame, HEADER_LEN, MAX_PAYLOAD};
+
+/// Record one wire-frame event on the current logical track: category
+/// `frame`, name `<dir>:<kind>`, duration bounded by the `t0_us`
+/// handed back from [`trace::begin`] at the call's entry. Every frame
+/// on every link flows through the two backend impls below, so these
+/// five argument keys (`bytes` = full wire length, `payload`, `step`,
+/// `mb`, `tag` = codec wire tag or `0xFF`) are the whole frame schema
+/// the `METRICS.json` byte counters and the trace-determinism tests
+/// consume. No-op (one relaxed atomic load) without a trace session.
+fn trace_frame(dir: &str, frame: &WireFrame, t0_us: f64) {
+    if !trace::enabled() || t0_us.is_nan() {
+        return;
+    }
+    trace::end(
+        "frame",
+        &format!("{dir}:{}", frame.kind.name()),
+        t0_us,
+        vec![
+            trace::u("bytes", frame.wire_len() as u64),
+            trace::u("payload", frame.payload.len() as u64),
+            trace::u("step", frame.step),
+            trace::u("mb", frame.microbatch as u64),
+            trace::u(
+                "tag",
+                frame
+                    .codec
+                    .map(Mode::wire_tag)
+                    .unwrap_or(frame::CODEC_NONE) as u64,
+            ),
+        ],
+    );
+}
 
 /// A blocking, ordered, reliable duplex link to one neighboring stage
 /// worker. Implementations must be `Send` (workers run on their own OS
@@ -118,25 +153,32 @@ pub fn channel_pair() -> (ChannelTransport, ChannelTransport) {
 
 impl Transport for ChannelTransport {
     fn send(&mut self, frame: &WireFrame) -> Result<()> {
+        let t0 = trace::begin();
         let bytes = frame.to_bytes();
         self.sent += bytes.len() as u64;
-        self.tx.send(bytes).map_err(|_| {
+        let res = self.tx.send(bytes).map_err(|_| {
             anyhow::anyhow!(
                 "worker departed: channel peer dropped before \
                  receiving a {} frame",
                 frame.kind.name()
             )
-        })
+        });
+        trace_frame("send", frame, t0);
+        res
     }
 
     fn recv(&mut self) -> Result<WireFrame> {
+        let t0 = trace::begin();
         let bytes = self.rx.recv().map_err(|_| {
             anyhow::anyhow!(
                 "worker departed: channel peer dropped while we \
                  awaited a frame"
             )
         })?;
-        WireFrame::read_from(&mut std::io::Cursor::new(bytes))
+        let frame =
+            WireFrame::read_from(&mut std::io::Cursor::new(bytes))?;
+        trace_frame("recv", &frame, t0);
+        Ok(frame)
     }
 
     fn recv_timeout(
@@ -144,11 +186,15 @@ impl Transport for ChannelTransport {
         timeout: std::time::Duration,
     ) -> Result<Option<WireFrame>> {
         use std::sync::mpsc::RecvTimeoutError;
+        let t0 = trace::begin();
         match self.rx.recv_timeout(timeout) {
-            Ok(bytes) => WireFrame::read_from(&mut std::io::Cursor::new(
-                bytes,
-            ))
-            .map(Some),
+            Ok(bytes) => {
+                let frame = WireFrame::read_from(
+                    &mut std::io::Cursor::new(bytes),
+                )?;
+                trace_frame("recv", &frame, t0);
+                Ok(Some(frame))
+            }
             Err(RecvTimeoutError::Timeout) => Ok(None),
             Err(RecvTimeoutError::Disconnected) => Err(anyhow::anyhow!(
                 "worker departed: channel peer dropped while we \
@@ -236,9 +282,11 @@ impl Transport for TcpTransport {
                 frame.kind.name()
             );
         }
+        let t0 = trace::begin();
         let bytes = frame.to_bytes();
         self.sent += bytes.len() as u64;
-        self.tx
+        let res = self
+            .tx
             .as_ref()
             .expect("writer queue open while transport lives")
             .send(bytes)
@@ -248,11 +296,16 @@ impl Transport for TcpTransport {
                      {} frame",
                     frame.kind.name()
                 )
-            })
+            });
+        trace_frame("send", frame, t0);
+        res
     }
 
     fn recv(&mut self) -> Result<WireFrame> {
-        WireFrame::read_from(&mut self.reader)
+        let t0 = trace::begin();
+        let frame = WireFrame::read_from(&mut self.reader)?;
+        trace_frame("recv", &frame, t0);
+        Ok(frame)
     }
 
     fn recv_timeout(

@@ -402,3 +402,49 @@ fn gossip_schedule_is_churn_consistent_across_workers() {
         assert_eq!(idle, replicas % 2);
     }
 }
+
+#[test]
+fn injected_fault_counts_equal_observed_fault_counters() {
+    // the observability contract for the chaos harness (DESIGN.md §15):
+    // what a seeded schedule injects is exactly what FaultStats counts,
+    // and RunMetrics::absorb_fault mirrors those counts verbatim — a
+    // schedule that silently never fires cannot pass as coverage
+    use protomodels::obs::counters::RunMetrics;
+    use protomodels::transport::{
+        channel_pair, FaultTransport, FrameKind, Transport, WireFrame,
+    };
+
+    let n = 64u64;
+    let sched = FaultSchedule::seeded(0x5EED, n, FaultFamily::DropHeavy);
+    let expected_drops =
+        sched.events().iter().filter(|e| e.at < n).count() as u64;
+    assert!(expected_drops > 0, "seeded schedule never fires in horizon");
+
+    let (mut tx, b) = channel_pair();
+    let mut rx = FaultTransport::new(Box::new(b), sched);
+    for i in 0..n {
+        tx.send(&WireFrame::control(FrameKind::Heartbeat, i, vec![0u8; 16]))
+            .expect("send");
+    }
+    let mut delivered = 0u64;
+    while rx
+        .recv_timeout(std::time::Duration::from_millis(50))
+        .expect("recv")
+        .is_some()
+    {
+        delivered += 1;
+    }
+    let stats = rx.stats();
+    assert_eq!(stats.dropped, expected_drops);
+    assert_eq!(stats.passed, n - expected_drops);
+    assert_eq!(delivered, stats.passed + stats.delayed);
+    assert_eq!(stats.delayed + stats.truncated + stats.severed, 0);
+
+    let mut m = RunMetrics::new();
+    m.absorb_fault(&stats);
+    assert_eq!(m.counter("fault.dropped"), stats.dropped);
+    assert_eq!(m.counter("fault.passed"), stats.passed);
+    assert_eq!(m.counter("fault.delayed"), stats.delayed);
+    assert_eq!(m.counter("fault.truncated"), stats.truncated);
+    assert_eq!(m.counter("fault.severed"), stats.severed);
+}

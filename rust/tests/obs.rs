@@ -1,0 +1,154 @@
+//! The observability layer's contracts (DESIGN.md §15): span traces
+//! are deterministic across pool widths (identical canonical span
+//! multisets at any `--threads`), frame byte counters absorbed from a
+//! trace equal both the transports' own send accounting and the
+//! `memory::transport_frame_bytes` wire model exactly, and a recorded
+//! trace survives a file round trip and replays through the event
+//! engine via `obs::diff`. Artifact-free; every test that records
+//! takes the process-wide session lock through `TraceSession`, so the
+//! suite is safe under the default parallel test runner.
+
+use protomodels::compress::{wire_bytes, Mode};
+use protomodels::coordinator::PipelineConfig;
+use protomodels::data::CorpusKind;
+use protomodels::manifest::Hyper;
+use protomodels::memory;
+use protomodels::nn::Optim;
+use protomodels::obs::counters::RunMetrics;
+use protomodels::obs::diff::diff_trace;
+use protomodels::obs::trace::{Clock, Trace, TraceSession};
+use protomodels::par;
+use protomodels::sim::Schedule;
+use protomodels::transport::{run_local, TransportKind, WorkerSpec};
+
+fn spec(steps: usize, stages: usize, microbatches: usize) -> WorkerSpec {
+    let mut h = Hyper::tiny_native();
+    h.stages = stages;
+    h.layers = h.blocks_per_stage * stages;
+    WorkerSpec {
+        h,
+        cfg: PipelineConfig {
+            mode: Mode::Subspace,
+            microbatches,
+            grassmann_interval: 0,
+            lr: 1e-2,
+            warmup_steps: 3,
+            total_steps: steps,
+            seed: 7,
+            ..Default::default()
+        },
+        optim: Optim::AdamW,
+        steps,
+        corpus_kind: CorpusKind::Wiki,
+        corpus_tokens: 60_000,
+    }
+}
+
+/// Record one channel-distributed run and return (trace, loss curve).
+fn traced_run(s: &WorkerSpec) -> (Trace, Vec<f64>) {
+    let session = TraceSession::start(Clock::Host);
+    let rep = run_local(s, TransportKind::Channel).expect("channel run");
+    (session.stop(), rep.losses)
+}
+
+#[test]
+fn canonical_span_set_is_pool_width_invariant() {
+    let s = spec(3, 2, 2);
+    let saved = par::max_threads_setting();
+    par::set_max_threads(1);
+    let (t1, l1) = traced_run(&s);
+    par::set_max_threads(8);
+    let (t8, l8) = traced_run(&s);
+    par::set_max_threads(saved);
+    assert!(!t1.events.is_empty(), "traced run recorded no spans");
+    assert_eq!(
+        t1.canonical_lines(),
+        t8.canonical_lines(),
+        "canonical span multiset differs between pool widths 1 and 8"
+    );
+    for (a, b) in l1.iter().zip(&l8) {
+        assert_eq!(a.to_bits(), b.to_bits(), "loss curve depends on pool width");
+    }
+}
+
+#[test]
+fn frame_byte_counters_match_wire_accounting_and_memory_model() {
+    let s = spec(3, 2, 2);
+    let session = TraceSession::start(Clock::Host);
+    let rep = run_local(&s, TransportKind::Channel).expect("channel run");
+    let trace = session.stop();
+    let mut m = RunMetrics::new();
+    m.absorb_trace(&trace);
+
+    // sender-side wire bytes from the trace equal the transports' own
+    // bytes_sent() accounting exactly
+    assert_eq!(m.counter("bytes.wire"), rep.wire_bytes);
+
+    // every boundary frame carries exactly the payload the analytic
+    // wire model prices: memory::transport_frame_bytes = header +
+    // compress::wire_bytes
+    let h = &s.h;
+    let per_frame = memory::transport_frame_bytes(h, s.cfg.mode) as u64;
+    let per_payload =
+        wire_bytes(s.cfg.mode, h.b, h.n, h.d, h.k, h.ratio) as u64;
+    let p = h.stages as u64;
+    let mb = s.cfg.microbatches as u64;
+    let steps = s.steps as u64;
+    let expect_frames = (p - 1) * mb * steps;
+    assert_eq!(m.counter("frames.sent.fwd"), expect_frames);
+    assert_eq!(m.counter("frames.sent.bwd"), expect_frames);
+    assert_eq!(m.counter("bytes.wire.fwd"), expect_frames * per_frame);
+    assert_eq!(m.counter("bytes.wire.bwd"), expect_frames * per_frame);
+    assert_eq!(m.counter("bytes.payload.fwd"), expect_frames * per_payload);
+    assert_eq!(m.counter("bytes.payload.bwd"), expect_frames * per_payload);
+
+    // send and recv frame counts agree per kind on a clean run
+    for kind in ["fwd", "bwd", "step-end", "hello"] {
+        assert_eq!(
+            m.counter(&format!("frames.sent.{kind}")),
+            m.counter(&format!("frames.recv.{kind}")),
+            "frame kind {kind} lost in flight"
+        );
+    }
+}
+
+#[test]
+fn trace_survives_file_round_trip_and_diffs_against_engine() {
+    let s = spec(3, 2, 4);
+    let (trace, _) = traced_run(&s);
+    let dir = std::env::temp_dir().join("protomodels_obs_test");
+    let path = dir.join("trace.json");
+    trace.write_file(&path).expect("write trace");
+    let back = Trace::read_file(&path).expect("read trace");
+    assert_eq!(back, trace);
+    // the perfetto wrapper fields are present in the file
+    let text = std::fs::read_to_string(&path).expect("trace text");
+    assert!(text.contains("\"traceEvents\""));
+    assert!(text.contains("\"displayTimeUnit\""));
+    let report = diff_trace(&back, Schedule::Gpipe).expect("diff");
+    assert!(report.steps > 0, "no complete steps replayed");
+    assert!(
+        report.max_rel_err.is_finite(),
+        "non-finite placement error"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn metrics_written_from_trace_parse_back() {
+    let s = spec(2, 2, 2);
+    let (trace, _) = traced_run(&s);
+    let mut m = RunMetrics::new();
+    m.absorb_trace(&trace);
+    let dir = std::env::temp_dir().join("protomodels_obs_metrics_test");
+    let path = dir.join("METRICS.json");
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    m.write_file(&path).expect("write metrics");
+    let back = RunMetrics::parse(
+        &std::fs::read_to_string(&path).expect("metrics text"),
+    )
+    .expect("parse metrics");
+    assert_eq!(back.counter("frames.sent"), m.counter("frames.sent"));
+    assert_eq!(back.counter("bytes.wire"), m.counter("bytes.wire"));
+    std::fs::remove_dir_all(&dir).ok();
+}

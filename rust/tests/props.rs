@@ -776,3 +776,74 @@ fn prop_mode_fromstr_display_roundtrip_is_exhaustive() {
         assert!(bad.parse::<Mode>().is_err(), "{bad:?} must not parse");
     }
 }
+
+#[test]
+fn prop_trace_json_roundtrip_is_exact() {
+    // Chrome trace_event serialization is lossless: parsing the JSON
+    // text of a randomly generated trace rebuilds the identical event
+    // list, clock tag, and canonical span multiset. Float args avoid
+    // integral values (integral non-negative numbers canonicalize to
+    // Arg::U by design); timestamps exercise both integral-microsecond
+    // and fractional values, which Display round-trips exactly.
+    use protomodels::obs::trace::{Arg, Clock, Trace, TraceEvent};
+    let cats = ["compute", "frame", "codec", "reduce", "sim"];
+    let names = ["fwd", "bwd", "send:fwd", "recv:bwd", "step", "gossip"];
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed ^ 0x0B5E);
+        let clock = if rng.below(2) == 0 {
+            Clock::Host
+        } else {
+            Clock::Virtual
+        };
+        let n = rng.below(12);
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            let instant = rng.below(4) == 0;
+            let mut args = Vec::new();
+            if rng.below(2) == 0 {
+                args.push((
+                    "bytes".to_string(),
+                    Arg::U(rng.next_u64() % 1_000_000_000_000),
+                ));
+            }
+            if rng.below(3) == 0 {
+                args.push((
+                    "peer".to_string(),
+                    Arg::S(format!("127.0.0.1:{}", 9000 + rng.below(999))),
+                ));
+            }
+            if rng.below(3) == 0 {
+                // .5 fraction keeps the value non-integral so it stays
+                // an Arg::F through the canonical re-parse
+                args.push((
+                    "ratio".to_string(),
+                    Arg::F(rng.below(1000) as f64 + 0.5),
+                ));
+            }
+            events.push(TraceEvent {
+                cat: cats[rng.below(cats.len())].to_string(),
+                name: names[rng.below(names.len())].to_string(),
+                pid: rng.below(8) as u32,
+                tid: rng.below(8) as u32,
+                ts_us: rng.uniform() * 1e9,
+                dur_us: if instant {
+                    0.0
+                } else {
+                    rng.below(1_000_000) as f64
+                },
+                instant,
+                args,
+            });
+        }
+        let trace = Trace { events, clock };
+        let text = trace.to_json().to_string();
+        let back = Trace::parse(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: reparse failed: {e:#}"));
+        assert_eq!(back, trace, "seed {seed}: round trip not exact");
+        assert_eq!(
+            back.canonical_lines(),
+            trace.canonical_lines(),
+            "seed {seed}: canonical form drifted through JSON"
+        );
+    }
+}
