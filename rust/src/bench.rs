@@ -159,6 +159,7 @@ pub fn check_regressions(
         ("BENCH_pipeline.json", "pipeline.json"),
         ("BENCH_nn.json", "nn.json"),
         ("BENCH_transport.json", "transport.json"),
+        ("BENCH_serve.json", "serve.json"),
     ];
     let mut report =
         RegressionCheck { checked: 0, skipped: 0, failures: Vec::new() };

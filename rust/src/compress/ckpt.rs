@@ -97,6 +97,29 @@ impl CkptCodec {
             _ => None,
         }
     }
+
+    /// Every codec, in tag order — the list the exhaustive
+    /// `FromStr`/`Display`/`tag` round-trip properties sweep, so a new
+    /// variant that misses any of them fails a test instead of silently
+    /// falling back to string matching.
+    pub const ALL: [CkptCodec; 2] = [CkptCodec::Raw, CkptCodec::Coeff];
+}
+
+impl std::str::FromStr for CkptCodec {
+    type Err = anyhow::Error;
+
+    /// The canonical parse: `"coeff".parse::<CkptCodec>()` — same table
+    /// as [`CkptCodec::parse`], exposed through the standard trait so
+    /// CLI sites compare parsed values instead of matching strings.
+    fn from_str(s: &str) -> Result<CkptCodec> {
+        CkptCodec::parse(s)
+    }
+}
+
+impl std::fmt::Display for CkptCodec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
 }
 
 /// True when `codec` stores this parameter as subspace coefficients
@@ -277,6 +300,16 @@ mod tests {
     use crate::manifest::Hyper;
     use crate::rng::Rng;
     use crate::stage::GlobalState;
+
+    #[test]
+    fn ckpt_codec_round_trips_exhaustively() {
+        for c in CkptCodec::ALL {
+            assert_eq!(c.to_string().parse::<CkptCodec>().unwrap(), c);
+            assert_eq!(CkptCodec::from_tag(c.tag()), Some(c));
+        }
+        let err = "gzip".parse::<CkptCodec>().unwrap_err().to_string();
+        assert!(err.contains("raw|coeff"), "{err}");
+    }
 
     fn setup(mode: Mode, stage: usize) -> (Hyper, GlobalState, StageState) {
         let h = Hyper::tiny_native();

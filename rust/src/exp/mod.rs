@@ -1665,6 +1665,164 @@ pub fn trace_diff(opts: &ExpOpts) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// serve-report: decode serving throughput / latency vs bandwidth × batch
+// ---------------------------------------------------------------------------
+
+/// Decode-serving report (DESIGN.md §16): tokens/sec and latency tails
+/// across a bandwidth × max-batch grid, with the §9-style serving
+/// simulator's predictions held against measured runs. Calibration and
+/// comparison follow `transport-report` / `trace-diff` discipline:
+///
+/// 1. one measured single-process decode run fits an effective device
+///    rate (predicted FLOPs over measured wall — machine speed out of
+///    the loop);
+/// 2. every grid cell's throughput and p50/p99 latency is *predicted*
+///    by [`predict_serve`], which replays the runtime's replicated
+///    batcher verbatim and prices frames on the cell's [`LinkSpec`];
+/// 3. per max-batch, one measured TCP `serve-infer` run fills the
+///    loopback row's measured columns and the
+///    `measured_over_predicted` ratio.
+///
+/// Emits `fig_serve_report.csv`; no threshold is asserted here
+/// (wall-clock is machine-dependent), the CI `serve-smoke` leg checks
+/// structure and uploads the figure.
+///
+/// [`predict_serve`]: crate::sim::predict_serve
+pub fn serve_report(opts: &ExpOpts) -> Result<()> {
+    use crate::netsim::GBPS;
+    use crate::sim::predict_serve;
+    use crate::transport::{
+        run_serve_local, serve_infer, ServeSpec, TrafficSpec,
+        TransportKind,
+    };
+
+    let budget = opts.steps_or(600, 300);
+    let h = Hyper::tiny_native();
+    let traffic = TrafficSpec {
+        sessions: if opts.fast { 4 } else { 6 },
+        mean_gap: 1.5,
+        prompt: (4, 8),
+        gen: (4, 6),
+    };
+    let mk_spec = |max_batch: usize| -> Result<ServeSpec> {
+        ServeSpec::builder(h.clone())
+            .mode(Mode::Subspace)
+            .steps(budget)
+            .seed(opts.seed)
+            .corpus(CorpusKind::Wiki, 100_000)
+            .traffic(traffic.clone())
+            .max_batch(max_batch)
+            .build()
+    };
+    let loopback = LinkSpec {
+        bandwidth_bps: 10.0 * GBPS,
+        latency_s: 50e-6,
+        jitter_frac: 0.0,
+    };
+    let grid_links: &[(&str, LinkSpec)] = &[
+        ("loopback", loopback),
+        ("16gbps", LinkSpec::centralized_16g()),
+        ("80mbps", LinkSpec::internet_80m()),
+    ];
+    let batches: &[usize] = &[1, 2, 4];
+
+    // calibrate: predicted FLOPs of the widest-batch schedule over its
+    // measured single-process wall
+    let cal_spec = mk_spec(*batches.last().unwrap())?;
+    let flops: f64 = predict_serve(&cal_spec, &loopback, 1.0)?
+        .steps
+        .iter()
+        .map(|s| s.compute_s)
+        .sum();
+    let cal_wall = run_serve_local(&cal_spec)?.wall_seconds();
+    if !(cal_wall > 0.0) {
+        bail!("serve-report calibration run measured no wall time");
+    }
+    let device_flops = flops / cal_wall;
+
+    let mut csv = CsvWriter::create(
+        opts.out_dir.join("fig_serve_report.csv"),
+        &[
+            "bandwidth",
+            "max_batch",
+            "steps",
+            "sessions",
+            "predicted_tokens_per_sec",
+            "predicted_p50_s",
+            "predicted_p99_s",
+            "predicted_step_s",
+            "measured_tokens_per_sec",
+            "measured_step_s",
+            "measured_over_predicted",
+        ],
+    )?;
+    let mut rows = 0usize;
+    for &max_batch in batches {
+        let spec = mk_spec(max_batch)?;
+        // measured leg: the real staged decode over TCP loopback
+        let meas = serve_infer(&spec, TransportKind::Tcp)?;
+        for (bw, link) in grid_links {
+            let pred = predict_serve(&spec, link, device_flops)?;
+            if pred.steps.is_empty() {
+                bail!("serve-report predicted an empty schedule");
+            }
+            if !pred.mean_step_seconds().is_finite() {
+                bail!("serve-report predicted step wall is not finite");
+            }
+            let measured_here = *bw == "loopback";
+            let (m_tps, m_step, ratio) = if measured_here {
+                if meas.steps != pred.steps.len() as u64 {
+                    bail!(
+                        "serving simulator executed {} steps but the \
+                         measured run executed {} — schedule replay \
+                         diverged",
+                        pred.steps.len(),
+                        meas.steps
+                    );
+                }
+                let m = meas.mean_step_seconds();
+                (
+                    format!("{:.1}", meas.tokens_per_sec()),
+                    format!("{m:.6}"),
+                    format!(
+                        "{:.3}",
+                        m / pred.mean_step_seconds().max(1e-12)
+                    ),
+                )
+            } else {
+                (String::new(), String::new(), String::new())
+            };
+            csv.row(&[
+                (*bw).to_string(),
+                max_batch.to_string(),
+                pred.steps.len().to_string(),
+                traffic.sessions.to_string(),
+                format!("{:.1}", pred.tokens_per_sec()),
+                format!("{:.6}", pred.latency_percentile(50.0)),
+                format!("{:.6}", pred.latency_percentile(99.0)),
+                format!("{:.6}", pred.mean_step_seconds()),
+                m_tps,
+                m_step,
+                ratio,
+            ])?;
+            rows += 1;
+        }
+        eprintln!(
+            "[serve-report] batch {max_batch}: measured {:.1} tok/s \
+             over TCP ({} steps, p99 {:.4}s)",
+            meas.tokens_per_sec(),
+            meas.steps,
+            meas.latency_percentile(99.0),
+        );
+    }
+    if rows == 0 {
+        bail!("serve-report emitted no rows");
+    }
+    csv.finish()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // dispatcher
 // ---------------------------------------------------------------------------
 
@@ -1693,6 +1851,7 @@ pub const ALL: &[&str] = &[
     "transport-report",
     "dp-real",
     "trace-diff",
+    "serve-report",
 ];
 
 /// Run one experiment driver by name (`"all"` runs the full suite).
@@ -1723,6 +1882,7 @@ pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
         "transport-report" => transport_report(opts),
         "dp-real" => dp_real(opts),
         "trace-diff" => trace_diff(opts),
+        "serve-report" => serve_report(opts),
         "all" => {
             for e in ALL {
                 eprintln!("=== exp {e} ===");

@@ -58,6 +58,13 @@ USAGE:
                       [--host 127.0.0.1] [--port-base 7070]
                       [--elastic] [--spare] [+ elastic train flags]
                       [--trace trace.json]
+  protomodels serve-infer
+                      [--config tiny] [--mode subspace|raw|...] [--seed 17]
+                      [--sessions 8] [--mean-gap 2.0] [--prompt 4:8]
+                      [--gen 4:8] [--max-batch 4] [--steps 1000]
+                      [--transport local|channel|tcp]
+                      [--stage I --host 127.0.0.1 --port-base 7070]
+                      [--trace trace.json]
   protomodels sim     [--preset base|small] [--replicas 4] [--steps 5]
                       [--bandwidth 80mbps] [--dp-bandwidth 80mbps]
                       [--mode subspace] [--dp-mode subspace]
@@ -104,6 +111,20 @@ peer per step, no global barrier, and survives scripted replica kills
 TCP worker process: launch one per stage with identical flags (stage I
 listens on port-base+I; launch order is free) and stage 0 prints the
 curve.
+
+`serve-infer` serves autoregressive decode over the staged pipeline
+(DESIGN.md §16): sessions arrive on a seeded open-loop clock, a
+replicated continuous batcher admits up to --max-batch of them per
+decode step, and each step moves ONE subspace-compressed boundary row
+per active session between stages (per-session codec payloads — the
+token stream a session produces is bitwise identical whatever else is
+in the batch). --transport channel|tcp runs the decode grid over real
+links in one process; --stage I runs one stage per process over TCP
+(identical flags everywhere; the PMCFG3 handshake rejects mismatches,
+including train-vs-serve workload confusion). --steps is the decode-step
+budget, a deterministic bail when the traffic doesn't finish in time.
+`exp serve-report` sweeps bandwidth × batch and holds the serving
+simulator's predicted step walls against measured runs.
 
 `train --chaos` / `--fault` (native backend) runs the elastic runtime
 (DESIGN.md §12): stage workers emit heartbeats and ship compressed
@@ -233,8 +254,7 @@ fn native_spec(flags: &Flags) -> Result<WorkerSpec> {
     let seed = flags.usize("seed", 17)? as u64;
     let tm = TimeModel::parse(&flags.str("time-model", "analytic"))
         .ok_or_else(|| anyhow::anyhow!("bad --time-model"))?;
-    let schedule = Schedule::parse(&flags.str("schedule", "gpipe"))
-        .ok_or_else(|| anyhow::anyhow!("bad --schedule"))?;
+    let schedule = flags.str("schedule", "gpipe").parse::<Schedule>()?;
     let optim = Optim::parse(&flags.str("optim", "adamw"))?;
     let cfg = PipelineConfig {
         mode,
@@ -273,7 +293,7 @@ fn elastic_opts(flags: &Flags, worker: &WorkerSpec) -> Result<ElasticOpts> {
     }
     // 0 = auto (steps/4); the CLI default keeps the auto cadence
     o.ckpt_every = flags.usize("ckpt-every", 0)? as u64;
-    o.ckpt_codec = CkptCodec::parse(&flags.str("ckpt-codec", "raw"))?;
+    o.ckpt_codec = flags.str("ckpt-codec", "raw").parse::<CkptCodec>()?;
     o.heartbeat_every = flags.usize("hb-every", 1)? as u64;
     o.stale_ms = flags.usize("stale-ms", 5_000)? as u64;
     o.spares = flags.usize("spares", 1)?;
@@ -595,8 +615,7 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     let h = manifest.config(&config)?.hyper.clone();
     let tm = TimeModel::parse(&flags.str("time-model", "analytic"))
         .ok_or_else(|| anyhow::anyhow!("bad --time-model"))?;
-    let schedule = Schedule::parse(&flags.str("schedule", "gpipe"))
-        .ok_or_else(|| anyhow::anyhow!("bad --schedule"))?;
+    let schedule = flags.str("schedule", "gpipe").parse::<Schedule>()?;
     let pcfg = PipelineConfig {
         mode,
         microbatches: flags.usize("microbatches", 8)?,
@@ -754,8 +773,7 @@ fn cmd_sim(flags: &Flags) -> Result<()> {
     spec.mode = Mode::parse(&flags.str("mode", "subspace"))?;
     spec.dp_mode = Mode::parse(&flags.str("dp-mode", "subspace"))?;
     spec.reduce = Reduce::parse(&flags.str("reduce", "ring"))?;
-    spec.schedule = Schedule::parse(&flags.str("schedule", "gpipe"))
-        .ok_or_else(|| anyhow::anyhow!("bad --schedule"))?;
+    spec.schedule = flags.str("schedule", "gpipe").parse::<Schedule>()?;
     spec.microbatches = flags.usize("microbatches", 8)?;
     spec.steps = flags.usize("steps", 5)?;
     spec.seed = flags.usize("seed", 17)? as u64;
@@ -945,6 +963,126 @@ fn cmd_serve_elastic(flags: &Flags, spec: WorkerSpec) -> Result<()> {
         }
         Err(e) => Err(e),
     }
+}
+
+/// Parse an inclusive `lo:hi` token range (`"4:8"`), accepting a bare
+/// `n` as `n:n`.
+fn parse_range(s: &str, flag: &str) -> Result<(usize, usize)> {
+    let parse1 = |t: &str| -> Result<usize> {
+        t.parse()
+            .map_err(|_| anyhow::anyhow!("{flag} wants `lo:hi` or `n`, got {s:?}"))
+    };
+    match s.split_once(':') {
+        Some((lo, hi)) => Ok((parse1(lo)?, parse1(hi)?)),
+        None => {
+            let n = parse1(s)?;
+            Ok((n, n))
+        }
+    }
+}
+
+/// `serve-infer`: autoregressive decode serving over the staged
+/// pipeline with subspace-compressed KV-boundary frames and continuous
+/// batching (DESIGN.md §16). Single-process by default; `--transport
+/// channel|tcp` runs the full decode grid in this process over real
+/// links (token streams bitwise identical to single-process);
+/// `--stage I` runs ONE stage as a standalone TCP worker — launch one
+/// process per stage with identical flags, stage 0 prints the session
+/// table.
+fn cmd_serve_infer(flags: &Flags) -> Result<()> {
+    use protomodels::transport::{
+        run_serve_local, serve_infer, serve_infer_stage, ServeSpec,
+        TrafficSpec,
+    };
+
+    let mut core = native_spec(flags)?;
+    if flags.opt("steps").is_none() {
+        // decode steps are cheap: default to a budget that serves the
+        // default traffic with plenty of slack
+        core.steps = 1_000;
+        core.cfg.total_steps = 1_000;
+    }
+    let traffic = TrafficSpec {
+        sessions: flags.usize("sessions", 8)?,
+        mean_gap: flags.f64("mean-gap", 2.0)?,
+        prompt: parse_range(&flags.str("prompt", "4:8"), "--prompt")?,
+        gen: parse_range(&flags.str("gen", "4:8"), "--gen")?,
+    };
+    let spec = ServeSpec {
+        core,
+        traffic,
+        max_batch: flags.usize("max-batch", 4)?,
+    };
+    spec.validate()?;
+
+    let tr = TraceOut::start(flags, Clock::Host);
+    let report = if let Some(stage) = flags.opt("stage") {
+        let stage: usize = stage.parse().map_err(|_| {
+            anyhow::anyhow!("--stage wants a stage index in [0, stages)")
+        })?;
+        let host = flags.str("host", "127.0.0.1");
+        let port_base = flags.usize("port-base", 7070)?;
+        if port_base + spec.core.h.stages > u16::MAX as usize {
+            bail!(
+                "--port-base {port_base} leaves no room for {} stage ports",
+                spec.core.h.stages
+            );
+        }
+        println!(
+            "serve-infer: stage {stage}/{} ({} mode, {} sessions, \
+             max-batch {}) on {host}, ports {port_base}+",
+            spec.core.h.stages,
+            spec.core.cfg.mode.as_str(),
+            spec.traffic.sessions,
+            spec.max_batch,
+        );
+        serve_infer_stage(&spec, stage, &host, port_base as u16)?
+    } else {
+        match flags.str("transport", "local").as_str() {
+            "local" => run_serve_local(&spec)?,
+            other => serve_infer(&spec, TransportKind::parse(other)?)?,
+        }
+    };
+    if let Some(tr) = tr {
+        tr.finish(|m| m.absorb_serve(&report))?;
+    }
+    if report.stage == 0 {
+        println!(
+            "session  arrive  admit  first  done  prompt  gen  latency"
+        );
+        for s in &report.sessions {
+            println!(
+                "{:>7}  {:>6}  {:>5}  {:>5}  {:>4}  {:>6}  {:>3}  {:.4}s",
+                s.id,
+                s.arrival_step,
+                s.admit_step,
+                s.first_token_step,
+                s.done_step,
+                s.prompt_len,
+                s.gen,
+                s.latency_s,
+            );
+        }
+    }
+    println!(
+        "serve-infer done: {} decode steps, {} tokens, {:.1} tok/s, \
+         latency p50 {:.4}s p99 {:.4}s",
+        report.steps,
+        report.tokens_generated,
+        report.tokens_per_sec(),
+        report.latency_percentile(50.0),
+        report.latency_percentile(99.0),
+    );
+    println!(
+        "wire: {} frames, {} B decode payload, {} B token payload, \
+         {} B total; kv peak {} B",
+        report.frames,
+        report.decode_payload_bytes,
+        report.token_payload_bytes,
+        report.wire_bytes,
+        report.kv_peak_bytes,
+    );
+    Ok(())
 }
 
 /// `trace <file>`: print the per-(cat, name) summary of a recorded
@@ -1539,6 +1677,102 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
             .push(BenchEntry { result: r, items_per_iter: None });
     }
 
+    // ---- serving: KV append, single decode steps, end-to-end serve ----
+    let mut serve_entries: Vec<BenchEntry> = Vec::new();
+    {
+        use protomodels::nn::model::sinusoidal_pe;
+        use protomodels::nn::{StageDecoder, StageKv};
+        use protomodels::stage::{GlobalState, StageState};
+        use protomodels::transport::{
+            run_serve_local, ServeSpec, TrafficSpec,
+        };
+
+        let h = Hyper::tiny_native();
+        // pure cache-append cost: one session filling its context
+        let mut rng = Rng::new(9);
+        let krow = rng.normal_f32_vec(h.d, 1.0);
+        let vrow = rng.normal_f32_vec(h.d, 1.0);
+        let r = bench.run("kv_append_tiny_full_context", || {
+            let mut kv = StageKv::new(h.blocks_per_stage);
+            for pos in 0..h.n {
+                for b in &mut kv.blocks {
+                    b.k.extend_from_slice(black_box(&krow));
+                    b.v.extend_from_slice(black_box(&vrow));
+                }
+                kv.pos = pos + 1;
+            }
+            black_box(kv.bytes());
+        });
+        serve_entries.push(BenchEntry {
+            result: r,
+            items_per_iter: Some(h.n as f64),
+        });
+
+        // one decode step at a warm (16-row) prefix, stage 0
+        for mode in [Mode::Subspace, Mode::Raw] {
+            let mut rng = Rng::new(9);
+            let global = GlobalState::from_hyper(&h, &mut rng);
+            let st = StageState::from_schema(
+                h.stage_schema(0),
+                h.stage_kind(0),
+                0,
+                mode,
+                &global,
+                &mut rng,
+            )
+            .expect("stage init");
+            let pe = sinusoidal_pe(h.n, h.d);
+            let dec = StageDecoder {
+                h: &h,
+                mode,
+                stage: 0,
+                params: &st.params,
+                u: &global.u,
+                t_fixed: &global.t_fixed,
+                pe: &pe,
+            };
+            let mut warm = StageKv::new(h.blocks_per_stage);
+            for pos in 0..16 {
+                dec.step(&mut warm, (pos % h.vocab) as u32, None)
+                    .expect("warm decode");
+            }
+            let r = bench
+                .run(&format!("decode_step_tiny_{}", mode.as_str()), || {
+                    let mut kv = black_box(&warm).clone();
+                    black_box(
+                        dec.step(&mut kv, 7, None)
+                            .expect("decode step")
+                            .len(),
+                    );
+                });
+            serve_entries
+                .push(BenchEntry { result: r, items_per_iter: None });
+        }
+
+        // end-to-end single-process serving run: batcher, per-session
+        // codecs, pricing asserts, the lot
+        let spec = ServeSpec::builder(h.clone())
+            .mode(Mode::Subspace)
+            .steps(200)
+            .seed(9)
+            .corpus(CorpusKind::Wiki, 10_000)
+            .traffic(TrafficSpec {
+                sessions: 3,
+                mean_gap: 1.0,
+                prompt: (3, 5),
+                gen: (3, 4),
+            })
+            .max_batch(2)
+            .build()
+            .expect("serve spec");
+        let r = bench.run("decode_serve_local_tiny_subspace", || {
+            let rep =
+                run_serve_local(black_box(&spec)).expect("serve run");
+            black_box(rep.tokens_generated);
+        });
+        serve_entries.push(BenchEntry { result: r, items_per_iter: None });
+    }
+
     if json {
         write_json(out.join("BENCH_linalg.json"), "linalg", &linalg_entries)?;
         write_json(
@@ -1552,6 +1786,7 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
             "transport",
             &transport_entries,
         )?;
+        write_json(out.join("BENCH_serve.json"), "serve", &serve_entries)?;
     }
     Ok(())
 }
@@ -1568,6 +1803,7 @@ fn main() -> Result<()> {
     match args[0].as_str() {
         "train" => cmd_train(&flags),
         "serve" => cmd_serve(&flags),
+        "serve-infer" => cmd_serve_infer(&flags),
         "sim" => cmd_sim(&flags),
         "inspect" => cmd_inspect(&flags),
         "timing" => cmd_timing(&flags),

@@ -326,6 +326,52 @@ pub fn dp_gossip_exchange_wire_bytes(
         + crate::compress::dp_wire_bytes(mode, elems, d, k, ratio)
 }
 
+// ---------------------------------------------------------------------------
+// inference serving (rust/src/transport/serve) — decode-time accounting
+// ---------------------------------------------------------------------------
+
+/// Bytes ONE session's K/V cache occupies on ONE stage after decoding
+/// `positions` tokens: `blocks_per_stage` blocks × (K + V) ×
+/// `positions` rows × `d` f32 lanes. This is the serving-side memory
+/// claim — per-session residency grows linearly in decoded length and
+/// splits across stages exactly like the parameters do. Asserted
+/// **exactly** against [`crate::nn::StageKv::bytes`] (the same
+/// contract [`transport_frame_bytes`] has with measured frames).
+pub fn kv_cache_bytes(h: &Hyper, positions: usize) -> usize {
+    h.blocks_per_stage * 2 * positions * h.d * 4
+}
+
+/// Bytes one framed `Decode` boundary message occupies on the wire for
+/// `sessions` active sessions. Each session contributes one new row,
+/// and the protocol encodes **per session** — `sessions` independent
+/// `(1, 1)`-shaped codec payloads, concatenated — rather than one
+/// packed `(sessions, 1)` payload, because the lossy codecs are
+/// batch-coupled (top-k selection and the int8 scale span the whole
+/// tensor): per-session encoding is what makes evicting a session
+/// provably unable to perturb survivors. The price is therefore
+/// `sessions ×` [`crate::compress::wire_bytes`]`(mode, 1, 1, …)` plus
+/// the fixed frame header. Receivers assert received `payload_len`
+/// against exactly this (PowerLR excepted: its dense stand-in rows
+/// ship `d` floats per session while the *priced* bytes follow the
+/// factor formula, mirroring the training-side exemption).
+pub fn decode_frame_bytes(
+    h: &Hyper,
+    mode: crate::compress::Mode,
+    sessions: usize,
+) -> usize {
+    crate::transport::HEADER_LEN
+        + sessions
+            * crate::compress::wire_bytes(mode, 1, 1, h.d, h.k, h.ratio)
+}
+
+/// Bytes one framed `Token` relay message occupies: one `(session id,
+/// token)` u32 LE pair per active session plus the frame header. The
+/// token relay is the *entire* backward-direction traffic of the decode
+/// protocol — 8 B per session per step, independent of `d`.
+pub fn token_frame_bytes(sessions: usize) -> usize {
+    crate::transport::HEADER_LEN + sessions * 8
+}
+
 /// Compute one Table-3/4 row at the paper's 2B dimensions.
 pub fn table_row(seq_total: usize, workers: usize) -> MemRow {
     // context parallel: each worker holds seq_total / workers tokens
@@ -468,6 +514,39 @@ mod tests {
             (sub - raw).abs() / raw < 0.1,
             "subspace peak {sub} vs raw {raw}: boundary overhead must be \
              marginal"
+        );
+    }
+
+    #[test]
+    fn decode_frame_and_kv_pricing() {
+        use crate::compress::{wire_bytes, Mode};
+        let h = Hyper::tiny_native();
+        let hdr = crate::transport::HEADER_LEN;
+        // decode frames price `sessions` independent single-row codec
+        // payloads — per-session encoding is the eviction-invariance
+        // guarantee, so the price is linear in the session count
+        for mode in [Mode::Subspace, Mode::Raw, Mode::Quant, Mode::TopK] {
+            for s in [1usize, 3, 8] {
+                assert_eq!(
+                    decode_frame_bytes(&h, mode, s),
+                    hdr + s * wire_bytes(mode, 1, 1, h.d, h.k, h.ratio)
+                );
+            }
+        }
+        // subspace decode rows ship k floats per session, raw ships d
+        assert_eq!(
+            decode_frame_bytes(&h, Mode::Subspace, 4) - hdr,
+            4 * h.k * 4
+        );
+        assert_eq!(decode_frame_bytes(&h, Mode::Raw, 4) - hdr, 4 * h.d * 4);
+        // token relay: 8 B per session, d-independent
+        assert_eq!(token_frame_bytes(0), hdr);
+        assert_eq!(token_frame_bytes(5) - hdr, 40);
+        // KV: linear in positions, zero at zero
+        assert_eq!(kv_cache_bytes(&h, 0), 0);
+        assert_eq!(
+            kv_cache_bytes(&h, 7),
+            h.blocks_per_stage * 2 * 7 * h.d * 4
         );
     }
 

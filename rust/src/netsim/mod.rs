@@ -34,6 +34,11 @@ impl LinkSpec {
         LinkSpec { bandwidth_bps, latency_s, jitter_frac: 0.2 }
     }
 
+    /// Expected (jitter-free) transfer time for `bytes` on this link.
+    pub fn expected_time(&self, bytes: usize) -> f64 {
+        self.latency_s + (bytes as f64 * 8.0) / self.bandwidth_bps
+    }
+
     /// Parse a CLI bandwidth label: `"100gbps"` / `"16gbps"` / `"80mbps"`
     /// map to the named presets, any other `"<N>mbps"` (or bare number,
     /// in Mbps) to a consumer-internet link at that bandwidth.
@@ -139,7 +144,7 @@ impl Link {
 
     /// Expected (jitter-free) transfer time — used by analytic sweeps.
     pub fn expected_time(&self, bytes: usize) -> f64 {
-        self.spec.latency_s + (bytes as f64 * 8.0) / self.spec.bandwidth_bps
+        self.spec.expected_time(bytes)
     }
 }
 

@@ -1,0 +1,594 @@
+//! Tape-free autoregressive decode: the serving-side forward path
+//! (DESIGN.md §16).
+//!
+//! Training pushes `(b·n, d)` activations through [`super::tape::Tape`]
+//! subgraphs because it needs the backward pass. Serving needs neither
+//! the tape nor the full sequence: one decode step advances one
+//! position per session, attending over **cached** K/V rows instead of
+//! recomputing the whole prefix. This module mirrors
+//! [`super::model::build_stage`]'s arithmetic operation-for-operation
+//! (same pre-LN blocks, same f64 LayerNorm/softmax accumulation, same
+//! causal attention per row) but indexes into a per-session
+//! [`StageKv`] cache, so a step costs O(pos·d) attention instead of
+//! O(n²·d) recompute.
+//!
+//! The paper's boundary trick applies verbatim at decode time: a
+//! non-last stage emits `(x − e) · U` — the k-dimensional subspace
+//! coefficients of its single new row — and the next stage
+//! reconstructs `coeffs · Uᵀ + e`. The high-rank component
+//! `E = PE + T_fixed[tok]` is computable on every stage from the
+//! position and the token id alone, which is why the token relay
+//! ([`crate::transport::frame::FrameKind::Token`]) rides the wire: it
+//! is simultaneously the user-visible output stream and the seed every
+//! stage needs to rebuild `E` for the next position.
+
+use anyhow::{bail, Result};
+
+use crate::compress::Mode;
+use crate::manifest::Hyper;
+use crate::tensor::Tensor;
+
+use super::tape::LN_EPS;
+
+/// Per-block K/V cache of one session on one stage: rows are appended
+/// per decoded position, heads packed exactly like the training-side
+/// `(b·n, d)` projections.
+#[derive(Clone, Debug, Default)]
+pub struct BlockKv {
+    /// cached key rows, `pos · d` floats
+    pub k: Vec<f32>,
+    /// cached value rows, `pos · d` floats
+    pub v: Vec<f32>,
+}
+
+/// One session's K/V cache on one stage: a [`BlockKv`] per transformer
+/// block, plus the number of positions decoded so far.
+#[derive(Clone, Debug)]
+pub struct StageKv {
+    /// per-block caches, `blocks_per_stage` entries
+    pub blocks: Vec<BlockKv>,
+    /// positions already cached (the next row lands at index `pos`)
+    pub pos: usize,
+}
+
+impl StageKv {
+    /// An empty cache for `blocks` transformer blocks.
+    pub fn new(blocks: usize) -> StageKv {
+        StageKv { blocks: vec![BlockKv::default(); blocks], pos: 0 }
+    }
+
+    /// Bytes this cache actually holds — the measured side of the
+    /// [`crate::memory::kv_cache_bytes`] exactness contract.
+    pub fn bytes(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| (b.k.len() + b.v.len()) * 4)
+            .sum()
+    }
+}
+
+/// `out = row · W` for a 2-D weight `(d_in, d_out)`.
+fn row_matmul(row: &[f32], w: &Tensor) -> Vec<f32> {
+    let (d_in, d_out) = w.dims2();
+    debug_assert_eq!(row.len(), d_in);
+    let mut out = vec![0.0f32; d_out];
+    for (i, &a) in row.iter().enumerate() {
+        let wrow = &w.data[i * d_out..(i + 1) * d_out];
+        for (o, &wc) in out.iter_mut().zip(wrow) {
+            *o += a * wc;
+        }
+    }
+    out
+}
+
+/// Row-wise LayerNorm — the single-row mirror of
+/// [`super::tape::Tape::layer_norm`], bit-for-bit (f64 mean/var, the
+/// same ε, the same f32 narrowing points).
+fn ln_row(row: &[f32], g: &Tensor, b: &Tensor) -> Vec<f32> {
+    let d = row.len();
+    debug_assert_eq!(g.data.len(), d);
+    debug_assert_eq!(b.data.len(), d);
+    let mean = row.iter().map(|v| *v as f64).sum::<f64>() / d as f64;
+    let var = row
+        .iter()
+        .map(|v| (*v as f64 - mean).powi(2))
+        .sum::<f64>()
+        / d as f64;
+    let mu = mean as f32;
+    let rstd = (1.0 / (var + LN_EPS as f64).sqrt()) as f32;
+    (0..d)
+        .map(|j| (row[j] - mu) * rstd * g.data[j] + b.data[j])
+        .collect()
+}
+
+/// Causal attention for the one new row at position `pos`, reading the
+/// cached K/V rows `0..=pos` — the i-th-row arithmetic of the training
+/// kernel (max-subtracted softmax, f64 sum, f32 inverse) verbatim.
+fn attend_row(
+    q: &[f32],
+    kv: &BlockKv,
+    pos: usize,
+    heads: usize,
+) -> Vec<f32> {
+    let d = q.len();
+    let dh = d / heads;
+    debug_assert_eq!(dh * heads, d);
+    debug_assert!(kv.k.len() >= (pos + 1) * d);
+    let scale = 1.0f32 / (dh as f32).sqrt();
+    let mut out = vec![0.0f32; d];
+    let mut scores = vec![0.0f32; pos + 1];
+    for h in 0..heads {
+        let off = h * dh;
+        let qrow = &q[off..off + dh];
+        let mut mx = f32::NEG_INFINITY;
+        for (j, sj) in scores.iter_mut().enumerate() {
+            let krow = &kv.k[j * d + off..j * d + off + dh];
+            let mut s = 0.0f32;
+            for (qc, kc) in qrow.iter().zip(krow) {
+                s += qc * kc;
+            }
+            let s = s * scale;
+            *sj = s;
+            mx = mx.max(s);
+        }
+        let mut sum = 0.0f64;
+        for sj in scores.iter_mut() {
+            let e = (*sj - mx).exp();
+            *sj = e;
+            sum += e as f64;
+        }
+        let inv = (1.0 / sum) as f32;
+        let orow = &mut out[off..off + dh];
+        for (j, sj) in scores.iter().enumerate() {
+            let a = sj * inv;
+            let vrow = &kv.v[j * d + off..j * d + off + dh];
+            for (oc, vc) in orow.iter_mut().zip(vrow) {
+                *oc += a * vc;
+            }
+        }
+    }
+    out
+}
+
+/// Greedy sampling: the argmax with strictly-greater comparison, so
+/// ties break to the lowest index — deterministic on every platform.
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &l) in logits.iter().enumerate() {
+        if l > bv {
+            bv = l;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// One stage's decode-side weights and shared bases, borrowed from the
+/// same [`crate::stage::StageState`]/[`crate::stage::GlobalState`]
+/// tensors the training path builds — serving replays the seeded init
+/// stream, so every worker holds identical parameters.
+pub struct StageDecoder<'a> {
+    /// model dimensions
+    pub h: &'a Hyper,
+    /// boundary codec mode (decides compressed boundaries and E)
+    pub mode: Mode,
+    /// pipeline stage index
+    pub stage: usize,
+    /// schema-ordered parameter tensors of this stage
+    pub params: &'a [Tensor],
+    /// shared orthonormal basis `U_k`
+    pub u: &'a Tensor,
+    /// fixed high-rank token embedding `T_fixed` (subspace modes)
+    pub t_fixed: &'a Tensor,
+    /// sinusoidal positional embedding `(n, d)`
+    pub pe: &'a Tensor,
+}
+
+impl StageDecoder<'_> {
+    /// The high-rank component `E` for one `(pos, tok)` pair — the
+    /// single-row mirror of [`super::model::high_rank_e`].
+    fn e_row(&self, pos: usize, tok: u32) -> Vec<f32> {
+        let d = self.h.d;
+        let mut row = self.pe.data[pos * d..(pos + 1) * d].to_vec();
+        if self.mode.uses_fixed_embedding() {
+            let id = tok as usize * d;
+            for (r, f) in row.iter_mut().zip(&self.t_fixed.data[id..id + d]) {
+                *r += f;
+            }
+        }
+        row
+    }
+
+    /// Advance one session by one position. `tok` is the token at the
+    /// session's position `kv.pos` (a prompt token while prefilling,
+    /// the previously sampled token afterwards); `input` is the
+    /// boundary row from the left neighbor (stages > 0): `k` subspace
+    /// coefficients in the compressed modes, the full `d`-width
+    /// activation otherwise.
+    ///
+    /// Returns the stage's output row: the boundary payload for
+    /// non-last stages (`k` or `d` floats), the `vocab`-width logits
+    /// for the last stage.
+    pub fn step(
+        &self,
+        kv: &mut StageKv,
+        tok: u32,
+        input: Option<&[f32]>,
+    ) -> Result<Vec<f32>> {
+        let h = self.h;
+        let pos = kv.pos;
+        if pos >= h.n {
+            bail!(
+                "session exceeded the per-session KV capacity n = {} \
+                 (the positional embedding and cache are sized to n)",
+                h.n
+            );
+        }
+        if tok as usize >= h.vocab {
+            bail!("token {tok} out of vocab {}", h.vocab);
+        }
+        let d = h.d;
+        let compressed = self.mode.compressed();
+        let last = self.stage == h.stages - 1;
+
+        // ---- stage input: embedding + E, or boundary reconstruction
+        let mut x = if self.stage == 0 {
+            let t_s = &self.params[0];
+            debug_assert_eq!(t_s.dims2(), (h.vocab, d));
+            let mut row = self.e_row(pos, tok);
+            let emb = &t_s.data[tok as usize * d..(tok as usize + 1) * d];
+            for (r, v) in row.iter_mut().zip(emb) {
+                *r += v;
+            }
+            row
+        } else {
+            let xin = input.ok_or_else(|| {
+                anyhow::anyhow!("stage {} needs a boundary input", self.stage)
+            })?;
+            if compressed {
+                if xin.len() != h.k {
+                    bail!(
+                        "boundary row is {} wide (expected k = {})",
+                        xin.len(),
+                        h.k
+                    );
+                }
+                // coeffs · Uᵀ + e  (U is (d, k))
+                let mut row = self.e_row(pos, tok);
+                for (j, r) in row.iter_mut().enumerate() {
+                    let urow = &self.u.data[j * h.k..(j + 1) * h.k];
+                    let mut acc = 0.0f32;
+                    for (c, uc) in xin.iter().zip(urow) {
+                        acc += c * uc;
+                    }
+                    *r += acc;
+                }
+                row
+            } else {
+                if xin.len() != d {
+                    bail!(
+                        "boundary row is {} wide (expected d = {d})",
+                        xin.len()
+                    );
+                }
+                xin.to_vec()
+            }
+        };
+
+        // ---- transformer blocks over the cached prefix
+        let first_block = usize::from(self.stage == 0);
+        if kv.blocks.len() != h.blocks_per_stage {
+            bail!(
+                "KV cache has {} blocks (stage schema has {})",
+                kv.blocks.len(),
+                h.blocks_per_stage
+            );
+        }
+        for blk in 0..h.blocks_per_stage {
+            let p = |i: usize| &self.params[first_block + blk * 10 + i];
+            let a = ln_row(&x, p(0), p(1));
+            let q = row_matmul(&a, p(2));
+            let krow = row_matmul(&a, p(3));
+            let vrow = row_matmul(&a, p(4));
+            let cache = &mut kv.blocks[blk];
+            cache.k.extend_from_slice(&krow);
+            cache.v.extend_from_slice(&vrow);
+            let attn = attend_row(&q, cache, pos, h.heads);
+            let attn_out = row_matmul(&attn, p(5));
+            for (xj, aj) in x.iter_mut().zip(&attn_out) {
+                *xj += aj;
+            }
+            let hn = ln_row(&x, p(6), p(7));
+            let mut h1 = row_matmul(&hn, p(8));
+            for v in h1.iter_mut() {
+                *v = v.max(0.0);
+            }
+            let mlp_out = row_matmul(&h1, p(9));
+            for (xj, mj) in x.iter_mut().zip(&mlp_out) {
+                *xj += mj;
+            }
+        }
+        kv.pos += 1;
+
+        // ---- stage output: boundary payload or logits
+        if last {
+            let base = first_block + h.blocks_per_stage * 10;
+            let xl = ln_row(&x, &self.params[base], &self.params[base + 1]);
+            Ok(row_matmul(&xl, &self.params[base + 2]))
+        } else if compressed {
+            let e = self.e_row(pos, tok);
+            let mut coeffs = vec![0.0f32; h.k];
+            for j in 0..d {
+                let c = x[j] - e[j];
+                let urow = &self.u.data[j * h.k..(j + 1) * h.k];
+                for (o, uc) in coeffs.iter_mut().zip(urow) {
+                    *o += c * uc;
+                }
+            }
+            Ok(coeffs)
+        } else {
+            Ok(x)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::{
+        build_stage, high_rank_e, sinusoidal_pe, StageIo,
+    };
+    use crate::rng::Rng;
+    use crate::stage::{GlobalState, StageState};
+    use crate::tensor::IntTensor;
+
+    fn setup(mode: Mode) -> (Hyper, GlobalState, Vec<StageState>, Rng) {
+        let mut h = Hyper::tiny_native();
+        h.b = 1; // decode compares single sequences
+        let mut rng = Rng::new(7);
+        let global = GlobalState::from_hyper(&h, &mut rng);
+        let stages = (0..h.stages)
+            .map(|s| {
+                StageState::from_schema(
+                    h.stage_schema(s),
+                    h.stage_kind(s),
+                    s,
+                    mode,
+                    &global,
+                    &mut rng,
+                )
+                .unwrap()
+            })
+            .collect();
+        (h, global, stages, rng)
+    }
+
+    /// Full-sequence pipeline forward through the *training* tapes,
+    /// returning the last stage's logits tensor `(n, vocab)`.
+    fn tape_logits(
+        h: &Hyper,
+        mode: Mode,
+        global: &GlobalState,
+        stages: &[StageState],
+        tok: &IntTensor,
+    ) -> Tensor {
+        let pe = sinusoidal_pe(h.n, h.d);
+        let e = high_rank_e(h, mode, &pe, &global.t_fixed, tok);
+        let mut cur: Option<Tensor> = None;
+        for s in 0..h.stages - 1 {
+            let built = build_stage(
+                h,
+                mode,
+                s,
+                &stages[s].params,
+                StageIo {
+                    u: &global.u,
+                    e: &e,
+                    tok,
+                    input: cur.as_ref(),
+                    targets: None,
+                },
+            );
+            cur = Some(built.tape.value(built.output).clone());
+        }
+        // rebuild the last stage's tail by hand (build_stage folds the
+        // logits into the loss): reconstruct x, run blocks via the same
+        // tape ops, then LN + head
+        let last = h.stages - 1;
+        let schema_len = stages[last].params.len();
+        let base = schema_len - 3;
+        let mut tape = crate::nn::Tape::new();
+        let pv: Vec<_> = stages[last]
+            .params
+            .iter()
+            .map(|p| tape.leaf(p.clone(), false))
+            .collect();
+        let xin = tape.leaf(cur.unwrap(), false);
+        let mut x = if mode.compressed() {
+            let u = tape.leaf(global.u.clone(), false);
+            let ev = tape.leaf(e.clone(), false);
+            let rec = tape.matmul_nt(xin, u);
+            tape.add(rec, ev)
+        } else {
+            xin
+        };
+        let dims = crate::nn::AttnDims {
+            b: h.b,
+            n: h.n,
+            heads: h.heads,
+            d: h.d,
+        };
+        for blk in 0..h.blocks_per_stage {
+            let p = |i: usize| pv[blk * 10 + i];
+            let a = tape.layer_norm(x, p(0), p(1));
+            let q = tape.matmul(a, p(2));
+            let k = tape.matmul(a, p(3));
+            let v = tape.matmul(a, p(4));
+            let attn = tape.causal_attention(q, k, v, dims);
+            let attn_out = tape.matmul(attn, p(5));
+            x = tape.add(x, attn_out);
+            let hn = tape.layer_norm(x, p(6), p(7));
+            let h1 = tape.matmul(hn, p(8));
+            let h1 = tape.relu(h1);
+            let mlp_out = tape.matmul(h1, p(9));
+            x = tape.add(x, mlp_out);
+        }
+        let xl = tape.layer_norm(x, pv[base], pv[base + 1]);
+        let logits = tape.matmul(xl, pv[base + 2]);
+        tape.value(logits).clone()
+    }
+
+    /// Decode-path forward of the same tokens, one position at a time
+    /// through every stage, returning each position's logits.
+    fn decode_logits(
+        h: &Hyper,
+        mode: Mode,
+        global: &GlobalState,
+        stages: &[StageState],
+        toks: &[u32],
+    ) -> Vec<Vec<f32>> {
+        let pe = sinusoidal_pe(h.n, h.d);
+        let decs: Vec<StageDecoder<'_>> = (0..h.stages)
+            .map(|s| StageDecoder {
+                h,
+                mode,
+                stage: s,
+                params: &stages[s].params,
+                u: &global.u,
+                t_fixed: &global.t_fixed,
+                pe: &pe,
+            })
+            .collect();
+        let mut kvs: Vec<StageKv> = (0..h.stages)
+            .map(|_| StageKv::new(h.blocks_per_stage))
+            .collect();
+        let mut out = Vec::new();
+        for &tok in toks {
+            let mut row: Option<Vec<f32>> = None;
+            for s in 0..h.stages {
+                row = Some(
+                    decs[s]
+                        .step(&mut kvs[s], tok, row.as_deref())
+                        .unwrap(),
+                );
+            }
+            out.push(row.unwrap());
+        }
+        out
+    }
+
+    #[test]
+    fn decode_rows_match_tape_forward() {
+        // the KV-cached decode path must reproduce the training tapes'
+        // logits at every position (same arithmetic, reassociated
+        // matmuls → tight relative tolerance, not bitwise)
+        for mode in [Mode::Subspace, Mode::Raw] {
+            let (h, global, stages, mut rng) = setup(mode);
+            let toks: Vec<u32> =
+                (0..h.n).map(|_| rng.below(h.vocab) as u32).collect();
+            let tok = IntTensor::new(
+                vec![1, h.n],
+                toks.iter().map(|&t| t as i32).collect(),
+            );
+            let reference = tape_logits(&h, mode, &global, &stages, &tok);
+            let got = decode_logits(&h, mode, &global, &stages, &toks);
+            assert_eq!(got.len(), h.n);
+            for (pos, row) in got.iter().enumerate() {
+                let rref = &reference.data
+                    [pos * h.vocab..(pos + 1) * h.vocab];
+                let num: f64 = row
+                    .iter()
+                    .zip(rref)
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                let den: f64 = rref
+                    .iter()
+                    .map(|v| (*v as f64).powi(2))
+                    .sum::<f64>()
+                    .sqrt()
+                    + 1e-12;
+                assert!(
+                    num / den < 1e-3,
+                    "{mode:?} pos {pos}: decode row diverges {}",
+                    num / den
+                );
+                // and greedy sampling agrees with the reference row
+                assert_eq!(
+                    argmax(row),
+                    argmax(rref),
+                    "{mode:?} pos {pos}: sampled token diverges"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kv_cache_grows_by_exactly_the_analytic_model() {
+        let (h, global, stages, _) = setup(Mode::Subspace);
+        let pe = sinusoidal_pe(h.n, h.d);
+        let dec = StageDecoder {
+            h: &h,
+            mode: Mode::Subspace,
+            stage: 0,
+            params: &stages[0].params,
+            u: &global.u,
+            t_fixed: &global.t_fixed,
+            pe: &pe,
+        };
+        let mut kv = StageKv::new(h.blocks_per_stage);
+        assert_eq!(kv.bytes(), 0);
+        for pos in 1..=4usize {
+            dec.step(&mut kv, 3, None).unwrap();
+            assert_eq!(kv.bytes(), crate::memory::kv_cache_bytes(&h, pos));
+        }
+    }
+
+    #[test]
+    fn capacity_and_shape_errors_are_descriptive() {
+        let (h, global, stages, _) = setup(Mode::Subspace);
+        let pe = sinusoidal_pe(h.n, h.d);
+        let dec = StageDecoder {
+            h: &h,
+            mode: Mode::Subspace,
+            stage: 1,
+            params: &stages[1].params,
+            u: &global.u,
+            t_fixed: &global.t_fixed,
+            pe: &pe,
+        };
+        let mut kv = StageKv::new(h.blocks_per_stage);
+        // missing boundary input
+        let err = dec.step(&mut kv, 0, None).unwrap_err().to_string();
+        assert!(err.contains("boundary input"), "{err}");
+        // wrong boundary width
+        let err = dec
+            .step(&mut kv, 0, Some(&vec![0.0; h.k + 1]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("expected k"), "{err}");
+        // capacity: n positions fit, n+1 does not
+        let row = vec![0.0f32; h.k];
+        for _ in 0..h.n {
+            dec.step(&mut kv, 0, Some(&row)).unwrap();
+        }
+        let err =
+            dec.step(&mut kv, 0, Some(&row)).unwrap_err().to_string();
+        assert!(err.contains("KV capacity"), "{err}");
+        // vocab bound
+        let mut kv2 = StageKv::new(h.blocks_per_stage);
+        let err = dec
+            .step(&mut kv2, h.vocab as u32, Some(&row))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("out of vocab"), "{err}");
+    }
+
+    #[test]
+    fn argmax_breaks_ties_toward_the_lowest_index() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+        assert_eq!(argmax(&[0.0]), 0);
+    }
+}

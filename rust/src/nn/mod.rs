@@ -13,6 +13,9 @@
 //! - [`optim`] — AdamW with the Sec. 5 subspace closure rules (row-wise
 //!   second moment for `W_p2`/`T_S`, post-step projection for `W_p1`)
 //!   plus SGD, mirroring `python/compile/optim.py`;
+//! - [`decode`] — the tape-free serving forward: per-session KV caches
+//!   and single-row kernels mirroring the tape arithmetic, feeding the
+//!   `serve-infer` decode pipeline (DESIGN.md §16);
 //! - [`pipeline`] — [`NativePipeline`], the artifact-free sibling of
 //!   [`crate::coordinator::Pipeline`]: same config, stats, netsim byte
 //!   accounting and virtual clock, but with every activation and
@@ -25,11 +28,13 @@
 //! priced analytically — see `exp convergence-native` and
 //! `examples/native_convergence.rs`.
 
+pub mod decode;
 pub mod model;
 pub mod optim;
 pub mod pipeline;
 pub mod tape;
 
+pub use decode::{argmax, StageDecoder, StageKv};
 pub use optim::Optim;
 pub use pipeline::{
     encode_boundary, grassmann_step_u, reproject_stage, BoundaryDir,

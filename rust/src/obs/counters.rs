@@ -28,6 +28,7 @@ use crate::json::Json;
 use crate::obs::trace::{Arg, Trace};
 use crate::transport::{
     ElasticReport, FaultStats, LaunchReport, LivenessMonitor,
+    ServeReport,
 };
 
 /// Default bucket upper bounds (milliseconds) for span-duration
@@ -35,6 +36,12 @@ use crate::transport::{
 /// multi-second fused stage steps.
 pub const SPAN_MS_BOUNDS: [f64; 6] =
     [0.01, 0.1, 1.0, 10.0, 100.0, 1000.0];
+
+/// Bucket upper bounds (seconds) for serving-latency histograms:
+/// admission→completion spans range from sub-millisecond tiny-model
+/// decodes to multi-second wide-batch sessions over slow links.
+pub const SERVE_LATENCY_BOUNDS: [f64; 6] =
+    [1e-3, 1e-2, 0.1, 1.0, 10.0, 60.0];
 
 /// A fixed-bucket histogram: `counts[i]` holds observations
 /// `<= bounds[i]`, and the final slot is the overflow bucket, so
@@ -227,6 +234,48 @@ impl RunMetrics {
         }
         if let Some(es) = &rep.elastic {
             self.absorb_elastic(es);
+        }
+    }
+
+    /// Fold a decode-serving run ([`ServeReport`], DESIGN.md §16):
+    /// step/token/frame/byte counters, throughput and tail-latency
+    /// gauges, and per-session latency histograms (completion and
+    /// time-to-first-token).
+    pub fn absorb_serve(&mut self, rep: &ServeReport) {
+        self.inc("serve.steps", rep.steps);
+        self.inc("serve.sessions", rep.sessions.len() as u64);
+        self.inc("serve.tokens", rep.tokens_generated);
+        self.inc("frames.sent.decode", rep.frames);
+        self.inc("bytes.wire.decode", rep.wire_bytes);
+        self.inc(
+            "bytes.payload.decode",
+            rep.decode_payload_bytes + rep.token_payload_bytes,
+        );
+        self.set_gauge("serve.tokens_per_sec", rep.tokens_per_sec());
+        self.set_gauge(
+            "serve.step.mean_seconds",
+            rep.mean_step_seconds(),
+        );
+        self.set_gauge(
+            "serve.latency.p50_s",
+            rep.latency_percentile(50.0),
+        );
+        self.set_gauge(
+            "serve.latency.p99_s",
+            rep.latency_percentile(99.0),
+        );
+        self.set_gauge("serve.kv_peak_bytes", rep.kv_peak_bytes as f64);
+        for s in &rep.sessions {
+            self.observe(
+                "serve.latency_s",
+                &SERVE_LATENCY_BOUNDS,
+                s.latency_s,
+            );
+            self.observe(
+                "serve.first_token_s",
+                &SERVE_LATENCY_BOUNDS,
+                s.first_token_s,
+            );
         }
     }
 
@@ -509,6 +558,61 @@ mod tests {
             s
         };
         assert_eq!(rep.to_string(), legacy);
+    }
+
+    #[test]
+    fn absorb_serve_surfaces_throughput_and_tails() {
+        use crate::transport::{ServeReport, SessionStat};
+        let session = |id: u32, latency_s: f64| SessionStat {
+            id,
+            arrival_step: 0,
+            admit_step: 0,
+            first_token_step: 1,
+            done_step: 3,
+            prompt_len: 2,
+            gen: 2,
+            tokens: vec![1, 2],
+            latency_s,
+            first_token_s: latency_s / 2.0,
+        };
+        let rep = ServeReport {
+            stage: 0,
+            sessions: vec![
+                session(0, 0.002),
+                session(1, 0.01),
+                session(2, 0.2),
+            ],
+            steps: 5,
+            tokens_generated: 6,
+            step_seconds: vec![0.01; 5],
+            decode_payload_bytes: 300,
+            token_payload_bytes: 80,
+            wire_bytes: 500,
+            frames: 10,
+            kv_peak_bytes: 4096,
+        };
+        let mut m = RunMetrics::new();
+        m.absorb_serve(&rep);
+        assert_eq!(m.counter("serve.steps"), 5);
+        assert_eq!(m.counter("serve.sessions"), 3);
+        assert_eq!(m.counter("serve.tokens"), 6);
+        assert_eq!(m.counter("bytes.wire.decode"), 500);
+        assert_eq!(m.counter("bytes.payload.decode"), 380);
+        assert_eq!(
+            m.gauge("serve.tokens_per_sec"),
+            Some(6.0 / 0.05)
+        );
+        // nearest-rank over [0.002, 0.01, 0.2]
+        assert_eq!(m.gauge("serve.latency.p50_s"), Some(0.01));
+        assert_eq!(m.gauge("serve.latency.p99_s"), Some(0.2));
+        assert_eq!(
+            m.hist("serve.latency_s").map(Hist::total),
+            Some(3)
+        );
+        assert_eq!(
+            m.hist("serve.first_token_s").map(Hist::total),
+            Some(3)
+        );
     }
 
     #[test]

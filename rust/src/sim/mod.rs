@@ -8,7 +8,11 @@
 //!   analytic `gpipe_makespan` under GPipe (the parity contract);
 //! - [`swarm`] — multi-step, multi-replica simulation with latency
 //!   jitter, time-varying stragglers, and node churn (leave / rejoin
-//!   with re-routed ring all-reduces and dp-mode-priced state syncs).
+//!   with re-routed ring all-reduces and dp-mode-priced state syncs);
+//! - [`serve`] — the serving-schedule predictor: replays the decode
+//!   pipeline's replicated batcher and prices each step's compute and
+//!   boundary frames, the twin `exp serve-report` holds against the
+//!   measured `serve-infer` walls (DESIGN.md §16).
 //!
 //! The coordinator routes per-step timing through [`step_makespan`]
 //! when a non-GPipe schedule (or `--sim`) is configured; the
@@ -17,10 +21,12 @@
 //! `examples/churn_swarm.rs`.
 
 pub mod queue;
+pub mod serve;
 pub mod step;
 pub mod swarm;
 
 pub use queue::EventQueue;
+pub use serve::{predict_serve, ServeSchedule, ServeStepPred};
 pub use step::{simulate_step_spec, step_makespan, Schedule, StepSpec};
 pub use swarm::{
     simulate_swarm, ChurnEvent, ChurnKind, ChurnSpec, ChurnTimeline,

@@ -68,12 +68,55 @@ impl Schedule {
         }
     }
 
-    /// Canonical CSV/CLI label.
+    /// Canonical CSV/CLI label (chunk count elided — use `Display` for
+    /// the faithful round-trip form).
     pub fn as_str(&self) -> &'static str {
         match self {
             Schedule::Gpipe => "gpipe",
             Schedule::OneFOneB => "1f1b",
             Schedule::Interleaved { .. } => "interleaved",
+        }
+    }
+
+    /// Representative schedules the exhaustive `FromStr`/`Display`
+    /// round-trip property sweeps (interleaved is parameterized, so two
+    /// chunk widths stand in for the family). A new variant that misses
+    /// `parse`/`Display` fails the test instead of silently falling
+    /// back to string matching at a CLI site.
+    pub const ALL: [Schedule; 4] = [
+        Schedule::Gpipe,
+        Schedule::OneFOneB,
+        Schedule::Interleaved { chunks: 2 },
+        Schedule::Interleaved { chunks: 4 },
+    ];
+}
+
+impl std::str::FromStr for Schedule {
+    type Err = anyhow::Error;
+
+    /// The canonical parse: `"1f1b".parse::<Schedule>()` — same table
+    /// as [`Schedule::parse`], exposed through the standard trait so
+    /// CLI sites compare parsed values instead of matching strings.
+    fn from_str(s: &str) -> Result<Schedule> {
+        Schedule::parse(s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown schedule {s:?} (expected \
+                 gpipe|1f1b|interleaved[:chunks], chunks >= 2)"
+            )
+        })
+    }
+}
+
+impl std::fmt::Display for Schedule {
+    /// Faithful round-trip form: `interleaved:<chunks>` keeps the chunk
+    /// count `as_str` elides, so `format!("{s}").parse()` reproduces
+    /// the value exactly.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Schedule::Interleaved { chunks } => {
+                write!(f, "interleaved:{chunks}")
+            }
+            other => f.write_str(other.as_str()),
         }
     }
 }
@@ -510,6 +553,29 @@ mod tests {
     use super::*;
     use crate::coordinator::schedule::gpipe_makespan;
     use crate::rng::Rng;
+
+    #[test]
+    fn schedule_display_round_trips_exhaustively() {
+        for s in Schedule::ALL {
+            let text = s.to_string();
+            let back: Schedule = text.parse().expect("parse back");
+            assert_eq!(back, s, "{text}");
+            // as_str is the prefix of the faithful form
+            assert!(text.starts_with(s.as_str()));
+        }
+    }
+
+    #[test]
+    fn schedule_parse_rejects_junk_descriptively() {
+        for bad in ["pipedream", "interleaved:1", "interleaved:x", ""] {
+            let err = bad.parse::<Schedule>().unwrap_err().to_string();
+            assert!(err.contains("gpipe|1f1b|interleaved"), "{err}");
+        }
+        assert_eq!(
+            "interleaved".parse::<Schedule>().unwrap(),
+            Schedule::Interleaved { chunks: 2 }
+        );
+    }
 
     fn uniform_costs(
         p: usize,

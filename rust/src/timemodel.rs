@@ -150,6 +150,40 @@ pub fn boundary_flops(b: usize, n: usize, d: usize, k: usize) -> f64 {
     2.0 * (b * n) as f64 * (d * k) as f64
 }
 
+/// FLOPs for one stage to decode ONE new position of one serving session
+/// (`serve-infer`, DESIGN.md §16): matvecs against the block weights plus
+/// attention over the `pos + 1`-row cached prefix, plus the stage's
+/// boundary / embedding / head extras. Mirrors [`StageDecoder::step`]'s
+/// arithmetic the way [`stage_flops`] mirrors the training forward.
+///
+/// [`StageDecoder::step`]: crate::nn::decode::StageDecoder::step
+pub fn decode_row_flops(h: &Hyper, stage: usize, pos: usize, compressed: bool) -> f64 {
+    let d = h.d as f64;
+    let prefix = (pos + 1) as f64;
+    // per block: q/k/v/proj matvecs (4 · 2d²), MLP (2 · 2·d·d_ff),
+    // attention scores + weighted sum over the prefix (2 · 2·prefix·d)
+    let block =
+        8.0 * d * d + 4.0 * d * h.d_ff as f64 + 4.0 * prefix * d;
+    let mut f = h.blocks_per_stage as f64 * block;
+    if stage == 0 {
+        f += 2.0 * d; // embedding gather + scale
+    }
+    if stage == h.stages - 1 {
+        f += 2.0 * d * h.vocab as f64; // LM-head matvec
+    }
+    if compressed {
+        // boundary project on the send side, reconstruct on the recv side
+        let bnd = 2.0 * d * h.k as f64;
+        if stage < h.stages - 1 {
+            f += bnd;
+        }
+        if stage > 0 {
+            f += bnd;
+        }
+    }
+    f
+}
+
 /// FLOPs for one stage executing `phase` on a single microbatch.
 pub fn stage_flops(h: &Hyper, stage: usize, phase: Phase, compressed: bool) -> f64 {
     let blocks = h.blocks_per_stage as f64

@@ -43,25 +43,25 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::compress::{self, Mode};
-use crate::coordinator::PipelineConfig;
-use crate::data::{Corpus, CorpusKind};
 use crate::linalg;
 use crate::manifest::Hyper;
 use crate::nn::model::{build_stage, high_rank_e, sinusoidal_pe, StageIo};
 use crate::nn::optim::{step_stage, OptStep};
 use crate::obs::trace;
 use crate::nn::{
-    encode_boundary, grassmann_step_u, reproject_stage, BoundaryDir, Optim,
+    encode_boundary, grassmann_step_u, reproject_stage, BoundaryDir,
 };
 use crate::rng::Rng;
 use crate::sim::Schedule;
 use crate::stage::{GlobalState, StageState};
 use crate::tensor::Tensor;
 
-use super::dp::{dp_reduce_stage, DpCtx};
+use super::dp::{dp_reduce_stage, DpCtx, TrainSpec};
 use super::elastic::{heartbeat_payload, ElasticCtx};
 use super::frame::{FrameKind, WireFrame};
 use super::{channel_pair, TcpTransport, Transport};
+
+pub use super::spec::{SpecCore, WorkerSpec};
 
 /// Which transport backend a distributed run uses (`--transport`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -88,104 +88,6 @@ impl TransportKind {
             TransportKind::Channel => "channel",
             TransportKind::Tcp => "tcp",
         }
-    }
-}
-
-/// Everything a stage worker needs to train — the unit the handshake
-/// digests. Two workers whose specs differ in any digested field refuse
-/// to train together.
-#[derive(Clone, Debug)]
-pub struct WorkerSpec {
-    /// model/pipeline dimensions
-    pub h: Hyper,
-    /// run-level configuration (mode, microbatches, seed, lr schedule,
-    /// Grassmann cadence, pipeline schedule)
-    pub cfg: PipelineConfig,
-    /// optimizer every stage steps with
-    pub optim: Optim,
-    /// optimizer steps to run
-    pub steps: usize,
-    /// synthetic corpus preset
-    pub corpus_kind: CorpusKind,
-    /// corpus length in tokens
-    pub corpus_tokens: usize,
-}
-
-impl WorkerSpec {
-    /// The corpus every worker regenerates locally (same derivation as
-    /// `train --backend native` and the native examples).
-    pub fn corpus(&self) -> Corpus {
-        Corpus::synthetic(
-            self.corpus_kind,
-            self.h.vocab,
-            self.corpus_tokens,
-            self.cfg.seed ^ 0xDD,
-        )
-    }
-
-    /// Reject specs the distributed runtime cannot execute.
-    pub fn validate(&self) -> Result<()> {
-        if self.h.stages < 2 {
-            bail!("distributed pipeline needs >= 2 stages, got {}", self.h.stages);
-        }
-        if self.cfg.microbatches == 0 {
-            bail!("need >= 1 microbatch");
-        }
-        if matches!(self.cfg.schedule, Schedule::Interleaved { .. }) {
-            bail!(
-                "interleaved schedules are simulator-only \
-                 (`protomodels sim --schedule interleaved`); the \
-                 transport runs gpipe or 1f1b wave orders"
-            );
-        }
-        Ok(())
-    }
-
-    /// Canonical byte digest of every numerics-affecting field,
-    /// exchanged in the `Hello` handshake. Fields that cannot change
-    /// the loss curve (time model, event-sim routing, grad recording)
-    /// are deliberately excluded.
-    pub fn digest(&self) -> Vec<u8> {
-        let h = &self.h;
-        let c = &self.cfg;
-        let mut d = Vec::with_capacity(96);
-        d.extend_from_slice(b"PMCFG1");
-        for v in [
-            h.d, h.d_ff, h.heads, h.layers, h.stages, h.n, h.vocab, h.k,
-            h.b, h.blocks_per_stage,
-        ] {
-            d.extend_from_slice(&(v as u64).to_le_bytes());
-        }
-        d.extend_from_slice(&h.ratio.to_le_bytes());
-        d.push(c.mode.wire_tag());
-        d.extend_from_slice(&(c.microbatches as u64).to_le_bytes());
-        d.extend_from_slice(&(c.grassmann_interval as u64).to_le_bytes());
-        d.extend_from_slice(&c.grassmann_eta.to_le_bytes());
-        d.extend_from_slice(&c.lr.to_le_bytes());
-        d.extend_from_slice(&(c.warmup_steps as u64).to_le_bytes());
-        d.extend_from_slice(&(c.total_steps as u64).to_le_bytes());
-        d.extend_from_slice(&c.seed.to_le_bytes());
-        d.push(match c.schedule {
-            Schedule::Gpipe => 0,
-            Schedule::OneFOneB => 1,
-            Schedule::Interleaved { .. } => 2, // rejected by validate()
-        });
-        match self.optim {
-            Optim::AdamW => d.push(0),
-            Optim::Sgd { momentum } => {
-                d.push(1);
-                d.extend_from_slice(&momentum.to_le_bytes());
-            }
-        }
-        d.push(match self.corpus_kind {
-            CorpusKind::Wiki => 0,
-            CorpusKind::Books => 1,
-            CorpusKind::Web => 2,
-            CorpusKind::C4 => 3,
-        });
-        d.extend_from_slice(&(self.corpus_tokens as u64).to_le_bytes());
-        d.extend_from_slice(&(self.steps as u64).to_le_bytes());
-        d
     }
 }
 
@@ -488,12 +390,15 @@ pub(crate) fn run_stage_inner(
     }
 
     // ---- handshake: exchange config digests on every link. In a
-    // replica grid the dp context carries the grid-wide PMCFG2 digest
-    // (the TrainSpec digest), which wraps this worker's PMCFG1 digest —
-    // chain and mesh links then all agree on the full run description.
-    let digest = dp
-        .as_ref()
-        .map_or_else(|| spec.digest(), |d| d.digest.clone());
+    // replica grid the dp context carries the grid-wide digest (the
+    // TrainSpec's `PMCFG3` handshake digest, wrapping PMCFG2 wrapping
+    // this worker's PMCFG1 digest plus the train workload tag) — chain
+    // and mesh links then all agree on the full run description, and a
+    // serve-infer worker dialing a train port is rejected at hello.
+    let digest = dp.as_ref().map_or_else(
+        || TrainSpec::from_worker(spec.clone()).handshake_digest(),
+        |d| d.digest.clone(),
+    );
     for (conn, name) in [
         (links.left.as_deref_mut(), "left"),
         (links.right.as_deref_mut(), "right"),
@@ -1219,16 +1124,41 @@ const DIAL_BACKOFF_MS: u64 = 250;
 /// `host:port_base+i−1` (with retries, so launch order is free). Blocks
 /// until the run completes; returns this worker's report (stage 0's
 /// carries the loss curve).
+///
+/// Thin shim over [`super::launch_serve`] with a
+/// [`super::ServeRole::Stage`] role.
 pub fn serve_stage(
     spec: &WorkerSpec,
     stage: usize,
     host: &str,
     port_base: u16,
 ) -> Result<WorkerReport> {
-    spec.validate()?;
-    let last = spec.h.stages - 1;
+    let tspec = TrainSpec::from_worker(spec.clone());
+    match super::launch_serve(
+        &super::ServeRole::Stage { stage },
+        &super::WorkloadSpec::Train(&tspec),
+        host,
+        port_base,
+    )? {
+        super::ServeOutcome::Worker(w) => Ok(w),
+        other => bail!("serve_stage produced an unexpected {other:?}"),
+    }
+}
+
+/// Establish one stage's (left, right) TCP link ends of a serve chain:
+/// bind `host:port_base+stage` for the right neighbor (stages < last)
+/// and dial `host:port_base+stage−1` with retries (stages > 0), so
+/// process launch order is free. Shared by the train and serve-infer
+/// standalone workers.
+pub(crate) fn tcp_chain_links(
+    stages: usize,
+    stage: usize,
+    host: &str,
+    port_base: u16,
+) -> Result<(LinkEnd, LinkEnd)> {
+    let last = stages - 1;
     if stage > last {
-        bail!("--stage {stage} out of range for {} stages", spec.h.stages);
+        bail!("--stage {stage} out of range for {stages} stages");
     }
     // bind our own listener before dialing left, so the successor can
     // complete its dial regardless of process launch order
@@ -1282,12 +1212,28 @@ pub fn serve_stage(
         }
         None => None,
     };
+    Ok((left, right))
+}
+
+/// The standalone-TCP train worker behind [`serve_stage`] /
+/// [`super::launch_serve`].
+pub(crate) fn serve_stage_impl(
+    spec: &WorkerSpec,
+    stage: usize,
+    host: &str,
+    port_base: u16,
+) -> Result<WorkerReport> {
+    spec.validate()?;
+    let (left, right) = tcp_chain_links(spec.h.stages, stage, host, port_base)?;
     run_stage(spec, stage, left, right)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::PipelineConfig;
+    use crate::data::CorpusKind;
+    use crate::nn::Optim;
 
     fn tiny_spec(steps: usize) -> WorkerSpec {
         WorkerSpec {

@@ -45,12 +45,14 @@
 //!
 //! [`TrainSpec`] is the one validated description of a training run —
 //! the CLI parses into it, `launch` digests it into the `Hello`
-//! handshake (`PMCFG2`, wrapping the per-chain `PMCFG1` worker digest),
-//! and elastic/chaos options nest inside it as [`ElasticOpts`] (carrying
-//! the [`FaultPlan`] and churn timeline). [`Topology`] is the runtime
+//! handshake (`PMCFG3 = PMCFG2 ‖ workload-tag`, wrapping the per-chain
+//! `PMCFG1` [`super::spec::SpecCore`] digest), and elastic/chaos
+//! options nest inside it as [`ElasticOpts`] (carrying the
+//! [`FaultPlan`] and churn timeline). [`Topology`] is the runtime
 //! shape — `{replicas, stages, backend, reduce}` — and
-//! [`launch`]`(topology, spec)` is the single entry point the legacy
-//! free functions (`run_local`, `run_elastic`) now shim to.
+//! [`launch`]`(topology, spec)` is the single in-process entry point
+//! the legacy free functions (`run_local`, `run_elastic`) now shim to;
+//! the multi-process serve entries shim to [`super::launch_serve`].
 
 use anyhow::{bail, Context, Result};
 
@@ -71,7 +73,7 @@ use super::dist::{
     chain_ends, recv_expect, run_stage_inner, LinkEnd, TransportKind,
     WorkerReport, WorkerSpec,
 };
-use super::elastic::{run_elastic, ElasticReport, ElasticSpec};
+use super::elastic::{run_elastic_impl, ElasticReport, ElasticSpec};
 use super::fault::FaultPlan;
 use super::frame::{FrameKind, WireFrame};
 use super::{channel_pair, TcpTransport, Transport};
@@ -508,7 +510,8 @@ pub(crate) struct DpCtx {
     /// replica-sharded data seed — mirrors
     /// `NativePipeline::reseed_data(seed ^ ((r+1)·0x9E37_79B9))`
     pub shard_seed: u64,
-    /// the [`TrainSpec::digest`] every grid link handshakes with
+    /// the Train-wrapped [`TrainSpec::digest`] (see
+    /// [`super::handshake_wrap`]) every grid link handshakes with
     pub digest: Vec<u8>,
     /// scripted chaos: leave the grid at this step (gossip runs only)
     pub kill_at: Option<u64>,
@@ -980,6 +983,18 @@ impl TrainSpec {
         d
     }
 
+    /// The `Hello` handshake digest every link actually exchanges:
+    /// `PMCFG3 = PMCFG2 ‖ workload-tag` ([`super::spec::Workload::Train`]).
+    /// The tag byte keeps train and serve-infer workers from ever
+    /// cross-connecting — a serve worker's `PMCFG3` ends in the serve
+    /// tag, so the digests differ even when the cores agree.
+    pub fn handshake_digest(&self) -> Vec<u8> {
+        super::spec::handshake_wrap(
+            &self.digest(),
+            super::spec::Workload::Train,
+        )
+    }
+
     /// Replica `r`'s data-shard seed — the `ReplicaSet` convention, so
     /// grids and the in-process replica path draw identical shards.
     pub fn shard_seed(&self, replica: usize) -> u64 {
@@ -1287,7 +1302,7 @@ pub fn launch(topo: &Topology, spec: &TrainSpec) -> Result<LaunchReport> {
     }
     if spec.elastic.is_some() {
         let es = spec.elastic_spec().expect("elastic options present");
-        let er = run_elastic(&es, topo.backend)?;
+        let er = run_elastic_impl(&es, topo.backend)?;
         return Ok(LaunchReport {
             losses: er.losses.clone(),
             replica_losses: vec![er.losses.clone()],
@@ -1310,7 +1325,7 @@ fn run_grid(spec: &TrainSpec, topo: &Topology) -> Result<LaunchReport> {
     let r_count = spec.replicas;
     let p = spec.worker.h.stages;
     let backend = topo.backend;
-    let digest = spec.digest();
+    let digest = spec.handshake_digest();
     let mut chains: Vec<Vec<(LinkEnd, LinkEnd)>> = (0..r_count)
         .map(|_| chain_ends(p, backend))
         .collect::<Result<_>>()?;

@@ -47,6 +47,7 @@ use super::dist::{
     chain_ends, run_stage_inner, DistReport, TransportKind, WorkerReport,
     WorkerSpec,
 };
+use super::dp::{ElasticOpts, TrainSpec};
 use super::fault::{FaultPlan, FaultTransport, LinkSide};
 use super::frame::{FrameKind, WireFrame};
 use super::{channel_pair, TcpTransport, Transport};
@@ -522,13 +523,32 @@ fn rejoin_covers(chaos: &ChurnTimeline, stage: usize, step: u64) -> bool {
 // in-process elastic supervisor
 // ---------------------------------------------------------------------------
 
-/// Run the full elastic pipeline locally: P stage workers on OS threads
-/// joined by the chosen transport, a control link per worker, and a
-/// supervisor that detects failed epochs, accounts the scripted churn
-/// (consuming spares for permanent departures), and resumes everyone
-/// from the newest complete checkpoint boundary. Fault schedules from
-/// `spec.faults` wrap the matching link ends with [`FaultTransport`].
+/// Run the full elastic pipeline locally — a thin shim over the one
+/// in-process entry point [`super::launch`]: the elastic knobs nest
+/// inside the [`TrainSpec`] as [`ElasticOpts`], and `launch` routes a
+/// spec that carries them back to the elastic runtime. Kept for callers
+/// that already think in [`ElasticSpec`].
 pub fn run_elastic(es: &ElasticSpec, kind: TransportKind) -> Result<ElasticReport> {
+    es.validate()?;
+    let spec = to_train_spec(es);
+    let report = super::launch(&spec.topology(kind), &spec)?;
+    match report.elastic {
+        Some(er) => Ok(*er),
+        None => bail!("launch dropped the elastic report"),
+    }
+}
+
+/// The elastic supervisor body behind [`run_elastic`] / [`super::launch`]:
+/// P stage workers on OS threads joined by the chosen transport, a
+/// control link per worker, and a supervisor that detects failed
+/// epochs, accounts the scripted churn (consuming spares for permanent
+/// departures), and resumes everyone from the newest complete
+/// checkpoint boundary. Fault schedules from `spec.faults` wrap the
+/// matching link ends with [`FaultTransport`].
+pub(crate) fn run_elastic_impl(
+    es: &ElasticSpec,
+    kind: TransportKind,
+) -> Result<ElasticReport> {
     es.validate()?;
     let spec = &es.worker;
     let p = spec.h.stages;
@@ -773,7 +793,45 @@ type CtlConn = Arc<Mutex<Box<dyn Transport>>>;
 /// The returned report's `dist` leg carries **stage 0's** data-plane
 /// accounting only: remote workers' wire counters stay in their own
 /// processes (the in-process [`run_elastic`] aggregates all stages).
+///
+/// Thin shim over the one multi-process entry point
+/// [`super::launch_serve`] with [`super::ServeRole::ElasticLeader`].
 pub fn serve_elastic(
+    es: &ElasticSpec,
+    host: &str,
+    port_base: u16,
+) -> Result<ElasticReport> {
+    let tspec = to_train_spec(es);
+    match super::launch_serve(
+        &super::ServeRole::ElasticLeader,
+        &super::WorkloadSpec::Train(&tspec),
+        host,
+        port_base,
+    )? {
+        super::ServeOutcome::Elastic(er) => Ok(*er),
+        other => bail!("serve_elastic produced an unexpected {other:?}"),
+    }
+}
+
+/// Fold an [`ElasticSpec`] back into the unified [`TrainSpec`] shape
+/// the `launch_serve` entry point speaks.
+fn to_train_spec(es: &ElasticSpec) -> TrainSpec {
+    let mut spec = TrainSpec::from_worker(es.worker.clone());
+    spec.elastic = Some(ElasticOpts {
+        ckpt_every: es.ckpt_every,
+        ckpt_codec: es.ckpt_codec,
+        heartbeat_every: es.heartbeat_every,
+        stale_ms: es.stale_ms,
+        spares: es.spares,
+        chaos: es.chaos.clone(),
+        faults: es.faults.clone(),
+        max_epochs: es.max_epochs,
+    });
+    spec
+}
+
+/// The leader body behind [`serve_elastic`] / [`super::launch_serve`].
+pub(crate) fn serve_elastic_impl(
     es: &ElasticSpec,
     host: &str,
     port_base: u16,
@@ -793,7 +851,9 @@ pub fn serve_elastic(
     // ---- enrollment: every worker and spare dials the control port
     let listener = TcpListener::bind((host, port_base))
         .with_context(|| format!("binding the control port {host}:{port_base}"))?;
-    let digest = spec.digest();
+    // PMCFG3 train wrap: a serve-infer worker pointed at this port can
+    // never enroll, even with identical model flags
+    let digest = TrainSpec::from_worker(spec.clone()).handshake_digest();
     let mut actors: Vec<CtlConn> = Vec::new();
     let mut assignment: Vec<Option<usize>> = vec![None; p]; // stage → actor
     let mut spares_q: Vec<usize> = Vec::new();
@@ -1130,7 +1190,7 @@ fn serve_actor(
     let p = spec.h.stages;
     let stream = dial_retry(host, port_base, "the elastic leader")?;
     let mut ctl: Box<dyn Transport> = Box::new(TcpTransport::new(stream)?);
-    let mut hello = spec.digest();
+    let mut hello = TrainSpec::from_worker(spec.clone()).handshake_digest();
     hello.push(u8::from(announce.is_none()));
     hello.extend_from_slice(&(announce.unwrap_or(0) as u32).to_le_bytes());
     ctl.send(&WireFrame::control(FrameKind::Hello, 0, hello))?;
@@ -1229,8 +1289,28 @@ fn serve_actor(
 /// Run one non-leader stage as a standalone elastic process: enroll
 /// with the leader at `host:port_base`, then follow its reassignment
 /// orders (including resumes from checkpointed boundaries) until the
-/// run completes.
+/// run completes. Thin shim over [`super::launch_serve`] with
+/// [`super::ServeRole::ElasticStage`].
 pub fn serve_stage_elastic(
+    es: &ElasticSpec,
+    stage: usize,
+    host: &str,
+    port_base: u16,
+) -> Result<()> {
+    let tspec = to_train_spec(es);
+    match super::launch_serve(
+        &super::ServeRole::ElasticStage { stage },
+        &super::WorkloadSpec::Train(&tspec),
+        host,
+        port_base,
+    )? {
+        super::ServeOutcome::Idle => Ok(()),
+        other => bail!("serve_stage_elastic produced an unexpected {other:?}"),
+    }
+}
+
+/// The stage-actor body behind [`serve_stage_elastic`].
+pub(crate) fn serve_stage_elastic_impl(
     es: &ElasticSpec,
     stage: usize,
     host: &str,
@@ -1254,8 +1334,27 @@ pub fn serve_stage_elastic(
 /// Run a hot spare: enroll with the leader, heartbeat while idle, and
 /// adopt whatever stage the leader assigns after a worker dies. Returns
 /// when the leader declares the run done (possibly never having run a
-/// single step).
+/// single step). Thin shim over [`super::launch_serve`] with
+/// [`super::ServeRole::Spare`].
 pub fn serve_spare(es: &ElasticSpec, host: &str, port_base: u16) -> Result<()> {
+    let tspec = to_train_spec(es);
+    match super::launch_serve(
+        &super::ServeRole::Spare,
+        &super::WorkloadSpec::Train(&tspec),
+        host,
+        port_base,
+    )? {
+        super::ServeOutcome::Idle => Ok(()),
+        other => bail!("serve_spare produced an unexpected {other:?}"),
+    }
+}
+
+/// The spare-actor body behind [`serve_spare`].
+pub(crate) fn serve_spare_impl(
+    es: &ElasticSpec,
+    host: &str,
+    port_base: u16,
+) -> Result<()> {
     serve_actor(es, None, host, port_base)
 }
 

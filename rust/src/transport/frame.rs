@@ -7,7 +7,8 @@
 //! 0       4     magic  b"PMF1"
 //! 4       1     kind   (0 hello, 1 fwd, 2 bwd, 3 step-end, 4 bye,
 //!                       5 heartbeat, 6 checkpoint, 7 reassign,
-//!                       8 grad-ring, 9 grad-gossip)
+//!                       8 grad-ring, 9 grad-gossip, 10 decode,
+//!                       11 token)
 //! 5       1     codec  Mode::wire_tag for boundary frames, 0xFF control
 //! 6       2     reserved (zero)
 //! 8       8     step        u64 LE
@@ -77,6 +78,13 @@ pub enum FrameKind {
     /// one gossip exchange of a stage's whole weight gradient with the
     /// step's scheduled peer — same dp codec payload, no global barrier
     GradGossip,
+    /// one decode step's boundary activations for every active session,
+    /// compressed by the boundary codec (DESIGN.md §16); `microbatch`
+    /// carries the active-session count the receiver cross-checks
+    Decode,
+    /// the sampled-token relay toward stage 0: `(session id, token)`
+    /// u32 LE pairs, one per active session, 8 B each
+    Token,
 }
 
 impl FrameKind {
@@ -93,6 +101,8 @@ impl FrameKind {
             FrameKind::Reassign => 7,
             FrameKind::GradRing => 8,
             FrameKind::GradGossip => 9,
+            FrameKind::Decode => 10,
+            FrameKind::Token => 11,
         }
     }
 
@@ -109,6 +119,8 @@ impl FrameKind {
             7 => FrameKind::Reassign,
             8 => FrameKind::GradRing,
             9 => FrameKind::GradGossip,
+            10 => FrameKind::Decode,
+            11 => FrameKind::Token,
             _ => return None,
         })
     }
@@ -126,6 +138,8 @@ impl FrameKind {
             FrameKind::Reassign => "reassign",
             FrameKind::GradRing => "grad-ring",
             FrameKind::GradGossip => "grad-gossip",
+            FrameKind::Decode => "decode",
+            FrameKind::Token => "token",
         }
     }
 }
@@ -191,6 +205,44 @@ impl WireFrame {
             codec: Some(codec),
             step,
             microbatch: phase as u32,
+            payload,
+        }
+    }
+
+    /// A decode-boundary frame: one serving step's compressed
+    /// activations for `sessions` active sessions. The payload is the
+    /// exact boundary-codec byte string for an `(S_active, ·)` tensor;
+    /// the receiver cross-checks the session count against its own
+    /// replicated batcher state and `payload_len` against
+    /// [`crate::memory::decode_frame_bytes`].
+    pub fn decode_step(
+        codec: Mode,
+        step: u64,
+        sessions: usize,
+        payload: Vec<u8>,
+    ) -> WireFrame {
+        WireFrame {
+            kind: FrameKind::Decode,
+            codec: Some(codec),
+            step,
+            microbatch: sessions as u32,
+            payload,
+        }
+    }
+
+    /// A token-relay frame toward stage 0: `(session id, token)` u32 LE
+    /// pairs, one per active session.
+    pub fn token_relay(
+        step: u64,
+        sessions: usize,
+        payload: Vec<u8>,
+    ) -> WireFrame {
+        debug_assert_eq!(payload.len(), sessions * 8);
+        WireFrame {
+            kind: FrameKind::Token,
+            codec: None,
+            step,
+            microbatch: sessions as u32,
             payload,
         }
     }
@@ -479,6 +531,30 @@ mod tests {
             assert_eq!(g, f);
             assert_eq!(g.microbatch, 2);
         }
+    }
+
+    #[test]
+    fn serving_frame_kinds_roundtrip_with_stable_tags() {
+        // the decode protocol's kinds append to the tag space like
+        // every extension before them (tags 10/11)
+        assert_eq!(FrameKind::Decode.tag(), 10);
+        assert_eq!(FrameKind::Token.tag(), 11);
+        assert_eq!(FrameKind::from_tag(10), Some(FrameKind::Decode));
+        assert_eq!(FrameKind::from_tag(11), Some(FrameKind::Token));
+        assert_eq!(FrameKind::from_tag(12), None);
+        let d = WireFrame::decode_step(Mode::Subspace, 17, 3, vec![4u8; 72]);
+        let bytes = d.to_bytes();
+        assert_eq!(bytes[4], 10);
+        assert_eq!(bytes[5], Mode::Subspace.wire_tag());
+        let g = WireFrame::read_from(&mut Cursor::new(&bytes)).unwrap();
+        assert_eq!(g, d);
+        assert_eq!(g.microbatch, 3); // active-session count rides along
+        let t = WireFrame::token_relay(17, 2, vec![0u8; 16]);
+        let bytes = t.to_bytes();
+        assert_eq!(bytes[4], 11);
+        assert_eq!(bytes[5], CODEC_NONE); // token relays are control-coded
+        let g = WireFrame::read_from(&mut Cursor::new(&bytes)).unwrap();
+        assert_eq!(g, t);
     }
 
     #[test]

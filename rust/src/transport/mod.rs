@@ -30,8 +30,10 @@ pub mod dp;
 pub mod elastic;
 pub mod fault;
 pub mod frame;
+pub mod serve;
+pub mod spec;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::compress::Mode;
 use crate::obs::trace;
@@ -56,6 +58,146 @@ pub use fault::{
     FaultStats, FaultTransport, LinkSide,
 };
 pub use frame::{FrameKind, WireFrame, HEADER_LEN, MAX_PAYLOAD};
+pub use serve::{
+    run_serve_local, serve_infer, serve_infer_stage, ServeReport,
+    SessionStat,
+};
+pub use spec::{
+    handshake_wrap, ServeSpec, ServeSpecBuilder, SpecCore, TrafficSpec,
+    Workload,
+};
+
+// ---------------------------------------------------------------------------
+// launch_serve — the one multi-process entry point
+// ---------------------------------------------------------------------------
+
+/// Which actor a `launch_serve` process hosts. Training workloads use
+/// the first four roles (classic chain stage, elastic leader/stage/
+/// spare); serving workloads use [`ServeRole::Infer`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeRole {
+    /// one stage of a classic (non-elastic) training chain
+    Stage {
+        /// pipeline stage index in `0..stages`
+        stage: usize,
+    },
+    /// the elastic supervisor + stage 0 (blocks until the run ends)
+    ElasticLeader,
+    /// one non-leader elastic stage actor
+    ElasticStage {
+        /// pipeline stage index in `1..stages`
+        stage: usize,
+    },
+    /// a hot spare awaiting reassignment from the elastic leader
+    Spare,
+    /// one stage of a decode pipeline (`protomodels serve-infer`)
+    Infer {
+        /// pipeline stage index in `0..stages`
+        stage: usize,
+    },
+}
+
+/// The workload a `launch_serve` process executes: the same two spec
+/// types the in-process entry points take ([`launch`] /
+/// [`run_serve_local`]), so every path into the runtime speaks
+/// [`SpecCore`]-composed specs. The `PMCFG3` handshake digest embeds
+/// the workload tag, so a train worker and a serve worker pointed at
+/// each other refuse to connect.
+#[derive(Clone, Copy, Debug)]
+pub enum WorkloadSpec<'a> {
+    /// a training run (classic or elastic, chosen by `spec.elastic`)
+    Train(&'a TrainSpec),
+    /// an autoregressive decode serving run
+    Serve(&'a ServeSpec),
+}
+
+/// What a `launch_serve` role returns when its process is done.
+#[derive(Debug)]
+pub enum ServeOutcome {
+    /// a training chain stage's data-plane accounting
+    Worker(WorkerReport),
+    /// the elastic leader's full run report
+    Elastic(Box<ElasticReport>),
+    /// a decode stage's serving report (stage 0 carries session stats)
+    Infer(Box<ServeReport>),
+    /// the actor ran to completion with nothing to report (elastic
+    /// stages and spares: their counters live in the leader's report)
+    Idle,
+}
+
+/// Host one actor of a multi-process run: the single entry point every
+/// `serve_*` free function shims to, mirroring how [`launch`] fronts
+/// the in-process paths. The role picks the actor, the workload picks
+/// the protocol, and mismatches (an [`ServeRole::Infer`] role with a
+/// [`WorkloadSpec::Train`] spec, elastic roles without
+/// `spec.elastic`, …) fail with errors that say what to change.
+pub fn launch_serve(
+    role: &ServeRole,
+    workload: &WorkloadSpec<'_>,
+    host: &str,
+    port_base: u16,
+) -> Result<ServeOutcome> {
+    match (role, workload) {
+        (ServeRole::Stage { stage }, WorkloadSpec::Train(ts)) => {
+            ts.validate()?;
+            if ts.replicas != 1 {
+                bail!(
+                    "serve --stage hosts one chain stage; {}-replica \
+                     grids are in-process only (use launch)",
+                    ts.replicas
+                );
+            }
+            if ts.elastic.is_some() {
+                bail!(
+                    "the spec carries elastic options — use \
+                     ServeRole::ElasticLeader / ElasticStage / Spare"
+                );
+            }
+            dist::serve_stage_impl(&ts.worker, *stage, host, port_base)
+                .map(ServeOutcome::Worker)
+        }
+        (ServeRole::ElasticLeader, WorkloadSpec::Train(ts)) => {
+            let es = elastic_spec_of(ts)?;
+            elastic::serve_elastic_impl(&es, host, port_base)
+                .map(|er| ServeOutcome::Elastic(Box::new(er)))
+        }
+        (ServeRole::ElasticStage { stage }, WorkloadSpec::Train(ts)) => {
+            let es = elastic_spec_of(ts)?;
+            elastic::serve_stage_elastic_impl(&es, *stage, host, port_base)
+                .map(|()| ServeOutcome::Idle)
+        }
+        (ServeRole::Spare, WorkloadSpec::Train(ts)) => {
+            let es = elastic_spec_of(ts)?;
+            elastic::serve_spare_impl(&es, host, port_base)
+                .map(|()| ServeOutcome::Idle)
+        }
+        (ServeRole::Infer { stage }, WorkloadSpec::Serve(ss)) => {
+            serve::serve_infer_stage_impl(ss, *stage, host, port_base)
+                .map(|r| ServeOutcome::Infer(Box::new(r)))
+        }
+        (ServeRole::Infer { .. }, WorkloadSpec::Train(_)) => bail!(
+            "ServeRole::Infer decodes — hand it a WorkloadSpec::Serve \
+             (a ServeSpec), not a TrainSpec"
+        ),
+        (_, WorkloadSpec::Serve(_)) => bail!(
+            "training roles (Stage/ElasticLeader/ElasticStage/Spare) \
+             take a WorkloadSpec::Train; for decode serving use \
+             ServeRole::Infer"
+        ),
+    }
+}
+
+/// Project a [`TrainSpec`] carrying [`ElasticOpts`] down to the
+/// [`ElasticSpec`] the elastic runtime executes.
+fn elastic_spec_of(ts: &TrainSpec) -> Result<ElasticSpec> {
+    ts.validate()?;
+    ts.elastic_spec().ok_or_else(|| {
+        anyhow::anyhow!(
+            "elastic roles need elastic options on the spec — set \
+             TrainSpec::elastic (CLI: --elastic)"
+        )
+    })
+}
 
 /// Record one wire-frame event on the current logical track: category
 /// `frame`, name `<dir>:<kind>`, duration bounded by the `t0_us`

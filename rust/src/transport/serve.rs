@@ -1,0 +1,1154 @@
+//! Distributed inference serving: staged autoregressive decode over the
+//! training pipeline's stages, codecs, and wire (DESIGN.md §16).
+//!
+//! The training transport ships *batched sequence* boundaries; serving
+//! ships *one new row per session per step*. Everything else is reused
+//! deliberately:
+//!
+//! - the forward arithmetic is [`crate::nn::StageDecoder`] — the
+//!   tape-free single-row mirror of the training kernels, over the same
+//!   seeded parameter init every worker replays;
+//! - boundary activations cross stage boundaries through the same
+//!   [`crate::compress`] codecs inside `PMF1` frames
+//!   ([`FrameKind::Decode`]), with `payload_len` asserted against
+//!   [`crate::memory::decode_frame_bytes`];
+//! - sampled tokens relay back to stage 0 as [`FrameKind::Token`]
+//!   frames — 8 B per session per step, the *entire* backward traffic.
+//!
+//! **Per-session encoding.** A `Decode` frame's payload is the
+//! concatenation of `S_active` independent per-session codec payloads
+//! (each session's row encoded as its own `(1, k)` / `(1, d)` tensor),
+//! *not* one packed `(S, ·)` encode. The lossy codecs are batch-coupled
+//! (top-k selection and the int8 scale span the whole tensor), so
+//! per-session encoding is what makes the continuous batcher's
+//! admissions and evictions provably unable to perturb a surviving
+//! session's token stream — the eviction-invariance property
+//! `tests/serve_infer.rs` checks. Every mode's per-session payload is
+//! the same length across sessions, so the receiver slices evenly.
+//!
+//! **Replicated batching.** There is no admission control plane on the
+//! wire: every stage derives the identical session table (seeded
+//! arrivals, prompts, generation budgets — [`generate_sessions`]) and
+//! runs the identical [`Batcher`] state machine, so the active-session
+//! list agrees everywhere by construction. Frames cross-check it: the
+//! `Decode` header carries the sender's active count, the `Token`
+//! payload carries session ids, and any disagreement is a protocol
+//! error, not silence.
+//!
+//! Three entries, one protocol: [`run_serve_local`] (single process,
+//! codecs round-tripped in memory), [`serve_infer`] (threads joined by
+//! channel or loopback-TCP transports), and [`serve_infer_stage`] (one
+//! stage per OS process over real TCP, shimming
+//! [`super::launch_serve`]). All three produce bitwise-identical token
+//! streams for every codec — the serving analogue of the training
+//! parity contract.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress::{self, Mode};
+use crate::manifest::Hyper;
+use crate::memory;
+use crate::nn::decode::{argmax, StageDecoder, StageKv};
+use crate::nn::model::sinusoidal_pe;
+use crate::obs::trace;
+use crate::rng::Rng;
+use crate::stage::{GlobalState, StageState};
+use crate::tensor::Tensor;
+
+use super::dist::{chain_ends, recv_expect, tcp_chain_links, TransportKind};
+use super::spec::ServeSpec;
+use super::{FrameKind, Transport, WireFrame, HEADER_LEN};
+
+// ---------------------------------------------------------------------------
+// session table + batcher (replicated on every stage)
+// ---------------------------------------------------------------------------
+
+/// One generated session: its arrival time on the open-loop clock, its
+/// prompt drawn from the shared corpus, and its generation budget.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) struct SessionSpec {
+    /// session id — also the arrival order
+    pub id: u32,
+    /// decode step at (or after) which the session may be admitted
+    pub arrival_step: u64,
+    /// prompt token ids
+    pub prompt: Vec<u32>,
+    /// tokens to generate after the prompt
+    pub gen: usize,
+}
+
+impl SessionSpec {
+    /// Positions the session occupies a batch slot for: the prompt is
+    /// prefilled one position per step through the same pipeline, and
+    /// the logits at position `prompt-1 .. prompt+gen-2` each yield one
+    /// generated token.
+    pub fn total_positions(&self) -> usize {
+        self.prompt.len() + self.gen - 1
+    }
+}
+
+/// Derive the full session table from the spec — same derivation on
+/// every worker (seed `cfg.seed ^ 0x5E4E`), so serving needs no
+/// admission control plane. Inter-arrival gaps are exponential with the
+/// spec's mean (an open-loop Poisson clock: arrivals never wait for the
+/// system), prompts are corpus windows, budgets uniform in range.
+pub(crate) fn generate_sessions(spec: &ServeSpec) -> Result<Vec<SessionSpec>> {
+    spec.validate()?;
+    let t = &spec.traffic;
+    let corpus = spec.core.corpus();
+    let mut rng = Rng::new(spec.core.cfg.seed ^ 0x5E4E);
+    let mut clock = 0.0f64;
+    let mut out = Vec::with_capacity(t.sessions);
+    for id in 0..t.sessions {
+        if id > 0 && t.mean_gap > 0.0 {
+            clock += -t.mean_gap * (1.0 - rng.uniform()).ln();
+        }
+        let plen = t.prompt.0 + rng.below(t.prompt.1 - t.prompt.0 + 1);
+        let gen = t.gen.0 + rng.below(t.gen.1 - t.gen.0 + 1);
+        let (x, _) = corpus.train_batch(1, plen, &mut rng);
+        out.push(SessionSpec {
+            id: id as u32,
+            arrival_step: clock.floor() as u64,
+            prompt: x.data.iter().map(|&v| v as u32).collect(),
+            gen,
+        });
+    }
+    Ok(out)
+}
+
+/// The continuous-batching state machine every stage replicates:
+/// admission in arrival order while a slot is free, one position per
+/// active session per step, eviction the step a session finishes. Pure
+/// control flow (no model state), so the serving simulator replays it
+/// verbatim for the predicted schedule.
+pub(crate) struct Batcher {
+    arrivals: Vec<u64>,
+    totals: Vec<usize>,
+    processed: Vec<usize>,
+    next_pending: usize,
+    active: Vec<u32>,
+    max_batch: usize,
+}
+
+impl Batcher {
+    /// Build from the replicated session table.
+    pub fn new(sessions: &[SessionSpec], max_batch: usize) -> Batcher {
+        Batcher {
+            arrivals: sessions.iter().map(|s| s.arrival_step).collect(),
+            totals: sessions.iter().map(|s| s.total_positions()).collect(),
+            processed: vec![0; sessions.len()],
+            next_pending: 0,
+            active: Vec::new(),
+            max_batch,
+        }
+    }
+
+    /// Admit arrived sessions into free slots (arrival order); returns
+    /// the newly admitted ids.
+    pub fn admit(&mut self, step: u64) -> Vec<u32> {
+        let mut newly = Vec::new();
+        while self.next_pending < self.arrivals.len()
+            && self.active.len() < self.max_batch
+            && self.arrivals[self.next_pending] <= step
+        {
+            let sid = self.next_pending as u32;
+            self.active.push(sid);
+            newly.push(sid);
+            self.next_pending += 1;
+        }
+        newly
+    }
+
+    /// Currently active session ids, admission order.
+    pub fn active(&self) -> &[u32] {
+        &self.active
+    }
+
+    /// Positions already processed for a session — equivalently its next
+    /// decode position. Exposed for the serving-schedule simulator.
+    pub fn position(&self, sid: u32) -> usize {
+        self.processed[sid as usize]
+    }
+
+    /// Arrival step of the next not-yet-admitted session.
+    pub fn next_arrival(&self) -> Option<u64> {
+        self.arrivals.get(self.next_pending).copied()
+    }
+
+    /// Account one processed position per active session and evict the
+    /// finished ones; returns the evicted ids.
+    pub fn advance(&mut self) -> Vec<u32> {
+        for &sid in &self.active {
+            self.processed[sid as usize] += 1;
+        }
+        let mut finished = Vec::new();
+        let processed = &self.processed;
+        let totals = &self.totals;
+        self.active.retain(|&sid| {
+            let done = processed[sid as usize] >= totals[sid as usize];
+            if done {
+                finished.push(sid);
+            }
+            !done
+        });
+        finished
+    }
+
+    /// Whether every session has been admitted and evicted.
+    pub fn finished(&self) -> bool {
+        self.active.is_empty() && self.next_pending >= self.arrivals.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-session boundary codec
+// ---------------------------------------------------------------------------
+
+/// Logical width of one session's boundary row on a link.
+fn row_width(h: &Hyper, mode: Mode) -> usize {
+    if mode.compressed() {
+        h.k
+    } else {
+        h.d
+    }
+}
+
+/// Bytes one session contributes to a `Decode` frame's payload.
+/// Everything except PowerLR matches [`compress::wire_bytes`] for a
+/// `(1, 1)` boundary exactly; PowerLR ships its dense `d`-float
+/// stand-in (the training wire's documented exemption) while the
+/// *priced* bytes follow the factor formula.
+pub(crate) fn session_payload_len(h: &Hyper, mode: Mode) -> usize {
+    match mode {
+        Mode::PowerLR => h.d * 4,
+        m => compress::wire_bytes(m, 1, 1, h.d, h.k, h.ratio),
+    }
+}
+
+/// Encode one session's boundary row for the link out of `stage`.
+/// PowerLR's sketch RNG is keyed by (seed, link, session, *position*) —
+/// deliberately not by the decode step — so a session's wire bytes
+/// depend only on its own history, never on when the batcher happened
+/// to schedule it (eviction invariance extends to PowerLR).
+fn encode_session_row(
+    h: &Hyper,
+    mode: Mode,
+    seed: u64,
+    link: usize,
+    sid: u32,
+    pos: usize,
+    row: &[f32],
+) -> Vec<u8> {
+    let t = Tensor::new(vec![1, row.len()], row.to_vec());
+    let f = match mode {
+        Mode::PowerLR => {
+            let rank = compress::powerlr_rank(1, h.d, h.ratio);
+            let mut rng = Rng::new(
+                seed ^ 0x53E7
+                    ^ (pos as u64).wrapping_mul(0x9E37)
+                    ^ ((link as u64) << 20)
+                    ^ ((sid as u64) << 4),
+            );
+            let reduced = crate::linalg::low_rank_approx(&t, rank, &mut rng);
+            compress::encode_dense(&reduced, Mode::PowerLR)
+        }
+        m => compress::encode(&t, m, h.ratio),
+    };
+    f.payload
+}
+
+/// Decode one session's slice of a `Decode` frame payload.
+fn decode_session_row(h: &Hyper, mode: Mode, slice: &[u8]) -> Vec<f32> {
+    let f = compress::Frame {
+        mode,
+        shape: vec![1, row_width(h, mode)],
+        payload: slice.to_vec(),
+    };
+    compress::decode(&f).data
+}
+
+// ---------------------------------------------------------------------------
+// reports
+// ---------------------------------------------------------------------------
+
+/// Per-session serving outcome, recorded by every stage (they agree by
+/// construction; stage 0's copy is the canonical report).
+#[derive(Clone, Debug)]
+pub struct SessionStat {
+    /// session id
+    pub id: u32,
+    /// open-loop arrival step
+    pub arrival_step: u64,
+    /// step the batcher admitted the session
+    pub admit_step: u64,
+    /// step the first generated token was produced
+    pub first_token_step: u64,
+    /// step the session finished (last token produced)
+    pub done_step: u64,
+    /// prompt length in tokens
+    pub prompt_len: usize,
+    /// generation budget
+    pub gen: usize,
+    /// the generated tokens (exactly `gen` of them)
+    pub tokens: Vec<u32>,
+    /// wall seconds, admission → completion
+    pub latency_s: f64,
+    /// wall seconds, admission → first generated token
+    pub first_token_s: f64,
+}
+
+/// One serving run's measured accounting. Byte counters hold what this
+/// worker actually put on (or priced for) its links: the single-process
+/// runner aggregates every link of the chain; a distributed stage
+/// counts its own sends.
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    /// pipeline stage this report came from (0 for `run_serve_local`)
+    pub stage: usize,
+    /// per-session stats, session-id order
+    pub sessions: Vec<SessionStat>,
+    /// decode steps executed (idle fast-forwards excluded)
+    pub steps: u64,
+    /// total generated tokens
+    pub tokens_generated: u64,
+    /// wall seconds of each executed decode step
+    pub step_seconds: Vec<f64>,
+    /// `Decode` frame payload bytes sent
+    pub decode_payload_bytes: u64,
+    /// `Token` frame payload bytes sent / relayed
+    pub token_payload_bytes: u64,
+    /// full wire bytes sent, frame headers included
+    pub wire_bytes: u64,
+    /// frames sent
+    pub frames: u64,
+    /// peak simultaneous K/V residency on one stage, bytes
+    pub kv_peak_bytes: usize,
+}
+
+impl ServeReport {
+    /// Total measured wall seconds across executed decode steps.
+    pub fn wall_seconds(&self) -> f64 {
+        self.step_seconds.iter().sum()
+    }
+
+    /// Generated-token throughput over the measured wall time.
+    pub fn tokens_per_sec(&self) -> f64 {
+        let w = self.wall_seconds();
+        if w > 0.0 {
+            self.tokens_generated as f64 / w
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean wall seconds per executed decode step.
+    pub fn mean_step_seconds(&self) -> f64 {
+        if self.step_seconds.is_empty() {
+            0.0
+        } else {
+            self.wall_seconds() / self.step_seconds.len() as f64
+        }
+    }
+
+    /// Nearest-rank percentile (`p` in 0..=100) of per-session
+    /// admission→completion latency, seconds.
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        let mut v: Vec<f64> =
+            self.sessions.iter().map(|s| s.latency_s).collect();
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// stage engine
+// ---------------------------------------------------------------------------
+
+/// One admitted session's runtime state on one stage.
+struct SessionRun {
+    kv: StageKv,
+    /// prompt ++ generated tokens (the generated suffix doubles as the
+    /// E-seed for `T_fixed` lookups on every stage)
+    tokens: Vec<u32>,
+    admit_step: u64,
+    admit_s: f64,
+    first_token_step: Option<u64>,
+    first_token_s: f64,
+}
+
+/// One pipeline stage's full decode runtime: replayed parameters, the
+/// replicated batcher, per-session K/V caches, and the serving stats.
+/// The three run entries differ only in how rows move between engines.
+struct StageEngine {
+    h: Hyper,
+    mode: Mode,
+    stage: usize,
+    st: StageState,
+    global: GlobalState,
+    pe: Tensor,
+    sessions: Vec<SessionSpec>,
+    batcher: Batcher,
+    runs: Vec<Option<SessionRun>>,
+    stats: Vec<SessionStat>,
+    clock0: Instant,
+    tokens_generated: u64,
+    kv_peak_bytes: usize,
+}
+
+impl StageEngine {
+    /// Build the engine for `stage`: the identical seeded init replay
+    /// the training workers run (`seed ^ 0x9137`, every stage drawn in
+    /// order, own stage kept), so serving weights match training's
+    /// step-0 weights bitwise.
+    fn new(
+        spec: &ServeSpec,
+        stage: usize,
+        sessions: Vec<SessionSpec>,
+    ) -> Result<StageEngine> {
+        let h = spec.core.h.clone();
+        if stage >= h.stages {
+            bail!(
+                "--stage {stage} out of range for a {}-stage pipeline",
+                h.stages
+            );
+        }
+        let mut rng = Rng::new(spec.core.cfg.seed ^ 0x9137);
+        let global = GlobalState::from_hyper(&h, &mut rng);
+        let mut my_stage: Option<StageState> = None;
+        for s in 0..h.stages {
+            let st = StageState::from_schema(
+                h.stage_schema(s),
+                h.stage_kind(s),
+                s,
+                spec.core.cfg.mode,
+                &global,
+                &mut rng,
+            )?;
+            if s == stage {
+                my_stage = Some(st);
+            }
+        }
+        let pe = sinusoidal_pe(h.n, h.d);
+        let batcher = Batcher::new(&sessions, spec.max_batch);
+        let runs = (0..sessions.len()).map(|_| None).collect();
+        Ok(StageEngine {
+            h,
+            mode: spec.core.cfg.mode,
+            stage,
+            st: my_stage.expect("own stage initialized"),
+            global,
+            pe,
+            sessions,
+            batcher,
+            runs,
+            stats: Vec::new(),
+            clock0: Instant::now(),
+            tokens_generated: 0,
+            kv_peak_bytes: 0,
+        })
+    }
+
+    /// Admit arrived sessions (allocating their K/V caches).
+    fn admit(&mut self, step: u64) {
+        let now = self.clock0.elapsed().as_secs_f64();
+        for sid in self.batcher.admit(step) {
+            let s = &self.sessions[sid as usize];
+            self.runs[sid as usize] = Some(SessionRun {
+                kv: StageKv::new(self.h.blocks_per_stage),
+                tokens: s.prompt.clone(),
+                admit_step: step,
+                admit_s: now,
+                first_token_step: None,
+                first_token_s: 0.0,
+            });
+        }
+    }
+
+    /// Advance every active session one position. `input` holds the
+    /// decoded boundary rows from the left neighbor in active order
+    /// (stages > 0). Returns `(sid, position processed, output row)`
+    /// per session, and asserts each K/V cache against the analytic
+    /// [`memory::kv_cache_bytes`] model — exactly, every step.
+    fn process(
+        &mut self,
+        input: Option<&[Vec<f32>]>,
+    ) -> Result<Vec<(u32, usize, Vec<f32>)>> {
+        if let Some(rows) = input {
+            if rows.len() != self.batcher.active.len() {
+                bail!(
+                    "stage {}: {} boundary rows for {} active sessions",
+                    self.stage,
+                    rows.len(),
+                    self.batcher.active.len()
+                );
+            }
+        }
+        let dec = StageDecoder {
+            h: &self.h,
+            mode: self.mode,
+            stage: self.stage,
+            params: &self.st.params,
+            u: &self.global.u,
+            t_fixed: &self.global.t_fixed,
+            pe: &self.pe,
+        };
+        let mut out = Vec::with_capacity(self.batcher.active.len());
+        let mut kv_now = 0usize;
+        for (i, &sid) in self.batcher.active.iter().enumerate() {
+            let run = self.runs[sid as usize].as_mut().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "stage {}: session {sid} active without state",
+                    self.stage
+                )
+            })?;
+            let pos = run.kv.pos;
+            let tok = *run.tokens.get(pos).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "stage {}: session {sid} has no token for position \
+                     {pos} — token relay out of sync",
+                    self.stage
+                )
+            })?;
+            let row = dec.step(
+                &mut run.kv,
+                tok,
+                input.map(|rows| rows[i].as_slice()),
+            )?;
+            let want = memory::kv_cache_bytes(&self.h, run.kv.pos);
+            if run.kv.bytes() != want {
+                bail!(
+                    "stage {}: session {sid} K/V cache holds {} B at \
+                     position {} but memory::kv_cache_bytes prices {want} \
+                     B — the analytic memory model drifted from the \
+                     runtime",
+                    self.stage,
+                    run.kv.bytes(),
+                    run.kv.pos
+                );
+            }
+            kv_now += run.kv.bytes();
+            out.push((sid, pos, row));
+        }
+        self.kv_peak_bytes = self.kv_peak_bytes.max(kv_now);
+        Ok(out)
+    }
+
+    /// Absorb the step's token relay: cross-check the session ids
+    /// against the replicated batcher, append each real (post-prefill)
+    /// token to its session's stream.
+    fn absorb_tokens(&mut self, step: u64, pairs: &[(u32, u32)]) -> Result<()> {
+        if pairs.len() != self.batcher.active.len()
+            || pairs
+                .iter()
+                .zip(self.batcher.active.iter())
+                .any(|(p, &sid)| p.0 != sid)
+        {
+            bail!(
+                "stage {}: token relay names sessions {:?} but the \
+                 replicated batcher has {:?} active — desynchronized \
+                 serving pipeline",
+                self.stage,
+                pairs.iter().map(|p| p.0).collect::<Vec<_>>(),
+                self.batcher.active
+            );
+        }
+        let now = self.clock0.elapsed().as_secs_f64();
+        for &(sid, tok) in pairs {
+            let run = self.runs[sid as usize]
+                .as_mut()
+                .expect("active session has state");
+            let plen = self.sessions[sid as usize].prompt.len();
+            // position just processed; its logits sampled `tok`
+            let pos = run.kv.pos - 1;
+            if pos + 1 >= plen {
+                run.tokens.push(tok);
+                self.tokens_generated += 1;
+                if run.first_token_step.is_none() {
+                    run.first_token_step = Some(step);
+                    run.first_token_s = now - run.admit_s;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Evict finished sessions, freeing their K/V and recording stats.
+    fn evict(&mut self, step: u64) {
+        let now = self.clock0.elapsed().as_secs_f64();
+        for sid in self.batcher.advance() {
+            let run = self.runs[sid as usize]
+                .take()
+                .expect("evicted session had state");
+            let s = &self.sessions[sid as usize];
+            let plen = s.prompt.len();
+            self.stats.push(SessionStat {
+                id: sid,
+                arrival_step: s.arrival_step,
+                admit_step: run.admit_step,
+                first_token_step: run
+                    .first_token_step
+                    .expect("finished session produced tokens"),
+                done_step: step,
+                prompt_len: plen,
+                gen: s.gen,
+                tokens: run.tokens[plen..].to_vec(),
+                latency_s: now - run.admit_s,
+                first_token_s: run.first_token_s,
+            });
+        }
+    }
+
+    /// Session stats in id order (the batcher evicts in admission
+    /// order, which is id order, but sort anyway for the contract).
+    fn take_stats(&mut self) -> Vec<SessionStat> {
+        let mut v = std::mem::take(&mut self.stats);
+        v.sort_by_key(|s| s.id);
+        v
+    }
+}
+
+/// The budget error every stage raises deterministically at the same
+/// step, so no worker hangs on a peer that gave up.
+fn budget_error(spec: &ServeSpec, step: u64, unfinished: usize) -> anyhow::Error {
+    anyhow::anyhow!(
+        "decode-step budget of {} steps exhausted at step {step} with \
+         {unfinished} sessions unfinished — raise --steps or shrink the \
+         traffic",
+        spec.core.steps
+    )
+}
+
+// ---------------------------------------------------------------------------
+// single-process runner
+// ---------------------------------------------------------------------------
+
+/// Serve the spec's traffic in one process: every stage engine in one
+/// loop, boundary rows round-tripped through the *same* per-session
+/// codec paths the distributed runners put on the wire — which is why
+/// the token streams match the distributed backends bitwise. The
+/// reference semantics of the decode protocol, and the oracle the
+/// parity tests compare against.
+pub fn run_serve_local(spec: &ServeSpec) -> Result<ServeReport> {
+    spec.validate()?;
+    let sessions = generate_sessions(spec)?;
+    let p = spec.core.h.stages;
+    let mut engines = (0..p)
+        .map(|s| StageEngine::new(spec, s, sessions.clone()))
+        .collect::<Result<Vec<_>>>()?;
+    let h = &spec.core.h;
+    let mode = spec.core.cfg.mode;
+    let seed = spec.core.cfg.seed;
+    let per = session_payload_len(h, mode);
+    let mut report = ServeReport::default();
+    let mut step: u64 = 0;
+    loop {
+        for e in engines.iter_mut() {
+            e.admit(step);
+        }
+        if engines[0].batcher.active().is_empty() {
+            match engines[0].batcher.next_arrival() {
+                None => break,
+                Some(a) => {
+                    // idle fast-forward: no frames, no budget spent
+                    step = a;
+                    continue;
+                }
+            }
+        }
+        if report.steps as usize >= spec.core.steps {
+            let unfinished =
+                sessions.len() - engines[0].stats.len();
+            return Err(budget_error(spec, step, unfinished));
+        }
+        let t0 = Instant::now();
+        let tr0 = trace::begin();
+        let active = engines[0].batcher.active().len();
+        let mut outs = engines[0].process(None)?;
+        for s in 1..p {
+            let link = s - 1;
+            let mut payload = Vec::with_capacity(outs.len() * per);
+            let mut delivered = Vec::with_capacity(outs.len());
+            for (sid, pos, row) in &outs {
+                let enc =
+                    encode_session_row(h, mode, seed, link, *sid, *pos, row);
+                if enc.len() != per {
+                    bail!(
+                        "session {sid} encoded to {} B but every session \
+                         must contribute {per} B (mode {})",
+                        enc.len(),
+                        mode.as_str()
+                    );
+                }
+                delivered.push(decode_session_row(h, mode, &enc));
+                payload.extend_from_slice(&enc);
+            }
+            if mode != Mode::PowerLR {
+                let want = memory::decode_frame_bytes(h, mode, outs.len());
+                if HEADER_LEN + payload.len() != want {
+                    bail!(
+                        "decode frame would carry {} B on link {link} but \
+                         memory::decode_frame_bytes prices {want} B",
+                        HEADER_LEN + payload.len()
+                    );
+                }
+            }
+            report.decode_payload_bytes += payload.len() as u64;
+            report.wire_bytes += (HEADER_LEN + payload.len()) as u64;
+            report.frames += 1;
+            outs = engines[s].process(Some(&delivered))?;
+        }
+        let pairs: Vec<(u32, u32)> = outs
+            .iter()
+            .map(|(sid, _, logits)| (*sid, argmax(logits)))
+            .collect();
+        // the token relay retraces every link back to stage 0
+        let tp = pairs.len() * 8;
+        report.token_payload_bytes += ((p - 1) * tp) as u64;
+        report.wire_bytes += ((p - 1) * (HEADER_LEN + tp)) as u64;
+        report.frames += (p - 1) as u64;
+        for e in engines.iter_mut() {
+            e.absorb_tokens(step, &pairs)?;
+            e.evict(step);
+        }
+        report.step_seconds.push(t0.elapsed().as_secs_f64());
+        report.steps += 1;
+        if trace::enabled() {
+            trace::end(
+                "serve",
+                "decode_step",
+                tr0,
+                vec![trace::u("step", step), trace::u("active", active as u64)],
+            );
+        }
+        step += 1;
+    }
+    report.sessions = engines[0].take_stats();
+    report.tokens_generated = engines[0].tokens_generated;
+    report.kv_peak_bytes = engines[0].kv_peak_bytes;
+    Ok(report)
+}
+
+// ---------------------------------------------------------------------------
+// distributed stage worker
+// ---------------------------------------------------------------------------
+
+/// Run one decode stage over its neighbor links: the worker behind both
+/// [`serve_infer`] (threads) and [`serve_infer_stage`] (processes).
+fn run_infer_stage(
+    spec: &ServeSpec,
+    stage: usize,
+    mut left: Option<Box<dyn Transport>>,
+    mut right: Option<Box<dyn Transport>>,
+) -> Result<ServeReport> {
+    spec.validate()?;
+    let h = spec.core.h.clone();
+    let last = h.stages - 1;
+    if stage > last {
+        bail!("stage {stage} out of range for a {}-stage pipeline", h.stages);
+    }
+    if (stage > 0) != left.is_some() || (stage < last) != right.is_some() {
+        bail!("stage {stage}: neighbor links do not match the position");
+    }
+    if trace::enabled() {
+        trace::set_track(0, stage as u32);
+    }
+
+    // ---- handshake: the workload-tagged PMCFG3 serve digest on every
+    // link — a train worker (or a serve worker with different traffic)
+    // on the other end is rejected here, not desynchronized later
+    let digest = spec.handshake_digest();
+    for (conn, name) in
+        [(left.as_deref_mut(), "left"), (right.as_deref_mut(), "right")]
+    {
+        let Some(conn) = conn else { continue };
+        conn.send(&WireFrame::control(FrameKind::Hello, 0, digest.clone()))?;
+        let hello =
+            recv_expect(conn, FrameKind::Hello, 0, None, stage, name, None)?;
+        if hello.payload != digest {
+            bail!(
+                "stage {stage}: serve digest mismatch with the {name} \
+                 neighbor ({} vs our {} bytes) — every worker must be \
+                 launched with the identical ServeSpec (model, codec, \
+                 traffic, --max-batch, workload)",
+                hello.payload.len(),
+                digest.len()
+            );
+        }
+    }
+
+    let sessions = generate_sessions(spec)?;
+    let total_sessions = sessions.len();
+    let mut engine = StageEngine::new(spec, stage, sessions)?;
+    let mode = spec.core.cfg.mode;
+    let seed = spec.core.cfg.seed;
+    let per = session_payload_len(&h, mode);
+    let mut report = ServeReport { stage, ..Default::default() };
+    let mut step: u64 = 0;
+    loop {
+        engine.admit(step);
+        if engine.batcher.active().is_empty() {
+            match engine.batcher.next_arrival() {
+                None => break,
+                Some(a) => {
+                    step = a;
+                    continue;
+                }
+            }
+        }
+        if report.steps as usize >= spec.core.steps {
+            // every stage computes this identically, so the whole chain
+            // stops at the same step instead of hanging a neighbor
+            let unfinished = total_sessions - engine.stats.len();
+            return Err(budget_error(spec, step, unfinished));
+        }
+        let t0 = Instant::now();
+        let tr0 = trace::begin();
+        let active = engine.batcher.active().len();
+
+        // ---- forward: boundary rows ride Decode frames rightward
+        let outs = if stage == 0 {
+            engine.process(None)?
+        } else {
+            let conn = left.as_deref_mut().expect("stage > 0 has a left link");
+            let f = recv_expect(
+                conn,
+                FrameKind::Decode,
+                step,
+                Some(active as u32),
+                stage,
+                "left",
+                None,
+            )?;
+            match f.codec {
+                Some(c) if c == mode => {}
+                other => bail!(
+                    "stage {stage}: decode frame codec {other:?} does not \
+                     match the handshaked mode {mode:?}"
+                ),
+            }
+            if f.payload.len() != active * per {
+                bail!(
+                    "stage {stage}: decode frame payload is {} B for {} \
+                     sessions but per-session encoding requires {} B",
+                    f.payload.len(),
+                    active,
+                    active * per
+                );
+            }
+            if mode != Mode::PowerLR
+                && HEADER_LEN + f.payload.len()
+                    != memory::decode_frame_bytes(&h, mode, active)
+            {
+                bail!(
+                    "stage {stage}: decode frame carries {} B but \
+                     memory::decode_frame_bytes prices {} B",
+                    HEADER_LEN + f.payload.len(),
+                    memory::decode_frame_bytes(&h, mode, active)
+                );
+            }
+            let delivered: Vec<Vec<f32>> = f
+                .payload
+                .chunks_exact(per)
+                .map(|c| decode_session_row(&h, mode, c))
+                .collect();
+            engine.process(Some(&delivered))?
+        };
+        if stage < last {
+            let mut payload = Vec::with_capacity(outs.len() * per);
+            for (sid, pos, row) in &outs {
+                let enc = encode_session_row(
+                    &h, mode, seed, stage, *sid, *pos, row,
+                );
+                payload.extend_from_slice(&enc);
+            }
+            let f = WireFrame::decode_step(mode, step, outs.len(), payload);
+            report.decode_payload_bytes += f.payload.len() as u64;
+            report.frames += 1;
+            right
+                .as_deref_mut()
+                .expect("non-last stage has a right link")
+                .send(&f)?;
+        }
+
+        // ---- backward: sampled tokens relay leftward to stage 0
+        let pairs: Vec<(u32, u32)> = if stage == last {
+            let pairs: Vec<(u32, u32)> = outs
+                .iter()
+                .map(|(sid, _, logits)| (*sid, argmax(logits)))
+                .collect();
+            let mut payload = Vec::with_capacity(pairs.len() * 8);
+            for &(sid, tok) in &pairs {
+                payload.extend_from_slice(&sid.to_le_bytes());
+                payload.extend_from_slice(&tok.to_le_bytes());
+            }
+            let f = WireFrame::token_relay(step, pairs.len(), payload);
+            report.token_payload_bytes += f.payload.len() as u64;
+            report.frames += 1;
+            left.as_deref_mut()
+                .expect("last stage of a >=2-stage chain has a left link")
+                .send(&f)?;
+            pairs
+        } else {
+            let conn =
+                right.as_deref_mut().expect("non-last stage has a right link");
+            let f = recv_expect(
+                conn,
+                FrameKind::Token,
+                step,
+                Some(active as u32),
+                stage,
+                "right",
+                None,
+            )?;
+            if f.payload.len() != active * 8
+                || HEADER_LEN + f.payload.len()
+                    != memory::token_frame_bytes(active)
+            {
+                bail!(
+                    "stage {stage}: token frame payload is {} B for {} \
+                     sessions (8 B per session expected)",
+                    f.payload.len(),
+                    active
+                );
+            }
+            let pairs: Vec<(u32, u32)> = f
+                .payload
+                .chunks_exact(8)
+                .map(|c| {
+                    (
+                        u32::from_le_bytes([c[0], c[1], c[2], c[3]]),
+                        u32::from_le_bytes([c[4], c[5], c[6], c[7]]),
+                    )
+                })
+                .collect();
+            if stage > 0 {
+                report.token_payload_bytes += f.payload.len() as u64;
+                report.frames += 1;
+                left.as_deref_mut()
+                    .expect("stage > 0 has a left link")
+                    .send(&f)?;
+            }
+            pairs
+        };
+        engine.absorb_tokens(step, &pairs)?;
+        engine.evict(step);
+        report.step_seconds.push(t0.elapsed().as_secs_f64());
+        report.steps += 1;
+        if trace::enabled() {
+            trace::end(
+                "serve",
+                "decode_step",
+                tr0,
+                vec![trace::u("step", step), trace::u("active", active as u64)],
+            );
+        }
+        step += 1;
+    }
+
+    // termination is deterministic and replicated, so both neighbors
+    // exit at the same step; the Bye is a courtesy, not a join
+    for conn in [left.as_deref_mut(), right.as_deref_mut()] {
+        if let Some(conn) = conn {
+            let _ = conn.send(&WireFrame::control(
+                FrameKind::Bye,
+                step,
+                Vec::new(),
+            ));
+        }
+    }
+    report.wire_bytes = left.as_ref().map_or(0, |c| c.bytes_sent())
+        + right.as_ref().map_or(0, |c| c.bytes_sent());
+    report.sessions = engine.take_stats();
+    report.tokens_generated = engine.tokens_generated;
+    report.kv_peak_bytes = engine.kv_peak_bytes;
+    Ok(report)
+}
+
+/// Serve the spec's traffic across in-process stage workers joined by
+/// the chosen transport (channel or loopback TCP) — the distributed
+/// decode analogue of training's `run_local`. Returns stage 0's report
+/// (the canonical session stats).
+pub fn serve_infer(spec: &ServeSpec, kind: TransportKind) -> Result<ServeReport> {
+    spec.validate()?;
+    let p = spec.core.h.stages;
+    let ends = chain_ends(p, kind)?;
+    crate::obs::log!(
+        Info,
+        "serve-infer: {p} decode stages over {} transport, {} sessions",
+        kind.as_str(),
+        spec.traffic.sessions
+    );
+    let results: Vec<Result<ServeReport>> = std::thread::scope(|sc| {
+        let mut handles = Vec::with_capacity(p);
+        for (stage, (left, right)) in ends.into_iter().enumerate() {
+            let spec = &*spec;
+            handles.push(sc.spawn(move || {
+                run_infer_stage(spec, stage, left, right)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|jh| {
+                jh.join().unwrap_or_else(|_| {
+                    Err(anyhow::anyhow!("serve-infer worker panicked"))
+                })
+            })
+            .collect()
+    });
+    let mut first = None;
+    for (stage, res) in results.into_iter().enumerate() {
+        let rep = res
+            .with_context(|| format!("serve-infer stage {stage} failed"))?;
+        if stage == 0 {
+            first = Some(rep);
+        }
+    }
+    Ok(first.expect("stage 0 reported"))
+}
+
+/// Run one decode stage as a standalone process over real TCP
+/// (`protomodels serve-infer --stage i`): stage `i` binds
+/// `host:port_base+i` and dials `host:port_base+i−1` with retries, like
+/// the training `serve --stage` workers. Thin shim over
+/// [`super::launch_serve`] with a [`super::ServeRole::Infer`] role.
+pub fn serve_infer_stage(
+    spec: &ServeSpec,
+    stage: usize,
+    host: &str,
+    port_base: u16,
+) -> Result<ServeReport> {
+    match super::launch_serve(
+        &super::ServeRole::Infer { stage },
+        &super::WorkloadSpec::Serve(spec),
+        host,
+        port_base,
+    )? {
+        super::ServeOutcome::Infer(r) => Ok(*r),
+        other => bail!("serve_infer_stage produced an unexpected {other:?}"),
+    }
+}
+
+/// The standalone-TCP decode worker behind [`serve_infer_stage`] /
+/// [`super::launch_serve`].
+pub(crate) fn serve_infer_stage_impl(
+    spec: &ServeSpec,
+    stage: usize,
+    host: &str,
+    port_base: u16,
+) -> Result<ServeReport> {
+    spec.validate()?;
+    let (left, right) =
+        tcp_chain_links(spec.core.h.stages, stage, host, port_base)?;
+    run_infer_stage(spec, stage, left, right)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::spec::TrafficSpec;
+    use super::*;
+    use crate::data::CorpusKind;
+
+    fn tiny(mode: Mode) -> ServeSpec {
+        ServeSpec::builder(Hyper::tiny_native())
+            .mode(mode)
+            .steps(400)
+            .seed(11)
+            .corpus(CorpusKind::Wiki, 4_000)
+            .traffic(TrafficSpec {
+                sessions: 3,
+                mean_gap: 1.5,
+                prompt: (2, 4),
+                gen: (2, 3),
+            })
+            .max_batch(2)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn session_tables_replay_deterministically() {
+        let spec = tiny(Mode::Subspace);
+        let a = generate_sessions(&spec).unwrap();
+        let b = generate_sessions(&spec).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+        for (i, s) in a.iter().enumerate() {
+            assert_eq!(s.id as usize, i);
+            assert!(s.prompt.len() >= 2 && s.prompt.len() <= 4);
+            assert!(s.gen >= 2 && s.gen <= 3);
+            if i > 0 {
+                assert!(s.arrival_step >= a[i - 1].arrival_step);
+            }
+        }
+    }
+
+    #[test]
+    fn local_decode_serves_every_session() {
+        let spec = tiny(Mode::Subspace);
+        let rep = run_serve_local(&spec).unwrap();
+        assert_eq!(rep.sessions.len(), 3);
+        let mut toks = 0;
+        for s in &rep.sessions {
+            assert_eq!(s.tokens.len(), s.gen);
+            assert!(s.done_step >= s.first_token_step);
+            assert!(s.first_token_step >= s.admit_step);
+            assert!(s.admit_step >= s.arrival_step);
+            toks += s.tokens.len() as u64;
+        }
+        assert_eq!(rep.tokens_generated, toks);
+        assert!(rep.steps > 0);
+        assert_eq!(rep.step_seconds.len(), rep.steps as usize);
+        assert!(rep.kv_peak_bytes > 0);
+        assert!(rep.latency_percentile(50.0) <= rep.latency_percentile(99.0));
+        // 3 links, decode + token frames per executed step
+        assert_eq!(rep.frames, rep.steps * 6);
+    }
+
+    #[test]
+    fn channel_grid_matches_local_token_streams() {
+        for mode in [Mode::Subspace, Mode::TopK] {
+            let spec = tiny(mode);
+            let local = run_serve_local(&spec).unwrap();
+            let grid = serve_infer(&spec, TransportKind::Channel).unwrap();
+            assert_eq!(grid.sessions.len(), local.sessions.len());
+            for (a, b) in grid.sessions.iter().zip(&local.sessions) {
+                assert_eq!(a.tokens, b.tokens, "mode {mode:?}");
+                assert_eq!(a.done_step, b.done_step);
+            }
+            assert_eq!(grid.steps, local.steps);
+        }
+    }
+
+    #[test]
+    fn batching_width_cannot_perturb_a_session() {
+        // eviction/admission invariance: per-session encoding makes a
+        // session's tokens a function of its own history only — even
+        // for the batch-coupled lossy codecs and PowerLR's sketch
+        for mode in [Mode::TopK, Mode::Quant, Mode::PowerLR] {
+            let mut narrow = tiny(mode);
+            narrow.max_batch = 1;
+            let mut wide = tiny(mode);
+            wide.max_batch = 3;
+            let a = run_serve_local(&narrow).unwrap();
+            let b = run_serve_local(&wide).unwrap();
+            for (x, y) in a.sessions.iter().zip(&b.sessions) {
+                assert_eq!(x.tokens, y.tokens, "mode {mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn exhausted_step_budget_says_what_to_raise() {
+        let mut spec = tiny(Mode::Subspace);
+        spec.core.steps = 1;
+        spec.core.cfg.total_steps = 1;
+        let err = run_serve_local(&spec).unwrap_err().to_string();
+        assert!(err.contains("raise --steps"), "{err}");
+    }
+}

@@ -1,0 +1,491 @@
+//! The unified run-description core shared by training and serving.
+//!
+//! [`SpecCore`] is the workload-independent heart of a run: model
+//! dimensions, boundary codec, seed, optimizer, data source, and step
+//! budget. [`super::dp::TrainSpec`] composes it with the data-parallel
+//! axis (replicas, reduce, elastic options); [`ServeSpec`] composes it
+//! with the inference-serving axis (traffic model, continuous-batching
+//! width). Both expose the same builder/`validate()`/digest discipline,
+//! and both derive their `Hello` handshake digest through
+//! [`Workload`]-tagged `PMCFG3` material — `PMCFG3 = PMCFG2 ‖
+//! workload-tag` — so a train worker and a serve worker launched
+//! against the same host/ports refuse to connect instead of
+//! desynchronizing silently.
+//!
+//! Historically this struct was `transport::dist::WorkerSpec`; the
+//! alias is kept so existing call sites (and the `PMCFG1` digest
+//! layout) stay valid.
+
+use anyhow::{bail, Result};
+
+use crate::compress::Mode;
+use crate::coordinator::PipelineConfig;
+use crate::data::{Corpus, CorpusKind};
+use crate::manifest::Hyper;
+use crate::nn::Optim;
+use crate::sim::Schedule;
+
+/// Which workload a worker participates in. The tag byte terminates the
+/// `PMCFG3` handshake digest, so train and serve workers can never
+/// cross-connect: their digests differ in the final byte even when
+/// every shared field agrees.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// gradient-descent training (`launch`, `serve --stage`)
+    Train,
+    /// autoregressive decode serving (`serve-infer`)
+    Serve,
+}
+
+impl Workload {
+    /// Digest tag byte of this workload.
+    pub fn tag(self) -> u8 {
+        match self {
+            Workload::Train => 0,
+            Workload::Serve => 1,
+        }
+    }
+}
+
+/// Wrap workload-specific digest material into the `PMCFG3` handshake
+/// digest: `b"PMCFG3" ‖ material ‖ workload-tag`.
+pub fn handshake_wrap(material: &[u8], workload: Workload) -> Vec<u8> {
+    let mut d = Vec::with_capacity(material.len() + 7);
+    d.extend_from_slice(b"PMCFG3");
+    d.extend_from_slice(material);
+    d.push(workload.tag());
+    d
+}
+
+/// The shared run-description core: everything a single stage worker
+/// needs that is independent of the workload axis. Two workers whose
+/// cores differ in any digested field refuse to run together.
+#[derive(Clone, Debug)]
+pub struct SpecCore {
+    /// model/pipeline dimensions
+    pub h: Hyper,
+    /// run-level configuration (mode, microbatches, seed, lr schedule,
+    /// Grassmann cadence, pipeline schedule)
+    pub cfg: PipelineConfig,
+    /// optimizer every stage steps with (training workloads)
+    pub optim: Optim,
+    /// step budget: optimizer steps when training, decode steps when
+    /// serving
+    pub steps: usize,
+    /// synthetic corpus preset (training data / serve prompt source)
+    pub corpus_kind: CorpusKind,
+    /// corpus length in tokens
+    pub corpus_tokens: usize,
+}
+
+/// The historical name of [`SpecCore`], kept for every existing call
+/// site: a "worker spec" is exactly the workload-independent core.
+pub type WorkerSpec = SpecCore;
+
+impl SpecCore {
+    /// Start a builder from model dimensions.
+    pub fn builder(h: Hyper) -> SpecCoreBuilder {
+        SpecCoreBuilder::new(h)
+    }
+
+    /// The corpus every worker regenerates locally (same derivation as
+    /// `train --backend native` and the native examples).
+    pub fn corpus(&self) -> Corpus {
+        Corpus::synthetic(
+            self.corpus_kind,
+            self.h.vocab,
+            self.corpus_tokens,
+            self.cfg.seed ^ 0xDD,
+        )
+    }
+
+    /// Reject cores the distributed runtimes cannot execute.
+    pub fn validate(&self) -> Result<()> {
+        if self.h.stages < 2 {
+            bail!("distributed pipeline needs >= 2 stages, got {}", self.h.stages);
+        }
+        if self.cfg.microbatches == 0 {
+            bail!("need >= 1 microbatch");
+        }
+        if matches!(self.cfg.schedule, Schedule::Interleaved { .. }) {
+            bail!(
+                "interleaved schedules are simulator-only \
+                 (`protomodels sim --schedule interleaved`); the \
+                 transport runs gpipe or 1f1b wave orders"
+            );
+        }
+        Ok(())
+    }
+
+    /// Canonical byte digest of every numerics-affecting field
+    /// (`PMCFG1`). Fields that cannot change the numbers (time model,
+    /// event-sim routing, grad recording) are deliberately excluded.
+    pub fn digest(&self) -> Vec<u8> {
+        let h = &self.h;
+        let c = &self.cfg;
+        let mut d = Vec::with_capacity(96);
+        d.extend_from_slice(b"PMCFG1");
+        for v in [
+            h.d, h.d_ff, h.heads, h.layers, h.stages, h.n, h.vocab, h.k,
+            h.b, h.blocks_per_stage,
+        ] {
+            d.extend_from_slice(&(v as u64).to_le_bytes());
+        }
+        d.extend_from_slice(&h.ratio.to_le_bytes());
+        d.push(c.mode.wire_tag());
+        d.extend_from_slice(&(c.microbatches as u64).to_le_bytes());
+        d.extend_from_slice(&(c.grassmann_interval as u64).to_le_bytes());
+        d.extend_from_slice(&c.grassmann_eta.to_le_bytes());
+        d.extend_from_slice(&c.lr.to_le_bytes());
+        d.extend_from_slice(&(c.warmup_steps as u64).to_le_bytes());
+        d.extend_from_slice(&(c.total_steps as u64).to_le_bytes());
+        d.extend_from_slice(&c.seed.to_le_bytes());
+        d.push(match c.schedule {
+            Schedule::Gpipe => 0,
+            Schedule::OneFOneB => 1,
+            Schedule::Interleaved { .. } => 2, // rejected by validate()
+        });
+        match self.optim {
+            Optim::AdamW => d.push(0),
+            Optim::Sgd { momentum } => {
+                d.push(1);
+                d.extend_from_slice(&momentum.to_le_bytes());
+            }
+        }
+        d.push(match self.corpus_kind {
+            CorpusKind::Wiki => 0,
+            CorpusKind::Books => 1,
+            CorpusKind::Web => 2,
+            CorpusKind::C4 => 3,
+        });
+        d.extend_from_slice(&(self.corpus_tokens as u64).to_le_bytes());
+        d.extend_from_slice(&(self.steps as u64).to_le_bytes());
+        d
+    }
+}
+
+/// Builder for [`SpecCore`] — every setter returns `self`; `build`
+/// validates with descriptive errors.
+pub struct SpecCoreBuilder {
+    core: SpecCore,
+}
+
+impl SpecCoreBuilder {
+    fn new(h: Hyper) -> SpecCoreBuilder {
+        let cfg = PipelineConfig { total_steps: 200, ..Default::default() };
+        SpecCoreBuilder {
+            core: SpecCore {
+                h,
+                cfg,
+                optim: Optim::AdamW,
+                steps: 200,
+                corpus_kind: CorpusKind::Wiki,
+                corpus_tokens: 400_000,
+            },
+        }
+    }
+
+    /// Boundary compression mode.
+    pub fn mode(mut self, m: Mode) -> Self {
+        self.core.cfg.mode = m;
+        self
+    }
+
+    /// Step budget (also sets the LR schedule horizon).
+    pub fn steps(mut self, n: usize) -> Self {
+        self.core.steps = n;
+        self.core.cfg.total_steps = n;
+        self
+    }
+
+    /// Run seed (init, data, traffic, gossip schedules).
+    pub fn seed(mut self, s: u64) -> Self {
+        self.core.cfg.seed = s;
+        self
+    }
+
+    /// Synthetic corpus preset and length.
+    pub fn corpus(mut self, kind: CorpusKind, tokens: usize) -> Self {
+        self.core.corpus_kind = kind;
+        self.core.corpus_tokens = tokens;
+        self
+    }
+
+    /// Optimizer (training workloads).
+    pub fn optim(mut self, o: Optim) -> Self {
+        self.core.optim = o;
+        self
+    }
+
+    /// Escape hatch for rarely-set core fields.
+    pub fn tweak(mut self, f: impl FnOnce(&mut SpecCore)) -> Self {
+        f(&mut self.core);
+        self
+    }
+
+    /// Validate and return the core.
+    pub fn build(self) -> Result<SpecCore> {
+        self.core.validate()?;
+        Ok(self.core)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// serving spec
+// ---------------------------------------------------------------------------
+
+/// The synthetic open-loop traffic model: sessions arrive on a seeded
+/// Poisson-like clock regardless of service progress (open loop — the
+/// generator never waits for the system), each with a seeded prompt
+/// drawn from the shared corpus and a seeded generation budget.
+#[derive(Clone, Debug)]
+pub struct TrafficSpec {
+    /// total sessions the generator emits
+    pub sessions: usize,
+    /// mean inter-arrival gap in decode steps (0 = all at step 0)
+    pub mean_gap: f64,
+    /// inclusive prompt-length range in tokens
+    pub prompt: (usize, usize),
+    /// inclusive generation-budget range in tokens
+    pub gen: (usize, usize),
+}
+
+impl Default for TrafficSpec {
+    fn default() -> Self {
+        TrafficSpec {
+            sessions: 8,
+            mean_gap: 2.0,
+            prompt: (4, 8),
+            gen: (4, 8),
+        }
+    }
+}
+
+/// The canonical, validated description of an inference-serving run:
+/// the shared [`SpecCore`] plus the serving axis — traffic model and
+/// continuous-batching width. The serve analogue of
+/// [`super::dp::TrainSpec`]; `serve_infer` digests it into the
+/// handshake, every stage worker derives the full session table and
+/// batching schedule from it deterministically.
+#[derive(Clone, Debug)]
+pub struct ServeSpec {
+    /// the shared run core (model, codec, seed, decode-step budget)
+    pub core: SpecCore,
+    /// the open-loop traffic the run serves
+    pub traffic: TrafficSpec,
+    /// continuous-batching width: max concurrent sessions per step
+    pub max_batch: usize,
+}
+
+impl ServeSpec {
+    /// Wrap a core with default traffic.
+    pub fn from_core(core: SpecCore) -> ServeSpec {
+        ServeSpec { core, traffic: TrafficSpec::default(), max_batch: 4 }
+    }
+
+    /// Start a builder from model dimensions.
+    pub fn builder(h: Hyper) -> ServeSpecBuilder {
+        ServeSpecBuilder {
+            spec: ServeSpec::from_core(SpecCoreBuilder::new(h).core),
+        }
+    }
+
+    /// Reject configurations the serving runtime cannot execute — with
+    /// errors that say *why* and what to do instead.
+    pub fn validate(&self) -> Result<()> {
+        self.core.validate()?;
+        let t = &self.traffic;
+        if t.sessions == 0 {
+            bail!("traffic needs >= 1 session");
+        }
+        if t.sessions > 1024 {
+            bail!(
+                "traffic of {} sessions exceeds the tested ceiling of \
+                 1024; shard the workload across runs",
+                t.sessions
+            );
+        }
+        if self.max_batch == 0 {
+            bail!("continuous batching needs --max-batch >= 1");
+        }
+        if t.prompt.0 == 0 {
+            bail!("prompts need >= 1 token");
+        }
+        if t.prompt.0 > t.prompt.1 || t.gen.0 > t.gen.1 {
+            bail!(
+                "traffic ranges must be lo <= hi (prompt {}..{}, gen \
+                 {}..{})",
+                t.prompt.0,
+                t.prompt.1,
+                t.gen.0,
+                t.gen.1
+            );
+        }
+        if t.gen.0 == 0 {
+            bail!("generation budgets need >= 1 token");
+        }
+        if !(t.mean_gap.is_finite() && t.mean_gap >= 0.0) {
+            bail!("mean inter-arrival gap must be finite and >= 0");
+        }
+        let n = self.core.h.n;
+        if t.prompt.1 + t.gen.1 - 1 > n {
+            bail!(
+                "a session may touch up to prompt+gen-1 = {} positions, \
+                 but the model context (and per-session KV capacity) is \
+                 n = {n}; shrink --prompt/--gen or grow the model",
+                t.prompt.1 + t.gen.1 - 1
+            );
+        }
+        if self.core.steps == 0 {
+            bail!("serve needs a decode-step budget of >= 1 step");
+        }
+        Ok(())
+    }
+
+    /// The serve handshake digest: `PMCFG3` wrapping the train-shaped
+    /// `PMCFG2` core material plus every serving-axis field, terminated
+    /// by the [`Workload::Serve`] tag — byte-incompatible with every
+    /// train worker's digest by construction.
+    pub fn handshake_digest(&self) -> Vec<u8> {
+        let mut m =
+            super::dp::TrainSpec::from_worker(self.core.clone()).digest();
+        let t = &self.traffic;
+        m.extend_from_slice(&(t.sessions as u64).to_le_bytes());
+        m.extend_from_slice(&t.mean_gap.to_le_bytes());
+        for v in [t.prompt.0, t.prompt.1, t.gen.0, t.gen.1, self.max_batch] {
+            m.extend_from_slice(&(v as u64).to_le_bytes());
+        }
+        handshake_wrap(&m, Workload::Serve)
+    }
+}
+
+/// Builder for [`ServeSpec`] — core setters plus the serving axis;
+/// `build` validates.
+pub struct ServeSpecBuilder {
+    spec: ServeSpec,
+}
+
+impl ServeSpecBuilder {
+    /// Boundary compression mode.
+    pub fn mode(mut self, m: Mode) -> Self {
+        self.spec.core.cfg.mode = m;
+        self
+    }
+
+    /// Decode-step budget.
+    pub fn steps(mut self, n: usize) -> Self {
+        self.spec.core.steps = n;
+        self.spec.core.cfg.total_steps = n;
+        self
+    }
+
+    /// Run seed (init, prompts, arrivals).
+    pub fn seed(mut self, s: u64) -> Self {
+        self.spec.core.cfg.seed = s;
+        self
+    }
+
+    /// Synthetic corpus preset and length (the prompt source).
+    pub fn corpus(mut self, kind: CorpusKind, tokens: usize) -> Self {
+        self.spec.core.corpus_kind = kind;
+        self.spec.core.corpus_tokens = tokens;
+        self
+    }
+
+    /// Traffic model.
+    pub fn traffic(mut self, t: TrafficSpec) -> Self {
+        self.spec.traffic = t;
+        self
+    }
+
+    /// Continuous-batching width.
+    pub fn max_batch(mut self, b: usize) -> Self {
+        self.spec.max_batch = b;
+        self
+    }
+
+    /// Escape hatch for rarely-set core fields.
+    pub fn tweak(mut self, f: impl FnOnce(&mut SpecCore)) -> Self {
+        f(&mut self.spec.core);
+        self
+    }
+
+    /// Validate and return the spec.
+    pub fn build(self) -> Result<ServeSpec> {
+        self.spec.validate()?;
+        Ok(self.spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_serve() -> ServeSpec {
+        ServeSpec::builder(Hyper::tiny_native())
+            .mode(Mode::Subspace)
+            .steps(500)
+            .seed(7)
+            .traffic(TrafficSpec {
+                sessions: 3,
+                mean_gap: 1.0,
+                prompt: (2, 4),
+                gen: (2, 4),
+            })
+            .max_batch(2)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn serve_spec_validates_descriptively() {
+        let mut s = tiny_serve();
+        s.traffic.sessions = 0;
+        assert!(s.validate().unwrap_err().to_string().contains("session"));
+        let mut s = tiny_serve();
+        s.max_batch = 0;
+        assert!(s.validate().unwrap_err().to_string().contains("max-batch"));
+        let mut s = tiny_serve();
+        s.traffic.prompt = (5, 2);
+        assert!(s.validate().unwrap_err().to_string().contains("lo <= hi"));
+        let mut s = tiny_serve();
+        s.traffic.prompt = (30, 30);
+        s.traffic.gen = (30, 30);
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("KV capacity"), "{err}");
+        let mut s = tiny_serve();
+        s.traffic.mean_gap = f64::NAN;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn train_and_serve_handshakes_never_match() {
+        let s = tiny_serve();
+        let t = super::super::dp::TrainSpec::from_worker(s.core.clone());
+        let hs = s.handshake_digest();
+        let ht = t.handshake_digest();
+        assert_ne!(hs, ht);
+        // both are PMCFG3 material with the workload tag terminal
+        assert_eq!(&hs[..6], b"PMCFG3");
+        assert_eq!(&ht[..6], b"PMCFG3");
+        assert_eq!(*hs.last().unwrap(), Workload::Serve.tag());
+        assert_eq!(*ht.last().unwrap(), Workload::Train.tag());
+        // the shared PMCFG2 core material is a common prefix
+        let cut = ht.len() - 1;
+        assert_eq!(&hs[..cut], &ht[..cut]);
+    }
+
+    #[test]
+    fn core_builder_round_trips_through_both_specs() {
+        let core = SpecCore::builder(Hyper::tiny_native())
+            .mode(Mode::Raw)
+            .steps(12)
+            .seed(9)
+            .build()
+            .unwrap();
+        let t = super::super::dp::TrainSpec::from_worker(core.clone());
+        let s = ServeSpec::from_core(core.clone());
+        assert_eq!(t.worker.digest(), s.core.digest());
+        assert_eq!(core.cfg.total_steps, 12);
+    }
+}

@@ -1,0 +1,154 @@
+//! Distributed decode-serving contracts (DESIGN.md §16).
+//!
+//! The flagship parity claim: the staged decode pipeline produces
+//! **bitwise-identical token streams** single-process, over in-process
+//! channels, and over real TCP sockets — for *every* boundary codec —
+//! and a session's stream is invariant to continuous-batching width
+//! (who shares its batch, when it's admitted, when neighbors evict),
+//! because boundary rows are encoded per session, never packed across
+//! the batch. Wire and KV accounting must match the `memory::` analytic
+//! models exactly.
+
+use protomodels::compress::Mode;
+use protomodels::data::CorpusKind;
+use protomodels::manifest::Hyper;
+use protomodels::memory;
+use protomodels::transport::{
+    handshake_wrap, run_serve_local, serve_infer, ServeReport, ServeSpec,
+    TrafficSpec, TrainSpec, TransportKind, Workload,
+};
+
+fn spec(mode: Mode, max_batch: usize) -> ServeSpec {
+    ServeSpec::builder(Hyper::tiny_native())
+        .mode(mode)
+        .steps(400)
+        .seed(23)
+        .corpus(CorpusKind::Wiki, 6_000)
+        .traffic(TrafficSpec {
+            sessions: 4,
+            mean_gap: 1.2,
+            prompt: (2, 5),
+            gen: (2, 4),
+        })
+        .max_batch(max_batch)
+        .build()
+        .unwrap()
+}
+
+fn token_streams(r: &ServeReport) -> Vec<(u32, Vec<u32>)> {
+    r.sessions.iter().map(|s| (s.id, s.tokens.clone())).collect()
+}
+
+#[test]
+fn every_codec_decodes_identically_over_channel_and_tcp() {
+    for mode in Mode::ALL {
+        let sp = spec(mode, 2);
+        let local = run_serve_local(&sp).unwrap();
+        let chan = serve_infer(&sp, TransportKind::Channel).unwrap();
+        let tcp = serve_infer(&sp, TransportKind::Tcp).unwrap();
+        assert_eq!(
+            token_streams(&local),
+            token_streams(&chan),
+            "{mode}: channel run diverged from single-process"
+        );
+        assert_eq!(
+            token_streams(&local),
+            token_streams(&tcp),
+            "{mode}: tcp run diverged from single-process"
+        );
+        assert_eq!(local.steps, chan.steps, "{mode}");
+        assert_eq!(local.steps, tcp.steps, "{mode}");
+        assert_eq!(local.tokens_generated, tcp.tokens_generated, "{mode}");
+        for s in &local.sessions {
+            assert_eq!(
+                s.tokens.len(),
+                s.gen,
+                "{mode}: session {} missed its budget",
+                s.id
+            );
+            let vocab = sp.core.h.vocab as u32;
+            assert!(s.tokens.iter().all(|&t| t < vocab), "{mode}");
+        }
+    }
+}
+
+#[test]
+fn batching_width_cannot_perturb_any_codecs_stream() {
+    // widths 1..4 change who shares a batch with whom at every step
+    // (and therefore every admission/eviction boundary); per-session
+    // boundary encoding guarantees the streams cannot feel it
+    for mode in Mode::ALL {
+        let base = run_serve_local(&spec(mode, 1)).unwrap();
+        for width in [2usize, 3, 4] {
+            let wide = run_serve_local(&spec(mode, width)).unwrap();
+            assert_eq!(
+                token_streams(&base),
+                token_streams(&wide),
+                "{mode}: width {width} perturbed a session stream"
+            );
+        }
+    }
+}
+
+#[test]
+fn wire_and_kv_accounting_match_the_analytic_models() {
+    // max_batch 1 keeps exactly one session active per executed step,
+    // so every frame on every link prices at the width-1 analytic model
+    let mut sp = spec(Mode::Subspace, 1);
+    sp.traffic.sessions = 2;
+    let h = sp.core.h.clone();
+    let rep = run_serve_local(&sp).unwrap();
+    let links = (h.stages - 1) as u64;
+    let per_decode =
+        memory::decode_frame_bytes(&h, Mode::Subspace, 1) as u64;
+    let per_token = memory::token_frame_bytes(1) as u64;
+    assert_eq!(rep.frames, rep.steps * links * 2);
+    assert_eq!(
+        rep.wire_bytes,
+        rep.steps * links * (per_decode + per_token)
+    );
+    // peak KV residency = the analytic per-position model at the
+    // longest session's final position (one session resident at a time)
+    let maxpos = rep
+        .sessions
+        .iter()
+        .map(|s| s.prompt_len + s.gen - 1)
+        .max()
+        .unwrap();
+    assert_eq!(rep.kv_peak_bytes, memory::kv_cache_bytes(&h, maxpos));
+}
+
+#[test]
+fn serve_and_train_handshakes_are_byte_incompatible() {
+    let sp = spec(Mode::Subspace, 2);
+    let serve = sp.handshake_digest();
+    assert!(serve.starts_with(b"PMCFG3"));
+    let train = handshake_wrap(
+        &TrainSpec::from_worker(sp.core.clone()).digest(),
+        Workload::Train,
+    );
+    assert!(train.starts_with(b"PMCFG3"));
+    // same model, same codec, same seed — but a train worker must never
+    // complete a handshake with a serving stage
+    assert_ne!(serve, train);
+    // the serving axis is load-bearing material, not a suffix tag only:
+    // changing max_batch changes the digest
+    let mut other = spec(Mode::Subspace, 3);
+    other.traffic = sp.traffic.clone();
+    assert_ne!(serve, other.handshake_digest());
+}
+
+#[test]
+fn exhausted_budget_and_bad_specs_fail_descriptively() {
+    let mut sp = spec(Mode::Subspace, 2);
+    sp.core.steps = 2;
+    sp.core.cfg.total_steps = 2;
+    let err = run_serve_local(&sp).unwrap_err().to_string();
+    assert!(err.contains("raise --steps"), "{err}");
+
+    let mut sp = spec(Mode::Subspace, 2);
+    sp.traffic.prompt = (30, 30);
+    sp.traffic.gen = (30, 30);
+    let err = sp.validate().unwrap_err().to_string();
+    assert!(err.contains("KV capacity") || err.contains("n ="), "{err}");
+}
